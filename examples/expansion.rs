@@ -1,0 +1,116 @@
+//! Datacenter expansion: add a rack of new (bigger) drives to a filled
+//! cluster and rebalance onto them.
+//!
+//! New capacity is CRUSH-weighted in immediately, but existing data does
+//! not move by itself — until the balancer runs, the old devices stay
+//! full and pool capacity barely grows. This example quantifies the
+//! before/after and demonstrates dump/load round-tripping along the way.
+//!
+//! ```bash
+//! cargo run --release --example expansion
+//! ```
+
+use equilibrium::balancer::Equilibrium;
+use equilibrium::cluster::dump;
+use equilibrium::cluster::{ClusterState, Pg, PgId, Pool};
+use equilibrium::crush::{CrushBuilder, DeviceClass, Level, Rule};
+use equilibrium::simulator::{simulate, SimOptions};
+use equilibrium::util::rng::Rng;
+use equilibrium::util::units::{fmt_bytes_f, fmt_pct, GIB, TIB};
+use std::collections::BTreeMap;
+
+/// Build the pre-expansion cluster: 6 hosts × 4 × 4 TiB drives, ~70% full.
+fn old_cluster() -> ClusterState {
+    let mut b = CrushBuilder::new();
+    let root = b.add_root("default");
+    for h in 0..6 {
+        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+        for _ in 0..4 {
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+    }
+    b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+    let mut rng = Rng::new(99);
+    ClusterState::build(
+        b.build().unwrap(),
+        vec![Pool::replicated(1, "data", 3, 256, 0)],
+        move |_, _| (85.0 * GIB as f64 * rng.lognormal(0.0, 0.15)) as u64,
+    )
+}
+
+/// Rebuild the cluster with two extra hosts of 8 TiB drives, keeping all
+/// existing PG placements and sizes (expansion does not reshuffle data in
+/// this model — that is the balancer's job).
+fn expand(old: &ClusterState) -> ClusterState {
+    let mut b = CrushBuilder::new();
+    let root = b.add_root("default");
+    for h in 0..6 {
+        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+        for _ in 0..4 {
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+    }
+    for h in 6..8 {
+        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+        for _ in 0..4 {
+            b.add_osd_bytes(host, 8 * TIB, DeviceClass::Hdd);
+        }
+    }
+    b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+    let crush = b.build().unwrap();
+
+    let pools: Vec<Pool> = old.pools.values().cloned().collect();
+    let pgs: Vec<Pg> = old.pgs().cloned().collect();
+    let upmap: BTreeMap<PgId, Vec<(u32, u32)>> = BTreeMap::new();
+    ClusterState::from_parts(crush, pools, pgs, upmap)
+}
+
+fn main() {
+    let old = old_cluster();
+    println!(
+        "before expansion: {} OSDs, fullest {}, pool capacity {}",
+        old.osd_count(),
+        fmt_pct(old.utilizations().iter().cloned().fold(0.0, f64::max)),
+        fmt_bytes_f(old.pool_max_avail(1)),
+    );
+
+    // dump → load round trip (what an operator pipeline would do)
+    let text = dump::dump(&old);
+    let restored = dump::load(&text).expect("dump must round-trip");
+    assert_eq!(restored.pg_count(), old.pg_count());
+
+    let mut grown = expand(&restored);
+    println!(
+        "after adding 8 new 8 TiB drives (no data moved yet): {} OSDs, pool capacity {}",
+        grown.osd_count(),
+        fmt_bytes_f(grown.pool_max_avail(1)),
+    );
+    println!("  (new drives are empty; old drives still limit the pool)");
+
+    let before = grown.pool_max_avail(1);
+    let mut balancer = Equilibrium::default();
+    let res = simulate(&mut balancer, &mut grown, &SimOptions::default());
+    let after = grown.pool_max_avail(1);
+
+    println!(
+        "\nrebalanced with {} moves ({}):",
+        res.movements.len(),
+        fmt_bytes_f(res.total_moved_bytes() as f64)
+    );
+    println!(
+        "  pool capacity {} -> {} (+{})",
+        fmt_bytes_f(before),
+        fmt_bytes_f(after),
+        fmt_bytes_f(after - before),
+    );
+    println!(
+        "  utilization variance {:.4e} -> {:.4e}",
+        res.series.first().unwrap().variance,
+        res.series.last().unwrap().variance,
+    );
+    // new drives must have received data
+    let new_drive_use: u64 = (24..32).map(|o| grown.osd_used(o)).sum();
+    println!("  data now on the new drives: {}", fmt_bytes_f(new_drive_use as f64));
+    assert!(new_drive_use > 0, "rebalancing must populate new drives");
+    assert!(after > before, "expansion + balancing must unlock capacity");
+}

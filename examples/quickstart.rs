@@ -1,0 +1,52 @@
+//! Quickstart: build a small cluster, run the Equilibrium balancer, and
+//! inspect what it bought you.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use equilibrium::balancer::Equilibrium;
+use equilibrium::generator::clusters;
+use equilibrium::simulator::{simulate, SimOptions};
+use equilibrium::util::units::{fmt_bytes_f, fmt_pct};
+
+fn main() {
+    // 1. A 12-OSD demo cluster with mixed drive sizes (the situation the
+    //    paper targets: CRUSH alone leaves devices unevenly filled).
+    let mut state = clusters::demo(42);
+    println!("demo cluster: {} OSDs, {} PGs", state.osd_count(), state.pg_count());
+    println!(
+        "before: fullest OSD {}, variance {:.4e}, predicted free space {}",
+        fmt_pct(state.utilizations().iter().cloned().fold(0.0, f64::max)),
+        state.utilization_variance(),
+        fmt_bytes_f(state.total_max_avail(true)),
+    );
+
+    // 2. Run the paper's balancer to convergence.
+    let mut balancer = Equilibrium::default();
+    let result = simulate(&mut balancer, &mut state, &SimOptions::default());
+
+    // 3. The movement instructions an operator would feed to Ceph
+    //    (`ceph osd pg-upmap-items ...`).
+    println!("\nmovement plan ({} moves):", result.movements.len());
+    for m in result.movements.iter().take(8) {
+        println!("  {m}");
+    }
+    if result.movements.len() > 8 {
+        println!("  ... and {} more", result.movements.len() - 8);
+    }
+
+    // 4. What it achieved.
+    println!(
+        "\nafter:  fullest OSD {}, variance {:.4e}, predicted free space {}",
+        fmt_pct(state.utilizations().iter().cloned().fold(0.0, f64::max)),
+        state.utilization_variance(),
+        fmt_bytes_f(state.total_max_avail(true)),
+    );
+    println!(
+        "gained {} of usable space by moving {}",
+        fmt_bytes_f(result.series.total_gained(None)),
+        fmt_bytes_f(result.total_moved_bytes() as f64),
+    );
+    assert!(result.converged, "demo cluster must balance to convergence");
+}

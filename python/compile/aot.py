@@ -1,0 +1,63 @@
+"""AOT lowering: JAX/Pallas scoring graph → HLO text artifacts.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits ``score_moves_<N>.hlo.txt`` for each size bucket. HLO **text** is
+the interchange format, not ``HloModuleProto.serialize()``: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import SIZE_BUCKETS, score_moves  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int) -> str:
+    vec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    params = jax.ShapeDtypeStruct((2,), jnp.float64)
+    lowered = jax.jit(score_moves).lower(vec, vec, vec, vec, params)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in SIZE_BUCKETS),
+        help="comma-separated padded sizes to compile",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for n in (int(b) for b in args.buckets.split(",")):
+        text = lower_bucket(n)
+        path = os.path.join(args.out_dir, f"score_moves_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the destination-scoring computation.
+
+This is the CORE correctness reference: the Pallas kernel
+(:mod:`.score_moves`) and, transitively, the Rust native scorer must agree
+with it (the Rust side is cross-checked through the AOT artifact in
+``rust/src/runtime`` parity tests).
+
+Semantics (must match ``rust/src/balancer/scoring.rs``):
+
+* utilization ``u_i = used_i / size_i`` (0 where ``size_i == 0`` or the
+  slot is padding);
+* ``var_before``: population variance of ``u`` over the valid slots;
+* ``var_after[j]``: variance if ``shard`` bytes moved from OSD ``src`` to
+  OSD ``j`` — ``+inf`` where ``j`` is masked out, invalid, or the source.
+"""
+
+import jax.numpy as jnp
+
+
+def utilization(used, size):
+    """Element-wise used/size with 0 where size == 0."""
+    return jnp.where(size > 0, used / jnp.where(size > 0, size, 1.0), 0.0)
+
+
+def score_moves_ref(used, size, mask, valid, src, shard):
+    """Reference implementation, O(N) per candidate (materializes the
+    candidate x osd matrix; fine for tests, not for production).
+
+    Args:
+      used:  f64[N] bytes used per OSD (padded slots arbitrary).
+      size:  f64[N] capacity per OSD (0 for padding).
+      mask:  f64[N] 1.0 where j is a candidate destination.
+      valid: f64[N] 1.0 where the slot is a real OSD.
+      src:   i32 scalar, source OSD index.
+      shard: f64 scalar, shard size in bytes.
+
+    Returns:
+      (var_before: f64[], var_after: f64[N])
+    """
+    used = used * valid
+    size = size * valid
+    n_real = jnp.maximum(jnp.sum(valid), 1.0)
+    u = utilization(used, size) * valid
+
+    mean = jnp.sum(u) / n_real
+    var_before = jnp.maximum(jnp.sum(valid * (u - mean) ** 2) / n_real, 0.0)
+
+    n = used.shape[0]
+    u_src_new = utilization(used[src] - shard, size[src])
+
+    # candidate j: u with u[src] -> u_src_new and u[j] -> (used_j+shard)/size_j
+    u_j_new = utilization(used + shard, size) * valid
+    base = u.at[src].set(u_src_new)  # [N]
+    # matrix[c, i] = utilization vector of the cluster for candidate c
+    matrix = jnp.tile(base, (n, 1))
+    idx = jnp.arange(n)
+    matrix = matrix.at[idx, idx].set(u_j_new)
+    means = jnp.sum(matrix * valid[None, :], axis=1) / n_real
+    var = jnp.sum(valid[None, :] * (matrix - means[:, None]) ** 2, axis=1) / n_real
+    var = jnp.maximum(var, 0.0)
+
+    feasible = (mask > 0) & (valid > 0) & (idx != src)
+    var_after = jnp.where(feasible, var, jnp.inf)
+    return var_before, var_after

@@ -1,0 +1,181 @@
+"""Layer-1 Pallas kernels for destination scoring.
+
+The hot-spot of Equilibrium's movement selection is "evaluate the post-
+move cluster variance for every candidate destination" (paper §3.1,
+destination assignment). We reformulate the per-candidate variance as a
+rank-1 update of the global sums Σu and Σu² (see
+``rust/src/balancer/scoring.rs``), which turns the O(N²) naive form into
+two data-parallel passes over N lanes:
+
+1. :func:`reduce_kernel` — per-block partial Σu, Σu² (masked by validity);
+2. :func:`score_kernel` — per-lane variance-after computation from the
+   global sums and the source's deltas.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the vectors are tiled into
+``BLOCK``-lane VMEM blocks via BlockSpec; each block touches 5 × BLOCK × 8
+bytes of VMEM (≈ 10 KiB at BLOCK=256) — far below the ~16 MiB VMEM budget,
+so the schedule is a single streaming pass per input. The workload is
+VPU-bound (element-wise + reductions); the MXU is intentionally unused.
+CPU execution uses ``interpret=True`` (Mosaic custom-calls cannot run on
+the CPU PJRT plugin).
+
+Padding convention: callers pad all vectors to a bucket size N (multiple
+of BLOCK); padded lanes carry ``valid = 0`` and do not influence any
+result.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lanes per block: one TPU vreg row is 128 lanes; 256 keeps the VPU busy
+# while staying trivially VMEM-resident.
+BLOCK = 256
+
+
+def _num_blocks(n):
+    assert n % BLOCK == 0, f"padded size {n} must be a multiple of {BLOCK}"
+    return n // BLOCK
+
+
+# --------------------------------------------------------------------------
+# pass 1: masked partial sums of u and u²
+# --------------------------------------------------------------------------
+
+def _reduce_kernel(used_ref, size_ref, valid_ref, psum_ref, psumsq_ref):
+    used = used_ref[...]
+    size = size_ref[...]
+    valid = valid_ref[...]
+    u = jnp.where(size > 0, used / jnp.where(size > 0, size, 1.0), 0.0) * valid
+    psum_ref[0] = jnp.sum(u)
+    psumsq_ref[0] = jnp.sum(u * u)
+
+
+def partial_sums(used, size, valid, *, interpret=True):
+    """Per-block partial (Σu, Σu²) over valid lanes.
+
+    Returns two f64[num_blocks] arrays; caller sums them (tiny).
+    """
+    n = used.shape[0]
+    nb = _num_blocks(n)
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), used.dtype),
+            jax.ShapeDtypeStruct((nb,), used.dtype),
+        ],
+        interpret=interpret,
+    )(used, size, valid)
+
+
+# --------------------------------------------------------------------------
+# pass 2: per-candidate variance-after
+# --------------------------------------------------------------------------
+
+def _score_kernel(
+    used_ref,
+    size_ref,
+    mask_ref,
+    valid_ref,
+    scalars_ref,  # [sum, sumsq, d_sum_src, d_sq_src, shard, n_real, src_idx]
+    out_ref,
+):
+    used = used_ref[...]
+    size = size_ref[...]
+    mask = mask_ref[...]
+    valid = valid_ref[...]
+    s_sum = scalars_ref[0]
+    s_sumsq = scalars_ref[1]
+    d_sum_src = scalars_ref[2]
+    d_sq_src = scalars_ref[3]
+    shard = scalars_ref[4]
+    n_real = scalars_ref[5]
+    src_idx = scalars_ref[6]
+
+    b = pl.program_id(0)
+    lane = b * BLOCK + jax.lax.iota(jnp.int32, BLOCK)
+
+    u = jnp.where(size > 0, used / jnp.where(size > 0, size, 1.0), 0.0) * valid
+    u_new = jnp.where(size > 0, (used + shard) / jnp.where(size > 0, size, 1.0), 0.0) * valid
+
+    s1 = s_sum + d_sum_src + (u_new - u)
+    s2 = s_sumsq + d_sq_src + (u_new * u_new - u * u)
+    mean = s1 / n_real
+    var = jnp.maximum(s2 / n_real - mean * mean, 0.0)
+
+    feasible = (mask > 0) & (valid > 0) & (lane.astype(jnp.float64) != src_idx)
+    out_ref[...] = jnp.where(feasible, var, jnp.inf)
+
+
+def score_pass(used, size, mask, valid, scalars, *, interpret=True):
+    """Per-lane variance-after given the global sums in ``scalars``."""
+    n = used.shape[0]
+    nb = _num_blocks(n)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+            pl.BlockSpec((7,), lambda b: (0,)),  # broadcast scalars
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((n,), used.dtype),
+        interpret=interpret,
+    )(used, size, mask, valid, scalars)
+
+
+# --------------------------------------------------------------------------
+# full kernel: the function Layer 2 calls
+# --------------------------------------------------------------------------
+
+def score_moves_pallas(used, size, mask, valid, src, shard, *, interpret=True):
+    """Pallas implementation of the scoring hot-spot.
+
+    Same contract as :func:`..ref.score_moves_ref`. ``src`` is an i32
+    scalar, ``shard`` an f64 scalar; vectors are f64[N], N a multiple of
+    ``BLOCK``.
+    """
+    used = used * valid
+    size = size * valid
+    psum, psumsq = partial_sums(used, size, valid, interpret=interpret)
+    s_sum = jnp.sum(psum)
+    s_sumsq = jnp.sum(psumsq)
+    n_real = jnp.maximum(jnp.sum(valid), 1.0)
+
+    mean = s_sum / n_real
+    var_before = jnp.maximum(s_sumsq / n_real - mean * mean, 0.0)
+
+    # source-side rank-1 deltas (scalar math, done at the L2 level)
+    u_src = jnp.where(size[src] > 0, used[src] / jnp.where(size[src] > 0, size[src], 1.0), 0.0)
+    u_src_new = jnp.where(
+        size[src] > 0, (used[src] - shard) / jnp.where(size[src] > 0, size[src], 1.0), 0.0
+    )
+    d_sum_src = u_src_new - u_src
+    d_sq_src = u_src_new * u_src_new - u_src * u_src
+
+    scalars = jnp.stack(
+        [
+            s_sum,
+            s_sumsq,
+            d_sum_src,
+            d_sq_src,
+            shard,
+            n_real,
+            src.astype(used.dtype),
+        ]
+    )
+    var_after = score_pass(used, size, mask, valid, scalars, interpret=interpret)
+    return var_before, var_after

@@ -1,0 +1,33 @@
+"""Layer-2 compute graph: the balancer's scoring function as lowered to
+HLO and executed from the Rust coordinator.
+
+The artifact's ABI (one compiled executable per padded size bucket N):
+
+  inputs  : used f64[N], size f64[N], mask f64[N], valid f64[N],
+            params f64[2] = [src_index, shard_bytes]
+  outputs : tuple(var_before f64[1], var_after f64[N])
+
+``valid`` marks real OSD lanes (1.0) vs padding (0.0); ``mask`` marks
+candidate destinations. Scalars travel in a single small array so the
+Rust side only deals with f64 buffers.
+
+Python/JAX runs only at build time (``make artifacts``); the request path
+executes the AOT artifact through PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.score_moves import score_moves_pallas
+
+
+def score_moves(used, size, mask, valid, params):
+    """The lowered entry point. See module docstring for the ABI."""
+    src = params[0].astype(jnp.int32)
+    shard = params[1]
+    var_before, var_after = score_moves_pallas(used, size, mask, valid, src, shard)
+    return jnp.reshape(var_before, (1,)), var_after
+
+
+#: Padded size buckets compiled by aot.py. The Rust runtime picks the
+#: smallest bucket >= the cluster's OSD count (cluster B needs 1024).
+SIZE_BUCKETS = (256, 1024, 4096)

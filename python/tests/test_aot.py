@@ -1,0 +1,42 @@
+"""AOT lowering contract: the HLO text artifacts must carry exactly the
+ABI the Rust runtime expects (see rust/src/runtime/pjrt.rs)."""
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.aot import lower_bucket  # noqa: E402
+from compile.model import SIZE_BUCKETS  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def hlo_256():
+    return lower_bucket(256)
+
+
+def test_lowering_produces_hlo_text(hlo_256):
+    assert hlo_256.startswith("HloModule")
+    # textual HLO, not a serialized proto
+    assert "ENTRY" in hlo_256
+
+
+def test_entry_abi_matches_runtime_expectations(hlo_256):
+    # inputs: used, size, mask, valid f64[256] + params f64[2];
+    # output: tuple(f64[1], f64[256]) — return_tuple=True ABI
+    assert hlo_256.count("f64[256]") >= 4
+    assert "f64[2]" in hlo_256
+    assert "(f64[1]{0}, f64[256]{0})" in hlo_256
+
+
+def test_no_custom_calls(hlo_256):
+    # interpret=True Pallas must lower to plain HLO ops — a Mosaic
+    # custom-call would be unloadable by the CPU PJRT client
+    assert "custom-call" not in hlo_256
+
+
+def test_buckets_cover_paper_clusters():
+    # cluster B has 995 OSDs; some bucket must cover it
+    assert any(b >= 995 for b in SIZE_BUCKETS)
+    # and buckets are sorted ascending so the runtime picks minimally
+    assert list(SIZE_BUCKETS) == sorted(SIZE_BUCKETS)

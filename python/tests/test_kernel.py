@@ -1,0 +1,172 @@
+"""Kernel-vs-oracle correctness: the Pallas kernel must match the pure
+jnp reference (and a hand-rolled numpy recomputation) across shapes,
+masks and magnitudes — including byte-scale inputs (PiB clusters).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.ref import score_moves_ref  # noqa: E402
+from compile.kernels.score_moves import BLOCK, score_moves_pallas  # noqa: E402
+from compile.model import SIZE_BUCKETS, score_moves  # noqa: E402
+
+
+def numpy_oracle(used, size, mask, valid, src, shard):
+    """Fully independent recomputation in numpy."""
+    used = np.asarray(used) * valid
+    size = np.asarray(size) * valid
+    n_real = max(valid.sum(), 1.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        u = np.where(size > 0, used / np.where(size > 0, size, 1.0), 0.0) * valid
+    mean = u.sum() / n_real
+    var_before = max(((u - mean) ** 2 * valid).sum() / n_real, 0.0)
+    out = np.full(used.shape, np.inf)
+    for j in range(len(used)):
+        if j == src or mask[j] == 0 or valid[j] == 0:
+            continue
+        v = u.copy()
+        v[src] = (used[src] - shard) / size[src] if size[src] > 0 else 0.0
+        v[j] = (used[j] + shard) / size[j] if size[j] > 0 else 0.0
+        m = (v * valid).sum() / n_real
+        out[j] = max((((v - m) ** 2) * valid).sum() / n_real, 0.0)
+    return var_before, out
+
+
+def random_case(rng, n_pad, n_real):
+    size = np.zeros(n_pad)
+    used = np.zeros(n_pad)
+    valid = np.zeros(n_pad)
+    valid[:n_real] = 1.0
+    size[:n_real] = rng.uniform(1e12, 2e13, n_real)  # 1–20 TB devices
+    used[:n_real] = size[:n_real] * rng.uniform(0.05, 0.95, n_real)
+    mask = (rng.uniform(size=n_pad) < 0.7).astype(float) * valid
+    src = int(rng.integers(0, n_real))
+    shard = float(used[src] * rng.uniform(0.01, 0.5))
+    return used, size, mask, valid, src, shard
+
+
+def assert_scores_close(a, b, rtol=1e-9):
+    av, aa = a
+    bv, ba = b
+    np.testing.assert_allclose(float(av), float(bv), rtol=rtol)
+    aa = np.asarray(aa)
+    ba = np.asarray(ba)
+    assert (np.isinf(aa) == np.isinf(ba)).all(), "feasibility masks differ"
+    finite = ~np.isinf(aa)
+    np.testing.assert_allclose(aa[finite], ba[finite], rtol=rtol)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("n_pad,n_real", [(256, 256), (256, 100), (512, 300), (512, 5)])
+def test_pallas_matches_ref(seed, n_pad, n_real):
+    rng = np.random.default_rng(seed)
+    used, size, mask, valid, src, shard = random_case(rng, n_pad, n_real)
+    got = score_moves_pallas(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid),
+        jnp.int32(src), jnp.float64(shard),
+    )
+    want = score_moves_ref(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid),
+        src, shard,
+    )
+    assert_scores_close(got, want)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ref_matches_numpy(seed):
+    rng = np.random.default_rng(100 + seed)
+    used, size, mask, valid, src, shard = random_case(rng, 256, 180)
+    got = score_moves_ref(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid),
+        src, shard,
+    )
+    want = numpy_oracle(used, size, mask, valid, src, shard)
+    assert_scores_close(got, want)
+
+
+def test_model_entrypoint_abi():
+    """The lowered function's params-array ABI must behave like the
+    explicit-scalar call."""
+    rng = np.random.default_rng(7)
+    used, size, mask, valid, src, shard = random_case(rng, 256, 200)
+    params = jnp.asarray([float(src), shard])
+    var_before, var_after = score_moves(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid), params
+    )
+    assert var_before.shape == (1,)
+    assert var_after.shape == (256,)
+    want = numpy_oracle(used, size, mask, valid, src, shard)
+    assert_scores_close((var_before[0], var_after), want)
+
+
+def test_buckets_are_block_aligned():
+    for n in SIZE_BUCKETS:
+        assert n % BLOCK == 0
+
+
+def test_masked_everything_returns_all_inf():
+    n = BLOCK
+    used = jnp.ones(n) * 1e12
+    size = jnp.ones(n) * 2e12
+    valid = jnp.ones(n)
+    mask = jnp.zeros(n)
+    _, var_after = score_moves_pallas(used, size, mask, valid, jnp.int32(0), jnp.float64(1e9))
+    assert np.isinf(np.asarray(var_after)).all()
+
+
+def test_equalizing_move_reduces_variance():
+    n = BLOCK
+    used = np.full(n, 5e12)
+    used[0] = 9e12
+    used[1] = 1e12
+    size = np.full(n, 1e13)
+    valid = np.ones(n)
+    mask = np.ones(n)
+    var_before, var_after = score_moves_pallas(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid),
+        jnp.int32(0), jnp.float64(2e12),
+    )
+    assert float(var_after[1]) < float(var_before)
+    # the emptiest OSD is the best destination
+    finite = np.asarray(var_after)
+    assert finite[1] == finite[~np.isinf(finite)].min()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_real=st.integers(min_value=2, max_value=BLOCK),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    frac=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_hypothesis_pallas_vs_numpy(n_real, seed, frac):
+    """Property sweep: arbitrary real counts, shard fractions and seeds."""
+    rng = np.random.default_rng(seed)
+    used, size, mask, valid, src, _ = random_case(rng, BLOCK, n_real)
+    shard = float(used[src] * frac)
+    got = score_moves_pallas(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid),
+        jnp.int32(src), jnp.float64(shard),
+    )
+    want = numpy_oracle(used, size, mask, valid, src, shard)
+    assert_scores_close(got, want, rtol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(blocks=st.integers(min_value=1, max_value=8), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_shapes(blocks, seed):
+    """Shape sweep: every multiple of BLOCK lowers and evaluates."""
+    n = blocks * BLOCK
+    rng = np.random.default_rng(seed)
+    used, size, mask, valid, src, shard = random_case(rng, n, max(2, n // 2))
+    got = score_moves_pallas(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid),
+        jnp.int32(src), jnp.float64(shard),
+    )
+    want = numpy_oracle(used, size, mask, valid, src, shard)
+    assert_scores_close(got, want, rtol=1e-8)

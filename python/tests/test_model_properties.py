@@ -1,0 +1,93 @@
+"""Semantic properties of the scoring graph (beyond oracle parity):
+monotonicity and invariance facts the balancer's correctness rests on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.score_moves import BLOCK, score_moves_pallas  # noqa: E402
+
+
+def run(used, size, mask, valid, src, shard):
+    vb, va = score_moves_pallas(
+        jnp.asarray(used), jnp.asarray(size), jnp.asarray(mask), jnp.asarray(valid),
+        jnp.int32(src), jnp.float64(shard),
+    )
+    return float(vb), np.asarray(va)
+
+
+def base_cluster(n_real, seed=0):
+    rng = np.random.default_rng(seed)
+    used = np.zeros(BLOCK)
+    size = np.zeros(BLOCK)
+    valid = np.zeros(BLOCK)
+    valid[:n_real] = 1.0
+    size[:n_real] = rng.uniform(5e12, 2e13, n_real)
+    used[:n_real] = size[:n_real] * rng.uniform(0.2, 0.8, n_real)
+    return used, size, valid
+
+
+def test_zero_shard_move_changes_nothing():
+    used, size, valid = base_cluster(100)
+    vb, va = run(used, size, np.ones(BLOCK), valid, 0, 0.0)
+    finite = va[np.isfinite(va)]
+    np.testing.assert_allclose(finite, vb, rtol=1e-12)
+
+
+def test_variance_before_is_zero_for_equal_utilization():
+    used, size, valid = base_cluster(64)
+    used[:64] = size[:64] * 0.5  # all exactly 50%
+    vb, _ = run(used, size, np.ones(BLOCK), valid, 0, 1e9)
+    assert vb < 1e-20
+
+
+def test_padding_lanes_do_not_affect_results():
+    used, size, valid = base_cluster(50, seed=3)
+    vb1, va1 = run(used, size, np.ones(BLOCK), valid, 2, 1e11)
+    # poison the padding lanes: results must not change
+    used2 = used.copy()
+    size2 = size.copy()
+    used2[50:] = 9e15
+    size2[50:] = 1e12
+    vb2, va2 = run(used2, size2, np.ones(BLOCK), valid, 2, 1e11)
+    np.testing.assert_allclose(vb1, vb2, rtol=1e-12)
+    np.testing.assert_allclose(va1[:50], va2[:50], rtol=1e-12)
+    assert np.isinf(va2[50:]).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moving_from_fullest_to_emptiest_equal_size_reduces_variance(seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    used, size, valid = base_cluster(n, seed=seed)
+    size[:n] = 1e13  # equal sizes → emptiest is unambiguous
+    used[:n] = size[:n] * rng.uniform(0.2, 0.8, n)
+    src = int(np.argmax(used[:n]))
+    dst = int(np.argmin(used[:n]))
+    if src == dst:
+        return
+    gap = used[src] - used[dst]
+    shard = float(gap / 4)  # small enough to stay strictly improving
+    if shard <= 0:
+        return
+    vb, va = run(used, size, np.ones(BLOCK), valid, src, shard)
+    assert va[dst] < vb, f"equalizing move must reduce variance ({va[dst]} vs {vb})"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_best_destination_is_never_masked(seed):
+    rng = np.random.default_rng(seed)
+    used, size, valid = base_cluster(40, seed=seed)
+    mask = np.zeros(BLOCK)
+    allowed = rng.choice(40, size=10, replace=False)
+    mask[allowed] = 1.0
+    src = int(rng.integers(0, 40))
+    _, va = run(used, size, mask, valid, src, 1e11)
+    best = int(np.argmin(va))
+    assert mask[best] == 1.0 and best != src

@@ -1,0 +1,65 @@
+//! Microbenchmark: CRUSH mapping throughput (the substrate's hot path —
+//! every PG of every pool is mapped at cluster-build time, and rebuilds
+//! happen per experiment).
+
+use equilibrium::crush::{map_rule, pg_input, CrushBuilder, DeviceClass, Level, Rule};
+use equilibrium::util::bench::{black_box, section, Bench};
+use equilibrium::util::units::TIB;
+
+fn build(hosts: usize, osds_per_host: usize) -> equilibrium::crush::CrushMap {
+    let mut b = CrushBuilder::new();
+    let root = b.add_root("default");
+    for h in 0..hosts {
+        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+        for _ in 0..osds_per_host {
+            b.add_osd_bytes(host, 8 * TIB, DeviceClass::Hdd);
+        }
+    }
+    b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+    b.add_rule(Rule::erasure(1, "ec", "default", None, Level::Host));
+    b.build().unwrap()
+}
+
+fn main() {
+    let bench = Bench::default();
+
+    section("CRUSH replicated mapping (3 slots)");
+    for (hosts, per) in [(8usize, 4usize), (45, 18), (128, 16)] {
+        let map = build(hosts, per);
+        let rule = map.rule(0).unwrap().clone();
+        let mut x = 0u32;
+        let r = bench.run_batched(
+            &format!("replicated {}x{} ({} osds)", hosts, per, hosts * per),
+            1000,
+            || {
+                x = x.wrapping_add(1);
+                black_box(map_rule(&map, &rule, pg_input(1, x), 3))
+            },
+        );
+        let per_sec = 1.0 / r.mean();
+        println!("    -> {per_sec:.0} mappings/s");
+    }
+
+    section("CRUSH erasure mapping (11 slots)");
+    for (hosts, per) in [(45usize, 18usize)] {
+        let map = build(hosts, per);
+        let rule = map.rule(1).unwrap().clone();
+        let mut x = 0u32;
+        let r = bench.run_batched(
+            &format!("erasure 8+3 {}x{} ({} osds)", hosts, per, hosts * per),
+            300,
+            || {
+                x = x.wrapping_add(1);
+                black_box(map_rule(&map, &rule, pg_input(2, x), 11))
+            },
+        );
+        let per_sec = 1.0 / r.mean();
+        println!("    -> {per_sec:.0} mappings/s");
+    }
+
+    section("full cluster-B state build (8731 PGs incl. CRUSH placement)");
+    let quick = Bench { warmup_iters: 0, sample_count: 3, min_seconds: 0.0 };
+    quick.run("generator cluster B", || {
+        black_box(equilibrium::generator::clusters::by_name("b", 0).unwrap().state.pg_count())
+    });
+}

@@ -1,0 +1,74 @@
+//! Bench/report target for **Figure 6**: per-movement calculation time
+//! on clusters A and B for both balancers.
+//!
+//! Emits `target/figures/fig6_<cluster>_{mgr,equilibrium}.csv` (the
+//! `calc_seconds` column is the plotted series) and prints distribution
+//! statistics. Expected shape: Equilibrium's per-move time exceeds the
+//! default's and grows near termination ("more source devices are tried
+//! until the algorithm gives up"); in absolute terms this Rust
+//! implementation is orders of magnitude below the paper's Python
+//! reference (10 ms/move on A, 1000 ms/move on B).
+
+use equilibrium::generator::clusters::by_name;
+use equilibrium::report::{run_cluster, Scoring};
+use equilibrium::util::stats;
+use equilibrium::util::units::fmt_duration;
+use std::path::PathBuf;
+
+fn main() {
+    let out = PathBuf::from("target/figures");
+    std::fs::create_dir_all(&out).unwrap();
+
+    println!("\nFigure 6 — movement calculation time distributions:");
+    for name in ["a", "b"] {
+        let c = by_name(name, 0).unwrap();
+        let (mgr, eq) = run_cluster(&c, Scoring::Native, &Default::default());
+        for r in [&mgr, &eq] {
+            let times: Vec<f64> = r
+                .series
+                .samples
+                .iter()
+                .skip(1)
+                .map(|s| s.calc_seconds)
+                .collect();
+            if times.is_empty() {
+                continue;
+            }
+            println!(
+                "  cluster {} {:<12} mean {:>10}  p50 {:>10}  p99 {:>10}  max {:>10}  (n={})",
+                c.name,
+                r.balancer,
+                fmt_duration(stats::mean(&times)),
+                fmt_duration(stats::percentile(&times, 50.0)),
+                fmt_duration(stats::percentile(&times, 99.0)),
+                fmt_duration(stats::max(&times)),
+                times.len()
+            );
+            let csv = r.series.to_csv();
+            let path = out.join(format!("fig6_{}_{}.csv", name, r.balancer));
+            std::fs::write(&path, csv).unwrap();
+        }
+
+        // shape: equilibrium per-move calc time exceeds the baseline's
+        let mean_of = |r: &equilibrium::simulator::SimResult| {
+            let t: Vec<f64> =
+                r.series.samples.iter().skip(1).map(|s| s.calc_seconds).collect();
+            stats::mean(&t)
+        };
+        assert!(
+            mean_of(&eq) > mean_of(&mgr),
+            "cluster {name}: equilibrium should spend more per move than the count-only baseline"
+        );
+        // and the tail (near termination) is the slow part
+        let eq_times: Vec<f64> =
+            eq.series.samples.iter().skip(1).map(|s| s.calc_seconds).collect();
+        let head = stats::mean(&eq_times[..eq_times.len() / 2]);
+        let tail_max = stats::max(&eq_times[eq_times.len() / 2..]);
+        assert!(
+            tail_max >= head,
+            "cluster {name}: the slowest moves are near termination"
+        );
+    }
+    println!("\nCSV series written to target/figures/fig6_*.csv");
+    println!("shape checks passed (ours slower per move, slowest near termination)");
+}

@@ -1,0 +1,87 @@
+//! Robustness sweep — addresses the paper's own limitation (§5: "more
+//! diverse clusters are necessary to test the balancer's robustness").
+//!
+//! Generates a population of random clusters (mixed replication/EC,
+//! heterogeneous drives, varying pool counts), optionally ages them, and
+//! compares both balancers from identical states. Expected: Equilibrium
+//! ends at lower or equal utilization variance on every instance and
+//! gains at least as much user-pool space on the large majority.
+
+use equilibrium::balancer::{Equilibrium, MgrBalancer};
+use equilibrium::cluster::PoolKind;
+use equilibrium::generator::synth::random_cluster;
+use equilibrium::generator::{age, AgingConfig};
+use equilibrium::simulator::{compare, SimOptions};
+use equilibrium::util::rng::Rng;
+use equilibrium::util::units::to_tib_f;
+
+fn main() {
+    let mut rng = Rng::new(0xB0B);
+    let instances = 12;
+    let mut eq_variance_wins = 0;
+    let mut eq_gain_wins = 0;
+
+    println!(
+        "{:<5} {:>5} {:>5} {:>11} {:>11} {:>12} {:>12} {:>9} {:>9}",
+        "case", "osds", "pools", "var mgr", "var eq", "gain mgr", "gain eq", "mv mgr", "mv eq"
+    );
+    for case in 0..instances {
+        let mut initial = random_cluster(&mut rng);
+        // reproduce a production lifecycle, like the paper's clusters:
+        // the built-in balancer has been running (counts near ideal)...
+        {
+            let mut mgr = MgrBalancer::default();
+            equilibrium::balancer::run_to_convergence(&mut mgr, &mut initial, 10_000);
+        }
+        // ...and pools have since grown/shrunk unevenly
+        if case % 2 == 1 {
+            age(&mut initial, &AgingConfig::default(), rng.next_u64());
+        }
+        let user: Vec<u32> = initial
+            .pools
+            .values()
+            .filter(|p| p.kind == PoolKind::UserData)
+            .map(|p| p.id)
+            .collect();
+        let (mgr, eq) = compare(
+            &initial,
+            || Box::new(MgrBalancer::default()),
+            || Box::new(Equilibrium::default()),
+            &SimOptions::default(),
+        );
+        let v_mgr = mgr.series.last().unwrap().variance;
+        let v_eq = eq.series.last().unwrap().variance;
+        let g_mgr = mgr.series.total_gained(Some(&user));
+        let g_eq = eq.series.total_gained(Some(&user));
+        if v_eq <= v_mgr + 1e-12 {
+            eq_variance_wins += 1;
+        }
+        if g_eq >= g_mgr - 1e-9 {
+            eq_gain_wins += 1;
+        }
+        println!(
+            "{:<5} {:>5} {:>5} {:>11.3e} {:>11.3e} {:>9.2} TiB {:>9.2} TiB {:>9} {:>9}",
+            case,
+            initial.osd_count(),
+            initial.pools.len(),
+            v_mgr,
+            v_eq,
+            to_tib_f(g_mgr),
+            to_tib_f(g_eq),
+            mgr.movements.len(),
+            eq.movements.len(),
+        );
+    }
+    println!(
+        "\nequilibrium ends at lower/equal variance on {eq_variance_wins}/{instances}, \
+         gains >= default user-pool space on {eq_gain_wins}/{instances}"
+    );
+    assert_eq!(
+        eq_variance_wins, instances,
+        "size-aware balancing must never lose on utilization variance"
+    );
+    assert!(
+        eq_gain_wins * 3 >= instances * 2,
+        "equilibrium should win user-pool gains on >= 2/3 of random clusters"
+    );
+}

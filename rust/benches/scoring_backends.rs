@@ -1,0 +1,72 @@
+//! Ablation benchmark: destination-scoring backends.
+//!
+//! Compares, at realistic OSD counts:
+//! * `naive`  — O(N) per candidate (the formulation a straightforward
+//!   port of the paper's description would use);
+//! * `native` — rank-1 Rust scorer (Equilibrium's default backend);
+//! * `xla`    — the AOT-compiled JAX/Pallas kernel through PJRT
+//!   (skipped when `artifacts/` is absent).
+//!
+//! Also times a full balancer run on cluster A with native vs XLA
+//! scoring to show the end-to-end effect of the backend choice.
+
+use equilibrium::balancer::scoring::{score_naive, MoveScorer, NativeScorer, ScoreRequest};
+use equilibrium::balancer::{Equilibrium, EquilibriumConfig};
+use equilibrium::generator::clusters::by_name;
+use equilibrium::runtime::{Runtime, XlaScorer};
+use equilibrium::simulator::{simulate, SimOptions};
+use equilibrium::util::bench::{black_box, section, Bench};
+use equilibrium::util::rng::Rng;
+
+fn request_data(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<bool>) {
+    let mut rng = Rng::new(seed);
+    let size: Vec<f64> = (0..n).map(|_| rng.range_f64(1e12, 2e13)).collect();
+    let used: Vec<f64> = size.iter().map(|&s| s * rng.range_f64(0.2, 0.8)).collect();
+    let mask = vec![true; n];
+    (used, size, mask)
+}
+
+fn main() {
+    let bench = Bench::default();
+    let have_artifacts = Runtime::artifacts_present(&equilibrium::runtime::default_artifact_dir());
+    let mut xla = if have_artifacts {
+        Some(XlaScorer::load_default().expect("load artifacts"))
+    } else {
+        eprintln!("note: artifacts/ missing — xla backend skipped (run `make artifacts`)");
+        None
+    };
+
+    for n in [256usize, 995, 4096] {
+        section(&format!("single score call, N = {n} OSDs"));
+        let (used, size, mask) = request_data(n, 7);
+        let req = ScoreRequest { used: &used, size: &size, src: 0, shard: 1e11, mask: &mask };
+
+        bench.run_batched(&format!("naive  O(N^2)  n={n}"), 10, || {
+            black_box(score_naive(&req).var_after[n - 1])
+        });
+        bench.run_batched(&format!("native rank-1  n={n}"), 100, || {
+            black_box(NativeScorer.score(&req).var_after[n - 1])
+        });
+        if let Some(x) = xla.as_mut() {
+            bench.run(&format!("xla    PJRT    n={n}"), || {
+                black_box(x.score(&req).var_after[n - 1])
+            });
+        }
+    }
+
+    section("full Equilibrium run on cluster A (backend end-to-end)");
+    let quick = Bench { warmup_iters: 0, sample_count: 3, min_seconds: 0.0 };
+    quick.run("cluster A, native scoring", || {
+        let mut state = by_name("a", 0).unwrap().state;
+        let mut bal = Equilibrium::default();
+        black_box(simulate(&mut bal, &mut state, &SimOptions::default()).movements.len())
+    });
+    if have_artifacts {
+        quick.run("cluster A, xla scoring", || {
+            let mut state = by_name("a", 0).unwrap().state;
+            let scorer = XlaScorer::load_default().unwrap();
+            let mut bal = Equilibrium::new(EquilibriumConfig::default(), scorer);
+            black_box(simulate(&mut bal, &mut state, &SimOptions::default()).movements.len())
+        });
+    }
+}

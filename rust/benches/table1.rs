@@ -1,0 +1,46 @@
+//! Bench/report target for **Table 1**: gained free space and movement
+//! amount for clusters A–F under both balancers.
+//!
+//! ```bash
+//! cargo bench --bench table1
+//! # quick subset:
+//! EQUILIBRIUM_CLUSTERS=a,c,f cargo bench --bench table1
+//! ```
+//!
+//! Expected *shape* vs the paper (absolute numbers differ — synthetic
+//! clusters): Equilibrium gains more on A, C, D, E, F; the default gains
+//! more on B overall but less on B's big pools; Equilibrium moves less
+//! or similar data.
+
+use equilibrium::report::{table1, Scoring};
+use equilibrium::simulator::SimOptions;
+use std::time::Instant;
+
+fn main() {
+    let clusters_env = std::env::var("EQUILIBRIUM_CLUSTERS").unwrap_or_default();
+    let names: Vec<&str> = if clusters_env.is_empty() {
+        vec!["a", "b", "c", "d", "e", "f"]
+    } else {
+        clusters_env.split(',').collect()
+    };
+
+    let t0 = Instant::now();
+    let (table, rows) = table1(&names, 0, Scoring::Native, &SimOptions::default());
+    println!("\nTable 1 — generated data movement amounts and resulting gained pool space");
+    println!("{}", table.render());
+    println!("(total benchmark time: {:.1}s)", t0.elapsed().as_secs_f64());
+
+    // shape assertions (the reproduction criteria)
+    for r in &rows {
+        if r.cluster != "B" {
+            assert!(
+                r.gained_ours_tib >= r.gained_default_tib * 0.95,
+                "cluster {}: equilibrium should gain at least as much space ({:.1} vs {:.1})",
+                r.cluster,
+                r.gained_ours_tib,
+                r.gained_default_tib
+            );
+        }
+    }
+    println!("shape checks passed: Equilibrium gains >= default on all non-B clusters");
+}

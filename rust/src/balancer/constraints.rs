@@ -1,0 +1,407 @@
+//! CRUSH-rule compliance checks for proposed shard movements.
+//!
+//! A balancer may only move a shard to a destination that the pool's
+//! CRUSH rule *could* have chosen: right device class, inside the rule's
+//! take-subtree, and without collapsing two shards into one failure
+//! domain. These checks are shared by both balancers (paper §2.3:
+//! "it is important to not violate any CRUSH rules").
+
+use std::ops::Range;
+
+use crate::cluster::{ClusterState, PgId};
+use crate::crush::types::Step;
+use crate::crush::{DeviceClass, Level, NodeId, OsdId, Rule};
+
+/// Placement constraints for a contiguous range of result slots (one
+/// take/emit block of a rule).
+#[derive(Debug, Clone)]
+pub struct SlotConstraint {
+    /// Slots of the PG's acting set this block produced.
+    pub slots: Range<usize>,
+    /// Device class restriction of the block's take step.
+    pub class: Option<DeviceClass>,
+    /// Root bucket of the take step.
+    pub take_root: NodeId,
+    /// Levels at which chosen items must be distinct, innermost last
+    /// (e.g. `[Rack, Host]` for `choose rack / chooseleaf host`).
+    pub distinct_at: Vec<Level>,
+}
+
+/// Derive the slot constraints of a rule for a pool of `result_size`
+/// shards. Mirrors the slot-accounting of `map_rule`.
+pub fn rule_slot_constraints(
+    state: &ClusterState,
+    rule: &Rule,
+    result_size: usize,
+) -> Vec<SlotConstraint> {
+    let mut out = Vec::new();
+    let mut emitted = 0usize;
+    let mut cur_root: Option<NodeId> = None;
+    let mut cur_class: Option<DeviceClass> = None;
+    let mut cur_levels: Vec<Level> = Vec::new();
+    let mut cur_count = 0usize;
+
+    for step in &rule.steps {
+        match step {
+            Step::Take { root, class } => {
+                cur_root = state.crush.bucket_by_name.get(root).copied();
+                cur_class = *class;
+                cur_levels.clear();
+                cur_count = 0;
+            }
+            Step::ChooseFirstN { num, level }
+            | Step::ChooseLeafFirstN { num, level }
+            | Step::ChooseIndep { num, level }
+            | Step::ChooseLeafIndep { num, level } => {
+                let remaining = result_size.saturating_sub(emitted);
+                let n = if *num == 0 {
+                    remaining
+                } else if *num > 0 {
+                    (*num as usize).min(remaining)
+                } else {
+                    result_size
+                        .saturating_sub(num.unsigned_abs() as usize)
+                        .min(remaining)
+                };
+                // nested chooses multiply; a single choose sets the count
+                cur_count = if cur_count == 0 { n } else { cur_count * n };
+                cur_levels.push(*level);
+            }
+            Step::Emit => {
+                if let Some(root) = cur_root {
+                    out.push(SlotConstraint {
+                        slots: emitted..emitted + cur_count,
+                        class: cur_class,
+                        take_root: root,
+                        distinct_at: cur_levels.clone(),
+                    });
+                }
+                emitted += cur_count;
+                cur_count = 0;
+                cur_levels.clear();
+            }
+        }
+        if emitted >= result_size {
+            break;
+        }
+    }
+    out
+}
+
+/// Why a movement is not allowed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    UnknownPg,
+    SourceNotActing,
+    TargetAlreadyActing,
+    TargetDown,
+    TargetFull,
+    WrongClass,
+    OutsideTakeSubtree,
+    /// Two shards of the block would share a failure domain at `level`.
+    DomainCollision(Level),
+}
+
+/// Check whether moving `pg`'s shard from `from` to `to` keeps the pool's
+/// CRUSH rule satisfied. Returns `Ok(())` or the first violation found.
+pub fn check_move(
+    state: &ClusterState,
+    pg_id: PgId,
+    from: OsdId,
+    to: OsdId,
+) -> Result<(), Violation> {
+    let pool = &state.pools[&pg_id.pool];
+    let rule = state
+        .crush
+        .rule(pool.rule_id)
+        .expect("pool references unknown rule");
+    let constraints = rule_slot_constraints(state, rule, pool.redundancy.shard_count());
+    check_move_cached(state, pg_id, from, to, &constraints)
+}
+
+/// `check_move` with precomputed slot constraints — balancers evaluate
+/// hundreds of candidate destinations per shard; the constraints only
+/// depend on the pool, so callers cache them.
+pub fn check_move_cached(
+    state: &ClusterState,
+    pg_id: PgId,
+    from: OsdId,
+    to: OsdId,
+    constraints: &[SlotConstraint],
+) -> Result<(), Violation> {
+    let filter = MoveFilter::new(state, pg_id, from, constraints)?;
+    filter.allows(state, to)
+}
+
+/// Precomputed per-shard state for checking many candidate destinations:
+/// everything that does not depend on `to` is hoisted here, making
+/// [`MoveFilter::allows`] O(levels) with O(1) ancestor lookups. This is
+/// the balancer's innermost loop (candidates × shards × sources).
+pub struct MoveFilter {
+    shard_bytes: u64,
+    /// Devices currently acting for the PG.
+    acting: Vec<OsdId>,
+    class: Option<DeviceClass>,
+    take_root: NodeId,
+    take_root_level: Level,
+    /// Occupied failure domains per distinctness level (source's own
+    /// domain excluded — it is being vacated).
+    occupied: Vec<(Level, Vec<NodeId>)>,
+}
+
+impl MoveFilter {
+    /// Build the filter; errors if `from` does not hold a shard of the PG.
+    pub fn new(
+        state: &ClusterState,
+        pg_id: PgId,
+        from: OsdId,
+        constraints: &[SlotConstraint],
+    ) -> Result<MoveFilter, Violation> {
+        let pg = state.pg(pg_id).ok_or(Violation::UnknownPg)?;
+        let Some(slot) = pg.slot_of(from) else {
+            return Err(Violation::SourceNotActing);
+        };
+        let block = constraints
+            .iter()
+            .find(|c| c.slots.contains(&slot))
+            .ok_or(Violation::SourceNotActing)?;
+
+        let mut occupied = Vec::with_capacity(block.distinct_at.len());
+        for &level in &block.distinct_at {
+            if level == Level::Osd {
+                continue; // device distinctness via the acting list
+            }
+            let mut domains = Vec::with_capacity(block.slots.len());
+            for s in block.slots.clone() {
+                if s == slot {
+                    continue;
+                }
+                if let Some(Some(osd)) = pg.acting.get(s) {
+                    if let Some(d) = state.crush.ancestor_at(*osd as NodeId, level) {
+                        domains.push(d);
+                    }
+                }
+            }
+            occupied.push((level, domains));
+        }
+        Ok(MoveFilter {
+            shard_bytes: pg.shard_bytes,
+            acting: pg.devices().collect(),
+            class: block.class,
+            take_root: block.take_root,
+            take_root_level: state.crush.level_of(block.take_root).unwrap_or(Level::Root),
+            occupied,
+        })
+    }
+
+    /// Check one candidate destination.
+    pub fn allows(&self, state: &ClusterState, to: OsdId) -> Result<(), Violation> {
+        if self.acting.contains(&to) {
+            return Err(Violation::TargetAlreadyActing);
+        }
+        if !state.osd_is_up(to) {
+            return Err(Violation::TargetDown);
+        }
+        if state.osd_free(to) < self.shard_bytes {
+            return Err(Violation::TargetFull);
+        }
+        if let Some(class) = self.class {
+            if state.osd_class(to) != class {
+                return Err(Violation::WrongClass);
+            }
+        }
+        // take-subtree membership: O(1) via the device-ancestor cache
+        if state.crush.ancestor_at(to as NodeId, self.take_root_level) != Some(self.take_root)
+            && !state.crush.in_subtree(to as NodeId, self.take_root)
+        {
+            return Err(Violation::OutsideTakeSubtree);
+        }
+        for (level, domains) in &self.occupied {
+            match state.crush.ancestor_at(to as NodeId, *level) {
+                None => return Err(Violation::DomainCollision(*level)),
+                Some(d) if domains.contains(&d) => {
+                    return Err(Violation::DomainCollision(*level))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// All legal destination OSDs for moving `pg`'s shard off `from`,
+/// in ascending OSD id order. Convenience for balancers and tests.
+pub fn legal_destinations(state: &ClusterState, pg_id: PgId, from: OsdId) -> Vec<OsdId> {
+    (0..state.osd_count() as OsdId)
+        .filter(|&to| to != from && check_move(state, pg_id, from, to).is_ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Pool};
+    use crate::crush::{CrushBuilder, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    /// 4 racks × 2 hosts × 2 OSDs (hdd), plus 1 ssd per host.
+    fn cluster() -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for r in 0..4 {
+            let rack = b.add_bucket(&format!("rack{r}"), Level::Rack, root);
+            for h in 0..2 {
+                let host = b.add_bucket(&format!("host{r}{h}"), Level::Host, rack);
+                b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+                b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+                b.add_osd_bytes(host, TIB, DeviceClass::Ssd);
+            }
+        }
+        b.add_rule(Rule::replicated(0, "by-host", "default", Some(DeviceClass::Hdd), Level::Host));
+        b.add_rule(Rule::replicated(1, "by-rack", "default", Some(DeviceClass::Hdd), Level::Rack));
+        b.add_rule(Rule::hybrid(
+            2,
+            "hybrid",
+            "default",
+            DeviceClass::Ssd,
+            1,
+            DeviceClass::Hdd,
+            Level::Host,
+        ));
+        let crush = b.build().unwrap();
+        let pools = vec![
+            Pool::replicated(1, "by-host-pool", 3, 32, 0),
+            Pool::replicated(2, "by-rack-pool", 3, 16, 1),
+            Pool::replicated(3, "hybrid-pool", 3, 16, 2),
+        ];
+        ClusterState::build(crush, pools, |_, _| GIB)
+    }
+
+    #[test]
+    fn slot_constraints_for_simple_rule() {
+        let s = cluster();
+        let rule = s.crush.rule(0).unwrap();
+        let cs = rule_slot_constraints(&s, rule, 3);
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].slots, 0..3);
+        assert_eq!(cs[0].class, Some(DeviceClass::Hdd));
+        assert_eq!(cs[0].distinct_at, vec![Level::Host]);
+    }
+
+    #[test]
+    fn slot_constraints_for_hybrid_rule() {
+        let s = cluster();
+        let rule = s.crush.rule(2).unwrap();
+        let cs = rule_slot_constraints(&s, rule, 3);
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].slots, 0..1);
+        assert_eq!(cs[0].class, Some(DeviceClass::Ssd));
+        assert_eq!(cs[1].slots, 1..3);
+        assert_eq!(cs[1].class, Some(DeviceClass::Hdd));
+    }
+
+    #[test]
+    fn class_violations_detected() {
+        let s = cluster();
+        // find a PG of the hdd pool and try to move a shard to an SSD
+        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap();
+        let from = pg.devices().next().unwrap();
+        let ssd = (0..s.osd_count() as OsdId)
+            .find(|&o| s.osd_class(o) == DeviceClass::Ssd)
+            .unwrap();
+        assert_eq!(check_move(&s, pg.id, from, ssd), Err(Violation::WrongClass));
+    }
+
+    #[test]
+    fn host_collision_detected() {
+        let s = cluster();
+        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap();
+        let devices: Vec<OsdId> = pg.devices().collect();
+        let from = devices[0];
+        // the OTHER hdd osd on the host of devices[1] collides at host level
+        let other_host = s.crush.ancestor_at(devices[1] as NodeId, Level::Host).unwrap();
+        let sibling = s
+            .crush
+            .devices_under(other_host, Some(DeviceClass::Hdd))
+            .into_iter()
+            .find(|&o| o != devices[1])
+            .unwrap();
+        assert_eq!(
+            check_move(&s, pg.id, from, sibling),
+            Err(Violation::DomainCollision(Level::Host))
+        );
+    }
+
+    #[test]
+    fn rack_level_rule_enforces_rack_distinctness() {
+        let s = cluster();
+        let pg = s.pgs().find(|p| p.id.pool == 2).unwrap();
+        let devices: Vec<OsdId> = pg.devices().collect();
+        let from = devices[0];
+        // any hdd in the rack of devices[1] (other than devices[1]'s host
+        // sibling... any device in that rack) collides at rack level
+        let rack = s.crush.ancestor_at(devices[1] as NodeId, Level::Rack).unwrap();
+        let in_rack = s
+            .crush
+            .devices_under(rack, Some(DeviceClass::Hdd))
+            .into_iter()
+            .find(|&o| o != devices[1])
+            .unwrap();
+        assert_eq!(
+            check_move(&s, pg.id, from, in_rack),
+            Err(Violation::DomainCollision(Level::Rack))
+        );
+    }
+
+    #[test]
+    fn legal_moves_are_accepted_and_applicable() {
+        let mut s = cluster();
+        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap().id;
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let dests = legal_destinations(&s, pg, from);
+        assert!(!dests.is_empty(), "a healthy cluster must offer destinations");
+        for &to in &dests {
+            assert_eq!(s.osd_class(to), DeviceClass::Hdd);
+        }
+        // applying a legal move keeps rule compliance for every shard
+        let to = dests[0];
+        s.apply_movement(pg, from, to).unwrap();
+        let acting: Vec<OsdId> = s.pg(pg).unwrap().devices().collect();
+        let hosts: Vec<NodeId> = acting
+            .iter()
+            .map(|&o| s.crush.ancestor_at(o as NodeId, Level::Host).unwrap())
+            .collect();
+        let mut uniq = hosts.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), acting.len());
+    }
+
+    #[test]
+    fn hybrid_block_keeps_ssd_slot_on_ssd() {
+        let s = cluster();
+        let pg = s.pgs().find(|p| p.id.pool == 3).unwrap();
+        let ssd_shard = pg.acting[0].unwrap();
+        assert_eq!(s.osd_class(ssd_shard), DeviceClass::Ssd);
+        // the SSD slot may only move to another SSD
+        for to in legal_destinations(&s, pg.id, ssd_shard) {
+            assert_eq!(s.osd_class(to), DeviceClass::Ssd);
+        }
+        // an HDD slot may only move to HDDs
+        let hdd_shard = pg.acting[1].unwrap();
+        for to in legal_destinations(&s, pg.id, hdd_shard) {
+            assert_eq!(s.osd_class(to), DeviceClass::Hdd);
+        }
+    }
+
+    #[test]
+    fn down_and_full_targets_rejected() {
+        let mut s = cluster();
+        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap().id;
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let dests = legal_destinations(&s, pg, from);
+        let to = dests[0];
+        s.set_osd_up(to, false);
+        assert_eq!(check_move(&s, pg, from, to), Err(Violation::TargetDown));
+    }
+}

@@ -1,0 +1,415 @@
+//! The *Equilibrium* balancer — the paper's contribution (§3.1).
+//!
+//! Each iteration (Figure 3's movement-selection process):
+//!
+//! 1. **Source selection.** Sort OSDs by relative utilization
+//!    (`used/size`) in the *projected* cluster state; take the fullest as
+//!    source candidate.
+//! 2. **Shard selection.** On the source, evaluate PG shards largest
+//!    first.
+//! 3. **Destination assignment.** The emptiest OSD that (a) complies with
+//!    the pool's CRUSH rule, (b) moves both source and destination toward
+//!    their ideal pool PG-shard count, and (c) strictly reduces the
+//!    cluster-wide utilization variance.
+//! 4. If the fullest OSD offers no legal move, try the next-fullest — up
+//!    to the `k` fullest (paper default k = 25); when all `k` fail, the
+//!    algorithm has converged.
+//!
+//! Destination scoring (criterion c, evaluated for *all* candidates at
+//! once) is delegated to a [`MoveScorer`] backend: native Rust or the
+//! AOT-compiled JAX/Pallas kernel via PJRT.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterState, PgId};
+use crate::crush::OsdId;
+
+use super::constraints::{rule_slot_constraints, MoveFilter, SlotConstraint};
+use super::scoring::{MoveScorer, NativeScorer, ScoreRequest};
+use super::{Balancer, Proposal};
+
+/// Tunables for Equilibrium.
+#[derive(Debug, Clone)]
+pub struct EquilibriumConfig {
+    /// Number of fullest source OSDs to try before giving up (paper: 25).
+    pub k: usize,
+    /// Require the move to improve/maintain the deviation from the ideal
+    /// pool PG-shard count on both ends (paper criterion b). Disabling
+    /// this is the `ablate-count` configuration in the ablation bench.
+    pub require_count_improvement: bool,
+    /// Require the destination to be strictly less utilized than the
+    /// source (always true in the paper's movement-selection figure).
+    pub require_emptier_target: bool,
+    /// Minimum variance improvement to accept a move (guards against
+    /// float-noise livelock).
+    pub min_variance_gain: f64,
+}
+
+impl Default for EquilibriumConfig {
+    fn default() -> Self {
+        EquilibriumConfig {
+            k: 25,
+            require_count_improvement: true,
+            require_emptier_target: true,
+            min_variance_gain: 1e-15,
+        }
+    }
+}
+
+/// The balancer. Generic over the scoring backend.
+pub struct Equilibrium<S: MoveScorer> {
+    pub cfg: EquilibriumConfig,
+    scorer: S,
+    /// Diagnostic: sources examined by the last `next_move` call
+    /// (Figure 6's "more source devices are tried near termination").
+    pub last_sources_tried: usize,
+    /// Ideal shard counts per pool — a function of CRUSH weights only, so
+    /// cached for the balancer's lifetime.
+    ideal_cache: BTreeMap<u32, Vec<f64>>,
+    /// Rule device sets per pool (also weight-static).
+    devset_cache: BTreeMap<u32, Vec<OsdId>>,
+}
+
+impl Default for Equilibrium<NativeScorer> {
+    fn default() -> Self {
+        Equilibrium::new(EquilibriumConfig::default(), NativeScorer)
+    }
+}
+
+impl<S: MoveScorer> Equilibrium<S> {
+    pub fn new(cfg: EquilibriumConfig, scorer: S) -> Self {
+        Equilibrium {
+            cfg,
+            scorer,
+            last_sources_tried: 0,
+            ideal_cache: BTreeMap::new(),
+            devset_cache: BTreeMap::new(),
+        }
+    }
+
+    fn ideal_counts<'a>(
+        cache: &'a mut BTreeMap<u32, Vec<f64>>,
+        state: &ClusterState,
+        pool_id: u32,
+    ) -> &'a [f64] {
+        cache
+            .entry(pool_id)
+            .or_insert_with(|| state.ideal_counts(&state.pools[&pool_id]))
+    }
+
+    /// Evaluate one source OSD: the largest movable shard wins; returns
+    /// the proposal or None if nothing on this source can move.
+    fn try_source(
+        &mut self,
+        state: &ClusterState,
+        src: OsdId,
+        used: &[f64],
+        size: &[f64],
+        utils: &[f64],
+        constraint_cache: &mut BTreeMap<u32, Vec<SlotConstraint>>,
+        count_cache: &mut BTreeMap<u32, Vec<u32>>,
+    ) -> Option<Proposal> {
+        // shards on the source, largest first (paper: "preferably large");
+        // tie-break by PgId for determinism
+        let mut shards: Vec<(u64, PgId)> = state
+            .shards_on(src)
+            .iter()
+            .map(|&pg| (state.pg(pg).unwrap().shard_bytes, pg))
+            .collect();
+        shards.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+
+        for (shard_bytes, pg_id) in shards {
+            if shard_bytes == 0 {
+                continue; // empty shards cannot improve utilization
+            }
+            let pool = &state.pools[&pg_id.pool];
+            let constraints = constraint_cache
+                .entry(pg_id.pool)
+                .or_insert_with(|| {
+                    rule_slot_constraints(
+                        state,
+                        state.crush.rule(pool.rule_id).expect("rule"),
+                        pool.redundancy.shard_count(),
+                    )
+                })
+                .clone();
+
+            let ideal = Self::ideal_counts(&mut self.ideal_cache, state, pg_id.pool);
+            // per-pool shard counts, computed once per next_move call
+            // (shards on one source typically share a few pools)
+            let counts = count_cache.entry(pg_id.pool).or_insert_with(|| {
+                (0..state.osd_count() as OsdId)
+                    .map(|o| state.pool_shards_on(pg_id.pool, o))
+                    .collect()
+            });
+
+            // criterion (b), source side: shedding one shard must not
+            // worsen the source's deviation from its ideal count
+            if self.cfg.require_count_improvement {
+                let ideal_src = ideal[src as usize];
+                let c_src = counts[src as usize] as f64;
+                if ((c_src - 1.0) - ideal_src).abs() > (c_src - ideal_src).abs() + 1e-9 {
+                    continue;
+                }
+            }
+
+            // the device set this shard may live on: the pool's rule
+            // devices. Variance (criterion c) is evaluated over this set —
+            // that is what lets a multi-class cluster converge per class
+            // (Figure 5: "optimizes both SSD and HDD utilization
+            // simultaneously"); cross-class utilization offsets are
+            // unfixable by any legal move and must not mask progress.
+            let devset = self
+                .devset_cache
+                .entry(pg_id.pool)
+                .or_insert_with(|| {
+                    state
+                        .crush
+                        .rule_devices(state.crush.rule(pool.rule_id).expect("rule"))
+                })
+                .clone();
+            // exclude down / zero-capacity devices from the variance
+            // population (a failed OSD's 0-utilization lane would distort
+            // criterion c and it can never be a destination anyway)
+            let active: Vec<OsdId> = devset
+                .iter()
+                .copied()
+                .filter(|&o| state.osd_is_up(o) && state.osd_size(o) > 0)
+                .collect();
+            let Some(src_sub) = active.iter().position(|&d| d == src) else {
+                continue; // shard stranded outside its rule's devices
+            };
+
+            // build subset vectors + the candidate mask: CRUSH-legal +
+            // count-improving + emptier than the source. All to-invariant
+            // work is hoisted into the MoveFilter.
+            let Ok(filter) = MoveFilter::new(state, pg_id, src, &constraints) else {
+                continue;
+            };
+            let m = active.len();
+            let mut used_sub = Vec::with_capacity(m);
+            let mut size_sub = Vec::with_capacity(m);
+            let mut mask = vec![false; m];
+            let mut any = false;
+            for (j, &to) in active.iter().enumerate() {
+                used_sub.push(used[to as usize]);
+                size_sub.push(size[to as usize]);
+                if to == src {
+                    continue;
+                }
+                if self.cfg.require_emptier_target && utils[to as usize] >= utils[src as usize] {
+                    continue;
+                }
+                if self.cfg.require_count_improvement {
+                    let ideal_to = ideal[to as usize];
+                    let c_to = counts[to as usize] as f64;
+                    if ((c_to + 1.0) - ideal_to).abs() > (c_to - ideal_to).abs() + 1e-9 {
+                        continue;
+                    }
+                }
+                if filter.allows(state, to).is_err() {
+                    continue;
+                }
+                mask[j] = true;
+                any = true;
+            }
+            if !any {
+                continue;
+            }
+
+            // criterion (c): variance must strictly improve; among the
+            // improving candidates take the emptiest (paper: "emptiest
+            // possible target OSD")
+            let req = ScoreRequest {
+                used: &used_sub,
+                size: &size_sub,
+                src: src_sub,
+                shard: shard_bytes as f64,
+                mask: &mask,
+            };
+            let scores = self.scorer.score(&req);
+            let mut best: Option<(f64, OsdId)> = None;
+            for (j, &to) in active.iter().enumerate() {
+                if !mask[j] {
+                    continue;
+                }
+                if scores.var_after[j] >= scores.var_before - self.cfg.min_variance_gain {
+                    continue;
+                }
+                let u = utils[to as usize];
+                match best {
+                    Some((bu, bo)) if (bu, bo) <= (u, to) => {}
+                    _ => best = Some((u, to)),
+                }
+            }
+            if let Some((_, to)) = best {
+                return Some(Proposal { pg: pg_id, from: src, to, bytes: shard_bytes });
+            }
+        }
+        None
+    }
+}
+
+impl<S: MoveScorer> Balancer for Equilibrium<S> {
+    fn name(&self) -> &str {
+        "equilibrium"
+    }
+
+    fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
+        let n = state.osd_count();
+        let mut used = Vec::with_capacity(n);
+        let mut size = Vec::with_capacity(n);
+        let mut utils = Vec::with_capacity(n);
+        for o in 0..n as OsdId {
+            used.push(state.osd_used(o) as f64);
+            size.push(state.osd_size(o) as f64);
+            utils.push(state.utilization(o));
+        }
+
+        // source order: fullest first (skip down/zero-size OSDs). The k
+        // budget applies per device class: the fullest HDDs must not
+        // crowd out an imbalanced SSD tier (Figure 5 optimizes both
+        // classes simultaneously).
+        let mut order: Vec<OsdId> = (0..n as OsdId)
+            .filter(|&o| state.osd_is_up(o) && state.osd_size(o) > 0)
+            .collect();
+        order.sort_by(|&a, &b| {
+            utils[b as usize]
+                .partial_cmp(&utils[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut taken_per_class: BTreeMap<crate::crush::DeviceClass, usize> = BTreeMap::new();
+        let sources: Vec<OsdId> = order
+            .into_iter()
+            .filter(|&o| {
+                let c = taken_per_class.entry(state.osd_class(o)).or_insert(0);
+                *c += 1;
+                *c <= self.cfg.k
+            })
+            .collect();
+
+        let mut cache: BTreeMap<u32, Vec<SlotConstraint>> = BTreeMap::new();
+        let mut count_cache: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        self.last_sources_tried = 0;
+        for &src in &sources {
+            self.last_sources_tried += 1;
+            if let Some(p) =
+                self.try_source(state, src, &used, &size, &utils, &mut cache, &mut count_cache)
+            {
+                return Some(p);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::run_to_convergence;
+    use crate::cluster::{ClusterState, Pool};
+    use crate::crush::{CrushBuilder, DeviceClass, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    /// 8 hosts × 1 OSD; heterogeneous sizes to force skew.
+    fn skewed_cluster() -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..8 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            let size = if h % 3 == 0 { 8 * TIB } else { 4 * TIB };
+            b.add_osd_bytes(host, size, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![Pool::replicated(1, "data", 3, 64, 0)];
+        ClusterState::build(crush, pools, |_, i| (20 + (i % 7) as u64) * GIB)
+    }
+
+    #[test]
+    fn every_proposal_is_legal_and_variance_improving() {
+        let mut state = skewed_cluster();
+        let mut bal = Equilibrium::default();
+        let mut moves = 0;
+        while let Some(p) = bal.next_move(&state) {
+            let var_before = state.utilization_variance();
+            let u_src = state.utilization(p.from);
+            let u_dst = state.utilization(p.to);
+            assert!(u_dst < u_src, "destination must be emptier");
+            assert!(crate::balancer::constraints::check_move(&state, p.pg, p.from, p.to).is_ok());
+            state.apply_movement(p.pg, p.from, p.to).unwrap();
+            assert!(
+                state.utilization_variance() < var_before,
+                "variance must strictly decrease"
+            );
+            moves += 1;
+            assert!(moves < 10_000, "must converge");
+        }
+        assert!(moves > 0, "skewed cluster must offer at least one move");
+        assert!(state.verify().is_empty());
+    }
+
+    #[test]
+    fn convergence_reduces_variance_substantially() {
+        let mut state = skewed_cluster();
+        let before = state.utilization_variance();
+        let mut bal = Equilibrium::default();
+        let moves = run_to_convergence(&mut bal, &mut state, 10_000);
+        let after = state.utilization_variance();
+        assert!(!moves.is_empty());
+        assert!(
+            after < before * 0.25,
+            "variance should drop substantially: {before:.6} -> {after:.6}"
+        );
+    }
+
+    #[test]
+    fn convergence_increases_pool_free_space() {
+        let mut state = skewed_cluster();
+        let before = state.total_max_avail(true);
+        let mut bal = Equilibrium::default();
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        let after = state.total_max_avail(true);
+        assert!(
+            after >= before,
+            "balancing must not lose space: {before:.3e} -> {after:.3e}"
+        );
+    }
+
+    #[test]
+    fn balanced_cluster_yields_no_moves() {
+        let mut state = skewed_cluster();
+        let mut bal = Equilibrium::default();
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        // a second balancer run on the converged state finds nothing
+        let mut bal2 = Equilibrium::default();
+        assert!(bal2.next_move(&state).is_none());
+    }
+
+    #[test]
+    fn k_limits_sources_tried() {
+        let mut state = skewed_cluster();
+        let mut bal =
+            Equilibrium::new(EquilibriumConfig { k: 2, ..Default::default() }, NativeScorer);
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        assert!(bal.last_sources_tried <= 2);
+    }
+
+    #[test]
+    fn respects_failure_domains_throughout() {
+        let mut state = skewed_cluster();
+        let mut bal = Equilibrium::default();
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        for pg in state.pgs() {
+            let hosts: Vec<_> = pg
+                .devices()
+                .map(|o| state.crush.ancestor_at(o as i32, Level::Host).unwrap())
+                .collect();
+            let mut uniq = hosts.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), hosts.len(), "pg {} lost host distinctness", pg.id);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Baseline: Ceph's built-in `mgr balancer` in upmap mode, as invoked by
+//! the paper (`osdmaptool --upmap --upmap-max 10000 --upmap-deviation 1`).
+//!
+//! Faithful to the documented behaviour *including its limitations*
+//! (paper §2.3.1):
+//!
+//! * optimizes **PG shard counts only** — completely size-blind (neither
+//!   shard sizes nor actual device utilization are inspected);
+//! * **pool-local view** — each pool is balanced independently; an OSD
+//!   that ends up count-heavy in *every* pool is never noticed;
+//! * **candidate-selection limitation** — for a given overfull source the
+//!   balancer only tries the most count-underfull destination; when that
+//!   destination is unusable (CRUSH), it gives up on the pool for this
+//!   round instead of trying the next-best device.
+
+
+use crate::cluster::{ClusterState, PgId};
+use crate::crush::OsdId;
+
+use super::constraints::{check_move_cached, rule_slot_constraints};
+use super::{Balancer, Proposal};
+
+/// Tunables mirroring the osdmaptool flags.
+#[derive(Debug, Clone)]
+pub struct MgrConfig {
+    /// `--upmap-deviation`: a pool is balanced when every OSD's shard
+    /// count is within this many shards of its ideal.
+    pub max_deviation: f64,
+    /// `--upmap-max`: overall movement budget.
+    pub max_moves: usize,
+}
+
+impl Default for MgrConfig {
+    fn default() -> Self {
+        MgrConfig { max_deviation: 1.0, max_moves: 10_000 }
+    }
+}
+
+/// The baseline balancer.
+#[derive(Debug, Default)]
+pub struct MgrBalancer {
+    pub cfg: MgrConfig,
+    moves_done: usize,
+    /// Weight-static caches (ideal counts and rule device sets per pool).
+    ideal_cache: std::collections::BTreeMap<u32, (Vec<OsdId>, Vec<f64>)>,
+}
+
+impl MgrBalancer {
+    pub fn new(cfg: MgrConfig) -> Self {
+        MgrBalancer { cfg, moves_done: 0, ideal_cache: Default::default() }
+    }
+
+    /// Try to produce one movement for `pool_id`. Pool-local: only this
+    /// pool's shard counts are considered.
+    fn try_pool(&mut self, state: &ClusterState, pool_id: u32) -> Option<Proposal> {
+        let pool = &state.pools[&pool_id];
+        let rule = state.crush.rule(pool.rule_id)?;
+        let (devices, ideal) = self.ideal_cache.entry(pool_id).or_insert_with(|| {
+            (state.crush.rule_devices(rule), state.ideal_counts(pool))
+        });
+        if devices.len() < 2 {
+            return None;
+        }
+
+        // count deviation per device (pool-local!)
+        let mut devs: Vec<(f64, OsdId)> = devices
+            .iter()
+            .map(|&o| {
+                let count = state.pool_shards_on(pool_id, o) as f64;
+                (count - ideal[o as usize], o)
+            })
+            .collect();
+        // deterministic order: deviation, then id
+        devs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let (max_dev, source) = devs[0];
+        let (min_dev, dest) = *devs.last().unwrap();
+
+        // balanced within tolerance → nothing to do for this pool
+        if max_dev <= self.cfg.max_deviation && min_dev >= -self.cfg.max_deviation {
+            return None;
+        }
+
+        // the documented limitation: only the single most-underfull
+        // destination is ever tried
+        let constraints = rule_slot_constraints(state, rule, pool.redundancy.shard_count());
+        let mut shard_ids: Vec<PgId> = state
+            .shards_on(source)
+            .iter()
+            .copied()
+            .filter(|pg| pg.pool == pool_id)
+            .collect();
+        shard_ids.sort(); // count-based: PG identity order, size ignored
+        for pg in shard_ids {
+            if check_move_cached(state, pg, source, dest, &constraints).is_ok() {
+                let bytes = state.pg(pg).unwrap().shard_bytes;
+                return Some(Proposal { pg, from: source, to: dest, bytes });
+            }
+        }
+        None // abort this pool (do NOT try the next-best destination)
+    }
+}
+
+impl Balancer for MgrBalancer {
+    fn name(&self) -> &str {
+        "mgr"
+    }
+
+    fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
+        if self.moves_done >= self.cfg.max_moves {
+            return None;
+        }
+        // pools are processed independently, in id order
+        let pool_ids: Vec<u32> = state.pools.keys().copied().collect();
+        for pool_id in pool_ids {
+            if let Some(p) = self.try_pool(state, pool_id) {
+                self.moves_done += 1;
+                return Some(p);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::run_to_convergence;
+    use crate::cluster::{ClusterState, Pool};
+    use crate::crush::{CrushBuilder, DeviceClass, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    fn cluster(pg_count: u32) -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..6 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![Pool::replicated(1, "data", 3, pg_count, 0)];
+        ClusterState::build(crush, pools, |_, i| (10 + (i % 5) as u64) * GIB)
+    }
+
+    #[test]
+    fn drives_counts_within_deviation() {
+        let mut state = cluster(64);
+        let mut bal = MgrBalancer::default();
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        let pool = &state.pools[&1];
+        for o in 0..state.osd_count() as OsdId {
+            let count = state.pool_shards_on(1, o) as f64;
+            let ideal = state.ideal_shard_count(pool, o);
+            assert!(
+                (count - ideal).abs() <= 1.0 + 1e-9,
+                "osd.{o}: count {count} vs ideal {ideal}"
+            );
+        }
+        assert!(state.verify().is_empty());
+    }
+
+    #[test]
+    fn all_moves_are_crush_legal() {
+        let mut state = cluster(48);
+        let mut bal = MgrBalancer::default();
+        while let Some(p) = bal.next_move(&state) {
+            assert!(crate::balancer::constraints::check_move(&state, p.pg, p.from, p.to).is_ok());
+            state.apply_movement(p.pg, p.from, p.to).unwrap();
+        }
+    }
+
+    #[test]
+    fn max_moves_is_respected() {
+        let mut state = cluster(256);
+        let mut bal = MgrBalancer::new(MgrConfig { max_moves: 3, ..Default::default() });
+        let moves = run_to_convergence(&mut bal, &mut state, 10_000);
+        assert!(moves.len() <= 3);
+    }
+
+    #[test]
+    fn size_blindness_leaves_utilization_variance_behind() {
+        // two pools: one with big shards, one with small shards. The mgr
+        // balancer equalizes counts per pool; with unequal shard sizes the
+        // utilization variance stays well above what Equilibrium reaches.
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..6 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![
+            Pool::replicated(1, "big", 3, 32, 0),
+            Pool::replicated(2, "small", 3, 32, 0),
+        ];
+        let build = |crush| {
+            ClusterState::build(crush, pools.clone(), |p, i| {
+                if p.id == 1 {
+                    (40 + (i % 11) as u64 * 7) * GIB // big, spread-out sizes
+                } else {
+                    GIB
+                }
+            })
+        };
+        let mut mgr_state = build(crush.clone());
+        let mut eq_state = build(crush);
+
+        let mut mgr = MgrBalancer::default();
+        run_to_convergence(&mut mgr, &mut mgr_state, 10_000);
+        let mut eq = crate::balancer::Equilibrium::default();
+        run_to_convergence(&mut eq, &mut eq_state, 10_000);
+
+        let v_mgr = mgr_state.utilization_variance();
+        let v_eq = eq_state.utilization_variance();
+        assert!(
+            v_eq <= v_mgr,
+            "size-aware balancing must match or beat count-only: {v_eq:.8} vs {v_mgr:.8}"
+        );
+    }
+
+    #[test]
+    fn converged_pool_produces_no_moves() {
+        let mut state = cluster(64);
+        let mut bal = MgrBalancer::default();
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        let mut again = MgrBalancer::default();
+        assert!(again.next_move(&state).is_none());
+    }
+}

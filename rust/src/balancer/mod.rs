@@ -1,0 +1,85 @@
+//! Balancing algorithms: the paper's *Equilibrium* (size-aware, §3.1)
+//! and the Ceph `mgr balancer` baseline (count-only upmap, §2.3.1), plus
+//! the shared constraint machinery and destination-scoring backends.
+
+pub mod constraints;
+pub mod equilibrium;
+pub mod mgr;
+pub mod primary;
+pub mod scoring;
+pub mod upmap_script;
+
+use crate::cluster::{ClusterState, Movement, PgId};
+use crate::crush::OsdId;
+
+pub use equilibrium::{Equilibrium, EquilibriumConfig};
+pub use mgr::{MgrBalancer, MgrConfig};
+pub use primary::{balance_primaries, primary_variance, PrimaryConfig, PrimarySwap};
+pub use scoring::{MoveScorer, NativeScorer, ScoreRequest, ScoreResponse};
+
+/// A movement proposed by a balancer (not yet applied).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Proposal {
+    pub pg: PgId,
+    pub from: OsdId,
+    pub to: OsdId,
+    pub bytes: u64,
+}
+
+/// A balancing algorithm: repeatedly asked for the next movement given
+/// the projected cluster state; `None` means converged. Both balancers in
+/// the paper work exactly this way ("both balancers ... terminate once
+/// they do not find any more optimization steps", §3.2).
+pub trait Balancer {
+    fn name(&self) -> &str;
+    fn next_move(&mut self, state: &ClusterState) -> Option<Proposal>;
+}
+
+/// Drive a balancer until convergence (or `max_moves`), applying each
+/// movement to `state`. Returns the applied movements.
+pub fn run_to_convergence(
+    balancer: &mut dyn Balancer,
+    state: &mut ClusterState,
+    max_moves: usize,
+) -> Vec<Movement> {
+    let mut out = Vec::new();
+    while out.len() < max_moves {
+        let Some(p) = balancer.next_move(state) else { break };
+        match state.apply_movement(p.pg, p.from, p.to) {
+            Ok(m) => out.push(m),
+            Err(e) => {
+                // a balancer proposing an inapplicable move is a bug
+                panic!("balancer '{}' proposed invalid move {:?}: {e}", balancer.name(), p);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pool;
+    use crate::crush::{CrushBuilder, DeviceClass, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    #[test]
+    fn run_to_convergence_respects_cap() {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..5 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        let crush = b.build().unwrap();
+        let mut state = ClusterState::build(
+            crush,
+            vec![Pool::replicated(1, "p", 3, 64, 0)],
+            |_, i| (5 + (i % 9) as u64) * GIB,
+        );
+        let mut bal = Equilibrium::default();
+        let moves = run_to_convergence(&mut bal, &mut state, 2);
+        assert!(moves.len() <= 2);
+    }
+}

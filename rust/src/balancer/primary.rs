@@ -1,0 +1,190 @@
+//! Primary (read) balancer — the complementary optimization the paper
+//! cites from Flores (§2.3.2, "New Read Balancer in Ceph"): distribute
+//! each PG's *primary* shard evenly so read traffic spreads across the
+//! cluster. Primaries can be reassigned among a PG's existing replicas
+//! without moving any data, so this is free capacity-wise and composes
+//! with Equilibrium (run it after the capacity balancer).
+//!
+//! Only replicated pools participate (EC acting sets are positional).
+
+use crate::cluster::{ClusterState, PgId, Redundancy};
+use crate::crush::OsdId;
+
+/// A primary reassignment instruction (`ceph osd pg-upmap-primary`-like).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrimarySwap {
+    pub pg: PgId,
+    pub from: OsdId,
+    pub to: OsdId,
+}
+
+/// Configuration for the read balancer.
+#[derive(Debug, Clone)]
+pub struct PrimaryConfig {
+    /// Stop when every OSD's primary count is within this many of its
+    /// ideal share.
+    pub max_deviation: f64,
+    pub max_swaps: usize,
+}
+
+impl Default for PrimaryConfig {
+    fn default() -> Self {
+        PrimaryConfig { max_deviation: 1.0, max_swaps: 100_000 }
+    }
+}
+
+/// Plan primary swaps until each OSD's primary count is near its ideal
+/// (PG-count-weighted) share, then apply them to `state`. Returns the
+/// swaps performed.
+pub fn balance_primaries(state: &mut ClusterState, cfg: &PrimaryConfig) -> Vec<PrimarySwap> {
+    let mut swaps = Vec::new();
+    // per-pool, like Ceph's read balancer: each pool's primaries are
+    // spread over the devices its replicas already sit on
+    let pool_ids: Vec<u32> = state
+        .pools
+        .values()
+        .filter(|p| matches!(p.redundancy, Redundancy::Replicated { .. }))
+        .map(|p| p.id)
+        .collect();
+
+    for pool_id in pool_ids {
+        loop {
+            if swaps.len() >= cfg.max_swaps {
+                return swaps;
+            }
+            // count primaries and replica-holders per OSD for this pool
+            let n = state.osd_count();
+            let mut primaries = vec![0i64; n];
+            let mut pgs_of_pool: Vec<PgId> = Vec::new();
+            for pg in state.pgs().filter(|p| p.id.pool == pool_id) {
+                pgs_of_pool.push(pg.id);
+                if let Some(Some(p0)) = pg.acting.first() {
+                    primaries[*p0 as usize] += 1;
+                }
+            }
+            if pgs_of_pool.is_empty() {
+                break;
+            }
+            // ideal: pg_count × shards_on_osd / total_shards — an OSD
+            // holding more replicas of the pool should serve more reads
+            let total_shards: i64 = (0..n as OsdId)
+                .map(|o| state.pool_shards_on(pool_id, o) as i64)
+                .sum();
+            if total_shards == 0 {
+                break;
+            }
+            let ideal = |o: OsdId, state: &ClusterState| -> f64 {
+                pgs_of_pool.len() as f64 * state.pool_shards_on(pool_id, o) as f64
+                    / total_shards as f64
+            };
+            // most-overloaded primary holder
+            let mut best: Option<(f64, OsdId)> = None;
+            for o in 0..n as OsdId {
+                let dev = primaries[o as usize] as f64 - ideal(o, state);
+                if best.map(|(d, _)| dev > d).unwrap_or(true) {
+                    best = Some((dev, o));
+                }
+            }
+            let Some((max_dev, over)) = best else { break };
+            if max_dev <= cfg.max_deviation {
+                break;
+            }
+            // find one of its PGs whose most-underloaded replica can take over
+            let mut done = false;
+            for &pg_id in &pgs_of_pool {
+                let pg = state.pg(pg_id).unwrap();
+                if pg.acting.first() != Some(&Some(over)) {
+                    continue;
+                }
+                let mut candidate: Option<(f64, OsdId)> = None;
+                for o in pg.devices().skip(1) {
+                    let dev = primaries[o as usize] as f64 - ideal(o, state);
+                    if candidate.map(|(d, _)| dev < d).unwrap_or(true) {
+                        candidate = Some((dev, o));
+                    }
+                }
+                if let Some((dev, to)) = candidate {
+                    // only if it actually improves the spread
+                    if dev + 1.0 < max_dev {
+                        state.set_primary(pg_id, to).expect("replica must exist");
+                        swaps.push(PrimarySwap { pg: pg_id, from: over, to });
+                        done = true;
+                        break;
+                    }
+                }
+            }
+            if !done {
+                break; // no improving swap for this pool
+            }
+        }
+    }
+    swaps
+}
+
+/// Population variance of per-OSD primary counts (the read-spread
+/// metric).
+pub fn primary_variance(state: &ClusterState) -> f64 {
+    let counts: Vec<f64> = (0..state.osd_count() as OsdId)
+        .map(|o| state.primaries_on(o) as f64)
+        .collect();
+    crate::util::stats::variance(&counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::clusters;
+
+    #[test]
+    fn swaps_reduce_primary_variance_without_moving_data() {
+        let mut s = clusters::demo(71);
+        let used_before: Vec<u64> = (0..s.osd_count() as u32).map(|o| s.osd_used(o)).collect();
+        let var_before = primary_variance(&s);
+        let swaps = balance_primaries(&mut s, &PrimaryConfig::default());
+        let var_after = primary_variance(&s);
+        assert!(var_after <= var_before, "{var_before} -> {var_after}");
+        if var_before > 1.5 {
+            assert!(!swaps.is_empty(), "skewed primaries must yield swaps");
+            assert!(var_after < var_before);
+        }
+        // zero data movement
+        let used_after: Vec<u64> = (0..s.osd_count() as u32).map(|o| s.osd_used(o)).collect();
+        assert_eq!(used_before, used_after);
+        assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn primaries_stay_within_acting_sets() {
+        let mut s = clusters::demo(73);
+        let swaps = balance_primaries(&mut s, &PrimaryConfig::default());
+        for sw in &swaps {
+            let pg = s.pg(sw.pg).unwrap();
+            assert!(pg.on(sw.to), "primary must be a replica holder");
+        }
+    }
+
+    #[test]
+    fn ec_pools_are_untouched() {
+        let c = clusters::by_name("e", 0).unwrap(); // one big EC pool
+        let mut s = c.state;
+        let acting_before: Vec<_> = s.pgs().map(|p| (p.id, p.acting.clone())).collect();
+        let swaps = balance_primaries(&mut s, &PrimaryConfig::default());
+        for sw in &swaps {
+            assert_ne!(sw.pg.pool, 1, "EC pool slots may not be reordered");
+        }
+        for (id, acting) in acting_before {
+            if id.pool == 1 {
+                assert_eq!(s.pg(id).unwrap().acting, acting);
+            }
+        }
+    }
+
+    #[test]
+    fn set_primary_rejects_non_holders_and_ec() {
+        let mut s = clusters::demo(75);
+        let pg = s.pgs().next().unwrap().id;
+        let non_holder =
+            (0..s.osd_count() as u32).find(|&o| !s.pg(pg).unwrap().on(o)).unwrap();
+        assert!(s.set_primary(pg, non_holder).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Destination scoring: the compute hot-spot of Equilibrium.
+//!
+//! For one source shard, score every candidate destination by the cluster
+//! utilization variance that *would* result from the move. The naive form
+//! is O(OSDs) per candidate (recompute the variance), O(OSDs²) per move;
+//! both backends here use the rank-1 reformulation — track Σu and Σu², so
+//! each candidate is O(1):
+//!
+//! ```text
+//! u_src' = (used_src − s) / size_src      u_j' = (used_j + s) / size_j
+//! Σu'  = Σu  + (u_src' − u_src) + (u_j' − u_j)
+//! Σu²' = Σu² + (u_src'² − u_src²) + (u_j'² − u_j²)
+//! var' = Σu²'/N − (Σu'/N)²
+//! ```
+//!
+//! Backends:
+//! * [`NativeScorer`] — straight Rust, always available.
+//! * `runtime::XlaScorer` — the same computation AOT-compiled from
+//!   JAX/Pallas (`python/compile/kernels/score_moves.py`) and executed via
+//!   PJRT; bit-compared against this one in tests.
+
+/// A scoring request: cluster vectors plus the proposed move.
+#[derive(Debug, Clone)]
+pub struct ScoreRequest<'a> {
+    /// Bytes used per OSD.
+    pub used: &'a [f64],
+    /// Capacity per OSD (0 ⇒ OSD is ignored / utilization 0).
+    pub size: &'a [f64],
+    /// Index of the source OSD.
+    pub src: usize,
+    /// Shard size in bytes.
+    pub shard: f64,
+    /// Candidate mask: `true` = evaluate as destination.
+    pub mask: &'a [bool],
+}
+
+/// Scores for all OSDs: `var_after[j]` = cluster utilization variance if
+/// the shard moved to OSD `j` (+∞ where masked out), plus the current
+/// variance for comparison.
+#[derive(Debug, Clone)]
+pub struct ScoreResponse {
+    pub var_before: f64,
+    pub var_after: Vec<f64>,
+}
+
+/// A scoring backend.
+pub trait MoveScorer {
+    fn name(&self) -> &'static str;
+    fn score(&mut self, req: &ScoreRequest<'_>) -> ScoreResponse;
+}
+
+/// Pure-Rust scorer.
+#[derive(Debug, Default, Clone)]
+pub struct NativeScorer;
+
+impl MoveScorer for NativeScorer {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn score(&mut self, req: &ScoreRequest<'_>) -> ScoreResponse {
+        let n = req.used.len();
+        assert_eq!(req.size.len(), n);
+        assert_eq!(req.mask.len(), n);
+        assert!(req.src < n);
+
+        let util = |used: f64, size: f64| if size > 0.0 { used / size } else { 0.0 };
+
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for i in 0..n {
+            let u = util(req.used[i], req.size[i]);
+            sum += u;
+            sumsq += u * u;
+        }
+        let nf = n as f64;
+        let var_before = (sumsq / nf - (sum / nf) * (sum / nf)).max(0.0);
+
+        let u_src = util(req.used[req.src], req.size[req.src]);
+        let u_src_new = util(req.used[req.src] - req.shard, req.size[req.src]);
+        let d_sum_src = u_src_new - u_src;
+        let d_sq_src = u_src_new * u_src_new - u_src * u_src;
+
+        let mut var_after = vec![f64::INFINITY; n];
+        for j in 0..n {
+            if !req.mask[j] || j == req.src {
+                continue;
+            }
+            let u_j = util(req.used[j], req.size[j]);
+            let u_j_new = util(req.used[j] + req.shard, req.size[j]);
+            let s1 = sum + d_sum_src + (u_j_new - u_j);
+            let s2 = sumsq + d_sq_src + (u_j_new * u_j_new - u_j * u_j);
+            var_after[j] = (s2 / nf - (s1 / nf) * (s1 / nf)).max(0.0);
+        }
+        ScoreResponse { var_before, var_after }
+    }
+}
+
+/// Reference (naive, O(N) per candidate) implementation used in tests to
+/// validate the rank-1 backends.
+pub fn score_naive(req: &ScoreRequest<'_>) -> ScoreResponse {
+    let n = req.used.len();
+    let util = |used: f64, size: f64| if size > 0.0 { used / size } else { 0.0 };
+    let base: Vec<f64> = (0..n).map(|i| util(req.used[i], req.size[i])).collect();
+    let var = crate::util::stats::variance(&base);
+    let mut var_after = vec![f64::INFINITY; n];
+    for j in 0..n {
+        if !req.mask[j] || j == req.src {
+            continue;
+        }
+        let mut v = base.clone();
+        v[req.src] = util(req.used[req.src] - req.shard, req.size[req.src]);
+        v[j] = util(req.used[j] + req.shard, req.size[j]);
+        var_after[j] = crate::util::stats::variance(&v);
+    }
+    ScoreResponse { var_before: var, var_after }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_request(rng: &mut Rng, n: usize) -> (Vec<f64>, Vec<f64>, usize, f64, Vec<bool>) {
+        let size: Vec<f64> = (0..n).map(|_| rng.range_f64(1e12, 2e13)).collect();
+        let used: Vec<f64> = size.iter().map(|&s| s * rng.range_f64(0.1, 0.9)).collect();
+        let src = rng.index(n);
+        let shard = used[src] * rng.range_f64(0.01, 0.5);
+        let mask: Vec<bool> = (0..n).map(|_| rng.chance(0.8)).collect();
+        (used, size, src, shard, mask)
+    }
+
+    #[test]
+    fn native_matches_naive() {
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let n = 2 + rng.index(64);
+            let (used, size, src, shard, mask) = random_request(&mut rng, n);
+            let req = ScoreRequest { used: &used, size: &size, src, shard, mask: &mask };
+            let fast = NativeScorer.score(&req);
+            let slow = score_naive(&req);
+            assert!((fast.var_before - slow.var_before).abs() < 1e-12);
+            for j in 0..n {
+                let (a, b) = (fast.var_after[j], slow.var_after[j]);
+                if a.is_infinite() || b.is_infinite() {
+                    assert_eq!(a.is_infinite(), b.is_infinite(), "slot {j}");
+                } else {
+                    assert!((a - b).abs() < 1e-12, "slot {j}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moving_to_emptier_equal_size_osd_reduces_variance() {
+        // 4 equal OSDs, one much fuller: moving data from it to the
+        // emptiest must reduce variance
+        let used = vec![900.0, 100.0, 500.0, 500.0];
+        let size = vec![1000.0; 4];
+        let mask = vec![true; 4];
+        let req = ScoreRequest { used: &used, size: &size, src: 0, shard: 200.0, mask: &mask };
+        let r = NativeScorer.score(&req);
+        assert!(r.var_after[1] < r.var_before);
+        // and the emptiest destination is the best destination
+        assert!(r.var_after[1] < r.var_after[2]);
+        assert!(r.var_after[1] < r.var_after[3]);
+    }
+
+    #[test]
+    fn size_aware_scoring_prefers_large_destination() {
+        // paper §2.3.1: a size-blind balancer may move a big shard onto a
+        // small drive. With both candidates at the same 50% utilization,
+        // the same shard raises the small drive by 10 points but the big
+        // one by only 1 — variance scoring must prefer the big drive.
+        // (Filler OSDs keep the cluster mean stable, as in any real
+        // cluster; with only 3 OSDs the mean-shift term would dominate.)
+        let mut used = vec![9000.0, 500.0, 5000.0];
+        let mut size = vec![10000.0, 1000.0, 10000.0];
+        for _ in 0..10 {
+            used.push(5000.0);
+            size.push(10000.0);
+        }
+        let mut mask = vec![true, true, true];
+        mask.resize(used.len(), false);
+        let req = ScoreRequest { used: &used, size: &size, src: 0, shard: 100.0, mask: &mask };
+        let r = NativeScorer.score(&req);
+        assert!(
+            r.var_after[2] < r.var_after[1],
+            "must prefer the larger destination: {:?}",
+            &r.var_after[..3]
+        );
+    }
+
+    #[test]
+    fn masked_and_source_slots_are_infinite() {
+        let used = vec![10.0, 20.0, 30.0];
+        let size = vec![100.0; 3];
+        let mask = vec![true, false, true];
+        let req = ScoreRequest { used: &used, size: &size, src: 0, shard: 5.0, mask: &mask };
+        let r = NativeScorer.score(&req);
+        assert!(r.var_after[0].is_infinite(), "source excluded");
+        assert!(r.var_after[1].is_infinite(), "masked excluded");
+        assert!(r.var_after[2].is_finite());
+    }
+
+    #[test]
+    fn zero_size_osds_are_harmless() {
+        let used = vec![10.0, 0.0, 30.0];
+        let size = vec![100.0, 0.0, 100.0];
+        let mask = vec![true, true, true];
+        let req = ScoreRequest { used: &used, size: &size, src: 2, shard: 5.0, mask: &mask };
+        let r = NativeScorer.score(&req);
+        assert!(r.var_before.is_finite());
+        assert!(r.var_after[0].is_finite());
+    }
+}

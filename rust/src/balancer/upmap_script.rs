@@ -1,0 +1,161 @@
+//! Operator-facing output: translate a movement plan into the `ceph osd
+//! pg-upmap-items` commands a real Ceph cluster executes, and parse such
+//! scripts back (for auditing/diffing plans).
+//!
+//! This is the interchange the original Equilibrium tool prints — the
+//! balancer's product is not applied state but a command sequence (paper
+//! §3.1: "The output is a series of movement instructions").
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterState, Movement, PgId};
+use crate::crush::OsdId;
+
+/// Render one movement as a `ceph` CLI command. Ceph's upmap interface
+/// takes the *complete* exception list per PG, so the caller must pass
+/// the PG's accumulated items after this movement.
+pub fn render_pg_upmap(pg: PgId, items: &[(OsdId, OsdId)]) -> String {
+    if items.is_empty() {
+        return format!("ceph osd rm-pg-upmap-items {pg}");
+    }
+    let pairs: Vec<String> = items.iter().map(|(a, b)| format!("{a} {b}")).collect();
+    format!("ceph osd pg-upmap-items {pg} {}", pairs.join(" "))
+}
+
+/// Render a whole plan against a starting state: applies each movement
+/// to a scratch copy to keep the accumulated upmap items per PG correct,
+/// emitting one command per movement (exactly what an operator pipes to
+/// `bash` step by step).
+pub fn render_plan(initial: &ClusterState, plan: &[Movement]) -> Vec<String> {
+    let mut state = initial.clone();
+    let mut out = Vec::with_capacity(plan.len());
+    for m in plan {
+        state
+            .apply_movement(m.pg, m.from, m.to)
+            .expect("plan must be applicable to the initial state");
+        out.push(render_pg_upmap(m.pg, state.upmap_items(m.pg)));
+    }
+    out
+}
+
+/// Parse errors for upmap scripts.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ScriptError {
+    #[error("line {0}: not a pg-upmap command")]
+    NotUpmap(usize),
+    #[error("line {0}: malformed pg id")]
+    BadPgId(usize),
+    #[error("line {0}: odd number of osd ids")]
+    OddPairs(usize),
+    #[error("line {0}: malformed osd id")]
+    BadOsd(usize),
+}
+
+/// A parsed script: the final upmap exception table it would install.
+pub type UpmapTable = BTreeMap<PgId, Vec<(OsdId, OsdId)>>;
+
+/// Parse a script of `ceph osd pg-upmap-items` / `rm-pg-upmap-items`
+/// commands into the resulting exception table (later lines override
+/// earlier ones, like repeated `ceph` invocations would).
+pub fn parse_script(text: &str) -> Result<UpmapTable, ScriptError> {
+    let mut table = UpmapTable::new();
+    for (no, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let words: Vec<&str> = line.split_whitespace().collect();
+        if words.len() >= 4 && words[..3] == ["ceph", "osd", "pg-upmap-items"] {
+            let pg = parse_pgid(words[3]).ok_or(ScriptError::BadPgId(no + 1))?;
+            let rest = &words[4..];
+            if rest.len() % 2 != 0 {
+                return Err(ScriptError::OddPairs(no + 1));
+            }
+            let mut items = Vec::with_capacity(rest.len() / 2);
+            for pair in rest.chunks(2) {
+                let a: OsdId = pair[0].parse().map_err(|_| ScriptError::BadOsd(no + 1))?;
+                let b: OsdId = pair[1].parse().map_err(|_| ScriptError::BadOsd(no + 1))?;
+                items.push((a, b));
+            }
+            table.insert(pg, items);
+        } else if words.len() == 4 && words[..3] == ["ceph", "osd", "rm-pg-upmap-items"] {
+            let pg = parse_pgid(words[3]).ok_or(ScriptError::BadPgId(no + 1))?;
+            table.remove(&pg);
+        } else {
+            return Err(ScriptError::NotUpmap(no + 1));
+        }
+    }
+    Ok(table)
+}
+
+fn parse_pgid(s: &str) -> Option<PgId> {
+    let (pool, idx) = s.split_once('.')?;
+    Some(PgId::new(pool.parse().ok()?, u32::from_str_radix(idx, 16).ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::{run_to_convergence, Equilibrium};
+    use crate::generator::clusters;
+
+    #[test]
+    fn render_and_parse_roundtrip() {
+        let initial = clusters::demo(21);
+        let mut state = initial.clone();
+        let mut bal = Equilibrium::default();
+        let plan = run_to_convergence(&mut bal, &mut state, 10_000);
+        assert!(!plan.is_empty());
+
+        let script = render_plan(&initial, &plan).join("\n");
+        let table = parse_script(&script).unwrap();
+
+        // the parsed table equals the final state's exception table
+        assert_eq!(table.len(), state.upmap_entry_count());
+        for (pg, items) in &table {
+            assert_eq!(state.upmap_items(*pg), items.as_slice(), "pg {pg}");
+        }
+    }
+
+    #[test]
+    fn render_empty_items_is_rm() {
+        assert_eq!(
+            render_pg_upmap(PgId::new(3, 26), &[]),
+            "ceph osd rm-pg-upmap-items 3.1a"
+        );
+        assert_eq!(
+            render_pg_upmap(PgId::new(3, 26), &[(1, 2), (5, 9)]),
+            "ceph osd pg-upmap-items 3.1a 1 2 5 9"
+        );
+    }
+
+    #[test]
+    fn parse_handles_comments_removals_and_hex() {
+        let table = parse_script(
+            "# plan header\n\
+             ceph osd pg-upmap-items 1.f 3 4\n\
+             ceph osd pg-upmap-items 2.a 1 2 3 4\n\
+             ceph osd rm-pg-upmap-items 1.f\n",
+        )
+        .unwrap();
+        assert_eq!(table.len(), 1);
+        assert_eq!(table[&PgId::new(2, 10)], vec![(1, 2), (3, 4)]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert_eq!(parse_script("echo hi"), Err(ScriptError::NotUpmap(1)));
+        assert_eq!(
+            parse_script("ceph osd pg-upmap-items 1.z 1 2"),
+            Err(ScriptError::BadPgId(1))
+        );
+        assert_eq!(
+            parse_script("ceph osd pg-upmap-items 1.1 1"),
+            Err(ScriptError::OddPairs(1))
+        );
+        assert_eq!(
+            parse_script("ceph osd pg-upmap-items 1.1 1 x"),
+            Err(ScriptError::BadOsd(1))
+        );
+    }
+}

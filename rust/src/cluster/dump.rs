@@ -1,0 +1,452 @@
+//! JSON dump/load of complete cluster state.
+//!
+//! The interchange format plays the role of `ceph osd dump` + `ceph pg
+//! dump` + the osdmap in the paper's experiments: balancers can be run
+//! offline against a dumped state (`equilibrium balance --state x.json`),
+//! and the generators can emit dumps for external tools. Bucket ids are
+//! preserved exactly on round-trip — straw2 hashes node ids, so ids are
+//! part of placement determinism.
+
+use std::collections::BTreeMap;
+
+use crate::crush::types::{Bucket, Device, DeviceClass, Level, NodeId, Rule, Step};
+use crate::crush::{from_parts, CrushMap, OsdId};
+use crate::util::json::Json;
+
+use super::pg::{Pg, PgId};
+use super::pool::{Pool, PoolKind, Redundancy};
+use super::state::ClusterState;
+
+/// Errors while loading a dump.
+#[derive(Debug, thiserror::Error)]
+pub enum DumpError {
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("dump format: {0}")]
+    Format(String),
+    #[error("crush: {0}")]
+    Crush(#[from] crate::crush::BuildError),
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, DumpError> {
+    v.get(key).ok_or_else(|| DumpError::Format(format!("missing field '{key}'")))
+}
+
+fn as_u64(v: &Json, what: &str) -> Result<u64, DumpError> {
+    v.as_u64().ok_or_else(|| DumpError::Format(format!("'{what}' must be a non-negative integer")))
+}
+
+fn as_str<'a>(v: &'a Json, what: &str) -> Result<&'a str, DumpError> {
+    v.as_str().ok_or_else(|| DumpError::Format(format!("'{what}' must be a string")))
+}
+
+// ---- serialization ----------------------------------------------------------
+
+fn step_to_json(s: &Step) -> Json {
+    match s {
+        Step::Take { root, class } => {
+            let mut j = Json::obj().set("op", "take").set("root", root.as_str());
+            if let Some(c) = class {
+                j = j.set("class", c.as_str());
+            }
+            j
+        }
+        Step::ChooseFirstN { num, level } => Json::obj()
+            .set("op", "choose_firstn")
+            .set("num", *num as i64)
+            .set("level", level.as_str()),
+        Step::ChooseLeafFirstN { num, level } => Json::obj()
+            .set("op", "chooseleaf_firstn")
+            .set("num", *num as i64)
+            .set("level", level.as_str()),
+        Step::ChooseIndep { num, level } => Json::obj()
+            .set("op", "choose_indep")
+            .set("num", *num as i64)
+            .set("level", level.as_str()),
+        Step::ChooseLeafIndep { num, level } => Json::obj()
+            .set("op", "chooseleaf_indep")
+            .set("num", *num as i64)
+            .set("level", level.as_str()),
+        Step::Emit => Json::obj().set("op", "emit"),
+    }
+}
+
+fn step_from_json(j: &Json) -> Result<Step, DumpError> {
+    let op = as_str(field(j, "op")?, "op")?;
+    let num_level = |j: &Json| -> Result<(i32, Level), DumpError> {
+        let num = field(j, "num")?
+            .as_i64()
+            .ok_or_else(|| DumpError::Format("'num' must be an integer".into()))? as i32;
+        let level = Level::parse(as_str(field(j, "level")?, "level")?)
+            .ok_or_else(|| DumpError::Format("unknown level".into()))?;
+        Ok((num, level))
+    };
+    Ok(match op {
+        "take" => {
+            let class = match j.get_str("class") {
+                Some(c) => Some(
+                    DeviceClass::parse(c)
+                        .ok_or_else(|| DumpError::Format(format!("unknown class '{c}'")))?,
+                ),
+                None => None,
+            };
+            Step::Take { root: as_str(field(j, "root")?, "root")?.to_string(), class }
+        }
+        "choose_firstn" => {
+            let (num, level) = num_level(j)?;
+            Step::ChooseFirstN { num, level }
+        }
+        "chooseleaf_firstn" => {
+            let (num, level) = num_level(j)?;
+            Step::ChooseLeafFirstN { num, level }
+        }
+        "choose_indep" => {
+            let (num, level) = num_level(j)?;
+            Step::ChooseIndep { num, level }
+        }
+        "chooseleaf_indep" => {
+            let (num, level) = num_level(j)?;
+            Step::ChooseLeafIndep { num, level }
+        }
+        "emit" => Step::Emit,
+        other => return Err(DumpError::Format(format!("unknown step op '{other}'"))),
+    })
+}
+
+/// Serialize a full cluster state to a JSON value.
+pub fn to_json(state: &ClusterState) -> Json {
+    let crush = &state.crush;
+    let devices: Vec<Json> = crush
+        .devices
+        .iter()
+        .map(|d| {
+            Json::obj()
+                .set("id", d.id as u64)
+                .set("weight", d.weight)
+                .set("class", d.class.as_str())
+        })
+        .collect();
+    let buckets: Vec<Json> = crush
+        .buckets
+        .values()
+        .map(|b| {
+            Json::obj()
+                .set("id", b.id as i64)
+                .set("name", b.name.as_str())
+                .set("level", b.level.as_str())
+                .set(
+                    "children",
+                    Json::Arr(b.children.iter().map(|&c| Json::from(c as i64)).collect()),
+                )
+        })
+        .collect();
+    let rules: Vec<Json> = crush
+        .rules
+        .values()
+        .map(|r| {
+            Json::obj()
+                .set("id", r.id as u64)
+                .set("name", r.name.as_str())
+                .set("steps", Json::Arr(r.steps.iter().map(step_to_json).collect()))
+        })
+        .collect();
+    let pools: Vec<Json> = state
+        .pools
+        .values()
+        .map(|p| {
+            let j = Json::obj()
+                .set("id", p.id as u64)
+                .set("name", p.name.as_str())
+                .set("pg_count", p.pg_count as u64)
+                .set("rule_id", p.rule_id as u64)
+                .set(
+                    "kind",
+                    match p.kind {
+                        PoolKind::UserData => "data",
+                        PoolKind::Metadata => "metadata",
+                    },
+                );
+            match p.redundancy {
+                Redundancy::Replicated { size } => {
+                    j.set("type", "replicated").set("size", size as u64)
+                }
+                Redundancy::Erasure { k, m } => {
+                    j.set("type", "erasure").set("k", k as u64).set("m", m as u64)
+                }
+            }
+        })
+        .collect();
+    let pgs: Vec<Json> = state
+        .pgs()
+        .map(|pg| {
+            Json::obj()
+                .set("pool", pg.id.pool as u64)
+                .set("index", pg.id.index as u64)
+                .set("shard_bytes", pg.shard_bytes)
+                .set(
+                    "acting",
+                    Json::Arr(
+                        pg.acting
+                            .iter()
+                            .map(|s| match s {
+                                Some(o) => Json::from(*o as u64),
+                                None => Json::Null,
+                            })
+                            .collect(),
+                    ),
+                )
+        })
+        .collect();
+    let upmap: Vec<Json> = state
+        .pgs()
+        .filter_map(|pg| {
+            let items = state.upmap_items(pg.id);
+            if items.is_empty() {
+                return None;
+            }
+            Some(
+                Json::obj()
+                    .set("pool", pg.id.pool as u64)
+                    .set("index", pg.id.index as u64)
+                    .set(
+                        "items",
+                        Json::Arr(
+                            items
+                                .iter()
+                                .map(|&(a, b)| Json::from(vec![a as u64, b as u64]))
+                                .collect(),
+                        ),
+                    ),
+            )
+        })
+        .collect();
+
+    Json::obj()
+        .set("format", "equilibrium-cluster-dump")
+        .set("version", 1u64)
+        .set(
+            "crush",
+            Json::obj()
+                .set("devices", Json::Arr(devices))
+                .set("buckets", Json::Arr(buckets))
+                .set("rules", Json::Arr(rules)),
+        )
+        .set("pools", Json::Arr(pools))
+        .set("pgs", Json::Arr(pgs))
+        .set("upmap", Json::Arr(upmap))
+}
+
+/// Serialize to a pretty JSON string.
+pub fn dump(state: &ClusterState) -> String {
+    to_json(state).pretty()
+}
+
+/// Load a cluster state from JSON text.
+pub fn load(text: &str) -> Result<ClusterState, DumpError> {
+    let doc = Json::parse(text)?;
+    if doc.get_str("format") != Some("equilibrium-cluster-dump") {
+        return Err(DumpError::Format("not an equilibrium cluster dump".into()));
+    }
+
+    let crush_j = field(&doc, "crush")?;
+    let mut devices: Vec<Device> = Vec::new();
+    for d in field(crush_j, "devices")?.as_arr().unwrap_or(&[]) {
+        let id = as_u64(field(d, "id")?, "id")? as OsdId;
+        let weight = field(d, "weight")?
+            .as_f64()
+            .ok_or_else(|| DumpError::Format("device weight must be a number".into()))?;
+        let class = DeviceClass::parse(as_str(field(d, "class")?, "class")?)
+            .ok_or_else(|| DumpError::Format("unknown device class".into()))?;
+        devices.push(Device { id, weight, class });
+    }
+    devices.sort_by_key(|d| d.id);
+    for (i, d) in devices.iter().enumerate() {
+        if d.id as usize != i {
+            return Err(DumpError::Format(format!("device ids must be dense, missing {i}")));
+        }
+    }
+
+    let mut buckets: BTreeMap<NodeId, Bucket> = BTreeMap::new();
+    for b in field(crush_j, "buckets")?.as_arr().unwrap_or(&[]) {
+        let id = field(b, "id")?
+            .as_i64()
+            .ok_or_else(|| DumpError::Format("bucket id must be an integer".into()))?
+            as NodeId;
+        let name = as_str(field(b, "name")?, "name")?.to_string();
+        let level = Level::parse(as_str(field(b, "level")?, "level")?)
+            .ok_or_else(|| DumpError::Format("unknown bucket level".into()))?;
+        let mut children = Vec::new();
+        for c in field(b, "children")?.as_arr().unwrap_or(&[]) {
+            children.push(
+                c.as_i64()
+                    .ok_or_else(|| DumpError::Format("child id must be an integer".into()))?
+                    as NodeId,
+            );
+        }
+        buckets.insert(id, Bucket { id, name, level, children });
+    }
+
+    let mut rules: Vec<Rule> = Vec::new();
+    for r in field(crush_j, "rules")?.as_arr().unwrap_or(&[]) {
+        let id = as_u64(field(r, "id")?, "id")? as u32;
+        let name = as_str(field(r, "name")?, "name")?.to_string();
+        let mut steps = Vec::new();
+        for s in field(r, "steps")?.as_arr().unwrap_or(&[]) {
+            steps.push(step_from_json(s)?);
+        }
+        rules.push(Rule { id, name, steps });
+    }
+
+    let crush: CrushMap = from_parts(devices, buckets, rules)?;
+
+    let mut pools: Vec<Pool> = Vec::new();
+    for p in field(&doc, "pools")?.as_arr().unwrap_or(&[]) {
+        let id = as_u64(field(p, "id")?, "id")? as u32;
+        let name = as_str(field(p, "name")?, "name")?.to_string();
+        let pg_count = as_u64(field(p, "pg_count")?, "pg_count")? as u32;
+        let rule_id = as_u64(field(p, "rule_id")?, "rule_id")? as u32;
+        let kind = match p.get_str("kind") {
+            Some("metadata") => PoolKind::Metadata,
+            _ => PoolKind::UserData,
+        };
+        let redundancy = match as_str(field(p, "type")?, "type")? {
+            "replicated" => {
+                Redundancy::Replicated { size: as_u64(field(p, "size")?, "size")? as usize }
+            }
+            "erasure" => Redundancy::Erasure {
+                k: as_u64(field(p, "k")?, "k")? as usize,
+                m: as_u64(field(p, "m")?, "m")? as usize,
+            },
+            other => return Err(DumpError::Format(format!("unknown pool type '{other}'"))),
+        };
+        pools.push(Pool { id, name, redundancy, pg_count, rule_id, kind });
+    }
+
+    let mut pgs: Vec<Pg> = Vec::new();
+    for pg in field(&doc, "pgs")?.as_arr().unwrap_or(&[]) {
+        let pool = as_u64(field(pg, "pool")?, "pool")? as u32;
+        let index = as_u64(field(pg, "index")?, "index")? as u32;
+        let shard_bytes = as_u64(field(pg, "shard_bytes")?, "shard_bytes")?;
+        let mut acting = Vec::new();
+        for s in field(pg, "acting")?.as_arr().unwrap_or(&[]) {
+            acting.push(match s {
+                Json::Null => None,
+                v => Some(as_u64(v, "acting slot")? as OsdId),
+            });
+        }
+        pgs.push(Pg { id: PgId::new(pool, index), shard_bytes, acting });
+    }
+
+    let mut upmap: BTreeMap<PgId, Vec<(OsdId, OsdId)>> = BTreeMap::new();
+    for u in field(&doc, "upmap")?.as_arr().unwrap_or(&[]) {
+        let pool = as_u64(field(u, "pool")?, "pool")? as u32;
+        let index = as_u64(field(u, "index")?, "index")? as u32;
+        let mut items = Vec::new();
+        for pair in field(u, "items")?.as_arr().unwrap_or(&[]) {
+            let p = pair
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| DumpError::Format("upmap item must be a pair".into()))?;
+            items.push((
+                as_u64(&p[0], "upmap from")? as OsdId,
+                as_u64(&p[1], "upmap to")? as OsdId,
+            ));
+        }
+        upmap.insert(PgId::new(pool, index), items);
+    }
+
+    Ok(ClusterState::from_parts(crush, pools, pgs, upmap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crush::{CrushBuilder, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    fn cluster() -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..3 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+            b.add_osd_bytes(host, TIB, DeviceClass::Ssd);
+        }
+        b.add_rule(Rule::replicated(0, "repl", "default", None, Level::Host));
+        b.add_rule(Rule::erasure(1, "ec", "default", Some(DeviceClass::Hdd), Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![
+            Pool::replicated(1, "rbd", 3, 16, 0),
+            Pool::erasure(2, "ecpool", 2, 1, 8, 1).metadata(),
+        ];
+        ClusterState::build(crush, pools, |p, i| (p.id as u64 + i as u64 + 1) * GIB)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut s = cluster();
+        // create some upmap entries first
+        let pg = s.pgs().next().unwrap().id;
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let to = (0..s.osd_count() as OsdId)
+            .find(|&o| !s.pg(pg).unwrap().on(o) && s.osd_class(o) == s.osd_class(from))
+            .unwrap();
+        s.apply_movement(pg, from, to).unwrap();
+
+        let text = dump(&s);
+        let loaded = load(&text).unwrap();
+
+        assert_eq!(loaded.osd_count(), s.osd_count());
+        assert_eq!(loaded.pg_count(), s.pg_count());
+        assert_eq!(loaded.pools.len(), s.pools.len());
+        assert_eq!(loaded.upmap_entry_count(), s.upmap_entry_count());
+        for o in 0..s.osd_count() as OsdId {
+            assert_eq!(loaded.osd_used(o), s.osd_used(o), "osd.{o} used");
+            assert_eq!(loaded.osd_size(o), s.osd_size(o), "osd.{o} size");
+            assert_eq!(loaded.osd_class(o), s.osd_class(o));
+        }
+        for pg in s.pgs() {
+            let l = loaded.pg(pg.id).unwrap();
+            assert_eq!(l.acting, pg.acting, "pg {}", pg.id);
+            assert_eq!(l.shard_bytes, pg.shard_bytes);
+        }
+        assert!(loaded.verify().is_empty());
+        // double round-trip is byte-stable
+        assert_eq!(dump(&loaded), text);
+    }
+
+    #[test]
+    fn crush_ids_survive_roundtrip() {
+        let s = cluster();
+        let loaded = load(&dump(&s)).unwrap();
+        // same bucket ids and names
+        for (id, b) in &s.crush.buckets {
+            let lb = &loaded.crush.buckets[id];
+            assert_eq!(lb.name, b.name);
+            assert_eq!(lb.children, b.children);
+            assert_eq!(lb.level, b.level);
+        }
+        // identical future CRUSH decisions (ids feed the hash)
+        let rule = s.crush.rule(0).unwrap();
+        for x in 0..100 {
+            assert_eq!(
+                crate::crush::map_rule(&s.crush, rule, x, 3),
+                crate::crush::map_rule(&loaded.crush, loaded.crush.rule(0).unwrap(), x, 3)
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_documents() {
+        assert!(load("{}").is_err());
+        assert!(load(r#"{"format":"something-else"}"#).is_err());
+        assert!(load("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_sparse_device_ids() {
+        let s = cluster();
+        let text = dump(&s).replace("\"id\": 5", "\"id\": 17");
+        assert!(load(&text).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Cluster health and capacity reporting — the `ceph df` / `ceph osd df`
+//! analogue operators use to see the imbalance the balancer fixes.
+
+use crate::crush::{DeviceClass, Level, NodeId, OsdId};
+use crate::util::stats;
+use crate::util::units::{fmt_bytes, fmt_bytes_f, fmt_pct};
+
+use super::pool::PoolKind;
+use super::state::ClusterState;
+
+/// Per-OSD row of `osd df`.
+#[derive(Debug, Clone)]
+pub struct OsdDfRow {
+    pub osd: OsdId,
+    pub class: DeviceClass,
+    pub host: String,
+    pub size: u64,
+    pub used: u64,
+    pub utilization: f64,
+    pub pg_shards: usize,
+    /// Deviation of utilization from the cluster mean.
+    pub deviation: f64,
+}
+
+/// Whole-cluster df summary.
+#[derive(Debug, Clone)]
+pub struct DfReport {
+    pub osds: Vec<OsdDfRow>,
+    pub mean_utilization: f64,
+    pub min_utilization: f64,
+    pub max_utilization: f64,
+    pub variance: f64,
+    /// Per-pool (id, name, kind, stored-shard bytes, predicted max_avail).
+    pub pools: Vec<(u32, String, PoolKind, u64, f64)>,
+}
+
+/// Compute the report.
+pub fn df(state: &ClusterState) -> DfReport {
+    let utils = state.utilizations();
+    let mean = stats::mean(&utils);
+    let osds = (0..state.osd_count() as OsdId)
+        .map(|o| {
+            let host = state
+                .crush
+                .ancestor_at(o as NodeId, Level::Host)
+                .and_then(|h| state.crush.buckets.get(&h))
+                .map(|b| b.name.clone())
+                .unwrap_or_else(|| "-".to_string());
+            OsdDfRow {
+                osd: o,
+                class: state.osd_class(o),
+                host,
+                size: state.osd_size(o),
+                used: state.osd_used(o),
+                utilization: utils[o as usize],
+                pg_shards: state.shards_on(o).len(),
+                deviation: utils[o as usize] - mean,
+            }
+        })
+        .collect();
+    let pools = state
+        .pools
+        .values()
+        .map(|p| {
+            let stored: u64 = state
+                .pgs()
+                .filter(|pg| pg.id.pool == p.id)
+                .map(|pg| pg.shard_bytes * pg.devices().count() as u64)
+                .sum();
+            (p.id, p.name.clone(), p.kind, stored, state.pool_max_avail(p.id))
+        })
+        .collect();
+    DfReport {
+        osds,
+        mean_utilization: mean,
+        min_utilization: stats::min(&utils),
+        max_utilization: stats::max(&utils),
+        variance: stats::variance(&utils),
+        pools,
+    }
+}
+
+/// Render as aligned text (the CLI `df` subcommand).
+pub fn render(report: &DfReport, max_osd_rows: usize) -> String {
+    let mut out = String::new();
+    out.push_str("POOLS:\n");
+    out.push_str(&format!(
+        "  {:<4} {:<18} {:<9} {:>12} {:>14}\n",
+        "ID", "NAME", "KIND", "STORED(raw)", "MAX AVAIL"
+    ));
+    for (id, name, kind, stored, avail) in &report.pools {
+        out.push_str(&format!(
+            "  {:<4} {:<18} {:<9} {:>12} {:>14}\n",
+            id,
+            name,
+            match kind {
+                PoolKind::UserData => "data",
+                PoolKind::Metadata => "metadata",
+            },
+            fmt_bytes(*stored),
+            fmt_bytes_f(*avail),
+        ));
+    }
+    out.push_str("\nOSDS");
+    if report.osds.len() > max_osd_rows {
+        out.push_str(&format!(" (top {max_osd_rows} by |deviation|)"));
+    }
+    out.push_str(":\n");
+    out.push_str(&format!(
+        "  {:<6} {:<5} {:<10} {:>10} {:>10} {:>8} {:>7} {:>9}\n",
+        "OSD", "CLASS", "HOST", "SIZE", "USED", "UTIL", "PGS", "DEV"
+    ));
+    let mut rows: Vec<&OsdDfRow> = report.osds.iter().collect();
+    rows.sort_by(|a, b| b.deviation.abs().partial_cmp(&a.deviation.abs()).unwrap());
+    for r in rows.iter().take(max_osd_rows) {
+        out.push_str(&format!(
+            "  osd.{:<2} {:<5} {:<10} {:>10} {:>10} {:>8} {:>7} {:>+8.2}%\n",
+            r.osd,
+            r.class.as_str(),
+            r.host,
+            fmt_bytes(r.size),
+            fmt_bytes(r.used),
+            fmt_pct(r.utilization),
+            r.pg_shards,
+            r.deviation * 100.0,
+        ));
+    }
+    out.push_str(&format!(
+        "\nutilization: mean {}, min {}, max {}, variance {:.4e}\n",
+        fmt_pct(report.mean_utilization),
+        fmt_pct(report.min_utilization),
+        fmt_pct(report.max_utilization),
+        report.variance,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::clusters;
+
+    #[test]
+    fn df_sums_are_consistent() {
+        let s = clusters::demo(13);
+        let r = df(&s);
+        assert_eq!(r.osds.len(), s.osd_count());
+        let used_sum: u64 = r.osds.iter().map(|o| o.used).sum();
+        assert_eq!(used_sum, s.total_used());
+        // pool stored sums equal total used
+        let pool_sum: u64 = r.pools.iter().map(|(_, _, _, stored, _)| stored).sum();
+        assert_eq!(pool_sum, s.total_used());
+        assert!(r.max_utilization >= r.mean_utilization);
+        assert!(r.min_utilization <= r.mean_utilization);
+    }
+
+    #[test]
+    fn render_contains_key_sections() {
+        let s = clusters::demo(13);
+        let text = render(&df(&s), 5);
+        assert!(text.contains("POOLS:"));
+        assert!(text.contains("OSDS"));
+        assert!(text.contains("utilization: mean"));
+        assert!(text.contains("osd."));
+        // row cap respected
+        assert!(text.matches("osd.").count() <= 5);
+    }
+
+    #[test]
+    fn deviation_signs_balance_out() {
+        let s = clusters::demo(17);
+        let r = df(&s);
+        let sum_dev: f64 = r.osds.iter().map(|o| o.deviation).sum();
+        assert!(sum_dev.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Cluster model: pools, placement groups, OSD accounting, capacity
+//! prediction, and the JSON dump/load interchange format.
+
+pub mod dump;
+pub mod health;
+pub mod pg;
+pub mod pool;
+pub mod recovery;
+pub mod state;
+
+pub use pg::{Movement, Pg, PgId};
+pub use pool::{Pool, PoolKind, Redundancy};
+pub use recovery::{fail_osd, random_up_osd, FailureReport};
+pub use state::{ClusterState, StateError};

@@ -1,0 +1,104 @@
+//! Placement groups and shard movements.
+
+use crate::crush::OsdId;
+
+/// Identifier of a placement group: `<pool>.<index>` like Ceph's `1.2a`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PgId {
+    pub pool: u32,
+    pub index: u32,
+}
+
+impl PgId {
+    pub fn new(pool: u32, index: u32) -> PgId {
+        PgId { pool, index }
+    }
+}
+
+impl std::fmt::Display for PgId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.{:x}", self.pool, self.index)
+    }
+}
+
+/// A placement group: its current device mapping and the size of each of
+/// its shards. Within a pool, shard sizes are "almost equal" (paper
+/// §2.2); the generator models the residual jitter.
+#[derive(Debug, Clone)]
+pub struct Pg {
+    pub id: PgId,
+    /// Bytes stored by EACH shard of this PG.
+    pub shard_bytes: u64,
+    /// Current acting set: one entry per redundancy slot; `None` = hole
+    /// (EC slot that CRUSH could not fill).
+    pub acting: Vec<Option<OsdId>>,
+}
+
+impl Pg {
+    /// All devices currently holding a shard.
+    pub fn devices(&self) -> impl Iterator<Item = OsdId> + '_ {
+        self.acting.iter().filter_map(|s| *s)
+    }
+
+    /// Does this PG have a shard on `osd`?
+    pub fn on(&self, osd: OsdId) -> bool {
+        self.acting.iter().any(|s| *s == Some(osd))
+    }
+
+    /// Slot index of `osd` in the acting set.
+    pub fn slot_of(&self, osd: OsdId) -> Option<usize> {
+        self.acting.iter().position(|s| *s == Some(osd))
+    }
+}
+
+/// One shard movement instruction — the balancer's atomic output unit
+/// (paper §2.3: "the atomic movement unit is a PG shard").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Movement {
+    pub pg: PgId,
+    pub from: OsdId,
+    pub to: OsdId,
+    /// Bytes that the movement transfers (the shard size at decision
+    /// time); Table 1's "Movement Amount".
+    pub bytes: u64,
+}
+
+impl std::fmt::Display for Movement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pg {} : osd.{} -> osd.{} ({})",
+            self.pg,
+            self.from,
+            self.to,
+            crate::util::units::fmt_bytes(self.bytes)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgid_display() {
+        assert_eq!(PgId::new(3, 26).to_string(), "3.1a");
+    }
+
+    #[test]
+    fn pg_membership() {
+        let pg = Pg { id: PgId::new(1, 0), shard_bytes: 100, acting: vec![Some(3), None, Some(7)] };
+        assert!(pg.on(3));
+        assert!(pg.on(7));
+        assert!(!pg.on(4));
+        assert_eq!(pg.slot_of(7), Some(2));
+        assert_eq!(pg.slot_of(4), None);
+        assert_eq!(pg.devices().collect::<Vec<_>>(), vec![3, 7]);
+    }
+
+    #[test]
+    fn movement_display() {
+        let m = Movement { pg: PgId::new(1, 2), from: 0, to: 9, bytes: 4 << 20 };
+        assert_eq!(m.to_string(), "pg 1.2 : osd.0 -> osd.9 (4.0 MiB)");
+    }
+}

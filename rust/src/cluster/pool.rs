@@ -1,0 +1,150 @@
+//! Pools: named collections of placement groups with a redundancy
+//! profile, a CRUSH rule, and (for the simulator) a stored-data volume.
+
+/// Redundancy scheme of a pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Redundancy {
+    /// `size` full copies, one per shard.
+    Replicated { size: usize },
+    /// Erasure coding: `k` data + `m` parity shards.
+    Erasure { k: usize, m: usize },
+}
+
+impl Redundancy {
+    /// Number of PG shards (= CRUSH result slots).
+    pub fn shard_count(&self) -> usize {
+        match self {
+            Redundancy::Replicated { size } => *size,
+            Redundancy::Erasure { k, m } => k + m,
+        }
+    }
+
+    /// Raw-bytes-per-user-byte overhead factor.
+    pub fn raw_ratio(&self) -> f64 {
+        match self {
+            Redundancy::Replicated { size } => *size as f64,
+            Redundancy::Erasure { k, m } => (k + m) as f64 / *k as f64,
+        }
+    }
+
+    /// Bytes one shard stores per byte of user data *in its PG*.
+    /// Replicated: each shard is a full copy (1.0). EC: each shard holds
+    /// a 1/k stripe.
+    pub fn shard_fraction(&self) -> f64 {
+        match self {
+            Redundancy::Replicated { .. } => 1.0,
+            Redundancy::Erasure { k, .. } => 1.0 / *k as f64,
+        }
+    }
+
+    /// Minimum shards needed for data availability.
+    pub fn min_shards(&self) -> usize {
+        match self {
+            Redundancy::Replicated { .. } => 1,
+            Redundancy::Erasure { k, .. } => *k,
+        }
+    }
+}
+
+/// What a pool is used for. Mirrors the paper's cluster descriptions
+/// ("55 with user data, 40 with metadata"); Table 1 counts gained space
+/// over data pools, and Figure 5 filters small (metadata-ish) pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    UserData,
+    Metadata,
+}
+
+/// A pool definition.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    pub id: u32,
+    pub name: String,
+    pub redundancy: Redundancy,
+    /// Number of placement groups (2^x in real deployments).
+    pub pg_count: u32,
+    /// CRUSH rule this pool places with.
+    pub rule_id: u32,
+    pub kind: PoolKind,
+}
+
+impl Pool {
+    pub fn replicated(id: u32, name: &str, size: usize, pg_count: u32, rule_id: u32) -> Pool {
+        Pool {
+            id,
+            name: name.to_string(),
+            redundancy: Redundancy::Replicated { size },
+            pg_count,
+            rule_id,
+            kind: PoolKind::UserData,
+        }
+    }
+
+    pub fn erasure(id: u32, name: &str, k: usize, m: usize, pg_count: u32, rule_id: u32) -> Pool {
+        Pool {
+            id,
+            name: name.to_string(),
+            redundancy: Redundancy::Erasure { k, m },
+            pg_count,
+            rule_id,
+            kind: PoolKind::UserData,
+        }
+    }
+
+    pub fn metadata(mut self) -> Pool {
+        self.kind = PoolKind::Metadata;
+        self
+    }
+
+    /// Total number of PG shards in the pool.
+    pub fn total_shards(&self) -> u64 {
+        self.pg_count as u64 * self.redundancy.shard_count() as u64
+    }
+
+    /// Per-shard growth (bytes) caused by one byte of new user data
+    /// written to the pool, assuming uniform spread over PGs:
+    /// `shard_fraction / pg_count`.
+    pub fn shard_growth_per_user_byte(&self) -> f64 {
+        self.redundancy.shard_fraction() / self.pg_count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicated_ratios() {
+        let r = Redundancy::Replicated { size: 3 };
+        assert_eq!(r.shard_count(), 3);
+        assert!((r.raw_ratio() - 3.0).abs() < 1e-12);
+        assert!((r.shard_fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(r.min_shards(), 1);
+    }
+
+    #[test]
+    fn erasure_ratios() {
+        let r = Redundancy::Erasure { k: 4, m: 2 };
+        assert_eq!(r.shard_count(), 6);
+        assert!((r.raw_ratio() - 1.5).abs() < 1e-12);
+        assert!((r.shard_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(r.min_shards(), 4);
+    }
+
+    #[test]
+    fn shard_growth() {
+        let p = Pool::replicated(1, "rbd", 3, 128, 0);
+        // one user byte → each of the 128 PGs is hit with prob 1/128, and
+        // every shard of that PG stores the full byte
+        assert!((p.shard_growth_per_user_byte() - 1.0 / 128.0).abs() < 1e-15);
+        let e = Pool::erasure(2, "ec", 8, 3, 256, 1);
+        assert!((e.shard_growth_per_user_byte() - 1.0 / (8.0 * 256.0)).abs() < 1e-15);
+        assert_eq!(e.total_shards(), 256 * 11);
+    }
+
+    #[test]
+    fn metadata_marker() {
+        let p = Pool::replicated(1, "meta", 3, 32, 0).metadata();
+        assert_eq!(p.kind, PoolKind::Metadata);
+    }
+}

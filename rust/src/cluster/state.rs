@@ -1,0 +1,677 @@
+//! Whole-cluster state: CRUSH map + pools + placement groups + upmap
+//! exceptions + per-OSD accounting.
+//!
+//! This is the substrate both balancers operate on and the simulator
+//! mutates. All derived quantities the paper's metrics need — OSD
+//! utilization, utilization variance (overall and per device class), and
+//! per-pool available space (limited by the fullest participating OSD,
+//! §2.1) — are answered here, with incremental bookkeeping so that a
+//! 995-OSD / 8731-PG cluster (cluster B) is cheap to iterate on.
+
+use std::collections::BTreeMap;
+
+use crate::crush::{map_rule, pg_input, CrushMap, DeviceClass, OsdId};
+use crate::util::stats;
+use crate::util::units::TIB;
+
+use super::pg::{Movement, Pg, PgId};
+use super::pool::{Pool, PoolKind};
+
+/// Errors from applying movements.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StateError {
+    #[error("unknown pg {0}")]
+    UnknownPg(PgId),
+    #[error("pg {pg} has no shard on osd.{osd}")]
+    NotOnSource { pg: PgId, osd: OsdId },
+    #[error("pg {pg} already has a shard on osd.{osd}")]
+    AlreadyOnTarget { pg: PgId, osd: OsdId },
+    #[error("osd.{0} does not exist")]
+    UnknownOsd(OsdId),
+    #[error("osd.{0} is down")]
+    OsdDown(OsdId),
+    #[error("movement would overfill osd.{osd} ({used} used + {add} > {size})")]
+    WouldOverfill { osd: OsdId, used: u64, add: u64, size: u64 },
+}
+
+/// The cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    pub crush: CrushMap,
+    pub pools: BTreeMap<u32, Pool>,
+    pgs: BTreeMap<PgId, Pg>,
+    /// Upmap exception table, keyed by PG; pairs are (raw CRUSH osd →
+    /// replacement osd), exactly like Ceph's `pg_upmap_items`.
+    upmap: BTreeMap<PgId, Vec<(OsdId, OsdId)>>,
+    osd_size: Vec<u64>,
+    osd_used: Vec<u64>,
+    osd_up: Vec<bool>,
+    /// PGs that have a shard on each OSD.
+    osd_pgs: Vec<Vec<PgId>>,
+    /// Per-OSD, per-pool shard counts (for ideal-count balancing).
+    osd_pool_shards: Vec<BTreeMap<u32, u32>>,
+}
+
+impl ClusterState {
+    /// Build a cluster: compute the raw CRUSH placement of every PG of
+    /// every pool and account the usage. `shard_bytes` assigns each PG's
+    /// per-shard size (the generator models per-pool size distributions).
+    pub fn build(
+        crush: CrushMap,
+        pools: Vec<Pool>,
+        mut shard_bytes: impl FnMut(&Pool, u32) -> u64,
+    ) -> ClusterState {
+        let n = crush.devices.len();
+        let osd_size: Vec<u64> = crush
+            .devices
+            .iter()
+            .map(|d| (d.weight * TIB as f64).round() as u64)
+            .collect();
+        let mut state = ClusterState {
+            crush,
+            pools: pools.iter().map(|p| (p.id, p.clone())).collect(),
+            pgs: BTreeMap::new(),
+            upmap: BTreeMap::new(),
+            osd_size,
+            osd_used: vec![0; n],
+            osd_up: vec![true; n],
+            osd_pgs: vec![Vec::new(); n],
+            osd_pool_shards: vec![BTreeMap::new(); n],
+        };
+        for pool in &pools {
+            let rule = state
+                .crush
+                .rule(pool.rule_id)
+                .unwrap_or_else(|| panic!("pool {} references unknown rule {}", pool.id, pool.rule_id))
+                .clone();
+            let slots = pool.redundancy.shard_count();
+            for idx in 0..pool.pg_count {
+                let x = pg_input(pool.id, idx);
+                let acting = map_rule(&state.crush, &rule, x, slots);
+                let pg = Pg {
+                    id: PgId::new(pool.id, idx),
+                    shard_bytes: shard_bytes(pool, idx),
+                    acting,
+                };
+                state.index_pg(&pg);
+                state.pgs.insert(pg.id, pg);
+            }
+        }
+        state
+    }
+
+    /// Reassemble a cluster from dumped parts (explicit acting sets; no
+    /// CRUSH recomputation — used by `dump::load`).
+    pub fn from_parts(
+        crush: CrushMap,
+        pools: Vec<Pool>,
+        pgs: Vec<Pg>,
+        upmap: BTreeMap<PgId, Vec<(OsdId, OsdId)>>,
+    ) -> ClusterState {
+        let n = crush.devices.len();
+        let osd_size: Vec<u64> = crush
+            .devices
+            .iter()
+            .map(|d| (d.weight * TIB as f64).round() as u64)
+            .collect();
+        let mut state = ClusterState {
+            crush,
+            pools: pools.iter().map(|p| (p.id, p.clone())).collect(),
+            pgs: BTreeMap::new(),
+            upmap,
+            osd_size,
+            osd_used: vec![0; n],
+            osd_up: vec![true; n],
+            osd_pgs: vec![Vec::new(); n],
+            osd_pool_shards: vec![BTreeMap::new(); n],
+        };
+        for pg in pgs {
+            state.index_pg(&pg);
+            state.pgs.insert(pg.id, pg);
+        }
+        state
+    }
+
+    fn index_pg(&mut self, pg: &Pg) {
+        for osd in pg.devices() {
+            let o = osd as usize;
+            self.osd_used[o] += pg.shard_bytes;
+            self.osd_pgs[o].push(pg.id);
+            *self.osd_pool_shards[o].entry(pg.id.pool).or_insert(0) += 1;
+        }
+    }
+
+    // ---- basic accessors --------------------------------------------------
+
+    pub fn osd_count(&self) -> usize {
+        self.osd_size.len()
+    }
+
+    pub fn osd_size(&self, osd: OsdId) -> u64 {
+        self.osd_size[osd as usize]
+    }
+
+    pub fn osd_used(&self, osd: OsdId) -> u64 {
+        self.osd_used[osd as usize]
+    }
+
+    pub fn osd_free(&self, osd: OsdId) -> u64 {
+        self.osd_size[osd as usize].saturating_sub(self.osd_used[osd as usize])
+    }
+
+    pub fn osd_is_up(&self, osd: OsdId) -> bool {
+        self.osd_up[osd as usize]
+    }
+
+    pub fn set_osd_up(&mut self, osd: OsdId, up: bool) {
+        self.osd_up[osd as usize] = up;
+    }
+
+    pub fn osd_class(&self, osd: OsdId) -> DeviceClass {
+        self.crush.devices[osd as usize].class
+    }
+
+    /// Relative utilization `used/size` of one OSD.
+    pub fn utilization(&self, osd: OsdId) -> f64 {
+        let size = self.osd_size[osd as usize];
+        if size == 0 {
+            0.0
+        } else {
+            self.osd_used[osd as usize] as f64 / size as f64
+        }
+    }
+
+    /// Utilization of every OSD.
+    pub fn utilizations(&self) -> Vec<f64> {
+        (0..self.osd_count() as OsdId).map(|o| self.utilization(o)).collect()
+    }
+
+    /// Population variance of OSD utilization — the paper's balance
+    /// metric (Figures 4/5 right panels).
+    pub fn utilization_variance(&self) -> f64 {
+        stats::variance(&self.utilizations())
+    }
+
+    /// Variance restricted to one device class (Figure 5 tracks HDD and
+    /// SSD separately).
+    pub fn utilization_variance_class(&self, class: DeviceClass) -> f64 {
+        let us: Vec<f64> = (0..self.osd_count() as OsdId)
+            .filter(|&o| self.osd_class(o) == class)
+            .map(|o| self.utilization(o))
+            .collect();
+        stats::variance(&us)
+    }
+
+    pub fn pg(&self, id: PgId) -> Option<&Pg> {
+        self.pgs.get(&id)
+    }
+
+    pub fn pg_count(&self) -> usize {
+        self.pgs.len()
+    }
+
+    pub fn pgs(&self) -> impl Iterator<Item = &Pg> {
+        self.pgs.values()
+    }
+
+    /// PGs with a shard on `osd`.
+    pub fn shards_on(&self, osd: OsdId) -> &[PgId] {
+        &self.osd_pgs[osd as usize]
+    }
+
+    /// Number of shards of `pool` on `osd`.
+    pub fn pool_shards_on(&self, pool: u32, osd: OsdId) -> u32 {
+        self.osd_pool_shards[osd as usize].get(&pool).copied().unwrap_or(0)
+    }
+
+    /// The upmap exception table entry for a PG (empty if none).
+    pub fn upmap_items(&self, pg: PgId) -> &[(OsdId, OsdId)] {
+        self.upmap.get(&pg).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Total number of PGs with at least one upmap exception.
+    pub fn upmap_entry_count(&self) -> usize {
+        self.upmap.len()
+    }
+
+    // ---- ideal shard counts (paper §2.2) ----------------------------------
+
+    /// The ideal number of shards of `pool` on `osd`:
+    /// `pool_shard_count × osd_weight / Σ weights` over the devices the
+    /// pool's rule can use (class-filtered).
+    pub fn ideal_shard_count(&self, pool: &Pool, osd: OsdId) -> f64 {
+        let rule = match self.crush.rule(pool.rule_id) {
+            Some(r) => r,
+            None => return 0.0,
+        };
+        let devices = self.crush.rule_devices(rule);
+        if !devices.contains(&osd) {
+            return 0.0;
+        }
+        let total_weight: f64 = devices
+            .iter()
+            .map(|&d| self.crush.devices[d as usize].weight)
+            .sum();
+        if total_weight <= 0.0 {
+            return 0.0;
+        }
+        let w = self.crush.devices[osd as usize].weight;
+        pool.total_shards() as f64 * w / total_weight
+    }
+
+    /// Ideal shard counts of `pool` for *all* OSDs in one pass (0 for
+    /// OSDs the pool's rule cannot use). O(devices); balancers cache the
+    /// result — it depends only on CRUSH weights, not on placement.
+    pub fn ideal_counts(&self, pool: &Pool) -> Vec<f64> {
+        let mut out = vec![0.0; self.osd_count()];
+        let Some(rule) = self.crush.rule(pool.rule_id) else {
+            return out;
+        };
+        let devices = self.crush.rule_devices(rule);
+        let total_weight: f64 = devices
+            .iter()
+            .map(|&d| self.crush.devices[d as usize].weight)
+            .sum();
+        if total_weight <= 0.0 {
+            return out;
+        }
+        let total_shards = pool.total_shards() as f64;
+        for &d in &devices {
+            out[d as usize] = total_shards * self.crush.devices[d as usize].weight / total_weight;
+        }
+        out
+    }
+
+    // ---- pool capacity (paper §2.1) ----------------------------------------
+
+    /// Predicted additional user data the pool can accept before its
+    /// fullest participating OSD fills: `min over OSDs holding shards of
+    /// free / (shards_on_osd × shard_growth_per_user_byte)`.
+    pub fn pool_max_avail(&self, pool_id: u32) -> f64 {
+        let pool = match self.pools.get(&pool_id) {
+            Some(p) => p,
+            None => return 0.0,
+        };
+        let g = pool.shard_growth_per_user_byte();
+        let mut min_avail = f64::INFINITY;
+        let mut any = false;
+        for osd in 0..self.osd_count() as OsdId {
+            let n = self.pool_shards_on(pool_id, osd);
+            if n == 0 {
+                continue;
+            }
+            any = true;
+            let avail = self.osd_free(osd) as f64 / (n as f64 * g);
+            min_avail = min_avail.min(avail);
+        }
+        if any {
+            min_avail
+        } else {
+            0.0
+        }
+    }
+
+    /// Sum of `pool_max_avail` over pools (optionally only user-data
+    /// pools, as Table 1 reports).
+    pub fn total_max_avail(&self, only_user_data: bool) -> f64 {
+        self.pools
+            .values()
+            .filter(|p| !only_user_data || p.kind == PoolKind::UserData)
+            .map(|p| self.pool_max_avail(p.id))
+            .sum()
+    }
+
+    /// Total stored bytes across all OSDs.
+    pub fn total_used(&self) -> u64 {
+        self.osd_used.iter().sum()
+    }
+
+    /// Total raw capacity.
+    pub fn total_size(&self) -> u64 {
+        self.osd_size.iter().sum()
+    }
+
+    // ---- movements ---------------------------------------------------------
+
+    /// Validate a movement without applying it.
+    pub fn check_movement(&self, pg_id: PgId, from: OsdId, to: OsdId) -> Result<(), StateError> {
+        let pg = self.pgs.get(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        if (to as usize) >= self.osd_count() {
+            return Err(StateError::UnknownOsd(to));
+        }
+        if !pg.on(from) {
+            return Err(StateError::NotOnSource { pg: pg_id, osd: from });
+        }
+        if pg.on(to) {
+            return Err(StateError::AlreadyOnTarget { pg: pg_id, osd: to });
+        }
+        if !self.osd_up[to as usize] {
+            return Err(StateError::OsdDown(to));
+        }
+        let used = self.osd_used[to as usize];
+        let size = self.osd_size[to as usize];
+        if used + pg.shard_bytes > size {
+            return Err(StateError::WouldOverfill { osd: to, used, add: pg.shard_bytes, size });
+        }
+        Ok(())
+    }
+
+    /// Move one shard of `pg_id` from `from` to `to`, updating the upmap
+    /// exception table, accounting and reverse indexes. Returns the
+    /// movement record.
+    pub fn apply_movement(
+        &mut self,
+        pg_id: PgId,
+        from: OsdId,
+        to: OsdId,
+    ) -> Result<Movement, StateError> {
+        self.check_movement(pg_id, from, to)?;
+        let pg = self.pgs.get_mut(&pg_id).unwrap();
+        let slot = pg.slot_of(from).unwrap();
+        pg.acting[slot] = Some(to);
+        let bytes = pg.shard_bytes;
+
+        // upmap bookkeeping (Ceph pg_upmap_items semantics): pairs map the
+        // raw CRUSH result to the override. Chain-compress (raw→from) +
+        // (from→to) into (raw→to); drop identity pairs.
+        let items = self.upmap.entry(pg_id).or_default();
+        if let Some(pair) = items.iter_mut().find(|(_, t)| *t == from) {
+            pair.1 = to;
+        } else {
+            items.push((from, to));
+        }
+        items.retain(|(a, b)| a != b);
+        if items.is_empty() {
+            self.upmap.remove(&pg_id);
+        }
+
+        // accounting
+        self.osd_used[from as usize] -= bytes;
+        self.osd_used[to as usize] += bytes;
+        let fpgs = &mut self.osd_pgs[from as usize];
+        if let Some(pos) = fpgs.iter().position(|&p| p == pg_id) {
+            fpgs.swap_remove(pos);
+        }
+        self.osd_pgs[to as usize].push(pg_id);
+        let fcount = self.osd_pool_shards[from as usize].entry(pg_id.pool).or_insert(0);
+        *fcount = fcount.saturating_sub(1);
+        if *fcount == 0 {
+            self.osd_pool_shards[from as usize].remove(&pg_id.pool);
+        }
+        *self.osd_pool_shards[to as usize].entry(pg_id.pool).or_insert(0) += 1;
+
+        Ok(Movement { pg: pg_id, from, to, bytes })
+    }
+
+    /// Grow a PG in place (new data written by clients); used by the
+    /// coordinator's write-workload simulation.
+    pub fn grow_pg(&mut self, pg_id: PgId, bytes_per_shard: u64) -> Result<(), StateError> {
+        let pg = self.pgs.get_mut(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        pg.shard_bytes += bytes_per_shard;
+        let devices: Vec<OsdId> = pg.devices().collect();
+        for osd in devices {
+            self.osd_used[osd as usize] += bytes_per_shard;
+        }
+        Ok(())
+    }
+
+    /// Swap a PG's primary (slot 0) with the slot currently holding
+    /// `new_primary`. Data does not move — only the acting order changes
+    /// (read traffic follows the primary). Only meaningful for
+    /// replicated pools; EC slots are positional and may not be
+    /// reordered.
+    pub fn set_primary(&mut self, pg_id: PgId, new_primary: OsdId) -> Result<(), StateError> {
+        let is_replicated = matches!(
+            self.pools.get(&pg_id.pool).map(|p| p.redundancy),
+            Some(super::pool::Redundancy::Replicated { .. })
+        );
+        let pg = self.pgs.get_mut(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        let Some(slot) = pg.slot_of(new_primary) else {
+            return Err(StateError::NotOnSource { pg: pg_id, osd: new_primary });
+        };
+        if !is_replicated {
+            return Err(StateError::NotOnSource { pg: pg_id, osd: new_primary });
+        }
+        pg.acting.swap(0, slot);
+        Ok(())
+    }
+
+    /// Number of PGs whose primary (slot 0) is on `osd`.
+    pub fn primaries_on(&self, osd: OsdId) -> usize {
+        self.osd_pgs[osd as usize]
+            .iter()
+            .filter(|&&pg| self.pgs[&pg].acting.first() == Some(&Some(osd)))
+            .count()
+    }
+
+    /// Shrink a PG in place (object deletion); clamps at zero.
+    pub fn shrink_pg_by(&mut self, pg_id: PgId, bytes_per_shard: u64) -> Result<(), StateError> {
+        let pg = self.pgs.get_mut(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        let delta = bytes_per_shard.min(pg.shard_bytes);
+        pg.shard_bytes -= delta;
+        let devices: Vec<OsdId> = pg.devices().collect();
+        for osd in devices {
+            self.osd_used[osd as usize] -= delta;
+        }
+        Ok(())
+    }
+
+    /// Sanity check of all internal invariants (used by tests and the
+    /// simulator after long runs). Returns a list of violations.
+    pub fn verify(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        let mut used = vec![0u64; self.osd_count()];
+        let mut pgs_on = vec![0usize; self.osd_count()];
+        for pg in self.pgs.values() {
+            let mut seen = Vec::new();
+            for osd in pg.devices() {
+                if (osd as usize) >= self.osd_count() {
+                    problems.push(format!("pg {} references unknown osd.{}", pg.id, osd));
+                    continue;
+                }
+                if seen.contains(&osd) {
+                    problems.push(format!("pg {} has duplicate shard on osd.{}", pg.id, osd));
+                }
+                seen.push(osd);
+                used[osd as usize] += pg.shard_bytes;
+                pgs_on[osd as usize] += 1;
+            }
+        }
+        for o in 0..self.osd_count() {
+            if used[o] != self.osd_used[o] {
+                problems.push(format!(
+                    "osd.{o} accounting drift: computed {} != tracked {}",
+                    used[o], self.osd_used[o]
+                ));
+            }
+            if pgs_on[o] != self.osd_pgs[o].len() {
+                problems.push(format!(
+                    "osd.{o} pg index drift: computed {} != tracked {}",
+                    pgs_on[o],
+                    self.osd_pgs[o].len()
+                ));
+            }
+            let pool_sum: u32 = self.osd_pool_shards[o].values().sum();
+            if pool_sum as usize != pgs_on[o] {
+                problems.push(format!("osd.{o} pool shard-count drift"));
+            }
+        }
+        problems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crush::{CrushBuilder, Level, Rule};
+    use crate::util::units::GIB;
+
+    /// 4 hosts × 2 OSDs of 4 TiB, one 3-replica pool with 32 PGs.
+    fn small_cluster() -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..4 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            for _ in 0..2 {
+                b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+            }
+        }
+        b.add_rule(Rule::replicated(0, "repl", "default", None, Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![Pool::replicated(1, "rbd", 3, 32, 0)];
+        ClusterState::build(crush, pools, |_, _| 10 * GIB)
+    }
+
+    #[test]
+    fn build_accounts_all_shards() {
+        let s = small_cluster();
+        assert_eq!(s.pg_count(), 32);
+        // every PG should have 3 shards on distinct hosts
+        let total_used: u64 = (0..s.osd_count() as OsdId).map(|o| s.osd_used(o)).sum();
+        assert_eq!(total_used, 32 * 3 * 10 * GIB);
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+    }
+
+    #[test]
+    fn utilization_and_variance() {
+        let s = small_cluster();
+        let us = s.utilizations();
+        assert_eq!(us.len(), 8);
+        for &u in &us {
+            assert!((0.0..1.0).contains(&u));
+        }
+        assert!(s.utilization_variance() >= 0.0);
+    }
+
+    #[test]
+    fn movement_updates_accounting_and_upmap() {
+        let mut s = small_cluster();
+        // find a PG and a legal target (an OSD not holding it)
+        let pg = s.pgs().next().unwrap().id;
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let to = (0..s.osd_count() as OsdId)
+            .find(|&o| !s.pg(pg).unwrap().on(o))
+            .unwrap();
+        let used_from = s.osd_used(from);
+        let used_to = s.osd_used(to);
+        let m = s.apply_movement(pg, from, to).unwrap();
+        assert_eq!(m.bytes, 10 * GIB);
+        assert_eq!(s.osd_used(from), used_from - 10 * GIB);
+        assert_eq!(s.osd_used(to), used_to + 10 * GIB);
+        assert!(s.pg(pg).unwrap().on(to));
+        assert!(!s.pg(pg).unwrap().on(from));
+        assert_eq!(s.upmap_items(pg), &[(from, to)]);
+        assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn upmap_chain_compression() {
+        let mut s = small_cluster();
+        let pg = s.pgs().next().unwrap().id;
+        let a = s.pg(pg).unwrap().devices().next().unwrap();
+        let free: Vec<OsdId> = (0..s.osd_count() as OsdId)
+            .filter(|&o| !s.pg(pg).unwrap().on(o))
+            .collect();
+        let (b, c) = (free[0], free[1]);
+        s.apply_movement(pg, a, b).unwrap();
+        s.apply_movement(pg, b, c).unwrap();
+        // chain a→b→c must compress to a→c
+        assert_eq!(s.upmap_items(pg), &[(a, c)]);
+        // moving back to the raw osd removes the entry
+        s.apply_movement(pg, c, a).unwrap();
+        assert_eq!(s.upmap_items(pg), &[] as &[(OsdId, OsdId)]);
+        assert_eq!(s.upmap_entry_count(), 0);
+        assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn movement_validation_errors() {
+        let mut s = small_cluster();
+        let pg = s.pgs().next().unwrap().id;
+        let on = s.pg(pg).unwrap().devices().collect::<Vec<_>>();
+        let off = (0..s.osd_count() as OsdId).find(|o| !on.contains(o)).unwrap();
+        // not on source
+        assert!(matches!(
+            s.apply_movement(pg, off, on[0]),
+            Err(StateError::NotOnSource { .. }) | Err(StateError::AlreadyOnTarget { .. })
+        ));
+        // already on target
+        assert!(matches!(
+            s.apply_movement(pg, on[0], on[1]),
+            Err(StateError::AlreadyOnTarget { .. })
+        ));
+        // down target
+        s.set_osd_up(off, false);
+        assert_eq!(s.apply_movement(pg, on[0], off), Err(StateError::OsdDown(off)));
+        // unknown pg
+        assert!(matches!(
+            s.apply_movement(PgId::new(99, 0), 0, 1),
+            Err(StateError::UnknownPg(_))
+        ));
+    }
+
+    #[test]
+    fn pool_max_avail_tracks_fullest_osd() {
+        let s = small_cluster();
+        let avail = s.pool_max_avail(1);
+        assert!(avail > 0.0);
+        // bound: the pool cannot promise more than cluster free space / raw_ratio
+        let free: u64 = (0..s.osd_count() as OsdId).map(|o| s.osd_free(o)).sum();
+        assert!(avail <= free as f64 / 3.0 + 1.0);
+        // manual recomputation
+        let pool = &s.pools[&1];
+        let g = pool.shard_growth_per_user_byte();
+        let expect = (0..s.osd_count() as OsdId)
+            .filter(|&o| s.pool_shards_on(1, o) > 0)
+            .map(|o| s.osd_free(o) as f64 / (s.pool_shards_on(1, o) as f64 * g))
+            .fold(f64::INFINITY, f64::min);
+        assert!((avail - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn moving_shard_off_fullest_osd_increases_pool_avail() {
+        let mut s = small_cluster();
+        // fullest OSD by utilization
+        let fullest = (0..s.osd_count() as OsdId)
+            .max_by(|&a, &b| s.utilization(a).partial_cmp(&s.utilization(b)).unwrap())
+            .unwrap();
+        let emptiest = (0..s.osd_count() as OsdId)
+            .min_by(|&a, &b| s.utilization(a).partial_cmp(&s.utilization(b)).unwrap())
+            .unwrap();
+        if s.pool_shards_on(1, fullest) <= 1 {
+            return; // degenerate; nothing to assert
+        }
+        let before = s.pool_max_avail(1);
+        // move one shard from fullest to emptiest if legal
+        let pg = s.shards_on(fullest).iter().copied().find(|&p| {
+            !s.pg(p).unwrap().on(emptiest)
+        });
+        if let Some(pg) = pg {
+            s.apply_movement(pg, fullest, emptiest).unwrap();
+            let after = s.pool_max_avail(1);
+            assert!(
+                after >= before - 1.0,
+                "moving off the fullest OSD must not shrink availability: {before} -> {after}"
+            );
+        }
+    }
+
+    #[test]
+    fn ideal_shard_count_is_weight_proportional() {
+        let s = small_cluster();
+        let pool = &s.pools[&1];
+        // uniform weights → ideal = total_shards / osd_count
+        let ideal = s.ideal_shard_count(pool, 0);
+        assert!((ideal - (32.0 * 3.0 / 8.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grow_pg_adds_to_all_shards() {
+        let mut s = small_cluster();
+        let pg = s.pgs().next().unwrap().id;
+        let before = s.total_used();
+        s.grow_pg(pg, GIB).unwrap();
+        assert_eq!(s.total_used(), before + 3 * GIB);
+        assert!(s.verify().is_empty());
+    }
+}

@@ -1,0 +1,87 @@
+//! Structured event log for the balancing daemon.
+
+use crate::util::units::{fmt_bytes, fmt_duration};
+
+/// One coordinator event, stamped with virtual time.
+#[derive(Debug, Clone)]
+pub enum Event {
+    RoundStarted { round: usize },
+    WritesApplied { round: usize, user_bytes: u64 },
+    PlanComputed { round: usize, moves: usize, bytes: u64, calc_seconds: f64 },
+    PlanExecuted { round: usize, makespan: f64, peak_concurrency: usize },
+    Converged { round: usize },
+}
+
+/// Append-only event log.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    events: Vec<(f64, Event)>,
+}
+
+impl EventLog {
+    pub fn push(&mut self, vtime: f64, event: Event) {
+        self.events.push((vtime, event));
+    }
+
+    pub fn events(&self) -> &[(f64, Event)] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Human-readable rendering, one event per line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (t, e) in &self.events {
+            let line = match e {
+                Event::RoundStarted { round } => format!("round {round} started"),
+                Event::WritesApplied { round, user_bytes } => {
+                    format!("round {round}: clients wrote {}", fmt_bytes(*user_bytes))
+                }
+                Event::PlanComputed { round, moves, bytes, calc_seconds } => format!(
+                    "round {round}: planned {moves} moves ({}) in {}",
+                    fmt_bytes(*bytes),
+                    fmt_duration(*calc_seconds)
+                ),
+                Event::PlanExecuted { round, makespan, peak_concurrency } => format!(
+                    "round {round}: plan executed in {} (peak {} concurrent backfills)",
+                    fmt_duration(*makespan),
+                    peak_concurrency
+                ),
+                Event::Converged { round } => format!("round {round}: balancer converged"),
+            };
+            out.push_str(&format!("[t={:>10}] {}\n", fmt_duration(*t), line));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_renders_all_events() {
+        let mut log = EventLog::default();
+        log.push(0.0, Event::RoundStarted { round: 1 });
+        log.push(1.0, Event::WritesApplied { round: 1, user_bytes: 1 << 30 });
+        log.push(
+            2.0,
+            Event::PlanComputed { round: 1, moves: 5, bytes: 5 << 30, calc_seconds: 0.01 },
+        );
+        log.push(60.0, Event::PlanExecuted { round: 1, makespan: 58.0, peak_concurrency: 3 });
+        log.push(61.0, Event::Converged { round: 1 });
+        let text = log.render();
+        assert_eq!(text.lines().count(), 5);
+        assert!(text.contains("planned 5 moves"));
+        assert!(text.contains("converged"));
+        assert_eq!(log.len(), 5);
+        assert!(!log.is_empty());
+    }
+}

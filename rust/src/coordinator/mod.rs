@@ -1,0 +1,14 @@
+//! Layer-3 coordinator: the operational side of balancing — executing
+//! movement plans under backfill throttling (discrete-event executor)
+//! and the daemon loop that interleaves client writes, planning, and
+//! execution with backpressure.
+
+pub mod daemon;
+pub mod events;
+pub mod executor;
+pub mod throttle;
+
+pub use daemon::{apply_writes, run_daemon, DaemonConfig, DaemonReport, RoundReport};
+pub use events::{Event, EventLog};
+pub use executor::{execute_plan, ExecutionReport, ExecutorConfig, TransferRecord};
+pub use throttle::Throttle;

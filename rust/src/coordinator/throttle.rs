@@ -1,0 +1,95 @@
+//! Adaptive backpressure for the daemon: size each round's movement
+//! budget so plan execution fits the round's time budget.
+//!
+//! The executor tells us how long the last batch took; an AIMD
+//! (additive-increase / multiplicative-decrease) controller adjusts the
+//! next batch size. This keeps recovery I/O bounded — the operational
+//! concern that makes operators afraid of balancers in the first place.
+
+/// AIMD controller over the per-round movement budget.
+#[derive(Debug, Clone)]
+pub struct Throttle {
+    /// Current budget (moves per round).
+    budget: usize,
+    pub min_budget: usize,
+    pub max_budget: usize,
+    /// Target execution time per round, seconds.
+    pub target_seconds: f64,
+    /// Additive increase step when under target.
+    pub increase: usize,
+    /// Multiplicative decrease factor when over target.
+    pub decrease: f64,
+}
+
+impl Throttle {
+    pub fn new(initial: usize, target_seconds: f64) -> Throttle {
+        Throttle {
+            budget: initial.max(1),
+            min_budget: 1,
+            max_budget: 10_000,
+            target_seconds,
+            increase: 5,
+            decrease: 0.5,
+        }
+    }
+
+    /// Current budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Feed back the measured makespan of the executed round; returns the
+    /// next round's budget.
+    pub fn observe(&mut self, makespan_seconds: f64, moves_executed: usize) -> usize {
+        if moves_executed == 0 {
+            // nothing ran (converged or blocked) — keep the budget
+            return self.budget;
+        }
+        if makespan_seconds > self.target_seconds {
+            // too slow: back off proportionally to the overshoot, at
+            // least the multiplicative decrease
+            let factor = (self.target_seconds / makespan_seconds).min(self.decrease);
+            self.budget = ((self.budget as f64 * factor).floor() as usize).max(self.min_budget);
+        } else {
+            self.budget = (self.budget + self.increase).min(self.max_budget);
+        }
+        self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn increases_when_fast() {
+        let mut t = Throttle::new(10, 60.0);
+        let b = t.observe(10.0, 10);
+        assert_eq!(b, 15);
+        assert_eq!(t.observe(10.0, 15), 20);
+    }
+
+    #[test]
+    fn backs_off_when_slow() {
+        let mut t = Throttle::new(100, 60.0);
+        let b = t.observe(240.0, 100); // 4x over target → quarter
+        assert_eq!(b, 25);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut t = Throttle::new(2, 60.0);
+        t.min_budget = 2;
+        assert_eq!(t.observe(1e9, 2), 2, "never below min");
+        let mut t2 = Throttle::new(9998, 60.0);
+        t2.max_budget = 10_000;
+        assert_eq!(t2.observe(1.0, 9998), 10_000);
+        assert_eq!(t2.observe(1.0, 10_000), 10_000, "capped at max");
+    }
+
+    #[test]
+    fn zero_moves_keeps_budget() {
+        let mut t = Throttle::new(50, 60.0);
+        assert_eq!(t.observe(0.0, 0), 50);
+    }
+}

@@ -1,0 +1,390 @@
+//! Construction and validation of CRUSH maps.
+
+use std::collections::BTreeMap;
+
+use super::types::{
+    Bucket, CrushMap, Device, DeviceClass, Level, NodeId, NodeWeights, OsdId, Rule,
+};
+use crate::util::units::TIB;
+
+/// Errors detected while building or validating a map.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum BuildError {
+    #[error("duplicate bucket name '{0}'")]
+    DuplicateName(String),
+    #[error("unknown parent bucket id {0}")]
+    UnknownParent(NodeId),
+    #[error("child {child} of bucket {parent} does not exist")]
+    DanglingChild { parent: NodeId, child: NodeId },
+    #[error("node {0} has multiple parents")]
+    MultipleParents(NodeId),
+    #[error("hierarchy contains a cycle involving bucket {0}")]
+    Cycle(NodeId),
+    #[error("bucket {child} of level {child_level:?} under {parent} of level {parent_level:?}")]
+    LevelInversion {
+        parent: NodeId,
+        parent_level: Level,
+        child: NodeId,
+        child_level: Level,
+    },
+    #[error("rule {rule} takes unknown bucket '{root}'")]
+    UnknownRoot { rule: u32, root: String },
+    #[error("duplicate rule id {0}")]
+    DuplicateRule(u32),
+}
+
+/// Incremental builder. Typical use:
+///
+/// ```
+/// use equilibrium::crush::builder::CrushBuilder;
+/// use equilibrium::crush::types::{DeviceClass, Level, Rule};
+///
+/// let mut b = CrushBuilder::new();
+/// let root = b.add_root("default");
+/// let h1 = b.add_bucket("host1", Level::Host, root);
+/// let h2 = b.add_bucket("host2", Level::Host, root);
+/// b.add_osd_bytes(h1, 4 << 40, DeviceClass::Hdd);
+/// b.add_osd_bytes(h2, 4 << 40, DeviceClass::Hdd);
+/// b.add_rule(Rule::replicated(0, "repl", "default", None, Level::Host));
+/// let map = b.build().unwrap();
+/// assert_eq!(map.devices.len(), 2);
+/// ```
+#[derive(Debug, Default)]
+pub struct CrushBuilder {
+    devices: Vec<Device>,
+    buckets: BTreeMap<NodeId, Bucket>,
+    rules: Vec<Rule>,
+    next_bucket_id: NodeId,
+}
+
+impl CrushBuilder {
+    pub fn new() -> Self {
+        CrushBuilder { devices: Vec::new(), buckets: BTreeMap::new(), rules: Vec::new(), next_bucket_id: -1 }
+    }
+
+    /// Add a root-level bucket.
+    pub fn add_root(&mut self, name: &str) -> NodeId {
+        self.add_orphan_bucket(name, Level::Root)
+    }
+
+    /// Add a bucket without a parent (roots, or attach later).
+    pub fn add_orphan_bucket(&mut self, name: &str, level: Level) -> NodeId {
+        let id = self.next_bucket_id;
+        self.next_bucket_id -= 1;
+        self.buckets.insert(
+            id,
+            Bucket { id, name: name.to_string(), level, children: Vec::new() },
+        );
+        id
+    }
+
+    /// Add a bucket under `parent`.
+    pub fn add_bucket(&mut self, name: &str, level: Level, parent: NodeId) -> NodeId {
+        let id = self.add_orphan_bucket(name, level);
+        if let Some(p) = self.buckets.get_mut(&parent) {
+            p.children.push(id);
+        } else {
+            // keep the dangling reference; build() will report it
+            self.buckets.get_mut(&id).unwrap().children.push(parent);
+        }
+        id
+    }
+
+    /// Add a device with an explicit CRUSH weight.
+    pub fn add_osd(&mut self, parent: NodeId, weight: f64, class: DeviceClass) -> OsdId {
+        let id = self.devices.len() as OsdId;
+        self.devices.push(Device { id, weight, class });
+        if let Some(p) = self.buckets.get_mut(&parent) {
+            p.children.push(id as NodeId);
+        }
+        id
+    }
+
+    /// Add a device sized in bytes (weight = TiB, Ceph convention).
+    pub fn add_osd_bytes(&mut self, parent: NodeId, size_bytes: u64, class: DeviceClass) -> OsdId {
+        self.add_osd(parent, size_bytes as f64 / TIB as f64, class)
+    }
+
+    pub fn add_rule(&mut self, rule: Rule) {
+        self.rules.push(rule);
+    }
+
+    /// Validate and produce the finished map (computes weight caches and
+    /// parent links).
+    pub fn build(self) -> Result<CrushMap, BuildError> {
+        from_parts(self.devices, self.buckets, self.rules)
+    }
+}
+
+/// Assemble a validated map from raw parts (used by the builder and by
+/// the dump loader, which must preserve bucket ids exactly — straw2 draws
+/// hash on node ids, so ids are part of placement determinism).
+pub fn from_parts(
+    devices: Vec<Device>,
+    buckets: BTreeMap<NodeId, Bucket>,
+    rules: Vec<Rule>,
+) -> Result<CrushMap, BuildError> {
+    PartsView { devices, buckets, rules }.finish()
+}
+
+struct PartsView {
+    devices: Vec<Device>,
+    buckets: BTreeMap<NodeId, Bucket>,
+    rules: Vec<Rule>,
+}
+
+impl PartsView {
+    fn finish(self) -> Result<CrushMap, BuildError> {
+        let mut bucket_by_name = BTreeMap::new();
+        for b in self.buckets.values() {
+            if bucket_by_name.insert(b.name.clone(), b.id).is_some() {
+                return Err(BuildError::DuplicateName(b.name.clone()));
+            }
+        }
+
+        // parent links + structural validation
+        let mut parent: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+        for b in self.buckets.values() {
+            for &c in &b.children {
+                let exists = if c >= 0 {
+                    (c as usize) < self.devices.len()
+                } else {
+                    self.buckets.contains_key(&c)
+                };
+                if !exists {
+                    return Err(BuildError::DanglingChild { parent: b.id, child: c });
+                }
+                if parent.insert(c, b.id).is_some() {
+                    return Err(BuildError::MultipleParents(c));
+                }
+                if c < 0 {
+                    let cl = self.buckets[&c].level;
+                    if cl >= b.level {
+                        return Err(BuildError::LevelInversion {
+                            parent: b.id,
+                            parent_level: b.level,
+                            child: c,
+                            child_level: cl,
+                        });
+                    }
+                }
+            }
+        }
+
+        // cycle check: follow parents from every bucket; because levels
+        // strictly decrease child-ward this cannot loop, but a bucket
+        // reachable from itself via children (malformed insert) is caught
+        // by walking with a step bound.
+        for &id in self.buckets.keys() {
+            let mut cur = id;
+            let mut steps = 0;
+            while let Some(&p) = parent.get(&cur) {
+                cur = p;
+                steps += 1;
+                if steps > self.buckets.len() {
+                    return Err(BuildError::Cycle(id));
+                }
+            }
+        }
+
+        // rule validation
+        let mut rules = BTreeMap::new();
+        for r in self.rules {
+            for step in &r.steps {
+                if let super::types::Step::Take { root, .. } = step {
+                    if !bucket_by_name.contains_key(root) {
+                        return Err(BuildError::UnknownRoot { rule: r.id, root: root.clone() });
+                    }
+                }
+            }
+            if rules.insert(r.id, r).is_some() {
+                let id = *rules.keys().last().unwrap();
+                return Err(BuildError::DuplicateRule(id));
+            }
+        }
+
+        let mut map = CrushMap {
+            devices: self.devices,
+            buckets: self.buckets,
+            rules,
+            bucket_by_name,
+            weight_cache: BTreeMap::new(),
+            parent,
+            device_ancestor: Vec::new(),
+        };
+        map.recompute_weights();
+        map.rebuild_ancestor_cache();
+        Ok(map)
+    }
+}
+
+impl CrushMap {
+    /// Recompute the per-node (total, per-class) weight caches. Called by
+    /// the builder; callers that mutate device weights (e.g. failure
+    /// injection in tests) must call this again.
+    pub fn recompute_weights(&mut self) {
+        let ids: Vec<NodeId> = self.buckets.keys().copied().collect();
+        let mut cache: BTreeMap<NodeId, NodeWeights> = BTreeMap::new();
+        // iterate until fixpoint-free: compute via DFS with memo
+        for id in ids {
+            self.node_weight_memo(id, &mut cache);
+        }
+        self.weight_cache = cache;
+    }
+
+    /// Rebuild the per-device ancestor cache (after structural changes).
+    pub fn rebuild_ancestor_cache(&mut self) {
+        use super::types::Level;
+        let mut cache = Vec::with_capacity(self.devices.len());
+        for d in 0..self.devices.len() as NodeId {
+            let mut row = [None; Level::COUNT];
+            for level in [Level::Osd, Level::Host, Level::Rack, Level::Row, Level::Datacenter, Level::Root]
+            {
+                // compute with the walking path (cache not consulted for
+                // an out-of-range index, but be explicit):
+                row[level.rank()] = if level == Level::Osd {
+                    Some(d)
+                } else {
+                    self.walk_ancestor(d, level)
+                };
+            }
+            cache.push(row);
+        }
+        self.device_ancestor = cache;
+    }
+
+    fn walk_ancestor(&self, mut node: NodeId, level: super::types::Level) -> Option<NodeId> {
+        while let Some(&p) = self.parent.get(&node) {
+            if self.level_of(p) == Some(level) {
+                return Some(p);
+            }
+            node = p;
+        }
+        None
+    }
+
+    fn node_weight_memo(&self, node: NodeId, cache: &mut BTreeMap<NodeId, NodeWeights>) -> NodeWeights {
+        if node >= 0 {
+            let d = &self.devices[node as usize];
+            let mut w = NodeWeights::default();
+            w.total = d.weight;
+            let idx = DeviceClass::ALL.iter().position(|&x| x == d.class).unwrap();
+            w.per_class[idx] = d.weight;
+            return w;
+        }
+        if let Some(w) = cache.get(&node) {
+            return *w;
+        }
+        let children = self.buckets.get(&node).map(|b| b.children.clone()).unwrap_or_default();
+        let mut acc = NodeWeights::default();
+        for c in children {
+            let w = self.node_weight_memo(c, cache);
+            acc.total += w.total;
+            for i in 0..3 {
+                acc.per_class[i] += w.per_class[i];
+            }
+        }
+        cache.insert(node, acc);
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::TIB;
+
+    fn two_host_map() -> CrushMap {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        let h1 = b.add_bucket("host1", Level::Host, root);
+        let h2 = b.add_bucket("host2", Level::Host, root);
+        b.add_osd_bytes(h1, 4 * TIB, DeviceClass::Hdd);
+        b.add_osd_bytes(h1, 4 * TIB, DeviceClass::Ssd);
+        b.add_osd_bytes(h2, 8 * TIB, DeviceClass::Hdd);
+        b.add_rule(Rule::replicated(0, "repl", "default", None, Level::Host));
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn weights_aggregate_up_the_tree() {
+        let m = two_host_map();
+        let root = m.bucket_by_name["default"];
+        assert!((m.weight_of(root, None) - 16.0).abs() < 1e-9);
+        assert!((m.weight_of(root, Some(DeviceClass::Hdd)) - 12.0).abs() < 1e-9);
+        assert!((m.weight_of(root, Some(DeviceClass::Ssd)) - 4.0).abs() < 1e-9);
+        assert!((m.weight_of(root, Some(DeviceClass::Nvme))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parents_and_ancestors() {
+        let m = two_host_map();
+        let h1 = m.bucket_by_name["host1"];
+        let root = m.bucket_by_name["default"];
+        assert_eq!(m.ancestor_at(0, Level::Host), Some(h1));
+        assert_eq!(m.ancestor_at(0, Level::Root), Some(root));
+        assert!(m.in_subtree(0, h1));
+        assert!(m.in_subtree(0, root));
+        assert!(!m.in_subtree(2, h1));
+    }
+
+    #[test]
+    fn devices_under_with_class_filter() {
+        let m = two_host_map();
+        let root = m.bucket_by_name["default"];
+        assert_eq!(m.devices_under(root, None), vec![0, 1, 2]);
+        assert_eq!(m.devices_under(root, Some(DeviceClass::Hdd)), vec![0, 2]);
+        assert_eq!(m.devices_under(root, Some(DeviceClass::Ssd)), vec![1]);
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        b.add_bucket("h", Level::Host, root);
+        b.add_bucket("h", Level::Host, root);
+        assert!(matches!(b.build(), Err(BuildError::DuplicateName(_))));
+    }
+
+    #[test]
+    fn rejects_level_inversion() {
+        let mut b = CrushBuilder::new();
+        let host = b.add_orphan_bucket("h", Level::Host);
+        let _root_under_host = b.add_bucket("r", Level::Root, host);
+        assert!(matches!(b.build(), Err(BuildError::LevelInversion { .. })));
+    }
+
+    #[test]
+    fn rejects_unknown_rule_root() {
+        let mut b = CrushBuilder::new();
+        b.add_root("default");
+        b.add_rule(Rule::replicated(0, "r", "nonexistent", None, Level::Host));
+        assert!(matches!(b.build(), Err(BuildError::UnknownRoot { .. })));
+    }
+
+    #[test]
+    fn rule_devices_unions_takes() {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        let h1 = b.add_bucket("host1", Level::Host, root);
+        b.add_osd_bytes(h1, TIB, DeviceClass::Ssd);
+        b.add_osd_bytes(h1, TIB, DeviceClass::Hdd);
+        b.add_osd_bytes(h1, TIB, DeviceClass::Hdd);
+        b.add_rule(Rule::hybrid(
+            7,
+            "hyb",
+            "default",
+            DeviceClass::Ssd,
+            1,
+            DeviceClass::Hdd,
+            Level::Osd,
+        ));
+        let m = b.build().unwrap();
+        let r = m.rule(7).unwrap();
+        assert_eq!(m.rule_devices(r), vec![0, 1, 2]);
+        assert_eq!(
+            m.rule_classes(r),
+            vec![Some(DeviceClass::Ssd), Some(DeviceClass::Hdd)]
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! The rjenkins1 hash family used by CRUSH.
+//!
+//! This is a faithful port of Ceph's `crush/hash.c` (`crush_hash32_*`,
+//! algorithm CRUSH_HASH_RJENKINS1). Placement decisions must be a pure
+//! function of (input key, item id, attempt), stable across runs and
+//! machines — a keyed integer hash, not a general-purpose one.
+
+const CRUSH_HASH_SEED: u32 = 1315423911;
+
+/// Robert Jenkins' 96-bit mix function (one round).
+#[inline]
+fn hashmix(mut a: u32, mut b: u32, mut c: u32) -> (u32, u32, u32) {
+    a = a.wrapping_sub(b);
+    a = a.wrapping_sub(c);
+    a ^= c >> 13;
+    b = b.wrapping_sub(c);
+    b = b.wrapping_sub(a);
+    b ^= a << 8;
+    c = c.wrapping_sub(a);
+    c = c.wrapping_sub(b);
+    c ^= b >> 13;
+    a = a.wrapping_sub(b);
+    a = a.wrapping_sub(c);
+    a ^= c >> 12;
+    b = b.wrapping_sub(c);
+    b = b.wrapping_sub(a);
+    b ^= a << 16;
+    c = c.wrapping_sub(a);
+    c = c.wrapping_sub(b);
+    c ^= b >> 5;
+    a = a.wrapping_sub(b);
+    a = a.wrapping_sub(c);
+    a ^= c >> 3;
+    b = b.wrapping_sub(c);
+    b = b.wrapping_sub(a);
+    b ^= a << 10;
+    c = c.wrapping_sub(a);
+    c = c.wrapping_sub(b);
+    c ^= b >> 15;
+    (a, b, c)
+}
+
+/// `crush_hash32_rjenkins1(a)`.
+pub fn hash32_1(a: u32) -> u32 {
+    let mut hash = CRUSH_HASH_SEED ^ a;
+    let b = a;
+    let x = 231232u32;
+    let y = 1232u32;
+    let (_, _, h) = hashmix(b, x, hash);
+    hash = h;
+    let (_, _, h) = hashmix(y, a, hash);
+    h
+}
+
+/// `crush_hash32_rjenkins1_2(a, b)`.
+pub fn hash32_2(a: u32, b: u32) -> u32 {
+    let mut hash = CRUSH_HASH_SEED ^ a ^ b;
+    let x = 231232u32;
+    let y = 1232u32;
+    let (a2, _, h) = hashmix(a, b, hash);
+    hash = h;
+    let (_, _, h) = hashmix(x, a2, hash);
+    hash = h;
+    let (_, _, h) = hashmix(b, y, hash);
+    h
+}
+
+/// `crush_hash32_rjenkins1_3(a, b, c)`.
+pub fn hash32_3(a: u32, b: u32, c: u32) -> u32 {
+    let mut hash = CRUSH_HASH_SEED ^ a ^ b ^ c;
+    let x = 231232u32;
+    let y = 1232u32;
+    let (a2, _, h) = hashmix(a, b, hash);
+    hash = h;
+    let (_, _, h) = hashmix(c, x, hash);
+    hash = h;
+    let (_, a3, h) = hashmix(y, a2, hash);
+    hash = h;
+    let (_, _, h) = hashmix(b, x, hash);
+    hash = h;
+    let (_, _, h) = hashmix(y, c, hash);
+    let _ = a3;
+    h
+}
+
+/// `crush_hash32_rjenkins1_4(a, b, c, d)` — used for PG → placement seed.
+pub fn hash32_4(a: u32, b: u32, c: u32, d: u32) -> u32 {
+    let mut hash = CRUSH_HASH_SEED ^ a ^ b ^ c ^ d;
+    let x = 231232u32;
+    let y = 1232u32;
+    let (a2, _, h) = hashmix(a, b, hash);
+    hash = h;
+    let (_, _, h) = hashmix(c, d, hash);
+    hash = h;
+    let (a3, _, h) = hashmix(a2, x, hash);
+    hash = h;
+    let (_, _, h) = hashmix(y, a3, hash);
+    hash = h;
+    let (_, _, h) = hashmix(b, x, hash);
+    hash = h;
+    let (_, _, h) = hashmix(y, c, hash);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(hash32_1(12345), hash32_1(12345));
+        assert_eq!(hash32_2(1, 2), hash32_2(1, 2));
+        assert_eq!(hash32_3(1, 2, 3), hash32_3(1, 2, 3));
+        assert_eq!(hash32_4(1, 2, 3, 4), hash32_4(1, 2, 3, 4));
+    }
+
+    #[test]
+    fn argument_order_matters() {
+        assert_ne!(hash32_2(1, 2), hash32_2(2, 1));
+        assert_ne!(hash32_3(1, 2, 3), hash32_3(3, 2, 1));
+    }
+
+    #[test]
+    fn small_input_changes_avalanche() {
+        // flipping one input bit should flip roughly half the output bits
+        let mut total = 0u32;
+        let n = 256;
+        for i in 0..n {
+            let a = hash32_3(i, 7, 9);
+            let b = hash32_3(i ^ 1, 7, 9);
+            total += (a ^ b).count_ones();
+        }
+        let avg = total as f64 / n as f64;
+        assert!((avg - 16.0).abs() < 3.0, "avalanche avg {avg}");
+    }
+
+    #[test]
+    fn output_is_roughly_uniform_in_low_16_bits() {
+        // straw2 consumes hash & 0xffff; check bucket occupancy
+        let mut counts = [0u32; 16];
+        let n = 65536u32;
+        for x in 0..n {
+            let h = hash32_3(x, 42, 3) & 0xffff;
+            counts[(h >> 12) as usize] += 1;
+        }
+        let expect = n / 16;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as i64 - expect as i64).abs() < (expect / 5) as i64,
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+}

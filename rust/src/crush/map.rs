@@ -1,0 +1,547 @@
+//! CRUSH rule execution: mapping a placement-group input to an ordered
+//! set of devices.
+//!
+//! Implements the `firstn` (replicated) and `indep` (erasure-coded)
+//! selection strategies with collision/duplicate retry, failure-domain
+//! distinctness, device-class filtering and multi-take rules, following
+//! the structure of Ceph's `crush_do_rule`/`crush_choose_firstn`/
+//! `crush_choose_indep`.
+
+use super::hash::hash32_2;
+use super::straw2::bucket_choose;
+use super::types::{CrushMap, DeviceClass, Level, NodeId, OsdId, Rule, Step};
+
+/// Maximum total descent attempts per replica slot (Ceph's
+/// `choose_total_tries` default is 50).
+pub const TOTAL_TRIES: u32 = 50;
+
+/// Compute the CRUSH input value for a placement group. Mirrors Ceph's
+/// `pg → pps` seeding: a stable hash of (pg index, pool id).
+#[inline]
+pub fn pg_input(pool_id: u32, pg_index: u32) -> u32 {
+    hash32_2(pg_index, pool_id)
+}
+
+/// The result of running a rule: one entry per replica/EC slot. Holes
+/// (`None`) are possible for `indep` rules when a slot cannot be filled;
+/// `firstn` failures shorten the vector instead, which we normalize to
+/// trailing holes so the caller always sees `result_size` slots.
+pub type Mapping = Vec<Option<OsdId>>;
+
+/// Execute `rule` for input `x`, producing `result_size` slots.
+pub fn map_rule(map: &CrushMap, rule: &Rule, x: u32, result_size: usize) -> Mapping {
+    let mut result: Vec<Option<OsdId>> = Vec::with_capacity(result_size);
+    let mut chosen_devices: Vec<OsdId> = Vec::new();
+    let mut work: Vec<NodeId> = Vec::new();
+    let mut class: Option<DeviceClass> = None;
+
+    for step in &rule.steps {
+        match step {
+            Step::Take { root, class: c } => {
+                work.clear();
+                if let Some(&node) = map.bucket_by_name.get(root) {
+                    work.push(node);
+                }
+                class = *c;
+            }
+            Step::ChooseFirstN { num, level } => {
+                let numrep = resolve_num(*num, result_size, result.len());
+                let mut next = Vec::new();
+                for &parent in &work {
+                    next.extend(choose_firstn(
+                        map,
+                        parent,
+                        class,
+                        *level,
+                        numrep,
+                        x,
+                        false,
+                        &mut chosen_devices,
+                    ));
+                }
+                work = next;
+            }
+            Step::ChooseLeafFirstN { num, level } => {
+                let numrep = resolve_num(*num, result_size, result.len());
+                let mut next = Vec::new();
+                for &parent in &work {
+                    next.extend(choose_firstn(
+                        map,
+                        parent,
+                        class,
+                        *level,
+                        numrep,
+                        x,
+                        true,
+                        &mut chosen_devices,
+                    ));
+                }
+                work = next;
+            }
+            Step::ChooseIndep { num, level } => {
+                let numrep = resolve_num(*num, result_size, result.len());
+                let mut next = Vec::new();
+                for &parent in &work {
+                    next.extend(choose_indep(
+                        map,
+                        parent,
+                        class,
+                        *level,
+                        numrep,
+                        x,
+                        false,
+                        &mut chosen_devices,
+                    ));
+                }
+                work = next;
+            }
+            Step::ChooseLeafIndep { num, level } => {
+                let numrep = resolve_num(*num, result_size, result.len());
+                let mut next = Vec::new();
+                for &parent in &work {
+                    next.extend(choose_indep(
+                        map,
+                        parent,
+                        class,
+                        *level,
+                        numrep,
+                        x,
+                        true,
+                        &mut chosen_devices,
+                    ));
+                }
+                work = next;
+            }
+            Step::Emit => {
+                for node in work.drain(..) {
+                    if node >= 0 {
+                        result.push(Some(node as OsdId));
+                    } else {
+                        // emitting a bucket is a rule-authoring error; emit
+                        // a hole rather than panic
+                        result.push(None);
+                    }
+                }
+            }
+        }
+        if result.len() >= result_size {
+            break;
+        }
+    }
+
+    result.truncate(result_size);
+    while result.len() < result_size {
+        result.push(None);
+    }
+    result
+}
+
+/// Resolve a step's `num` field against the pool size (Ceph semantics:
+/// 0 = "as many as still needed", negative = "all but |num|").
+fn resolve_num(num: i32, result_size: usize, already: usize) -> usize {
+    let remaining = result_size.saturating_sub(already);
+    if num == 0 {
+        remaining
+    } else if num > 0 {
+        (num as usize).min(remaining)
+    } else {
+        // Ceph: numrep = result_max + arg (arg negative), i.e. "all but
+        // |num|" of the pool size — independent of what prior emits used,
+        // but never more than the remaining slots.
+        result_size
+            .saturating_sub(num.unsigned_abs() as usize)
+            .min(remaining)
+    }
+}
+
+/// Descend from `node` until reaching a node at `level` (buckets only;
+/// level Osd means descend to a device). Returns None on a dead end.
+fn descend_to_level(
+    map: &CrushMap,
+    mut node: NodeId,
+    level: Level,
+    class: Option<DeviceClass>,
+    x: u32,
+    r: u32,
+) -> Option<NodeId> {
+    loop {
+        let cur_level = map.level_of(node)?;
+        if cur_level == level {
+            return Some(node);
+        }
+        if cur_level < level || node >= 0 {
+            return None; // overshot: the tree skips this level
+        }
+        node = bucket_choose(map, node, x, r, class)?;
+    }
+}
+
+/// Descend from a failure-domain bucket all the way to a device.
+fn descend_to_device(
+    map: &CrushMap,
+    node: NodeId,
+    class: Option<DeviceClass>,
+    x: u32,
+    r: u32,
+) -> Option<OsdId> {
+    let mut cur = node;
+    while cur < 0 {
+        cur = bucket_choose(map, cur, x, r, class)?;
+    }
+    let d = &map.devices[cur as usize];
+    if let Some(c) = class {
+        if d.class != c {
+            return None;
+        }
+    }
+    if d.weight <= 0.0 {
+        return None;
+    }
+    Some(cur as OsdId)
+}
+
+/// firstn selection: `numrep` distinct failure domains under `parent`;
+/// on failure the result is simply shorter (replicated pools degrade).
+#[allow(clippy::too_many_arguments)]
+fn choose_firstn(
+    map: &CrushMap,
+    parent: NodeId,
+    class: Option<DeviceClass>,
+    level: Level,
+    numrep: usize,
+    x: u32,
+    chooseleaf: bool,
+    chosen_devices: &mut Vec<OsdId>,
+) -> Vec<NodeId> {
+    let mut out: Vec<NodeId> = Vec::with_capacity(numrep);
+    let mut chosen_domains: Vec<NodeId> = Vec::new();
+
+    for rep in 0..numrep as u32 {
+        let mut ftotal = 0u32;
+        'attempts: while ftotal < TOTAL_TRIES {
+            let r = rep + ftotal;
+            ftotal += 1;
+            let Some(domain) = descend_to_level(map, parent, level, class, x, r) else {
+                continue 'attempts;
+            };
+            if chosen_domains.contains(&domain) {
+                continue 'attempts;
+            }
+            if chooseleaf {
+                // inner retry loop for the leaf descent; stride by numrep
+                // so different replica slots explore disjoint r-sequences
+                let mut dev = None;
+                for leaf_try in 0..TOTAL_TRIES {
+                    let r2 = rep + leaf_try * numrep.max(1) as u32;
+                    if let Some(d) = descend_to_device(map, domain, class, x, r2) {
+                        if !chosen_devices.contains(&d) {
+                            dev = Some(d);
+                            break;
+                        }
+                    }
+                }
+                let Some(d) = dev else { continue 'attempts };
+                chosen_domains.push(domain);
+                chosen_devices.push(d);
+                out.push(d as NodeId);
+            } else {
+                if domain >= 0 && chosen_devices.contains(&(domain as OsdId)) {
+                    continue 'attempts;
+                }
+                chosen_domains.push(domain);
+                if domain >= 0 {
+                    chosen_devices.push(domain as OsdId);
+                }
+                out.push(domain);
+            }
+            break 'attempts;
+        }
+    }
+    out
+}
+
+/// indep selection: positional, holes stay holes (erasure-coded pools
+/// must not shift shards between slots).
+#[allow(clippy::too_many_arguments)]
+fn choose_indep(
+    map: &CrushMap,
+    parent: NodeId,
+    class: Option<DeviceClass>,
+    level: Level,
+    numrep: usize,
+    x: u32,
+    chooseleaf: bool,
+    chosen_devices: &mut Vec<OsdId>,
+) -> Vec<NodeId> {
+    let mut out: Vec<NodeId> = vec![i32::MIN; numrep]; // sentinel = hole
+    let mut chosen_domains: Vec<NodeId> = Vec::new();
+    let stride = numrep.max(1) as u32;
+
+    for rep in 0..numrep as u32 {
+        'attempts: for ftotal in 0..TOTAL_TRIES {
+            // each slot has a disjoint retry sequence: slot stability
+            let r = rep + ftotal * stride;
+            let Some(domain) = descend_to_level(map, parent, level, class, x, r) else {
+                continue 'attempts;
+            };
+            if chosen_domains.contains(&domain) {
+                continue 'attempts;
+            }
+            if chooseleaf {
+                let mut dev = None;
+                for leaf_try in 0..TOTAL_TRIES {
+                    let r2 = rep + leaf_try * stride;
+                    if let Some(d) = descend_to_device(map, domain, class, x, r2) {
+                        if !chosen_devices.contains(&d) {
+                            dev = Some(d);
+                            break;
+                        }
+                    }
+                }
+                let Some(d) = dev else { continue 'attempts };
+                chosen_domains.push(domain);
+                chosen_devices.push(d);
+                out[rep as usize] = d as NodeId;
+            } else {
+                if domain >= 0 && chosen_devices.contains(&(domain as OsdId)) {
+                    continue 'attempts;
+                }
+                chosen_domains.push(domain);
+                if domain >= 0 {
+                    chosen_devices.push(domain as OsdId);
+                }
+                out[rep as usize] = domain;
+            }
+            break 'attempts;
+        }
+    }
+
+    // holes: sentinel → keep position but caller sees None via map_rule's
+    // emit (i32::MIN is never a valid node)
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crush::builder::CrushBuilder;
+    use crate::crush::types::Rule;
+    use crate::util::units::TIB;
+
+    /// 6 hosts × 4 OSDs of 4 TiB, one root.
+    fn uniform_map() -> CrushMap {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..6 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            for _ in 0..4 {
+                b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+            }
+        }
+        b.add_rule(Rule::replicated(0, "repl", "default", None, Level::Host));
+        b.add_rule(Rule::erasure(1, "ec", "default", None, Level::Host));
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn replicated_mapping_gives_distinct_hosts() {
+        let m = uniform_map();
+        let rule = m.rule(0).unwrap();
+        for pg in 0..500 {
+            let x = pg_input(1, pg);
+            let slots = map_rule(&m, rule, x, 3);
+            let devs: Vec<OsdId> = slots.iter().filter_map(|s| *s).collect();
+            assert_eq!(devs.len(), 3, "pg {pg}: {slots:?}");
+            let hosts: Vec<NodeId> = devs
+                .iter()
+                .map(|&d| m.ancestor_at(d as NodeId, Level::Host).unwrap())
+                .collect();
+            let mut uniq = hosts.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "pg {pg}: hosts {hosts:?} not distinct");
+        }
+    }
+
+    #[test]
+    fn mapping_is_deterministic() {
+        let m = uniform_map();
+        let rule = m.rule(0).unwrap();
+        for pg in 0..50 {
+            let x = pg_input(3, pg);
+            assert_eq!(map_rule(&m, rule, x, 3), map_rule(&m, rule, x, 3));
+        }
+    }
+
+    #[test]
+    fn ec_mapping_fills_all_slots_when_possible() {
+        let m = uniform_map();
+        let rule = m.rule(1).unwrap();
+        for pg in 0..200 {
+            let x = pg_input(2, pg);
+            let slots = map_rule(&m, rule, x, 5);
+            assert_eq!(slots.len(), 5);
+            let devs: Vec<OsdId> = slots.iter().filter_map(|s| *s).collect();
+            assert_eq!(devs.len(), 5, "pg {pg}: {slots:?}");
+            let mut uniq = devs.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 5);
+        }
+    }
+
+    #[test]
+    fn ec_with_more_slots_than_domains_leaves_holes() {
+        // 3 hosts but k+m = 5 with host failure domain → 2 holes
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..3 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::erasure(1, "ec", "default", None, Level::Host));
+        let m = b.build().unwrap();
+        let slots = map_rule(&m, m.rule(1).unwrap(), pg_input(1, 1), 5);
+        let filled = slots.iter().filter(|s| s.is_some()).count();
+        assert_eq!(filled, 3, "{slots:?}");
+        assert_eq!(slots.len(), 5);
+    }
+
+    #[test]
+    fn distribution_tracks_osd_weights() {
+        // hosts with 2x weight get ~2x the shards
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..4 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            let size = if h < 2 { 8 * TIB } else { 4 * TIB };
+            b.add_osd_bytes(host, size, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        let m = b.build().unwrap();
+        let rule = m.rule(0).unwrap();
+        let mut counts = [0usize; 4];
+        let pgs = 6000u32;
+        for pg in 0..pgs {
+            for s in map_rule(&m, rule, pg_input(7, pg), 2).iter().flatten() {
+                counts[*s as usize] += 1;
+            }
+        }
+        // big OSDs (0,1) should hold roughly 8/12 of all shards. Replica
+        // distinctness (2 of 4 hosts per PG) compresses the spread, so
+        // allow generous tolerance — the balancers exist precisely because
+        // CRUSH is only approximately weight-proportional.
+        let total: usize = counts.iter().sum();
+        let big = (counts[0] + counts[1]) as f64 / total as f64;
+        assert!((0.55..0.75).contains(&big), "big-host share {big:.3}");
+    }
+
+    #[test]
+    fn class_restricted_rule_only_uses_class_devices() {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..4 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+            b.add_osd_bytes(host, TIB, DeviceClass::Ssd);
+        }
+        b.add_rule(Rule::replicated(0, "ssd", "default", Some(DeviceClass::Ssd), Level::Host));
+        let m = b.build().unwrap();
+        let rule = m.rule(0).unwrap();
+        for pg in 0..300 {
+            for d in map_rule(&m, rule, pg_input(9, pg), 3).iter().flatten() {
+                assert_eq!(m.devices[*d as usize].class, DeviceClass::Ssd);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_rule_mixes_classes_in_order() {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..6 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+            b.add_osd_bytes(host, TIB, DeviceClass::Ssd);
+        }
+        b.add_rule(Rule::hybrid(
+            0,
+            "hybrid",
+            "default",
+            DeviceClass::Ssd,
+            1,
+            DeviceClass::Hdd,
+            Level::Host,
+        ));
+        let m = b.build().unwrap();
+        let rule = m.rule(0).unwrap();
+        for pg in 0..300 {
+            let slots = map_rule(&m, rule, pg_input(4, pg), 3);
+            let devs: Vec<OsdId> = slots.iter().filter_map(|s| *s).collect();
+            assert_eq!(devs.len(), 3, "pg {pg}: {slots:?}");
+            assert_eq!(m.devices[devs[0] as usize].class, DeviceClass::Ssd, "slot 0 is SSD");
+            assert_eq!(m.devices[devs[1] as usize].class, DeviceClass::Hdd);
+            assert_eq!(m.devices[devs[2] as usize].class, DeviceClass::Hdd);
+            let mut uniq = devs.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "no device reuse across takes");
+        }
+    }
+
+    #[test]
+    fn weight_change_moves_limited_data() {
+        // straw2 through the whole stack: growing one host moves shards
+        // only toward it
+        let build = |w0: u64| {
+            let mut b = CrushBuilder::new();
+            let root = b.add_root("default");
+            for h in 0..5 {
+                let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+                let size = if h == 0 { w0 } else { 4 * TIB };
+                b.add_osd_bytes(host, size, DeviceClass::Hdd);
+            }
+            b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+            b.build().unwrap()
+        };
+        let m1 = build(4 * TIB);
+        let m2 = build(8 * TIB);
+        let r1 = m1.rule(0).unwrap();
+        let mut moved_toward = 0;
+        let mut moved_elsewhere = 0;
+        for pg in 0..2000 {
+            let x = pg_input(5, pg);
+            let a = map_rule(&m1, r1, x, 1)[0];
+            let b = map_rule(&m2, m2.rule(0).unwrap(), x, 1)[0];
+            if a != b {
+                if b == Some(0) {
+                    moved_toward += 1;
+                } else {
+                    moved_elsewhere += 1;
+                }
+            }
+        }
+        assert!(moved_toward > 0);
+        assert_eq!(moved_elsewhere, 0, "single-replica movement must flow to the grown host");
+    }
+
+    #[test]
+    fn resolve_num_semantics() {
+        assert_eq!(resolve_num(0, 3, 0), 3);
+        assert_eq!(resolve_num(2, 3, 0), 2);
+        assert_eq!(resolve_num(5, 3, 0), 3);
+        assert_eq!(resolve_num(-1, 3, 1), 2); // "all but 1" of pool size 3
+        assert_eq!(resolve_num(0, 3, 1), 2);
+    }
+
+    #[test]
+    fn pg_input_is_stable_and_spread() {
+        assert_eq!(pg_input(1, 2), pg_input(1, 2));
+        assert_ne!(pg_input(1, 2), pg_input(2, 1));
+        let mut seen = std::collections::BTreeSet::new();
+        for pg in 0..1000 {
+            seen.insert(pg_input(1, pg));
+        }
+        assert!(seen.len() > 990, "inputs should rarely collide");
+    }
+}

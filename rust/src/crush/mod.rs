@@ -1,0 +1,20 @@
+//! From-scratch CRUSH implementation: the placement substrate the
+//! balancers operate against.
+//!
+//! CRUSH ("Controlled Replication Under Scalable Hashing", Weil et al.
+//! 2006) maps a placement-group input to an ordered device set through a
+//! weighted hierarchy, pseudo-randomly but deterministically, honouring
+//! failure-domain and device-class constraints. The balancing problem
+//! exists because this distribution is only statistically — not exactly —
+//! proportional to weights (paper §2.2).
+
+pub mod builder;
+pub mod hash;
+pub mod map;
+pub mod straw2;
+pub mod text;
+pub mod types;
+
+pub use builder::{from_parts, BuildError, CrushBuilder};
+pub use map::{map_rule, pg_input, Mapping, TOTAL_TRIES};
+pub use types::{CrushMap, Device, DeviceClass, Level, NodeId, OsdId, Rule, Step};

@@ -1,0 +1,170 @@
+//! Straw2 bucket selection.
+//!
+//! Each child "draws a straw": `ln(u) / weight` where `u` is a
+//! pseudo-random value in (0, 1] derived from `(input, item, attempt)`;
+//! the child with the maximum draw wins. Straw2's key property (the reason
+//! Ceph moved from straw1) is *independence*: changing one child's weight
+//! only re-decides inputs that involve that child, never reshuffles
+//! placements between two unchanged children.
+//!
+//! Ceph computes `ln` in 16.48 fixed point for bit-exact cross-platform
+//! behaviour; within this repository determinism only needs to hold for
+//! one binary, so we use `f64` and keep the same structure (the 16-bit
+//! hash truncation matches Ceph's).
+
+use super::hash::hash32_3;
+use super::types::{CrushMap, DeviceClass, NodeId};
+
+/// Draw value for one child. Higher wins. Zero-weight children return
+/// `-inf` (never selected).
+#[inline]
+pub fn straw2_draw(x: u32, item: NodeId, r: u32, weight: f64) -> f64 {
+    if weight <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    // 16 low bits of the hash, like Ceph (crush_ln input domain).
+    let h = hash32_3(x, item as u32, r) & 0xffff;
+    // u in (0, 1]: (h+1)/65536 avoids ln(0).
+    let u = (h as f64 + 1.0) / 65536.0;
+    u.ln() / weight
+}
+
+/// Select one child of `bucket` for input `x`, attempt `r`, restricted to
+/// children with non-zero effective weight for `class`. Returns None if
+/// the bucket is empty or has no weight in that class.
+pub fn bucket_choose(
+    map: &CrushMap,
+    bucket: NodeId,
+    x: u32,
+    r: u32,
+    class: Option<DeviceClass>,
+) -> Option<NodeId> {
+    let b = map.buckets.get(&bucket)?;
+    let mut best: Option<(f64, NodeId)> = None;
+    for &child in &b.children {
+        let w = map.weight_of(child, class);
+        let draw = straw2_draw(x, child, r, w);
+        if draw == f64::NEG_INFINITY {
+            continue;
+        }
+        match best {
+            Some((bd, _)) if bd >= draw => {}
+            _ => best = Some((draw, child)),
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crush::builder::CrushBuilder;
+    use crate::util::units::TIB;
+
+    fn flat_map(weights_tib: &[(u64, DeviceClass)]) -> (CrushMap, NodeId) {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for &(w, c) in weights_tib {
+            b.add_osd_bytes(root, w * TIB, c);
+        }
+        (b.build().unwrap(), -1)
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let (m, root) = flat_map(&[(4, DeviceClass::Hdd); 8].to_vec());
+        for x in 0..100 {
+            let a = bucket_choose(&m, root, x, 0, None);
+            let b = bucket_choose(&m, root, x, 0, None);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn distribution_follows_weights() {
+        // children weighted 1:2:4 should be picked roughly 1:2:4
+        let (m, root) = flat_map(&[
+            (1, DeviceClass::Hdd),
+            (2, DeviceClass::Hdd),
+            (4, DeviceClass::Hdd),
+        ]);
+        let n = 70_000u32;
+        let mut counts = [0usize; 3];
+        for x in 0..n {
+            let c = bucket_choose(&m, root, x, 0, None).unwrap();
+            counts[c as usize] += 1;
+        }
+        let total = n as f64;
+        for (i, expect) in [1.0 / 7.0, 2.0 / 7.0, 4.0 / 7.0].iter().enumerate() {
+            let got = counts[i] as f64 / total;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "child {i}: got {got:.4}, expected {expect:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn class_filter_excludes_other_classes() {
+        let (m, root) = flat_map(&[
+            (4, DeviceClass::Hdd),
+            (4, DeviceClass::Ssd),
+            (4, DeviceClass::Hdd),
+        ]);
+        for x in 0..500 {
+            let c = bucket_choose(&m, root, x, 0, Some(DeviceClass::Ssd)).unwrap();
+            assert_eq!(c, 1, "only the SSD child may be chosen");
+        }
+        for x in 0..500 {
+            let c = bucket_choose(&m, root, x, 0, Some(DeviceClass::Hdd)).unwrap();
+            assert!(c == 0 || c == 2);
+        }
+    }
+
+    #[test]
+    fn no_weight_returns_none() {
+        let (m, root) = flat_map(&[(4, DeviceClass::Hdd)]);
+        assert_eq!(bucket_choose(&m, root, 1, 0, Some(DeviceClass::Nvme)), None);
+    }
+
+    #[test]
+    fn straw2_stability_under_weight_change() {
+        // The defining straw2 property: doubling child 2's weight must not
+        // move any input that was previously mapped to child 0 onto child 1
+        // (or vice versa) — movement only flows *toward* the changed child.
+        let (m1, root) = flat_map(&[
+            (4, DeviceClass::Hdd),
+            (4, DeviceClass::Hdd),
+            (4, DeviceClass::Hdd),
+        ]);
+        let (mut m2, _) = flat_map(&[
+            (4, DeviceClass::Hdd),
+            (4, DeviceClass::Hdd),
+            (4, DeviceClass::Hdd),
+        ]);
+        m2.devices[2].weight *= 2.0;
+        m2.recompute_weights();
+        for x in 0..20_000 {
+            let before = bucket_choose(&m1, root, x, 0, None).unwrap();
+            let after = bucket_choose(&m2, root, x, 0, None).unwrap();
+            if before != after {
+                assert_eq!(after, 2, "input {x} moved to {after}, not to the grown child");
+            }
+        }
+    }
+
+    #[test]
+    fn attempts_decorrelate() {
+        let (m, root) = flat_map(&[(4, DeviceClass::Hdd); 16].to_vec());
+        // different r should give a different child often enough
+        let mut moved = 0;
+        for x in 0..1000 {
+            let a = bucket_choose(&m, root, x, 0, None).unwrap();
+            let b = bucket_choose(&m, root, x, 1, None).unwrap();
+            if a != b {
+                moved += 1;
+            }
+        }
+        assert!(moved > 800, "r must decorrelate selections, moved={moved}");
+    }
+}

@@ -1,0 +1,168 @@
+//! CRUSH map decompilation — `crushtool --decompile`-style text output
+//! for auditing generated maps (operators read these, diff them, and
+//! paste fragments into tickets).
+
+use std::fmt::Write as _;
+
+use super::types::{CrushMap, Level, NodeId, Step};
+
+/// Render the whole map in crushtool-like syntax.
+pub fn decompile(map: &CrushMap) -> String {
+    let mut out = String::new();
+
+    out.push_str("# begin crush map (equilibrium decompile)\n\n# devices\n");
+    for d in &map.devices {
+        let _ = writeln!(out, "device {} osd.{} class {}", d.id, d.id, d.class.as_str());
+    }
+
+    out.push_str("\n# buckets\n");
+    // leaf-ward order: deepest levels first so references are defined
+    // before use, like crushtool prints
+    let mut buckets: Vec<&super::types::Bucket> = map.buckets.values().collect();
+    buckets.sort_by_key(|b| (b.level.rank(), b.id));
+    for b in buckets {
+        let _ = writeln!(out, "{} {} {{", b.level.as_str(), b.name);
+        let _ = writeln!(out, "\tid {}", b.id);
+        let _ = writeln!(out, "\talg straw2");
+        for &c in &b.children {
+            if c >= 0 {
+                let d = &map.devices[c as usize];
+                let _ = writeln!(out, "\titem osd.{} weight {:.3}", c, d.weight);
+            } else if let Some(child) = map.buckets.get(&c) {
+                let _ = writeln!(
+                    out,
+                    "\titem {} weight {:.3}",
+                    child.name,
+                    map.weight_of(c, None)
+                );
+            }
+        }
+        out.push_str("}\n");
+    }
+
+    out.push_str("\n# rules\n");
+    for r in map.rules.values() {
+        let _ = writeln!(out, "rule {} {{", r.name);
+        let _ = writeln!(out, "\tid {}", r.id);
+        for s in &r.steps {
+            match s {
+                Step::Take { root, class } => {
+                    let _ = match class {
+                        Some(c) => writeln!(out, "\tstep take {} class {}", root, c.as_str()),
+                        None => writeln!(out, "\tstep take {root}"),
+                    };
+                }
+                Step::ChooseFirstN { num, level } => {
+                    let _ = writeln!(out, "\tstep choose firstn {} type {}", num, level.as_str());
+                }
+                Step::ChooseLeafFirstN { num, level } => {
+                    let _ =
+                        writeln!(out, "\tstep chooseleaf firstn {} type {}", num, level.as_str());
+                }
+                Step::ChooseIndep { num, level } => {
+                    let _ = writeln!(out, "\tstep choose indep {} type {}", num, level.as_str());
+                }
+                Step::ChooseLeafIndep { num, level } => {
+                    let _ =
+                        writeln!(out, "\tstep chooseleaf indep {} type {}", num, level.as_str());
+                }
+                Step::Emit => out.push_str("\tstep emit\n"),
+            }
+        }
+        out.push_str("}\n");
+    }
+    out.push_str("\n# end crush map\n");
+    out
+}
+
+/// Short one-line-per-node tree rendering (for `df`-style tooling).
+pub fn tree(map: &CrushMap) -> String {
+    let mut out = String::new();
+    let roots: Vec<NodeId> = map
+        .buckets
+        .values()
+        .filter(|b| b.level == Level::Root)
+        .map(|b| b.id)
+        .collect();
+    for root in roots {
+        render_node(map, root, 0, &mut out);
+    }
+    out
+}
+
+fn render_node(map: &CrushMap, node: NodeId, depth: usize, out: &mut String) {
+    let indent = "  ".repeat(depth);
+    if node >= 0 {
+        let d = &map.devices[node as usize];
+        let _ = writeln!(
+            out,
+            "{indent}osd.{} ({}, weight {:.3})",
+            d.id,
+            d.class.as_str(),
+            d.weight
+        );
+        return;
+    }
+    if let Some(b) = map.buckets.get(&node) {
+        let _ = writeln!(
+            out,
+            "{indent}{} {} (weight {:.3})",
+            b.level.as_str(),
+            b.name,
+            map.weight_of(node, None)
+        );
+        for &c in &b.children {
+            render_node(map, c, depth + 1, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crush::{CrushBuilder, DeviceClass, Rule};
+    use crate::util::units::TIB;
+
+    fn sample() -> CrushMap {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        let h = b.add_bucket("host0", Level::Host, root);
+        b.add_osd_bytes(h, 4 * TIB, DeviceClass::Hdd);
+        b.add_osd_bytes(h, TIB, DeviceClass::Ssd);
+        b.add_rule(Rule::replicated(0, "repl", "default", Some(DeviceClass::Hdd), Level::Host));
+        b.add_rule(Rule::erasure(1, "ec", "default", None, Level::Host));
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn decompile_contains_all_sections() {
+        let text = decompile(&sample());
+        assert!(text.contains("device 0 osd.0 class hdd"));
+        assert!(text.contains("host host0 {"));
+        assert!(text.contains("root default {"));
+        assert!(text.contains("item host0 weight"));
+        assert!(text.contains("rule repl {"));
+        assert!(text.contains("step take default class hdd"));
+        assert!(text.contains("step chooseleaf firstn 0 type host"));
+        assert!(text.contains("step chooseleaf indep 0 type host"));
+        assert!(text.contains("step emit"));
+    }
+
+    #[test]
+    fn hosts_print_before_roots() {
+        let text = decompile(&sample());
+        let host_pos = text.find("host host0").unwrap();
+        let root_pos = text.find("root default").unwrap();
+        assert!(host_pos < root_pos, "leaf-ward buckets must be defined first");
+    }
+
+    #[test]
+    fn tree_shows_hierarchy() {
+        let t = tree(&sample());
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines[0].starts_with("root default"));
+        assert!(lines[1].trim_start().starts_with("host host0"));
+        assert!(lines[2].trim_start().starts_with("osd.0"));
+        assert_eq!(lines.len(), 4);
+    }
+}

@@ -1,0 +1,395 @@
+//! CRUSH map data model: devices, buckets, hierarchy levels, rules.
+//!
+//! Mirrors the parts of Ceph's `crush_map` that the balancing problem
+//! needs: a weighted tree of buckets over devices, device classes, and
+//! placement rules composed of `take` / `choose` / `chooseleaf` / `emit`
+//! steps. Buckets are straw2-only (the only algorithm modern Ceph uses
+//! for new maps).
+
+use std::collections::BTreeMap;
+
+/// Device (OSD) index — non-negative, dense.
+pub type OsdId = u32;
+
+/// Node id in the hierarchy: devices are `>= 0` (the OSD id), buckets are
+/// negative, exactly like Ceph's crush map encoding.
+pub type NodeId = i32;
+
+/// Device performance/media class. CRUSH rules can restrict placement to
+/// one class (Ceph's `step take root class ssd`); this is how the paper's
+/// clusters mix HDD/SSD/NVMe pools on one hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DeviceClass {
+    Hdd,
+    Ssd,
+    Nvme,
+}
+
+impl DeviceClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeviceClass::Hdd => "hdd",
+            DeviceClass::Ssd => "ssd",
+            DeviceClass::Nvme => "nvme",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeviceClass> {
+        match s {
+            "hdd" => Some(DeviceClass::Hdd),
+            "ssd" => Some(DeviceClass::Ssd),
+            "nvme" => Some(DeviceClass::Nvme),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [DeviceClass; 3] = [DeviceClass::Hdd, DeviceClass::Ssd, DeviceClass::Nvme];
+}
+
+/// Hierarchy level of a bucket. Numeric values follow Ceph's default
+/// type ids so comparisons ("is this bucket at/below the failure domain
+/// level?") read naturally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Osd = 0,
+    Host = 1,
+    Rack = 3,
+    Row = 5,
+    Datacenter = 8,
+    Root = 10,
+}
+
+impl Level {
+    /// Number of levels (for cache arrays).
+    pub const COUNT: usize = 6;
+
+    /// Dense index of this level in `[0, COUNT)`.
+    pub fn rank(&self) -> usize {
+        match self {
+            Level::Osd => 0,
+            Level::Host => 1,
+            Level::Rack => 2,
+            Level::Row => 3,
+            Level::Datacenter => 4,
+            Level::Root => 5,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Osd => "osd",
+            Level::Host => "host",
+            Level::Rack => "rack",
+            Level::Row => "row",
+            Level::Datacenter => "datacenter",
+            Level::Root => "root",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "osd" => Some(Level::Osd),
+            "host" => Some(Level::Host),
+            "rack" => Some(Level::Rack),
+            "row" => Some(Level::Row),
+            "datacenter" => Some(Level::Datacenter),
+            "root" => Some(Level::Root),
+            _ => None,
+        }
+    }
+}
+
+/// A storage device (leaf of the hierarchy).
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: OsdId,
+    /// CRUSH weight. By Ceph convention, weight = capacity in TiB.
+    pub weight: f64,
+    pub class: DeviceClass,
+}
+
+/// An interior node (host, rack, root, ...) aggregating children.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub id: NodeId,
+    pub name: String,
+    pub level: Level,
+    /// Children: bucket ids (negative) or device ids (non-negative).
+    pub children: Vec<NodeId>,
+}
+
+/// One step of a CRUSH rule.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Start from the named root bucket, optionally restricted to a class
+    /// (implemented via class-filtered weights, equivalent to Ceph's
+    /// shadow hierarchies).
+    Take { root: String, class: Option<DeviceClass> },
+    /// Choose `num` distinct buckets of the given level, replica-style
+    /// (firstn: used for replicated pools).
+    ChooseFirstN { num: i32, level: Level },
+    /// Choose `num` distinct buckets of the given level and descend each
+    /// to one device.
+    ChooseLeafFirstN { num: i32, level: Level },
+    /// Positional variant for erasure coding: failed slots stay as holes.
+    ChooseIndep { num: i32, level: Level },
+    /// Positional chooseleaf for EC.
+    ChooseLeafIndep { num: i32, level: Level },
+    /// Append the working set to the result.
+    Emit,
+}
+
+/// A placement rule: an ordered program of steps. A rule may contain
+/// multiple take/emit sequences (this is how hybrid rules, e.g. cluster
+/// D's "primary on SSD, replicas on HDD", are expressed).
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub id: u32,
+    pub name: String,
+    pub steps: Vec<Step>,
+}
+
+impl Rule {
+    /// A standard replicated rule: `take root [class] / chooseleaf firstn
+    /// 0 type <domain> / emit`.
+    pub fn replicated(
+        id: u32,
+        name: &str,
+        root: &str,
+        class: Option<DeviceClass>,
+        failure_domain: Level,
+    ) -> Rule {
+        Rule {
+            id,
+            name: name.to_string(),
+            steps: vec![
+                Step::Take { root: root.to_string(), class },
+                Step::ChooseLeafFirstN { num: 0, level: failure_domain },
+                Step::Emit,
+            ],
+        }
+    }
+
+    /// A standard EC rule: `take root [class] / chooseleaf indep 0 type
+    /// <domain> / emit`.
+    pub fn erasure(
+        id: u32,
+        name: &str,
+        root: &str,
+        class: Option<DeviceClass>,
+        failure_domain: Level,
+    ) -> Rule {
+        Rule {
+            id,
+            name: name.to_string(),
+            steps: vec![
+                Step::Take { root: root.to_string(), class },
+                Step::ChooseLeafIndep { num: 0, level: failure_domain },
+                Step::Emit,
+            ],
+        }
+    }
+
+    /// Hybrid rule à la cluster D: first `n_first` devices from
+    /// `first_class`, remaining from `second_class` (both under `root`,
+    /// failure domain `domain`). Ceph expresses this as two take/emit
+    /// blocks in one rule.
+    pub fn hybrid(
+        id: u32,
+        name: &str,
+        root: &str,
+        first_class: DeviceClass,
+        n_first: i32,
+        second_class: DeviceClass,
+        failure_domain: Level,
+    ) -> Rule {
+        Rule {
+            id,
+            name: name.to_string(),
+            steps: vec![
+                Step::Take { root: root.to_string(), class: Some(first_class) },
+                Step::ChooseLeafFirstN { num: n_first, level: failure_domain },
+                Step::Emit,
+                Step::Take { root: root.to_string(), class: Some(second_class) },
+                Step::ChooseLeafFirstN { num: -n_first, level: failure_domain },
+                Step::Emit,
+            ],
+        }
+    }
+}
+
+/// The complete CRUSH map: hierarchy + devices + rules, with per-class
+/// weight caches computed at build time.
+#[derive(Debug, Clone)]
+pub struct CrushMap {
+    /// Devices indexed by OsdId.
+    pub devices: Vec<Device>,
+    /// Buckets by (negative) node id.
+    pub buckets: BTreeMap<NodeId, Bucket>,
+    /// Rules by rule id.
+    pub rules: BTreeMap<u32, Rule>,
+    /// name → bucket id, for `Take`.
+    pub bucket_by_name: BTreeMap<String, NodeId>,
+    /// Cached: total effective weight of each node, per class and overall.
+    /// `weight_cache[node]` = (total, per-class array indexed by
+    /// DeviceClass order in `DeviceClass::ALL`).
+    pub(crate) weight_cache: BTreeMap<NodeId, NodeWeights>,
+    /// Cached: parent of each node (for subtree membership checks).
+    pub(crate) parent: BTreeMap<NodeId, NodeId>,
+    /// Cached: per-device ancestor at each level (indexed
+    /// `[device][level_rank]`) — the balancer's failure-domain checks
+    /// hit this millions of times per plan.
+    pub(crate) device_ancestor: Vec<[Option<NodeId>; Level::COUNT]>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct NodeWeights {
+    pub total: f64,
+    pub per_class: [f64; 3],
+}
+
+impl NodeWeights {
+    pub fn for_class(&self, class: Option<DeviceClass>) -> f64 {
+        match class {
+            None => self.total,
+            Some(c) => {
+                let idx = DeviceClass::ALL.iter().position(|&x| x == c).unwrap();
+                self.per_class[idx]
+            }
+        }
+    }
+}
+
+impl CrushMap {
+    /// Effective weight of a node, optionally restricted to a class.
+    pub fn weight_of(&self, node: NodeId, class: Option<DeviceClass>) -> f64 {
+        if node >= 0 {
+            let d = &self.devices[node as usize];
+            return match class {
+                None => d.weight,
+                Some(c) if c == d.class => d.weight,
+                _ => 0.0,
+            };
+        }
+        self.weight_cache
+            .get(&node)
+            .map(|w| w.for_class(class))
+            .unwrap_or(0.0)
+    }
+
+    /// Does this node exist?
+    pub fn contains(&self, node: NodeId) -> bool {
+        if node >= 0 {
+            (node as usize) < self.devices.len()
+        } else {
+            self.buckets.contains_key(&node)
+        }
+    }
+
+    /// Node's level (devices are `Level::Osd`).
+    pub fn level_of(&self, node: NodeId) -> Option<Level> {
+        if node >= 0 {
+            if self.contains(node) {
+                Some(Level::Osd)
+            } else {
+                None
+            }
+        } else {
+            self.buckets.get(&node).map(|b| b.level)
+        }
+    }
+
+    /// Walk up to the ancestor bucket of the given level (e.g. the host
+    /// of an OSD). Returns None if no ancestor at that level. Device
+    /// lookups are O(1) via the build-time cache.
+    pub fn ancestor_at(&self, node: NodeId, level: Level) -> Option<NodeId> {
+        if node >= 0 {
+            if let Some(cached) = self.device_ancestor.get(node as usize) {
+                return cached[level.rank()];
+            }
+        }
+        self.ancestor_at_uncached(node, level)
+    }
+
+    fn ancestor_at_uncached(&self, mut node: NodeId, level: Level) -> Option<NodeId> {
+        if self.level_of(node) == Some(level) {
+            return Some(node);
+        }
+        while let Some(&p) = self.parent.get(&node) {
+            if self.level_of(p) == Some(level) {
+                return Some(p);
+            }
+            node = p;
+        }
+        None
+    }
+
+    /// Is `node` inside the subtree rooted at `root`?
+    pub fn in_subtree(&self, mut node: NodeId, root: NodeId) -> bool {
+        if node == root {
+            return true;
+        }
+        while let Some(&p) = self.parent.get(&node) {
+            if p == root {
+                return true;
+            }
+            node = p;
+        }
+        false
+    }
+
+    /// All device ids in the subtree under `node` (optionally filtered by
+    /// class).
+    pub fn devices_under(&self, node: NodeId, class: Option<DeviceClass>) -> Vec<OsdId> {
+        let mut out = Vec::new();
+        self.collect_devices(node, class, &mut out);
+        out
+    }
+
+    fn collect_devices(&self, node: NodeId, class: Option<DeviceClass>, out: &mut Vec<OsdId>) {
+        if node >= 0 {
+            let d = &self.devices[node as usize];
+            if class.is_none() || class == Some(d.class) {
+                out.push(d.id);
+            }
+            return;
+        }
+        if let Some(b) = self.buckets.get(&node) {
+            for &c in &b.children {
+                self.collect_devices(c, class, out);
+            }
+        }
+    }
+
+    /// Rule lookup by id.
+    pub fn rule(&self, id: u32) -> Option<&Rule> {
+        self.rules.get(&id)
+    }
+
+    /// The set of device classes a rule draws from (from its Take steps).
+    pub fn rule_classes(&self, rule: &Rule) -> Vec<Option<DeviceClass>> {
+        rule.steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Take { class, .. } => Some(*class),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All devices a rule could ever place on (union over its Take
+    /// steps). This is the candidate set balancers iterate over.
+    pub fn rule_devices(&self, rule: &Rule) -> Vec<OsdId> {
+        let mut out = Vec::new();
+        for step in &rule.steps {
+            if let Step::Take { root, class } = step {
+                if let Some(&node) = self.bucket_by_name.get(root) {
+                    self.collect_devices(node, *class, &mut out);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}

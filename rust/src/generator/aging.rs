@@ -1,0 +1,158 @@
+//! Cluster aging: evolve a cluster the way production does — pools grow
+//! and shrink independently, devices fail and get replaced — to produce
+//! realistically drifted states (paper §2.2: "especially when pools grow
+//! and shrink independently", the base CRUSH distribution degrades).
+//!
+//! Used by robustness tests and as an alternative initial-state source
+//! for the experiments (any seed gives a different history).
+
+use crate::cluster::{ClusterState, PgId, PoolKind};
+use crate::util::rng::Rng;
+
+/// One epoch of history.
+#[derive(Debug, Clone)]
+pub struct AgingConfig {
+    /// Number of grow/shrink epochs.
+    pub epochs: usize,
+    /// Fraction of a pool's current size it may grow per epoch (drawn
+    /// uniformly in `[0, max]`).
+    pub max_grow: f64,
+    /// Fraction it may shrink per epoch.
+    pub max_shrink: f64,
+    /// Probability per epoch that a pool is dormant (no change) — real
+    /// pools burst, they don't grow smoothly.
+    pub dormant_prob: f64,
+}
+
+impl Default for AgingConfig {
+    fn default() -> Self {
+        AgingConfig { epochs: 12, max_grow: 0.25, max_shrink: 0.10, dormant_prob: 0.35 }
+    }
+}
+
+/// Age the cluster in place. Growth/shrink hits PGs unevenly (uniform
+/// random PG choice, like hashed object placement), which is exactly
+/// what drives per-OSD drift. Never overfills: growth is skipped when it
+/// would push any touched OSD past ~95 %.
+pub fn age(state: &mut ClusterState, cfg: &AgingConfig, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let pool_ids: Vec<u32> = state
+        .pools
+        .values()
+        .filter(|p| p.kind == PoolKind::UserData)
+        .map(|p| p.id)
+        .collect();
+
+    for _epoch in 0..cfg.epochs {
+        for &pool_id in &pool_ids {
+            if rng.chance(cfg.dormant_prob) {
+                continue;
+            }
+            let pool = state.pools[&pool_id].clone();
+            let pgs: Vec<PgId> =
+                (0..pool.pg_count).map(|i| PgId::new(pool_id, i)).collect();
+            let grow = rng.chance(0.6);
+            // per-epoch volume relative to the pool's current mean shard
+            let mean_shard: f64 = {
+                let (sum, n) = pgs
+                    .iter()
+                    .filter_map(|&id| state.pg(id))
+                    .fold((0u64, 0u64), |(s, n), pg| (s + pg.shard_bytes, n + 1));
+                if n == 0 {
+                    continue;
+                }
+                sum as f64 / n as f64
+            };
+            let frac = if grow {
+                rng.range_f64(0.0, cfg.max_grow)
+            } else {
+                rng.range_f64(0.0, cfg.max_shrink)
+            };
+            // hit a random third of the PGs
+            let hits = (pgs.len() / 3).max(1);
+            for _ in 0..hits {
+                let pg_id = *rng.choose(&pgs).unwrap();
+                let delta = (mean_shard * frac) as u64;
+                if delta == 0 {
+                    continue;
+                }
+                if grow {
+                    // don't overfill any holder
+                    let ok = state.pg(pg_id).map_or(false, |pg| {
+                        pg.devices().all(|o| {
+                            state.osd_used(o) + delta
+                                < (state.osd_size(o) as f64 * 0.95) as u64
+                        })
+                    });
+                    if ok {
+                        let _ = state.grow_pg(pg_id, delta);
+                    }
+                } else {
+                    let _ = shrink_pg(state, pg_id, delta);
+                }
+            }
+        }
+    }
+}
+
+/// Shrink helper (deletion of objects): reduce a PG's shard size,
+/// clamped at zero.
+pub fn shrink_pg(state: &mut ClusterState, pg_id: PgId, bytes: u64) -> Result<(), String> {
+    let current = state.pg(pg_id).ok_or("unknown pg")?.shard_bytes;
+    let delta = bytes.min(current);
+    if delta == 0 {
+        return Ok(());
+    }
+    state.shrink_pg_by(pg_id, delta).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::{run_to_convergence, Equilibrium};
+    use crate::generator::clusters;
+
+    #[test]
+    fn aging_increases_imbalance() {
+        let mut s = clusters::demo(41);
+        // start from a balanced cluster so drift is measurable
+        let mut bal = Equilibrium::default();
+        run_to_convergence(&mut bal, &mut s, 10_000);
+        let before = s.utilization_variance();
+        age(&mut s, &AgingConfig::default(), 7);
+        let after = s.utilization_variance();
+        assert!(after > before, "aging must create drift: {before:.3e} -> {after:.3e}");
+        assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn aging_never_overfills() {
+        let mut s = clusters::demo(43);
+        age(&mut s, &AgingConfig { epochs: 40, max_grow: 0.5, ..Default::default() }, 11);
+        for o in 0..s.osd_count() as u32 {
+            assert!(s.utilization(o) <= 1.0, "osd.{o} overfilled");
+        }
+        assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn balancer_recovers_aged_cluster() {
+        let mut s = clusters::demo(47);
+        age(&mut s, &AgingConfig::default(), 13);
+        let drifted = s.utilization_variance();
+        let mut bal = Equilibrium::default();
+        let moves = run_to_convergence(&mut bal, &mut s, 10_000);
+        assert!(!moves.is_empty());
+        assert!(s.utilization_variance() < drifted);
+        assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn aging_is_deterministic() {
+        let mut a = clusters::demo(51);
+        let mut b = clusters::demo(51);
+        age(&mut a, &AgingConfig::default(), 3);
+        age(&mut b, &AgingConfig::default(), 3);
+        assert_eq!(a.total_used(), b.total_used());
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic cluster generation: generic builders plus the paper's six
+//! evaluation clusters.
+
+pub mod aging;
+pub mod clusters;
+pub mod synth;
+
+pub use aging::{age, AgingConfig};
+pub use clusters::{by_name, demo, PaperCluster, ALL};
+pub use synth::{build_cluster, random_cluster, DeviceSpec, PoolRedundancy, PoolSpec};

@@ -1,0 +1,286 @@
+//! Generic synthetic-cluster construction.
+//!
+//! The paper evaluates on six production clusters whose *shapes* (device
+//! counts, classes, total capacities, pool/PG layouts, data volumes) are
+//! published in §3.2 but whose exact states are not. These builders
+//! reproduce the shapes: heterogeneous device sizes drawn from realistic
+//! drive generations, CRUSH-placed PGs, per-pool data volumes with
+//! per-PG jitter — seeded, so every experiment is reproducible.
+
+use crate::cluster::{ClusterState, Pool, PoolKind};
+use crate::crush::{CrushBuilder, CrushMap, DeviceClass, Level, NodeId, Rule};
+use crate::util::rng::Rng;
+use crate::util::units::GIB;
+
+/// A group of same-class devices to add to the hierarchy.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub class: DeviceClass,
+    /// Number of devices.
+    pub count: usize,
+    /// Sum of all device capacities (bytes). Individual devices draw
+    /// their share from `variety` and are scaled so the total matches.
+    pub total_bytes: u64,
+    /// Relative size mix, e.g. `[1.0, 1.0, 2.0]` = a third of drives are
+    /// double-capacity (mixed drive generations — the heterogeneity that
+    /// motivates size-aware balancing).
+    pub variety: Vec<f64>,
+    /// Devices per host.
+    pub per_host: usize,
+}
+
+/// A pool to create.
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    pub name: String,
+    pub pg_count: u32,
+    /// Replication factor (`Ok(size)`) or EC (`Err((k, m))`) — see
+    /// [`PoolSpec::replicated`]/[`PoolSpec::erasure`].
+    pub redundancy: PoolRedundancy,
+    /// Which rule this pool uses (index into the rules built by the
+    /// cluster spec).
+    pub rule_id: u32,
+    pub kind: PoolKind,
+    /// User data stored in this pool.
+    pub user_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum PoolRedundancy {
+    Replicated(usize),
+    Erasure(usize, usize),
+}
+
+impl PoolSpec {
+    pub fn replicated(name: &str, pg_count: u32, size: usize, rule_id: u32, user_bytes: u64) -> Self {
+        PoolSpec {
+            name: name.to_string(),
+            pg_count,
+            redundancy: PoolRedundancy::Replicated(size),
+            rule_id,
+            kind: PoolKind::UserData,
+            user_bytes,
+        }
+    }
+
+    pub fn erasure(name: &str, pg_count: u32, k: usize, m: usize, rule_id: u32, user_bytes: u64) -> Self {
+        PoolSpec {
+            name: name.to_string(),
+            pg_count,
+            redundancy: PoolRedundancy::Erasure(k, m),
+            rule_id,
+            kind: PoolKind::UserData,
+            user_bytes,
+        }
+    }
+
+    pub fn metadata(mut self) -> Self {
+        self.kind = PoolKind::Metadata;
+        self
+    }
+}
+
+/// Draw `count` device sizes summing (approximately, GiB-rounded) to
+/// `total`, mixing relative capacities from `variety`.
+pub fn device_sizes(rng: &mut Rng, count: usize, total: u64, variety: &[f64]) -> Vec<u64> {
+    assert!(count > 0);
+    let weights: Vec<f64> = (0..count)
+        .map(|_| *rng.choose(variety).unwrap_or(&1.0))
+        .collect();
+    let wsum: f64 = weights.iter().sum();
+    weights
+        .iter()
+        .map(|w| {
+            let bytes = total as f64 * w / wsum;
+            // round to GiB like real drive sizes
+            ((bytes / GIB as f64).round() as u64).max(1) * GIB
+        })
+        .collect()
+}
+
+/// Build the CRUSH hierarchy for the given device groups: one root
+/// ("default"), hosts of `per_host` devices each. Returns the map builder
+/// (caller adds rules) and the root id.
+pub fn build_hierarchy(rng: &mut Rng, specs: &[DeviceSpec]) -> (CrushBuilder, NodeId) {
+    let mut b = CrushBuilder::new();
+    let root = b.add_root("default");
+    let mut host_no = 0;
+    for spec in specs {
+        let sizes = device_sizes(rng, spec.count, spec.total_bytes, &spec.variety);
+        let mut placed = 0;
+        while placed < spec.count {
+            let host = b.add_bucket(&format!("host{host_no:03}"), Level::Host, root);
+            host_no += 1;
+            for _ in 0..spec.per_host.min(spec.count - placed) {
+                b.add_osd_bytes(host, sizes[placed], spec.class);
+                placed += 1;
+            }
+        }
+    }
+    (b, root)
+}
+
+/// Assemble a full cluster: hierarchy + rules + pools, with per-PG shard
+/// sizes drawn as `pool_share × lognormal jitter` ("PG shard sizes in a
+/// pool are almost equal", §2.2 — jitter sigma 0.1).
+pub fn build_cluster(
+    seed: u64,
+    devices: &[DeviceSpec],
+    rules: Vec<Rule>,
+    pools: Vec<PoolSpec>,
+) -> ClusterState {
+    let mut rng = Rng::new(seed);
+    let (mut builder, _root) = build_hierarchy(&mut rng, devices);
+    for rule in rules {
+        builder.add_rule(rule);
+    }
+    let crush: CrushMap = builder.build().expect("generated cluster must validate");
+
+    let mut pool_objs = Vec::new();
+    for (i, spec) in pools.iter().enumerate() {
+        let id = (i + 1) as u32;
+        let mut p = match spec.redundancy {
+            PoolRedundancy::Replicated(size) => {
+                Pool::replicated(id, &spec.name, size, spec.pg_count, spec.rule_id)
+            }
+            PoolRedundancy::Erasure(k, m) => {
+                Pool::erasure(id, &spec.name, k, m, spec.pg_count, spec.rule_id)
+            }
+        };
+        p.kind = spec.kind;
+        pool_objs.push(p);
+    }
+
+    // per-PG shard sizes: pool user bytes spread over PGs with jitter
+    let mut size_rng = rng.fork();
+    let spec_by_pool: Vec<&PoolSpec> = pools.iter().collect();
+    ClusterState::build(crush, pool_objs, move |pool, _idx| {
+        let spec = spec_by_pool[(pool.id - 1) as usize];
+        let per_pg_user = spec.user_bytes as f64 / pool.pg_count as f64;
+        let per_shard = per_pg_user * pool.redundancy.shard_fraction();
+        let jitter = size_rng.lognormal(0.0, 0.1);
+        (per_shard * jitter).round() as u64
+    })
+}
+
+/// A fully random small-to-mid cluster (4–11 hosts, 1–3 pools, mixed
+/// replication/EC, heterogeneous drive sizes). Used by property tests
+/// and the robustness sweep (the paper's §5 limitation: "more diverse
+/// clusters are necessary to test the balancer's robustness").
+pub fn random_cluster(rng: &mut Rng) -> ClusterState {
+    use crate::util::units::TIB;
+    let hosts = 4 + rng.index(8); // 4..11
+    let per_host = 1 + rng.index(3);
+    let count = hosts * per_host;
+    let devices = vec![DeviceSpec {
+        class: crate::crush::DeviceClass::Hdd,
+        count,
+        total_bytes: (count as u64) * (2 + rng.below(6)) * TIB,
+        variety: vec![1.0, 1.5, 2.0],
+        per_host,
+    }];
+    let mut rules = vec![Rule::replicated(0, "r", "default", None, Level::Host)];
+    let ec_possible = hosts >= 6;
+    if ec_possible {
+        rules.push(Rule::erasure(1, "ec", "default", None, Level::Host));
+    }
+    let n_pools = 1 + rng.index(3);
+    let mut pools = Vec::new();
+    for p in 0..n_pools {
+        let pg = 16 << rng.index(3); // 16/32/64
+        let user = (1 + rng.below(4)) * TIB / 2;
+        if ec_possible && rng.chance(0.3) {
+            pools.push(PoolSpec::erasure(&format!("p{p}"), pg, 4, 2, 1, user));
+        } else {
+            pools.push(PoolSpec::replicated(&format!("p{p}"), pg, 3, 0, user));
+        }
+    }
+    build_cluster(rng.next_u64(), &devices, rules, pools)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::TIB;
+
+    #[test]
+    fn device_sizes_hit_total_approximately() {
+        let mut rng = Rng::new(3);
+        let total = 68 * TIB;
+        let sizes = device_sizes(&mut rng, 14, total, &[1.0, 1.0, 1.5]);
+        assert_eq!(sizes.len(), 14);
+        let sum: u64 = sizes.iter().sum();
+        let err = (sum as f64 - total as f64).abs() / total as f64;
+        assert!(err < 0.01, "total off by {err}");
+        // heterogeneous: not all equal
+        assert!(sizes.iter().any(|&s| s != sizes[0]));
+    }
+
+    #[test]
+    fn build_cluster_is_deterministic() {
+        let devices = [DeviceSpec {
+            class: DeviceClass::Hdd,
+            count: 8,
+            total_bytes: 32 * TIB,
+            variety: vec![1.0, 2.0],
+            per_host: 2,
+        }];
+        let rules = || vec![Rule::replicated(0, "r", "default", None, Level::Host)];
+        let pools =
+            || vec![PoolSpec::replicated("p", 64, 3, 0, 4 * TIB)];
+        let a = build_cluster(7, &devices, rules(), pools());
+        let b = build_cluster(7, &devices, rules(), pools());
+        assert_eq!(a.osd_count(), b.osd_count());
+        for o in 0..a.osd_count() as u32 {
+            assert_eq!(a.osd_size(o), b.osd_size(o));
+            assert_eq!(a.osd_used(o), b.osd_used(o));
+        }
+        let c = build_cluster(8, &devices, rules(), pools());
+        let differs = (0..a.osd_count() as u32).any(|o| a.osd_used(o) != c.osd_used(o));
+        assert!(differs, "different seeds give different clusters");
+    }
+
+    #[test]
+    fn stored_bytes_match_spec_roughly() {
+        let devices = [DeviceSpec {
+            class: DeviceClass::Hdd,
+            count: 10,
+            total_bytes: 40 * TIB,
+            variety: vec![1.0],
+            per_host: 2,
+        }];
+        let user = 4 * TIB;
+        let state = build_cluster(
+            9,
+            &devices,
+            vec![Rule::replicated(0, "r", "default", None, Level::Host)],
+            vec![PoolSpec::replicated("p", 128, 3, 0, user)],
+        );
+        // raw = 3 × user (replicated), within jitter tolerance
+        let raw = state.total_used() as f64;
+        let expect = 3.0 * user as f64;
+        assert!((raw - expect).abs() / expect < 0.05, "raw {raw} vs {expect}");
+        assert!(state.verify().is_empty());
+    }
+
+    #[test]
+    fn erasure_pool_overhead_is_correct() {
+        let devices = [DeviceSpec {
+            class: DeviceClass::Hdd,
+            count: 12,
+            total_bytes: 48 * TIB,
+            variety: vec![1.0],
+            per_host: 1,
+        }];
+        let user = 8 * TIB;
+        let state = build_cluster(
+            11,
+            &devices,
+            vec![Rule::erasure(0, "ec", "default", None, Level::Host)],
+            vec![PoolSpec::erasure("e", 64, 4, 2, 0, user)],
+        );
+        let raw = state.total_used() as f64;
+        let expect = 1.5 * user as f64; // (4+2)/4
+        assert!((raw - expect).abs() / expect < 0.05, "raw {raw} vs {expect}");
+    }
+}

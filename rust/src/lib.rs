@@ -1,0 +1,23 @@
+//! # Equilibrium
+//!
+//! A production-grade reproduction of *"Equilibrium: Optimization of Ceph
+//! Cluster Storage by Size-Aware Shard Balancing"* (Jelten et al., 2023):
+//! a size-aware shard balancer, the Ceph placement substrate it runs
+//! against (CRUSH, pools, placement groups, upmap), the `mgr balancer`
+//! baseline it is compared with, a cluster simulator, and the full
+//! evaluation harness reproducing the paper's tables and figures.
+//!
+//! Architecture (three layers, python never at runtime):
+//! * `crush`, `cluster`, `balancer`, `simulator`, `coordinator` — Layer 3,
+//!   the Rust system.
+//! * `runtime` — loads AOT-compiled JAX/Pallas scoring kernels (HLO text →
+//!   PJRT) produced by `python/compile/` at build time.
+pub mod balancer;
+pub mod cluster;
+pub mod coordinator;
+pub mod crush;
+pub mod generator;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

@@ -1,0 +1,377 @@
+//! `equilibrium` — the command-line entry point.
+//!
+//! Subcommands:
+//!
+//! * `generate`  — emit a synthetic cluster state dump (paper clusters A–F
+//!   or the demo cluster)
+//! * `balance`   — plan movements for a dumped cluster state
+//! * `simulate`  — run both balancers from the same state and compare
+//! * `report`    — regenerate the paper's tables/figures (table1, fig4,
+//!   fig5, fig6, ablate-k, ablate-count)
+//! * `daemon`    — run the operational loop (writes → plan → throttled
+//!   execution)
+//! * `runtime-info` — show PJRT artifact status
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use equilibrium::balancer::{Balancer, EquilibriumConfig, MgrBalancer};
+use equilibrium::cluster::dump;
+use equilibrium::coordinator::{run_daemon, DaemonConfig, ExecutorConfig};
+use equilibrium::generator::clusters;
+use equilibrium::report::{self, Scoring};
+use equilibrium::runtime::Runtime;
+use equilibrium::simulator::{simulate, SimOptions};
+use equilibrium::util::cli::Cli;
+use equilibrium::util::units::{fmt_bytes_f, fmt_duration, to_tib_f, GIB};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(rest),
+        "balance" => cmd_balance(rest),
+        "simulate" => cmd_simulate(rest),
+        "report" => cmd_report(rest),
+        "daemon" => cmd_daemon(rest),
+        "df" => cmd_df(rest),
+        "crush" => cmd_crush(rest),
+        "runtime-info" => cmd_runtime_info(),
+        "--help" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand '{other}'\n\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "equilibrium — size-aware shard balancing for Ceph-like clusters\n\n\
+     Subcommands:\n\
+     \x20 generate      --cluster <a..f|demo> [--seed N] [--out FILE]\n\
+     \x20 balance       --state FILE [--balancer equilibrium|mgr] [--scoring native|xla]\n\
+     \x20                [--max-moves N] [--k N] [--out FILE]\n\
+     \x20 simulate      --cluster <a..f|demo> [--seed N] [--scoring S] [--max-moves N]\n\
+     \x20 report        <table1|fig4|fig5|fig6|ablate-k|ablate-count> [--clusters a,b,..]\n\
+     \x20                [--scoring S] [--seed N] [--out-dir DIR]\n\
+     \x20 daemon        --cluster <a..f|demo> [--rounds N] [--write-gib X] [--moves-per-round N]\n\
+     \x20 df            --cluster <a..f|demo> | --state FILE   (ceph-df-style report)\n\
+     \x20 crush         --cluster <a..f|demo> | --state FILE [--tree]  (decompile CRUSH map)\n\
+     \x20 runtime-info\n"
+        .to_string()
+}
+
+fn scoring_from(args: &equilibrium::util::cli::Args) -> anyhow::Result<Scoring> {
+    match args.get_or("scoring", "native") {
+        "native" => Ok(Scoring::Native),
+        "xla" => Ok(Scoring::Xla),
+        other => Err(anyhow::anyhow!("unknown scoring backend '{other}' (native|xla)")),
+    }
+}
+
+fn load_cluster(name: &str, seed: u64) -> anyhow::Result<equilibrium::cluster::ClusterState> {
+    if name == "demo" {
+        return Ok(clusters::demo(seed));
+    }
+    clusters::by_name(name, seed)
+        .map(|c| c.state)
+        .ok_or_else(|| anyhow::anyhow!("unknown cluster '{name}' (a..f or demo)"))
+}
+
+fn cmd_generate(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("equilibrium generate", "emit a synthetic cluster dump")
+        .opt_default("cluster", "NAME", "demo", "cluster to generate (a..f|demo)")
+        .opt_default("seed", "N", "0", "generator seed")
+        .opt("out", "FILE", "output path (default: stdout)");
+    let a = cli.parse(argv.iter())?;
+    let seed = a.get_u64("seed")?.unwrap_or(0);
+    let state = load_cluster(a.get_or("cluster", "demo"), seed)?;
+    let text = dump::dump(&state);
+    match a.get("out") {
+        Some(path) => {
+            std::fs::write(path, text)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_balance(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("equilibrium balance", "plan movements for a cluster state")
+        .opt("state", "FILE", "cluster dump (from `generate`)")
+        .opt_default("balancer", "NAME", "equilibrium", "equilibrium|mgr")
+        .opt_default("scoring", "BACKEND", "native", "native|xla (equilibrium only)")
+        .opt_default("max-moves", "N", "10000", "movement cap")
+        .opt_default("k", "N", "25", "equilibrium: sources to try")
+        .opt("out", "FILE", "write the resulting state dump here")
+        .opt("upmap-script", "FILE", "write `ceph osd pg-upmap-items` commands here")
+        .flag("quiet", "suppress per-move output");
+    let a = cli.parse(argv.iter())?;
+    let path = a
+        .get("state")
+        .ok_or_else(|| anyhow::anyhow!("--state is required"))?;
+    let mut state = dump::load(&std::fs::read_to_string(path)?)?;
+    let initial = state.clone();
+
+    let mut balancer: Box<dyn Balancer> = match a.get_or("balancer", "equilibrium") {
+        "equilibrium" => report::make_equilibrium(
+            scoring_from(&a)?,
+            EquilibriumConfig { k: a.get_u64("k")?.unwrap_or(25) as usize, ..Default::default() },
+        ),
+        "mgr" => Box::new(MgrBalancer::default()),
+        other => return Err(anyhow::anyhow!("unknown balancer '{other}'")),
+    };
+
+    let opts = SimOptions {
+        max_moves: a.get_u64("max-moves")?.unwrap_or(10_000) as usize,
+        sample_every: usize::MAX, // only endpoints needed
+    };
+    let before_avail = state.total_max_avail(false);
+    let before_var = state.utilization_variance();
+    let res = simulate(balancer.as_mut(), &mut state, &opts);
+    if !a.flag("quiet") {
+        for m in &res.movements {
+            println!("{m}");
+        }
+    }
+    eprintln!(
+        "{} moves, {} moved, avail {} -> {}, variance {:.3e} -> {:.3e}, calc {}",
+        res.movements.len(),
+        fmt_bytes_f(res.total_moved_bytes() as f64),
+        fmt_bytes_f(before_avail),
+        fmt_bytes_f(state.total_max_avail(false)),
+        before_var,
+        state.utilization_variance(),
+        fmt_duration(res.total_calc_seconds),
+    );
+    if let Some(out) = a.get("out") {
+        std::fs::write(out, dump::dump(&state))?;
+        eprintln!("wrote {out}");
+    }
+    if let Some(path) = a.get("upmap-script") {
+        let script =
+            equilibrium::balancer::upmap_script::render_plan(&initial, &res.movements).join("\n");
+        std::fs::write(path, script + "\n")?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_df(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("equilibrium df", "ceph-df-style capacity report")
+        .opt("cluster", "NAME", "generate and report (a..f|demo)")
+        .opt("state", "FILE", "report a dumped state")
+        .opt_default("seed", "N", "0", "generator seed")
+        .opt_default("osd-rows", "N", "20", "max OSD rows shown");
+    let a = cli.parse(argv.iter())?;
+    let state = match (a.get("cluster"), a.get("state")) {
+        (Some(name), None) => load_cluster(name, a.get_u64("seed")?.unwrap_or(0))?,
+        (None, Some(path)) => dump::load(&std::fs::read_to_string(path)?)?,
+        _ => return Err(anyhow::anyhow!("exactly one of --cluster or --state is required")),
+    };
+    let report = equilibrium::cluster::health::df(&state);
+    print!(
+        "{}",
+        equilibrium::cluster::health::render(&report, a.get_u64("osd-rows")?.unwrap_or(20) as usize)
+    );
+    Ok(())
+}
+
+fn cmd_crush(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("equilibrium crush", "decompile the CRUSH map")
+        .opt("cluster", "NAME", "generate and decompile (a..f|demo)")
+        .opt("state", "FILE", "decompile a dumped state's map")
+        .opt_default("seed", "N", "0", "generator seed")
+        .flag("tree", "print the hierarchy tree instead of crushtool syntax");
+    let a = cli.parse(argv.iter())?;
+    let state = match (a.get("cluster"), a.get("state")) {
+        (Some(name), None) => load_cluster(name, a.get_u64("seed")?.unwrap_or(0))?,
+        (None, Some(path)) => dump::load(&std::fs::read_to_string(path)?)?,
+        _ => return Err(anyhow::anyhow!("exactly one of --cluster or --state is required")),
+    };
+    if a.flag("tree") {
+        print!("{}", equilibrium::crush::text::tree(&state.crush));
+    } else {
+        print!("{}", equilibrium::crush::text::decompile(&state.crush));
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("equilibrium simulate", "compare both balancers on a cluster")
+        .opt_default("cluster", "NAME", "demo", "cluster (a..f|demo)")
+        .opt_default("seed", "N", "0", "generator seed")
+        .opt_default("scoring", "BACKEND", "native", "native|xla")
+        .opt_default("max-moves", "N", "10000", "movement cap");
+    let a = cli.parse(argv.iter())?;
+    let seed = a.get_u64("seed")?.unwrap_or(0);
+    let name = a.get_or("cluster", "demo");
+    let initial = load_cluster(name, seed)?;
+    let opts = SimOptions {
+        max_moves: a.get_u64("max-moves")?.unwrap_or(10_000) as usize,
+        sample_every: usize::MAX,
+    };
+    let scoring = scoring_from(&a)?;
+    let (mgr, eq) = equilibrium::simulator::compare(
+        &initial,
+        || Box::new(MgrBalancer::default()),
+        || report::make_equilibrium(scoring, EquilibriumConfig::default()),
+        &opts,
+    );
+    println!("cluster {name}: initial variance {:.3e}", initial.utilization_variance());
+    for res in [&mgr, &eq] {
+        let last = res.series.last().unwrap();
+        println!(
+            "  {:<12} moves {:>6}  moved {:>12}  gained {:>10}  final variance {:.3e}  calc {}",
+            res.balancer,
+            res.movements.len(),
+            fmt_bytes_f(res.total_moved_bytes() as f64),
+            fmt_bytes_f(res.series.total_gained(None)),
+            last.variance,
+            fmt_duration(res.total_calc_seconds),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
+    let Some((which, rest)) = argv.split_first() else {
+        return Err(anyhow::anyhow!(
+            "report requires an artifact: table1|fig4|fig5|fig6|ablate-k|ablate-count"
+        ));
+    };
+    let cli = Cli::new("equilibrium report", "regenerate paper tables/figures")
+        .opt_default("clusters", "LIST", "a,b,c,d,e,f", "comma-separated clusters (table1)")
+        .opt_default("cluster", "NAME", "a", "cluster (ablations)")
+        .opt_default("scoring", "BACKEND", "native", "native|xla")
+        .opt_default("seed", "N", "0", "generator seed")
+        .opt_default("out-dir", "DIR", "target/figures", "CSV output directory")
+        .opt_default("max-moves", "N", "10000", "movement cap");
+    let a = cli.parse(rest.iter())?;
+    let seed = a.get_u64("seed")?.unwrap_or(0);
+    let scoring = scoring_from(&a)?;
+    let out_dir = PathBuf::from(a.get_or("out-dir", "target/figures"));
+    let opts = SimOptions {
+        max_moves: a.get_u64("max-moves")?.unwrap_or(10_000) as usize,
+        sample_every: usize::MAX,
+    };
+
+    match which.as_str() {
+        "table1" => {
+            let names: Vec<&str> = a.get_or("clusters", "a,b,c,d,e,f").split(',').collect();
+            let (table, _) = report::table1(&names, seed, scoring, &opts);
+            println!("Table 1 — generated movement amounts and gained pool space");
+            println!("{}", table.render());
+        }
+        "fig4" => {
+            let (mgr, eq) = report::figure4(&out_dir, seed, scoring)?;
+            println!(
+                "fig4 (cluster A): mgr {} moves, equilibrium {} moves; CSVs in {}",
+                mgr.movements.len(),
+                eq.movements.len(),
+                out_dir.display()
+            );
+        }
+        "fig5" => {
+            let (mgr, eq) = report::figure5(&out_dir, seed, scoring)?;
+            println!(
+                "fig5 (cluster B): mgr {} moves, equilibrium {} moves; CSVs in {}",
+                mgr.movements.len(),
+                eq.movements.len(),
+                out_dir.display()
+            );
+        }
+        "fig6" => {
+            report::figure6(&out_dir, seed, scoring)?;
+            println!("fig6 CSVs written to {}", out_dir.display());
+        }
+        "ablate-k" => {
+            let t = report::ablate_k(a.get_or("cluster", "a"), seed, &[1, 5, 25, 100], scoring);
+            println!("k ablation on cluster {}:", a.get_or("cluster", "a"));
+            println!("{}", t.render());
+        }
+        "ablate-count" => {
+            let t = report::ablate_count_criterion(a.get_or("cluster", "a"), seed, scoring);
+            println!("PG-count criterion ablation on cluster {}:", a.get_or("cluster", "a"));
+            println!("{}", t.render());
+        }
+        other => return Err(anyhow::anyhow!("unknown report artifact '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_daemon(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("equilibrium daemon", "operational loop with throttled execution")
+        .opt_default("cluster", "NAME", "demo", "cluster (a..f|demo)")
+        .opt_default("seed", "N", "0", "generator seed")
+        .opt_default("rounds", "N", "10", "write/plan/execute rounds")
+        .opt_default("moves-per-round", "N", "50", "movement budget per round")
+        .opt_default("write-gib", "X", "0", "client writes per round (GiB)")
+        .opt_default("max-backfills", "N", "1", "concurrent transfers per OSD")
+        .opt("target-round-seconds", "T", "adaptive movement budget targeting T s/round")
+        .opt_default("scoring", "BACKEND", "native", "native|xla");
+    let a = cli.parse(argv.iter())?;
+    let seed = a.get_u64("seed")?.unwrap_or(0);
+    let mut state = load_cluster(a.get_or("cluster", "demo"), seed)?;
+    let mut balancer = report::make_equilibrium(scoring_from(&a)?, EquilibriumConfig::default());
+    let cfg = DaemonConfig {
+        rounds: a.get_u64("rounds")?.unwrap_or(10) as usize,
+        moves_per_round: a.get_u64("moves-per-round")?.unwrap_or(50) as usize,
+        write_bytes_per_round: a.get_u64("write-gib")?.unwrap_or(0) * GIB,
+        workload: equilibrium::simulator::WorkloadModel::Uniform,
+        target_round_seconds: a.get_f64("target-round-seconds")?,
+        executor: ExecutorConfig {
+            max_backfills: a.get_u64("max-backfills")?.unwrap_or(1) as usize,
+            ..Default::default()
+        },
+        seed: seed ^ 0xDAEE,
+    };
+    let report = run_daemon(&mut state, balancer.as_mut(), &cfg);
+    print!("{}", report.log.render());
+    println!("\nper-round summary:");
+    for r in &report.rounds {
+        println!(
+            "  round {:>2}: wrote {:>10}, {} moves ({:>10}), exec {:>10}, variance {:.3e}, avail {:.1} TiB",
+            r.round,
+            fmt_bytes_f(r.written_user_bytes as f64),
+            r.planned_moves,
+            fmt_bytes_f(r.moved_bytes as f64),
+            fmt_duration(r.makespan),
+            r.variance_after,
+            to_tib_f(r.total_avail_after),
+        );
+    }
+    println!("total virtual time: {}", fmt_duration(report.elapsed));
+    Ok(())
+}
+
+fn cmd_runtime_info() -> anyhow::Result<()> {
+    let dir = equilibrium::runtime::default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    if !Runtime::artifacts_present(&dir) {
+        println!("no artifacts found — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::load(&dir)?;
+    println!("PJRT CPU client OK; compiled buckets: {:?}", rt.buckets());
+    let used = vec![900.0, 100.0, 500.0, 500.0];
+    let size = vec![1000.0; 4];
+    let mask = vec![true; 4];
+    let (var_before, var_after) = rt.score_padded(&used, &size, &mask, 0, 200.0)?;
+    println!(
+        "smoke score: var_before={var_before:.6}, best candidate = osd.1 ({:.6})",
+        var_after[1]
+    );
+    Ok(())
+}

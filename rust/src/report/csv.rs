@@ -1,0 +1,59 @@
+//! CSV output helpers for the figure emitters.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Write `content` (already CSV-formatted) to `path`, creating parent
+/// directories as needed.
+pub fn write_csv_file(path: &Path, content: &str) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, content)?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Render rows into CSV text (quoting fields containing commas/quotes).
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let quote = |s: &str| -> String {
+        if s.contains(',') || s.contains('"') || s.contains('\n') {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoting_rules() {
+        let csv = to_csv(
+            &["a", "b,c"],
+            &[vec!["plain".into(), "has \"quote\"".into()]],
+        );
+        assert_eq!(csv, "a,\"b,c\"\nplain,\"has \"\"quote\"\"\"\n");
+    }
+
+    #[test]
+    fn writes_file_with_parents() {
+        let dir = std::env::temp_dir().join("equilibrium_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub").join("x.csv");
+        write_csv_file(&path, "a,b\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a,b\n1,2\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,12 @@
+//! Evaluation harness: regenerates the paper's tables and figures, plus
+//! ablations, as text tables and CSV series.
+
+pub mod csv;
+pub mod figures;
+pub mod table;
+
+pub use figures::{
+    ablate_count_criterion, ablate_k, figure4, figure5, figure6, make_equilibrium, run_cluster,
+    table1, Scoring, Table1Row,
+};
+pub use table::Table;

@@ -1,0 +1,94 @@
+//! Plain-text table rendering for the report harness (the same rows the
+//! paper's tables print).
+
+/// A simple aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Optional bold markers per cell (rendered as `*value*`), mirroring
+    /// Table 1's "better values are highlighted".
+    pub emphasis: Vec<Vec<bool>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            emphasis: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        self.emphasis.push(vec![false; cells.len()]);
+        self.rows.push(cells);
+    }
+
+    pub fn push_row_emphasized(&mut self, cells: Vec<String>, emphasis: Vec<bool>) {
+        assert_eq!(cells.len(), emphasis.len());
+        self.emphasis.push(emphasis);
+        self.rows.push(cells);
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let cell = |r: usize, c: usize| -> String {
+            let raw = self.rows[r].get(c).cloned().unwrap_or_default();
+            if self.emphasis[r].get(c).copied().unwrap_or(false) {
+                format!("*{raw}*")
+            } else {
+                raw
+            }
+        };
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in 0..self.rows.len() {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(cell(r, c).len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for (i, w) in widths.iter().enumerate() {
+                out.push_str(if i == 0 { "+" } else { "+" });
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        sep(&mut out);
+        for (i, h) in self.header.iter().enumerate() {
+            out.push_str(&format!("| {:<w$} ", h, w = widths[i]));
+        }
+        out.push_str("|\n");
+        sep(&mut out);
+        for r in 0..self.rows.len() {
+            for c in 0..ncols {
+                out.push_str(&format!("| {:>w$} ", cell(r, c), w = widths[c]));
+            }
+            out.push_str("|\n");
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new(&["Cluster", "Gained (TiB)"]);
+        t.push_row(vec!["A".into(), "23.9".into()]);
+        t.push_row_emphasized(vec!["B".into(), "925.8".into()], vec![false, true]);
+        let s = t.render();
+        assert!(s.contains("| Cluster "));
+        assert!(s.contains("*925.8*"));
+        let lines: Vec<&str> = s.lines().collect();
+        // border, header, border, 2 rows, border
+        assert_eq!(lines.len(), 6);
+        // all lines equal width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+}

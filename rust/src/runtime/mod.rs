@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT loading/execution of the AOT-compiled JAX/Pallas
+//! scoring artifacts, and the XLA-backed scoring backend.
+//!
+//! Python runs only at build time (`make artifacts`); the request path is
+//! pure Rust + the PJRT C API.
+
+pub mod pjrt;
+pub mod xla_scorer;
+
+pub use pjrt::{default_artifact_dir, Runtime, ScoreExecutable, SIZE_BUCKETS};
+pub use xla_scorer::XlaScorer;

@@ -1,0 +1,218 @@
+//! PJRT runtime: load and execute the AOT-compiled scoring artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (see `python/compile/aot.py`).
+//! Python never runs here — the artifacts are produced once at build
+//! time by `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// One compiled scoring executable for a fixed padded size.
+pub struct ScoreExecutable {
+    pub padded: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ScoreExecutable {
+    /// Load `score_moves_<padded>.hlo.txt` and compile it on `client`.
+    pub fn load(client: &xla::PjRtClient, dir: &Path, padded: usize) -> Result<ScoreExecutable> {
+        let path = dir.join(format!("score_moves_{padded}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("loading HLO text from {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(ScoreExecutable { padded, exe })
+    }
+
+    /// Execute the scoring graph. All slices must have length `padded`.
+    /// Returns `(var_before, var_after)`.
+    pub fn run(
+        &self,
+        used: &[f64],
+        size: &[f64],
+        mask: &[f64],
+        valid: &[f64],
+        src: usize,
+        shard: f64,
+    ) -> Result<(f64, Vec<f64>)> {
+        for (name, v) in [("used", used), ("size", size), ("mask", mask), ("valid", valid)] {
+            if v.len() != self.padded {
+                return Err(anyhow!(
+                    "input '{name}' has length {} but executable is padded to {}",
+                    v.len(),
+                    self.padded
+                ));
+            }
+        }
+        let params = [src as f64, shard];
+        let inputs = [
+            xla::Literal::vec1(used),
+            xla::Literal::vec1(size),
+            xla::Literal::vec1(mask),
+            xla::Literal::vec1(valid),
+            xla::Literal::vec1(&params),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True → tuple(var_before[1], var_after[N])
+        let (var_before_lit, var_after_lit) = result.to_tuple2()?;
+        let var_before = var_before_lit.to_vec::<f64>()?[0];
+        let var_after = var_after_lit.to_vec::<f64>()?;
+        Ok((var_before, var_after))
+    }
+}
+
+/// The runtime: a PJRT CPU client plus the compiled size buckets.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: Vec<ScoreExecutable>,
+}
+
+/// Default artifact directory: `$EQUILIBRIUM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("EQUILIBRIUM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// The size buckets `aot.py` compiles (keep in sync with
+/// `python/compile/model.py::SIZE_BUCKETS`).
+pub const SIZE_BUCKETS: &[usize] = &[256, 1024, 4096];
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile every artifact found in
+    /// `dir`. Fails if no bucket is available.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = Vec::new();
+        for &n in SIZE_BUCKETS {
+            if dir.join(format!("score_moves_{n}.hlo.txt")).exists() {
+                executables.push(ScoreExecutable::load(&client, dir, n)?);
+            }
+        }
+        if executables.is_empty() {
+            return Err(anyhow!(
+                "no score_moves_*.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        executables.sort_by_key(|e| e.padded);
+        Ok(Runtime { client, executables })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&default_artifact_dir())
+    }
+
+    /// Are artifacts available without constructing a client?
+    pub fn artifacts_present(dir: &Path) -> bool {
+        SIZE_BUCKETS
+            .iter()
+            .any(|n| dir.join(format!("score_moves_{n}.hlo.txt")).exists())
+    }
+
+    /// The executable for the smallest bucket ≥ `n`.
+    pub fn bucket_for(&self, n: usize) -> Result<&ScoreExecutable> {
+        self.executables
+            .iter()
+            .find(|e| e.padded >= n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "cluster has {n} OSDs but largest compiled bucket is {}",
+                    self.executables.last().map(|e| e.padded).unwrap_or(0)
+                )
+            })
+    }
+
+    /// Available bucket sizes (ascending).
+    pub fn buckets(&self) -> Vec<usize> {
+        self.executables.iter().map(|e| e.padded).collect()
+    }
+
+    /// Score with automatic padding: pads `used/size/mask` to the bucket
+    /// size, marks real lanes valid, and truncates the result back to
+    /// `n = used.len()`.
+    pub fn score_padded(
+        &self,
+        used: &[f64],
+        size: &[f64],
+        mask: &[bool],
+        src: usize,
+        shard: f64,
+    ) -> Result<(f64, Vec<f64>)> {
+        let n = used.len();
+        let exe = self.bucket_for(n)?;
+        let p = exe.padded;
+        let mut pu = vec![0.0; p];
+        let mut ps = vec![0.0; p];
+        let mut pm = vec![0.0; p];
+        let mut pv = vec![0.0; p];
+        pu[..n].copy_from_slice(used);
+        ps[..n].copy_from_slice(size);
+        for i in 0..n {
+            pm[i] = if mask[i] { 1.0 } else { 0.0 };
+            pv[i] = 1.0;
+        }
+        let (var_before, mut var_after) = exe.run(&pu, &ps, &pm, &pv, src, shard)?;
+        var_after.truncate(n);
+        Ok((var_before, var_after))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn loads_and_scores() {
+        if !Runtime::artifacts_present(&artifacts()) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::load(&artifacts()).unwrap();
+        assert!(!rt.buckets().is_empty());
+        let used = vec![900.0, 100.0, 500.0, 500.0];
+        let size = vec![1000.0; 4];
+        let mask = vec![true; 4];
+        let (var_before, var_after) = rt.score_padded(&used, &size, &mask, 0, 200.0).unwrap();
+        assert!(var_before > 0.0);
+        assert!(var_after[0].is_infinite(), "source is excluded");
+        assert!(var_after[1] < var_before, "equalizing move improves variance");
+        assert!(var_after[1] < var_after[2]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        if !Runtime::artifacts_present(&artifacts()) {
+            return;
+        }
+        let rt = Runtime::load(&artifacts()).unwrap();
+        let b = rt.bucket_for(300).unwrap();
+        assert!(b.padded >= 300);
+        assert!(rt.bucket_for(1_000_000).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_lengths() {
+        if !Runtime::artifacts_present(&artifacts()) {
+            return;
+        }
+        let rt = Runtime::load(&artifacts()).unwrap();
+        let exe = rt.bucket_for(1).unwrap();
+        let bad = vec![0.0; 3];
+        assert!(exe.run(&bad, &bad, &bad, &bad, 0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! The XLA-backed [`MoveScorer`]: Equilibrium's scoring hot-spot served
+//! by the AOT-compiled JAX/Pallas kernel through PJRT.
+//!
+//! Drop-in replacement for `NativeScorer` (`--scoring xla` on the CLI);
+//! the parity test below pins both backends together, which transitively
+//! anchors the Rust implementation to the Python oracle (`ref.py` ←
+//! pytest → Pallas kernel ← aot.py/HLO → this scorer).
+
+use crate::balancer::scoring::{MoveScorer, ScoreRequest, ScoreResponse};
+
+use super::pjrt::Runtime;
+
+/// Scorer backed by the PJRT runtime. Reuses pre-allocated padding
+/// buffers across calls (the balancer calls this once per candidate
+/// shard, thousands of times per plan).
+pub struct XlaScorer {
+    rt: Runtime,
+    /// scratch, kept across calls to avoid re-allocation
+    used: Vec<f64>,
+    size: Vec<f64>,
+    mask: Vec<f64>,
+    valid: Vec<f64>,
+}
+
+impl XlaScorer {
+    pub fn new(rt: Runtime) -> XlaScorer {
+        XlaScorer { rt, used: Vec::new(), size: Vec::new(), mask: Vec::new(), valid: Vec::new() }
+    }
+
+    /// Construct from the default artifact directory.
+    pub fn load_default() -> anyhow::Result<XlaScorer> {
+        Ok(XlaScorer::new(Runtime::load_default()?))
+    }
+}
+
+impl MoveScorer for XlaScorer {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn score(&mut self, req: &ScoreRequest<'_>) -> ScoreResponse {
+        let n = req.used.len();
+        let exe = self
+            .rt
+            .bucket_for(n)
+            .expect("no artifact bucket large enough for this cluster");
+        let p = exe.padded;
+        self.used.clear();
+        self.used.extend_from_slice(req.used);
+        self.used.resize(p, 0.0);
+        self.size.clear();
+        self.size.extend_from_slice(req.size);
+        self.size.resize(p, 0.0);
+        self.mask.clear();
+        self.mask.extend(req.mask.iter().map(|&m| if m { 1.0 } else { 0.0 }));
+        self.mask.resize(p, 0.0);
+        self.valid.clear();
+        self.valid.resize(n, 1.0);
+        self.valid.resize(p, 0.0);
+
+        let (var_before, mut var_after) = exe
+            .run(&self.used, &self.size, &self.mask, &self.valid, req.src, req.shard)
+            .expect("PJRT execution failed");
+        var_after.truncate(n);
+        ScoreResponse { var_before, var_after }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::scoring::{score_naive, NativeScorer};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn scorer() -> Option<XlaScorer> {
+        let dir = PathBuf::from("artifacts");
+        if !Runtime::artifacts_present(&dir) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(XlaScorer::new(Runtime::load(&dir).unwrap()))
+    }
+
+    #[test]
+    fn xla_matches_native_backend() {
+        let Some(mut xla) = scorer() else { return };
+        let mut native = NativeScorer;
+        let mut rng = Rng::new(2024);
+        for case in 0..20 {
+            let n = 2 + rng.index(500);
+            let size: Vec<f64> = (0..n).map(|_| rng.range_f64(1e12, 2e13)).collect();
+            let used: Vec<f64> = size.iter().map(|&s| s * rng.range_f64(0.1, 0.9)).collect();
+            let src = rng.index(n);
+            let shard = used[src] * rng.range_f64(0.01, 0.5);
+            let mask: Vec<bool> = (0..n).map(|_| rng.chance(0.7)).collect();
+            let req = ScoreRequest { used: &used, size: &size, src, shard, mask: &mask };
+
+            let a = xla.score(&req);
+            let b = native.score(&req);
+            assert!(
+                (a.var_before - b.var_before).abs() <= 1e-12 + 1e-9 * b.var_before.abs(),
+                "case {case}: var_before {} vs {}",
+                a.var_before,
+                b.var_before
+            );
+            for j in 0..n {
+                let (x, y) = (a.var_after[j], b.var_after[j]);
+                if x.is_infinite() || y.is_infinite() {
+                    assert_eq!(x.is_infinite(), y.is_infinite(), "case {case} slot {j}");
+                } else {
+                    assert!(
+                        (x - y).abs() <= 1e-12 + 1e-9 * y.abs(),
+                        "case {case} slot {j}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xla_matches_naive_reference() {
+        let Some(mut xla) = scorer() else { return };
+        let used = vec![9e12, 5e11, 5e12, 5e12, 5e12];
+        let size = vec![1e13, 1e12, 1e13, 1e13, 1e13];
+        let mask = vec![true; 5];
+        let req = ScoreRequest { used: &used, size: &size, src: 0, shard: 1e11, mask: &mask };
+        let a = xla.score(&req);
+        let b = score_naive(&req);
+        for j in 0..5 {
+            let (x, y) = (a.var_after[j], b.var_after[j]);
+            if !x.is_infinite() {
+                assert!((x - y).abs() < 1e-9 * y.abs() + 1e-15, "slot {j}: {x} vs {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Drive a balancer against a simulated cluster and record the paper's
+//! measurements (§3.2: "their effects were applied in a simulated Ceph
+//! cluster in order to measure the movement amount, to predict the
+//! resulting free space, and to track OSD utilizations and their
+//! variance").
+
+use std::time::Instant;
+
+use crate::balancer::Balancer;
+use crate::cluster::{ClusterState, Movement};
+
+use super::timeseries::{Sample, TimeSeries};
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Hard movement cap (the paper's osdmaptool invocation used 10 000).
+    pub max_moves: usize,
+    /// Record a sample every `sample_every` moves (1 = every move, as the
+    /// figures need; larger values keep huge runs cheap).
+    pub sample_every: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { max_moves: 10_000, sample_every: 1 }
+    }
+}
+
+/// Result of one balancer run.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Balancer name.
+    pub balancer: String,
+    /// Movements in plan order.
+    pub movements: Vec<Movement>,
+    /// Per-move series (first sample = initial state).
+    pub series: TimeSeries,
+    /// True if the balancer converged (returned None) rather than
+    /// hitting the move cap.
+    pub converged: bool,
+    /// Total balancer compute time, seconds.
+    pub total_calc_seconds: f64,
+}
+
+impl SimResult {
+    pub fn total_moved_bytes(&self) -> u64 {
+        self.movements.iter().map(|m| m.bytes).sum()
+    }
+}
+
+/// Run `balancer` on `state` until convergence or the cap, timing each
+/// movement computation (Figure 6's channel).
+pub fn simulate(balancer: &mut dyn Balancer, state: &mut ClusterState, opts: &SimOptions) -> SimResult {
+    let mut series = TimeSeries::default();
+    series.samples.push(Sample::capture(state, 0, 0, 0.0));
+    let mut movements = Vec::new();
+    let mut moved_bytes = 0u64;
+    let mut total_calc = 0.0;
+    let mut converged = false;
+
+    while movements.len() < opts.max_moves {
+        let t0 = Instant::now();
+        let proposal = balancer.next_move(state);
+        let calc = t0.elapsed().as_secs_f64();
+        total_calc += calc;
+        let Some(p) = proposal else {
+            converged = true;
+            break;
+        };
+        let m = state
+            .apply_movement(p.pg, p.from, p.to)
+            .unwrap_or_else(|e| panic!("balancer '{}' proposed invalid move: {e}", balancer.name()));
+        moved_bytes += m.bytes;
+        movements.push(m);
+        if movements.len() % opts.sample_every == 0 {
+            series
+                .samples
+                .push(Sample::capture(state, movements.len(), moved_bytes, calc));
+        }
+    }
+    // always capture the terminal state
+    if series.last().map(|s| s.moves) != Some(movements.len()) {
+        series
+            .samples
+            .push(Sample::capture(state, movements.len(), moved_bytes, 0.0));
+    }
+
+    SimResult {
+        balancer: balancer.name().to_string(),
+        movements,
+        series,
+        converged,
+        total_calc_seconds: total_calc,
+    }
+}
+
+/// Compare both balancers from the same initial state (the paper's
+/// experimental protocol: "Both balancers start with the same cluster
+/// state"). Returns (mgr result, equilibrium result).
+pub fn compare<FA, FB>(
+    initial: &ClusterState,
+    mut make_baseline: FA,
+    mut make_equilibrium: FB,
+    opts: &SimOptions,
+) -> (SimResult, SimResult)
+where
+    FA: FnMut() -> Box<dyn Balancer>,
+    FB: FnMut() -> Box<dyn Balancer>,
+{
+    let mut state_a = initial.clone();
+    let mut bal_a = make_baseline();
+    let res_a = simulate(bal_a.as_mut(), &mut state_a, opts);
+
+    let mut state_b = initial.clone();
+    let mut bal_b = make_equilibrium();
+    let res_b = simulate(bal_b.as_mut(), &mut state_b, opts);
+
+    (res_a, res_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::{Equilibrium, MgrBalancer};
+    use crate::cluster::{ClusterState, Pool};
+    use crate::crush::{CrushBuilder, DeviceClass, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    fn cluster() -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..6 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            let size = if h < 2 { 8 * TIB } else { 4 * TIB };
+            b.add_osd_bytes(host, size, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        ClusterState::build(
+            b.build().unwrap(),
+            vec![Pool::replicated(1, "p", 3, 64, 0)],
+            |_, i| (8 + (i % 9) as u64) * GIB,
+        )
+    }
+
+    #[test]
+    fn simulate_records_per_move_samples() {
+        let mut state = cluster();
+        let mut bal = Equilibrium::default();
+        let res = simulate(&mut bal, &mut state, &SimOptions::default());
+        assert!(res.converged);
+        assert!(!res.movements.is_empty());
+        // samples: initial + one per move
+        assert_eq!(res.series.samples.len(), res.movements.len() + 1);
+        // variance decreases monotonically for Equilibrium
+        let vars: Vec<f64> = res.series.samples.iter().map(|s| s.variance).collect();
+        for w in vars.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15, "variance must not increase: {w:?}");
+        }
+        assert_eq!(res.total_moved_bytes(), res.movements.iter().map(|m| m.bytes).sum());
+    }
+
+    #[test]
+    fn move_cap_is_respected_and_flagged() {
+        let mut state = cluster();
+        let mut bal = Equilibrium::default();
+        let res = simulate(&mut bal, &mut state, &SimOptions { max_moves: 2, sample_every: 1 });
+        assert!(res.movements.len() <= 2);
+        if res.movements.len() == 2 {
+            assert!(!res.converged);
+        }
+    }
+
+    #[test]
+    fn compare_starts_from_identical_state() {
+        let initial = cluster();
+        let (mgr, eq) = compare(
+            &initial,
+            || Box::new(MgrBalancer::default()),
+            || Box::new(Equilibrium::default()),
+            &SimOptions::default(),
+        );
+        let v0_mgr = mgr.series.first().unwrap().variance;
+        let v0_eq = eq.series.first().unwrap().variance;
+        assert!((v0_mgr - v0_eq).abs() < 1e-15, "same initial state");
+        // headline: equilibrium's final variance beats the baseline's
+        let vf_mgr = mgr.series.last().unwrap().variance;
+        let vf_eq = eq.series.last().unwrap().variance;
+        assert!(vf_eq <= vf_mgr + 1e-12, "{vf_eq} vs {vf_mgr}");
+    }
+
+    #[test]
+    fn sampling_stride_thins_series() {
+        let mut state = cluster();
+        let mut bal = Equilibrium::default();
+        let res = simulate(&mut bal, &mut state, &SimOptions { max_moves: 10_000, sample_every: 5 });
+        assert!(res.series.samples.len() <= res.movements.len() / 5 + 2);
+        assert_eq!(res.series.last().unwrap().moves, res.movements.len());
+    }
+}

@@ -1,0 +1,12 @@
+//! Cluster simulator: drives balancers against cluster states, applies
+//! their movements, and records the measurements behind the paper's
+//! evaluation (free space, utilization variance, movement amount,
+//! calculation time).
+
+pub mod apply;
+pub mod workload;
+pub mod timeseries;
+
+pub use apply::{compare, simulate, SimOptions, SimResult};
+pub use timeseries::{Sample, TimeSeries};
+pub use workload::{Workload, WorkloadModel};

@@ -1,0 +1,195 @@
+//! Per-movement time series — the data behind the paper's figures.
+//!
+//! Figure 4/5 plot pool free space and OSD utilization variance against
+//! the number of movements; Figure 6 plots the calculation time of each
+//! movement. One [`Sample`] is recorded per movement (plus an initial
+//! sample at move 0).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::ClusterState;
+use crate::crush::DeviceClass;
+
+/// One row of the time series.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Number of movements applied so far.
+    pub moves: usize,
+    /// Cumulative bytes moved.
+    pub moved_bytes: u64,
+    /// Seconds the balancer spent computing this movement (0 for the
+    /// initial sample).
+    pub calc_seconds: f64,
+    /// Cluster-wide OSD utilization variance.
+    pub variance: f64,
+    /// Variance per device class present in the cluster.
+    pub variance_by_class: BTreeMap<&'static str, f64>,
+    /// Predicted free space (max_avail) per pool id, bytes.
+    pub pool_avail: BTreeMap<u32, f64>,
+}
+
+impl Sample {
+    /// Capture the current cluster state.
+    pub fn capture(state: &ClusterState, moves: usize, moved_bytes: u64, calc_seconds: f64) -> Sample {
+        let mut variance_by_class = BTreeMap::new();
+        for class in DeviceClass::ALL {
+            let present = (0..state.osd_count() as u32).any(|o| state.osd_class(o) == class);
+            if present {
+                variance_by_class
+                    .insert(class.as_str(), state.utilization_variance_class(class));
+            }
+        }
+        let pool_avail = state
+            .pools
+            .keys()
+            .map(|&id| (id, state.pool_max_avail(id)))
+            .collect();
+        Sample {
+            moves,
+            moved_bytes,
+            calc_seconds,
+            variance: state.utilization_variance(),
+            variance_by_class,
+            pool_avail,
+        }
+    }
+}
+
+/// The full series for one balancer run.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub samples: Vec<Sample>,
+}
+
+impl TimeSeries {
+    pub fn first(&self) -> Option<&Sample> {
+        self.samples.first()
+    }
+
+    pub fn last(&self) -> Option<&Sample> {
+        self.samples.last()
+    }
+
+    /// Total space gained per pool (bytes): final − initial max_avail.
+    pub fn gained_by_pool(&self) -> BTreeMap<u32, f64> {
+        let (Some(first), Some(last)) = (self.first(), self.last()) else {
+            return BTreeMap::new();
+        };
+        first
+            .pool_avail
+            .keys()
+            .map(|&id| {
+                let before = first.pool_avail.get(&id).copied().unwrap_or(0.0);
+                let after = last.pool_avail.get(&id).copied().unwrap_or(0.0);
+                (id, after - before)
+            })
+            .collect()
+    }
+
+    /// Sum of per-pool gains, optionally restricted to the given pools.
+    pub fn total_gained(&self, pools: Option<&[u32]>) -> f64 {
+        self.gained_by_pool()
+            .iter()
+            .filter(|(id, _)| pools.map(|ps| ps.contains(id)).unwrap_or(true))
+            .map(|(_, g)| *g)
+            .sum()
+    }
+
+    /// CSV rendering: one row per sample, one column per channel. Pool
+    /// columns are `pool_<id>_avail`, classes `var_<class>`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let Some(first) = self.first() else { return out };
+        let classes: Vec<&str> = first.variance_by_class.keys().copied().collect();
+        let pools: Vec<u32> = first.pool_avail.keys().copied().collect();
+        out.push_str("moves,moved_bytes,calc_seconds,variance");
+        for c in &classes {
+            out.push_str(&format!(",var_{c}"));
+        }
+        for p in &pools {
+            out.push_str(&format!(",pool_{p}_avail"));
+        }
+        out.push('\n');
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{},{},{:.9},{:.12e}",
+                s.moves, s.moved_bytes, s.calc_seconds, s.variance
+            ));
+            for c in &classes {
+                out.push_str(&format!(
+                    ",{:.12e}",
+                    s.variance_by_class.get(c).copied().unwrap_or(f64::NAN)
+                ));
+            }
+            for p in &pools {
+                out.push_str(&format!(
+                    ",{:.6e}",
+                    s.pool_avail.get(p).copied().unwrap_or(f64::NAN)
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Pool};
+    use crate::crush::{CrushBuilder, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    fn state() -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..4 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        ClusterState::build(
+            b.build().unwrap(),
+            vec![Pool::replicated(1, "p", 3, 16, 0)],
+            |_, _| GIB,
+        )
+    }
+
+    #[test]
+    fn capture_includes_present_classes_only() {
+        let s = state();
+        let sample = Sample::capture(&s, 0, 0, 0.0);
+        assert!(sample.variance_by_class.contains_key("hdd"));
+        assert!(!sample.variance_by_class.contains_key("ssd"));
+        assert!(sample.pool_avail.contains_key(&1));
+    }
+
+    #[test]
+    fn gained_by_pool_diffs_first_and_last() {
+        let s = state();
+        let mut ts = TimeSeries::default();
+        ts.samples.push(Sample::capture(&s, 0, 0, 0.0));
+        let mut second = Sample::capture(&s, 1, GIB, 0.001);
+        *second.pool_avail.get_mut(&1).unwrap() += 100.0;
+        ts.samples.push(second);
+        let gained = ts.gained_by_pool();
+        assert!((gained[&1] - 100.0).abs() < 1e-9);
+        assert!((ts.total_gained(None) - 100.0).abs() < 1e-9);
+        assert_eq!(ts.total_gained(Some(&[])), 0.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let s = state();
+        let mut ts = TimeSeries::default();
+        ts.samples.push(Sample::capture(&s, 0, 0, 0.0));
+        ts.samples.push(Sample::capture(&s, 1, 42, 0.002));
+        let csv = ts.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("moves,moved_bytes,calc_seconds,variance"));
+        assert!(lines[0].contains("var_hdd"));
+        assert!(lines[0].contains("pool_1_avail"));
+        assert!(lines[2].starts_with("1,42,"));
+    }
+}

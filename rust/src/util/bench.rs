@@ -1,0 +1,172 @@
+//! Micro/bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with mean / stddev / percentile
+//! reporting, plus a black-box to defeat constant folding. All
+//! `rust/benches/*.rs` targets (declared with `harness = false`) use this.
+
+use std::time::Instant;
+
+use crate::util::stats;
+use crate::util::units::fmt_duration;
+
+/// Prevent the optimizer from eliding a value (ptr read_volatile trick).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    unsafe {
+        let ret = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        ret
+    }
+}
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stats::variance(&self.samples).sqrt()
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.samples, 99.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+
+    /// One-line human report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  min {:>10}  (n={})",
+            self.name,
+            fmt_duration(self.mean()),
+            fmt_duration(self.p50()),
+            fmt_duration(self.p99()),
+            fmt_duration(self.min()),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_count: usize,
+    /// Minimum total measured time; sample count is raised if needed.
+    pub min_seconds: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, sample_count: 20, min_seconds: 0.2 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, sample_count: 5, min_seconds: 0.02 }
+    }
+
+    /// Measure `f` repeatedly. Each sample is one invocation.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_count);
+        let start_all = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            let enough_samples = samples.len() >= self.sample_count;
+            let enough_time = start_all.elapsed().as_secs_f64() >= self.min_seconds;
+            if enough_samples && enough_time {
+                break;
+            }
+            // hard cap so a slow benchmark cannot run away
+            if samples.len() >= self.sample_count * 50 {
+                break;
+            }
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        println!("{}", r.report());
+        r
+    }
+
+    /// Measure a batch of `n` inner iterations per sample (for very fast
+    /// functions); reports per-iteration time.
+    pub fn run_batched<T>(&self, name: &str, n: usize, mut f: impl FnMut() -> T) -> BenchResult {
+        assert!(n > 0);
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_count);
+        let start_all = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..n {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / n as f64);
+            if samples.len() >= self.sample_count
+                && start_all.elapsed().as_secs_f64() >= self.min_seconds
+            {
+                break;
+            }
+            if samples.len() >= self.sample_count * 50 {
+                break;
+            }
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        println!("{}", r.report());
+        r
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_requested_samples() {
+        let b = Bench { warmup_iters: 1, sample_count: 7, min_seconds: 0.0 };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.samples.len() >= 7);
+        assert!(r.mean() >= 0.0);
+    }
+
+    #[test]
+    fn batched_amortizes() {
+        let b = Bench { warmup_iters: 0, sample_count: 3, min_seconds: 0.0 };
+        let r = b.run_batched("fast", 100, || black_box(2u64).wrapping_mul(3));
+        assert!(r.samples.len() >= 3);
+        // per-iteration time should be well under a millisecond
+        assert!(r.mean() < 1e-3);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let b = Bench::quick();
+        let r = b.run("my_bench_name", || ());
+        assert!(r.report().contains("my_bench_name"));
+    }
+}

@@ -1,0 +1,224 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subset the `equilibrium` binary and the examples need:
+//! subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative description of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None = boolean flag; Some(placeholder) = takes a value.
+    pub value: Option<&'static str>,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected number, got '{s}'"))),
+        }
+    }
+}
+
+/// Option-parsing engine, driven by a spec table.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, opts: Vec::new() }
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, value: None, default: None });
+        self
+    }
+
+    /// Add a valued option.
+    pub fn opt(mut self, name: &'static str, placeholder: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, value: Some(placeholder), default: None });
+        self
+    }
+
+    /// Add a valued option with a default.
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        placeholder: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, help, value: Some(placeholder), default: Some(default) });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse a raw argv slice (excluding the program/subcommand names).
+    pub fn parse<I, S>(&self, argv: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().map(|s| s.as_ref().to_string()).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body == "help" {
+                    return Err(CliError(self.usage()));
+                }
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .spec(&name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                match (spec.value, inline_val) {
+                    (None, None) => {
+                        out.flags.insert(name, true);
+                    }
+                    (None, Some(_)) => {
+                        return Err(CliError(format!("--{name} does not take a value")));
+                    }
+                    (Some(_), Some(v)) => {
+                        out.values.insert(name, v);
+                    }
+                    (Some(_), None) => {
+                        let v = it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{name} requires a value")))?;
+                        out.values.insert(name, v);
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let lhs = match o.value {
+                Some(ph) => format!("--{} <{}>", o.name, ph),
+                None => format!("--{}", o.name),
+            };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  {lhs:<28} {}{def}\n", o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "about")
+            .flag("verbose", "more output")
+            .opt("cluster", "NAME", "cluster to use")
+            .opt_default("k", "N", "25", "attempts")
+    }
+
+    #[test]
+    fn parses_flags_values_positionals() {
+        let a = cli()
+            .parse(["--verbose", "pos1", "--cluster", "b", "--k=10", "pos2"])
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("cluster"), Some("b"));
+        assert_eq!(a.get_u64("k").unwrap(), Some(10));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn default_applies_when_absent() {
+        let a = cli().parse::<_, &str>([]).unwrap();
+        assert_eq!(a.get("k"), Some("25"));
+        assert_eq!(a.get("cluster"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(cli().parse(["--nope"]).is_err());
+        assert!(cli().parse(["--cluster"]).is_err()); // missing value
+        assert!(cli().parse(["--verbose=x"]).is_err()); // flag with value
+        assert!(cli().parse(["--k", "abc"]).unwrap().get_u64("k").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--cluster <NAME>"));
+        assert!(u.contains("[default: 25]"));
+    }
+}

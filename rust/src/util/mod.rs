@@ -1,0 +1,11 @@
+//! Support substrates built from scratch for the offline environment:
+//! RNG, statistics, JSON, CLI parsing, bench harness, property testing,
+//! and unit formatting.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod units;

@@ -1,0 +1,87 @@
+//! Miniature property-based testing harness (proptest is unavailable
+//! offline).
+//!
+//! A property is a closure from a seeded [`Rng`] to `Result<(), String>`;
+//! the harness runs it for many seeds and reports the first failing seed,
+//! which makes failures reproducible (`check_seeded`). Shrinking is
+//! deliberately out of scope — failures report the seed instead.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds derived from `base_seed`.
+/// Panics (with the failing seed) on the first failure.
+pub fn check_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    mut prop: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    let mut meta = Rng::new(base_seed);
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default seed and 64 cases.
+pub fn check(name: &str, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check_seeded(name, 0xEC5B_A1A4_CE00_0001, 64, prop)
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        check_seeded("always-true", 1, 10, |_| {
+            runs += 1;
+            Ok(())
+        });
+        assert_eq!(runs, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check_seeded("fails", 2, 10, |r| {
+            let x = r.below(100);
+            prop_assert!(x < 50, "x={x} not < 50");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check_seeded("collect", 3, 5, |r| {
+            first.push(r.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check_seeded("collect", 3, 5, |r| {
+            second.push(r.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

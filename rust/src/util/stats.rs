@@ -1,0 +1,291 @@
+//! Streaming and batch statistics used throughout the balancer and the
+//! evaluation harness (utilization variance is the paper's core metric).
+
+/// Welford online mean/variance accumulator.
+///
+/// Numerically stable for long streams; used by the simulator's
+/// time-series channels and by the bench harness.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (the paper reports population variance of OSD
+    /// utilization, i.e. divide by N, not N-1).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (divide by N-1).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Merge another accumulator (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+}
+
+/// Population variance of a slice in one pass.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n
+}
+
+/// Mean of a slice (0 on empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Maximum of a slice (NaN-free inputs assumed; 0 on empty).
+pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Minimum of a slice (0 on empty).
+pub fn min(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Percentile with linear interpolation; `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Incremental variance bookkeeping over a fixed population whose members
+/// get updated in place. This is the algorithmic heart of Equilibrium's
+/// O(1) variance-delta scoring: we keep Σx and Σx² and can answer "what
+/// would the population variance be if member i changed from a to b"
+/// without touching the other N-1 members.
+#[derive(Debug, Clone)]
+pub struct SumVar {
+    n: usize,
+    sum: f64,
+    sumsq: f64,
+}
+
+impl SumVar {
+    /// Build from an initial population.
+    pub fn from_values(xs: &[f64]) -> Self {
+        let sum = xs.iter().sum();
+        let sumsq = xs.iter().map(|x| x * x).sum();
+        SumVar { n: xs.len(), sum, sumsq }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Current population variance.
+    #[inline]
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        let mean = self.sum / n;
+        (self.sumsq / n - mean * mean).max(0.0)
+    }
+
+    /// Apply an in-place member update `old -> new`.
+    #[inline]
+    pub fn update(&mut self, old: f64, new: f64) {
+        self.sum += new - old;
+        self.sumsq += new * new - old * old;
+    }
+
+    /// Variance if two members changed (the move: source sheds, destination
+    /// gains) — without mutating. O(1).
+    #[inline]
+    pub fn variance_if(&self, changes: &[(f64, f64)]) -> f64 {
+        let mut sum = self.sum;
+        let mut sumsq = self.sumsq;
+        for &(old, new) in changes {
+            sum += new - old;
+            sumsq += new * new - old * old;
+        }
+        if self.n == 0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        let mean = sum / n;
+        (sumsq / n - mean * mean).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_batch() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..1000).map(|_| r.normal_with(3.0, 2.0)).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let mut r = Rng::new(6);
+        let xs: Vec<f64> = (0..500).map(|_| r.f64()).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..200] {
+            a.push(x);
+        }
+        for &x in &xs[200..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+        assert_eq!(a.count(), whole.count());
+    }
+
+    #[test]
+    fn variance_of_constant_is_zero() {
+        let xs = [4.0; 32];
+        assert!(variance(&xs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sumvar_matches_batch_after_updates() {
+        let mut r = Rng::new(8);
+        let mut xs: Vec<f64> = (0..64).map(|_| r.f64()).collect();
+        let mut sv = SumVar::from_values(&xs);
+        for step in 0..200 {
+            let i = (step * 7) % xs.len();
+            let new = r.f64() * 2.0;
+            sv.update(xs[i], new);
+            xs[i] = new;
+            assert!(
+                (sv.variance() - variance(&xs)).abs() < 1e-9,
+                "step {step}: {} vs {}",
+                sv.variance(),
+                variance(&xs)
+            );
+        }
+    }
+
+    #[test]
+    fn sumvar_variance_if_is_pure() {
+        let xs = [0.1, 0.5, 0.9, 0.3];
+        let sv = SumVar::from_values(&xs);
+        let v0 = sv.variance();
+        let hyp = sv.variance_if(&[(0.9, 0.5), (0.1, 0.5)]);
+        // unchanged after the hypothetical
+        assert!((sv.variance() - v0).abs() < 1e-12);
+        // equalizing values must reduce variance
+        assert!(hyp < v0);
+        // and must equal the batch recomputation
+        let moved = [0.5, 0.5, 0.5, 0.3];
+        assert!((hyp - variance(&moved)).abs() < 1e-12);
+    }
+}

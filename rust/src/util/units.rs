@@ -1,0 +1,139 @@
+//! Byte-size constants, parsing and human-readable formatting (binary
+//! units, as used by Ceph and throughout the paper: KiB/MiB/GiB/TiB/PiB).
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+pub const PIB: u64 = 1 << 50;
+
+/// Format a byte count with a binary-unit suffix, e.g. `68.0 TiB`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    fmt_bytes_f(bytes as f64)
+}
+
+/// Format a (possibly fractional or huge) byte count.
+pub fn fmt_bytes_f(bytes: f64) -> String {
+    let neg = bytes < 0.0;
+    let b = bytes.abs();
+    let (value, unit) = if b >= PIB as f64 {
+        (b / PIB as f64, "PiB")
+    } else if b >= TIB as f64 {
+        (b / TIB as f64, "TiB")
+    } else if b >= GIB as f64 {
+        (b / GIB as f64, "GiB")
+    } else if b >= MIB as f64 {
+        (b / MIB as f64, "MiB")
+    } else if b >= KIB as f64 {
+        (b / KIB as f64, "KiB")
+    } else {
+        (b, "B")
+    };
+    let sign = if neg { "-" } else { "" };
+    if unit == "B" {
+        format!("{sign}{value:.0} B")
+    } else {
+        format!("{sign}{value:.1} {unit}")
+    }
+}
+
+/// Bytes → TiB as f64 (the unit Table 1 reports).
+pub fn to_tib(bytes: u64) -> f64 {
+    bytes as f64 / TIB as f64
+}
+
+/// Bytes → TiB for signed/float byte quantities.
+pub fn to_tib_f(bytes: f64) -> f64 {
+    bytes / TIB as f64
+}
+
+/// Parse a human size string (`"4TiB"`, `"512 GiB"`, `"100MiB"`, `"123"`).
+/// Decimal-prefix forms (`TB`) are accepted as their binary equivalents,
+/// matching common operator expectations with Ceph tooling.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim();
+    let split = t
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(t.len());
+    let (num, unit) = t.split_at(split);
+    let value: f64 = num.trim().parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        "t" | "tb" | "tib" => TIB,
+        "p" | "pb" | "pib" => PIB,
+        _ => return None,
+    };
+    if value < 0.0 {
+        return None;
+    }
+    Some((value * mult as f64).round() as u64)
+}
+
+/// Format a ratio as a percentage, e.g. `0.314 -> "31.4 %"`.
+pub fn fmt_pct(ratio: f64) -> String {
+    format!("{:.1} %", ratio * 100.0)
+}
+
+/// Format a duration in adaptive units (ns/µs/ms/s).
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.0} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.1} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{seconds:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_picks_unit() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * KIB), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * MIB + MIB / 2), "3.5 MiB");
+        assert_eq!(fmt_bytes(68 * TIB), "68.0 TiB");
+        assert_eq!(fmt_bytes(5 * PIB), "5.0 PiB");
+    }
+
+    #[test]
+    fn parse_accepts_common_forms() {
+        assert_eq!(parse_bytes("123"), Some(123));
+        assert_eq!(parse_bytes("4TiB"), Some(4 * TIB));
+        assert_eq!(parse_bytes("512 GiB"), Some(512 * GIB));
+        assert_eq!(parse_bytes("1.5 MiB"), Some(MIB + MIB / 2));
+        assert_eq!(parse_bytes("8tb"), Some(8 * TIB));
+        assert_eq!(parse_bytes("x"), None);
+        assert_eq!(parse_bytes("1 XiB"), None);
+    }
+
+    #[test]
+    fn parse_fmt_roundtrip_at_unit_boundaries() {
+        for &b in &[KIB, MIB, GIB, TIB, PIB] {
+            assert_eq!(parse_bytes(&fmt_bytes(b)).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn tib_conversion() {
+        assert!((to_tib(TIB) - 1.0).abs() < 1e-12);
+        assert!((to_tib(TIB / 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pct_and_duration_formatting() {
+        assert_eq!(fmt_pct(0.314), "31.4 %");
+        assert_eq!(fmt_duration(2.0), "2.00 s");
+        assert_eq!(fmt_duration(0.0025), "2.50 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.5 µs");
+        assert_eq!(fmt_duration(5e-9), "5 ns");
+    }
+}

@@ -1,0 +1,237 @@
+//! Cross-module integration tests: generator → dump/load → balancers →
+//! simulator → coordinator, plus the CLI binary and the XLA runtime
+//! when artifacts are present.
+
+use equilibrium::balancer::{constraints, Equilibrium, EquilibriumConfig, MgrBalancer};
+use equilibrium::cluster::dump;
+use equilibrium::coordinator::{execute_plan, run_daemon, DaemonConfig, ExecutorConfig};
+use equilibrium::crush::{Level, NodeId};
+use equilibrium::generator::clusters;
+use equilibrium::runtime::{Runtime, XlaScorer};
+use equilibrium::simulator::{compare, simulate, SimOptions};
+use std::process::Command;
+
+/// The full pipeline on paper cluster C: balance, verify invariants,
+/// execute the plan.
+#[test]
+fn full_pipeline_on_cluster_c() {
+    let cluster = clusters::by_name("c", 0).unwrap();
+    let initial = cluster.state;
+
+    let (mgr, eq) = compare(
+        &initial,
+        || Box::new(MgrBalancer::default()),
+        || Box::new(Equilibrium::default()),
+        &SimOptions::default(),
+    );
+
+    // headline claims on C (Table 1: ours gains more on the data pools)
+    let user: Vec<u32> = initial
+        .pools
+        .values()
+        .filter(|p| p.kind == equilibrium::cluster::PoolKind::UserData)
+        .map(|p| p.id)
+        .collect();
+    assert!(eq.series.total_gained(Some(&user)) >= mgr.series.total_gained(Some(&user)));
+    assert!(eq.converged);
+
+    // replay equilibrium's movements onto a fresh state and verify
+    // everything: accounting, CRUSH legality of the *final* placement
+    let mut state = clusters::by_name("c", 0).unwrap().state;
+    for m in &eq.movements {
+        assert!(
+            constraints::check_move(&state, m.pg, m.from, m.to).is_ok(),
+            "movement {m} violates constraints at apply time"
+        );
+        state.apply_movement(m.pg, m.from, m.to).unwrap();
+    }
+    assert!(state.verify().is_empty());
+
+    // every PG of every pool still satisfies its failure domain
+    for pg in state.pgs() {
+        let pool = &state.pools[&pg.id.pool];
+        let rule = state.crush.rule(pool.rule_id).unwrap();
+        let cs = constraints::rule_slot_constraints(&state, rule, pool.redundancy.shard_count());
+        for block in &cs {
+            for level in &block.distinct_at {
+                if *level == Level::Osd {
+                    continue;
+                }
+                let mut domains = Vec::new();
+                for s in block.slots.clone() {
+                    if let Some(Some(osd)) = pg.acting.get(s) {
+                        if let Some(d) = state.crush.ancestor_at(*osd as NodeId, *level) {
+                            assert!(
+                                !domains.contains(&d),
+                                "pg {} violates {level:?} distinctness after balancing",
+                                pg.id
+                            );
+                            domains.push(d);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // execute the plan through the coordinator
+    let report = execute_plan(&eq.movements, &ExecutorConfig::default(), state.osd_count());
+    assert_eq!(report.transfers.len(), eq.movements.len());
+    assert!(report.makespan > 0.0);
+}
+
+/// Balancing a dumped-and-reloaded state gives identical results to
+/// balancing the original (the dump is lossless for the balancer).
+#[test]
+fn dump_load_is_transparent_to_balancing() {
+    let original = clusters::demo(5);
+    let reloaded = dump::load(&dump::dump(&original)).unwrap();
+
+    let mut s1 = original.clone();
+    let mut s2 = reloaded;
+    let mut b1 = Equilibrium::default();
+    let mut b2 = Equilibrium::default();
+    let r1 = simulate(&mut b1, &mut s1, &SimOptions::default());
+    let r2 = simulate(&mut b2, &mut s2, &SimOptions::default());
+
+    assert_eq!(r1.movements.len(), r2.movements.len());
+    for (a, b) in r1.movements.iter().zip(&r2.movements) {
+        assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+    }
+}
+
+/// XLA and native scoring backends drive the balancer to equivalent
+/// results (same state quality; the exact move sequence may differ only
+/// by float noise, so we compare outcomes).
+#[test]
+fn xla_and_native_backends_agree_end_to_end() {
+    if !Runtime::artifacts_present(&equilibrium::runtime::default_artifact_dir()) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let initial = clusters::demo(11);
+
+    let mut native_state = initial.clone();
+    let mut native_bal = Equilibrium::default();
+    let native = simulate(&mut native_bal, &mut native_state, &SimOptions::default());
+
+    let mut xla_state = initial.clone();
+    let mut xla_bal =
+        Equilibrium::new(EquilibriumConfig::default(), XlaScorer::load_default().unwrap());
+    let xla = simulate(&mut xla_bal, &mut xla_state, &SimOptions::default());
+
+    // identical decision sequences expected (same tie-breaking, same
+    // f64 math) — but allow outcome-equivalence as the contract
+    let v_native = native_state.utilization_variance();
+    let v_xla = xla_state.utilization_variance();
+    assert!(
+        (v_native - v_xla).abs() < 1e-9,
+        "final variance differs: native {v_native}, xla {v_xla}"
+    );
+    assert_eq!(native.movements.len(), xla.movements.len());
+}
+
+/// Daemon loop keeps cluster invariants under concurrent writes.
+#[test]
+fn daemon_preserves_invariants_under_write_load() {
+    let mut state = clusters::demo(3);
+    let mut bal = Equilibrium::default();
+    let cfg = DaemonConfig {
+        rounds: 6,
+        moves_per_round: 10,
+        write_bytes_per_round: 16 << 30,
+        ..Default::default()
+    };
+    let report = run_daemon(&mut state, &mut bal, &cfg);
+    assert_eq!(report.rounds.len(), 6);
+    assert!(state.verify().is_empty());
+    // variance stays bounded even under writes
+    let last = report.rounds.last().unwrap();
+    assert!(last.variance_after < 0.05);
+}
+
+/// Production lifecycle: balance → age (pools grow/shrink unevenly) →
+/// the daemon restores balance under backfill throttling.
+#[test]
+fn aged_cluster_lifecycle() {
+    use equilibrium::generator::{age, AgingConfig};
+
+    let mut state = clusters::demo(61);
+    // initial balance
+    let mut bal = Equilibrium::default();
+    equilibrium::balancer::run_to_convergence(&mut bal, &mut state, 10_000);
+    let balanced_var = state.utilization_variance();
+
+    // months of uneven growth
+    age(&mut state, &AgingConfig::default(), 17);
+    let drifted_var = state.utilization_variance();
+    assert!(drifted_var > balanced_var);
+
+    // operational recovery with adaptive throttle
+    let mut bal2 = Equilibrium::default();
+    let cfg = DaemonConfig {
+        rounds: 20,
+        moves_per_round: 10,
+        write_bytes_per_round: 0,
+        target_round_seconds: Some(600.0),
+        ..Default::default()
+    };
+    let report = run_daemon(&mut state, &mut bal2, &cfg);
+    assert!(report.rounds.iter().any(|r| r.converged), "daemon must converge again");
+    assert!(
+        state.utilization_variance() < drifted_var,
+        "recovery must reduce drift: {} -> {}",
+        drifted_var,
+        state.utilization_variance()
+    );
+    assert!(state.verify().is_empty());
+}
+
+/// CLI smoke tests (binary built by cargo for integration tests).
+#[test]
+fn cli_generate_balance_roundtrip() {
+    let bin = env!("CARGO_BIN_EXE_equilibrium");
+    let dir = std::env::temp_dir().join(format!("eq_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let state_path = dir.join("demo.json");
+
+    let out = Command::new(bin)
+        .args(["generate", "--cluster", "demo", "--seed", "3"])
+        .args(["--out", state_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "generate failed: {}", String::from_utf8_lossy(&out.stderr));
+
+    let out = Command::new(bin)
+        .args(["balance", "--state", state_path.to_str().unwrap(), "--quiet"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "balance failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("moves"), "summary missing: {stderr}");
+
+    let out = Command::new(bin).args(["simulate", "--cluster", "demo"]).output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("equilibrium"));
+    assert!(stdout.contains("mgr"));
+
+    // unknown args fail cleanly
+    let out = Command::new(bin).args(["balance", "--nope"]).output().unwrap();
+    assert!(!out.status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `report ablate-k` exercises the ablation path end to end.
+#[test]
+fn cli_report_ablate_runs() {
+    let bin = env!("CARGO_BIN_EXE_equilibrium");
+    let out = Command::new(bin)
+        .args(["report", "ablate-count", "--cluster", "a"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("on (paper)"));
+}

@@ -1,0 +1,282 @@
+//! Property-based tests over randomized clusters and workloads, using
+//! the in-repo prop harness (seeded, reproducible).
+//!
+//! These pin the coordinator-level invariants: CRUSH legality of every
+//! balancer decision, accounting integrity under arbitrary move/write
+//! interleavings, executor concurrency limits, and scoring-backend
+//! equivalence.
+
+use equilibrium::balancer::scoring::{score_naive, MoveScorer, NativeScorer, ScoreRequest};
+use equilibrium::balancer::{constraints, Balancer, Equilibrium, MgrBalancer};
+use equilibrium::cluster::{dump, ClusterState};
+use equilibrium::coordinator::{execute_plan, ExecutorConfig};
+use equilibrium::crush::{CrushBuilder, DeviceClass, Level, NodeId, Rule};
+use equilibrium::prop_assert;
+use equilibrium::simulator::{simulate, SimOptions};
+use equilibrium::util::prop::check_seeded;
+use equilibrium::util::rng::Rng;
+use equilibrium::util::units::{GIB, TIB};
+
+use equilibrium::generator::synth::random_cluster;
+
+#[test]
+fn prop_equilibrium_moves_are_always_legal_and_variance_decreases() {
+    check_seeded("equilibrium-legality", 0x51, 12, |rng| {
+        let mut state = random_cluster(rng);
+        let mut bal = Equilibrium::default();
+        let mut moves = 0;
+        while let Some(p) = bal.next_move(&state) {
+            prop_assert!(
+                constraints::check_move(&state, p.pg, p.from, p.to).is_ok(),
+                "illegal proposal {p:?}"
+            );
+            let u_src = state.utilization(p.from);
+            let u_dst = state.utilization(p.to);
+            prop_assert!(u_dst < u_src, "dest {u_dst} not emptier than src {u_src}");
+            state.apply_movement(p.pg, p.from, p.to).map_err(|e| e.to_string())?;
+            moves += 1;
+            prop_assert!(moves < 5000, "did not converge");
+        }
+        let problems = state.verify();
+        prop_assert!(problems.is_empty(), "invariant drift: {problems:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balancing_never_reduces_total_avail() {
+    check_seeded("avail-monotone", 0x52, 10, |rng| {
+        let mut state = random_cluster(rng);
+        let before = state.total_max_avail(false);
+        let mut bal = Equilibrium::default();
+        simulate(&mut bal, &mut state, &SimOptions::default());
+        let after = state.total_max_avail(false);
+        prop_assert!(
+            after >= before - 1.0,
+            "balancing lost space: {before:.3e} -> {after:.3e}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mgr_moves_are_legal_and_converge_on_counts() {
+    check_seeded("mgr-legality", 0x53, 10, |rng| {
+        let mut state = random_cluster(rng);
+        let mut bal = MgrBalancer::default();
+        let mut moves = 0;
+        while let Some(p) = bal.next_move(&state) {
+            prop_assert!(
+                constraints::check_move(&state, p.pg, p.from, p.to).is_ok(),
+                "illegal mgr proposal {p:?}"
+            );
+            state.apply_movement(p.pg, p.from, p.to).map_err(|e| e.to_string())?;
+            moves += 1;
+            prop_assert!(moves < 10_000, "mgr did not converge");
+        }
+        prop_assert!(state.verify().is_empty());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dump_roundtrip_on_random_clusters() {
+    check_seeded("dump-roundtrip", 0x54, 10, |rng| {
+        let state = random_cluster(rng);
+        let text = dump::dump(&state);
+        let loaded = dump::load(&text).map_err(|e| e.to_string())?;
+        prop_assert!(loaded.pg_count() == state.pg_count());
+        for o in 0..state.osd_count() as u32 {
+            prop_assert!(loaded.osd_used(o) == state.osd_used(o), "osd.{o} used drift");
+        }
+        prop_assert!(dump::dump(&loaded) == text, "second dump not byte-stable");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_executor_respects_backfill_limits() {
+    check_seeded("executor-limits", 0x55, 20, |rng| {
+        let osds = 4 + rng.index(12);
+        let n_moves = 1 + rng.index(40);
+        let max_backfills = 1 + rng.index(3);
+        let plan: Vec<equilibrium::cluster::Movement> = (0..n_moves)
+            .map(|i| {
+                let from = rng.index(osds) as u32;
+                let mut to = rng.index(osds) as u32;
+                if to == from {
+                    to = (to + 1) % osds as u32;
+                }
+                equilibrium::cluster::Movement {
+                    pg: equilibrium::cluster::PgId::new(1, i as u32),
+                    from,
+                    to,
+                    bytes: 1 + rng.below(1 << 30),
+                }
+            })
+            .collect();
+        let cfg = ExecutorConfig { max_backfills, bandwidth: 100.0 * GIB as f64 };
+        let report = execute_plan(&plan, &cfg, osds);
+        prop_assert!(report.transfers.len() == plan.len(), "all transfers must run");
+
+        // instantaneous concurrency per OSD must never exceed the limit:
+        // sweep start/finish events (finish before start at equal times —
+        // a freed slot is reusable immediately)
+        for osd in 0..osds as u32 {
+            let mut events: Vec<(f64, i32)> = Vec::new();
+            for t in &report.transfers {
+                if t.movement.from == osd || t.movement.to == osd {
+                    events.push((t.start, 1));
+                    events.push((t.finish, -1));
+                }
+            }
+            events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let mut running = 0i32;
+            for (time, delta) in events {
+                running += delta;
+                prop_assert!(
+                    running <= max_backfills as i32,
+                    "osd.{osd} had {running} concurrent transfers at t={time} (limit {max_backfills})"
+                );
+            }
+        }
+        // makespan lower bound: total bytes / (bandwidth × max possible lanes)
+        let serial: f64 = report.total_bytes as f64 / cfg.bandwidth;
+        prop_assert!(report.makespan >= serial / (osds as f64 * max_backfills as f64) - 1e-9);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_native_scorer_matches_naive_reference() {
+    check_seeded("scorer-parity", 0x56, 40, |rng| {
+        let n = 2 + rng.index(300);
+        let size: Vec<f64> = (0..n).map(|_| rng.range_f64(1e11, 3e13)).collect();
+        let used: Vec<f64> = size.iter().map(|&s| s * rng.range_f64(0.0, 0.99)).collect();
+        let src = rng.index(n);
+        let shard = used[src] * rng.range_f64(0.0, 1.0);
+        let mask: Vec<bool> = (0..n).map(|_| rng.chance(0.6)).collect();
+        let req = ScoreRequest { used: &used, size: &size, src, shard, mask: &mask };
+        let a = NativeScorer.score(&req);
+        let b = score_naive(&req);
+        prop_assert!((a.var_before - b.var_before).abs() < 1e-10);
+        for j in 0..n {
+            let (x, y) = (a.var_after[j], b.var_after[j]);
+            if x.is_finite() != y.is_finite() {
+                return Err(format!("finiteness mismatch at {j}"));
+            }
+            if x.is_finite() {
+                prop_assert!((x - y).abs() < 1e-10, "slot {j}: {x} vs {y}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crush_mappings_respect_failure_domains_on_random_trees() {
+    check_seeded("crush-domains", 0x57, 15, |rng| {
+        let racks = 2 + rng.index(3);
+        let hosts_per_rack = 2 + rng.index(3);
+        let osds_per_host = 1 + rng.index(3);
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for r in 0..racks {
+            let rack = b.add_bucket(&format!("rack{r}"), Level::Rack, root);
+            for h in 0..hosts_per_rack {
+                let host = b.add_bucket(&format!("host{r}x{h}"), Level::Host, rack);
+                for _ in 0..osds_per_host {
+                    b.add_osd_bytes(host, (1 + rng.below(8)) * TIB, DeviceClass::Hdd);
+                }
+            }
+        }
+        let domain = if rng.chance(0.5) { Level::Host } else { Level::Rack };
+        b.add_rule(Rule::replicated(0, "r", "default", None, domain));
+        let map = b.build().map_err(|e| e.to_string())?;
+        let rule = map.rule(0).unwrap();
+        let n_domains = if domain == Level::Host { racks * hosts_per_rack } else { racks };
+        let replicas = 2 + rng.index(2); // 2 or 3
+        for pg in 0..200u32 {
+            let slots =
+                equilibrium::crush::map_rule(&map, rule, equilibrium::crush::pg_input(1, pg), replicas);
+            let devs: Vec<u32> = slots.iter().filter_map(|s| *s).collect();
+            if replicas <= n_domains {
+                prop_assert!(devs.len() == replicas, "pg {pg}: wanted {replicas}, got {devs:?}");
+            }
+            let mut domains: Vec<NodeId> = devs
+                .iter()
+                .map(|&d| map.ancestor_at(d as NodeId, domain).unwrap())
+                .collect();
+            domains.sort_unstable();
+            domains.dedup();
+            prop_assert!(domains.len() == devs.len(), "pg {pg}: domain collision");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_write_then_balance_interleaving_keeps_accounting() {
+    check_seeded("interleave-accounting", 0x58, 8, |rng| {
+        let mut state = random_cluster(rng);
+        let mut bal = Equilibrium::default();
+        for _ in 0..20 {
+            // random writes
+            let pgs: Vec<_> = state.pgs().map(|p| p.id).collect();
+            for _ in 0..5 {
+                let pg = *rng.choose(&pgs).unwrap();
+                let _ = state.grow_pg(pg, rng.below(2 * GIB));
+            }
+            // a few balancing steps
+            for _ in 0..3 {
+                let Some(p) = bal.next_move(&state) else { break };
+                state.apply_movement(p.pg, p.from, p.to).map_err(|e| e.to_string())?;
+            }
+        }
+        let problems = state.verify();
+        prop_assert!(problems.is_empty(), "{problems:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_failure_recovery_keeps_invariants() {
+    check_seeded("failure-recovery", 0x59, 8, |rng| {
+        let mut state = random_cluster(rng);
+        // fail 1-2 random OSDs, then balance
+        for _ in 0..1 + rng.index(2) {
+            let Some(victim) = equilibrium::cluster::random_up_osd(&state, rng) else {
+                break;
+            };
+            // keep at least 4 up OSDs so recovery has room
+            let ups = (0..state.osd_count() as u32)
+                .filter(|&o| state.osd_is_up(o))
+                .count();
+            if ups <= 4 {
+                break;
+            }
+            let report = equilibrium::cluster::fail_osd(&mut state, victim);
+            // only explicitly-degraded PGs may still reference the victim
+            // (no legal replacement existed, e.g. EC slots == live hosts)
+            for pg in state.pgs() {
+                if pg.on(victim) {
+                    prop_assert!(
+                        report.degraded.contains(&pg.id),
+                        "pg {} on failed osd but not reported degraded",
+                        pg.id
+                    );
+                }
+            }
+        }
+        let mut bal = Equilibrium::default();
+        let mut moves = 0;
+        while let Some(p) = bal.next_move(&state) {
+            prop_assert!(state.osd_is_up(p.to), "balancer must not target down OSDs");
+            state.apply_movement(p.pg, p.from, p.to).map_err(|e| e.to_string())?;
+            moves += 1;
+            prop_assert!(moves < 5000, "did not converge after failures");
+        }
+        prop_assert!(state.verify().is_empty());
+        Ok(())
+    });
+}
