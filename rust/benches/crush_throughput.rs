@@ -62,4 +62,15 @@ fn main() {
     quick.run("generator cluster B", || {
         black_box(equilibrium::generator::clusters::by_name("b", 0).unwrap().state.pg_count())
     });
+
+    section("batched planning throughput (incremental engine, demo cluster)");
+    // build the cluster once outside the timer; the measured body is a
+    // state clone (cheap) plus the whole batch, which amortizes
+    // constraint caches and candidate buffers (RFC 0001)
+    let demo = equilibrium::generator::clusters::demo(17);
+    quick.run("Equilibrium::propose_batch(demo, 64)", || {
+        let mut state = demo.clone();
+        let mut bal = equilibrium::balancer::Equilibrium::default();
+        black_box(bal.propose_batch(&mut state, 64).len())
+    });
 }

@@ -1,5 +1,6 @@
 //! Bench/report target for **Figure 6**: per-movement calculation time
-//! on clusters A and B for both balancers.
+//! on clusters A and B for both balancers — plus the incremental-engine
+//! acceptance gate of RFC 0001.
 //!
 //! Emits `target/figures/fig6_<cluster>_{mgr,equilibrium}.csv` (the
 //! `calc_seconds` column is the plotted series) and prints distribution
@@ -8,19 +9,101 @@
 //! until the algorithm gives up"); in absolute terms this Rust
 //! implementation is orders of magnitude below the paper's Python
 //! reference (10 ms/move on A, 1000 ms/move on B).
+//!
+//! The second section races the incremental engine against the
+//! pre-refactor full-sort loop (`ReferenceEquilibrium`) on the same
+//! state, timing ONLY movement selection (state application is shared
+//! code and excluded). Gate: on the largest generated cluster (B,
+//! 995 OSDs / 8731 PGs) the engine must select at least 2× faster.
+//!
+//! `--smoke` (CI quick mode) restricts everything to cluster A and
+//! skips the speedup assertion — tiny clusters have nothing to
+//! amortize. `--gate-only` skips the Figure 6 distributions and runs
+//! just the cluster-B speedup gate (what CI's engine-gate job runs).
 
+use equilibrium::balancer::{Balancer, Equilibrium, ReferenceEquilibrium};
 use equilibrium::generator::clusters::by_name;
 use equilibrium::report::{run_cluster, Scoring};
 use equilibrium::util::stats;
 use equilibrium::util::units::fmt_duration;
 use std::path::PathBuf;
+use std::time::Instant;
+
+/// Time `bal`'s movement selection over at most `cap` moves on a copy of
+/// the cluster. Returns (selection seconds, moves).
+fn selection_time(bal: &mut dyn Balancer, cluster: &str, cap: usize) -> (f64, usize) {
+    let mut state = by_name(cluster, 0).unwrap().state;
+    let mut secs = 0.0;
+    let mut moves = 0;
+    while moves < cap {
+        let t0 = Instant::now();
+        let p = bal.next_move(&state);
+        secs += t0.elapsed().as_secs_f64();
+        let Some(p) = p else { break };
+        state.apply_movement(p.pg, p.from, p.to).unwrap();
+        moves += 1;
+    }
+    (secs, moves)
+}
+
+/// RFC 0001 acceptance gate: reference vs incremental selection time.
+/// Best-of-3 per engine: wall-clock gates on shared runners flake, and
+/// the minimum is the measurement least polluted by scheduling noise.
+fn compare_engines(cluster: &str, cap: usize, required_speedup: Option<f64>) {
+    println!("\nIncremental engine vs full-sort reference (cluster {cluster}, ≤{cap} moves, best of 3):");
+    let mut t_ref = f64::INFINITY;
+    let mut t_inc = f64::INFINITY;
+    let mut n_ref = 0;
+    let mut n_inc = 0;
+    for _ in 0..3 {
+        let (t, n) = selection_time(&mut ReferenceEquilibrium::default(), cluster, cap);
+        t_ref = t_ref.min(t);
+        n_ref = n;
+        let (t, n) = selection_time(&mut Equilibrium::default(), cluster, cap);
+        t_inc = t_inc.min(t);
+        n_inc = n;
+    }
+    assert_eq!(
+        n_ref, n_inc,
+        "golden property violated: engines made different move counts"
+    );
+    let speedup = if t_inc > 0.0 { t_ref / t_inc } else { f64::INFINITY };
+    println!(
+        "  reference    {:>10} total selection ({} moves, {}/move)",
+        fmt_duration(t_ref),
+        n_ref,
+        fmt_duration(t_ref / n_ref.max(1) as f64)
+    );
+    println!(
+        "  incremental  {:>10} total selection ({} moves, {}/move)",
+        fmt_duration(t_inc),
+        n_inc,
+        fmt_duration(t_inc / n_inc.max(1) as f64)
+    );
+    println!("  speedup      {speedup:.2}x");
+    if let Some(required) = required_speedup {
+        assert!(
+            speedup >= required,
+            "cluster {cluster}: incremental selection must be ≥{required}x faster \
+             than the full-sort reference (got {speedup:.2}x)"
+        );
+        println!("  gate passed: ≥{required}x on the largest generated cluster");
+    }
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    if args.iter().any(|a| a == "--gate-only") {
+        compare_engines("b", 1_500, Some(2.0));
+        return;
+    }
     let out = PathBuf::from("target/figures");
     std::fs::create_dir_all(&out).unwrap();
 
+    let figure_clusters: &[&str] = if smoke { &["a"] } else { &["a", "b"] };
     println!("\nFigure 6 — movement calculation time distributions:");
-    for name in ["a", "b"] {
+    for name in figure_clusters {
         let c = by_name(name, 0).unwrap();
         let (mgr, eq) = run_cluster(&c, Scoring::Native, &Default::default());
         for r in [&mgr, &eq] {
@@ -71,4 +154,12 @@ fn main() {
     }
     println!("\nCSV series written to target/figures/fig6_*.csv");
     println!("shape checks passed (ours slower per move, slowest near termination)");
+
+    if smoke {
+        // tiny cluster: report the ratio but do not gate on it
+        compare_engines("a", 10_000, None);
+        println!("\nsmoke mode: speedup gate skipped (cluster A has nothing to amortize)");
+    } else {
+        compare_engines("b", 1_500, Some(2.0));
+    }
 }

@@ -6,6 +6,7 @@
 //! domain. These checks are shared by both balancers (paper §2.3:
 //! "it is important to not violate any CRUSH rules").
 
+use std::collections::BTreeMap;
 use std::ops::Range;
 
 use crate::cluster::{ClusterState, PgId};
@@ -88,15 +89,57 @@ pub fn rule_slot_constraints(
     out
 }
 
+/// Caches per-pool [`SlotConstraint`] sets across balancer iterations.
+///
+/// A pool's constraints depend only on its CRUSH rule and shard count —
+/// both immutable after cluster construction — so a balancer holds one
+/// cache for its lifetime instead of re-deriving the rule program on
+/// every movement. This is part of the batched engine's amortization
+/// (`docs/rfcs/0001-incremental-engine.md`).
+#[derive(Debug, Clone, Default)]
+pub struct ConstraintCache {
+    per_pool: BTreeMap<u32, Vec<SlotConstraint>>,
+}
+
+impl ConstraintCache {
+    /// An empty cache.
+    pub fn new() -> ConstraintCache {
+        ConstraintCache::default()
+    }
+
+    /// The slot constraints of `pool_id`, derived and cached on first
+    /// use. Panics if the pool or its rule does not exist (balancers
+    /// only ask about pools whose PGs they saw in `state`).
+    pub fn for_pool(&mut self, state: &ClusterState, pool_id: u32) -> &[SlotConstraint] {
+        self.per_pool.entry(pool_id).or_insert_with(|| {
+            let pool = &state.pools[&pool_id];
+            let rule = state.crush.rule(pool.rule_id).expect("pool references unknown rule");
+            rule_slot_constraints(state, rule, pool.redundancy.shard_count())
+        })
+    }
+
+    /// Drop every cached entry (call after mutating rules or pools).
+    pub fn invalidate(&mut self) {
+        self.per_pool.clear();
+    }
+}
+
 /// Why a movement is not allowed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Violation {
+    /// The PG id does not exist.
     UnknownPg,
+    /// The claimed source holds no shard of the PG.
     SourceNotActing,
+    /// The destination already holds a shard of the PG.
     TargetAlreadyActing,
+    /// The destination OSD is down.
     TargetDown,
+    /// The destination lacks free capacity for the shard.
     TargetFull,
+    /// The destination's device class does not match the rule's take.
     WrongClass,
+    /// The destination is outside the rule's take subtree.
     OutsideTakeSubtree,
     /// Two shards of the block would share a failure domain at `level`.
     DomainCollision(Level),
@@ -392,6 +435,27 @@ mod tests {
         for to in legal_destinations(&s, pg.id, hdd_shard) {
             assert_eq!(s.osd_class(to), DeviceClass::Hdd);
         }
+    }
+
+    #[test]
+    fn constraint_cache_matches_fresh_derivation() {
+        let s = cluster();
+        let mut cache = ConstraintCache::new();
+        for pool_id in [1u32, 2, 3] {
+            let pool = &s.pools[&pool_id];
+            let rule = s.crush.rule(pool.rule_id).unwrap();
+            let fresh = rule_slot_constraints(&s, rule, pool.redundancy.shard_count());
+            let cached = cache.for_pool(&s, pool_id);
+            assert_eq!(cached.len(), fresh.len());
+            for (a, b) in cached.iter().zip(&fresh) {
+                assert_eq!(a.slots, b.slots);
+                assert_eq!(a.class, b.class);
+                assert_eq!(a.take_root, b.take_root);
+                assert_eq!(a.distinct_at, b.distinct_at);
+            }
+        }
+        cache.invalidate();
+        assert!(!cache.for_pool(&s, 1).is_empty());
     }
 
     #[test]

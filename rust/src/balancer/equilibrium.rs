@@ -1,10 +1,13 @@
-//! The *Equilibrium* balancer — the paper's contribution (§3.1).
+//! The *Equilibrium* balancer — the paper's contribution (§3.1) — served
+//! by the **incremental engine** (`docs/rfcs/0001-incremental-engine.md`).
 //!
 //! Each iteration (Figure 3's movement-selection process):
 //!
-//! 1. **Source selection.** Sort OSDs by relative utilization
-//!    (`used/size`) in the *projected* cluster state; take the fullest as
-//!    source candidate.
+//! 1. **Source selection.** Walk OSDs from the fullest downwards in the
+//!    *projected* cluster state. The order comes from the
+//!    utilization-ordered index `ClusterState` maintains incrementally
+//!    ([`ClusterState::osds_by_utilization`]) — not from a per-iteration
+//!    full sort, which the pre-refactor loop paid on every move.
 //! 2. **Shard selection.** On the source, evaluate PG shards largest
 //!    first.
 //! 3. **Destination assignment.** The emptiest OSD that (a) complies with
@@ -12,26 +15,56 @@
 //!    their ideal pool PG-shard count, and (c) strictly reduces the
 //!    cluster-wide utilization variance.
 //! 4. If the fullest OSD offers no legal move, try the next-fullest — up
-//!    to the `k` fullest (paper default k = 25); when all `k` fail, the
-//!    algorithm has converged.
+//!    to the `k` fullest per device class (paper default k = 25); when
+//!    all fail, the algorithm has converged.
 //!
 //! Destination scoring (criterion c, evaluated for *all* candidates at
 //! once) is delegated to a [`MoveScorer`] backend: native Rust or the
 //! AOT-compiled JAX/Pallas kernel via PJRT.
+//!
+//! ## The incremental engine
+//!
+//! The per-move cost of the original loop was O(OSDs·log OSDs): sort all
+//! OSDs by utilization, rebuild per-pool shard counts, re-derive CRUSH
+//! slot constraints, and reassemble candidate vectors — on every single
+//! movement. This engine gets the source order from the state's
+//! incremental index (amortized O(log OSDs) to maintain), reads per-pool
+//! shard counts and ideal counts that `ClusterState` keeps current, and
+//! caches constraint sets plus candidate/scoring buffers across
+//! iterations and whole batches, leaving amortized
+//! O(log OSDs + candidates) per selected move.
+//!
+//! [`Equilibrium::propose_batch`] plans many movements in one call,
+//! applying each accepted move to the projected state so the next
+//! selection sees it. The emitted sequence is **identical** to the
+//! pre-refactor full-sort loop — kept as
+//! [`super::reference::ReferenceEquilibrium`] — move for move; the
+//! golden-trace suite (`rust/tests/golden_trace.rs`) pins this on the
+//! paper's synthetic clusters.
+//!
+//! Contract scope: the identity holds for any balancer whose lifetime
+//! does not span an external CRUSH **weight** mutation (`fail_osd`). A
+//! balancer kept across one sees refreshed ideal counts here (via
+//! `ClusterState::refresh_weight_caches`) where the pre-refactor loop
+//! kept its stale per-lifetime cache — an intentional correction, see
+//! RFC 0001 "Compatibility contract".
+//!
+//! [`ClusterState::osds_by_utilization`]: crate::cluster::ClusterState::osds_by_utilization
 
 use std::collections::BTreeMap;
 
-use crate::cluster::{ClusterState, PgId};
-use crate::crush::OsdId;
+use crate::cluster::{ClusterState, Movement, PgId};
+use crate::crush::{DeviceClass, OsdId};
 
-use super::constraints::{rule_slot_constraints, MoveFilter, SlotConstraint};
-use super::scoring::{MoveScorer, NativeScorer, ScoreRequest};
+use super::constraints::{ConstraintCache, MoveFilter};
+use super::scoring::{MoveScorer, NativeScorer, ScoreRequest, ScoreResponse};
 use super::{Balancer, Proposal};
 
 /// Tunables for Equilibrium.
 #[derive(Debug, Clone)]
 pub struct EquilibriumConfig {
-    /// Number of fullest source OSDs to try before giving up (paper: 25).
+    /// Number of fullest source OSDs to try per device class before
+    /// giving up (paper: 25).
     pub k: usize,
     /// Require the move to improve/maintain the deviation from the ideal
     /// pool PG-shard count on both ends (paper criterion b). Disabling
@@ -56,18 +89,55 @@ impl Default for EquilibriumConfig {
     }
 }
 
+/// Per-pool candidate-set scratch, valid for one selection pass (the
+/// projected state is frozen between accepted moves, so the vectors are
+/// built once per pool per pass and reused across that source's shards).
+#[derive(Debug, Default)]
+struct PoolScratch {
+    /// Selection pass this entry was built in.
+    pass: u64,
+    /// Up, nonzero-capacity devices of the pool's rule, in rule-device
+    /// order (the variance population of criterion c).
+    active: Vec<OsdId>,
+    /// `used` bytes per `active` entry, as f64 for the scorer.
+    used: Vec<f64>,
+    /// Capacity per `active` entry.
+    size: Vec<f64>,
+}
+
 /// The balancer. Generic over the scoring backend.
+///
+/// ```
+/// use equilibrium::balancer::Equilibrium;
+/// use equilibrium::generator::clusters;
+///
+/// let mut state = clusters::demo(42);
+/// let mut balancer = Equilibrium::default();
+/// // plan-and-apply a bounded batch on the projected state
+/// let batch = balancer.propose_batch(&mut state, 8);
+/// assert!(batch.len() <= 8);
+/// // every accepted move strictly reduced utilization variance, so the
+/// // cluster is never worse off than before
+/// assert!(state.verify().is_empty());
+/// ```
 pub struct Equilibrium<S: MoveScorer> {
+    /// Tunables.
     pub cfg: EquilibriumConfig,
     scorer: S,
-    /// Diagnostic: sources examined by the last `next_move` call
+    /// Diagnostic: sources examined by the last selection call
     /// (Figure 6's "more source devices are tried near termination").
     pub last_sources_tried: usize,
-    /// Ideal shard counts per pool — a function of CRUSH weights only, so
-    /// cached for the balancer's lifetime.
-    ideal_cache: BTreeMap<u32, Vec<f64>>,
-    /// Rule device sets per pool (also weight-static).
-    devset_cache: BTreeMap<u32, Vec<OsdId>>,
+    /// Weight-static CRUSH slot constraints per pool, cached across
+    /// iterations and whole batches.
+    constraints: ConstraintCache,
+    /// Per-pool candidate scratch (see [`PoolScratch`]).
+    scratch: BTreeMap<u32, PoolScratch>,
+    /// Monotonic selection-pass counter for scratch invalidation.
+    pass: u64,
+    /// Candidate mask scratch, reused across shards.
+    mask: Vec<bool>,
+    /// Scorer response scratch, reused across shards.
+    response: ScoreResponse,
 }
 
 impl Default for Equilibrium<NativeScorer> {
@@ -77,40 +147,92 @@ impl Default for Equilibrium<NativeScorer> {
 }
 
 impl<S: MoveScorer> Equilibrium<S> {
+    /// Create a balancer with the given tunables and scoring backend.
     pub fn new(cfg: EquilibriumConfig, scorer: S) -> Self {
         Equilibrium {
             cfg,
             scorer,
             last_sources_tried: 0,
-            ideal_cache: BTreeMap::new(),
-            devset_cache: BTreeMap::new(),
+            constraints: ConstraintCache::new(),
+            scratch: BTreeMap::new(),
+            pass: 0,
+            mask: Vec::new(),
+            response: ScoreResponse { var_before: 0.0, var_after: Vec::new() },
         }
     }
 
-    fn ideal_counts<'a>(
-        cache: &'a mut BTreeMap<u32, Vec<f64>>,
-        state: &ClusterState,
-        pool_id: u32,
-    ) -> &'a [f64] {
-        cache
-            .entry(pool_id)
-            .or_insert_with(|| state.ideal_counts(&state.pools[&pool_id]))
+    /// Plan up to `max` movements, applying each accepted move to
+    /// `state` (the projected cluster state) so the next selection sees
+    /// it. Returns the applied movements; fewer than `max` means the
+    /// algorithm converged. Constraint caches and candidate buffers are
+    /// shared across the whole batch — this is the amortized entry point
+    /// the coordinator daemon and the benches drive.
+    ///
+    /// ```
+    /// use equilibrium::balancer::Equilibrium;
+    /// use equilibrium::generator::clusters;
+    ///
+    /// let mut state = clusters::demo(42);
+    /// let before = state.utilization_variance();
+    /// let mut balancer = Equilibrium::default();
+    ///
+    /// // batches chain: each call continues from the projected state
+    /// let first = balancer.propose_batch(&mut state, 5);
+    /// let rest = balancer.propose_batch(&mut state, 10_000);
+    /// assert!(first.len() <= 5);
+    /// assert!(rest.len() < 10_000, "must converge");
+    /// assert!(
+    ///     !first.is_empty() && state.utilization_variance() < before,
+    ///     "the imbalanced demo cluster must yield improving moves"
+    /// );
+    /// ```
+    pub fn propose_batch(&mut self, state: &mut ClusterState, max: usize) -> Vec<Movement> {
+        // all amortization state (constraint cache, candidate scratch,
+        // scoring buffers) lives in `self`, so the trait's default
+        // select/apply loop already IS the batched engine — one loop,
+        // not two copies to keep in sync
+        <Self as Balancer>::propose_batch(self, state, max)
+    }
+
+    /// One movement selection on the frozen `state` (Figure 3). Walks
+    /// the utilization index fullest-first with a per-class `k` budget
+    /// and returns the first source that yields a legal,
+    /// variance-improving move.
+    fn select_move(&mut self, state: &ClusterState) -> Option<Proposal> {
+        self.pass += 1;
+        self.last_sources_tried = 0;
+        // the k budget applies per device class: the fullest HDDs must
+        // not crowd out an imbalanced SSD tier (Figure 5 optimizes both
+        // classes simultaneously). The aggregates know how many sources
+        // the budget can ever admit, so the walk stops there instead of
+        // scanning the rest of the index once every class is exhausted.
+        let budget = state.source_budget(self.cfg.k);
+        let mut taken_per_class: BTreeMap<DeviceClass, usize> = BTreeMap::new();
+        let mut proposal = None;
+        for src in state.osds_by_utilization() {
+            let c = taken_per_class.entry(state.osd_class(src)).or_insert(0);
+            *c += 1;
+            if *c > self.cfg.k {
+                continue;
+            }
+            self.last_sources_tried += 1;
+            if let Some(p) = self.try_source(state, src) {
+                proposal = Some(p);
+                break;
+            }
+            if self.last_sources_tried >= budget {
+                break; // every device class has exhausted its k budget
+            }
+        }
+        proposal
     }
 
     /// Evaluate one source OSD: the largest movable shard wins; returns
     /// the proposal or None if nothing on this source can move.
-    fn try_source(
-        &mut self,
-        state: &ClusterState,
-        src: OsdId,
-        used: &[f64],
-        size: &[f64],
-        utils: &[f64],
-        constraint_cache: &mut BTreeMap<u32, Vec<SlotConstraint>>,
-        count_cache: &mut BTreeMap<u32, Vec<u32>>,
-    ) -> Option<Proposal> {
-        // shards on the source, largest first (paper: "preferably large");
-        // tie-break by PgId for determinism
+    fn try_source(&mut self, state: &ClusterState, src: OsdId) -> Option<Proposal> {
+        let src_util = state.utilization(src);
+        // shards on the source, largest first (paper: "preferably
+        // large"); tie-break by PgId for determinism
         let mut shards: Vec<(u64, PgId)> = state
             .shards_on(src)
             .iter()
@@ -122,26 +244,11 @@ impl<S: MoveScorer> Equilibrium<S> {
             if shard_bytes == 0 {
                 continue; // empty shards cannot improve utilization
             }
-            let pool = &state.pools[&pg_id.pool];
-            let constraints = constraint_cache
-                .entry(pg_id.pool)
-                .or_insert_with(|| {
-                    rule_slot_constraints(
-                        state,
-                        state.crush.rule(pool.rule_id).expect("rule"),
-                        pool.redundancy.shard_count(),
-                    )
-                })
-                .clone();
-
-            let ideal = Self::ideal_counts(&mut self.ideal_cache, state, pg_id.pool);
-            // per-pool shard counts, computed once per next_move call
-            // (shards on one source typically share a few pools)
-            let counts = count_cache.entry(pg_id.pool).or_insert_with(|| {
-                (0..state.osd_count() as OsdId)
-                    .map(|o| state.pool_shards_on(pg_id.pool, o))
-                    .collect()
-            });
+            let pool_id = pg_id.pool;
+            // per-pool shard counts and weight-derived ideals, maintained
+            // incrementally by ClusterState — no per-iteration recount
+            let ideal = state.pool_ideal_counts(pool_id).expect("pool has aggregates");
+            let counts = state.pool_shard_counts(pool_id).expect("pool has aggregates");
 
             // criterion (b), source side: shedding one shard must not
             // worsen the source's deviation from its ideal count
@@ -159,45 +266,45 @@ impl<S: MoveScorer> Equilibrium<S> {
             // (Figure 5: "optimizes both SSD and HDD utilization
             // simultaneously"); cross-class utilization offsets are
             // unfixable by any legal move and must not mask progress.
-            let devset = self
-                .devset_cache
-                .entry(pg_id.pool)
-                .or_insert_with(|| {
-                    state
-                        .crush
-                        .rule_devices(state.crush.rule(pool.rule_id).expect("rule"))
-                })
-                .clone();
-            // exclude down / zero-capacity devices from the variance
-            // population (a failed OSD's 0-utilization lane would distort
-            // criterion c and it can never be a destination anyway)
-            let active: Vec<OsdId> = devset
-                .iter()
-                .copied()
-                .filter(|&o| state.osd_is_up(o) && state.osd_size(o) > 0)
-                .collect();
-            let Some(src_sub) = active.iter().position(|&d| d == src) else {
+            // Built once per selection pass per pool, then reused for
+            // every further shard of the pool (down / zero-capacity
+            // devices excluded — a failed OSD's 0-utilization lane would
+            // distort criterion c and it can never be a destination).
+            let scratch = self.scratch.entry(pool_id).or_default();
+            if scratch.pass != self.pass {
+                scratch.pass = self.pass;
+                scratch.active.clear();
+                scratch.used.clear();
+                scratch.size.clear();
+                for &o in state.pool_rule_devices(pool_id).expect("pool has aggregates") {
+                    if state.osd_is_up(o) && state.osd_size(o) > 0 {
+                        scratch.active.push(o);
+                        scratch.used.push(state.osd_used(o) as f64);
+                        scratch.size.push(state.osd_size(o) as f64);
+                    }
+                }
+            }
+            let Some(src_sub) = scratch.active.iter().position(|&d| d == src) else {
                 continue; // shard stranded outside its rule's devices
             };
 
-            // build subset vectors + the candidate mask: CRUSH-legal +
-            // count-improving + emptier than the source. All to-invariant
-            // work is hoisted into the MoveFilter.
-            let Ok(filter) = MoveFilter::new(state, pg_id, src, &constraints) else {
+            // candidate mask: CRUSH-legal + count-improving + emptier
+            // than the source. All to-invariant work is hoisted into the
+            // MoveFilter; the slot constraints come from the cross-batch
+            // cache.
+            let constraints = self.constraints.for_pool(state, pool_id);
+            let Ok(filter) = MoveFilter::new(state, pg_id, src, constraints) else {
                 continue;
             };
-            let m = active.len();
-            let mut used_sub = Vec::with_capacity(m);
-            let mut size_sub = Vec::with_capacity(m);
-            let mut mask = vec![false; m];
+            let m = scratch.active.len();
+            self.mask.clear();
+            self.mask.resize(m, false);
             let mut any = false;
-            for (j, &to) in active.iter().enumerate() {
-                used_sub.push(used[to as usize]);
-                size_sub.push(size[to as usize]);
+            for (j, &to) in scratch.active.iter().enumerate() {
                 if to == src {
                     continue;
                 }
-                if self.cfg.require_emptier_target && utils[to as usize] >= utils[src as usize] {
+                if self.cfg.require_emptier_target && state.utilization(to) >= src_util {
                     continue;
                 }
                 if self.cfg.require_count_improvement {
@@ -210,7 +317,7 @@ impl<S: MoveScorer> Equilibrium<S> {
                 if filter.allows(state, to).is_err() {
                     continue;
                 }
-                mask[j] = true;
+                self.mask[j] = true;
                 any = true;
             }
             if !any {
@@ -221,22 +328,24 @@ impl<S: MoveScorer> Equilibrium<S> {
             // improving candidates take the emptiest (paper: "emptiest
             // possible target OSD")
             let req = ScoreRequest {
-                used: &used_sub,
-                size: &size_sub,
+                used: &scratch.used,
+                size: &scratch.size,
                 src: src_sub,
                 shard: shard_bytes as f64,
-                mask: &mask,
+                mask: &self.mask,
             };
-            let scores = self.scorer.score(&req);
+            self.scorer.score_into(&req, &mut self.response);
             let mut best: Option<(f64, OsdId)> = None;
-            for (j, &to) in active.iter().enumerate() {
-                if !mask[j] {
+            for (j, &to) in scratch.active.iter().enumerate() {
+                if !self.mask[j] {
                     continue;
                 }
-                if scores.var_after[j] >= scores.var_before - self.cfg.min_variance_gain {
+                if self.response.var_after[j]
+                    >= self.response.var_before - self.cfg.min_variance_gain
+                {
                     continue;
                 }
-                let u = utils[to as usize];
+                let u = scratch.used[j] / scratch.size[j];
                 match best {
                     Some((bu, bo)) if (bu, bo) <= (u, to) => {}
                     _ => best = Some((u, to)),
@@ -256,51 +365,7 @@ impl<S: MoveScorer> Balancer for Equilibrium<S> {
     }
 
     fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
-        let n = state.osd_count();
-        let mut used = Vec::with_capacity(n);
-        let mut size = Vec::with_capacity(n);
-        let mut utils = Vec::with_capacity(n);
-        for o in 0..n as OsdId {
-            used.push(state.osd_used(o) as f64);
-            size.push(state.osd_size(o) as f64);
-            utils.push(state.utilization(o));
-        }
-
-        // source order: fullest first (skip down/zero-size OSDs). The k
-        // budget applies per device class: the fullest HDDs must not
-        // crowd out an imbalanced SSD tier (Figure 5 optimizes both
-        // classes simultaneously).
-        let mut order: Vec<OsdId> = (0..n as OsdId)
-            .filter(|&o| state.osd_is_up(o) && state.osd_size(o) > 0)
-            .collect();
-        order.sort_by(|&a, &b| {
-            utils[b as usize]
-                .partial_cmp(&utils[a as usize])
-                .unwrap()
-                .then(a.cmp(&b))
-        });
-        let mut taken_per_class: BTreeMap<crate::crush::DeviceClass, usize> = BTreeMap::new();
-        let sources: Vec<OsdId> = order
-            .into_iter()
-            .filter(|&o| {
-                let c = taken_per_class.entry(state.osd_class(o)).or_insert(0);
-                *c += 1;
-                *c <= self.cfg.k
-            })
-            .collect();
-
-        let mut cache: BTreeMap<u32, Vec<SlotConstraint>> = BTreeMap::new();
-        let mut count_cache: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
-        self.last_sources_tried = 0;
-        for &src in &sources {
-            self.last_sources_tried += 1;
-            if let Some(p) =
-                self.try_source(state, src, &used, &size, &utils, &mut cache, &mut count_cache)
-            {
-                return Some(p);
-            }
-        }
-        None
+        self.select_move(state)
     }
 }
 
@@ -411,5 +476,48 @@ mod tests {
             uniq.dedup();
             assert_eq!(uniq.len(), hosts.len(), "pg {} lost host distinctness", pg.id);
         }
+    }
+
+    #[test]
+    fn propose_batch_equals_stepwise_next_move() {
+        let initial = skewed_cluster();
+
+        // one-at-a-time via next_move + external apply
+        let mut s1 = initial.clone();
+        let mut b1 = Equilibrium::default();
+        let mut stepwise = Vec::new();
+        while let Some(p) = b1.next_move(&s1) {
+            let m = s1.apply_movement(p.pg, p.from, p.to).unwrap();
+            stepwise.push(m);
+            assert!(stepwise.len() < 10_000);
+        }
+
+        // chunked batches must reproduce the same sequence
+        let mut s2 = initial.clone();
+        let mut b2 = Equilibrium::default();
+        let mut batched = Vec::new();
+        loop {
+            let chunk = b2.propose_batch(&mut s2, 7);
+            let converged = chunk.len() < 7;
+            batched.extend(chunk);
+            if converged {
+                break;
+            }
+        }
+        assert_eq!(stepwise.len(), batched.len());
+        for (a, b) in stepwise.iter().zip(&batched) {
+            assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+        }
+        assert!((s1.utilization_variance() - s2.utilization_variance()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batch_cap_is_respected() {
+        let mut state = skewed_cluster();
+        let mut bal = Equilibrium::default();
+        assert_eq!(bal.propose_batch(&mut state, 0).len(), 0);
+        let batch = bal.propose_batch(&mut state, 3);
+        assert!(batch.len() <= 3);
+        assert!(state.verify().is_empty());
     }
 }

@@ -17,7 +17,7 @@
 use crate::cluster::{ClusterState, PgId};
 use crate::crush::OsdId;
 
-use super::constraints::{check_move_cached, rule_slot_constraints};
+use super::constraints::{check_move_cached, ConstraintCache};
 use super::{Balancer, Proposal};
 
 /// Tunables mirroring the osdmaptool flags.
@@ -37,27 +37,33 @@ impl Default for MgrConfig {
 }
 
 /// The baseline balancer.
+///
+/// Consumes the per-pool shard counts, ideal counts and rule device sets
+/// that [`ClusterState`] maintains incrementally (the same aggregates
+/// the Equilibrium engine uses), so the baseline's per-move cost also
+/// avoids per-iteration recounting — its *decisions* stay faithful to
+/// the documented Ceph behaviour, limitations included.
 #[derive(Debug, Default)]
 pub struct MgrBalancer {
+    /// Tunables.
     pub cfg: MgrConfig,
     moves_done: usize,
-    /// Weight-static caches (ideal counts and rule device sets per pool).
-    ideal_cache: std::collections::BTreeMap<u32, (Vec<OsdId>, Vec<f64>)>,
+    /// Weight-static CRUSH slot constraints per pool.
+    constraints: ConstraintCache,
 }
 
 impl MgrBalancer {
+    /// Create a baseline balancer with the given tunables.
     pub fn new(cfg: MgrConfig) -> Self {
-        MgrBalancer { cfg, moves_done: 0, ideal_cache: Default::default() }
+        MgrBalancer { cfg, moves_done: 0, constraints: ConstraintCache::new() }
     }
 
     /// Try to produce one movement for `pool_id`. Pool-local: only this
     /// pool's shard counts are considered.
     fn try_pool(&mut self, state: &ClusterState, pool_id: u32) -> Option<Proposal> {
-        let pool = &state.pools[&pool_id];
-        let rule = state.crush.rule(pool.rule_id)?;
-        let (devices, ideal) = self.ideal_cache.entry(pool_id).or_insert_with(|| {
-            (state.crush.rule_devices(rule), state.ideal_counts(pool))
-        });
+        let devices = state.pool_rule_devices(pool_id)?;
+        let ideal = state.pool_ideal_counts(pool_id)?;
+        let counts = state.pool_shard_counts(pool_id)?;
         if devices.len() < 2 {
             return None;
         }
@@ -66,7 +72,7 @@ impl MgrBalancer {
         let mut devs: Vec<(f64, OsdId)> = devices
             .iter()
             .map(|&o| {
-                let count = state.pool_shards_on(pool_id, o) as f64;
+                let count = counts[o as usize] as f64;
                 (count - ideal[o as usize], o)
             })
             .collect();
@@ -82,7 +88,7 @@ impl MgrBalancer {
 
         // the documented limitation: only the single most-underfull
         // destination is ever tried
-        let constraints = rule_slot_constraints(state, rule, pool.redundancy.shard_count());
+        let constraints = self.constraints.for_pool(state, pool_id);
         let mut shard_ids: Vec<PgId> = state
             .shards_on(source)
             .iter()

@@ -1,11 +1,18 @@
 //! Balancing algorithms: the paper's *Equilibrium* (size-aware, §3.1)
 //! and the Ceph `mgr balancer` baseline (count-only upmap, §2.3.1), plus
 //! the shared constraint machinery and destination-scoring backends.
+//!
+//! The production planner is the incremental engine in [`equilibrium`]
+//! (see `docs/rfcs/0001-incremental-engine.md`); [`reference`] preserves
+//! the pre-refactor full-sort loop as the golden oracle the engine is
+//! tested against.
+#![warn(missing_docs)]
 
 pub mod constraints;
 pub mod equilibrium;
 pub mod mgr;
 pub mod primary;
+pub mod reference;
 pub mod scoring;
 pub mod upmap_script;
 
@@ -15,14 +22,19 @@ use crate::crush::OsdId;
 pub use equilibrium::{Equilibrium, EquilibriumConfig};
 pub use mgr::{MgrBalancer, MgrConfig};
 pub use primary::{balance_primaries, primary_variance, PrimaryConfig, PrimarySwap};
+pub use reference::ReferenceEquilibrium;
 pub use scoring::{MoveScorer, NativeScorer, ScoreRequest, ScoreResponse};
 
 /// A movement proposed by a balancer (not yet applied).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Proposal {
+    /// The placement group whose shard moves.
     pub pg: PgId,
+    /// Source OSD (currently holds the shard).
     pub from: OsdId,
+    /// Destination OSD.
     pub to: OsdId,
+    /// Shard size at decision time.
     pub bytes: u64,
 }
 
@@ -30,30 +42,59 @@ pub struct Proposal {
 /// the projected cluster state; `None` means converged. Both balancers in
 /// the paper work exactly this way ("both balancers ... terminate once
 /// they do not find any more optimization steps", §3.2).
+///
+/// ```
+/// use equilibrium::balancer::{Balancer, Equilibrium};
+/// use equilibrium::generator::clusters;
+///
+/// let mut state = clusters::demo(42);
+/// let mut balancer = Equilibrium::default();
+/// // the one-at-a-time protocol: propose, validate, apply
+/// let p = balancer.next_move(&state).expect("demo cluster is imbalanced");
+/// assert!(state.utilization(p.to) < state.utilization(p.from));
+/// state.apply_movement(p.pg, p.from, p.to).unwrap();
+/// ```
 pub trait Balancer {
+    /// Short name for reports ("equilibrium", "mgr", ...).
     fn name(&self) -> &str;
+
+    /// Compute the next movement for the projected `state`, or `None`
+    /// when converged. The caller applies accepted proposals.
     fn next_move(&mut self, state: &ClusterState) -> Option<Proposal>;
+
+    /// Plan up to `max` movements, applying each accepted move to
+    /// `state` so the next selection sees the projected result. Returns
+    /// the applied movements; fewer than `max` means convergence.
+    ///
+    /// The default implementation drives [`Balancer::next_move`] in a
+    /// loop; engines that can amortize work across a batch (like
+    /// [`Equilibrium`]) override it. Panics if the balancer proposes an
+    /// inapplicable movement — that is a balancer bug, mirroring
+    /// [`run_to_convergence`].
+    fn propose_batch(&mut self, state: &mut ClusterState, max: usize) -> Vec<Movement> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            let Some(p) = self.next_move(state) else { break };
+            match state.apply_movement(p.pg, p.from, p.to) {
+                Ok(m) => out.push(m),
+                Err(e) => {
+                    panic!("balancer '{}' proposed invalid move {:?}: {e}", self.name(), p)
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Drive a balancer until convergence (or `max_moves`), applying each
-/// movement to `state`. Returns the applied movements.
+/// movement to `state`. Returns the applied movements. Thin wrapper over
+/// [`Balancer::propose_batch`], kept for readability at call sites.
 pub fn run_to_convergence(
     balancer: &mut dyn Balancer,
     state: &mut ClusterState,
     max_moves: usize,
 ) -> Vec<Movement> {
-    let mut out = Vec::new();
-    while out.len() < max_moves {
-        let Some(p) = balancer.next_move(state) else { break };
-        match state.apply_movement(p.pg, p.from, p.to) {
-            Ok(m) => out.push(m),
-            Err(e) => {
-                // a balancer proposing an inapplicable move is a bug
-                panic!("balancer '{}' proposed invalid move {:?}: {e}", balancer.name(), p);
-            }
-        }
-    }
-    out
+    balancer.propose_batch(state, max_moves)
 }
 
 #[cfg(test)]
@@ -63,8 +104,7 @@ mod tests {
     use crate::crush::{CrushBuilder, DeviceClass, Level, Rule};
     use crate::util::units::{GIB, TIB};
 
-    #[test]
-    fn run_to_convergence_respects_cap() {
+    fn cluster() -> ClusterState {
         let mut b = CrushBuilder::new();
         let root = b.add_root("default");
         for h in 0..5 {
@@ -73,13 +113,42 @@ mod tests {
         }
         b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
         let crush = b.build().unwrap();
-        let mut state = ClusterState::build(
+        ClusterState::build(
             crush,
             vec![Pool::replicated(1, "p", 3, 64, 0)],
             |_, i| (5 + (i % 9) as u64) * GIB,
-        );
+        )
+    }
+
+    #[test]
+    fn run_to_convergence_respects_cap() {
+        let mut state = cluster();
         let mut bal = Equilibrium::default();
         let moves = run_to_convergence(&mut bal, &mut state, 2);
         assert!(moves.len() <= 2);
+    }
+
+    /// The trait's default batching must agree with a manual
+    /// next_move/apply loop for any balancer.
+    #[test]
+    fn default_batch_impl_matches_manual_loop() {
+        let initial = cluster();
+
+        let mut s1 = initial.clone();
+        let mut b1 = MgrBalancer::default();
+        let mut manual = Vec::new();
+        while manual.len() < 40 {
+            let Some(p) = b1.next_move(&s1) else { break };
+            manual.push(s1.apply_movement(p.pg, p.from, p.to).unwrap());
+        }
+
+        let mut s2 = initial;
+        let mut b2 = MgrBalancer::default();
+        let batched = b2.propose_batch(&mut s2, 40);
+
+        assert_eq!(manual.len(), batched.len());
+        for (a, b) in manual.iter().zip(&batched) {
+            assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+        }
     }
 }

@@ -13,8 +13,11 @@ use crate::crush::OsdId;
 /// A primary reassignment instruction (`ceph osd pg-upmap-primary`-like).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrimarySwap {
+    /// The PG whose primary changes.
     pub pg: PgId,
+    /// The OSD losing the primary role.
     pub from: OsdId,
+    /// The replica holder taking over (must already hold a shard).
     pub to: OsdId,
 }
 
@@ -24,6 +27,7 @@ pub struct PrimaryConfig {
     /// Stop when every OSD's primary count is within this many of its
     /// ideal share.
     pub max_deviation: f64,
+    /// Overall swap budget.
     pub max_swaps: usize,
 }
 

@@ -39,14 +39,45 @@ pub struct ScoreRequest<'a> {
 /// variance for comparison.
 #[derive(Debug, Clone)]
 pub struct ScoreResponse {
+    /// Variance of the population before any move.
     pub var_before: f64,
+    /// Variance after a hypothetical move to each candidate (+∞ where
+    /// masked out or at the source).
     pub var_after: Vec<f64>,
 }
 
 /// A scoring backend.
+///
+/// ```
+/// use equilibrium::balancer::scoring::{MoveScorer, NativeScorer, ScoreRequest};
+///
+/// // 4 equally sized OSDs; OSD 0 is much fuller than the rest
+/// let used = [900.0, 100.0, 500.0, 500.0];
+/// let size = [1000.0; 4];
+/// let mask = [true; 4];
+/// let req = ScoreRequest { used: &used, size: &size, src: 0, shard: 200.0, mask: &mask };
+///
+/// let resp = NativeScorer.score(&req);
+/// // moving 200 units to the emptiest OSD reduces cluster variance …
+/// assert!(resp.var_after[1] < resp.var_before);
+/// // … and beats every other destination
+/// assert!(resp.var_after[1] < resp.var_after[2]);
+/// assert!(resp.var_after[0].is_infinite(), "the source is never a destination");
+/// ```
 pub trait MoveScorer {
+    /// Short backend name for reports ("native", "xla", ...).
     fn name(&self) -> &'static str;
+
+    /// Score every masked candidate destination for one source shard.
     fn score(&mut self, req: &ScoreRequest<'_>) -> ScoreResponse;
+
+    /// Like [`MoveScorer::score`], but reuses the caller's response
+    /// buffer — the batched engine calls this thousands of times per
+    /// plan and avoids one `Vec` allocation per shard. The default
+    /// implementation simply overwrites `out` with a fresh `score`.
+    fn score_into(&mut self, req: &ScoreRequest<'_>, out: &mut ScoreResponse) {
+        *out = self.score(req);
+    }
 }
 
 /// Pure-Rust scorer.
@@ -59,6 +90,12 @@ impl MoveScorer for NativeScorer {
     }
 
     fn score(&mut self, req: &ScoreRequest<'_>) -> ScoreResponse {
+        let mut out = ScoreResponse { var_before: 0.0, var_after: Vec::new() };
+        self.score_into(req, &mut out);
+        out
+    }
+
+    fn score_into(&mut self, req: &ScoreRequest<'_>, out: &mut ScoreResponse) {
         let n = req.used.len();
         assert_eq!(req.size.len(), n);
         assert_eq!(req.mask.len(), n);
@@ -74,14 +111,15 @@ impl MoveScorer for NativeScorer {
             sumsq += u * u;
         }
         let nf = n as f64;
-        let var_before = (sumsq / nf - (sum / nf) * (sum / nf)).max(0.0);
+        out.var_before = (sumsq / nf - (sum / nf) * (sum / nf)).max(0.0);
 
         let u_src = util(req.used[req.src], req.size[req.src]);
         let u_src_new = util(req.used[req.src] - req.shard, req.size[req.src]);
         let d_sum_src = u_src_new - u_src;
         let d_sq_src = u_src_new * u_src_new - u_src * u_src;
 
-        let mut var_after = vec![f64::INFINITY; n];
+        out.var_after.clear();
+        out.var_after.resize(n, f64::INFINITY);
         for j in 0..n {
             if !req.mask[j] || j == req.src {
                 continue;
@@ -90,9 +128,8 @@ impl MoveScorer for NativeScorer {
             let u_j_new = util(req.used[j] + req.shard, req.size[j]);
             let s1 = sum + d_sum_src + (u_j_new - u_j);
             let s2 = sumsq + d_sq_src + (u_j_new * u_j_new - u_j * u_j);
-            var_after[j] = (s2 / nf - (s1 / nf) * (s1 / nf)).max(0.0);
+            out.var_after[j] = (s2 / nf - (s1 / nf) * (s1 / nf)).max(0.0);
         }
-        ScoreResponse { var_before, var_after }
     }
 }
 
@@ -147,6 +184,28 @@ mod tests {
                 } else {
                     assert!((a - b).abs() < 1e-12, "slot {j}: {a} vs {b}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn score_into_reuses_buffer_and_matches_score() {
+        let mut rng = Rng::new(77);
+        let mut out = ScoreResponse { var_before: 0.0, var_after: Vec::new() };
+        for _ in 0..10 {
+            let n = 2 + rng.index(64);
+            let (used, size, src, shard, mask) = random_request(&mut rng, n);
+            let req = ScoreRequest { used: &used, size: &size, src, shard, mask: &mask };
+            let fresh = NativeScorer.score(&req);
+            NativeScorer.score_into(&req, &mut out); // reuses the buffer
+            assert_eq!(out.var_before.to_bits(), fresh.var_before.to_bits());
+            assert_eq!(out.var_after.len(), fresh.var_after.len());
+            for j in 0..n {
+                assert_eq!(
+                    out.var_after[j].to_bits(),
+                    fresh.var_after[j].to_bits(),
+                    "slot {j} must be bit-identical"
+                );
             }
         }
     }

@@ -38,18 +38,31 @@ pub fn render_plan(initial: &ClusterState, plan: &[Movement]) -> Vec<String> {
     out
 }
 
-/// Parse errors for upmap scripts.
-#[derive(Debug, thiserror::Error, PartialEq)]
+/// Parse errors for upmap scripts (payload = 1-based line number).
+#[derive(Debug, PartialEq)]
 pub enum ScriptError {
-    #[error("line {0}: not a pg-upmap command")]
+    /// The line is not a recognized pg-upmap command.
     NotUpmap(usize),
-    #[error("line {0}: malformed pg id")]
+    /// The PG id is not `<pool>.<hex>`.
     BadPgId(usize),
-    #[error("line {0}: odd number of osd ids")]
+    /// The OSD id list does not form (from, to) pairs.
     OddPairs(usize),
-    #[error("line {0}: malformed osd id")]
+    /// An OSD id failed to parse.
     BadOsd(usize),
 }
+
+impl std::fmt::Display for ScriptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScriptError::NotUpmap(line) => write!(f, "line {line}: not a pg-upmap command"),
+            ScriptError::BadPgId(line) => write!(f, "line {line}: malformed pg id"),
+            ScriptError::OddPairs(line) => write!(f, "line {line}: odd number of osd ids"),
+            ScriptError::BadOsd(line) => write!(f, "line {line}: malformed osd id"),
+        }
+    }
+}
+
+impl std::error::Error for ScriptError {}
 
 /// A parsed script: the final upmap exception table it would install.
 pub type UpmapTable = BTreeMap<PgId, Vec<(OsdId, OsdId)>>;

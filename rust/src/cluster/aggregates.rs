@@ -1,0 +1,446 @@
+//! Incrementally maintained cluster aggregates — the state-side half of
+//! the incremental balancer engine (`docs/rfcs/0001-incremental-engine.md`).
+//!
+//! [`ClusterState`](super::state::ClusterState) keeps three families of
+//! derived data current on every mutation instead of letting each
+//! balancer iteration recompute them from scratch:
+//!
+//! * a **utilization-ordered index** over the up, nonzero-capacity OSDs.
+//!   Iterating it yields devices fullest-first with ascending-id
+//!   tie-breaks — exactly the source order the paper's movement-selection
+//!   loop (§3.1, Figure 3) needs — without the per-iteration
+//!   O(OSDs·log OSDs) sort the pre-refactor loop paid;
+//! * **Σu and Σu²** of relative utilization over *all* OSDs, giving an
+//!   O(1) utilization-variance estimate
+//!   ([`ClusterState::fast_variance`](super::state::ClusterState::fast_variance))
+//!   with periodic exact renormalization to bound float drift;
+//! * **per-pool placement aggregates**: the pool's rule device set, its
+//!   weight-derived ideal per-OSD shard counts, the live per-OSD shard
+//!   counts, and the running total absolute deviation from ideal
+//!   (criterion (b)'s inputs, maintained instead of recounted).
+//!
+//! Updates cost O(log OSDs) per touched device (index) plus O(1)
+//! arithmetic. Together with the balancer-side candidate caches this
+//! turns Equilibrium's per-move selection cost from O(OSDs·log OSDs)
+//! into amortized O(log OSDs + candidates).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::crush::{CrushMap, DeviceClass, OsdId};
+
+use super::pool::Pool;
+
+/// How many incremental Σu/Σu² updates are absorbed before the sums are
+/// recomputed exactly (amortized O(1) per update; bounds float drift).
+const RENORM_EVERY: u32 = 4096;
+
+/// Relative utilization of one device (0 for zero-capacity devices,
+/// mirroring `ClusterState::utilization`).
+#[inline]
+fn util(used: u64, size: u64) -> f64 {
+    if size == 0 {
+        0.0
+    } else {
+        used as f64 / size as f64
+    }
+}
+
+/// Ordering key of one OSD in the utilization index.
+///
+/// Relative utilization is non-negative and finite here (zero-capacity
+/// devices are excluded from the index), and for such values the
+/// IEEE-754 bit pattern orders exactly like the float — so the index
+/// needs no float comparator, and equal utilizations tie-break on the
+/// device id. Iteration order therefore matches the historical
+/// `sort_by(utilization desc, id asc)` bit for bit.
+#[inline]
+fn util_key(used: u64, size: u64, osd: OsdId) -> (Reverse<u64>, OsdId) {
+    (Reverse(util(used, size).to_bits()), osd)
+}
+
+/// Weight-derived ideal shard counts of `pool` for all `n` OSDs
+/// (paper §2.2): `total_shards × weight / Σ weights` over the devices the
+/// pool's rule can use, 0 elsewhere. Shared by `ClusterState::ideal_counts`
+/// and the aggregate rebuild so both produce bit-identical values.
+pub(crate) fn ideal_counts_for(crush: &CrushMap, pool: &Pool, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n];
+    let Some(rule) = crush.rule(pool.rule_id) else {
+        return out;
+    };
+    let devices = crush.rule_devices(rule);
+    let total_weight: f64 = devices.iter().map(|&d| crush.devices[d as usize].weight).sum();
+    if total_weight <= 0.0 {
+        return out;
+    }
+    let total_shards = pool.total_shards() as f64;
+    for &d in &devices {
+        out[d as usize] = total_shards * crush.devices[d as usize].weight / total_weight;
+    }
+    out
+}
+
+/// Per-pool aggregates. All vectors are indexed by OSD id.
+#[derive(Debug, Clone)]
+pub struct PoolAggregates {
+    /// Devices the pool's CRUSH rule can ever place on (ascending ids).
+    pub devices: Vec<OsdId>,
+    /// Ideal shard count per OSD (0 outside `devices`). Weight-derived;
+    /// refreshed by `ClusterState::refresh_weight_caches` after external
+    /// CRUSH weight mutation.
+    pub ideal: Vec<f64>,
+    /// Live shard count per OSD, updated on every movement.
+    pub counts: Vec<u32>,
+    /// Running `Σ |counts − ideal|` over all OSDs (monitoring metric;
+    /// float-accumulated, re-zeroed on rebuild/refresh).
+    pub abs_deviation: f64,
+}
+
+impl PoolAggregates {
+    fn recompute_abs_deviation(&self) -> f64 {
+        self.counts
+            .iter()
+            .zip(&self.ideal)
+            .map(|(&c, &i)| (c as f64 - i).abs())
+            .sum()
+    }
+}
+
+/// The aggregate store. Owned by `ClusterState`; every state mutator
+/// keeps it current (see the module docs for what is tracked and why).
+#[derive(Debug, Clone, Default)]
+pub struct Aggregates {
+    /// Utilization-ordered index over up, nonzero-capacity OSDs.
+    by_util: BTreeSet<(Reverse<u64>, OsdId)>,
+    /// Σ of `used/size` over ALL OSDs (down and zero-capacity devices
+    /// included at their `utilization()` value — the same population
+    /// `utilization_variance` measures).
+    sum_u: f64,
+    /// Σ of `(used/size)²` over all OSDs.
+    sum_u2: f64,
+    /// Incremental updates since the sums were last recomputed exactly.
+    ops_since_renorm: u32,
+    /// Indexed-OSD count per device class (lets the balancer bound how
+    /// many sources its per-class `k` budget can ever admit, so the
+    /// index walk stops instead of scanning every remaining device).
+    indexed_per_class: BTreeMap<DeviceClass, usize>,
+    /// Per-pool aggregates, keyed by pool id.
+    pools: BTreeMap<u32, PoolAggregates>,
+}
+
+impl Aggregates {
+    // ---- read API ---------------------------------------------------------
+
+    /// OSD ids ordered by relative utilization descending, id ascending
+    /// on ties; only up, nonzero-capacity devices appear.
+    pub fn iter_by_utilization(&self) -> impl Iterator<Item = OsdId> + '_ {
+        self.by_util.iter().map(|&(_, o)| o)
+    }
+
+    /// Number of OSDs currently in the utilization index.
+    pub fn indexed_osds(&self) -> usize {
+        self.by_util.len()
+    }
+
+    /// How many sources a walk of the utilization index can admit under
+    /// a per-device-class budget of `k`: `Σ min(k, indexed of class)`.
+    /// Lets the balancer stop the walk once that many eligible sources
+    /// were seen instead of scanning the rest of the index.
+    pub fn source_budget(&self, k: usize) -> usize {
+        self.indexed_per_class.values().map(|&c| c.min(k)).sum()
+    }
+
+    /// Aggregates of one pool.
+    pub fn pool(&self, id: u32) -> Option<&PoolAggregates> {
+        self.pools.get(&id)
+    }
+
+    /// O(1) population-variance estimate of utilization over `n` OSDs
+    /// from the incremental sums.
+    pub fn fast_variance(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        let mean = self.sum_u / nf;
+        (self.sum_u2 / nf - mean * mean).max(0.0)
+    }
+
+    /// O(1) mean-utilization estimate over `n` OSDs.
+    pub fn mean_utilization(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_u / n as f64
+        }
+    }
+
+    // ---- rebuild / refresh ------------------------------------------------
+
+    /// Rebuild everything from scratch (cluster construction and load).
+    pub(crate) fn rebuild(
+        &mut self,
+        crush: &CrushMap,
+        pools: &BTreeMap<u32, Pool>,
+        used: &[u64],
+        size: &[u64],
+        up: &[bool],
+        pool_shards: &[BTreeMap<u32, u32>],
+    ) {
+        let n = used.len();
+        self.by_util.clear();
+        self.sum_u = 0.0;
+        self.sum_u2 = 0.0;
+        self.ops_since_renorm = 0;
+        self.indexed_per_class.clear();
+        for o in 0..n {
+            let u = util(used[o], size[o]);
+            self.sum_u += u;
+            self.sum_u2 += u * u;
+            if up[o] && size[o] > 0 {
+                self.by_util.insert(util_key(used[o], size[o], o as OsdId));
+                *self.indexed_per_class.entry(crush.devices[o].class).or_insert(0) += 1;
+            }
+        }
+        self.pools.clear();
+        for pool in pools.values() {
+            let mut pa = PoolAggregates {
+                devices: pool_rule_devices(crush, pool),
+                ideal: ideal_counts_for(crush, pool, n),
+                counts: vec![0; n],
+                abs_deviation: 0.0,
+            };
+            for (o, shards) in pool_shards.iter().enumerate() {
+                if let Some(&c) = shards.get(&pool.id) {
+                    pa.counts[o] = c;
+                }
+            }
+            pa.abs_deviation = pa.recompute_abs_deviation();
+            self.pools.insert(pool.id, pa);
+        }
+    }
+
+    /// Recompute the weight-derived parts (rule device sets, ideal
+    /// counts) after a CRUSH weight mutation, keeping the live shard
+    /// counts. Called by `ClusterState::refresh_weight_caches`.
+    pub(crate) fn refresh_weights(&mut self, crush: &CrushMap, pools: &BTreeMap<u32, Pool>, n: usize) {
+        for pool in pools.values() {
+            if let Some(pa) = self.pools.get_mut(&pool.id) {
+                pa.devices = pool_rule_devices(crush, pool);
+                pa.ideal = ideal_counts_for(crush, pool, n);
+                pa.abs_deviation = pa.recompute_abs_deviation();
+            }
+        }
+    }
+
+    // ---- incremental updates ----------------------------------------------
+
+    /// One OSD's `used` bytes changed (movement, client write, deletion).
+    pub(crate) fn used_changed(
+        &mut self,
+        osd: OsdId,
+        old_used: u64,
+        new_used: u64,
+        size: u64,
+        up: bool,
+    ) {
+        let old_u = util(old_used, size);
+        let new_u = util(new_used, size);
+        self.sum_u += new_u - old_u;
+        self.sum_u2 += new_u * new_u - old_u * old_u;
+        self.ops_since_renorm += 1;
+        if up && size > 0 {
+            self.by_util.remove(&util_key(old_used, size, osd));
+            self.by_util.insert(util_key(new_used, size, osd));
+        }
+    }
+
+    /// An OSD changed up/down state: index membership changes, the sums
+    /// do not (the variance population includes down devices).
+    pub(crate) fn up_changed(&mut self, osd: OsdId, used: u64, size: u64, up: bool, class: DeviceClass) {
+        if size == 0 {
+            return;
+        }
+        if up {
+            self.by_util.insert(util_key(used, size, osd));
+            *self.indexed_per_class.entry(class).or_insert(0) += 1;
+        } else {
+            self.by_util.remove(&util_key(used, size, osd));
+            if let Some(c) = self.indexed_per_class.get_mut(&class) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    self.indexed_per_class.remove(&class);
+                }
+            }
+        }
+    }
+
+    /// A shard of `pool` moved `from → to`.
+    pub(crate) fn shard_moved(&mut self, pool: u32, from: OsdId, to: OsdId) {
+        if let Some(pa) = self.pools.get_mut(&pool) {
+            let (f, t) = (from as usize, to as usize);
+            let df0 = (pa.counts[f] as f64 - pa.ideal[f]).abs();
+            let dt0 = (pa.counts[t] as f64 - pa.ideal[t]).abs();
+            pa.counts[f] = pa.counts[f].saturating_sub(1);
+            pa.counts[t] += 1;
+            let df1 = (pa.counts[f] as f64 - pa.ideal[f]).abs();
+            let dt1 = (pa.counts[t] as f64 - pa.ideal[t]).abs();
+            pa.abs_deviation += (df1 - df0) + (dt1 - dt0);
+        }
+    }
+
+    /// Exact recomputation of Σu/Σu² every `RENORM_EVERY` updates.
+    pub(crate) fn maybe_renormalize(&mut self, used: &[u64], size: &[u64]) {
+        if self.ops_since_renorm < RENORM_EVERY {
+            return;
+        }
+        self.ops_since_renorm = 0;
+        let mut s = 0.0;
+        let mut s2 = 0.0;
+        for o in 0..used.len() {
+            let u = util(used[o], size[o]);
+            s += u;
+            s2 += u * u;
+        }
+        self.sum_u = s;
+        self.sum_u2 = s2;
+    }
+
+    // ---- self-check -------------------------------------------------------
+
+    /// Compare every aggregate against a from-scratch recomputation;
+    /// returns human-readable drift reports (used by
+    /// `ClusterState::verify`).
+    pub(crate) fn check(
+        &self,
+        crush: &CrushMap,
+        pools: &BTreeMap<u32, Pool>,
+        used: &[u64],
+        size: &[u64],
+        up: &[bool],
+        pool_shards: &[BTreeMap<u32, u32>],
+    ) -> Vec<String> {
+        let mut problems = Vec::new();
+        let n = used.len();
+
+        let mut expect_index: BTreeSet<(Reverse<u64>, OsdId)> = BTreeSet::new();
+        let mut s = 0.0;
+        let mut s2 = 0.0;
+        for o in 0..n {
+            let u = util(used[o], size[o]);
+            s += u;
+            s2 += u * u;
+            if up[o] && size[o] > 0 {
+                expect_index.insert(util_key(used[o], size[o], o as OsdId));
+            }
+        }
+        if expect_index != self.by_util {
+            problems.push(format!(
+                "utilization index drift: tracked {} entries, expected {}",
+                self.by_util.len(),
+                expect_index.len()
+            ));
+        }
+        let mut expect_classes: BTreeMap<DeviceClass, usize> = BTreeMap::new();
+        for &(_, o) in &expect_index {
+            *expect_classes.entry(crush.devices[o as usize].class).or_insert(0) += 1;
+        }
+        if expect_classes != self.indexed_per_class {
+            problems.push(format!(
+                "per-class index count drift: tracked {:?}, expected {:?}",
+                self.indexed_per_class, expect_classes
+            ));
+        }
+        let tol = 1e-6 * s.abs().max(1.0);
+        if (self.sum_u - s).abs() > tol || (self.sum_u2 - s2).abs() > tol {
+            problems.push(format!(
+                "utilization sum drift: Σu {} vs {}, Σu² {} vs {}",
+                self.sum_u, s, self.sum_u2, s2
+            ));
+        }
+
+        if self.pools.len() != pools.len() {
+            problems.push(format!(
+                "pool aggregate count drift: tracked {}, expected {}",
+                self.pools.len(),
+                pools.len()
+            ));
+        }
+        for pool in pools.values() {
+            let Some(pa) = self.pools.get(&pool.id) else {
+                problems.push(format!("pool {} has no aggregates", pool.id));
+                continue;
+            };
+            for o in 0..n {
+                let expect = pool_shards[o].get(&pool.id).copied().unwrap_or(0);
+                if pa.counts.get(o).copied().unwrap_or(0) != expect {
+                    problems.push(format!(
+                        "pool {} count drift on osd.{o}: tracked {} != {}",
+                        pool.id,
+                        pa.counts.get(o).copied().unwrap_or(0),
+                        expect
+                    ));
+                }
+            }
+            let ideal = ideal_counts_for(crush, pool, n);
+            if pa.ideal != ideal {
+                problems.push(format!(
+                    "pool {} ideal-count cache stale (weights changed without refresh_weight_caches?)",
+                    pool.id
+                ));
+            }
+            let dev = pa.recompute_abs_deviation();
+            if (pa.abs_deviation - dev).abs() > 1e-6 * dev.abs().max(1.0) {
+                problems.push(format!(
+                    "pool {} abs-deviation drift: tracked {} != {}",
+                    pool.id, pa.abs_deviation, dev
+                ));
+            }
+        }
+        problems
+    }
+}
+
+/// Devices a pool's rule can place on (sorted, deduplicated).
+fn pool_rule_devices(crush: &CrushMap, pool: &Pool) -> Vec<OsdId> {
+    match crush.rule(pool.rule_id) {
+        Some(rule) => crush.rule_devices(rule),
+        None => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn util_key_orders_like_float_sort() {
+        // descending utilization, ascending id on ties
+        let keys = [
+            util_key(9, 10, 4), // 0.9
+            util_key(5, 10, 7), // 0.5
+            util_key(5, 10, 2), // 0.5 — same util, lower id
+            util_key(0, 10, 1), // 0.0
+        ];
+        let mut set = BTreeSet::new();
+        for k in keys {
+            set.insert(k);
+        }
+        let order: Vec<OsdId> = set.iter().map(|&(_, o)| o).collect();
+        assert_eq!(order, vec![4, 2, 7, 1]);
+    }
+
+    #[test]
+    fn util_bits_monotonic_for_nonnegative() {
+        let mut prev = f64::NEG_INFINITY;
+        for u in [0.0, 1e-12, 0.1, 0.5, 0.999, 1.0, 1.5, 100.0] {
+            assert!(u > prev);
+            prev = u;
+        }
+        // bit patterns order the same way
+        let vals = [0.0f64, 1e-12, 0.1, 0.5, 0.999, 1.0, 1.5, 100.0];
+        for w in vals.windows(2) {
+            assert!(w[0].to_bits() < w[1].to_bits(), "{} vs {}", w[0], w[1]);
+        }
+    }
+}

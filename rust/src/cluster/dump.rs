@@ -18,14 +18,46 @@ use super::pool::{Pool, PoolKind, Redundancy};
 use super::state::ClusterState;
 
 /// Errors while loading a dump.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DumpError {
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("dump format: {0}")]
+    /// JSON syntax error in the input text.
+    Json(crate::util::json::JsonError),
+    /// Structurally valid JSON that is not a valid cluster dump.
     Format(String),
-    #[error("crush: {0}")]
-    Crush(#[from] crate::crush::BuildError),
+    /// The embedded CRUSH map failed validation.
+    Crush(crate::crush::BuildError),
+}
+
+impl std::fmt::Display for DumpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DumpError::Json(e) => write!(f, "json: {e}"),
+            DumpError::Format(msg) => write!(f, "dump format: {msg}"),
+            DumpError::Crush(e) => write!(f, "crush: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DumpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DumpError::Json(e) => Some(e),
+            DumpError::Crush(e) => Some(e),
+            DumpError::Format(_) => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for DumpError {
+    fn from(e: crate::util::json::JsonError) -> DumpError {
+        DumpError::Json(e)
+    }
+}
+
+impl From<crate::crush::BuildError> for DumpError {
+    fn from(e: crate::crush::BuildError) -> DumpError {
+        DumpError::Crush(e)
+    }
 }
 
 fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, DumpError> {

@@ -1,6 +1,7 @@
 //! Cluster model: pools, placement groups, OSD accounting, capacity
 //! prediction, and the JSON dump/load interchange format.
 
+pub mod aggregates;
 pub mod dump;
 pub mod health;
 pub mod pg;
@@ -8,6 +9,7 @@ pub mod pool;
 pub mod recovery;
 pub mod state;
 
+pub use aggregates::{Aggregates, PoolAggregates};
 pub use pg::{Movement, Pg, PgId};
 pub use pool::{Pool, PoolKind, Redundancy};
 pub use recovery::{fail_osd, random_up_osd, FailureReport};

@@ -33,6 +33,9 @@ pub fn fail_osd(state: &mut ClusterState, osd: OsdId) -> FailureReport {
     state.crush.devices[osd as usize].weight = 0.0;
     state.crush.recompute_weights();
     state.crush.rebuild_ancestor_cache();
+    // the weight change shifts every pool's ideal shard counts; the
+    // state-level caches must follow before any balancer consults them
+    state.refresh_weight_caches();
 
     // every PG holding a shard on the failed device must re-place it
     let affected: Vec<PgId> = state.shards_on(osd).to_vec();

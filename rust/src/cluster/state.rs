@@ -14,25 +14,67 @@ use crate::crush::{map_rule, pg_input, CrushMap, DeviceClass, OsdId};
 use crate::util::stats;
 use crate::util::units::TIB;
 
+use super::aggregates::{ideal_counts_for, Aggregates};
 use super::pg::{Movement, Pg, PgId};
 use super::pool::{Pool, PoolKind};
 
 /// Errors from applying movements.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum StateError {
-    #[error("unknown pg {0}")]
+    /// The PG id does not exist in the cluster.
     UnknownPg(PgId),
-    #[error("pg {pg} has no shard on osd.{osd}")]
-    NotOnSource { pg: PgId, osd: OsdId },
-    #[error("pg {pg} already has a shard on osd.{osd}")]
-    AlreadyOnTarget { pg: PgId, osd: OsdId },
-    #[error("osd.{0} does not exist")]
+    /// The PG has no shard on the claimed source OSD.
+    NotOnSource {
+        /// The PG in question.
+        pg: PgId,
+        /// The claimed source.
+        osd: OsdId,
+    },
+    /// The PG already has a shard on the destination OSD.
+    AlreadyOnTarget {
+        /// The PG in question.
+        pg: PgId,
+        /// The claimed destination.
+        osd: OsdId,
+    },
+    /// The OSD id is out of range.
     UnknownOsd(OsdId),
-    #[error("osd.{0} is down")]
+    /// The destination OSD is down.
     OsdDown(OsdId),
-    #[error("movement would overfill osd.{osd} ({used} used + {add} > {size})")]
-    WouldOverfill { osd: OsdId, used: u64, add: u64, size: u64 },
+    /// The movement would exceed the destination's raw capacity.
+    WouldOverfill {
+        /// The destination OSD.
+        osd: OsdId,
+        /// Its current used bytes.
+        used: u64,
+        /// The shard bytes the movement would add.
+        add: u64,
+        /// Its raw capacity.
+        size: u64,
+    },
 }
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateError::UnknownPg(pg) => write!(f, "unknown pg {pg}"),
+            StateError::NotOnSource { pg, osd } => {
+                write!(f, "pg {pg} has no shard on osd.{osd}")
+            }
+            StateError::AlreadyOnTarget { pg, osd } => {
+                write!(f, "pg {pg} already has a shard on osd.{osd}")
+            }
+            StateError::UnknownOsd(osd) => write!(f, "osd.{osd} does not exist"),
+            StateError::OsdDown(osd) => write!(f, "osd.{osd} is down"),
+            StateError::WouldOverfill { osd, used, add, size } => write!(
+                f,
+                "movement would overfill osd.{osd} ({used} used + {add} > {size})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StateError {}
 
 /// The cluster.
 #[derive(Debug, Clone)]
@@ -50,6 +92,9 @@ pub struct ClusterState {
     osd_pgs: Vec<Vec<PgId>>,
     /// Per-OSD, per-pool shard counts (for ideal-count balancing).
     osd_pool_shards: Vec<BTreeMap<u32, u32>>,
+    /// Incrementally maintained aggregates (utilization index, Σu/Σu²,
+    /// per-pool counts/ideals) — see [`super::aggregates`].
+    agg: Aggregates,
 }
 
 impl ClusterState {
@@ -77,6 +122,7 @@ impl ClusterState {
             osd_up: vec![true; n],
             osd_pgs: vec![Vec::new(); n],
             osd_pool_shards: vec![BTreeMap::new(); n],
+            agg: Aggregates::default(),
         };
         for pool in &pools {
             let rule = state
@@ -97,6 +143,7 @@ impl ClusterState {
                 state.pgs.insert(pg.id, pg);
             }
         }
+        state.rebuild_aggregates();
         state
     }
 
@@ -124,12 +171,36 @@ impl ClusterState {
             osd_up: vec![true; n],
             osd_pgs: vec![Vec::new(); n],
             osd_pool_shards: vec![BTreeMap::new(); n],
+            agg: Aggregates::default(),
         };
         for pg in pgs {
             state.index_pg(&pg);
             state.pgs.insert(pg.id, pg);
         }
+        state.rebuild_aggregates();
         state
+    }
+
+    /// Rebuild the incremental aggregates from the primary data. Called
+    /// once at construction; afterwards every mutator maintains them.
+    fn rebuild_aggregates(&mut self) {
+        self.agg.rebuild(
+            &self.crush,
+            &self.pools,
+            &self.osd_used,
+            &self.osd_size,
+            &self.osd_up,
+            &self.osd_pool_shards,
+        );
+    }
+
+    /// Recompute the weight-derived aggregate caches (per-pool rule
+    /// device sets and ideal shard counts) after the CRUSH map's weights
+    /// were mutated externally — e.g. [`super::recovery::fail_osd`]
+    /// zeroes a failed device's weight. Placement-derived aggregates
+    /// (shard counts, utilization index) are unaffected.
+    pub fn refresh_weight_caches(&mut self) {
+        self.agg.refresh_weights(&self.crush, &self.pools, self.osd_size.len());
     }
 
     fn index_pg(&mut self, pg: &Pg) {
@@ -164,7 +235,13 @@ impl ClusterState {
     }
 
     pub fn set_osd_up(&mut self, osd: OsdId, up: bool) {
-        self.osd_up[osd as usize] = up;
+        let o = osd as usize;
+        if self.osd_up[o] == up {
+            return;
+        }
+        self.osd_up[o] = up;
+        let class = self.crush.devices[o].class;
+        self.agg.up_changed(osd, self.osd_used[o], self.osd_size[o], up, class);
     }
 
     pub fn osd_class(&self, osd: OsdId) -> DeviceClass {
@@ -187,9 +264,69 @@ impl ClusterState {
     }
 
     /// Population variance of OSD utilization — the paper's balance
-    /// metric (Figures 4/5 right panels).
+    /// metric (Figures 4/5 right panels). Exact (recomputed from the
+    /// per-OSD data); see [`ClusterState::fast_variance`] for the O(1)
+    /// incremental estimate.
     pub fn utilization_variance(&self) -> f64 {
         stats::variance(&self.utilizations())
+    }
+
+    /// O(1) estimate of [`ClusterState::utilization_variance`] from the
+    /// incrementally maintained Σu/Σu² (renormalized periodically, so
+    /// drift stays below ~1e-9 relative). Monitoring/throttling signal —
+    /// strict-decrease assertions should use the exact variant.
+    pub fn fast_variance(&self) -> f64 {
+        self.agg.fast_variance(self.osd_count())
+    }
+
+    /// O(1) mean relative utilization over all OSDs, from the
+    /// incremental Σu.
+    pub fn mean_utilization(&self) -> f64 {
+        self.agg.mean_utilization(self.osd_count())
+    }
+
+    /// OSD ids in the balancer's source order — relative utilization
+    /// descending, id ascending on ties; down and zero-capacity devices
+    /// excluded. Backed by the incrementally maintained utilization
+    /// index: starting the iteration is O(1) instead of the historical
+    /// O(OSDs·log OSDs) sort per balancer iteration.
+    pub fn osds_by_utilization(&self) -> impl Iterator<Item = OsdId> + '_ {
+        self.agg.iter_by_utilization()
+    }
+
+    /// Upper bound on the sources a fullest-first walk can admit under a
+    /// per-device-class budget of `k` (`Σ min(k, indexed devices of the
+    /// class)`). Balancers stop their index walk after this many
+    /// eligible sources instead of scanning the whole index.
+    pub fn source_budget(&self, k: usize) -> usize {
+        self.agg.source_budget(k)
+    }
+
+    /// Live per-OSD shard counts of `pool` (indexed by OSD id),
+    /// maintained incrementally across movements. `None` for unknown
+    /// pools.
+    pub fn pool_shard_counts(&self, pool: u32) -> Option<&[u32]> {
+        self.agg.pool(pool).map(|pa| pa.counts.as_slice())
+    }
+
+    /// Weight-derived ideal per-OSD shard counts of `pool` (0 for OSDs
+    /// its rule cannot use). Cached; refreshed by
+    /// [`ClusterState::refresh_weight_caches`].
+    pub fn pool_ideal_counts(&self, pool: u32) -> Option<&[f64]> {
+        self.agg.pool(pool).map(|pa| pa.ideal.as_slice())
+    }
+
+    /// Devices the pool's CRUSH rule can ever place on (ascending ids).
+    /// Cached per pool; this is the candidate set balancers iterate.
+    pub fn pool_rule_devices(&self, pool: u32) -> Option<&[OsdId]> {
+        self.agg.pool(pool).map(|pa| pa.devices.as_slice())
+    }
+
+    /// Running `Σ |shard count − ideal|` of `pool` over all OSDs — the
+    /// count-balance convergence metric, maintained incrementally
+    /// (0.0 for unknown pools).
+    pub fn pool_count_deviation(&self, pool: u32) -> f64 {
+        self.agg.pool(pool).map(|pa| pa.abs_deviation).unwrap_or(0.0)
     }
 
     /// Variance restricted to one device class (Figure 5 tracks HDD and
@@ -260,26 +397,12 @@ impl ClusterState {
     }
 
     /// Ideal shard counts of `pool` for *all* OSDs in one pass (0 for
-    /// OSDs the pool's rule cannot use). O(devices); balancers cache the
-    /// result — it depends only on CRUSH weights, not on placement.
+    /// OSDs the pool's rule cannot use). O(devices); depends only on
+    /// CRUSH weights, not on placement. The per-pool cached variant is
+    /// [`ClusterState::pool_ideal_counts`] — both produce bit-identical
+    /// values (shared implementation).
     pub fn ideal_counts(&self, pool: &Pool) -> Vec<f64> {
-        let mut out = vec![0.0; self.osd_count()];
-        let Some(rule) = self.crush.rule(pool.rule_id) else {
-            return out;
-        };
-        let devices = self.crush.rule_devices(rule);
-        let total_weight: f64 = devices
-            .iter()
-            .map(|&d| self.crush.devices[d as usize].weight)
-            .sum();
-        if total_weight <= 0.0 {
-            return out;
-        }
-        let total_shards = pool.total_shards() as f64;
-        for &d in &devices {
-            out[d as usize] = total_shards * self.crush.devices[d as usize].weight / total_weight;
-        }
-        out
+        ideal_counts_for(&self.crush, pool, self.osd_count())
     }
 
     // ---- pool capacity (paper §2.1) ----------------------------------------
@@ -385,9 +508,26 @@ impl ClusterState {
             self.upmap.remove(&pg_id);
         }
 
-        // accounting
+        // accounting (aggregates track every delta: utilization index,
+        // Σu/Σu², per-pool shard counts)
+        let from_used_old = self.osd_used[from as usize];
+        let to_used_old = self.osd_used[to as usize];
         self.osd_used[from as usize] -= bytes;
         self.osd_used[to as usize] += bytes;
+        self.agg.used_changed(
+            from,
+            from_used_old,
+            self.osd_used[from as usize],
+            self.osd_size[from as usize],
+            self.osd_up[from as usize],
+        );
+        self.agg.used_changed(
+            to,
+            to_used_old,
+            self.osd_used[to as usize],
+            self.osd_size[to as usize],
+            self.osd_up[to as usize],
+        );
         let fpgs = &mut self.osd_pgs[from as usize];
         if let Some(pos) = fpgs.iter().position(|&p| p == pg_id) {
             fpgs.swap_remove(pos);
@@ -399,6 +539,8 @@ impl ClusterState {
             self.osd_pool_shards[from as usize].remove(&pg_id.pool);
         }
         *self.osd_pool_shards[to as usize].entry(pg_id.pool).or_insert(0) += 1;
+        self.agg.shard_moved(pg_id.pool, from, to);
+        self.agg.maybe_renormalize(&self.osd_used, &self.osd_size);
 
         Ok(Movement { pg: pg_id, from, to, bytes })
     }
@@ -410,8 +552,12 @@ impl ClusterState {
         pg.shard_bytes += bytes_per_shard;
         let devices: Vec<OsdId> = pg.devices().collect();
         for osd in devices {
-            self.osd_used[osd as usize] += bytes_per_shard;
+            let o = osd as usize;
+            let old = self.osd_used[o];
+            self.osd_used[o] += bytes_per_shard;
+            self.agg.used_changed(osd, old, self.osd_used[o], self.osd_size[o], self.osd_up[o]);
         }
+        self.agg.maybe_renormalize(&self.osd_used, &self.osd_size);
         Ok(())
     }
 
@@ -451,8 +597,12 @@ impl ClusterState {
         pg.shard_bytes -= delta;
         let devices: Vec<OsdId> = pg.devices().collect();
         for osd in devices {
-            self.osd_used[osd as usize] -= delta;
+            let o = osd as usize;
+            let old = self.osd_used[o];
+            self.osd_used[o] -= delta;
+            self.agg.used_changed(osd, old, self.osd_used[o], self.osd_size[o], self.osd_up[o]);
         }
+        self.agg.maybe_renormalize(&self.osd_used, &self.osd_size);
         Ok(())
     }
 
@@ -496,6 +646,14 @@ impl ClusterState {
                 problems.push(format!("osd.{o} pool shard-count drift"));
             }
         }
+        problems.extend(self.agg.check(
+            &self.crush,
+            &self.pools,
+            &self.osd_used,
+            &self.osd_size,
+            &self.osd_up,
+            &self.osd_pool_shards,
+        ));
         problems
     }
 }
@@ -672,6 +830,98 @@ mod tests {
         let before = s.total_used();
         s.grow_pg(pg, GIB).unwrap();
         assert_eq!(s.total_used(), before + 3 * GIB);
+        assert!(s.verify().is_empty());
+    }
+
+    /// The incremental utilization index must equal a fresh sort at all
+    /// times (the golden property the balancer's source order rests on).
+    fn expect_order(s: &ClusterState) -> Vec<OsdId> {
+        let mut order: Vec<OsdId> = (0..s.osd_count() as OsdId)
+            .filter(|&o| s.osd_is_up(o) && s.osd_size(o) > 0)
+            .collect();
+        order.sort_by(|&a, &b| {
+            s.utilization(b)
+                .partial_cmp(&s.utilization(a))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    #[test]
+    fn utilization_index_matches_sort_under_mutations() {
+        let mut s = small_cluster();
+        assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
+
+        // a movement reorders two devices
+        let pg = s.pgs().next().unwrap().id;
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let to = (0..s.osd_count() as OsdId).find(|&o| !s.pg(pg).unwrap().on(o)).unwrap();
+        s.apply_movement(pg, from, to).unwrap();
+        assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
+
+        // writes re-rank devices
+        let other = s.pgs().nth(5).unwrap().id;
+        s.grow_pg(other, 37 * GIB).unwrap();
+        assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
+        s.shrink_pg_by(other, 11 * GIB).unwrap();
+        assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
+
+        // down devices leave the index, returning devices re-enter
+        s.set_osd_up(3, false);
+        assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
+        assert!(!s.osds_by_utilization().any(|o| o == 3));
+        assert_eq!(s.source_budget(25), 7, "7 of 8 uniform-class OSDs up");
+        assert_eq!(s.source_budget(3), 3, "k caps the single class");
+        s.set_osd_up(3, true);
+        assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
+        assert_eq!(s.source_budget(25), 8);
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+    }
+
+    #[test]
+    fn fast_variance_tracks_exact_variance() {
+        let mut s = small_cluster();
+        assert!((s.fast_variance() - s.utilization_variance()).abs() < 1e-12);
+        let pgs: Vec<PgId> = s.pgs().map(|p| p.id).collect();
+        for (i, pg) in pgs.iter().enumerate() {
+            s.grow_pg(*pg, (1 + i as u64 % 5) * GIB).unwrap();
+        }
+        let exact = s.utilization_variance();
+        assert!(
+            (s.fast_variance() - exact).abs() <= 1e-9 * exact.max(1e-12),
+            "fast {} vs exact {}",
+            s.fast_variance(),
+            exact
+        );
+        // mean estimate agrees too
+        let mean = s.utilizations().iter().sum::<f64>() / s.osd_count() as f64;
+        assert!((s.mean_utilization() - mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_aggregates_match_primary_data() {
+        let mut s = small_cluster();
+        let counts = s.pool_shard_counts(1).unwrap().to_vec();
+        for o in 0..s.osd_count() as OsdId {
+            assert_eq!(counts[o as usize], s.pool_shards_on(1, o));
+        }
+        let ideal = s.pool_ideal_counts(1).unwrap().to_vec();
+        let expect = s.ideal_counts(&s.pools[&1].clone());
+        assert_eq!(ideal, expect);
+        let devices = s.pool_rule_devices(1).unwrap();
+        assert_eq!(devices.len(), s.osd_count());
+
+        // deviation metric stays consistent across a movement
+        let pg = s.pgs().next().unwrap().id;
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let to = (0..s.osd_count() as OsdId).find(|&o| !s.pg(pg).unwrap().on(o)).unwrap();
+        s.apply_movement(pg, from, to).unwrap();
+        let manual: f64 = (0..s.osd_count() as OsdId)
+            .map(|o| (s.pool_shards_on(1, o) as f64 - s.pool_ideal_counts(1).unwrap()[o as usize]).abs())
+            .sum();
+        assert!((s.pool_count_deviation(1) - manual).abs() < 1e-9);
+        assert!(s.pool_shard_counts(99).is_none());
         assert!(s.verify().is_empty());
     }
 }

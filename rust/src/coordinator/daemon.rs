@@ -139,21 +139,16 @@ pub fn run_daemon(
             log.push(vtime, Event::WritesApplied { round, user_bytes: written });
         }
 
-        // 2. plan a bounded batch (backpressure; adaptive when configured)
+        // 2. plan a bounded batch (backpressure; adaptive when
+        //    configured). One `propose_batch` call lets engines amortize
+        //    constraint caches and candidate buffers across the whole
+        //    round instead of paying per-move setup `budget` times.
         let budget = throttle.as_ref().map(|t| t.budget()).unwrap_or(cfg.moves_per_round);
         let t0 = std::time::Instant::now();
-        let mut plan = Vec::new();
-        let mut converged = false;
-        while plan.len() < budget {
-            let Some(p) = balancer.next_move(state) else {
-                converged = true;
-                break;
-            };
-            let m = state
-                .apply_movement(p.pg, p.from, p.to)
-                .expect("daemon: balancer proposed invalid move");
-            plan.push(m);
-        }
+        let plan = balancer.propose_batch(state, budget);
+        // a batch shorter than its budget means the balancer ran out of
+        // legal, variance-improving moves — the round converged
+        let converged = plan.len() < budget;
         let calc = t0.elapsed().as_secs_f64();
         let moved_bytes: u64 = plan.iter().map(|m| m.bytes).sum();
         log.push(

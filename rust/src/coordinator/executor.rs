@@ -51,6 +51,10 @@ pub struct ExecutionReport {
     /// Peak number of simultaneous transfers.
     pub peak_concurrency: usize,
     pub total_bytes: u64,
+    /// Per-OSD transfer-lane occupancy, seconds: every transfer adds its
+    /// duration to both endpoints. Shows which devices bound a batch —
+    /// the makespan is at least `max(osd_busy_seconds) / max_backfills`.
+    pub osd_busy_seconds: Vec<f64>,
 }
 
 impl ExecutionReport {
@@ -61,6 +65,17 @@ impl ExecutionReport {
         } else {
             0.0
         }
+    }
+
+    /// The OSD whose transfer lanes were occupied longest (the batch's
+    /// bottleneck device), with its busy seconds. None for empty plans.
+    pub fn bottleneck(&self) -> Option<(OsdId, f64)> {
+        self.osd_busy_seconds
+            .iter()
+            .enumerate()
+            .filter(|&(_, &b)| b > 0.0)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .map(|(o, &b)| (o as OsdId, b))
     }
 }
 
@@ -93,6 +108,7 @@ impl Ord for Finish {
 /// have a free backfill slot starts.
 pub fn execute_plan(plan: &[Movement], cfg: &ExecutorConfig, osd_count: usize) -> ExecutionReport {
     let mut inflight_per_osd: Vec<usize> = vec![0; osd_count];
+    let mut busy_per_osd: Vec<f64> = vec![0.0; osd_count];
     let mut pending: Vec<usize> = (0..plan.len()).collect(); // indices, plan order
     let mut finish_heap: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
     let mut transfers: Vec<TransferRecord> = Vec::with_capacity(plan.len());
@@ -124,6 +140,8 @@ pub fn execute_plan(plan: &[Movement], cfg: &ExecutorConfig, osd_count: usize) -
                     running += 1;
                     peak = peak.max(running);
                     let dur = m.bytes as f64 / cfg.bandwidth;
+                    busy_per_osd[m.from as usize] += dur;
+                    busy_per_osd[m.to as usize] += dur;
                     finish_heap.push(Reverse(Finish { time: now + dur, idx: i }));
                     transfers.push(TransferRecord { movement: *m, start: now, finish: now + dur });
                     made_progress = true;
@@ -142,7 +160,13 @@ pub fn execute_plan(plan: &[Movement], cfg: &ExecutorConfig, osd_count: usize) -
     }
 
     let total_bytes = plan.iter().map(|m| m.bytes).sum();
-    ExecutionReport { transfers, makespan: now, peak_concurrency: peak, total_bytes }
+    ExecutionReport {
+        transfers,
+        makespan: now,
+        peak_concurrency: peak,
+        total_bytes,
+        osd_busy_seconds: busy_per_osd,
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +231,22 @@ mod tests {
         assert_eq!(rep.total_bytes, 400);
         assert!((rep.makespan - 150.0).abs() < 1e-9);
         assert!((rep.throughput() - 400.0 / 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_seconds_account_both_endpoints() {
+        let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 1.0 };
+        let plan = vec![mv(0, 0, 1, 100), mv(1, 0, 2, 50)];
+        let rep = execute_plan(&plan, &cfg, 3);
+        assert!((rep.osd_busy_seconds[0] - 150.0).abs() < 1e-9);
+        assert!((rep.osd_busy_seconds[1] - 100.0).abs() < 1e-9);
+        assert!((rep.osd_busy_seconds[2] - 50.0).abs() < 1e-9);
+        let (osd, busy) = rep.bottleneck().unwrap();
+        assert_eq!(osd, 0);
+        assert!((busy - 150.0).abs() < 1e-9);
+        // the bottleneck lane lower-bounds the makespan
+        assert!(rep.makespan + 1e-9 >= busy / cfg.max_backfills as f64);
+        assert!(execute_plan(&[], &cfg, 3).bottleneck().is_none());
     }
 
     #[test]

@@ -8,30 +8,70 @@ use super::types::{
 use crate::util::units::TIB;
 
 /// Errors detected while building or validating a map.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum BuildError {
-    #[error("duplicate bucket name '{0}'")]
+    /// Two buckets share a name.
     DuplicateName(String),
-    #[error("unknown parent bucket id {0}")]
+    /// A bucket references a parent id that was never created.
     UnknownParent(NodeId),
-    #[error("child {child} of bucket {parent} does not exist")]
-    DanglingChild { parent: NodeId, child: NodeId },
-    #[error("node {0} has multiple parents")]
-    MultipleParents(NodeId),
-    #[error("hierarchy contains a cycle involving bucket {0}")]
-    Cycle(NodeId),
-    #[error("bucket {child} of level {child_level:?} under {parent} of level {parent_level:?}")]
-    LevelInversion {
+    /// A bucket lists a child that does not exist.
+    DanglingChild {
+        /// The bucket listing the child.
         parent: NodeId,
-        parent_level: Level,
+        /// The nonexistent child id.
         child: NodeId,
+    },
+    /// A node is claimed by more than one parent.
+    MultipleParents(NodeId),
+    /// The hierarchy is not a tree.
+    Cycle(NodeId),
+    /// A child's level is not strictly below its parent's.
+    LevelInversion {
+        /// The parent bucket.
+        parent: NodeId,
+        /// Its level.
+        parent_level: Level,
+        /// The offending child.
+        child: NodeId,
+        /// The child's level.
         child_level: Level,
     },
-    #[error("rule {rule} takes unknown bucket '{root}'")]
-    UnknownRoot { rule: u32, root: String },
-    #[error("duplicate rule id {0}")]
+    /// A rule's `take` step names a bucket that does not exist.
+    UnknownRoot {
+        /// The rule id.
+        rule: u32,
+        /// The unknown bucket name.
+        root: String,
+    },
+    /// Two rules share an id.
     DuplicateRule(u32),
 }
+
+impl std::fmt::Display for BuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildError::DuplicateName(name) => write!(f, "duplicate bucket name '{name}'"),
+            BuildError::UnknownParent(id) => write!(f, "unknown parent bucket id {id}"),
+            BuildError::DanglingChild { parent, child } => {
+                write!(f, "child {child} of bucket {parent} does not exist")
+            }
+            BuildError::MultipleParents(id) => write!(f, "node {id} has multiple parents"),
+            BuildError::Cycle(id) => {
+                write!(f, "hierarchy contains a cycle involving bucket {id}")
+            }
+            BuildError::LevelInversion { parent, parent_level, child, child_level } => write!(
+                f,
+                "bucket {child} of level {child_level:?} under {parent} of level {parent_level:?}"
+            ),
+            BuildError::UnknownRoot { rule, root } => {
+                write!(f, "rule {rule} takes unknown bucket '{root}'")
+            }
+            BuildError::DuplicateRule(id) => write!(f, "duplicate rule id {id}"),
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
 
 /// Incremental builder. Typical use:
 ///

@@ -15,6 +15,7 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use equilibrium::app_err;
 use equilibrium::balancer::{Balancer, EquilibriumConfig, MgrBalancer};
 use equilibrium::cluster::dump;
 use equilibrium::coordinator::{run_daemon, DaemonConfig, ExecutorConfig};
@@ -23,6 +24,7 @@ use equilibrium::report::{self, Scoring};
 use equilibrium::runtime::Runtime;
 use equilibrium::simulator::{simulate, SimOptions};
 use equilibrium::util::cli::Cli;
+use equilibrium::util::error::AppResult;
 use equilibrium::util::units::{fmt_bytes_f, fmt_duration, to_tib_f, GIB};
 
 fn main() -> ExitCode {
@@ -44,7 +46,7 @@ fn main() -> ExitCode {
             println!("{}", usage());
             Ok(())
         }
-        other => Err(anyhow::anyhow!("unknown subcommand '{other}'\n\n{}", usage())),
+        other => Err(app_err!("unknown subcommand '{other}'\n\n{}", usage())),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
@@ -71,24 +73,24 @@ fn usage() -> String {
         .to_string()
 }
 
-fn scoring_from(args: &equilibrium::util::cli::Args) -> anyhow::Result<Scoring> {
+fn scoring_from(args: &equilibrium::util::cli::Args) -> AppResult<Scoring> {
     match args.get_or("scoring", "native") {
         "native" => Ok(Scoring::Native),
         "xla" => Ok(Scoring::Xla),
-        other => Err(anyhow::anyhow!("unknown scoring backend '{other}' (native|xla)")),
+        other => Err(app_err!("unknown scoring backend '{other}' (native|xla)")),
     }
 }
 
-fn load_cluster(name: &str, seed: u64) -> anyhow::Result<equilibrium::cluster::ClusterState> {
+fn load_cluster(name: &str, seed: u64) -> AppResult<equilibrium::cluster::ClusterState> {
     if name == "demo" {
         return Ok(clusters::demo(seed));
     }
     clusters::by_name(name, seed)
         .map(|c| c.state)
-        .ok_or_else(|| anyhow::anyhow!("unknown cluster '{name}' (a..f or demo)"))
+        .ok_or_else(|| app_err!("unknown cluster '{name}' (a..f or demo)"))
 }
 
-fn cmd_generate(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_generate(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium generate", "emit a synthetic cluster dump")
         .opt_default("cluster", "NAME", "demo", "cluster to generate (a..f|demo)")
         .opt_default("seed", "N", "0", "generator seed")
@@ -107,7 +109,7 @@ fn cmd_generate(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_balance(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_balance(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium balance", "plan movements for a cluster state")
         .opt("state", "FILE", "cluster dump (from `generate`)")
         .opt_default("balancer", "NAME", "equilibrium", "equilibrium|mgr")
@@ -120,7 +122,7 @@ fn cmd_balance(argv: &[String]) -> anyhow::Result<()> {
     let a = cli.parse(argv.iter())?;
     let path = a
         .get("state")
-        .ok_or_else(|| anyhow::anyhow!("--state is required"))?;
+        .ok_or_else(|| app_err!("--state is required"))?;
     let mut state = dump::load(&std::fs::read_to_string(path)?)?;
     let initial = state.clone();
 
@@ -130,7 +132,7 @@ fn cmd_balance(argv: &[String]) -> anyhow::Result<()> {
             EquilibriumConfig { k: a.get_u64("k")?.unwrap_or(25) as usize, ..Default::default() },
         ),
         "mgr" => Box::new(MgrBalancer::default()),
-        other => return Err(anyhow::anyhow!("unknown balancer '{other}'")),
+        other => return Err(app_err!("unknown balancer '{other}'")),
     };
 
     let opts = SimOptions {
@@ -168,7 +170,7 @@ fn cmd_balance(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_df(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_df(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium df", "ceph-df-style capacity report")
         .opt("cluster", "NAME", "generate and report (a..f|demo)")
         .opt("state", "FILE", "report a dumped state")
@@ -178,7 +180,7 @@ fn cmd_df(argv: &[String]) -> anyhow::Result<()> {
     let state = match (a.get("cluster"), a.get("state")) {
         (Some(name), None) => load_cluster(name, a.get_u64("seed")?.unwrap_or(0))?,
         (None, Some(path)) => dump::load(&std::fs::read_to_string(path)?)?,
-        _ => return Err(anyhow::anyhow!("exactly one of --cluster or --state is required")),
+        _ => return Err(app_err!("exactly one of --cluster or --state is required")),
     };
     let report = equilibrium::cluster::health::df(&state);
     print!(
@@ -188,7 +190,7 @@ fn cmd_df(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_crush(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_crush(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium crush", "decompile the CRUSH map")
         .opt("cluster", "NAME", "generate and decompile (a..f|demo)")
         .opt("state", "FILE", "decompile a dumped state's map")
@@ -198,7 +200,7 @@ fn cmd_crush(argv: &[String]) -> anyhow::Result<()> {
     let state = match (a.get("cluster"), a.get("state")) {
         (Some(name), None) => load_cluster(name, a.get_u64("seed")?.unwrap_or(0))?,
         (None, Some(path)) => dump::load(&std::fs::read_to_string(path)?)?,
-        _ => return Err(anyhow::anyhow!("exactly one of --cluster or --state is required")),
+        _ => return Err(app_err!("exactly one of --cluster or --state is required")),
     };
     if a.flag("tree") {
         print!("{}", equilibrium::crush::text::tree(&state.crush));
@@ -208,7 +210,7 @@ fn cmd_crush(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_simulate(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium simulate", "compare both balancers on a cluster")
         .opt_default("cluster", "NAME", "demo", "cluster (a..f|demo)")
         .opt_default("seed", "N", "0", "generator seed")
@@ -245,9 +247,9 @@ fn cmd_simulate(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_report(argv: &[String]) -> AppResult {
     let Some((which, rest)) = argv.split_first() else {
-        return Err(anyhow::anyhow!(
+        return Err(app_err!(
             "report requires an artifact: table1|fig4|fig5|fig6|ablate-k|ablate-count"
         ));
     };
@@ -306,12 +308,12 @@ fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
             println!("PG-count criterion ablation on cluster {}:", a.get_or("cluster", "a"));
             println!("{}", t.render());
         }
-        other => return Err(anyhow::anyhow!("unknown report artifact '{other}'")),
+        other => return Err(app_err!("unknown report artifact '{other}'")),
     }
     Ok(())
 }
 
-fn cmd_daemon(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_daemon(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium daemon", "operational loop with throttled execution")
         .opt_default("cluster", "NAME", "demo", "cluster (a..f|demo)")
         .opt_default("seed", "N", "0", "generator seed")
@@ -356,7 +358,7 @@ fn cmd_daemon(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_runtime_info() -> anyhow::Result<()> {
+fn cmd_runtime_info() -> AppResult {
     let dir = equilibrium::runtime::default_artifact_dir();
     println!("artifact dir: {}", dir.display());
     if !Runtime::artifacts_present(&dir) {

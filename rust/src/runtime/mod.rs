@@ -2,10 +2,53 @@
 //! scoring artifacts, and the XLA-backed scoring backend.
 //!
 //! Python runs only at build time (`make artifacts`); the request path is
-//! pure Rust + the PJRT C API.
+//! pure Rust + the PJRT C API. The real implementation needs the external
+//! `xla` crate, which the offline build does not vendor — it compiles only
+//! with the `xla` cargo feature. Without the feature an API-compatible
+//! stub (`runtime/stub.rs`) is used instead: artifact probing reports
+//! "absent" and loading returns a [`RuntimeError`], so callers that guard
+//! on `Runtime::artifacts_present` degrade gracefully.
 
+use std::fmt;
+use std::path::PathBuf;
+
+/// Errors from the scoring runtime (artifact loading, PJRT execution,
+/// or — in stub builds — the runtime being compiled out).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// `Result` alias for runtime operations.
+pub type RuntimeResult<T> = std::result::Result<T, RuntimeError>;
+
+/// Default artifact directory: `$EQUILIBRIUM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("EQUILIBRIUM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// The size buckets `aot.py` compiles (keep in sync with
+/// `python/compile/model.py::SIZE_BUCKETS`).
+pub const SIZE_BUCKETS: &[usize] = &[256, 1024, 4096];
+
+#[cfg(feature = "xla")]
 pub mod pjrt;
+#[cfg(feature = "xla")]
 pub mod xla_scorer;
-
-pub use pjrt::{default_artifact_dir, Runtime, ScoreExecutable, SIZE_BUCKETS};
+#[cfg(feature = "xla")]
+pub use pjrt::{Runtime, ScoreExecutable};
+#[cfg(feature = "xla")]
 pub use xla_scorer::XlaScorer;
+
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{Runtime, ScoreExecutable, XlaScorer};

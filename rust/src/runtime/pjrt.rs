@@ -4,30 +4,33 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! HLO *text* is the interchange format (see `python/compile/aot.py`).
 //! Python never runs here — the artifacts are produced once at build
-//! time by `make artifacts`.
+//! time by `make artifacts`. Compiled only with the `xla` cargo feature;
+//! see `runtime/stub.rs` for the offline stand-in.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use super::{RuntimeError, RuntimeResult, SIZE_BUCKETS};
 
 /// One compiled scoring executable for a fixed padded size.
 pub struct ScoreExecutable {
+    /// Padded lane count of the compiled graph.
     pub padded: usize,
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl ScoreExecutable {
     /// Load `score_moves_<padded>.hlo.txt` and compile it on `client`.
-    pub fn load(client: &xla::PjRtClient, dir: &Path, padded: usize) -> Result<ScoreExecutable> {
+    pub fn load(client: &xla::PjRtClient, dir: &Path, padded: usize) -> RuntimeResult<ScoreExecutable> {
         let path = dir.join(format!("score_moves_{padded}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
-        )
-        .with_context(|| format!("loading HLO text from {}", path.display()))?;
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| RuntimeError("non-utf8 artifact path".to_string()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| RuntimeError(format!("loading HLO text from {}: {e}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client
             .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
+            .map_err(|e| RuntimeError(format!("compiling {}: {e}", path.display())))?;
         Ok(ScoreExecutable { padded, exe })
     }
 
@@ -41,14 +44,14 @@ impl ScoreExecutable {
         valid: &[f64],
         src: usize,
         shard: f64,
-    ) -> Result<(f64, Vec<f64>)> {
+    ) -> RuntimeResult<(f64, Vec<f64>)> {
         for (name, v) in [("used", used), ("size", size), ("mask", mask), ("valid", valid)] {
             if v.len() != self.padded {
-                return Err(anyhow!(
+                return Err(RuntimeError(format!(
                     "input '{name}' has length {} but executable is padded to {}",
                     v.len(),
                     self.padded
-                ));
+                )));
             }
         }
         let params = [src as f64, shard];
@@ -59,11 +62,24 @@ impl ScoreExecutable {
             xla::Literal::vec1(valid),
             xla::Literal::vec1(&params),
         ];
-        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        fn rt_err<E: std::fmt::Display>(what: &str) -> impl Fn(E) -> RuntimeError + '_ {
+            move |e| RuntimeError(format!("{what}: {e}"))
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(rt_err("PJRT execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(rt_err("PJRT literal sync"))?;
         // lowered with return_tuple=True → tuple(var_before[1], var_after[N])
-        let (var_before_lit, var_after_lit) = result.to_tuple2()?;
-        let var_before = var_before_lit.to_vec::<f64>()?[0];
-        let var_after = var_after_lit.to_vec::<f64>()?;
+        let (var_before_lit, var_after_lit) =
+            result.to_tuple2().map_err(rt_err("decoding result tuple"))?;
+        let var_before = var_before_lit
+            .to_vec::<f64>()
+            .map_err(rt_err("decoding var_before"))?[0];
+        let var_after = var_after_lit
+            .to_vec::<f64>()
+            .map_err(rt_err("decoding var_after"))?;
         Ok((var_before, var_after))
     }
 }
@@ -75,22 +91,12 @@ pub struct Runtime {
     executables: Vec<ScoreExecutable>,
 }
 
-/// Default artifact directory: `$EQUILIBRIUM_ARTIFACTS` or `./artifacts`.
-pub fn default_artifact_dir() -> PathBuf {
-    std::env::var_os("EQUILIBRIUM_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
-}
-
-/// The size buckets `aot.py` compiles (keep in sync with
-/// `python/compile/model.py::SIZE_BUCKETS`).
-pub const SIZE_BUCKETS: &[usize] = &[256, 1024, 4096];
-
 impl Runtime {
     /// Create a CPU PJRT client and compile every artifact found in
     /// `dir`. Fails if no bucket is available.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    pub fn load(dir: &Path) -> RuntimeResult<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError(format!("creating PJRT CPU client: {e}")))?;
         let mut executables = Vec::new();
         for &n in SIZE_BUCKETS {
             if dir.join(format!("score_moves_{n}.hlo.txt")).exists() {
@@ -98,18 +104,18 @@ impl Runtime {
             }
         }
         if executables.is_empty() {
-            return Err(anyhow!(
+            return Err(RuntimeError(format!(
                 "no score_moves_*.hlo.txt artifacts in {} — run `make artifacts`",
                 dir.display()
-            ));
+            )));
         }
         executables.sort_by_key(|e| e.padded);
         Ok(Runtime { client, executables })
     }
 
     /// Load from the default artifact directory.
-    pub fn load_default() -> Result<Runtime> {
-        Self::load(&default_artifact_dir())
+    pub fn load_default() -> RuntimeResult<Runtime> {
+        Self::load(&super::default_artifact_dir())
     }
 
     /// Are artifacts available without constructing a client?
@@ -120,15 +126,15 @@ impl Runtime {
     }
 
     /// The executable for the smallest bucket ≥ `n`.
-    pub fn bucket_for(&self, n: usize) -> Result<&ScoreExecutable> {
+    pub fn bucket_for(&self, n: usize) -> RuntimeResult<&ScoreExecutable> {
         self.executables
             .iter()
             .find(|e| e.padded >= n)
             .ok_or_else(|| {
-                anyhow!(
+                RuntimeError(format!(
                     "cluster has {n} OSDs but largest compiled bucket is {}",
                     self.executables.last().map(|e| e.padded).unwrap_or(0)
-                )
+                ))
             })
     }
 
@@ -147,7 +153,7 @@ impl Runtime {
         mask: &[bool],
         src: usize,
         shard: f64,
-    ) -> Result<(f64, Vec<f64>)> {
+    ) -> RuntimeResult<(f64, Vec<f64>)> {
         let n = used.len();
         let exe = self.bucket_for(n)?;
         let p = exe.padded;
@@ -170,6 +176,7 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts() -> PathBuf {
         // tests run from the crate root

@@ -1,0 +1,132 @@
+//! API-compatible stub of the PJRT runtime, compiled when the `xla`
+//! cargo feature is off (the offline build cannot vendor the `xla`
+//! crate).
+//!
+//! The types can never be constructed (they carry an [`Infallible`]
+//! field), so every method body is statically unreachable; the
+//! constructors return [`RuntimeError`] and
+//! [`Runtime::artifacts_present`] reports `false`, which makes every
+//! artifact-guarded test/bench skip cleanly.
+
+use std::convert::Infallible;
+use std::path::Path;
+
+use crate::balancer::scoring::{MoveScorer, ScoreRequest, ScoreResponse};
+
+use super::{RuntimeError, RuntimeResult};
+
+fn unavailable() -> RuntimeError {
+    RuntimeError(
+        "XLA runtime not compiled in (vendor the `xla` crate, add it to Cargo.toml, \
+         and build with `--features xla`)"
+            .to_string(),
+    )
+}
+
+/// Stub of one compiled scoring executable (never constructible).
+pub struct ScoreExecutable {
+    /// Padded lane count of the compiled graph.
+    pub padded: usize,
+    _never: Infallible,
+}
+
+impl ScoreExecutable {
+    /// Execute the scoring graph (statically unreachable in stub builds).
+    pub fn run(
+        &self,
+        _used: &[f64],
+        _size: &[f64],
+        _mask: &[f64],
+        _valid: &[f64],
+        _src: usize,
+        _shard: f64,
+    ) -> RuntimeResult<(f64, Vec<f64>)> {
+        match self._never {}
+    }
+}
+
+/// Stub of the PJRT runtime (never constructible).
+pub struct Runtime {
+    _never: Infallible,
+}
+
+impl Runtime {
+    /// Always fails: the runtime is compiled out.
+    pub fn load(_dir: &Path) -> RuntimeResult<Runtime> {
+        Err(unavailable())
+    }
+
+    /// Always fails: the runtime is compiled out.
+    pub fn load_default() -> RuntimeResult<Runtime> {
+        Err(unavailable())
+    }
+
+    /// Without the `xla` feature no artifact can ever be used, so none
+    /// are reported present.
+    pub fn artifacts_present(_dir: &Path) -> bool {
+        false
+    }
+
+    /// The executable for the smallest bucket ≥ `n` (unreachable).
+    pub fn bucket_for(&self, _n: usize) -> RuntimeResult<&ScoreExecutable> {
+        match self._never {}
+    }
+
+    /// Available bucket sizes (unreachable).
+    pub fn buckets(&self) -> Vec<usize> {
+        match self._never {}
+    }
+
+    /// Score with automatic padding (unreachable).
+    pub fn score_padded(
+        &self,
+        _used: &[f64],
+        _size: &[f64],
+        _mask: &[bool],
+        _src: usize,
+        _shard: f64,
+    ) -> RuntimeResult<(f64, Vec<f64>)> {
+        match self._never {}
+    }
+}
+
+/// Stub of the XLA-backed [`MoveScorer`] (never constructible).
+pub struct XlaScorer {
+    _never: Infallible,
+}
+
+impl XlaScorer {
+    /// Wrap a runtime (unreachable: no `Runtime` can exist).
+    pub fn new(rt: Runtime) -> XlaScorer {
+        match rt._never {}
+    }
+
+    /// Always fails: the runtime is compiled out.
+    pub fn load_default() -> RuntimeResult<XlaScorer> {
+        Err(unavailable())
+    }
+}
+
+impl MoveScorer for XlaScorer {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn score(&mut self, _req: &ScoreRequest<'_>) -> ScoreResponse {
+        match self._never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_absent_and_fails_to_load() {
+        assert!(!Runtime::artifacts_present(Path::new("artifacts")));
+        assert!(Runtime::load_default().is_err());
+        assert!(XlaScorer::load_default().is_err());
+        let msg = XlaScorer::load_default().unwrap_err().to_string();
+        assert!(msg.contains("`xla`"), "{msg}");
+    }
+}

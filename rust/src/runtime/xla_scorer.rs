@@ -9,6 +9,7 @@
 use crate::balancer::scoring::{MoveScorer, ScoreRequest, ScoreResponse};
 
 use super::pjrt::Runtime;
+use super::RuntimeResult;
 
 /// Scorer backed by the PJRT runtime. Reuses pre-allocated padding
 /// buffers across calls (the balancer calls this once per candidate
@@ -28,7 +29,7 @@ impl XlaScorer {
     }
 
     /// Construct from the default artifact directory.
-    pub fn load_default() -> anyhow::Result<XlaScorer> {
+    pub fn load_default() -> RuntimeResult<XlaScorer> {
         Ok(XlaScorer::new(Runtime::load_default()?))
     }
 }

@@ -1,0 +1,72 @@
+//! Minimal error plumbing for binaries and examples (`anyhow` is
+//! unavailable in this offline build).
+//!
+//! Library modules define their own typed errors (`StateError`,
+//! `DumpError`, `BuildError`, ...); this module only serves the CLI-ish
+//! code paths that want "any error, with a message" semantics:
+//!
+//! ```
+//! use equilibrium::app_err;
+//! use equilibrium::util::error::AppResult;
+//!
+//! fn parse_backend(name: &str) -> AppResult<u32> {
+//!     match name {
+//!         "native" => Ok(0),
+//!         other => Err(app_err!("unknown backend '{other}'")),
+//!     }
+//! }
+//! assert!(parse_backend("native").is_ok());
+//! assert!(parse_backend("gpu").is_err());
+//! ```
+
+use std::fmt;
+
+/// A plain message error, usually constructed via [`crate::app_err!`].
+#[derive(Debug, Clone)]
+pub struct AppError(pub String);
+
+impl AppError {
+    /// Boxed constructor (what the `app_err!` macro expands to).
+    pub fn boxed(msg: String) -> Box<dyn std::error::Error> {
+        Box::new(AppError(msg))
+    }
+}
+
+impl fmt::Display for AppError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for AppError {}
+
+/// `Result` alias for CLI/binary code paths: any error type boxes into
+/// it via `?`.
+pub type AppResult<T = ()> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+/// Format a message into a boxed [`AppError`] (offline stand-in for
+/// `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! app_err {
+    ($($t:tt)*) => { $crate::util::error::AppError::boxed(format!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_message() {
+        let e = app_err!("bad thing {}", 7);
+        assert_eq!(e.to_string(), "bad thing 7");
+    }
+
+    #[test]
+    fn question_mark_boxes_typed_errors() {
+        fn inner() -> AppResult<u64> {
+            let n: u64 = "12".parse()?; // ParseIntError boxes automatically
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+    }
+}

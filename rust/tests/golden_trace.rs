@@ -1,0 +1,180 @@
+//! Golden-trace equivalence: the incremental engine must emit **exactly**
+//! the movement sequence of the pre-refactor full-sort loop
+//! (`ReferenceEquilibrium`), move for move, on the paper's Table 1
+//! synthetic clusters and on randomized clusters — including after
+//! device failures and under interleaved client writes.
+//!
+//! This is the refactor's correctness contract (RFC 0001): the engine
+//! may only change *how fast* a move is found, never *which* move.
+
+use equilibrium::balancer::{Balancer, Equilibrium, ReferenceEquilibrium};
+use equilibrium::cluster::{ClusterState, PgId};
+use equilibrium::crush::OsdId;
+use equilibrium::generator::clusters;
+use equilibrium::generator::synth::random_cluster;
+use equilibrium::simulator::{Workload, WorkloadModel};
+use equilibrium::util::prop::check_seeded;
+
+type Trace = Vec<(PgId, OsdId, OsdId, u64)>;
+
+/// Drive the reference loop, applying each move; the resulting sequence
+/// is the specification.
+fn reference_trace(initial: &ClusterState, cap: usize) -> Trace {
+    let mut state = initial.clone();
+    let mut bal = ReferenceEquilibrium::default();
+    let mut out = Trace::new();
+    while out.len() < cap {
+        let Some(p) = bal.next_move(&state) else { break };
+        state.apply_movement(p.pg, p.from, p.to).unwrap();
+        out.push((p.pg, p.from, p.to, p.bytes));
+    }
+    out
+}
+
+/// Drive the incremental engine one move at a time via `next_move`.
+fn stepwise_trace(initial: &ClusterState, cap: usize) -> Trace {
+    let mut state = initial.clone();
+    let mut bal = Equilibrium::default();
+    let mut out = Trace::new();
+    while out.len() < cap {
+        let Some(p) = bal.next_move(&state) else { break };
+        state.apply_movement(p.pg, p.from, p.to).unwrap();
+        out.push((p.pg, p.from, p.to, p.bytes));
+    }
+    assert!(state.verify().is_empty(), "engine state invariants violated");
+    out
+}
+
+/// Drive the incremental engine through `propose_batch` in chunks.
+fn batched_trace(initial: &ClusterState, cap: usize, chunk: usize) -> Trace {
+    let mut state = initial.clone();
+    let mut bal = Equilibrium::default();
+    let mut out = Trace::new();
+    while out.len() < cap {
+        let budget = chunk.min(cap - out.len());
+        let batch = bal.propose_batch(&mut state, budget);
+        let converged = batch.len() < budget;
+        out.extend(batch.into_iter().map(|m| (m.pg, m.from, m.to, m.bytes)));
+        if converged {
+            break;
+        }
+    }
+    assert!(state.verify().is_empty(), "batched state invariants violated");
+    out
+}
+
+fn assert_traces_equal(label: &str, expect: &Trace, got: &Trace) {
+    for (i, (a, b)) in expect.iter().zip(got).enumerate() {
+        assert_eq!(a, b, "{label}: traces diverge at move {i}");
+    }
+    assert_eq!(
+        expect.len(),
+        got.len(),
+        "{label}: one engine converged early ({} vs {} moves)",
+        expect.len(),
+        got.len()
+    );
+}
+
+fn assert_golden(label: &str, initial: &ClusterState, cap: usize) {
+    let expect = reference_trace(initial, cap);
+    assert_traces_equal(label, &expect, &stepwise_trace(initial, cap));
+    // batching must not change the sequence either, for any chunking
+    assert_traces_equal(
+        &format!("{label} (batched)"),
+        &expect,
+        &batched_trace(initial, cap, 37),
+    );
+}
+
+/// Cluster A (Table 1): full run to convergence.
+#[test]
+fn golden_trace_cluster_a_full() {
+    let c = clusters::by_name("a", 0).unwrap();
+    assert_golden("cluster A", &c.state, 10_000);
+}
+
+/// Cluster F (Table 1): full run to convergence.
+#[test]
+fn golden_trace_cluster_f_full() {
+    let c = clusters::by_name("f", 0).unwrap();
+    assert_golden("cluster F", &c.state, 10_000);
+}
+
+/// Cluster C (Table 1): first 300 moves (full convergence is covered by
+/// the integration suite; the prefix pins per-move identity cheaply).
+#[test]
+fn golden_trace_cluster_c_prefix() {
+    let c = clusters::by_name("c", 0).unwrap();
+    assert_golden("cluster C", &c.state, 300);
+}
+
+/// Randomized clusters: shapes the Table 1 set does not cover
+/// (EC-only, tiny, heterogeneous pools).
+#[test]
+fn golden_trace_random_clusters() {
+    check_seeded("golden-random", 0x60_1D, 8, |rng| {
+        let state = random_cluster(rng);
+        let expect = reference_trace(&state, 400);
+        let step = stepwise_trace(&state, 400);
+        let batch = batched_trace(&state, 400, 11);
+        if expect != step {
+            return Err(format!("stepwise divergence ({} vs {} moves)", expect.len(), step.len()));
+        }
+        if expect != batch {
+            return Err(format!("batched divergence ({} vs {} moves)", expect.len(), batch.len()));
+        }
+        Ok(())
+    });
+}
+
+/// After a device failure the ideal-count caches shift (the failed
+/// device's weight is zeroed); both engines must keep agreeing.
+#[test]
+fn golden_trace_after_failure() {
+    let mut state = clusters::demo(29);
+    equilibrium::cluster::fail_osd(&mut state, 4);
+    assert!(state.verify().is_empty());
+    assert_golden("demo after failure", &state, 10_000);
+}
+
+/// Interleaved client writes between selections: the engine's persistent
+/// caches must observe every external mutation (they live in
+/// ClusterState, so this exercises the incremental maintenance).
+#[test]
+fn golden_trace_under_interleaved_writes() {
+    let initial = clusters::demo(31);
+
+    let mut s_ref = initial.clone();
+    let mut s_inc = initial.clone();
+    let mut reference = ReferenceEquilibrium::default();
+    let mut engine = Equilibrium::default();
+    // identical write streams on both states
+    let mut w_ref = Workload::new(WorkloadModel::Uniform, 0xBEEF);
+    let mut w_inc = Workload::new(WorkloadModel::Uniform, 0xBEEF);
+
+    let mut moves = 0;
+    for round in 0..30 {
+        let a = reference.next_move(&s_ref);
+        let b = engine.next_move(&s_inc);
+        match (a, b) {
+            (None, None) => {}
+            (Some(pa), Some(pb)) => {
+                assert_eq!(
+                    (pa.pg, pa.from, pa.to, pa.bytes),
+                    (pb.pg, pb.from, pb.to, pb.bytes),
+                    "divergence at move {moves} (round {round})"
+                );
+                s_ref.apply_movement(pa.pg, pa.from, pa.to).unwrap();
+                s_inc.apply_movement(pb.pg, pb.from, pb.to).unwrap();
+                moves += 1;
+            }
+            (a, b) => panic!("round {round}: engines disagree on convergence: {a:?} vs {b:?}"),
+        }
+        let wrote_ref = w_ref.write(&mut s_ref, 8 << 30);
+        let wrote_inc = w_inc.write(&mut s_inc, 8 << 30);
+        assert_eq!(wrote_ref, wrote_inc, "write streams must match");
+    }
+    assert!(moves > 0, "write-perturbed demo cluster must offer moves");
+    assert!(s_inc.verify().is_empty());
+}
