@@ -12,12 +12,11 @@
 
 use equilibrium::balancer::Equilibrium;
 use equilibrium::cluster::dump;
-use equilibrium::cluster::{ClusterState, Pg, PgId, Pool};
+use equilibrium::cluster::{add_hosts, ClusterState, HostSpec, Pool};
 use equilibrium::crush::{CrushBuilder, DeviceClass, Level, Rule};
 use equilibrium::simulator::{simulate, SimOptions};
 use equilibrium::util::rng::Rng;
 use equilibrium::util::units::{fmt_bytes_f, fmt_pct, GIB, TIB};
-use std::collections::BTreeMap;
 
 /// Build the pre-expansion cluster: 6 hosts × 4 × 4 TiB drives, ~70% full.
 fn old_cluster() -> ClusterState {
@@ -38,33 +37,6 @@ fn old_cluster() -> ClusterState {
     )
 }
 
-/// Rebuild the cluster with two extra hosts of 8 TiB drives, keeping all
-/// existing PG placements and sizes (expansion does not reshuffle data in
-/// this model — that is the balancer's job).
-fn expand(old: &ClusterState) -> ClusterState {
-    let mut b = CrushBuilder::new();
-    let root = b.add_root("default");
-    for h in 0..6 {
-        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
-        for _ in 0..4 {
-            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
-        }
-    }
-    for h in 6..8 {
-        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
-        for _ in 0..4 {
-            b.add_osd_bytes(host, 8 * TIB, DeviceClass::Hdd);
-        }
-    }
-    b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
-    let crush = b.build().unwrap();
-
-    let pools: Vec<Pool> = old.pools.values().cloned().collect();
-    let pgs: Vec<Pg> = old.pgs().cloned().collect();
-    let upmap: BTreeMap<PgId, Vec<(u32, u32)>> = BTreeMap::new();
-    ClusterState::from_parts(crush, pools, pgs, upmap)
-}
-
 fn main() {
     let old = old_cluster();
     println!(
@@ -76,12 +48,16 @@ fn main() {
 
     // dump → load round trip (what an operator pipeline would do)
     let text = dump::dump(&old);
-    let restored = dump::load(&text).expect("dump must round-trip");
-    assert_eq!(restored.pg_count(), old.pg_count());
+    let mut grown = dump::load(&text).expect("dump must round-trip");
+    assert_eq!(grown.pg_count(), old.pg_count());
 
-    let mut grown = expand(&restored);
+    // attach two hosts of bigger drives; placements stay untouched
+    // (expansion does not reshuffle data — that is the balancer's job)
+    let new_osds = add_hosts(&mut grown, &HostSpec::hdd(2, 4, 8 * TIB))
+        .expect("expansion must validate");
     println!(
-        "after adding 8 new 8 TiB drives (no data moved yet): {} OSDs, pool capacity {}",
+        "after adding {} new 8 TiB drives (no data moved yet): {} OSDs, pool capacity {}",
+        new_osds.len(),
         grown.osd_count(),
         fmt_bytes_f(grown.pool_max_avail(1)),
     );
@@ -109,7 +85,7 @@ fn main() {
         res.series.last().unwrap().variance,
     );
     // new drives must have received data
-    let new_drive_use: u64 = (24..32).map(|o| grown.osd_used(o)).sum();
+    let new_drive_use: u64 = new_osds.iter().map(|&o| grown.osd_used(o)).sum();
     println!("  data now on the new drives: {}", fmt_bytes_f(new_drive_use as f64));
     assert!(new_drive_use > 0, "rebalancing must populate new drives");
     assert!(after > before, "expansion + balancing must unlock capacity");

@@ -367,6 +367,15 @@ impl<S: MoveScorer> Balancer for Equilibrium<S> {
     fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
         self.select_move(state)
     }
+
+    fn on_topology_change(&mut self) {
+        // constraint sets and candidate vectors are derived from the
+        // CRUSH map; after a structural change (hosts added, pools
+        // created, devices failed out) they must be re-derived
+        self.constraints.invalidate();
+        self.scratch.clear();
+        self.pass += 1;
+    }
 }
 
 #[cfg(test)]

@@ -111,6 +111,12 @@ impl Balancer for MgrBalancer {
         "mgr"
     }
 
+    fn on_topology_change(&mut self) {
+        // per-pool slot constraints are CRUSH-derived; drop them so the
+        // next round re-derives against the mutated map
+        self.constraints.invalidate();
+    }
+
     fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
         if self.moves_done >= self.cfg.max_moves {
             return None;

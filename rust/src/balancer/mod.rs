@@ -62,6 +62,15 @@ pub trait Balancer {
     /// when converged. The caller applies accepted proposals.
     fn next_move(&mut self, state: &ClusterState) -> Option<Proposal>;
 
+    /// Notify the balancer that the cluster's topology changed
+    /// structurally between planning calls — hosts added, pools created
+    /// or removed, devices failed out. Long-lived balancers (the daemon,
+    /// the scenario engine) cache per-pool CRUSH slot constraints and
+    /// candidate buffers; this hook tells them to drop anything derived
+    /// from the old map. The default is a no-op, which is correct for
+    /// cache-free balancers.
+    fn on_topology_change(&mut self) {}
+
     /// Plan up to `max` movements, applying each accepted move to
     /// `state` so the next selection sees the projected result. Returns
     /// the applied movements; fewer than `max` means convergence.

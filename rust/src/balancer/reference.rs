@@ -224,6 +224,13 @@ impl<S: MoveScorer> Balancer for ReferenceEquilibrium<S> {
         "equilibrium-reference"
     }
 
+    fn on_topology_change(&mut self) {
+        // the lifetime caches are weight- and topology-static; an
+        // explicit structural change invalidates both
+        self.ideal_cache.clear();
+        self.devset_cache.clear();
+    }
+
     fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
         let n = state.osd_count();
         let mut used = Vec::with_capacity(n);

@@ -1,0 +1,193 @@
+//! Cluster expansion: attach new hosts full of empty drives to a live
+//! cluster without disturbing any existing placement.
+//!
+//! Real expansions work exactly like this: new capacity is CRUSH-weighted
+//! in immediately, but data does not move by itself — until a balancer
+//! runs, the old devices stay full and pool capacity barely grows (the
+//! `expansion` example quantifies this). The scenario engine's
+//! `AddHosts` event and the example both go through [`add_hosts`].
+//!
+//! Implementation note: straw2 draws hash on node ids, so existing bucket
+//! and device ids must be preserved bit-for-bit — the map is reassembled
+//! from its parts with new hosts appended, never rebuilt from scratch.
+
+use crate::crush::types::Bucket;
+use crate::crush::{from_parts, BuildError, Device, DeviceClass, Level, NodeId, OsdId};
+use crate::util::units::TIB;
+
+use super::state::ClusterState;
+
+/// A batch of identical hosts to add.
+#[derive(Debug, Clone)]
+pub struct HostSpec {
+    /// Number of new hosts.
+    pub hosts: usize,
+    /// Devices per new host.
+    pub osds_per_host: usize,
+    /// Capacity of each new device, bytes.
+    pub osd_bytes: u64,
+    /// Device class of the new drives.
+    pub class: DeviceClass,
+    /// Root bucket the hosts attach under (usually `"default"`).
+    pub root: String,
+}
+
+impl HostSpec {
+    /// `hosts` × `osds_per_host` drives of `osd_bytes` each under
+    /// `"default"`.
+    pub fn hdd(hosts: usize, osds_per_host: usize, osd_bytes: u64) -> HostSpec {
+        HostSpec { hosts, osds_per_host, osd_bytes, class: DeviceClass::Hdd, root: "default".to_string() }
+    }
+}
+
+/// Why an expansion failed.
+#[derive(Debug)]
+pub enum ExpandError {
+    /// The named root bucket does not exist in the CRUSH map.
+    UnknownRoot(String),
+    /// The reassembled map failed validation.
+    Build(BuildError),
+}
+
+impl std::fmt::Display for ExpandError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExpandError::UnknownRoot(root) => write!(f, "unknown root bucket '{root}'"),
+            ExpandError::Build(e) => write!(f, "expanded CRUSH map invalid: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ExpandError {}
+
+/// Add `spec.hosts` new hosts under `spec.root`, each with
+/// `spec.osds_per_host` empty drives. Existing PG placements, shard
+/// sizes, upmap entries, and down/out markers are all preserved; the new
+/// devices start empty. Returns the ids of the new OSDs.
+pub fn add_hosts(state: &mut ClusterState, spec: &HostSpec) -> Result<Vec<OsdId>, ExpandError> {
+    let root = *state
+        .crush
+        .bucket_by_name
+        .get(&spec.root)
+        .ok_or_else(|| ExpandError::UnknownRoot(spec.root.clone()))?;
+
+    let mut devices = state.crush.devices.clone();
+    let mut buckets = state.crush.buckets.clone();
+    let rules: Vec<_> = state.crush.rules.values().cloned().collect();
+    let mut next_bucket_id = buckets.keys().min().copied().unwrap_or(0) - 1;
+    let mut new_osds = Vec::with_capacity(spec.hosts * spec.osds_per_host);
+    let mut host_no = buckets.len();
+
+    for _ in 0..spec.hosts {
+        // pick a name no existing bucket uses
+        let name = loop {
+            let candidate = format!("exphost{host_no:03}");
+            host_no += 1;
+            if !state.crush.bucket_by_name.contains_key(&candidate) {
+                break candidate;
+            }
+        };
+        let hid = next_bucket_id;
+        next_bucket_id -= 1;
+        buckets.insert(hid, Bucket { id: hid, name, level: Level::Host, children: Vec::new() });
+        buckets.get_mut(&root).expect("root bucket").children.push(hid);
+        for _ in 0..spec.osds_per_host {
+            let oid = devices.len() as OsdId;
+            devices.push(Device {
+                id: oid,
+                weight: spec.osd_bytes as f64 / TIB as f64,
+                class: spec.class,
+            });
+            buckets.get_mut(&hid).unwrap().children.push(oid as NodeId);
+            new_osds.push(oid);
+        }
+    }
+
+    let crush = from_parts(devices, buckets, rules).map_err(ExpandError::Build)?;
+    let pools: Vec<_> = state.pools.values().cloned().collect();
+    let pgs: Vec<_> = state.pgs().cloned().collect();
+    let upmap = state.upmap_table().clone();
+    let down: Vec<OsdId> =
+        (0..state.osd_count() as OsdId).filter(|&o| !state.osd_is_up(o)).collect();
+    // reassembly derives sizes from CRUSH weights; a failed (weight-0)
+    // device must keep its recorded physical capacity across the rebuild
+    let mut sizes: Vec<u64> =
+        (0..state.osd_count() as OsdId).map(|o| state.osd_size(o)).collect();
+    sizes.extend(std::iter::repeat(spec.osd_bytes).take(new_osds.len()));
+
+    *state = ClusterState::from_parts(crush, pools, pgs, upmap);
+    for o in down {
+        state.set_osd_up(o, false);
+    }
+    state.restore_osd_sizes(&sizes);
+    Ok(new_osds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::{run_to_convergence, Equilibrium};
+    use crate::cluster::fail_osd;
+    use crate::generator::clusters;
+
+    #[test]
+    fn expansion_preserves_placements_and_adds_empty_drives() {
+        let mut s = clusters::demo(61);
+        let used_before = s.total_used();
+        let osds_before = s.osd_count();
+        let pg_sample: Vec<_> = s.pgs().take(5).map(|p| (p.id, p.devices().collect::<Vec<_>>())).collect();
+
+        let new = add_hosts(&mut s, &HostSpec::hdd(2, 3, 8 * TIB)).unwrap();
+        assert_eq!(new.len(), 6);
+        assert_eq!(s.osd_count(), osds_before + 6);
+        assert_eq!(s.total_used(), used_before, "expansion moves no data");
+        for &o in &new {
+            assert_eq!(s.osd_used(o), 0);
+            assert_eq!(s.osd_size(o), 8 * TIB);
+            assert!(s.osd_is_up(o));
+        }
+        for (id, devs) in pg_sample {
+            assert_eq!(s.pg(id).unwrap().devices().collect::<Vec<_>>(), devs);
+        }
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+    }
+
+    #[test]
+    fn balancer_populates_new_hosts_after_expansion() {
+        let mut s = clusters::demo(63);
+        let new = add_hosts(&mut s, &HostSpec::hdd(1, 2, 8 * TIB)).unwrap();
+        let mut bal = Equilibrium::default();
+        let moves = run_to_convergence(&mut bal, &mut s, 10_000);
+        assert!(!moves.is_empty());
+        let new_use: u64 = new.iter().map(|&o| s.osd_used(o)).sum();
+        assert!(new_use > 0, "rebalancing must land data on new drives");
+        assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn expansion_keeps_down_markers_sizes_and_unique_names() {
+        let mut s = clusters::demo(67);
+        let failed_size = s.osd_size(2);
+        assert!(failed_size > 0);
+        fail_osd(&mut s, 2);
+        add_hosts(&mut s, &HostSpec::hdd(1, 1, 4 * TIB)).unwrap();
+        assert!(!s.osd_is_up(2), "down marker survives reassembly");
+        assert_eq!(
+            s.osd_size(2),
+            failed_size,
+            "a failed (weight-0) device keeps its recorded capacity"
+        );
+        // a second expansion must not collide on host names
+        add_hosts(&mut s, &HostSpec::hdd(1, 1, 4 * TIB)).unwrap();
+        assert_eq!(s.osd_size(2), failed_size);
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+    }
+
+    #[test]
+    fn unknown_root_is_an_error() {
+        let mut s = clusters::demo(69);
+        let mut spec = HostSpec::hdd(1, 1, TIB);
+        spec.root = "nonexistent".to_string();
+        assert!(matches!(add_hosts(&mut s, &spec), Err(ExpandError::UnknownRoot(_))));
+    }
+}

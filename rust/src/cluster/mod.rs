@@ -3,6 +3,7 @@
 
 pub mod aggregates;
 pub mod dump;
+pub mod expand;
 pub mod health;
 pub mod pg;
 pub mod pool;
@@ -10,6 +11,7 @@ pub mod recovery;
 pub mod state;
 
 pub use aggregates::{Aggregates, PoolAggregates};
+pub use expand::{add_hosts, ExpandError, HostSpec};
 pub use pg::{Movement, Pg, PgId};
 pub use pool::{Pool, PoolKind, Redundancy};
 pub use recovery::{fail_osd, random_up_osd, FailureReport};

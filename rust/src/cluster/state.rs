@@ -52,6 +52,15 @@ pub enum StateError {
         /// Its raw capacity.
         size: u64,
     },
+    /// A pool with this id already exists (`add_pool`).
+    PoolExists(u32),
+    /// The pool references a CRUSH rule the map does not have.
+    UnknownRule {
+        /// The pool being created.
+        pool: u32,
+        /// The missing rule id.
+        rule: u32,
+    },
 }
 
 impl std::fmt::Display for StateError {
@@ -70,6 +79,10 @@ impl std::fmt::Display for StateError {
                 f,
                 "movement would overfill osd.{osd} ({used} used + {add} > {size})"
             ),
+            StateError::PoolExists(id) => write!(f, "pool {id} already exists"),
+            StateError::UnknownRule { pool, rule } => {
+                write!(f, "pool {pool} references unknown rule {rule}")
+            }
         }
     }
 }
@@ -201,6 +214,21 @@ impl ClusterState {
     /// (shard counts, utilization index) are unaffected.
     pub fn refresh_weight_caches(&mut self) {
         self.agg.refresh_weights(&self.crush, &self.pools, self.osd_size.len());
+    }
+
+    /// Overwrite the recorded raw capacities and rebuild the aggregates.
+    /// Needed when the cluster is reassembled around a mutated CRUSH map
+    /// (`expand::add_hosts`): construction derives sizes from CRUSH
+    /// weights, but a failed device's weight is zero while its physical
+    /// size — and thus df reporting and utilization denominators — must
+    /// survive the reassembly. No-op when nothing differs.
+    pub(crate) fn restore_osd_sizes(&mut self, sizes: &[u64]) {
+        debug_assert_eq!(sizes.len(), self.osd_size.len());
+        if self.osd_size == sizes {
+            return;
+        }
+        self.osd_size = sizes.to_vec();
+        self.rebuild_aggregates();
     }
 
     fn index_pg(&mut self, pg: &Pg) {
@@ -364,6 +392,12 @@ impl ClusterState {
     /// The upmap exception table entry for a PG (empty if none).
     pub fn upmap_items(&self, pg: PgId) -> &[(OsdId, OsdId)] {
         self.upmap.get(&pg).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// The whole upmap exception table (used when the cluster is
+    /// reassembled around a mutated CRUSH map, e.g. host expansion).
+    pub fn upmap_table(&self) -> &BTreeMap<PgId, Vec<(OsdId, OsdId)>> {
+        &self.upmap
     }
 
     /// Total number of PGs with at least one upmap exception.
@@ -543,6 +577,40 @@ impl ClusterState {
         self.agg.maybe_renormalize(&self.osd_used, &self.osd_size);
 
         Ok(Movement { pg: pg_id, from, to, bytes })
+    }
+
+    /// Create a new pool on the live cluster: CRUSH-place all of its PGs,
+    /// index them, and rebuild the aggregates (pool creation is rare, so
+    /// the O(cluster) rebuild is acceptable). `shard_bytes` assigns each
+    /// new PG's per-shard size by PG index. Used by the scenario engine's
+    /// `CreatePool` event.
+    pub fn add_pool(
+        &mut self,
+        pool: Pool,
+        mut shard_bytes: impl FnMut(u32) -> u64,
+    ) -> Result<(), StateError> {
+        if self.pools.contains_key(&pool.id) {
+            return Err(StateError::PoolExists(pool.id));
+        }
+        let rule = match self.crush.rule(pool.rule_id) {
+            Some(r) => r.clone(),
+            None => return Err(StateError::UnknownRule { pool: pool.id, rule: pool.rule_id }),
+        };
+        let slots = pool.redundancy.shard_count();
+        for idx in 0..pool.pg_count {
+            let x = pg_input(pool.id, idx);
+            let acting = map_rule(&self.crush, &rule, x, slots);
+            let pg = Pg {
+                id: PgId::new(pool.id, idx),
+                shard_bytes: shard_bytes(idx),
+                acting,
+            };
+            self.index_pg(&pg);
+            self.pgs.insert(pg.id, pg);
+        }
+        self.pools.insert(pool.id, pool);
+        self.rebuild_aggregates();
+        Ok(())
     }
 
     /// Grow a PG in place (new data written by clients); used by the
@@ -821,6 +889,32 @@ mod tests {
         // uniform weights → ideal = total_shards / osd_count
         let ideal = s.ideal_shard_count(pool, 0);
         assert!((ideal - (32.0 * 3.0 / 8.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_pool_places_and_accounts() {
+        let mut s = small_cluster();
+        let before_used = s.total_used();
+        let before_pgs = s.pg_count();
+        s.add_pool(Pool::replicated(2, "scratch", 3, 16, 0), |_| 2 * GIB).unwrap();
+        assert_eq!(s.pg_count(), before_pgs + 16);
+        assert_eq!(s.total_used(), before_used + 16 * 3 * 2 * GIB);
+        // all new PGs placed on distinct hosts per the rule
+        for pg in s.pgs().filter(|p| p.id.pool == 2) {
+            assert_eq!(pg.devices().count(), 3);
+        }
+        // aggregates were rebuilt consistently
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+        assert!(s.pool_shard_counts(2).is_some());
+        // duplicate id and unknown rule are rejected
+        assert_eq!(
+            s.add_pool(Pool::replicated(2, "dup", 3, 8, 0), |_| GIB),
+            Err(StateError::PoolExists(2))
+        );
+        assert_eq!(
+            s.add_pool(Pool::replicated(3, "norule", 3, 8, 9), |_| GIB),
+            Err(StateError::UnknownRule { pool: 3, rule: 9 })
+        );
     }
 
     #[test]

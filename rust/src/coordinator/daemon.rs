@@ -7,15 +7,19 @@
 //! orchestrator with backpressure" role of the Layer-3 coordinator: a
 //! round only plans as many movements as the executor can absorb, so
 //! balancing never overwhelms recovery I/O.
+//!
+//! Since the scenario-engine refactor the loop is a thin adapter: each
+//! round is a `WorkloadPhase` + `BalanceRound` pair executed by
+//! [`crate::scenario::ScenarioEngine`], which owns the virtual clock,
+//! the executor, and the AIMD throttle.
 
 use crate::balancer::Balancer;
-use crate::cluster::{ClusterState, PgId, PoolKind};
-use crate::simulator::workload::{Workload, WorkloadModel};
-use crate::util::rng::Rng;
+use crate::cluster::ClusterState;
+use crate::scenario::{ScenarioConfig, ScenarioEngine, ScenarioEvent};
+use crate::simulator::workload::WorkloadModel;
 
 use super::events::{Event, EventLog};
-use super::executor::{execute_plan, ExecutorConfig};
-use super::throttle::Throttle;
+use super::executor::ExecutorConfig;
 
 /// Daemon tunables.
 #[derive(Debug, Clone)]
@@ -75,122 +79,68 @@ pub struct DaemonReport {
     pub elapsed: f64,
 }
 
-/// Apply one round of client writes: `user_bytes` spread across
-/// user-data pools proportionally to PG count, hitting PGs uniformly
-/// (the paper's model: objects hash uniformly into PGs).
-pub fn apply_writes(state: &mut ClusterState, user_bytes: u64, rng: &mut Rng) -> u64 {
-    let pools: Vec<(u32, u32, f64)> = state
-        .pools
-        .values()
-        .filter(|p| p.kind == PoolKind::UserData)
-        .map(|p| (p.id, p.pg_count, p.redundancy.shard_fraction()))
-        .collect();
-    if pools.is_empty() || user_bytes == 0 {
-        return 0;
-    }
-    let total_pgs: u64 = pools.iter().map(|&(_, c, _)| c as u64).sum();
-    let mut written = 0u64;
-    for &(pool_id, pg_count, shard_fraction) in &pools {
-        let pool_bytes = user_bytes * pg_count as u64 / total_pgs;
-        if pool_bytes == 0 {
-            continue;
-        }
-        // hit ~min(pg_count, 32) random PGs with the pool's share
-        let hits = (pg_count as usize).min(32);
-        let per_pg_user = pool_bytes / hits as u64;
-        if per_pg_user == 0 {
-            continue;
-        }
-        for _ in 0..hits {
-            let idx = rng.below(pg_count as u64) as u32;
-            let per_shard = (per_pg_user as f64 * shard_fraction).round() as u64;
-            if per_shard == 0 {
-                continue;
-            }
-            if state.grow_pg(PgId::new(pool_id, idx), per_shard).is_ok() {
-                written += per_pg_user;
-            }
-        }
-    }
-    written
-}
-
-/// Run the daemon loop.
+/// Run the daemon loop: each round is a `WorkloadPhase` (client writes
+/// re-skew the cluster) followed by a `BalanceRound` (a bounded
+/// `propose_batch` plan executed under backfill limits, with adaptive
+/// AIMD backpressure when `target_round_seconds` is set). The scenario
+/// engine owns virtual time end to end.
+///
+/// Note on reproducibility: runs are deterministic per `cfg.seed`, but
+/// the write streams differ from the pre-refactor daemon for the same
+/// seed — each round's `WorkloadPhase` draws a fresh workload RNG from
+/// the engine's seed stream, where the old loop carried one workload
+/// RNG across rounds. Round 0 matches; later rounds diverge.
 pub fn run_daemon(
     state: &mut ClusterState,
     balancer: &mut dyn Balancer,
     cfg: &DaemonConfig,
 ) -> DaemonReport {
-    let mut rng = Rng::new(cfg.seed);
-    let mut workload = Workload::new(cfg.workload.clone(), rng.next_u64());
-    let mut throttle = cfg
-        .target_round_seconds
-        .map(|t| Throttle::new(cfg.moves_per_round, t));
-    let mut log = EventLog::default();
+    let mut engine = ScenarioEngine::new(
+        state,
+        Some(balancer),
+        ScenarioConfig {
+            executor: Some(cfg.executor.clone()),
+            target_round_seconds: cfg.target_round_seconds,
+            // the daemon reports per round, not per move, and discards
+            // the time series — skip sample capture entirely
+            sample_every: usize::MAX,
+            record_series: false,
+        },
+        cfg.seed,
+    );
     let mut rounds = Vec::new();
-    let mut vtime = 0.0f64;
 
     for round in 0..cfg.rounds {
-        log.push(vtime, Event::RoundStarted { round });
-
-        // 1. client writes re-skew the cluster
-        let written = workload.write(state, cfg.write_bytes_per_round);
-        if written > 0 {
-            log.push(vtime, Event::WritesApplied { round, user_bytes: written });
-        }
-
-        // 2. plan a bounded batch (backpressure; adaptive when
-        //    configured). One `propose_batch` call lets engines amortize
-        //    constraint caches and candidate buffers across the whole
-        //    round instead of paying per-move setup `budget` times.
-        let budget = throttle.as_ref().map(|t| t.budget()).unwrap_or(cfg.moves_per_round);
-        let t0 = std::time::Instant::now();
-        let plan = balancer.propose_batch(state, budget);
-        // a batch shorter than its budget means the balancer ran out of
-        // legal, variance-improving moves — the round converged
-        let converged = plan.len() < budget;
-        let calc = t0.elapsed().as_secs_f64();
-        let moved_bytes: u64 = plan.iter().map(|m| m.bytes).sum();
-        log.push(
-            vtime,
-            Event::PlanComputed { round, moves: plan.len(), bytes: moved_bytes, calc_seconds: calc },
-        );
-
-        // 3. execute under backfill limits (virtual time advances)
-        let report = execute_plan(&plan, &cfg.executor, state.osd_count());
-        vtime += report.makespan;
-        if let Some(t) = throttle.as_mut() {
-            t.observe(report.makespan, plan.len());
-        }
-        log.push(
-            vtime,
-            Event::PlanExecuted {
-                round,
-                makespan: report.makespan,
-                peak_concurrency: report.peak_concurrency,
-            },
-        );
-        if converged {
-            log.push(vtime, Event::Converged { round });
-        }
+        engine.log_event(Event::RoundStarted { round });
+        let writes = engine
+            .apply(&ScenarioEvent::WorkloadPhase {
+                model: cfg.workload.clone(),
+                user_bytes: cfg.write_bytes_per_round,
+                duration: 0.0,
+            })
+            .expect("workload phases cannot fail");
+        let plan = engine
+            .apply(&ScenarioEvent::BalanceRound { max_moves: cfg.moves_per_round })
+            .expect("a balancer is attached, so BalanceRound cannot fail");
 
         rounds.push(RoundReport {
             round,
-            written_user_bytes: written,
-            planned_moves: plan.len(),
-            moved_bytes,
-            makespan: report.makespan,
-            variance_after: state.utilization_variance(),
-            total_avail_after: state.total_max_avail(true),
-            converged,
+            written_user_bytes: writes.written_bytes,
+            planned_moves: plan.planned_moves,
+            moved_bytes: plan.moved_bytes,
+            makespan: plan.makespan,
+            variance_after: engine.state().utilization_variance(),
+            total_avail_after: engine.state().total_max_avail(true),
+            converged: plan.converged,
         });
 
-        if converged && cfg.write_bytes_per_round == 0 {
+        if plan.converged && cfg.write_bytes_per_round == 0 {
             break; // nothing will change anymore
         }
     }
 
-    DaemonReport { rounds, log, elapsed: vtime }
+    let out = engine.finish();
+    DaemonReport { rounds, log: out.log, elapsed: out.elapsed }
 }
 
 #[cfg(test)]
@@ -215,24 +165,6 @@ mod tests {
             vec![Pool::replicated(1, "p", 3, 64, 0)],
             |_, i| (10 + (i % 7) as u64) * GIB,
         )
-    }
-
-    #[test]
-    fn apply_writes_accounts_bytes() {
-        let mut s = cluster();
-        let before = s.total_used();
-        let mut rng = Rng::new(1);
-        let written = apply_writes(&mut s, 64 * GIB, &mut rng);
-        assert!(written > 0);
-        // replicated ×3: raw growth is 3× the user bytes actually applied
-        assert_eq!(s.total_used() - before, 3 * written_raw(&s, written));
-        assert!(s.verify().is_empty());
-    }
-
-    // helper: with one replicated pool, per-shard growth equals user
-    // bytes per pg; raw = 3 × Σ per-shard
-    fn written_raw(_s: &ClusterState, written: u64) -> u64 {
-        written
     }
 
     #[test]

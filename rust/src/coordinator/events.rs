@@ -1,8 +1,12 @@
-//! Structured event log for the balancing daemon.
+//! Structured event log for the balancing daemon and the scenario
+//! engine: every operational occurrence — client writes, plans,
+//! throttled executions, failures, recoveries, expansions, pool
+//! lifecycle — stamped with virtual time.
 
+use crate::crush::OsdId;
 use crate::util::units::{fmt_bytes, fmt_duration};
 
-/// One coordinator event, stamped with virtual time.
+/// One coordinator/scenario event, stamped with virtual time.
 #[derive(Debug, Clone)]
 pub enum Event {
     RoundStarted { round: usize },
@@ -10,6 +14,27 @@ pub enum Event {
     PlanComputed { round: usize, moves: usize, bytes: u64, calc_seconds: f64 },
     PlanExecuted { round: usize, makespan: f64, peak_concurrency: usize },
     Converged { round: usize },
+    /// A device failed; its shards were re-placed (`backfills` of them,
+    /// `bytes` total) or left degraded.
+    OsdFailed { osd: OsdId, backfills: usize, bytes: u64, degraded: usize },
+    /// A whole host failed (`osds` devices down).
+    HostFailed { host: String, osds: usize, backfills: usize, bytes: u64, degraded: usize },
+    /// Backfill/recovery traffic was executed under throttling.
+    RecoveryExecuted { makespan: f64, bytes: u64 },
+    /// New empty hosts were attached to the hierarchy.
+    HostsAdded { hosts: usize, osds: usize, bytes_per_osd: u64 },
+    /// A pool was created on the live cluster.
+    PoolCreated { pool: u32, pgs: u32, user_bytes: u64 },
+    /// Targeted writes grew one pool.
+    PoolGrown { pool: u32, user_bytes: u64 },
+    /// Object deletions shrank one pool.
+    PoolShrunk { pool: u32, user_bytes: u64 },
+    /// A pool was decommissioned: all of its data deleted.
+    PoolDrained { pool: u32, bytes: u64 },
+    /// The cluster was aged through grow/shrink epochs.
+    Aged { epochs: usize },
+    /// A labelled measurement snapshot was captured.
+    SnapshotTaken { label: String },
 }
 
 /// Append-only event log.
@@ -55,6 +80,40 @@ impl EventLog {
                     peak_concurrency
                 ),
                 Event::Converged { round } => format!("round {round}: balancer converged"),
+                Event::OsdFailed { osd, backfills, bytes, degraded } => format!(
+                    "osd.{osd} failed: {backfills} backfills ({}){}",
+                    fmt_bytes(*bytes),
+                    if *degraded > 0 { format!(", {degraded} degraded PGs") } else { String::new() }
+                ),
+                Event::HostFailed { host, osds, backfills, bytes, degraded } => format!(
+                    "host {host} failed ({osds} OSDs): {backfills} backfills ({}){}",
+                    fmt_bytes(*bytes),
+                    if *degraded > 0 { format!(", {degraded} degraded PGs") } else { String::new() }
+                ),
+                Event::RecoveryExecuted { makespan, bytes } => format!(
+                    "recovery executed: {} in {}",
+                    fmt_bytes(*bytes),
+                    fmt_duration(*makespan)
+                ),
+                Event::HostsAdded { hosts, osds, bytes_per_osd } => format!(
+                    "expansion: {hosts} hosts / {osds} OSDs of {} added",
+                    fmt_bytes(*bytes_per_osd)
+                ),
+                Event::PoolCreated { pool, pgs, user_bytes } => format!(
+                    "pool {pool} created ({pgs} PGs, {})",
+                    fmt_bytes(*user_bytes)
+                ),
+                Event::PoolGrown { pool, user_bytes } => {
+                    format!("pool {pool} grew by {}", fmt_bytes(*user_bytes))
+                }
+                Event::PoolShrunk { pool, user_bytes } => {
+                    format!("pool {pool} shrank by {}", fmt_bytes(*user_bytes))
+                }
+                Event::PoolDrained { pool, bytes } => {
+                    format!("pool {pool} decommissioned ({} deleted)", fmt_bytes(*bytes))
+                }
+                Event::Aged { epochs } => format!("cluster aged {epochs} epochs"),
+                Event::SnapshotTaken { label } => format!("snapshot '{label}'"),
             };
             out.push_str(&format!("[t={:>10}] {}\n", fmt_duration(*t), line));
         }
@@ -83,5 +142,29 @@ mod tests {
         assert!(text.contains("converged"));
         assert_eq!(log.len(), 5);
         assert!(!log.is_empty());
+    }
+
+    #[test]
+    fn scenario_events_render() {
+        let mut log = EventLog::default();
+        log.push(0.0, Event::OsdFailed { osd: 3, backfills: 7, bytes: 1 << 30, degraded: 1 });
+        log.push(1.0, Event::HostFailed { host: "host001".into(), osds: 2, backfills: 9, bytes: 2 << 30, degraded: 0 });
+        log.push(2.0, Event::RecoveryExecuted { makespan: 12.5, bytes: 3 << 30 });
+        log.push(3.0, Event::HostsAdded { hosts: 2, osds: 8, bytes_per_osd: 4 << 40 });
+        log.push(4.0, Event::PoolCreated { pool: 9, pgs: 32, user_bytes: 1 << 40 });
+        log.push(5.0, Event::PoolGrown { pool: 9, user_bytes: 1 << 30 });
+        log.push(6.0, Event::PoolShrunk { pool: 9, user_bytes: 1 << 29 });
+        log.push(7.0, Event::PoolDrained { pool: 9, bytes: 1 << 40 });
+        log.push(8.0, Event::Aged { epochs: 12 });
+        log.push(9.0, Event::SnapshotTaken { label: "steady".into() });
+        let text = log.render();
+        assert_eq!(text.lines().count(), 10);
+        assert!(text.contains("osd.3 failed"));
+        assert!(text.contains("1 degraded"));
+        assert!(text.contains("host host001 failed"));
+        assert!(text.contains("expansion: 2 hosts"));
+        assert!(text.contains("pool 9 created"));
+        assert!(text.contains("decommissioned"));
+        assert!(text.contains("snapshot 'steady'"));
     }
 }

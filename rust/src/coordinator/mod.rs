@@ -8,7 +8,7 @@ pub mod events;
 pub mod executor;
 pub mod throttle;
 
-pub use daemon::{apply_writes, run_daemon, DaemonConfig, DaemonReport, RoundReport};
+pub use daemon::{run_daemon, DaemonConfig, DaemonReport, RoundReport};
 pub use events::{Event, EventLog};
 pub use executor::{execute_plan, ExecutionReport, ExecutorConfig, TransferRecord};
 pub use throttle::Throttle;

@@ -5,8 +5,16 @@
 //!
 //! Used by robustness tests and as an alternative initial-state source
 //! for the experiments (any seed gives a different history).
+//!
+//! Since the scenario-engine refactor, aging is a scenario: [`spec`]
+//! constructs the one-event timeline and [`age`] is a thin adapter that
+//! runs it through [`crate::scenario::ScenarioEngine`] (planning-only —
+//! aging models no data movement of its own). The engine's `Age` event
+//! calls back into [`age_epoch`], so composing aging with failures,
+//! expansions, and balancing rounds is just a longer timeline.
 
 use crate::cluster::{ClusterState, PgId, PoolKind};
+use crate::scenario::{ScenarioConfig, ScenarioEngine, ScenarioSpec};
 use crate::util::rng::Rng;
 
 /// One epoch of history.
@@ -30,12 +38,30 @@ impl Default for AgingConfig {
     }
 }
 
+/// The aging timeline: one seeded `Age` event carrying `cfg`.
+pub fn spec(cfg: &AgingConfig, seed: u64) -> ScenarioSpec {
+    ScenarioSpec::new("aging", seed).age(cfg.clone())
+}
+
 /// Age the cluster in place. Growth/shrink hits PGs unevenly (uniform
 /// random PG choice, like hashed object placement), which is exactly
 /// what drives per-OSD drift. Never overfills: growth is skipped when it
 /// would push any touched OSD past ~95 %.
+///
+/// Thin adapter over the scenario engine; byte-for-byte identical to the
+/// historical direct loop (the engine feeds the same seeded RNG stream
+/// into [`age_epoch`]).
 pub fn age(state: &mut ClusterState, cfg: &AgingConfig, seed: u64) {
-    let mut rng = Rng::new(seed);
+    ScenarioEngine::new(state, None, ScenarioConfig::silent(), seed)
+        .run(&spec(cfg, seed))
+        .expect("aging timelines cannot fail");
+}
+
+/// One epoch of drift: every active user pool grows or shrinks a random
+/// third of its PGs by a fraction of its mean shard size. The scenario
+/// engine's `Age` event drives this with its own RNG so aging composes
+/// with other timeline events deterministically.
+pub fn age_epoch(state: &mut ClusterState, cfg: &AgingConfig, rng: &mut Rng) {
     let pool_ids: Vec<u32> = state
         .pools
         .values()
@@ -43,53 +69,51 @@ pub fn age(state: &mut ClusterState, cfg: &AgingConfig, seed: u64) {
         .map(|p| p.id)
         .collect();
 
-    for _epoch in 0..cfg.epochs {
-        for &pool_id in &pool_ids {
-            if rng.chance(cfg.dormant_prob) {
+    for &pool_id in &pool_ids {
+        if rng.chance(cfg.dormant_prob) {
+            continue;
+        }
+        let pool = state.pools[&pool_id].clone();
+        let pgs: Vec<PgId> =
+            (0..pool.pg_count).map(|i| PgId::new(pool_id, i)).collect();
+        let grow = rng.chance(0.6);
+        // per-epoch volume relative to the pool's current mean shard
+        let mean_shard: f64 = {
+            let (sum, n) = pgs
+                .iter()
+                .filter_map(|&id| state.pg(id))
+                .fold((0u64, 0u64), |(s, n), pg| (s + pg.shard_bytes, n + 1));
+            if n == 0 {
                 continue;
             }
-            let pool = state.pools[&pool_id].clone();
-            let pgs: Vec<PgId> =
-                (0..pool.pg_count).map(|i| PgId::new(pool_id, i)).collect();
-            let grow = rng.chance(0.6);
-            // per-epoch volume relative to the pool's current mean shard
-            let mean_shard: f64 = {
-                let (sum, n) = pgs
-                    .iter()
-                    .filter_map(|&id| state.pg(id))
-                    .fold((0u64, 0u64), |(s, n), pg| (s + pg.shard_bytes, n + 1));
-                if n == 0 {
-                    continue;
+            sum as f64 / n as f64
+        };
+        let frac = if grow {
+            rng.range_f64(0.0, cfg.max_grow)
+        } else {
+            rng.range_f64(0.0, cfg.max_shrink)
+        };
+        // hit a random third of the PGs
+        let hits = (pgs.len() / 3).max(1);
+        for _ in 0..hits {
+            let pg_id = *rng.choose(&pgs).unwrap();
+            let delta = (mean_shard * frac) as u64;
+            if delta == 0 {
+                continue;
+            }
+            if grow {
+                // don't overfill any holder
+                let ok = state.pg(pg_id).map_or(false, |pg| {
+                    pg.devices().all(|o| {
+                        state.osd_used(o) + delta
+                            < (state.osd_size(o) as f64 * 0.95) as u64
+                    })
+                });
+                if ok {
+                    let _ = state.grow_pg(pg_id, delta);
                 }
-                sum as f64 / n as f64
-            };
-            let frac = if grow {
-                rng.range_f64(0.0, cfg.max_grow)
             } else {
-                rng.range_f64(0.0, cfg.max_shrink)
-            };
-            // hit a random third of the PGs
-            let hits = (pgs.len() / 3).max(1);
-            for _ in 0..hits {
-                let pg_id = *rng.choose(&pgs).unwrap();
-                let delta = (mean_shard * frac) as u64;
-                if delta == 0 {
-                    continue;
-                }
-                if grow {
-                    // don't overfill any holder
-                    let ok = state.pg(pg_id).map_or(false, |pg| {
-                        pg.devices().all(|o| {
-                            state.osd_used(o) + delta
-                                < (state.osd_size(o) as f64 * 0.95) as u64
-                        })
-                    });
-                    if ok {
-                        let _ = state.grow_pg(pg_id, delta);
-                    }
-                } else {
-                    let _ = shrink_pg(state, pg_id, delta);
-                }
+                let _ = shrink_pg(state, pg_id, delta);
             }
         }
     }

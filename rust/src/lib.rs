@@ -19,5 +19,6 @@ pub mod crush;
 pub mod generator;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod simulator;
 pub mod util;

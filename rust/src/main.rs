@@ -10,6 +10,8 @@
 //!   fig5, fig6, ablate-k, ablate-count)
 //! * `daemon`    — run the operational loop (writes → plan → throttled
 //!   execution)
+//! * `scenario`  — list or run discrete-event scenario timelines (the
+//!   paper's §3 situations plus compound churn scenarios)
 //! * `runtime-info` — show PJRT artifact status
 
 use std::path::PathBuf;
@@ -39,6 +41,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(rest),
         "report" => cmd_report(rest),
         "daemon" => cmd_daemon(rest),
+        "scenario" => cmd_scenario(rest),
         "df" => cmd_df(rest),
         "crush" => cmd_crush(rest),
         "runtime-info" => cmd_runtime_info(),
@@ -67,6 +70,8 @@ fn usage() -> String {
      \x20 report        <table1|fig4|fig5|fig6|ablate-k|ablate-count> [--clusters a,b,..]\n\
      \x20                [--scoring S] [--seed N] [--out-dir DIR]\n\
      \x20 daemon        --cluster <a..f|demo> [--rounds N] [--write-gib X] [--moves-per-round N]\n\
+     \x20 scenario      list | run [--name NAME | --all] [--seed N] [--reduced]\n\
+     \x20                [--out-dir DIR] [--quiet]\n\
      \x20 df            --cluster <a..f|demo> | --state FILE   (ceph-df-style report)\n\
      \x20 crush         --cluster <a..f|demo> | --state FILE [--tree]  (decompile CRUSH map)\n\
      \x20 runtime-info\n"
@@ -355,6 +360,74 @@ fn cmd_daemon(argv: &[String]) -> AppResult {
         );
     }
     println!("total virtual time: {}", fmt_duration(report.elapsed));
+    Ok(())
+}
+
+fn cmd_scenario(argv: &[String]) -> AppResult {
+    let Some((which, rest)) = argv.split_first() else {
+        return Err(app_err!("scenario requires an action: list|run"));
+    };
+    match which.as_str() {
+        "list" => {
+            println!("library scenarios (seeded, deterministic):");
+            for (name, description) in equilibrium::scenario::library::CATALOG {
+                println!("  {name:<28} {description}");
+            }
+            Ok(())
+        }
+        "run" => cmd_scenario_run(rest),
+        other => Err(app_err!("unknown scenario action '{other}' (list|run)")),
+    }
+}
+
+fn cmd_scenario_run(argv: &[String]) -> AppResult {
+    let cli = Cli::new("equilibrium scenario run", "execute scenario timelines")
+        .opt("name", "NAME", "library scenario to run (see `scenario list`)")
+        .flag("all", "run the whole library")
+        .opt_default("seed", "N", "0", "scenario seed")
+        .flag("reduced", "reduced-size mode (small cluster, small volumes; CI smoke)")
+        .opt("out-dir", "DIR", "write the unified time series CSVs here")
+        .flag("quiet", "suppress the per-event log");
+    let a = cli.parse(argv.iter())?;
+    let seed = a.get_u64("seed")?.unwrap_or(0);
+    let reduced = a.flag("reduced");
+
+    let names: Vec<&str> = if a.flag("all") {
+        equilibrium::scenario::ALL.to_vec()
+    } else {
+        match a.get("name") {
+            Some(n) => vec![n],
+            None => return Err(app_err!("one of --name or --all is required")),
+        }
+    };
+
+    for name in names {
+        let mut case = equilibrium::scenario::library::by_name(name, seed, reduced)
+            .ok_or_else(|| app_err!("unknown scenario '{name}' (see `scenario list`)"))?;
+        let var_before = case.state.utilization_variance();
+        let outcome = case
+            .run()
+            .map_err(|e| app_err!("scenario '{name}' failed: {e}"))?;
+        if !a.flag("quiet") {
+            print!("{}", outcome.log.render());
+        }
+        println!(
+            "{name}: {} moves ({}), variance {:.3e} -> {:.3e}, virtual time {}, calc {}",
+            outcome.movements.len(),
+            fmt_bytes_f(outcome.movements.iter().map(|m| m.bytes).sum::<u64>() as f64),
+            var_before,
+            case.state.utilization_variance(),
+            fmt_duration(outcome.elapsed),
+            fmt_duration(outcome.total_calc_seconds),
+        );
+        let problems = case.state.verify();
+        if !problems.is_empty() {
+            return Err(app_err!("scenario '{name}' violated invariants: {problems:?}"));
+        }
+        if let Some(dir) = a.get("out-dir") {
+            report::scenario_series(std::path::Path::new(dir), name, &outcome.series)?;
+        }
+    }
     Ok(())
 }
 

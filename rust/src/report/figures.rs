@@ -179,6 +179,20 @@ pub fn figure6(out_dir: &Path, seed: u64, scoring: Scoring) -> std::io::Result<(
     Ok(())
 }
 
+/// Write a scenario run's unified time series as a figures-compatible
+/// CSV (`scenario_<name>.csv`): the same per-sample channels as the
+/// paper figures plus the `vtime` column stamped by the scenario
+/// engine. Returns the file path.
+pub fn scenario_series(
+    out_dir: &Path,
+    name: &str,
+    series: &crate::simulator::TimeSeries,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = out_dir.join(format!("scenario_{name}.csv"));
+    write_csv_file(&path, &series.to_csv())?;
+    Ok(path)
+}
+
 /// Ablation: the `k` parameter (§3.1: larger k = more sources tried =
 /// longer calculation but potentially more moves found).
 pub fn ablate_k(cluster: &str, seed: u64, ks: &[usize], scoring: Scoring) -> Table {

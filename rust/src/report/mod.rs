@@ -7,6 +7,6 @@ pub mod table;
 
 pub use figures::{
     ablate_count_criterion, ablate_k, figure4, figure5, figure6, make_equilibrium, run_cluster,
-    table1, Scoring, Table1Row,
+    scenario_series, table1, Scoring, Table1Row,
 };
 pub use table::Table;

@@ -1,0 +1,674 @@
+//! The scenario engine: one executor for every operational timeline.
+//!
+//! Owns virtual time end to end. The clock only advances through modeled
+//! causes — executor makespans (balancing plans and recovery backfills)
+//! and declared workload-phase durations. Wall clock is consulted in
+//! exactly one place, to *measure* balancer calculation time (the
+//! paper's Figure 6 channel); it never feeds the virtual clock, so runs
+//! are reproducible regardless of host speed.
+//!
+//! The engine drives any [`Balancer`] through
+//! [`Balancer::propose_batch`], routes failure backfills through the
+//! executor + throttle model, and emits one unified [`EventLog`] and
+//! [`TimeSeries`] — the same artifacts `report::figures` consumes.
+
+use std::time::Instant; // calc-time measurement ONLY — never virtual time
+
+use crate::balancer::Balancer;
+use crate::cluster::{add_hosts, fail_osd, ClusterState, ExpandError, Movement, PgId, StateError};
+use crate::coordinator::{execute_plan, Event, EventLog, ExecutorConfig, Throttle};
+use crate::crush::NodeId;
+use crate::generator::aging::age_epoch;
+use crate::simulator::{delete_from_pool, write_pool, Sample, TimeSeries, Workload};
+use crate::util::rng::Rng;
+
+use super::spec::{ScenarioEvent, ScenarioSpec};
+
+/// Engine tunables.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Execute plans/backfills under these limits, advancing virtual
+    /// time by the makespan. `None` = pure planning (the `simulate`
+    /// adapter): nothing is executed and the clock stays put.
+    pub executor: Option<ExecutorConfig>,
+    /// When set, an AIMD throttle sizes each balance round so execution
+    /// fits this many virtual seconds (initialized from the first
+    /// round's budget).
+    pub target_round_seconds: Option<f64>,
+    /// Capture a time-series sample every this many planned moves
+    /// (0 is clamped to 1).
+    pub sample_every: usize,
+    /// Record the measurement [`TimeSeries`] at all. Adapters that
+    /// discard the series (the daemon, aging) turn this off so no
+    /// O(pools × OSDs) sample captures are paid.
+    pub record_series: bool,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            executor: Some(ExecutorConfig::default()),
+            target_round_seconds: None,
+            sample_every: 1,
+            record_series: true,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Planning-only configuration: no executor, no throttle — the
+    /// virtual clock never advances. Used by the `simulate` adapter and
+    /// by aging (which models no data movement of its own).
+    pub fn planning_only(sample_every: usize) -> ScenarioConfig {
+        ScenarioConfig {
+            executor: None,
+            target_round_seconds: None,
+            sample_every,
+            record_series: true,
+        }
+    }
+
+    /// Like [`ScenarioConfig::planning_only`], with series recording off
+    /// (for adapters that discard the measurements entirely).
+    pub fn silent() -> ScenarioConfig {
+        ScenarioConfig { record_series: false, ..ScenarioConfig::planning_only(usize::MAX) }
+    }
+}
+
+/// Why a scenario could not proceed.
+#[derive(Debug)]
+pub enum ScenarioError {
+    /// A `BalanceRound` was scheduled but the engine has no balancer.
+    NoBalancer,
+    /// A pool event referenced an unknown pool id.
+    UnknownPool(u32),
+    /// `FailOsd` referenced a device id the cluster does not have.
+    UnknownOsd(crate::crush::OsdId),
+    /// `FailHost` referenced a bucket the CRUSH map does not have.
+    UnknownHost(String),
+    /// `AddHosts` failed to reassemble the map.
+    Expand(ExpandError),
+    /// `CreatePool` was rejected by the cluster.
+    State(StateError),
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioError::NoBalancer => write!(f, "scenario schedules balancing but no balancer was provided"),
+            ScenarioError::UnknownPool(id) => write!(f, "scenario references unknown pool {id}"),
+            ScenarioError::UnknownOsd(id) => write!(f, "scenario references unknown osd.{id}"),
+            ScenarioError::UnknownHost(h) => write!(f, "scenario references unknown host '{h}'"),
+            ScenarioError::Expand(e) => write!(f, "expansion failed: {e}"),
+            ScenarioError::State(e) => write!(f, "cluster rejected scenario event: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// What one event did (zeros where a channel does not apply).
+#[derive(Debug, Clone, Default)]
+pub struct EventOutcome {
+    /// User bytes applied: written (workload phases, pool
+    /// creation/growth) or deleted (pool shrink).
+    pub written_bytes: u64,
+    /// Movements planned (balance rounds) or backfilled (failures).
+    pub planned_moves: usize,
+    /// Raw bytes those movements carry.
+    pub moved_bytes: u64,
+    /// Virtual seconds this event advanced the clock.
+    pub makespan: f64,
+    /// Balance round only: the balancer ran out of improving moves.
+    pub converged: bool,
+    /// Wall-clock seconds the balancer spent planning (measurement
+    /// channel; never feeds virtual time).
+    pub calc_seconds: f64,
+}
+
+/// Everything a finished scenario produced.
+#[derive(Debug)]
+pub struct ScenarioOutcome {
+    /// The unified event log, virtual-time stamped.
+    pub log: EventLog,
+    /// Measurement samples (figures-compatible; `vtime` stamped).
+    pub series: TimeSeries,
+    /// Every balancing movement, in plan order (backfills excluded —
+    /// they are recovery, not balancing).
+    pub movements: Vec<Movement>,
+    /// Total virtual time elapsed, seconds.
+    pub elapsed: f64,
+    /// Total balancer planning time, wall-clock seconds.
+    pub total_calc_seconds: f64,
+}
+
+/// The discrete-event executor for [`ScenarioSpec`] timelines.
+///
+/// Adapters drive it event by event ([`ScenarioEngine::apply`]); whole
+/// scenarios run through [`ScenarioEngine::run`].
+pub struct ScenarioEngine<'a> {
+    state: &'a mut ClusterState,
+    balancer: Option<&'a mut dyn Balancer>,
+    cfg: ScenarioConfig,
+    rng: Rng,
+    vtime: f64,
+    round: usize,
+    log: EventLog,
+    series: TimeSeries,
+    movements: Vec<Movement>,
+    moved_bytes: u64,
+    total_calc_seconds: f64,
+    throttle: Option<Throttle>,
+    /// Cluster state mutated since the last captured sample — tells
+    /// [`ScenarioEngine::finish`] whether a terminal capture is needed
+    /// (move counts alone would miss trailing failures/shrinks).
+    dirty: bool,
+}
+
+impl<'a> ScenarioEngine<'a> {
+    /// Build an engine over `state`. `balancer` may be `None` for
+    /// scenarios that never schedule a `BalanceRound` (e.g. aging).
+    /// Captures the initial measurement sample.
+    pub fn new(
+        state: &'a mut ClusterState,
+        balancer: Option<&'a mut dyn Balancer>,
+        cfg: ScenarioConfig,
+        seed: u64,
+    ) -> ScenarioEngine<'a> {
+        let mut engine = ScenarioEngine {
+            state,
+            balancer,
+            cfg,
+            rng: Rng::new(seed),
+            vtime: 0.0,
+            round: 0,
+            log: EventLog::default(),
+            series: TimeSeries::default(),
+            movements: Vec::new(),
+            moved_bytes: 0,
+            total_calc_seconds: 0.0,
+            throttle: None,
+            dirty: false,
+        };
+        engine.capture_sample(0.0);
+        engine
+    }
+
+    /// The cluster under the engine (adapters read metrics between
+    /// events).
+    pub fn state(&self) -> &ClusterState {
+        self.state
+    }
+
+    /// Current virtual time, seconds.
+    pub fn vtime(&self) -> f64 {
+        self.vtime
+    }
+
+    /// Append an event to the log at the current virtual time (adapters
+    /// keep their own framing events, e.g. the daemon's `RoundStarted`).
+    pub fn log_event(&mut self, event: Event) {
+        self.log.push(self.vtime, event);
+    }
+
+    fn capture_sample(&mut self, calc_seconds: f64) {
+        if !self.cfg.record_series {
+            return;
+        }
+        let mut s = Sample::capture(self.state, self.movements.len(), self.moved_bytes, calc_seconds);
+        s.vtime = self.vtime;
+        self.series.samples.push(s);
+        self.dirty = false;
+    }
+
+    /// Execute one event; returns what it did.
+    pub fn apply(&mut self, event: &ScenarioEvent) -> Result<EventOutcome, ScenarioError> {
+        match event {
+            ScenarioEvent::FailOsd { osd } => {
+                if (*osd as usize) >= self.state.osd_count() {
+                    return Err(ScenarioError::UnknownOsd(*osd));
+                }
+                let report = fail_osd(self.state, *osd);
+                self.dirty = true;
+                self.topology_changed();
+                let bytes: u64 = report.backfills.iter().map(|m| m.bytes).sum();
+                self.log_event(Event::OsdFailed {
+                    osd: *osd,
+                    backfills: report.backfills.len(),
+                    bytes,
+                    degraded: report.degraded.len(),
+                });
+                let makespan = self.execute_recovery(&report.backfills);
+                Ok(EventOutcome {
+                    planned_moves: report.backfills.len(),
+                    moved_bytes: bytes,
+                    makespan,
+                    ..Default::default()
+                })
+            }
+            ScenarioEvent::FailHost { host } => {
+                let node: NodeId = *self
+                    .state
+                    .crush
+                    .bucket_by_name
+                    .get(host)
+                    .ok_or_else(|| ScenarioError::UnknownHost(host.clone()))?;
+                let victims: Vec<_> = self
+                    .state
+                    .crush
+                    .devices_under(node, None)
+                    .into_iter()
+                    .filter(|&o| self.state.osd_is_up(o))
+                    .collect();
+                // atomic host failure: mark every victim down FIRST so no
+                // backfill from one dying device lands on a sibling that
+                // is about to fail too (which would double-count the
+                // recovery traffic and the virtual time it takes).
+                // fail_osd still rebuilds the CRUSH caches once per
+                // victim — O(map) each — which is accepted: host failures
+                // are rare timeline events, not a hot path
+                for &osd in &victims {
+                    self.state.set_osd_up(osd, false);
+                }
+                let mut backfills = Vec::new();
+                let mut degraded = 0usize;
+                for &osd in &victims {
+                    let report = fail_osd(self.state, osd);
+                    backfills.extend(report.backfills);
+                    degraded += report.degraded.len();
+                }
+                self.dirty = true;
+                self.topology_changed();
+                let bytes: u64 = backfills.iter().map(|m| m.bytes).sum();
+                self.log_event(Event::HostFailed {
+                    host: host.clone(),
+                    osds: victims.len(),
+                    backfills: backfills.len(),
+                    bytes,
+                    degraded,
+                });
+                let makespan = self.execute_recovery(&backfills);
+                Ok(EventOutcome {
+                    planned_moves: backfills.len(),
+                    moved_bytes: bytes,
+                    makespan,
+                    ..Default::default()
+                })
+            }
+            ScenarioEvent::AddHosts { spec } => {
+                let new = add_hosts(self.state, spec).map_err(ScenarioError::Expand)?;
+                self.dirty = true;
+                self.topology_changed();
+                self.log_event(Event::HostsAdded {
+                    hosts: spec.hosts,
+                    osds: new.len(),
+                    bytes_per_osd: spec.osd_bytes,
+                });
+                Ok(EventOutcome::default())
+            }
+            ScenarioEvent::CreatePool { pool, user_bytes } => {
+                let per_pg_user = *user_bytes as f64 / pool.pg_count.max(1) as f64;
+                let per_shard = per_pg_user * pool.redundancy.shard_fraction();
+                let rng = &mut self.rng;
+                self.state
+                    .add_pool(pool.clone(), |_| {
+                        // the generator's per-PG jitter ("PG shard sizes
+                        // in a pool are almost equal", §2.2)
+                        (per_shard * rng.lognormal(0.0, 0.1)).round() as u64
+                    })
+                    .map_err(ScenarioError::State)?;
+                self.dirty = true;
+                self.topology_changed();
+                self.log_event(Event::PoolCreated {
+                    pool: pool.id,
+                    pgs: pool.pg_count,
+                    user_bytes: *user_bytes,
+                });
+                Ok(EventOutcome { written_bytes: *user_bytes, ..Default::default() })
+            }
+            ScenarioEvent::GrowPool { pool, user_bytes } => {
+                if !self.state.pools.contains_key(pool) {
+                    return Err(ScenarioError::UnknownPool(*pool));
+                }
+                let written = write_pool(self.state, *pool, *user_bytes, &mut self.rng);
+                self.dirty |= written > 0;
+                self.log_event(Event::PoolGrown { pool: *pool, user_bytes: written });
+                Ok(EventOutcome { written_bytes: written, ..Default::default() })
+            }
+            ScenarioEvent::ShrinkPool { pool, user_bytes } => {
+                if !self.state.pools.contains_key(pool) {
+                    return Err(ScenarioError::UnknownPool(*pool));
+                }
+                let deleted = delete_from_pool(self.state, *pool, *user_bytes, &mut self.rng);
+                self.dirty |= deleted > 0;
+                self.log_event(Event::PoolShrunk { pool: *pool, user_bytes: deleted });
+                Ok(EventOutcome { written_bytes: deleted, ..Default::default() })
+            }
+            ScenarioEvent::DecommissionPool { pool } => {
+                let pg_count = self
+                    .state
+                    .pools
+                    .get(pool)
+                    .ok_or(ScenarioError::UnknownPool(*pool))?
+                    .pg_count;
+                let mut raw = 0u64;
+                for idx in 0..pg_count {
+                    let id = PgId::new(*pool, idx);
+                    if let Some(pg) = self.state.pg(id) {
+                        raw += pg.shard_bytes * pg.devices().count() as u64;
+                    }
+                    let _ = self.state.shrink_pg_by(id, u64::MAX);
+                }
+                self.dirty |= raw > 0;
+                self.log_event(Event::PoolDrained { pool: *pool, bytes: raw });
+                Ok(EventOutcome::default())
+            }
+            ScenarioEvent::WorkloadPhase { model, user_bytes, duration } => {
+                let mut workload = Workload::new(model.clone(), self.rng.next_u64());
+                let written = workload.write(self.state, *user_bytes);
+                self.dirty |= written > 0;
+                if written > 0 {
+                    self.log_event(Event::WritesApplied {
+                        round: self.round,
+                        user_bytes: written,
+                    });
+                }
+                self.vtime += duration.max(0.0);
+                Ok(EventOutcome {
+                    written_bytes: written,
+                    makespan: duration.max(0.0),
+                    ..Default::default()
+                })
+            }
+            ScenarioEvent::BalanceRound { max_moves } => self.balance_round(*max_moves),
+            ScenarioEvent::Age { cfg } => {
+                for _ in 0..cfg.epochs {
+                    age_epoch(self.state, cfg, &mut self.rng);
+                }
+                self.dirty = true;
+                self.log_event(Event::Aged { epochs: cfg.epochs });
+                Ok(EventOutcome::default())
+            }
+            ScenarioEvent::Snapshot { label } => {
+                self.capture_sample(0.0);
+                self.log_event(Event::SnapshotTaken { label: label.clone() });
+                Ok(EventOutcome::default())
+            }
+        }
+    }
+
+    /// Plan one bounded round via `propose_batch` (chunked for the
+    /// sampling stride), then execute it under the backfill limits.
+    fn balance_round(&mut self, max_moves: usize) -> Result<EventOutcome, ScenarioError> {
+        if self.balancer.is_none() {
+            return Err(ScenarioError::NoBalancer);
+        }
+        // round framing (`RoundStarted`) is the adapter's business — the
+        // daemon emits it before its writes via `log_event`; here the
+        // counter only numbers the plan/execute/converge events
+        let round = self.round;
+        self.round += 1;
+
+        // adaptive budget (the daemon's AIMD backpressure); the first
+        // round seeds the controller with its own budget
+        if self.throttle.is_none() {
+            if let Some(target) = self.cfg.target_round_seconds {
+                self.throttle = Some(Throttle::new(max_moves, target));
+            }
+        }
+        let budget = self.throttle.as_ref().map(|t| t.budget()).unwrap_or(max_moves);
+
+        let chunk = self.cfg.sample_every.max(1);
+        let mut plan: Vec<Movement> = Vec::new();
+        let mut converged = false;
+        let mut calc_total = 0.0;
+        while plan.len() < budget {
+            let n = chunk.min(budget - plan.len());
+            let bal = self.balancer.as_deref_mut().expect("checked above");
+            let t0 = Instant::now(); // measurement only (Figure 6 channel)
+            let batch = bal.propose_batch(self.state, n);
+            let calc = t0.elapsed().as_secs_f64();
+            calc_total += calc;
+            let short = batch.len() < n;
+            if !batch.is_empty() {
+                self.moved_bytes += batch.iter().map(|m| m.bytes).sum::<u64>();
+                self.movements.extend_from_slice(&batch);
+                plan.extend(batch);
+                self.capture_sample(calc);
+            }
+            if short {
+                converged = true;
+                break;
+            }
+        }
+        self.total_calc_seconds += calc_total;
+        let bytes: u64 = plan.iter().map(|m| m.bytes).sum();
+        self.log_event(Event::PlanComputed {
+            round,
+            moves: plan.len(),
+            bytes,
+            calc_seconds: calc_total,
+        });
+
+        let mut makespan = 0.0;
+        if let Some(exec) = &self.cfg.executor {
+            let report = execute_plan(&plan, exec, self.state.osd_count());
+            makespan = report.makespan;
+            self.vtime += makespan;
+            self.dirty |= makespan > 0.0;
+            self.log_event(Event::PlanExecuted {
+                round,
+                makespan,
+                peak_concurrency: report.peak_concurrency,
+            });
+        }
+        if let Some(t) = self.throttle.as_mut() {
+            t.observe(makespan, plan.len());
+        }
+        if converged {
+            self.log_event(Event::Converged { round });
+        }
+        Ok(EventOutcome {
+            planned_moves: plan.len(),
+            moved_bytes: bytes,
+            makespan,
+            converged,
+            calc_seconds: calc_total,
+            ..Default::default()
+        })
+    }
+
+    /// Run recovery traffic through the executor (when configured),
+    /// advancing virtual time.
+    fn execute_recovery(&mut self, backfills: &[Movement]) -> f64 {
+        let Some(exec) = &self.cfg.executor else { return 0.0 };
+        if backfills.is_empty() {
+            return 0.0;
+        }
+        let report = execute_plan(backfills, exec, self.state.osd_count());
+        self.vtime += report.makespan;
+        let bytes: u64 = backfills.iter().map(|m| m.bytes).sum();
+        self.log_event(Event::RecoveryExecuted { makespan: report.makespan, bytes });
+        report.makespan
+    }
+
+    fn topology_changed(&mut self) {
+        if let Some(b) = self.balancer.as_deref_mut() {
+            b.on_topology_change();
+        }
+    }
+
+    /// Execute a whole spec front to back and finish. Re-seeds the
+    /// engine RNG from `spec.seed` first, so a spec replays bit-for-bit
+    /// regardless of the constructor seed (the spec's documented
+    /// determinism contract).
+    pub fn run(mut self, spec: &ScenarioSpec) -> Result<ScenarioOutcome, ScenarioError> {
+        self.rng = Rng::new(spec.seed);
+        for event in &spec.events {
+            self.apply(event)?;
+        }
+        Ok(self.finish())
+    }
+
+    /// Close the run: capture the terminal sample (if the series does
+    /// not already end on the final move count) and hand the artifacts
+    /// over.
+    pub fn finish(mut self) -> ScenarioOutcome {
+        if self.dirty {
+            self.capture_sample(0.0);
+        }
+        ScenarioOutcome {
+            log: self.log,
+            series: self.series,
+            movements: self.movements,
+            elapsed: self.vtime,
+            total_calc_seconds: self.total_calc_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::Equilibrium;
+    use crate::cluster::HostSpec;
+    use crate::cluster::Pool;
+    use crate::generator::clusters;
+    use crate::simulator::WorkloadModel;
+    use crate::util::units::{GIB, TIB};
+
+    fn run_spec(spec: &ScenarioSpec, seed: u64) -> (ClusterState, ScenarioOutcome) {
+        let mut state = clusters::demo(seed);
+        let mut bal = Equilibrium::default();
+        let engine =
+            ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::default(), spec.seed);
+        let out = engine.run(spec).unwrap();
+        (state, out)
+    }
+
+    #[test]
+    fn compound_timeline_runs_and_is_deterministic() {
+        let spec = ScenarioSpec::new("compound", 11)
+            .workload(WorkloadModel::ZipfPools { exponent: 1.1 }, 32 * GIB, 600.0)
+            .fail_osd(2)
+            .balance(100)
+            .add_hosts(HostSpec::hdd(1, 2, 8 * TIB))
+            .balance(200)
+            .snapshot("end");
+        let (s1, o1) = run_spec(&spec, 11);
+        let (s2, o2) = run_spec(&spec, 11);
+        assert_eq!(s1.total_used(), s2.total_used(), "same seed, same cluster");
+        assert_eq!(o1.movements.len(), o2.movements.len());
+        for (a, b) in o1.movements.iter().zip(&o2.movements) {
+            assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+        }
+        assert_eq!(o1.series.samples.len(), o2.series.samples.len());
+        assert!(o1.elapsed > 0.0, "failures and balancing take virtual time");
+        assert!(s1.verify().is_empty(), "{:?}", s1.verify());
+    }
+
+    #[test]
+    fn virtual_time_only_advances_through_modeled_causes() {
+        // planning-only config: even with failures, no executor means no
+        // virtual time (and workload durations still count)
+        let mut state = clusters::demo(13);
+        let mut bal = Equilibrium::default();
+        let mut engine = ScenarioEngine::new(
+            &mut state,
+            Some(&mut bal),
+            ScenarioConfig::planning_only(1),
+            13,
+        );
+        engine.apply(&ScenarioEvent::FailOsd { osd: 1 }).unwrap();
+        engine.apply(&ScenarioEvent::BalanceRound { max_moves: 50 }).unwrap();
+        assert_eq!(engine.vtime(), 0.0);
+        engine
+            .apply(&ScenarioEvent::WorkloadPhase {
+                model: WorkloadModel::Uniform,
+                user_bytes: GIB,
+                duration: 120.0,
+            })
+            .unwrap();
+        assert_eq!(engine.vtime(), 120.0);
+    }
+
+    #[test]
+    fn create_grow_decommission_pool_lifecycle() {
+        let mut state = clusters::demo(17);
+        let mut bal = Equilibrium::default();
+        let used0 = state.total_used();
+        let mut engine =
+            ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::default(), 17);
+        engine
+            .apply(&ScenarioEvent::CreatePool {
+                pool: Pool::replicated(10, "scratch", 3, 32, 0),
+                user_bytes: 256 * GIB,
+            })
+            .unwrap();
+        let with_pool = engine.state().total_used();
+        assert!(with_pool > used0);
+        engine.apply(&ScenarioEvent::GrowPool { pool: 10, user_bytes: 64 * GIB }).unwrap();
+        assert!(engine.state().total_used() > with_pool);
+        engine.apply(&ScenarioEvent::BalanceRound { max_moves: 100 }).unwrap();
+        engine.apply(&ScenarioEvent::DecommissionPool { pool: 10 }).unwrap();
+        let drained: u64 = engine
+            .state()
+            .pgs()
+            .filter(|p| p.id.pool == 10)
+            .map(|p| p.shard_bytes)
+            .sum();
+        assert_eq!(drained, 0, "decommission empties every PG");
+        // unknown-pool events error out
+        assert!(matches!(
+            engine.apply(&ScenarioEvent::GrowPool { pool: 99, user_bytes: GIB }),
+            Err(ScenarioError::UnknownPool(99))
+        ));
+        let out = engine.finish();
+        assert!(!out.log.is_empty());
+        assert!(state.verify().is_empty(), "{:?}", state.verify());
+    }
+
+    #[test]
+    fn fail_host_downs_all_its_devices() {
+        let mut state = clusters::demo(19);
+        // find the host of osd 0
+        let host = {
+            let node = state.crush.ancestor_at(0, crate::crush::Level::Host).unwrap();
+            state.crush.buckets[&node].name.clone()
+        };
+        let victims = state.crush.devices_under(state.crush.bucket_by_name[&host], None);
+        let mut bal = Equilibrium::default();
+        let mut engine =
+            ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::default(), 19);
+        let out = engine.apply(&ScenarioEvent::FailHost { host: host.clone() }).unwrap();
+        assert!(out.planned_moves > 0, "a populated host must backfill");
+        assert!(out.makespan > 0.0);
+        drop(engine);
+        for o in victims {
+            assert!(!state.osd_is_up(o));
+            assert_eq!(state.osd_used(o), 0);
+        }
+        assert!(state.verify().is_empty());
+        // unknown host errors
+        let mut bal2 = Equilibrium::default();
+        let mut engine2 =
+            ScenarioEngine::new(&mut state, Some(&mut bal2), ScenarioConfig::default(), 19);
+        assert!(matches!(
+            engine2.apply(&ScenarioEvent::FailHost { host: "nope".into() }),
+            Err(ScenarioError::UnknownHost(_))
+        ));
+    }
+
+    #[test]
+    fn balance_round_without_balancer_errors() {
+        let mut state = clusters::demo(23);
+        let mut engine =
+            ScenarioEngine::new(&mut state, None, ScenarioConfig::planning_only(1), 23);
+        assert!(matches!(
+            engine.apply(&ScenarioEvent::BalanceRound { max_moves: 1 }),
+            Err(ScenarioError::NoBalancer)
+        ));
+        // non-balancing events still work without a balancer
+        engine.apply(&ScenarioEvent::Snapshot { label: "ok".into() }).unwrap();
+    }
+}

@@ -1,0 +1,280 @@
+//! The scenario library: the paper's §3 operational situations plus
+//! compound timelines the disconnected drivers could never express —
+//! the kind of churn the rebalancing literature evaluates against
+//! (coded data rebalancing under node addition/removal).
+//!
+//! Every case is a pure function of `(name, seed, reduced)`: the same
+//! arguments reproduce the same cluster, the same timeline, and — via
+//! the engine's seeded RNG — the same run, bit for bit. `reduced` mode
+//! shrinks the cluster and volumes for CI smoke runs.
+
+use crate::balancer::Equilibrium;
+use crate::cluster::{ClusterState, HostSpec, Pool};
+use crate::generator::aging::AgingConfig;
+use crate::generator::clusters;
+use crate::simulator::WorkloadModel;
+use crate::util::units::{GIB, TIB};
+
+use super::engine::{ScenarioConfig, ScenarioEngine, ScenarioError, ScenarioOutcome};
+use super::spec::ScenarioSpec;
+
+/// A runnable case: initial cluster + timeline + engine tuning.
+pub struct ScenarioCase {
+    /// Library name (stable; used for CSV file names).
+    pub name: &'static str,
+    /// One-line description.
+    pub description: &'static str,
+    /// The initial cluster.
+    pub state: ClusterState,
+    /// The timeline.
+    pub spec: ScenarioSpec,
+    /// Engine tuning for this case.
+    pub config: ScenarioConfig,
+}
+
+impl ScenarioCase {
+    /// Run the case with the default Equilibrium balancer, mutating
+    /// `self.state` in place (inspect it afterwards for final metrics).
+    pub fn run(&mut self) -> Result<ScenarioOutcome, ScenarioError> {
+        let mut balancer = Equilibrium::default();
+        ScenarioEngine::new(
+            &mut self.state,
+            Some(&mut balancer),
+            self.config.clone(),
+            self.spec.seed,
+        )
+        .run(&self.spec)
+    }
+}
+
+/// Names of every library scenario. The first three reproduce the
+/// paper's §3 situations; the rest are compound timelines.
+pub const ALL: [&str; 7] = [
+    "pool-growth",
+    "device-failure",
+    "heterogeneous-expansion",
+    "rack-failure-under-hotspot",
+    "rolling-expansion",
+    "pool-decommission",
+    "shrink-then-rebalance",
+];
+
+/// `(name, one-line description)` of every library scenario — no
+/// cluster is built; use this for listings.
+pub const CATALOG: [(&str, &str); 7] = [
+    (
+        "pool-growth",
+        "independent pool growth (§2.2): bursts of targeted and Zipf-skewed writes, balanced between bursts",
+    ),
+    (
+        "device-failure",
+        "steady-state cluster loses a device; recovery backfill, then re-leveling",
+    ),
+    (
+        "heterogeneous-expansion",
+        "add hosts of bigger drives to a balanced cluster and rebalance onto them",
+    ),
+    (
+        "rack-failure-under-hotspot",
+        "a host fails while one pool takes 90% of incoming writes; balancing rounds interleave with the ingest",
+    ),
+    (
+        "rolling-expansion",
+        "capacity arrives host by host while clients keep writing; each step rebalances",
+    ),
+    (
+        "pool-decommission",
+        "a scratch pool is created, filled, balanced, then decommissioned; balancing reclaims the space",
+    ),
+    (
+        "shrink-then-rebalance",
+        "heavy deletions (aging with shrink bias) leave the cluster skewed; balancing re-levels it",
+    ),
+];
+
+/// Names of the compound (multi-cause) scenarios.
+pub const COMPOUND: [&str; 4] = [
+    "rack-failure-under-hotspot",
+    "rolling-expansion",
+    "pool-decommission",
+    "shrink-then-rebalance",
+];
+
+fn base_state(seed: u64, reduced: bool) -> ClusterState {
+    if reduced {
+        clusters::demo(seed)
+    } else {
+        clusters::by_name("c", seed).expect("cluster c exists").state
+    }
+}
+
+fn base_config(reduced: bool) -> ScenarioConfig {
+    ScenarioConfig {
+        sample_every: if reduced { 1 } else { 10 },
+        ..ScenarioConfig::default()
+    }
+}
+
+/// Build a library case. `reduced` shrinks cluster and volumes for CI.
+pub fn by_name(name: &str, seed: u64, reduced: bool) -> Option<ScenarioCase> {
+    // volume scale: the full-size base cluster (paper cluster C) holds
+    // ~20× the demo cluster's data
+    let g = if reduced { GIB } else { 8 * GIB };
+    let moves = if reduced { 400 } else { 1500 };
+
+    // the timeline is cheap to build — validate the name against the
+    // catalog and through the match before paying for cluster generation
+    let (name, description) = *CATALOG.iter().find(|(n, _)| *n == name)?;
+    let spec: ScenarioSpec = match name {
+        // ---- the paper's §3 situations --------------------------------
+        "pool-growth" =>
+            ScenarioSpec::new(name, seed)
+                .snapshot("initial")
+                .grow_pool(1, 192 * g)
+                .balance(moves)
+                .workload(WorkloadModel::ZipfPools { exponent: 1.1 }, 128 * g, 3600.0)
+                .balance(moves)
+                .grow_pool(1, 128 * g)
+                .workload(WorkloadModel::ZipfPools { exponent: 1.1 }, 64 * g, 3600.0)
+                .balance(moves)
+                .snapshot("final"),
+        "device-failure" =>
+            ScenarioSpec::new(name, seed)
+                .balance(4 * moves)
+                .snapshot("steady")
+                .fail_osd(3)
+                .snapshot("post-failure")
+                .balance(4 * moves)
+                .snapshot("re-leveled"),
+        "heterogeneous-expansion" =>
+            ScenarioSpec::new(name, seed)
+                .balance(4 * moves)
+                .snapshot("before-expansion")
+                .add_hosts(HostSpec::hdd(2, 2, 8 * TIB))
+                .snapshot("expanded")
+                .balance(4 * moves)
+                .snapshot("rebalanced"),
+
+        // ---- compound timelines ---------------------------------------
+        "rack-failure-under-hotspot" =>
+            ScenarioSpec::new(name, seed)
+                .workload(WorkloadModel::Hotspot { pool: 1, fraction: 0.9 }, 48 * g, 1800.0)
+                .balance(moves)
+                .fail_host("host001")
+                .workload(WorkloadModel::Hotspot { pool: 1, fraction: 0.9 }, 48 * g, 1800.0)
+                .balance(moves)
+                .workload(WorkloadModel::Hotspot { pool: 1, fraction: 0.9 }, 48 * g, 1800.0)
+                .balance(moves)
+                .snapshot("final"),
+        "rolling-expansion" =>
+            ScenarioSpec::new(name, seed)
+                .snapshot("initial")
+                .add_hosts(HostSpec::hdd(1, 2, 8 * TIB))
+                .workload(WorkloadModel::Uniform, 32 * g, 1800.0)
+                .balance(moves)
+                .add_hosts(HostSpec::hdd(1, 2, 8 * TIB))
+                .workload(WorkloadModel::Uniform, 32 * g, 1800.0)
+                .balance(moves)
+                .add_hosts(HostSpec::hdd(1, 2, 8 * TIB))
+                .workload(WorkloadModel::Uniform, 32 * g, 1800.0)
+                .balance(moves)
+                .snapshot("final"),
+        "pool-decommission" =>
+            ScenarioSpec::new(name, seed)
+                .create_pool(Pool::replicated(50, "scratch", 3, 32, 0), 384 * g)
+                .balance(moves)
+                .grow_pool(50, 128 * g)
+                .balance(moves)
+                .snapshot("before-decommission")
+                .decommission_pool(50)
+                .balance(moves)
+                .snapshot("reclaimed"),
+        "shrink-then-rebalance" =>
+            ScenarioSpec::new(name, seed)
+                .balance(2 * moves)
+                .snapshot("steady")
+                .shrink_pool(1, 512 * g)
+                .age(AgingConfig { epochs: 6, max_grow: 0.05, max_shrink: 0.30, dormant_prob: 0.2 })
+                .snapshot("shrunk")
+                .balance(2 * moves)
+                .snapshot("re-leveled"),
+        _ => return None,
+    };
+
+    Some(ScenarioCase {
+        name,
+        description,
+        state: base_state(seed, reduced),
+        spec,
+        config: base_config(reduced),
+    })
+}
+
+/// All library cases.
+pub fn all(seed: u64, reduced: bool) -> Vec<ScenarioCase> {
+    ALL.iter().map(|n| by_name(n, seed, reduced).expect("library name")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_library_scenario_runs_reduced_and_verifies() {
+        for name in ALL {
+            let mut case = by_name(name, 5, true).unwrap();
+            let out = case.run().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!out.log.is_empty(), "{name}: empty log");
+            assert!(out.series.samples.len() >= 2, "{name}: no measurements");
+            assert!(
+                case.state.verify().is_empty(),
+                "{name}: {:?}",
+                case.state.verify()
+            );
+            // the unified series renders to figures-compatible CSV
+            let csv = out.series.to_csv();
+            assert!(csv.lines().next().unwrap().contains("variance"), "{name}");
+        }
+    }
+
+    #[test]
+    fn library_runs_are_seed_deterministic() {
+        for name in COMPOUND {
+            let out1 = by_name(name, 9, true).unwrap().run().unwrap();
+            let out2 = by_name(name, 9, true).unwrap().run().unwrap();
+            assert_eq!(out1.movements.len(), out2.movements.len(), "{name}");
+            for (a, b) in out1.movements.iter().zip(&out2.movements) {
+                assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes), "{name}");
+            }
+            assert_eq!(out1.elapsed, out2.elapsed, "{name}: virtual clocks diverged");
+        }
+    }
+
+    #[test]
+    fn compound_scenarios_are_in_the_library() {
+        for name in COMPOUND {
+            assert!(ALL.contains(&name));
+            assert!(by_name(name, 0, true).is_some());
+        }
+        assert!(by_name("unknown", 0, true).is_none());
+    }
+
+    #[test]
+    fn catalog_matches_the_library() {
+        assert_eq!(CATALOG.len(), ALL.len());
+        for (name, description) in CATALOG {
+            assert!(ALL.contains(&name), "{name} missing from ALL");
+            let case = by_name(name, 0, true).unwrap();
+            assert_eq!(case.name, name);
+            assert_eq!(case.description, description);
+        }
+    }
+
+    #[test]
+    fn compound_timelines_move_the_virtual_clock_and_balance() {
+        let mut case = by_name("rack-failure-under-hotspot", 3, true).unwrap();
+        let out = case.run().unwrap();
+        assert!(out.elapsed > 0.0, "hotspot ingest + recovery must take virtual time");
+        assert!(!out.movements.is_empty(), "churn must yield balancing moves");
+    }
+}

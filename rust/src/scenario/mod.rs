@@ -1,0 +1,29 @@
+//! Unified discrete-event scenario engine.
+//!
+//! Before this subsystem, three disconnected drivers each owned a slice
+//! of "things that happen to a cluster": `simulator::apply` replayed
+//! pure balancing, `coordinator::daemon` interleaved writes with
+//! throttled execution, and `generator::aging` drifted pools — with
+//! incompatible notions of time, so compound situations (fail a host
+//! *while* a hotspot ingest runs *during* an expansion) could not be
+//! expressed at all.
+//!
+//! Now there is one timeline: a [`ScenarioSpec`] declares seeded,
+//! ordered [`ScenarioEvent`]s, and the [`ScenarioEngine`] executes them
+//! under a single virtual clock, driving any
+//! [`crate::balancer::Balancer`] through `propose_batch`, routing
+//! recovery and plan execution through the coordinator's
+//! executor + throttle model, and emitting one unified
+//! [`crate::coordinator::EventLog`] + [`crate::simulator::TimeSeries`].
+//! The legacy entry points survive as thin adapters
+//! (`simulator::simulate`, `coordinator::run_daemon`, `generator::age`),
+//! and [`library`] ships ready-made timelines: the paper's §3
+//! experiments plus compound churn scenarios.
+
+pub mod engine;
+pub mod library;
+pub mod spec;
+
+pub use engine::{EventOutcome, ScenarioConfig, ScenarioEngine, ScenarioError, ScenarioOutcome};
+pub use library::{ScenarioCase, ALL, CATALOG, COMPOUND};
+pub use spec::{ScenarioEvent, ScenarioSpec};

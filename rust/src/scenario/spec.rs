@@ -1,0 +1,225 @@
+//! Declarative scenario timelines.
+//!
+//! A [`ScenarioSpec`] is a seeded, ordered list of [`ScenarioEvent`]s —
+//! the operational situations the paper evaluates against (independent
+//! pool growth §2.2, device failure, heterogeneous expansion §3.2) and
+//! their compositions (fail a host *while* a Zipf workload runs *during*
+//! an expansion). The [`super::ScenarioEngine`] executes the events in
+//! order under one virtual clock.
+
+use crate::cluster::{HostSpec, Pool};
+use crate::crush::OsdId;
+use crate::generator::aging::AgingConfig;
+use crate::simulator::WorkloadModel;
+
+/// One timeline event.
+#[derive(Debug, Clone)]
+pub enum ScenarioEvent {
+    /// Fail one device: down + out, shards backfilled elsewhere (the
+    /// recovery traffic runs through the executor when one is
+    /// configured).
+    FailOsd {
+        /// The device to fail.
+        osd: OsdId,
+    },
+    /// Fail every up device under the named host bucket.
+    FailHost {
+        /// CRUSH bucket name (e.g. `"host003"`).
+        host: String,
+    },
+    /// Attach new hosts of empty drives (heterogeneous expansion).
+    AddHosts {
+        /// Shape of the new hosts.
+        spec: HostSpec,
+    },
+    /// Create a pool on the live cluster holding `user_bytes` of data
+    /// (per-PG sizes get the generator's ±10 % lognormal jitter).
+    CreatePool {
+        /// The pool definition (id must be unused).
+        pool: Pool,
+        /// User data the new pool starts with.
+        user_bytes: u64,
+    },
+    /// Targeted writes: grow one pool by `user_bytes` (independent pool
+    /// growth, §2.2).
+    GrowPool {
+        /// Pool id.
+        pool: u32,
+        /// User bytes to add.
+        user_bytes: u64,
+    },
+    /// Object deletions: shrink one pool by `user_bytes`.
+    ShrinkPool {
+        /// Pool id.
+        pool: u32,
+        /// User bytes to delete.
+        user_bytes: u64,
+    },
+    /// Decommission a pool: delete all of its data (the empty pool
+    /// remains, as in Ceph before the final `pool rm`).
+    DecommissionPool {
+        /// Pool id.
+        pool: u32,
+    },
+    /// A phase of client traffic: `user_bytes` written under `model`,
+    /// spanning `duration` virtual seconds.
+    WorkloadPhase {
+        /// How writes distribute over pools.
+        model: WorkloadModel,
+        /// Total user bytes written in the phase.
+        user_bytes: u64,
+        /// Virtual time the phase spans, seconds.
+        duration: f64,
+    },
+    /// One balancing round: plan a bounded batch via
+    /// [`crate::balancer::Balancer::propose_batch`] and execute the plan
+    /// under backfill limits. With an active AIMD throttle the adaptive
+    /// budget *replaces* `max_moves` after the first round (it may grow
+    /// past it when execution runs under target — the daemon's
+    /// historical backpressure semantics); without one, `max_moves` is a
+    /// hard cap.
+    BalanceRound {
+        /// Movement budget for the round (seeds the throttle when one is
+        /// configured; hard cap otherwise).
+        max_moves: usize,
+    },
+    /// Age the cluster through the generator's grow/shrink epochs.
+    Age {
+        /// Epoch parameters (includes the epoch count).
+        cfg: AgingConfig,
+    },
+    /// Capture a labelled measurement sample into the time series.
+    Snapshot {
+        /// Label recorded in the event log.
+        label: String,
+    },
+}
+
+/// A named, seeded scenario: events execute in order; all randomness
+/// (workloads, aging, pool jitter) derives from `seed`, so a scenario
+/// replays bit-for-bit.
+///
+/// ```
+/// use equilibrium::balancer::Equilibrium;
+/// use equilibrium::generator::clusters;
+/// use equilibrium::scenario::{ScenarioConfig, ScenarioEngine, ScenarioSpec};
+///
+/// // declare the timeline: measure, fail a device, re-level, measure
+/// let spec = ScenarioSpec::new("failure-then-balance", 7)
+///     .snapshot("initial")
+///     .fail_osd(3)
+///     .balance(500)
+///     .snapshot("recovered");
+/// assert_eq!(spec.events.len(), 4);
+///
+/// // execute it under one virtual clock
+/// let mut state = clusters::demo(7);
+/// let mut balancer = Equilibrium::default();
+/// let engine = ScenarioEngine::new(
+///     &mut state,
+///     Some(&mut balancer),
+///     ScenarioConfig::default(),
+///     spec.seed,
+/// );
+/// let outcome = engine.run(&spec).unwrap();
+/// assert!(outcome.elapsed > 0.0, "recovery and moves take virtual time");
+/// assert!(outcome.series.samples.len() >= 2);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Scenario name (reports, CSV file names).
+    pub name: String,
+    /// Master seed every random draw of the run derives from.
+    pub seed: u64,
+    /// The timeline, executed front to back.
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl ScenarioSpec {
+    /// An empty timeline.
+    pub fn new(name: &str, seed: u64) -> ScenarioSpec {
+        ScenarioSpec { name: name.to_string(), seed, events: Vec::new() }
+    }
+
+    /// Append an arbitrary event.
+    pub fn event(mut self, e: ScenarioEvent) -> Self {
+        self.events.push(e);
+        self
+    }
+
+    /// Append [`ScenarioEvent::FailOsd`].
+    pub fn fail_osd(self, osd: OsdId) -> Self {
+        self.event(ScenarioEvent::FailOsd { osd })
+    }
+
+    /// Append [`ScenarioEvent::FailHost`].
+    pub fn fail_host(self, host: &str) -> Self {
+        self.event(ScenarioEvent::FailHost { host: host.to_string() })
+    }
+
+    /// Append [`ScenarioEvent::AddHosts`].
+    pub fn add_hosts(self, spec: HostSpec) -> Self {
+        self.event(ScenarioEvent::AddHosts { spec })
+    }
+
+    /// Append [`ScenarioEvent::CreatePool`].
+    pub fn create_pool(self, pool: Pool, user_bytes: u64) -> Self {
+        self.event(ScenarioEvent::CreatePool { pool, user_bytes })
+    }
+
+    /// Append [`ScenarioEvent::GrowPool`].
+    pub fn grow_pool(self, pool: u32, user_bytes: u64) -> Self {
+        self.event(ScenarioEvent::GrowPool { pool, user_bytes })
+    }
+
+    /// Append [`ScenarioEvent::ShrinkPool`].
+    pub fn shrink_pool(self, pool: u32, user_bytes: u64) -> Self {
+        self.event(ScenarioEvent::ShrinkPool { pool, user_bytes })
+    }
+
+    /// Append [`ScenarioEvent::DecommissionPool`].
+    pub fn decommission_pool(self, pool: u32) -> Self {
+        self.event(ScenarioEvent::DecommissionPool { pool })
+    }
+
+    /// Append [`ScenarioEvent::WorkloadPhase`].
+    pub fn workload(self, model: WorkloadModel, user_bytes: u64, duration: f64) -> Self {
+        self.event(ScenarioEvent::WorkloadPhase { model, user_bytes, duration })
+    }
+
+    /// Append [`ScenarioEvent::BalanceRound`].
+    pub fn balance(self, max_moves: usize) -> Self {
+        self.event(ScenarioEvent::BalanceRound { max_moves })
+    }
+
+    /// Append [`ScenarioEvent::Age`].
+    pub fn age(self, cfg: AgingConfig) -> Self {
+        self.event(ScenarioEvent::Age { cfg })
+    }
+
+    /// Append [`ScenarioEvent::Snapshot`].
+    pub fn snapshot(self, label: &str) -> Self {
+        self.event(ScenarioEvent::Snapshot { label: label.to_string() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_appends_in_order() {
+        let spec = ScenarioSpec::new("t", 1)
+            .snapshot("a")
+            .fail_osd(0)
+            .balance(10)
+            .workload(WorkloadModel::Uniform, 1, 2.0);
+        assert_eq!(spec.name, "t");
+        assert_eq!(spec.seed, 1);
+        assert_eq!(spec.events.len(), 4);
+        assert!(matches!(spec.events[0], ScenarioEvent::Snapshot { .. }));
+        assert!(matches!(spec.events[1], ScenarioEvent::FailOsd { osd: 0 }));
+        assert!(matches!(spec.events[2], ScenarioEvent::BalanceRound { max_moves: 10 }));
+        assert!(matches!(spec.events[3], ScenarioEvent::WorkloadPhase { .. }));
+    }
+}

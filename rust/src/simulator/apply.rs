@@ -3,13 +3,19 @@
 //! cluster in order to measure the movement amount, to predict the
 //! resulting free space, and to track OSD utilizations and their
 //! variance").
-
-use std::time::Instant;
+//!
+//! Since the scenario-engine refactor this is a thin adapter: `simulate`
+//! is the pure-balancing scenario — one `BalanceRound` event executed by
+//! [`crate::scenario::ScenarioEngine`] in planning-only mode (no
+//! executor, virtual clock frozen at zero). The emitted movement
+//! sequence is identical to the historical select/apply loop; the
+//! golden-trace suite pins that equivalence.
 
 use crate::balancer::Balancer;
 use crate::cluster::{ClusterState, Movement};
+use crate::scenario::{ScenarioConfig, ScenarioEngine, ScenarioEvent};
 
-use super::timeseries::{Sample, TimeSeries};
+use super::timeseries::TimeSeries;
 
 /// Simulation options.
 #[derive(Debug, Clone)]
@@ -17,7 +23,8 @@ pub struct SimOptions {
     /// Hard movement cap (the paper's osdmaptool invocation used 10 000).
     pub max_moves: usize,
     /// Record a sample every `sample_every` moves (1 = every move, as the
-    /// figures need; larger values keep huge runs cheap).
+    /// figures need; larger values keep huge runs cheap). 0 is clamped
+    /// to 1.
     pub sample_every: usize,
 }
 
@@ -51,47 +58,30 @@ impl SimResult {
 
 /// Run `balancer` on `state` until convergence or the cap, timing each
 /// movement computation (Figure 6's channel).
+///
+/// Thin scenario adapter: a single `BalanceRound` under a planning-only
+/// engine. Sampling every `sample_every` moves falls out of the engine's
+/// chunked `propose_batch` drive (chunk = stride), which the golden
+/// suite pins to the exact per-move sequence.
 pub fn simulate(balancer: &mut dyn Balancer, state: &mut ClusterState, opts: &SimOptions) -> SimResult {
-    let mut series = TimeSeries::default();
-    series.samples.push(Sample::capture(state, 0, 0, 0.0));
-    let mut movements = Vec::new();
-    let mut moved_bytes = 0u64;
-    let mut total_calc = 0.0;
-    let mut converged = false;
-
-    while movements.len() < opts.max_moves {
-        let t0 = Instant::now();
-        let proposal = balancer.next_move(state);
-        let calc = t0.elapsed().as_secs_f64();
-        total_calc += calc;
-        let Some(p) = proposal else {
-            converged = true;
-            break;
-        };
-        let m = state
-            .apply_movement(p.pg, p.from, p.to)
-            .unwrap_or_else(|e| panic!("balancer '{}' proposed invalid move: {e}", balancer.name()));
-        moved_bytes += m.bytes;
-        movements.push(m);
-        if movements.len() % opts.sample_every == 0 {
-            series
-                .samples
-                .push(Sample::capture(state, movements.len(), moved_bytes, calc));
-        }
-    }
-    // always capture the terminal state
-    if series.last().map(|s| s.moves) != Some(movements.len()) {
-        series
-            .samples
-            .push(Sample::capture(state, movements.len(), moved_bytes, 0.0));
-    }
+    let name = balancer.name().to_string();
+    let mut engine = ScenarioEngine::new(
+        state,
+        Some(balancer),
+        ScenarioConfig::planning_only(opts.sample_every.max(1)),
+        0,
+    );
+    let round = engine
+        .apply(&ScenarioEvent::BalanceRound { max_moves: opts.max_moves })
+        .expect("a balancer is attached, so BalanceRound cannot fail");
+    let out = engine.finish();
 
     SimResult {
-        balancer: balancer.name().to_string(),
-        movements,
-        series,
-        converged,
-        total_calc_seconds: total_calc,
+        balancer: name,
+        movements: out.movements,
+        series: out.series,
+        converged: round.converged,
+        total_calc_seconds: out.total_calc_seconds,
     }
 }
 
@@ -196,5 +186,46 @@ mod tests {
         let res = simulate(&mut bal, &mut state, &SimOptions { max_moves: 10_000, sample_every: 5 });
         assert!(res.series.samples.len() <= res.movements.len() / 5 + 2);
         assert_eq!(res.series.last().unwrap().moves, res.movements.len());
+    }
+
+    /// `sample_every: 0` used to be a modulo-by-zero hazard; it now
+    /// clamps to 1 (per-move sampling).
+    #[test]
+    fn sample_every_zero_is_clamped_to_one() {
+        let initial = cluster();
+        let mut s0 = initial.clone();
+        let mut b0 = Equilibrium::default();
+        let zero = simulate(&mut b0, &mut s0, &SimOptions { max_moves: 50, sample_every: 0 });
+        let mut s1 = initial;
+        let mut b1 = Equilibrium::default();
+        let one = simulate(&mut b1, &mut s1, &SimOptions { max_moves: 50, sample_every: 1 });
+        assert_eq!(zero.movements.len(), one.movements.len());
+        assert_eq!(zero.series.samples.len(), one.series.samples.len());
+        assert_eq!(zero.series.samples.len(), zero.movements.len() + 1);
+    }
+
+    /// The scenario adapter must emit the exact movement sequence of the
+    /// historical select/apply loop (pure-balancing golden contract).
+    #[test]
+    fn simulate_matches_manual_next_move_loop() {
+        let initial = cluster();
+
+        let mut manual_state = initial.clone();
+        let mut manual_bal = Equilibrium::default();
+        let mut manual = Vec::new();
+        while manual.len() < 10_000 {
+            let Some(p) = manual_bal.next_move(&manual_state) else { break };
+            manual.push(manual_state.apply_movement(p.pg, p.from, p.to).unwrap());
+        }
+
+        let mut state = initial;
+        let mut bal = Equilibrium::default();
+        let res = simulate(&mut bal, &mut state, &SimOptions::default());
+
+        assert_eq!(res.movements.len(), manual.len());
+        for (a, b) in res.movements.iter().zip(&manual) {
+            assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+        }
+        assert!(res.converged);
     }
 }

@@ -9,4 +9,4 @@ pub mod timeseries;
 
 pub use apply::{compare, simulate, SimOptions, SimResult};
 pub use timeseries::{Sample, TimeSeries};
-pub use workload::{Workload, WorkloadModel};
+pub use workload::{delete_from_pool, write_pool, Workload, WorkloadModel};

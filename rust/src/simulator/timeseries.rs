@@ -17,9 +17,14 @@ pub struct Sample {
     pub moves: usize,
     /// Cumulative bytes moved.
     pub moved_bytes: u64,
-    /// Seconds the balancer spent computing this movement (0 for the
-    /// initial sample).
+    /// Planning seconds attributed to this sample: one movement when
+    /// sampling per move (`sample_every == 1`, the figures' setting),
+    /// the whole chunk planned since the previous sample otherwise.
+    /// 0 for the initial sample.
     pub calc_seconds: f64,
+    /// Virtual cluster time at capture, seconds (0 unless the sample was
+    /// taken by a timeline-driven run — the scenario engine stamps it).
+    pub vtime: f64,
     /// Cluster-wide OSD utilization variance.
     pub variance: f64,
     /// Variance per device class present in the cluster.
@@ -48,6 +53,7 @@ impl Sample {
             moves,
             moved_bytes,
             calc_seconds,
+            vtime: 0.0,
             variance: state.utilization_variance(),
             variance_by_class,
             pool_avail,
@@ -109,6 +115,7 @@ impl TimeSeries {
         for p in &pools {
             out.push_str(&format!(",pool_{p}_avail"));
         }
+        out.push_str(",vtime");
         out.push('\n');
         for s in &self.samples {
             out.push_str(&format!(
@@ -127,6 +134,7 @@ impl TimeSeries {
                     s.pool_avail.get(p).copied().unwrap_or(f64::NAN)
                 ));
             }
+            out.push_str(&format!(",{:.3}", s.vtime));
             out.push('\n');
         }
         out
@@ -190,6 +198,7 @@ mod tests {
         assert!(lines[0].starts_with("moves,moved_bytes,calc_seconds,variance"));
         assert!(lines[0].contains("var_hdd"));
         assert!(lines[0].contains("pool_1_avail"));
+        assert!(lines[0].ends_with(",vtime"));
         assert!(lines[2].starts_with("1,42,"));
     }
 }

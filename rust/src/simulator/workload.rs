@@ -37,12 +37,16 @@ impl Workload {
     /// Apply `user_bytes` of client writes to the cluster. Returns the
     /// bytes actually applied (rounding can drop a remainder).
     pub fn write(&mut self, state: &mut ClusterState, user_bytes: u64) -> u64 {
-        let pools: Vec<(u32, u32, f64)> = state
+        let mut pools: Vec<(u32, u32, f64)> = state
             .pools
             .values()
             .filter(|p| p.kind == PoolKind::UserData)
             .map(|p| (p.id, p.pg_count, p.redundancy.shard_fraction()))
             .collect();
+        // BTreeMap iteration happens to be id-ordered, but the Zipf rank
+        // assignment below must not depend on the map's iteration order —
+        // sort explicitly so rank i always goes to the i-th lowest pool id
+        pools.sort_by_key(|&(id, _, _)| id);
         if pools.is_empty() || user_bytes == 0 {
             return 0;
         }
@@ -51,7 +55,7 @@ impl Workload {
         let weights: Vec<f64> = match &self.model {
             WorkloadModel::Uniform => pools.iter().map(|&(_, c, _)| c as f64).collect(),
             WorkloadModel::ZipfPools { exponent } => {
-                // rank pools by id for deterministic rank assignment
+                // pools are sorted by id above, so rank follows pool id
                 (1..=pools.len()).map(|rank| 1.0 / (rank as f64).powf(*exponent)).collect()
             }
             WorkloadModel::Hotspot { pool, fraction } => pools
@@ -72,29 +76,75 @@ impl Workload {
         }
 
         let mut written = 0u64;
-        for (i, &(pool_id, pg_count, shard_fraction)) in pools.iter().enumerate() {
+        for (i, &(pool_id, _, _)) in pools.iter().enumerate() {
             let pool_bytes = (user_bytes as f64 * weights[i] / wsum) as u64;
-            if pool_bytes == 0 {
-                continue;
-            }
-            // spread over up to 64 random PGs per pool per round
-            let hits = (pg_count as usize).min(64);
-            let per_pg = pool_bytes / hits as u64;
-            if per_pg == 0 {
-                continue;
-            }
-            for _ in 0..hits {
-                let idx = self.rng.below(pg_count as u64) as u32;
-                let per_shard = (per_pg as f64 * shard_fraction).round() as u64;
-                if per_shard > 0
-                    && state.grow_pg(PgId::new(pool_id, idx), per_shard).is_ok()
-                {
-                    written += per_pg;
-                }
-            }
+            written += write_pool(state, pool_id, pool_bytes, &mut self.rng);
         }
         written
     }
+}
+
+/// One PG-hit model for both directions: spread `pool_bytes` over up to
+/// 64 random PGs with an equal share each (objects hash uniformly into
+/// PGs), applying `grow` (writes) or shrink (deletions) per hit.
+fn touch_pool(
+    state: &mut ClusterState,
+    pool_id: u32,
+    pool_bytes: u64,
+    rng: &mut Rng,
+    grow: bool,
+) -> u64 {
+    let Some(pool) = state.pools.get(&pool_id) else { return 0 };
+    let (pg_count, shard_fraction) = (pool.pg_count, pool.redundancy.shard_fraction());
+    if pool_bytes == 0 || pg_count == 0 {
+        return 0;
+    }
+    // spread over up to 64 random PGs per pool per round
+    let hits = (pg_count as usize).min(64);
+    let per_pg = pool_bytes / hits as u64;
+    if per_pg == 0 {
+        return 0;
+    }
+    let mut applied = 0u64;
+    for _ in 0..hits {
+        let idx = rng.below(pg_count as u64) as u32;
+        let per_shard = (per_pg as f64 * shard_fraction).round() as u64;
+        if per_shard == 0 {
+            continue;
+        }
+        let pg = PgId::new(pool_id, idx);
+        let ok = if grow {
+            state.grow_pg(pg, per_shard).is_ok()
+        } else {
+            state.shrink_pg_by(pg, per_shard).is_ok()
+        };
+        if ok {
+            applied += per_pg;
+        }
+    }
+    applied
+}
+
+/// Apply `pool_bytes` of user writes to one pool: up to 64 random PGs
+/// are hit with an equal share (objects hash uniformly into PGs).
+/// Returns the user bytes actually applied. Shared by
+/// [`Workload::write`] and the scenario engine's `GrowPool` event.
+pub fn write_pool(state: &mut ClusterState, pool_id: u32, pool_bytes: u64, rng: &mut Rng) -> u64 {
+    touch_pool(state, pool_id, pool_bytes, rng, true)
+}
+
+/// Delete `pool_bytes` of user data from one pool: up to 64 random PGs
+/// shed an equal share (clamped at empty). Returns the user bytes
+/// requested for deletion from existing PGs (actual raw reduction can be
+/// smaller when a PG runs empty). Used by the scenario engine's
+/// `ShrinkPool` event.
+pub fn delete_from_pool(
+    state: &mut ClusterState,
+    pool_id: u32,
+    pool_bytes: u64,
+    rng: &mut Rng,
+) -> u64 {
+    touch_pool(state, pool_id, pool_bytes, rng, false)
 }
 
 #[cfg(test)]

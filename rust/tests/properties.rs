@@ -280,3 +280,124 @@ fn prop_failure_recovery_keeps_invariants() {
         Ok(())
     });
 }
+
+/// `Workload::write` contract, for all three models: applied bytes never
+/// exceed the request, the raw growth is conserved across pools (the sum
+/// of per-pool raw growth equals the cluster-wide growth, bounded by the
+/// request times the worst redundancy overhead), and identical seeds
+/// replay identical write streams.
+#[test]
+fn prop_workload_write_bounds_conservation_and_determinism() {
+    use equilibrium::cluster::PoolKind;
+    use equilibrium::simulator::{Workload, WorkloadModel};
+    use std::collections::BTreeMap;
+
+    fn pool_raw(state: &ClusterState) -> BTreeMap<u32, u64> {
+        let mut out = BTreeMap::new();
+        for pg in state.pgs() {
+            *out.entry(pg.id.pool).or_insert(0) +=
+                pg.shard_bytes * pg.devices().count() as u64;
+        }
+        out
+    }
+
+    check_seeded("workload-models", 0x5A, 16, |rng| {
+        let state = random_cluster(rng);
+        let user_pool = state
+            .pools
+            .values()
+            .find(|p| p.kind == PoolKind::UserData)
+            .map(|p| p.id)
+            .unwrap_or(1);
+        let models = [
+            WorkloadModel::Uniform,
+            WorkloadModel::ZipfPools { exponent: rng.range_f64(0.5, 1.5) },
+            WorkloadModel::Hotspot { pool: user_pool, fraction: 0.9 },
+        ];
+        for model in models {
+            let request = (1 + rng.below(64)) * GIB;
+            let wseed = rng.next_u64();
+            let mut s1 = state.clone();
+            let mut s2 = state.clone();
+            let written1 = Workload::new(model.clone(), wseed).write(&mut s1, request);
+            let written2 = Workload::new(model.clone(), wseed).write(&mut s2, request);
+
+            // 1. returned bytes never exceed the request
+            prop_assert!(
+                written1 <= request,
+                "{model:?}: wrote {written1} > requested {request}"
+            );
+
+            // 2. identical seeds produce identical streams
+            prop_assert!(written1 == written2, "{model:?}: same seed diverged");
+            prop_assert!(
+                s1.total_used() == s2.total_used(),
+                "{model:?}: same seed, different cluster"
+            );
+
+            // 3. conservation: per-pool raw growth sums to the total raw
+            //    growth, and stays under request × worst redundancy
+            //    overhead (plus per-shard rounding slack)
+            let before = pool_raw(&state);
+            let after = pool_raw(&s1);
+            let per_pool_growth: u64 = after
+                .iter()
+                .map(|(id, &raw)| raw - before.get(id).copied().unwrap_or(0))
+                .sum();
+            let total_growth = s1.total_used() - state.total_used();
+            prop_assert!(
+                per_pool_growth == total_growth,
+                "{model:?}: pool growth {per_pool_growth} != cluster growth {total_growth}"
+            );
+            let worst_ratio = state
+                .pools
+                .values()
+                .map(|p| p.redundancy.raw_ratio())
+                .fold(0.0f64, f64::max);
+            let slack = 64.0 * 16.0; // ≤0.5 B rounding per shard per hit
+            prop_assert!(
+                total_growth as f64 <= request as f64 * worst_ratio + slack,
+                "{model:?}: raw growth {total_growth} exceeds {request} × {worst_ratio}"
+            );
+            prop_assert!(s1.verify().is_empty(), "{model:?}: {:?}", s1.verify());
+        }
+        Ok(())
+    });
+}
+
+/// Zipf ranks are assigned by ascending pool id (the satellite fix):
+/// with a strong exponent, the lowest-id user pool must take the largest
+/// share of the writes.
+#[test]
+fn prop_zipf_ranks_follow_pool_ids() {
+    use equilibrium::cluster::Pool;
+    use equilibrium::simulator::{Workload, WorkloadModel};
+
+    let mut b = CrushBuilder::new();
+    let root = b.add_root("default");
+    for h in 0..4 {
+        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+        b.add_osd_bytes(host, 8 * TIB, DeviceClass::Hdd);
+    }
+    b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+    let pools = vec![
+        Pool::replicated(1, "p1", 3, 32, 0),
+        Pool::replicated(2, "p2", 3, 32, 0),
+        Pool::replicated(3, "p3", 3, 32, 0),
+    ];
+    let state = ClusterState::build(b.build().unwrap(), pools, |_, _| GIB);
+
+    let pool_raw = |s: &ClusterState, pool: u32| -> u64 {
+        s.pgs()
+            .filter(|p| p.id.pool == pool)
+            .map(|p| p.shard_bytes * p.devices().count() as u64)
+            .sum()
+    };
+    let mut s = state.clone();
+    let mut w = Workload::new(WorkloadModel::ZipfPools { exponent: 2.0 }, 11);
+    w.write(&mut s, 300 * GIB);
+    let g1 = pool_raw(&s, 1) - pool_raw(&state, 1);
+    let g2 = pool_raw(&s, 2) - pool_raw(&state, 2);
+    let g3 = pool_raw(&s, 3) - pool_raw(&state, 3);
+    assert!(g1 > g2 && g2 > g3, "zipf shares must fall with pool id: {g1} {g2} {g3}");
+}

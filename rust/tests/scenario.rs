@@ -1,0 +1,166 @@
+//! Cross-layer integration of the scenario engine: adapter equivalence
+//! with the pre-refactor drivers, library end-to-end runs, and
+//! figures-compatible output.
+
+use equilibrium::balancer::{Balancer, Equilibrium, MgrBalancer};
+use equilibrium::generator::clusters;
+use equilibrium::report;
+use equilibrium::scenario::{
+    library, ScenarioConfig, ScenarioEngine, ScenarioEvent, ScenarioSpec,
+};
+use equilibrium::simulator::{simulate, SimOptions, WorkloadModel};
+use equilibrium::util::units::{GIB, TIB};
+
+/// Pure-balancing scenarios must reproduce the historical select/apply
+/// sequence for *any* balancer — the acceptance contract of the
+/// refactor. Covers both the incremental engine and the mgr baseline on
+/// a paper cluster.
+#[test]
+fn scenario_balance_round_matches_manual_loop_on_cluster_a() {
+    let initial = clusters::by_name("a", 0).unwrap().state;
+
+    for which in ["equilibrium", "mgr"] {
+        let make = || -> Box<dyn Balancer> {
+            match which {
+                "equilibrium" => Box::new(Equilibrium::default()),
+                _ => Box::new(MgrBalancer::default()),
+            }
+        };
+
+        let mut manual_state = initial.clone();
+        let mut manual_bal = make();
+        let mut manual = Vec::new();
+        while manual.len() < 600 {
+            let Some(p) = manual_bal.next_move(&manual_state) else { break };
+            manual.push(manual_state.apply_movement(p.pg, p.from, p.to).unwrap());
+        }
+
+        let mut state = initial.clone();
+        let mut bal = make();
+        let res = simulate(
+            bal.as_mut(),
+            &mut state,
+            &SimOptions { max_moves: 600, sample_every: 7 },
+        );
+        assert_eq!(res.movements.len(), manual.len(), "{which}: lengths differ");
+        for (i, (a, b)) in res.movements.iter().zip(&manual).enumerate() {
+            assert_eq!(
+                (a.pg, a.from, a.to, a.bytes),
+                (b.pg, b.from, b.to, b.bytes),
+                "{which}: diverged at move {i}"
+            );
+        }
+    }
+}
+
+/// The whole library runs end to end in reduced mode, is seed-stable,
+/// and leaves the cluster invariant-clean.
+#[test]
+fn scenario_library_reduced_end_to_end() {
+    for name in equilibrium::scenario::ALL {
+        let mut case = library::by_name(name, 1, true).unwrap();
+        let out = case.run().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(case.state.verify().is_empty(), "{name}: {:?}", case.state.verify());
+        assert!(out.series.samples.len() >= 2, "{name}");
+        // every sample's virtual timestamp is monotone non-decreasing
+        let mut last = 0.0;
+        for s in &out.series.samples {
+            assert!(s.vtime + 1e-12 >= last, "{name}: vtime went backwards");
+            last = s.vtime;
+        }
+    }
+}
+
+/// Compound scenarios change the topology as declared.
+#[test]
+fn compound_scenarios_change_topology_as_declared() {
+    let mut rolling = library::by_name("rolling-expansion", 2, true).unwrap();
+    let osds_before = rolling.state.osd_count();
+    rolling.run().unwrap();
+    assert_eq!(rolling.state.osd_count(), osds_before + 6, "3 hosts × 2 OSDs arrive");
+
+    let mut failure = library::by_name("device-failure", 2, true).unwrap();
+    failure.run().unwrap();
+    assert!(!failure.state.osd_is_up(3), "the failed device stays out");
+
+    let mut decom = library::by_name("pool-decommission", 2, true).unwrap();
+    decom.run().unwrap();
+    let scratch_bytes: u64 = decom
+        .state
+        .pgs()
+        .filter(|p| p.id.pool == 50)
+        .map(|p| p.shard_bytes)
+        .sum();
+    assert_eq!(scratch_bytes, 0, "decommissioned pool is empty");
+}
+
+/// The unified series feeds report::figures' CSV channel.
+#[test]
+fn scenario_series_is_figures_consumable() {
+    let mut case = library::by_name("rack-failure-under-hotspot", 4, true).unwrap();
+    let out = case.run().unwrap();
+    let dir = std::env::temp_dir().join("equilibrium_scenario_csv_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = report::scenario_series(&dir, case.name, &out.series).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let header = text.lines().next().unwrap();
+    assert!(header.starts_with("moves,moved_bytes,calc_seconds,variance"));
+    assert!(header.ends_with(",vtime"));
+    assert!(text.lines().count() >= 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A hand-written compound timeline mixing every event family executes
+/// deterministically and keeps all invariants.
+#[test]
+fn kitchen_sink_timeline_is_deterministic() {
+    use equilibrium::cluster::{HostSpec, Pool};
+    use equilibrium::generator::AgingConfig;
+
+    let spec = ScenarioSpec::new("kitchen-sink", 77)
+        .snapshot("start")
+        .age(AgingConfig { epochs: 3, ..Default::default() })
+        .balance(150)
+        .create_pool(Pool::replicated(30, "burst", 3, 16, 0), 128 * GIB)
+        .workload(WorkloadModel::Hotspot { pool: 30, fraction: 0.8 }, 32 * GIB, 900.0)
+        .fail_osd(5)
+        .balance(150)
+        .add_hosts(HostSpec::hdd(1, 2, 8 * TIB))
+        .balance(150)
+        .shrink_pool(30, 64 * GIB)
+        .decommission_pool(30)
+        .balance(150)
+        .snapshot("end");
+
+    let run = |seed: u64| {
+        let mut state = clusters::demo(seed);
+        let mut bal = Equilibrium::default();
+        let out = ScenarioEngine::new(
+            &mut state,
+            Some(&mut bal),
+            ScenarioConfig::default(),
+            spec.seed,
+        )
+        .run(&spec)
+        .unwrap();
+        assert!(state.verify().is_empty(), "{:?}", state.verify());
+        (state.total_used(), out.movements.len(), out.elapsed)
+    };
+    let a = run(77);
+    let b = run(77);
+    assert_eq!(a, b, "same seed must replay bit-for-bit");
+    assert!(a.2 > 0.0, "virtual time advanced");
+}
+
+/// Scenario events that reference missing entities fail loudly instead
+/// of silently skipping.
+#[test]
+fn invalid_events_surface_errors() {
+    let mut state = clusters::demo(3);
+    let mut bal = Equilibrium::default();
+    let mut engine =
+        ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::default(), 3);
+    assert!(engine.apply(&ScenarioEvent::DecommissionPool { pool: 99 }).is_err());
+    assert!(engine.apply(&ScenarioEvent::FailHost { host: "ghost".into() }).is_err());
+    assert!(engine.apply(&ScenarioEvent::FailOsd { osd: 9999 }).is_err());
+}
