@@ -50,7 +50,7 @@ fn main() {
         let used: Vec<f64> = (0..state.osd_count() as u32).map(|o| state.osd_used(o) as f64).collect();
         let size: Vec<f64> = (0..state.osd_count() as u32).map(|o| state.osd_size(o) as f64).collect();
         let mask = vec![true; used.len()];
-        let shard = state.pgs().next().unwrap().shard_bytes as f64;
+        let shard = state.pgs().next().unwrap().shard_bytes() as f64;
         let req = ScoreRequest { used: &used, size: &size, src: 0, shard, mask: &mask };
         let a = xla.score(&req);
         let b = NativeScorer.score(&req);

@@ -1,0 +1,243 @@
+//! Scale benchmark — the columnar-core (RFC 0002) trajectory baseline.
+//!
+//! Builds a Table-1-shaped cluster (cluster B's profile scaled to a
+//! 360-OSD / 18-host footprint) at **1× / 10× / 100× PG counts** and
+//! measures, per scale:
+//!
+//! * **build time** (parallel CRUSH placement) at 1 / 2 / 4 threads;
+//! * **full-balance convergence**: moves + wall time of the incremental
+//!   engine driving `propose_batch` to convergence (capped at 100×);
+//! * **per-round planning**: one `propose_batch(100)` round on a fresh
+//!   clone at 1 / 2 / 4 threads.
+//!
+//! The **baseline section** races the pre-refactor full-sort oracle
+//! (`ReferenceEquilibrium`) against the incremental engine on the 10×
+//! cluster, timing ONLY movement selection over the same move prefix
+//! (state application is shared code and excluded) — the recorded
+//! speedup is the tentpole's acceptance gate (≥5× in full mode).
+//!
+//! Everything lands in machine-readable **`BENCH_scale.json`** at the
+//! repo root; the bench trajectory across PRs is built from these files.
+//!
+//! `--smoke` (CI quick mode): 1× cluster only, capped moves, no speedup
+//! assertion — but the JSON is still emitted, and CI runs the smoke
+//! twice (`EQUILIBRIUM_THREADS=1` and `=4`) and diffs the emitted move
+//! counts to pin the determinism contract: thread count may change how
+//! fast a move is found, never which move.
+
+use equilibrium::balancer::{Balancer, Equilibrium, ReferenceEquilibrium};
+use equilibrium::cluster::ClusterState;
+use equilibrium::crush::{DeviceClass, Level, Rule};
+use equilibrium::generator::synth::{build_cluster, DeviceSpec, PoolSpec};
+use equilibrium::util::json::Json;
+use equilibrium::util::parallel;
+use equilibrium::util::units::{fmt_duration, GIB, PIB, TIB};
+use std::time::Instant;
+
+/// Thread counts of the build / per-round sweeps.
+const SWEEP: [usize; 3] = [1, 2, 4];
+
+/// The scaled cluster: cluster B's device profile at a 360-OSD footprint
+/// with three dominant pools; `mult` scales every pool's PG count.
+fn scale_cluster(mult: u32) -> ClusterState {
+    let devices = [DeviceSpec {
+        class: DeviceClass::Hdd,
+        count: 360,
+        total_bytes: 2 * PIB,
+        variety: vec![1.0, 1.0, 1.5, 2.0],
+        per_host: 20,
+    }];
+    let rules = vec![
+        Rule::replicated(0, "hdd_host", "default", None, Level::Host),
+        Rule::erasure(1, "hdd_ec", "default", None, Level::Host),
+    ];
+    let pools = vec![
+        PoolSpec::replicated("data", 512 * mult, 3, 0, 220 * TIB),
+        PoolSpec::erasure("bulk", 256 * mult, 4, 2, 1, 300 * TIB),
+        PoolSpec::replicated("meta", 32 * mult, 3, 0, 200 * GIB).metadata(),
+    ];
+    build_cluster(0x5CA1E, &devices, rules, pools)
+}
+
+/// Drive the engine's batched planner to convergence (or `cap` moves).
+/// Returns (moves, wall seconds).
+fn full_balance(mut state: ClusterState, cap: usize) -> (usize, f64) {
+    let mut bal = Equilibrium::default();
+    let t0 = Instant::now();
+    let mut moves = 0usize;
+    while moves < cap {
+        let budget = 500.min(cap - moves);
+        let batch = bal.propose_batch(&mut state, budget);
+        moves += batch.len();
+        if batch.len() < budget {
+            break;
+        }
+    }
+    (moves, t0.elapsed().as_secs_f64())
+}
+
+/// Time selection only (fig6-style): sum of `next_move` wall time over at
+/// most `cap` applied moves. Returns (selection seconds, moves).
+fn selection_time(bal: &mut dyn Balancer, initial: &ClusterState, cap: usize) -> (f64, usize) {
+    let mut state = initial.clone();
+    let mut secs = 0.0;
+    let mut moves = 0;
+    while moves < cap {
+        let t0 = Instant::now();
+        let p = bal.next_move(&state);
+        secs += t0.elapsed().as_secs_f64();
+        let Some(p) = p else { break };
+        state.apply_movement(p.pg, p.from, p.to).unwrap();
+        moves += 1;
+    }
+    (secs, moves)
+}
+
+/// Reference-vs-engine planning race (best of 3 each). Returns
+/// (ref seconds, engine seconds, moves, speedup).
+fn baseline(initial: &ClusterState, cap: usize) -> (f64, f64, usize, f64) {
+    let mut t_ref = f64::INFINITY;
+    let mut t_inc = f64::INFINITY;
+    let mut n_ref = 0;
+    let mut n_inc = 0;
+    for _ in 0..3 {
+        let (t, n) = selection_time(&mut ReferenceEquilibrium::default(), initial, cap);
+        t_ref = t_ref.min(t);
+        n_ref = n;
+        let (t, n) = selection_time(&mut Equilibrium::default(), initial, cap);
+        t_inc = t_inc.min(t);
+        n_inc = n;
+    }
+    assert_eq!(n_ref, n_inc, "golden property violated: engines made different move counts");
+    let speedup = if t_inc > 0.0 { t_ref / t_inc } else { f64::INFINITY };
+    (t_ref, t_inc, n_ref, speedup)
+}
+
+fn sweep_obj(values: &[(usize, f64)]) -> Json {
+    let mut j = Json::obj();
+    for &(t, secs) in values {
+        j = j.set(&format!("t{t}"), secs);
+    }
+    j
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let scales: &[u32] = if smoke { &[1] } else { &[1, 10, 100] };
+    let ambient = parallel::threads();
+    println!("scale bench — columnar core (RFC 0002); ambient threads: {ambient}");
+
+    let mut cluster_rows: Vec<Json> = Vec::new();
+    let mut baseline_initial: Option<(u32, ClusterState)> = None;
+
+    for &mult in scales {
+        println!("\n=== scale {mult}x ===");
+        // build-time sweep (each thread count builds from scratch)
+        let mut builds: Vec<(usize, f64)> = Vec::new();
+        let mut state: Option<ClusterState> = None;
+        for &t in &SWEEP {
+            let t0 = Instant::now();
+            let s = parallel::with_threads(t, || scale_cluster(mult));
+            let secs = t0.elapsed().as_secs_f64();
+            println!("  build     t={t}  {}", fmt_duration(secs));
+            builds.push((t, secs));
+            state = Some(s);
+        }
+        let state = state.expect("at least one sweep entry");
+        assert!(state.verify().is_empty(), "scaled cluster invariants");
+        let pgs = state.pg_count();
+        let osds = state.osd_count();
+        println!("  cluster   {pgs} PGs / {osds} OSDs");
+
+        // full balance at the ambient thread count (CI pins the move
+        // count across EQUILIBRIUM_THREADS=1 and =4 runs of this number)
+        let cap = if smoke {
+            400
+        } else if mult >= 100 {
+            600
+        } else {
+            20_000
+        };
+        let (moves, balance_secs) = full_balance(state.clone(), cap);
+        let capped = moves >= cap;
+        println!(
+            "  balance   {moves} moves in {} ({}/move){}",
+            fmt_duration(balance_secs),
+            fmt_duration(balance_secs / moves.max(1) as f64),
+            if capped { "  [capped]" } else { "" }
+        );
+
+        // one planning round on a fresh clone per thread count
+        let mut rounds: Vec<(usize, f64)> = Vec::new();
+        for &t in &SWEEP {
+            let mut s = state.clone();
+            let mut bal = Equilibrium::default();
+            let t0 = Instant::now();
+            let batch = parallel::with_threads(t, || bal.propose_batch(&mut s, 100));
+            let secs = t0.elapsed().as_secs_f64();
+            println!("  round     t={t}  {} ({} moves)", fmt_duration(secs), batch.len());
+            rounds.push((t, secs));
+        }
+
+        cluster_rows.push(
+            Json::obj()
+                .set("scale", mult as u64)
+                .set("pgs", pgs)
+                .set("osds", osds)
+                .set("build_seconds", sweep_obj(&builds))
+                .set(
+                    "balance",
+                    Json::obj()
+                        .set("moves", moves)
+                        .set("seconds", balance_secs)
+                        .set("capped", capped),
+                )
+                .set("round_plan_seconds", sweep_obj(&rounds)),
+        );
+
+        // the baseline races on the 10× cluster (1× in smoke mode)
+        let baseline_scale = if smoke { 1 } else { 10 };
+        if mult == baseline_scale {
+            baseline_initial = Some((mult, state));
+        }
+    }
+
+    // pre-refactor baseline: the full-sort oracle timed on the same
+    // state, selection only — recorded in the same bench run
+    let (bl_scale, bl_state) = baseline_initial.expect("baseline scale is in the sweep");
+    let cap = if smoke { 200 } else { 800 };
+    println!("\n=== baseline: reference oracle vs incremental engine ({bl_scale}x, ≤{cap} moves, best of 3) ===");
+    let (t_ref, t_inc, moves, speedup) = baseline(&bl_state, cap);
+    println!("  reference    {:>10} selection ({moves} moves)", fmt_duration(t_ref));
+    println!("  incremental  {:>10} selection ({moves} moves)", fmt_duration(t_inc));
+    println!("  speedup      {speedup:.2}x");
+
+    let doc = Json::obj()
+        .set("bench", "scale")
+        .set("smoke", smoke)
+        .set("ambient_threads", ambient)
+        .set("clusters", Json::Arr(cluster_rows))
+        .set(
+            "baseline",
+            Json::obj()
+                .set("cluster_scale", bl_scale as u64)
+                .set("moves", moves)
+                .set("reference_seconds", t_ref)
+                .set("engine_seconds", t_inc)
+                .set("speedup", speedup),
+        );
+    std::fs::write("BENCH_scale.json", doc.pretty()).expect("write BENCH_scale.json");
+    println!("\nwrote BENCH_scale.json");
+
+    if smoke {
+        println!("smoke mode: speedup gate skipped (tiny prefix, 1x cluster)");
+    } else {
+        assert!(
+            speedup >= 5.0,
+            "RFC 0002 gate: full-balance planning on the {bl_scale}x cluster must be ≥5x \
+             faster than the pre-refactor reference (got {speedup:.2}x)"
+        );
+        println!("gate passed: ≥5x on the {bl_scale}x cluster");
+    }
+}

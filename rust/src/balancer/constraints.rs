@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::ops::Range;
 
-use crate::cluster::{ClusterState, PgId};
+use crate::cluster::{ClusterState, PgId, PgView};
 use crate::crush::types::Step;
 use crate::crush::{DeviceClass, Level, NodeId, OsdId, Rule};
 
@@ -201,6 +201,17 @@ impl MoveFilter {
         constraints: &[SlotConstraint],
     ) -> Result<MoveFilter, Violation> {
         let pg = state.pg(pg_id).ok_or(Violation::UnknownPg)?;
+        MoveFilter::new_for(state, pg, from, constraints)
+    }
+
+    /// [`MoveFilter::new`] for a PG the caller already resolved — the
+    /// typed-index hot loops hold a [`PgView`] and skip the id lookup.
+    pub fn new_for(
+        state: &ClusterState,
+        pg: PgView<'_>,
+        from: OsdId,
+        constraints: &[SlotConstraint],
+    ) -> Result<MoveFilter, Violation> {
         let Some(slot) = pg.slot_of(from) else {
             return Err(Violation::SourceNotActing);
         };
@@ -219,7 +230,7 @@ impl MoveFilter {
                 if s == slot {
                     continue;
                 }
-                if let Some(Some(osd)) = pg.acting.get(s) {
+                if let Some(Some(osd)) = pg.acting().get(s) {
                     if let Some(d) = state.crush.ancestor_at(*osd as NodeId, level) {
                         domains.push(d);
                     }
@@ -228,7 +239,7 @@ impl MoveFilter {
             occupied.push((level, domains));
         }
         Ok(MoveFilter {
-            shard_bytes: pg.shard_bytes,
+            shard_bytes: pg.shard_bytes(),
             acting: pg.devices().collect(),
             class: block.class,
             take_root: block.take_root,
@@ -347,18 +358,18 @@ mod tests {
     fn class_violations_detected() {
         let s = cluster();
         // find a PG of the hdd pool and try to move a shard to an SSD
-        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap();
+        let pg = s.pgs().find(|p| p.id().pool == 1).unwrap();
         let from = pg.devices().next().unwrap();
         let ssd = (0..s.osd_count() as OsdId)
             .find(|&o| s.osd_class(o) == DeviceClass::Ssd)
             .unwrap();
-        assert_eq!(check_move(&s, pg.id, from, ssd), Err(Violation::WrongClass));
+        assert_eq!(check_move(&s, pg.id(), from, ssd), Err(Violation::WrongClass));
     }
 
     #[test]
     fn host_collision_detected() {
         let s = cluster();
-        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap();
+        let pg = s.pgs().find(|p| p.id().pool == 1).unwrap();
         let devices: Vec<OsdId> = pg.devices().collect();
         let from = devices[0];
         // the OTHER hdd osd on the host of devices[1] collides at host level
@@ -370,7 +381,7 @@ mod tests {
             .find(|&o| o != devices[1])
             .unwrap();
         assert_eq!(
-            check_move(&s, pg.id, from, sibling),
+            check_move(&s, pg.id(), from, sibling),
             Err(Violation::DomainCollision(Level::Host))
         );
     }
@@ -378,7 +389,7 @@ mod tests {
     #[test]
     fn rack_level_rule_enforces_rack_distinctness() {
         let s = cluster();
-        let pg = s.pgs().find(|p| p.id.pool == 2).unwrap();
+        let pg = s.pgs().find(|p| p.id().pool == 2).unwrap();
         let devices: Vec<OsdId> = pg.devices().collect();
         let from = devices[0];
         // any hdd in the rack of devices[1] (other than devices[1]'s host
@@ -391,7 +402,7 @@ mod tests {
             .find(|&o| o != devices[1])
             .unwrap();
         assert_eq!(
-            check_move(&s, pg.id, from, in_rack),
+            check_move(&s, pg.id(), from, in_rack),
             Err(Violation::DomainCollision(Level::Rack))
         );
     }
@@ -399,7 +410,7 @@ mod tests {
     #[test]
     fn legal_moves_are_accepted_and_applicable() {
         let mut s = cluster();
-        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap().id;
+        let pg = s.pgs().find(|p| p.id().pool == 1).unwrap().id();
         let from = s.pg(pg).unwrap().devices().next().unwrap();
         let dests = legal_destinations(&s, pg, from);
         assert!(!dests.is_empty(), "a healthy cluster must offer destinations");
@@ -423,16 +434,16 @@ mod tests {
     #[test]
     fn hybrid_block_keeps_ssd_slot_on_ssd() {
         let s = cluster();
-        let pg = s.pgs().find(|p| p.id.pool == 3).unwrap();
-        let ssd_shard = pg.acting[0].unwrap();
+        let pg = s.pgs().find(|p| p.id().pool == 3).unwrap();
+        let ssd_shard = pg.acting()[0].unwrap();
         assert_eq!(s.osd_class(ssd_shard), DeviceClass::Ssd);
         // the SSD slot may only move to another SSD
-        for to in legal_destinations(&s, pg.id, ssd_shard) {
+        for to in legal_destinations(&s, pg.id(), ssd_shard) {
             assert_eq!(s.osd_class(to), DeviceClass::Ssd);
         }
         // an HDD slot may only move to HDDs
-        let hdd_shard = pg.acting[1].unwrap();
-        for to in legal_destinations(&s, pg.id, hdd_shard) {
+        let hdd_shard = pg.acting()[1].unwrap();
+        for to in legal_destinations(&s, pg.id(), hdd_shard) {
             assert_eq!(s.osd_class(to), DeviceClass::Hdd);
         }
     }
@@ -461,7 +472,7 @@ mod tests {
     #[test]
     fn down_and_full_targets_rejected() {
         let mut s = cluster();
-        let pg = s.pgs().find(|p| p.id.pool == 1).unwrap().id;
+        let pg = s.pgs().find(|p| p.id().pool == 1).unwrap().id();
         let from = s.pg(pg).unwrap().devices().next().unwrap();
         let dests = legal_destinations(&s, pg, from);
         let to = dests[0];

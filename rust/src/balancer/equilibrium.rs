@@ -51,9 +51,10 @@
 //!
 //! [`ClusterState::osds_by_utilization`]: crate::cluster::ClusterState::osds_by_utilization
 
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
-use crate::cluster::{ClusterState, Movement, PgId};
+use crate::cluster::{ClusterState, Movement, PgId, PgIdx};
 use crate::crush::{DeviceClass, OsdId};
 
 use super::constraints::{ConstraintCache, MoveFilter};
@@ -232,17 +233,21 @@ impl<S: MoveScorer> Equilibrium<S> {
     fn try_source(&mut self, state: &ClusterState, src: OsdId) -> Option<Proposal> {
         let src_util = state.utilization(src);
         // shards on the source, largest first (paper: "preferably
-        // large"); tie-break by PgId for determinism
-        let mut shards: Vec<(u64, PgId)> = state
+        // large"); tie-break by PgId for determinism. Lazily ordered:
+        // the key (bytes desc, PgId asc) is a total order, so popping a
+        // max-heap yields exactly the historical sorted sequence —
+        // O(shards) to heapify instead of O(shards·log shards) to sort,
+        // and a source that moves its first shard never pays for the
+        // rest. Shard sizes stream from the arena's dense column.
+        let mut shards: BinaryHeap<(u64, Reverse<PgId>, PgIdx)> = state
             .shards_on(src)
             .iter()
-            .map(|&pg| (state.pg(pg).unwrap().shard_bytes, pg))
+            .map(|&idx| (state.shard_bytes_at(idx), Reverse(state.pg_id_at(idx)), idx))
             .collect();
-        shards.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
 
-        for (shard_bytes, pg_id) in shards {
+        while let Some((shard_bytes, Reverse(pg_id), idx)) = shards.pop() {
             if shard_bytes == 0 {
-                continue; // empty shards cannot improve utilization
+                break; // size-ordered: every remaining shard is empty too
             }
             let pool_id = pg_id.pool;
             // per-pool shard counts and weight-derived ideals, maintained
@@ -291,9 +296,10 @@ impl<S: MoveScorer> Equilibrium<S> {
             // candidate mask: CRUSH-legal + count-improving + emptier
             // than the source. All to-invariant work is hoisted into the
             // MoveFilter; the slot constraints come from the cross-batch
-            // cache.
+            // cache, and the PG is resolved through its dense index.
             let constraints = self.constraints.for_pool(state, pool_id);
-            let Ok(filter) = MoveFilter::new(state, pg_id, src, constraints) else {
+            let Ok(filter) = MoveFilter::new_for(state, state.pg_at(idx), src, constraints)
+            else {
                 continue;
             };
             let m = scratch.active.len();
@@ -483,7 +489,7 @@ mod tests {
             let mut uniq = hosts.clone();
             uniq.sort_unstable();
             uniq.dedup();
-            assert_eq!(uniq.len(), hosts.len(), "pg {} lost host distinctness", pg.id);
+            assert_eq!(uniq.len(), hosts.len(), "pg {} lost host distinctness", pg.id());
         }
     }
 

@@ -92,13 +92,13 @@ impl MgrBalancer {
         let mut shard_ids: Vec<PgId> = state
             .shards_on(source)
             .iter()
-            .copied()
+            .map(|&idx| state.pg_id_at(idx))
             .filter(|pg| pg.pool == pool_id)
             .collect();
         shard_ids.sort(); // count-based: PG identity order, size ignored
         for pg in shard_ids {
             if check_move_cached(state, pg, source, dest, &constraints).is_ok() {
-                let bytes = state.pg(pg).unwrap().shard_bytes;
+                let bytes = state.pg(pg).unwrap().shard_bytes();
                 return Some(Proposal { pg, from: source, to: dest, bytes });
             }
         }

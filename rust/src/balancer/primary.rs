@@ -60,9 +60,9 @@ pub fn balance_primaries(state: &mut ClusterState, cfg: &PrimaryConfig) -> Vec<P
             let n = state.osd_count();
             let mut primaries = vec![0i64; n];
             let mut pgs_of_pool: Vec<PgId> = Vec::new();
-            for pg in state.pgs().filter(|p| p.id.pool == pool_id) {
-                pgs_of_pool.push(pg.id);
-                if let Some(Some(p0)) = pg.acting.first() {
+            for pg in state.pgs_of_pool(pool_id) {
+                pgs_of_pool.push(pg.id());
+                if let Some(Some(p0)) = pg.acting().first() {
                     primaries[*p0 as usize] += 1;
                 }
             }
@@ -97,7 +97,7 @@ pub fn balance_primaries(state: &mut ClusterState, cfg: &PrimaryConfig) -> Vec<P
             let mut done = false;
             for &pg_id in &pgs_of_pool {
                 let pg = state.pg(pg_id).unwrap();
-                if pg.acting.first() != Some(&Some(over)) {
+                if pg.acting().first() != Some(&Some(over)) {
                     continue;
                 }
                 let mut candidate: Option<(f64, OsdId)> = None;
@@ -171,14 +171,14 @@ mod tests {
     fn ec_pools_are_untouched() {
         let c = clusters::by_name("e", 0).unwrap(); // one big EC pool
         let mut s = c.state;
-        let acting_before: Vec<_> = s.pgs().map(|p| (p.id, p.acting.clone())).collect();
+        let acting_before: Vec<_> = s.pgs().map(|p| (p.id(), p.acting().to_vec())).collect();
         let swaps = balance_primaries(&mut s, &PrimaryConfig::default());
         for sw in &swaps {
             assert_ne!(sw.pg.pool, 1, "EC pool slots may not be reordered");
         }
         for (id, acting) in acting_before {
             if id.pool == 1 {
-                assert_eq!(s.pg(id).unwrap().acting, acting);
+                assert_eq!(s.pg(id).unwrap().acting(), acting);
             }
         }
     }
@@ -186,7 +186,7 @@ mod tests {
     #[test]
     fn set_primary_rejects_non_holders_and_ec() {
         let mut s = clusters::demo(75);
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let non_holder =
             (0..s.osd_count() as u32).find(|&o| !s.pg(pg).unwrap().on(o)).unwrap();
         assert!(s.set_primary(pg, non_holder).is_err());

@@ -92,11 +92,13 @@ impl<S: MoveScorer> ReferenceEquilibrium<S> {
         count_cache: &mut BTreeMap<u32, Vec<u32>>,
     ) -> Option<Proposal> {
         // shards on the source, largest first (paper: "preferably large");
-        // tie-break by PgId for determinism
+        // tie-break by PgId for determinism. Deliberately a full sort —
+        // this oracle keeps the pre-refactor cost profile; only the
+        // per-shard lookups go through the state's dense columns now.
         let mut shards: Vec<(u64, PgId)> = state
             .shards_on(src)
             .iter()
-            .map(|&pg| (state.pg(pg).unwrap().shard_bytes, pg))
+            .map(|&idx| (state.shard_bytes_at(idx), state.pg_id_at(idx)))
             .collect();
         shards.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
 

@@ -18,6 +18,22 @@
 //! * `runtime::XlaScorer` — the same computation AOT-compiled from
 //!   JAX/Pallas (`python/compile/kernels/score_moves.py`) and executed via
 //!   PJRT; bit-compared against this one in tests.
+//!
+//! On very wide candidate sets the native backend fans the per-candidate
+//! loop out over [`crate::util::parallel::for_chunks_mut`]. Every
+//! `var_after[j]` is a pure function of the shared sums and slot `j`, so
+//! the parallel result is **bit-identical** to the serial one at any
+//! thread count (RFC 0002); the Σu/Σu² baseline pass stays serial, which
+//! keeps its float accumulation order fixed. The fan-out gate
+//! ([`SCORE_PARALLEL_MIN`]) keeps paper-sized clusters (hundreds of
+//! candidates) on the serial path where thread spawn would dominate.
+
+use crate::util::parallel;
+
+/// Minimum candidate count per worker chunk before `score_into` fans
+/// out. Below `2 ×` this the loop runs inline — identical bits either
+/// way.
+pub const SCORE_PARALLEL_MIN: usize = 8192;
 
 /// A scoring request: cluster vectors plus the proposed move.
 #[derive(Debug, Clone)]
@@ -120,16 +136,22 @@ impl MoveScorer for NativeScorer {
 
         out.var_after.clear();
         out.var_after.resize(n, f64::INFINITY);
-        for j in 0..n {
-            if !req.mask[j] || j == req.src {
-                continue;
+        // each slot is a pure function of (sums, j) written to a disjoint
+        // output cell, so the fan-out is bit-identical to the serial loop
+        // at any thread count; for_chunks_mut runs inline below the gate
+        parallel::for_chunks_mut(&mut out.var_after, SCORE_PARALLEL_MIN, |start, chunk| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let j = start + k;
+                if !req.mask[j] || j == req.src {
+                    continue;
+                }
+                let u_j = util(req.used[j], req.size[j]);
+                let u_j_new = util(req.used[j] + req.shard, req.size[j]);
+                let s1 = sum + d_sum_src + (u_j_new - u_j);
+                let s2 = sumsq + d_sq_src + (u_j_new * u_j_new - u_j * u_j);
+                *slot = (s2 / nf - (s1 / nf) * (s1 / nf)).max(0.0);
             }
-            let u_j = util(req.used[j], req.size[j]);
-            let u_j_new = util(req.used[j] + req.shard, req.size[j]);
-            let s1 = sum + d_sum_src + (u_j_new - u_j);
-            let s2 = sumsq + d_sq_src + (u_j_new * u_j_new - u_j * u_j);
-            out.var_after[j] = (s2 / nf - (s1 / nf) * (s1 / nf)).max(0.0);
-        }
+        });
     }
 }
 
@@ -260,6 +282,42 @@ mod tests {
         assert!(r.var_after[0].is_infinite(), "source excluded");
         assert!(r.var_after[1].is_infinite(), "masked excluded");
         assert!(r.var_after[2].is_finite());
+    }
+
+    /// Drive `score_into` across the fan-out gate: with more than
+    /// `2 × SCORE_PARALLEL_MIN` candidates and a multi-thread budget the
+    /// chunked path runs for real, and must be bit-identical to the
+    /// serial path (the RFC 0002 contract — no in-repo cluster is wide
+    /// enough to reach this branch, so it is pinned synthetically here).
+    #[test]
+    fn parallel_candidate_path_is_bit_identical_to_serial() {
+        use crate::util::parallel::with_threads;
+
+        let n = 2 * SCORE_PARALLEL_MIN + 37;
+        let mut rng = Rng::new(5);
+        let size: Vec<f64> = (0..n).map(|_| rng.range_f64(1e12, 2e13)).collect();
+        let used: Vec<f64> = size.iter().map(|&s| s * rng.range_f64(0.1, 0.9)).collect();
+        let mask: Vec<bool> = (0..n).map(|i| i % 7 != 0).collect();
+        let req = ScoreRequest { used: &used, size: &size, src: 3, shard: 1e11, mask: &mask };
+
+        let serial = with_threads(1, || NativeScorer.score(&req));
+        for t in [2, 4] {
+            let par = with_threads(t, || NativeScorer.score(&req));
+            assert_eq!(serial.var_before.to_bits(), par.var_before.to_bits());
+            assert_eq!(serial.var_after.len(), par.var_after.len());
+            for j in 0..n {
+                assert_eq!(
+                    serial.var_after[j].to_bits(),
+                    par.var_after[j].to_bits(),
+                    "slot {j} must be bit-identical at {t} threads"
+                );
+            }
+        }
+        // masked and source slots keep their sentinel through the
+        // chunked path too
+        assert!(serial.var_after[0].is_infinite(), "masked slot");
+        assert!(serial.var_after[3].is_infinite(), "source slot");
+        assert!(serial.var_after[1].is_finite());
     }
 
     #[test]

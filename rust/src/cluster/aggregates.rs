@@ -29,6 +29,7 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::crush::{CrushMap, DeviceClass, OsdId};
 
+use super::arena::{PgArena, ShardMatrix};
 use super::pool::Pool;
 
 /// How many incremental Σu/Σu² updates are absorbed before the sums are
@@ -178,6 +179,8 @@ impl Aggregates {
     // ---- rebuild / refresh ------------------------------------------------
 
     /// Rebuild everything from scratch (cluster construction and load).
+    /// Live per-pool shard counts are read from the dense
+    /// [`ShardMatrix`] through the arena's pool-rank table.
     pub(crate) fn rebuild(
         &mut self,
         crush: &CrushMap,
@@ -185,7 +188,8 @@ impl Aggregates {
         used: &[u64],
         size: &[u64],
         up: &[bool],
-        pool_shards: &[BTreeMap<u32, u32>],
+        shards: &ShardMatrix,
+        arena: &PgArena,
     ) {
         let n = used.len();
         self.by_util.clear();
@@ -210,10 +214,9 @@ impl Aggregates {
                 counts: vec![0; n],
                 abs_deviation: 0.0,
             };
-            for (o, shards) in pool_shards.iter().enumerate() {
-                if let Some(&c) = shards.get(&pool.id) {
-                    pa.counts[o] = c;
-                }
+            let rank = arena.pool_rank(pool.id).expect("every pool has an arena stripe");
+            for (o, count) in pa.counts.iter_mut().enumerate() {
+                *count = shards.get(o, rank);
             }
             pa.abs_deviation = pa.recompute_abs_deviation();
             self.pools.insert(pool.id, pa);
@@ -318,7 +321,8 @@ impl Aggregates {
         used: &[u64],
         size: &[u64],
         up: &[bool],
-        pool_shards: &[BTreeMap<u32, u32>],
+        shards: &ShardMatrix,
+        arena: &PgArena,
     ) -> Vec<String> {
         let mut problems = Vec::new();
         let n = used.len();
@@ -371,8 +375,15 @@ impl Aggregates {
                 problems.push(format!("pool {} has no aggregates", pool.id));
                 continue;
             };
+            let rank = match arena.pool_rank(pool.id) {
+                Some(r) => r,
+                None => {
+                    problems.push(format!("pool {} has no arena stripe", pool.id));
+                    continue;
+                }
+            };
             for o in 0..n {
-                let expect = pool_shards[o].get(&pool.id).copied().unwrap_or(0);
+                let expect = shards.get(o, rank);
                 if pa.counts.get(o).copied().unwrap_or(0) != expect {
                     problems.push(format!(
                         "pool {} count drift on osd.{o}: tracked {} != {}",

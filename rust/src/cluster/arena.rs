@@ -1,0 +1,482 @@
+//! Columnar PG storage — the typed-index SoA core of `ClusterState`
+//! (RFC 0002).
+//!
+//! The pre-refactor state kept PGs in a `BTreeMap<PgId, Pg>` with one
+//! heap-allocated acting `Vec` per PG and per-OSD
+//! `BTreeMap<u32, u32>` shard counts: every scoring pass chased
+//! pointers instead of streaming cache lines. This module replaces all
+//! of it with four dense columns keyed by a new typed index, [`PgIdx`]:
+//!
+//! * `ids`        — `PgIdx → PgId` (the reverse of the stripe directory);
+//! * `shard_bytes`— `PgIdx → u64`, one cache-friendly lane;
+//! * `acting`     — one flat `Vec<Option<OsdId>>`: each pool owns a
+//!   contiguous *stripe* of `pg_count × slots` entries, a PG's acting
+//!   set is the `slots`-wide window at
+//!   `stripe.acting_base + (idx − stripe.first) × slots` (`map_rule`
+//!   always yields exactly `slots` entries, so the stride is exact);
+//! * `upmap`      — the exception table re-keyed by `PgIdx` (dense
+//!   `Vec<Vec<(raw, replacement)>>`, empty = no exceptions), with an
+//!   incrementally maintained non-empty-entry count.
+//!
+//! Pools map to stripes through a rank table: construction assigns
+//! ranks in ascending pool-id order; pools created later
+//! (`ClusterState::add_pool`) append. All id↔idx translation goes
+//! through that table, so rank order is an internal layout detail —
+//! iteration in `PgId` order ([`PgArena::iter_pgid_order`]) walks the
+//! rank table's id-sorted keys. [`ShardMatrix`] is the companion dense
+//! per-OSD / per-pool shard-count table (`osd × n_pools + rank`),
+//! replacing the per-OSD BTreeMaps.
+//!
+//! `BTreeMap` views of any of this survive only at the dump/load
+//! serialization boundary (`ClusterState::upmap_table`,
+//! `dump::load`).
+
+use std::collections::BTreeMap;
+
+use crate::crush::OsdId;
+
+use super::pg::{Pg, PgId, PgView};
+
+/// Dense typed index of a placement group in the [`PgArena`] — the hot
+/// loops' key. Unlike [`PgId`] (which encodes `<pool>.<index>` identity),
+/// a `PgIdx` is a plain offset into the arena's columns: stable for the
+/// lifetime of a `ClusterState`, cheap to store in reverse indexes, and
+/// resolvable to all per-PG data without a map lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PgIdx(pub(crate) u32);
+
+impl PgIdx {
+    /// The raw offset, for indexing sibling columns.
+    #[inline]
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One pool's contiguous region of the arena.
+#[derive(Debug, Clone)]
+struct Stripe {
+    /// Pool id this stripe stores.
+    pool: u32,
+    /// First `PgIdx` of the stripe.
+    first: u32,
+    /// Number of PGs (`pool.pg_count`).
+    count: u32,
+    /// Acting-set width (`redundancy.shard_count()`).
+    slots: u32,
+    /// Offset of the stripe's first acting entry in the flat table.
+    acting_base: usize,
+}
+
+/// The columnar PG store. Owned by `ClusterState`; see the module docs
+/// for the layout.
+#[derive(Debug, Clone, Default)]
+pub struct PgArena {
+    stripes: Vec<Stripe>,
+    /// Pool id → stripe rank.
+    rank_of: BTreeMap<u32, u32>,
+    /// `PgIdx → stripe rank` (O(1) pool/slots lookup in hot loops).
+    stripe_of: Vec<u32>,
+    /// `PgIdx → PgId`.
+    ids: Vec<PgId>,
+    /// `PgIdx → bytes stored by each shard`.
+    shard_bytes: Vec<u64>,
+    /// Flat acting table (see module docs).
+    acting: Vec<Option<OsdId>>,
+    /// Upmap exception items per PG (empty = none).
+    upmap: Vec<Vec<(OsdId, OsdId)>>,
+    /// Number of PGs with a non-empty upmap entry.
+    upmap_entries: usize,
+}
+
+impl PgArena {
+    /// An empty arena.
+    pub(crate) fn new() -> PgArena {
+        PgArena::default()
+    }
+
+    /// Append a stripe for `pool` and materialize its columns
+    /// (`shard_bytes` zeroed, acting all-holes, no upmap entries).
+    /// Returns the stripe rank. Panics if the pool already has one.
+    pub(crate) fn push_pool(&mut self, pool: u32, pg_count: u32, slots: usize) -> u32 {
+        let rank = self.stripes.len() as u32;
+        assert!(
+            self.rank_of.insert(pool, rank).is_none(),
+            "pool {pool} already has an arena stripe"
+        );
+        let first = self.ids.len() as u32;
+        let acting_base = self.acting.len();
+        self.stripes.push(Stripe { pool, first, count: pg_count, slots: slots as u32, acting_base });
+        for index in 0..pg_count {
+            self.ids.push(PgId::new(pool, index));
+            self.stripe_of.push(rank);
+        }
+        self.shard_bytes.resize(self.shard_bytes.len() + pg_count as usize, 0);
+        self.acting.resize(acting_base + pg_count as usize * slots, None);
+        self.upmap.resize(self.upmap.len() + pg_count as usize, Vec::new());
+        rank
+    }
+
+    /// Total number of PGs.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// True when the arena stores no PGs.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Number of pool stripes (the [`ShardMatrix`] stride).
+    #[inline]
+    pub fn n_pools(&self) -> usize {
+        self.stripes.len()
+    }
+
+    /// Stripe rank of `pool`, if it exists.
+    #[inline]
+    pub fn pool_rank(&self, pool: u32) -> Option<usize> {
+        self.rank_of.get(&pool).map(|&r| r as usize)
+    }
+
+    /// Pool id of the stripe at `rank`.
+    #[inline]
+    pub fn pool_at_rank(&self, rank: usize) -> u32 {
+        self.stripes[rank].pool
+    }
+
+    /// Stripe rank of an existing PG — O(1).
+    #[inline]
+    pub fn rank_at(&self, idx: PgIdx) -> usize {
+        self.stripe_of[idx.as_usize()] as usize
+    }
+
+    /// Acting-set width of the stripe at `rank`.
+    #[inline]
+    pub fn slots_at_rank(&self, rank: usize) -> usize {
+        self.stripes[rank].slots as usize
+    }
+
+    /// Dense index of `id`, if the PG exists.
+    #[inline]
+    pub fn index_of(&self, id: PgId) -> Option<PgIdx> {
+        let &rank = self.rank_of.get(&id.pool)?;
+        let s = &self.stripes[rank as usize];
+        if id.index < s.count {
+            Some(PgIdx(s.first + id.index))
+        } else {
+            None
+        }
+    }
+
+    /// Identity of the PG at `idx`.
+    #[inline]
+    pub fn id_at(&self, idx: PgIdx) -> PgId {
+        self.ids[idx.as_usize()]
+    }
+
+    /// Bytes stored by each shard of the PG at `idx`.
+    #[inline]
+    pub fn shard_bytes_at(&self, idx: PgIdx) -> u64 {
+        self.shard_bytes[idx.as_usize()]
+    }
+
+    /// Overwrite the per-shard size of the PG at `idx`.
+    #[inline]
+    pub(crate) fn set_shard_bytes(&mut self, idx: PgIdx, bytes: u64) {
+        self.shard_bytes[idx.as_usize()] = bytes;
+    }
+
+    /// The flat-table window holding the acting set of the PG at `idx`.
+    #[inline]
+    pub fn acting_at(&self, idx: PgIdx) -> &[Option<OsdId>] {
+        let s = &self.stripes[self.stripe_of[idx.as_usize()] as usize];
+        let off = s.acting_base + (idx.0 - s.first) as usize * s.slots as usize;
+        &self.acting[off..off + s.slots as usize]
+    }
+
+    /// Mutable acting window of the PG at `idx`.
+    #[inline]
+    pub(crate) fn acting_mut(&mut self, idx: PgIdx) -> &mut [Option<OsdId>] {
+        let s = &self.stripes[self.stripe_of[idx.as_usize()] as usize];
+        let off = s.acting_base + (idx.0 - s.first) as usize * s.slots as usize;
+        let slots = s.slots as usize;
+        &mut self.acting[off..off + slots]
+    }
+
+    /// One acting slot of the PG at `idx` (borrow-friendly accessor for
+    /// accounting loops).
+    #[inline]
+    pub fn acting_slot(&self, idx: PgIdx, slot: usize) -> Option<OsdId> {
+        self.acting_at(idx)[slot]
+    }
+
+    /// Replace the whole acting set of the PG at `idx`. Panics if the
+    /// slot count does not match the stripe width.
+    pub(crate) fn set_acting(&mut self, idx: PgIdx, acting: &[Option<OsdId>]) {
+        let window = self.acting_mut(idx);
+        assert_eq!(
+            window.len(),
+            acting.len(),
+            "acting set width must equal the pool's redundancy slots"
+        );
+        window.copy_from_slice(acting);
+    }
+
+    /// Borrowed view of the PG at `idx`.
+    #[inline]
+    pub fn view(&self, idx: PgIdx) -> PgView<'_> {
+        PgView::new(self.id_at(idx), self.shard_bytes_at(idx), self.acting_at(idx))
+    }
+
+    /// Upmap exception items of the PG at `idx` (empty slice = none).
+    #[inline]
+    pub fn upmap_at(&self, idx: PgIdx) -> &[(OsdId, OsdId)] {
+        &self.upmap[idx.as_usize()]
+    }
+
+    /// Number of PGs with at least one upmap exception (maintained
+    /// incrementally by the crate-internal upmap editor).
+    #[inline]
+    pub fn upmap_entries(&self) -> usize {
+        self.upmap_entries
+    }
+
+    /// Edit a PG's upmap items under the entry-count invariant: the
+    /// non-empty counter is fixed up after `f` runs, whatever it did.
+    pub(crate) fn with_upmap_mut<R>(
+        &mut self,
+        idx: PgIdx,
+        f: impl FnOnce(&mut Vec<(OsdId, OsdId)>) -> R,
+    ) -> R {
+        let items = &mut self.upmap[idx.as_usize()];
+        let before = !items.is_empty();
+        let r = f(items);
+        match (before, !items.is_empty()) {
+            (false, true) => self.upmap_entries += 1,
+            (true, false) => self.upmap_entries -= 1,
+            _ => {}
+        }
+        r
+    }
+
+    /// Install a whole upmap table keyed by [`PgId`] (the dump/load
+    /// boundary). Entries for unknown PGs are rejected by the caller
+    /// (`dump::load` validates); here they panic.
+    pub(crate) fn set_upmap_table(&mut self, table: BTreeMap<PgId, Vec<(OsdId, OsdId)>>) {
+        for (id, items) in table {
+            let idx = self
+                .index_of(id)
+                .unwrap_or_else(|| panic!("upmap entry references unknown pg {id}"));
+            self.with_upmap_mut(idx, |v| *v = items);
+        }
+    }
+
+    /// Rebuild the upmap table as a `PgId`-keyed map (serialization /
+    /// reassembly boundary only — O(PGs)).
+    pub fn upmap_table(&self) -> BTreeMap<PgId, Vec<(OsdId, OsdId)>> {
+        self.iter_pgid_order()
+            .filter(|&idx| !self.upmap[idx.as_usize()].is_empty())
+            .map(|idx| (self.id_at(idx), self.upmap[idx.as_usize()].clone()))
+            .collect()
+    }
+
+    /// All PG indexes in arena (stripe) order — the cache-friendly walk.
+    pub fn iter(&self) -> impl Iterator<Item = PgIdx> + '_ {
+        (0..self.ids.len() as u32).map(PgIdx)
+    }
+
+    /// All PG indexes in ascending [`PgId`] order (pool id, then PG
+    /// index) — the historical `BTreeMap` iteration order, preserved for
+    /// serialization and reporting.
+    pub fn iter_pgid_order(&self) -> impl Iterator<Item = PgIdx> + '_ {
+        self.rank_of.values().flat_map(move |&rank| {
+            let s = &self.stripes[rank as usize];
+            (s.first..s.first + s.count).map(PgIdx)
+        })
+    }
+
+    /// PG indexes of one pool's stripe, ascending PG index (empty for
+    /// unknown pools).
+    pub fn pool_range(&self, pool: u32) -> impl Iterator<Item = PgIdx> + '_ {
+        let range = match self.rank_of.get(&pool) {
+            Some(&rank) => {
+                let s = &self.stripes[rank as usize];
+                s.first..s.first + s.count
+            }
+            None => 0..0,
+        };
+        range.map(PgIdx)
+    }
+
+    /// Materialize the PG at `idx` as an owned [`Pg`] (boundary use).
+    pub fn to_pg(&self, idx: PgIdx) -> Pg {
+        Pg {
+            id: self.id_at(idx),
+            shard_bytes: self.shard_bytes_at(idx),
+            acting: self.acting_at(idx).to_vec(),
+        }
+    }
+}
+
+/// Dense per-OSD, per-pool shard counts: one `u32` at
+/// `osd × n_pools + rank`, where `rank` is the pool's [`PgArena`] stripe
+/// rank. Replaces the per-OSD `BTreeMap<u32, u32>` of the pre-refactor
+/// state; a row (`osd`'s counts over all pools) is a contiguous slice.
+#[derive(Debug, Clone, Default)]
+pub struct ShardMatrix {
+    n_osds: usize,
+    n_pools: usize,
+    counts: Vec<u32>,
+}
+
+impl ShardMatrix {
+    /// A zeroed `n_osds × n_pools` matrix.
+    pub(crate) fn new(n_osds: usize, n_pools: usize) -> ShardMatrix {
+        ShardMatrix { n_osds, n_pools, counts: vec![0; n_osds * n_pools] }
+    }
+
+    /// Count of shards of the pool at `rank` on `osd`.
+    #[inline]
+    pub fn get(&self, osd: usize, rank: usize) -> u32 {
+        self.counts[osd * self.n_pools + rank]
+    }
+
+    /// Increment one cell.
+    #[inline]
+    pub(crate) fn inc(&mut self, osd: usize, rank: usize) {
+        self.counts[osd * self.n_pools + rank] += 1;
+    }
+
+    /// Decrement one cell (saturating, mirroring the historical
+    /// BTreeMap bookkeeping).
+    #[inline]
+    pub(crate) fn dec(&mut self, osd: usize, rank: usize) {
+        let c = &mut self.counts[osd * self.n_pools + rank];
+        *c = c.saturating_sub(1);
+    }
+
+    /// One OSD's counts over all pool ranks, as a contiguous row.
+    #[inline]
+    pub fn row(&self, osd: usize) -> &[u32] {
+        &self.counts[osd * self.n_pools..(osd + 1) * self.n_pools]
+    }
+
+    /// Grow the stride by one pool rank (appended, existing ranks keep
+    /// their column). O(matrix); pool creation is rare.
+    pub(crate) fn add_pool(&mut self) {
+        let old = self.n_pools;
+        self.n_pools += 1;
+        let mut counts = vec![0u32; self.n_osds * self.n_pools];
+        for o in 0..self.n_osds {
+            counts[o * self.n_pools..o * self.n_pools + old]
+                .copy_from_slice(&self.counts[o * old..(o + 1) * old]);
+        }
+        self.counts = counts;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> PgArena {
+        let mut a = PgArena::new();
+        a.push_pool(1, 4, 3);
+        a.push_pool(5, 2, 6);
+        a
+    }
+
+    #[test]
+    fn stripes_index_both_ways() {
+        let a = arena();
+        assert_eq!(a.len(), 6);
+        assert_eq!(a.n_pools(), 2);
+        assert_eq!(a.index_of(PgId::new(1, 3)), Some(PgIdx(3)));
+        assert_eq!(a.index_of(PgId::new(5, 0)), Some(PgIdx(4)));
+        assert_eq!(a.index_of(PgId::new(5, 2)), None, "index beyond pg_count");
+        assert_eq!(a.index_of(PgId::new(9, 0)), None, "unknown pool");
+        assert_eq!(a.id_at(PgIdx(4)), PgId::new(5, 0));
+        assert_eq!(a.pool_rank(5), Some(1));
+        assert_eq!(a.slots_at_rank(1), 6);
+        assert_eq!(a.rank_at(PgIdx(5)), 1);
+    }
+
+    #[test]
+    fn acting_windows_are_striped_and_disjoint() {
+        let mut a = arena();
+        a.set_acting(PgIdx(0), &[Some(7), Some(8), Some(9)]);
+        a.set_acting(PgIdx(4), &[Some(1), None, Some(2), None, Some(3), None]);
+        assert_eq!(a.acting_at(PgIdx(0)), &[Some(7), Some(8), Some(9)]);
+        assert_eq!(a.acting_at(PgIdx(1)), &[None, None, None], "neighbour untouched");
+        assert_eq!(a.acting_at(PgIdx(4)).len(), 6);
+        assert_eq!(a.acting_slot(PgIdx(4), 4), Some(3));
+        let v = a.view(PgIdx(0));
+        assert!(v.on(8));
+        assert_eq!(v.slot_of(9), Some(2));
+        assert_eq!(v.devices().collect::<Vec<_>>(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "acting set width")]
+    fn wrong_width_acting_panics() {
+        let mut a = arena();
+        a.set_acting(PgIdx(0), &[Some(1)]);
+    }
+
+    #[test]
+    fn upmap_entry_count_is_incremental() {
+        let mut a = arena();
+        assert_eq!(a.upmap_entries(), 0);
+        a.with_upmap_mut(PgIdx(2), |v| v.push((0, 1)));
+        a.with_upmap_mut(PgIdx(2), |v| v.push((3, 4)));
+        assert_eq!(a.upmap_entries(), 1, "same pg counts once");
+        a.with_upmap_mut(PgIdx(5), |v| v.push((1, 2)));
+        assert_eq!(a.upmap_entries(), 2);
+        a.with_upmap_mut(PgIdx(2), |v| v.clear());
+        assert_eq!(a.upmap_entries(), 1);
+        let table = a.upmap_table();
+        assert_eq!(table.len(), 1);
+        assert_eq!(table[&PgId::new(5, 1)], vec![(1, 2)]);
+    }
+
+    #[test]
+    fn pgid_order_iteration_sorts_late_pools() {
+        let mut a = arena();
+        // a pool created later with a LOWER id than an existing one:
+        // rank order is appended, PgId order must still sort by pool id
+        a.push_pool(3, 1, 3);
+        let ids: Vec<PgId> = a.iter_pgid_order().map(|i| a.id_at(i)).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        assert_eq!(ids, sorted);
+        assert_eq!(ids.len(), 7);
+        // arena (stripe) order keeps the appended pool last
+        let arena_ids: Vec<PgId> = a.iter().map(|i| a.id_at(i)).collect();
+        assert_eq!(arena_ids.last(), Some(&PgId::new(3, 0)));
+        // per-pool ranges are exact
+        assert_eq!(a.pool_range(5).count(), 2);
+        assert_eq!(a.pool_range(3).next(), Some(PgIdx(6)));
+        assert_eq!(a.pool_range(42).count(), 0);
+    }
+
+    #[test]
+    fn shard_matrix_restride_preserves_columns() {
+        let mut m = ShardMatrix::new(3, 2);
+        m.inc(0, 0);
+        m.inc(0, 1);
+        m.inc(2, 1);
+        m.inc(2, 1);
+        m.add_pool();
+        assert_eq!(m.row(0), &[1, 1, 0]);
+        assert_eq!(m.row(1), &[0, 0, 0]);
+        assert_eq!(m.row(2), &[0, 2, 0]);
+        m.inc(1, 2);
+        assert_eq!(m.get(1, 2), 1);
+        m.dec(1, 2);
+        m.dec(1, 2); // saturates
+        assert_eq!(m.get(1, 2), 0);
+    }
+}

@@ -212,13 +212,13 @@ pub fn to_json(state: &ClusterState) -> Json {
         .pgs()
         .map(|pg| {
             Json::obj()
-                .set("pool", pg.id.pool as u64)
-                .set("index", pg.id.index as u64)
-                .set("shard_bytes", pg.shard_bytes)
+                .set("pool", pg.id().pool as u64)
+                .set("index", pg.id().index as u64)
+                .set("shard_bytes", pg.shard_bytes())
                 .set(
                     "acting",
                     Json::Arr(
-                        pg.acting
+                        pg.acting()
                             .iter()
                             .map(|s| match s {
                                 Some(o) => Json::from(*o as u64),
@@ -232,14 +232,14 @@ pub fn to_json(state: &ClusterState) -> Json {
     let upmap: Vec<Json> = state
         .pgs()
         .filter_map(|pg| {
-            let items = state.upmap_items(pg.id);
+            let items = state.upmap_items(pg.id());
             if items.is_empty() {
                 return None;
             }
             Some(
                 Json::obj()
-                    .set("pool", pg.id.pool as u64)
-                    .set("index", pg.id.index as u64)
+                    .set("pool", pg.id().pool as u64)
+                    .set("index", pg.id().index as u64)
                     .set(
                         "items",
                         Json::Arr(
@@ -387,6 +387,50 @@ pub fn load(text: &str) -> Result<ClusterState, DumpError> {
         upmap.insert(PgId::new(pool, index), items);
     }
 
+    // the columnar arena materializes every (pool, 0..pg_count) slot, so
+    // a dump must describe each pool completely and reference nothing
+    // outside the declared pools — validate before from_parts panics
+    let mut seen: BTreeMap<u32, Vec<bool>> = pools
+        .iter()
+        .map(|p| (p.id, vec![false; p.pg_count as usize]))
+        .collect();
+    let slots_of: BTreeMap<u32, usize> =
+        pools.iter().map(|p| (p.id, p.redundancy.shard_count())).collect();
+    for pg in &pgs {
+        let Some(flags) = seen.get_mut(&pg.id.pool) else {
+            return Err(DumpError::Format(format!("pg {} references unknown pool", pg.id)));
+        };
+        let Some(flag) = flags.get_mut(pg.id.index as usize) else {
+            return Err(DumpError::Format(format!("pg {} is beyond its pool's pg_count", pg.id)));
+        };
+        if *flag {
+            return Err(DumpError::Format(format!("pg {} is listed twice", pg.id)));
+        }
+        *flag = true;
+        if pg.acting.len() != slots_of[&pg.id.pool] {
+            return Err(DumpError::Format(format!(
+                "pg {} has {} acting slots, its pool's redundancy needs {}",
+                pg.id,
+                pg.acting.len(),
+                slots_of[&pg.id.pool]
+            )));
+        }
+    }
+    for (pool, flags) in &seen {
+        if let Some(missing) = flags.iter().position(|&f| !f) {
+            return Err(DumpError::Format(format!("pool {pool} is missing pg {pool}.{missing:x}")));
+        }
+    }
+    for id in upmap.keys() {
+        let known = seen
+            .get(&id.pool)
+            .map(|flags| (id.index as usize) < flags.len())
+            .unwrap_or(false);
+        if !known {
+            return Err(DumpError::Format(format!("upmap entry references unknown pg {id}")));
+        }
+    }
+
     Ok(ClusterState::from_parts(crush, pools, pgs, upmap))
 }
 
@@ -418,7 +462,7 @@ mod tests {
     fn roundtrip_preserves_everything() {
         let mut s = cluster();
         // create some upmap entries first
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let from = s.pg(pg).unwrap().devices().next().unwrap();
         let to = (0..s.osd_count() as OsdId)
             .find(|&o| !s.pg(pg).unwrap().on(o) && s.osd_class(o) == s.osd_class(from))
@@ -438,9 +482,9 @@ mod tests {
             assert_eq!(loaded.osd_class(o), s.osd_class(o));
         }
         for pg in s.pgs() {
-            let l = loaded.pg(pg.id).unwrap();
-            assert_eq!(l.acting, pg.acting, "pg {}", pg.id);
-            assert_eq!(l.shard_bytes, pg.shard_bytes);
+            let l = loaded.pg(pg.id()).unwrap();
+            assert_eq!(l.acting(), pg.acting(), "pg {}", pg.id());
+            assert_eq!(l.shard_bytes(), pg.shard_bytes());
         }
         assert!(loaded.verify().is_empty());
         // double round-trip is byte-stable

@@ -105,8 +105,8 @@ pub fn add_hosts(state: &mut ClusterState, spec: &HostSpec) -> Result<Vec<OsdId>
 
     let crush = from_parts(devices, buckets, rules).map_err(ExpandError::Build)?;
     let pools: Vec<_> = state.pools.values().cloned().collect();
-    let pgs: Vec<_> = state.pgs().cloned().collect();
-    let upmap = state.upmap_table().clone();
+    let pgs: Vec<_> = state.pgs().map(|v| v.to_pg()).collect();
+    let upmap = state.upmap_table();
     let down: Vec<OsdId> =
         (0..state.osd_count() as OsdId).filter(|&o| !state.osd_is_up(o)).collect();
     // reassembly derives sizes from CRUSH weights; a failed (weight-0)
@@ -135,7 +135,8 @@ mod tests {
         let mut s = clusters::demo(61);
         let used_before = s.total_used();
         let osds_before = s.osd_count();
-        let pg_sample: Vec<_> = s.pgs().take(5).map(|p| (p.id, p.devices().collect::<Vec<_>>())).collect();
+        let pg_sample: Vec<_> =
+            s.pgs().take(5).map(|p| (p.id(), p.devices().collect::<Vec<_>>())).collect();
 
         let new = add_hosts(&mut s, &HostSpec::hdd(2, 3, 8 * TIB)).unwrap();
         assert_eq!(new.len(), 6);

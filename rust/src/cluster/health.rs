@@ -11,12 +11,19 @@ use super::state::ClusterState;
 /// Per-OSD row of `osd df`.
 #[derive(Debug, Clone)]
 pub struct OsdDfRow {
+    /// Device id.
     pub osd: OsdId,
+    /// Device class.
     pub class: DeviceClass,
+    /// Name of the host bucket holding the device.
     pub host: String,
+    /// Raw capacity, bytes.
     pub size: u64,
+    /// Stored bytes.
     pub used: u64,
+    /// Relative utilization `used/size`.
     pub utilization: f64,
+    /// Number of PG shards on the device.
     pub pg_shards: usize,
     /// Deviation of utilization from the cluster mean.
     pub deviation: f64,
@@ -25,10 +32,15 @@ pub struct OsdDfRow {
 /// Whole-cluster df summary.
 #[derive(Debug, Clone)]
 pub struct DfReport {
+    /// One row per OSD.
     pub osds: Vec<OsdDfRow>,
+    /// Mean relative utilization over all OSDs.
     pub mean_utilization: f64,
+    /// Minimum relative utilization.
     pub min_utilization: f64,
+    /// Maximum relative utilization.
     pub max_utilization: f64,
+    /// Population variance of utilization (the paper's balance metric).
     pub variance: f64,
     /// Per-pool (id, name, kind, stored-shard bytes, predicted max_avail).
     pub pools: Vec<(u32, String, PoolKind, u64, f64)>,
@@ -62,10 +74,10 @@ pub fn df(state: &ClusterState) -> DfReport {
         .pools
         .values()
         .map(|p| {
+            // one contiguous arena stripe per pool — no full-cluster scan
             let stored: u64 = state
-                .pgs()
-                .filter(|pg| pg.id.pool == p.id)
-                .map(|pg| pg.shard_bytes * pg.devices().count() as u64)
+                .pgs_of_pool(p.id)
+                .map(|pg| pg.shard_bytes() * pg.devices().count() as u64)
                 .sum();
             (p.id, p.name.clone(), p.kind, stored, state.pool_max_avail(p.id))
         })

@@ -1,7 +1,15 @@
 //! Cluster model: pools, placement groups, OSD accounting, capacity
 //! prediction, and the JSON dump/load interchange format.
+//!
+//! Storage is columnar since RFC 0002: [`arena`] holds the typed-index
+//! SoA columns (`PgIdx`-keyed ids/sizes/acting/upmap plus the dense
+//! per-OSD/per-pool shard matrix) that [`state::ClusterState`] and every
+//! hot loop above it iterate; `BTreeMap` views survive only at the
+//! [`dump`] serialization boundary.
+#![warn(missing_docs)]
 
 pub mod aggregates;
+pub mod arena;
 pub mod dump;
 pub mod expand;
 pub mod health;
@@ -11,8 +19,9 @@ pub mod recovery;
 pub mod state;
 
 pub use aggregates::{Aggregates, PoolAggregates};
+pub use arena::{PgArena, PgIdx, ShardMatrix};
 pub use expand::{add_hosts, ExpandError, HostSpec};
-pub use pg::{Movement, Pg, PgId};
+pub use pg::{Movement, Pg, PgId, PgView};
 pub use pool::{Pool, PoolKind, Redundancy};
 pub use recovery::{fail_osd, random_up_osd, FailureReport};
 pub use state::{ClusterState, StateError};

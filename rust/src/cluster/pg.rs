@@ -1,15 +1,24 @@
 //! Placement groups and shard movements.
+//!
+//! Since the columnar-core refactor (RFC 0002) the live cluster does not
+//! store one [`Pg`] struct per placement group — per-PG data lives in
+//! the dense columns of [`super::arena::PgArena`], and readers receive a
+//! borrowed [`PgView`]. The owned [`Pg`] survives at the dump/load and
+//! reassembly boundaries (`ClusterState::from_parts` input).
 
 use crate::crush::OsdId;
 
 /// Identifier of a placement group: `<pool>.<index>` like Ceph's `1.2a`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct PgId {
+    /// The pool the PG belongs to.
     pub pool: u32,
+    /// The PG's index within the pool (`0..pg_count`).
     pub index: u32,
 }
 
 impl PgId {
+    /// `<pool>.<index>`.
     pub fn new(pool: u32, index: u32) -> PgId {
         PgId { pool, index }
     }
@@ -21,11 +30,14 @@ impl std::fmt::Display for PgId {
     }
 }
 
-/// A placement group: its current device mapping and the size of each of
-/// its shards. Within a pool, shard sizes are "almost equal" (paper
-/// §2.2); the generator models the residual jitter.
+/// An owned placement group: its current device mapping and the size of
+/// each of its shards. Within a pool, shard sizes are "almost equal"
+/// (paper §2.2); the generator models the residual jitter.
+///
+/// Boundary type only — live state hands out [`PgView`]s instead.
 #[derive(Debug, Clone)]
 pub struct Pg {
+    /// The PG's identity.
     pub id: PgId,
     /// Bytes stored by EACH shard of this PG.
     pub shard_bytes: u64,
@@ -51,12 +63,73 @@ impl Pg {
     }
 }
 
+/// A borrowed, copyable view of one placement group inside the arena —
+/// what `ClusterState::pg` / `ClusterState::pgs` hand out. The acting
+/// slice borrows the arena's flat table directly (lifetime `'a` is the
+/// state borrow, not the view value), so iterators returned by
+/// [`PgView::devices`] outlive the temporary view.
+#[derive(Debug, Clone, Copy)]
+pub struct PgView<'a> {
+    id: PgId,
+    shard_bytes: u64,
+    acting: &'a [Option<OsdId>],
+}
+
+impl<'a> PgView<'a> {
+    /// Assemble a view over borrowed columns (arena-internal).
+    pub(crate) fn new(id: PgId, shard_bytes: u64, acting: &'a [Option<OsdId>]) -> PgView<'a> {
+        PgView { id, shard_bytes, acting }
+    }
+
+    /// The PG's identity.
+    #[inline]
+    pub fn id(&self) -> PgId {
+        self.id
+    }
+
+    /// Bytes stored by EACH shard of this PG.
+    #[inline]
+    pub fn shard_bytes(&self) -> u64 {
+        self.shard_bytes
+    }
+
+    /// The acting set window: one entry per redundancy slot, `None` =
+    /// hole.
+    #[inline]
+    pub fn acting(&self) -> &'a [Option<OsdId>] {
+        self.acting
+    }
+
+    /// All devices currently holding a shard.
+    pub fn devices(self) -> impl Iterator<Item = OsdId> + 'a {
+        self.acting.iter().filter_map(|s| *s)
+    }
+
+    /// Does this PG have a shard on `osd`?
+    pub fn on(&self, osd: OsdId) -> bool {
+        self.acting.iter().any(|s| *s == Some(osd))
+    }
+
+    /// Slot index of `osd` in the acting set.
+    pub fn slot_of(&self, osd: OsdId) -> Option<usize> {
+        self.acting.iter().position(|s| *s == Some(osd))
+    }
+
+    /// Materialize an owned [`Pg`] (serialization/reassembly boundary).
+    pub fn to_pg(&self) -> Pg {
+        Pg { id: self.id, shard_bytes: self.shard_bytes, acting: self.acting.to_vec() }
+    }
+}
+
 /// One shard movement instruction — the balancer's atomic output unit
 /// (paper §2.3: "the atomic movement unit is a PG shard").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Movement {
+    /// The PG whose shard moved.
     pub pg: PgId,
+    /// Source OSD.
     pub from: OsdId,
+    /// Destination OSD.
     pub to: OsdId,
     /// Bytes that the movement transfers (the shard size at decision
     /// time); Table 1's "Movement Amount".
@@ -94,6 +167,22 @@ mod tests {
         assert_eq!(pg.slot_of(7), Some(2));
         assert_eq!(pg.slot_of(4), None);
         assert_eq!(pg.devices().collect::<Vec<_>>(), vec![3, 7]);
+    }
+
+    #[test]
+    fn view_mirrors_owned_pg() {
+        let acting = vec![Some(3), None, Some(7)];
+        let v = PgView::new(PgId::new(1, 0), 100, &acting);
+        assert_eq!(v.id(), PgId::new(1, 0));
+        assert_eq!(v.shard_bytes(), 100);
+        assert!(v.on(3) && !v.on(4));
+        assert_eq!(v.slot_of(7), Some(2));
+        // devices() outlives the temporary view (borrows the columns)
+        let devs: Vec<OsdId> = v.devices().collect();
+        assert_eq!(devs, vec![3, 7]);
+        let owned = v.to_pg();
+        assert_eq!(owned.acting, acting);
+        assert_eq!(owned.shard_bytes, 100);
     }
 
     #[test]

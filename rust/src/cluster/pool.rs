@@ -51,24 +51,31 @@ impl Redundancy {
 /// over data pools, and Figure 5 filters small (metadata-ish) pools.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PoolKind {
+    /// The pool stores user data (counted by Table 1's gained space).
     UserData,
+    /// The pool stores metadata (filtered by Figure 5's size cutoff).
     Metadata,
 }
 
 /// A pool definition.
 #[derive(Debug, Clone)]
 pub struct Pool {
+    /// Unique pool id.
     pub id: u32,
+    /// Human-readable pool name.
     pub name: String,
+    /// Redundancy scheme (replica count or EC profile).
     pub redundancy: Redundancy,
     /// Number of placement groups (2^x in real deployments).
     pub pg_count: u32,
     /// CRUSH rule this pool places with.
     pub rule_id: u32,
+    /// What the pool is used for.
     pub kind: PoolKind,
 }
 
 impl Pool {
+    /// A replicated user-data pool with `size` copies.
     pub fn replicated(id: u32, name: &str, size: usize, pg_count: u32, rule_id: u32) -> Pool {
         Pool {
             id,
@@ -80,6 +87,7 @@ impl Pool {
         }
     }
 
+    /// An erasure-coded user-data pool (`k` data + `m` parity shards).
     pub fn erasure(id: u32, name: &str, k: usize, m: usize, pg_count: u32, rule_id: u32) -> Pool {
         Pool {
             id,
@@ -91,6 +99,7 @@ impl Pool {
         }
     }
 
+    /// Mark the pool as a metadata pool (builder style).
     pub fn metadata(mut self) -> Pool {
         self.kind = PoolKind::Metadata;
         self

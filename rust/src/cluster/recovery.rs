@@ -17,6 +17,7 @@ use super::state::ClusterState;
 /// Outcome of an OSD failure.
 #[derive(Debug)]
 pub struct FailureReport {
+    /// The device that failed.
     pub failed: OsdId,
     /// Backfill work: one movement per displaced shard (from = failed
     /// OSD, to = its replacement).
@@ -38,7 +39,8 @@ pub fn fail_osd(state: &mut ClusterState, osd: OsdId) -> FailureReport {
     state.refresh_weight_caches();
 
     // every PG holding a shard on the failed device must re-place it
-    let affected: Vec<PgId> = state.shards_on(osd).to_vec();
+    let affected: Vec<PgId> =
+        state.shards_on(osd).iter().map(|&idx| state.pg_id_at(idx)).collect();
     let mut backfills = Vec::new();
     let mut degraded = Vec::new();
 
@@ -144,8 +146,8 @@ mod tests {
             let mut uniq = hosts.clone();
             uniq.sort_unstable();
             uniq.dedup();
-            assert_eq!(uniq.len(), hosts.len(), "pg {} lost host distinctness", pg.id);
-            assert!(!pg.on(0), "pg {} still references the failed osd", pg.id);
+            assert_eq!(uniq.len(), hosts.len(), "pg {} lost host distinctness", pg.id());
+            assert!(!pg.on(0), "pg {} still references the failed osd", pg.id());
         }
     }
 

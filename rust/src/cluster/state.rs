@@ -7,16 +7,50 @@
 //! per-pool available space (limited by the fullest participating OSD,
 //! §2.1) — are answered here, with incremental bookkeeping so that a
 //! 995-OSD / 8731-PG cluster (cluster B) is cheap to iterate on.
+//!
+//! Storage is columnar (RFC 0002): per-PG data lives in the dense
+//! [`PgArena`] columns keyed by [`PgIdx`], per-OSD/per-pool shard counts
+//! in the dense [`ShardMatrix`], and readers receive borrowed
+//! [`PgView`]s. Initial CRUSH placement fans out over
+//! [`crate::util::parallel`]'s fixed-chunk schedule, so `build` is
+//! bit-identical at any thread count, including 1.
 
 use std::collections::BTreeMap;
 
-use crate::crush::{map_rule, pg_input, CrushMap, DeviceClass, OsdId};
+use crate::crush::{map_rule, pg_input, CrushMap, DeviceClass, OsdId, Rule};
+use crate::util::parallel;
 use crate::util::stats;
 use crate::util::units::TIB;
 
 use super::aggregates::{ideal_counts_for, Aggregates};
-use super::pg::{Movement, Pg, PgId};
+use super::arena::{PgArena, PgIdx, ShardMatrix};
+use super::pg::{Movement, Pg, PgId, PgView};
 use super::pool::{Pool, PoolKind};
+
+/// Fixed chunk length of the parallel CRUSH-placement schedule —
+/// deliberately a function of nothing (RFC 0002 rule 1): chunk
+/// boundaries must not depend on the thread count.
+const PLACE_CHUNK: usize = 512;
+
+/// CRUSH-place `count` PGs through `per_pg` on the fixed-chunk ordered
+/// schedule and return the acting rows in index order. The single
+/// determinism-critical placement path — `build` (via `place_all`) and
+/// `add_pool` both go through here, so chunking and merge order can
+/// never diverge between them. `per_pg` must be a pure function of its
+/// index.
+fn place_rows(
+    count: usize,
+    per_pg: impl Fn(usize) -> Vec<Option<OsdId>> + Sync,
+) -> Vec<Vec<Option<OsdId>>> {
+    let mut placed = Vec::with_capacity(count);
+    parallel::map_reduce(
+        count,
+        PLACE_CHUNK,
+        |range| range.map(&per_pg).collect::<Vec<_>>(),
+        |_chunk, rows: Vec<Vec<Option<OsdId>>>| placed.extend(rows),
+    );
+    placed
+}
 
 /// Errors from applying movements.
 #[derive(Debug, PartialEq)]
@@ -92,106 +126,154 @@ impl std::error::Error for StateError {}
 /// The cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterState {
+    /// The CRUSH map (hierarchy, devices, rules).
     pub crush: CrushMap,
+    /// Pool definitions by pool id.
     pub pools: BTreeMap<u32, Pool>,
-    pgs: BTreeMap<PgId, Pg>,
-    /// Upmap exception table, keyed by PG; pairs are (raw CRUSH osd →
-    /// replacement osd), exactly like Ceph's `pg_upmap_items`.
-    upmap: BTreeMap<PgId, Vec<(OsdId, OsdId)>>,
+    /// Columnar PG storage: ids, shard sizes, the flat acting table and
+    /// the `PgIdx`-keyed upmap exception table (RFC 0002).
+    arena: PgArena,
     osd_size: Vec<u64>,
     osd_used: Vec<u64>,
     osd_up: Vec<bool>,
-    /// PGs that have a shard on each OSD.
-    osd_pgs: Vec<Vec<PgId>>,
-    /// Per-OSD, per-pool shard counts (for ideal-count balancing).
-    osd_pool_shards: Vec<BTreeMap<u32, u32>>,
+    /// PGs (by dense index) that have a shard on each OSD.
+    osd_pgs: Vec<Vec<PgIdx>>,
+    /// Dense per-OSD, per-pool shard counts (`osd × n_pools + rank`).
+    shards: ShardMatrix,
     /// Incrementally maintained aggregates (utilization index, Σu/Σu²,
     /// per-pool counts/ideals) — see [`super::aggregates`].
     agg: Aggregates,
 }
 
 impl ClusterState {
-    /// Build a cluster: compute the raw CRUSH placement of every PG of
-    /// every pool and account the usage. `shard_bytes` assigns each PG's
-    /// per-shard size (the generator models per-pool size distributions).
-    pub fn build(
-        crush: CrushMap,
-        pools: Vec<Pool>,
-        mut shard_bytes: impl FnMut(&Pool, u32) -> u64,
-    ) -> ClusterState {
+    /// Empty shell around a CRUSH map: arena stripes (assigned ranks in
+    /// ascending pool-id order), zeroed accounting, sized shard matrix.
+    fn shell(crush: CrushMap, pools: &[Pool]) -> ClusterState {
         let n = crush.devices.len();
         let osd_size: Vec<u64> = crush
             .devices
             .iter()
             .map(|d| (d.weight * TIB as f64).round() as u64)
             .collect();
-        let mut state = ClusterState {
+        let mut arena = PgArena::new();
+        let mut sorted: Vec<&Pool> = pools.iter().collect();
+        sorted.sort_by_key(|p| p.id);
+        for p in sorted {
+            arena.push_pool(p.id, p.pg_count, p.redundancy.shard_count());
+        }
+        let n_pools = arena.n_pools();
+        ClusterState {
             crush,
             pools: pools.iter().map(|p| (p.id, p.clone())).collect(),
-            pgs: BTreeMap::new(),
-            upmap: BTreeMap::new(),
+            arena,
             osd_size,
             osd_used: vec![0; n],
             osd_up: vec![true; n],
             osd_pgs: vec![Vec::new(); n],
-            osd_pool_shards: vec![BTreeMap::new(); n],
+            shards: ShardMatrix::new(n, n_pools),
             agg: Aggregates::default(),
-        };
+        }
+    }
+
+    /// Build a cluster: compute the raw CRUSH placement of every PG of
+    /// every pool and account the usage. `shard_bytes` assigns each PG's
+    /// per-shard size (the generator models per-pool size distributions)
+    /// and is always invoked serially in the historical order — input
+    /// pool order, PG index ascending — so seeded generators see an
+    /// unchanged call stream. Placement itself fans out over the
+    /// fixed-chunk parallel schedule and is bit-identical at any thread
+    /// count.
+    pub fn build(
+        crush: CrushMap,
+        pools: Vec<Pool>,
+        mut shard_bytes: impl FnMut(&Pool, u32) -> u64,
+    ) -> ClusterState {
+        let mut state = ClusterState::shell(crush, &pools);
         for pool in &pools {
-            let rule = state
-                .crush
-                .rule(pool.rule_id)
-                .unwrap_or_else(|| panic!("pool {} references unknown rule {}", pool.id, pool.rule_id))
-                .clone();
-            let slots = pool.redundancy.shard_count();
             for idx in 0..pool.pg_count {
-                let x = pg_input(pool.id, idx);
-                let acting = map_rule(&state.crush, &rule, x, slots);
-                let pg = Pg {
-                    id: PgId::new(pool.id, idx),
-                    shard_bytes: shard_bytes(pool, idx),
-                    acting,
-                };
-                state.index_pg(&pg);
-                state.pgs.insert(pg.id, pg);
+                let i = state
+                    .arena
+                    .index_of(PgId::new(pool.id, idx))
+                    .expect("stripe was just created");
+                state.arena.set_shard_bytes(i, shard_bytes(pool, idx));
             }
         }
+        state.place_all();
+        state.index_all();
         state.rebuild_aggregates();
         state
     }
 
     /// Reassemble a cluster from dumped parts (explicit acting sets; no
-    /// CRUSH recomputation — used by `dump::load`).
+    /// CRUSH recomputation — used by `dump::load` and
+    /// `expand::add_hosts`). Every `Pg` must fall inside a pool's range
+    /// with an acting set of the pool's slot width, and every upmap
+    /// entry must reference an existing PG — `dump::load` validates;
+    /// violations here panic.
     pub fn from_parts(
         crush: CrushMap,
         pools: Vec<Pool>,
         pgs: Vec<Pg>,
         upmap: BTreeMap<PgId, Vec<(OsdId, OsdId)>>,
     ) -> ClusterState {
-        let n = crush.devices.len();
-        let osd_size: Vec<u64> = crush
-            .devices
-            .iter()
-            .map(|d| (d.weight * TIB as f64).round() as u64)
-            .collect();
-        let mut state = ClusterState {
-            crush,
-            pools: pools.iter().map(|p| (p.id, p.clone())).collect(),
-            pgs: BTreeMap::new(),
-            upmap,
-            osd_size,
-            osd_used: vec![0; n],
-            osd_up: vec![true; n],
-            osd_pgs: vec![Vec::new(); n],
-            osd_pool_shards: vec![BTreeMap::new(); n],
-            agg: Aggregates::default(),
-        };
+        let mut state = ClusterState::shell(crush, &pools);
         for pg in pgs {
-            state.index_pg(&pg);
-            state.pgs.insert(pg.id, pg);
+            let idx = state
+                .arena
+                .index_of(pg.id)
+                .unwrap_or_else(|| panic!("pg {} is outside every pool's range", pg.id));
+            state.arena.set_shard_bytes(idx, pg.shard_bytes);
+            state.arena.set_acting(idx, &pg.acting);
         }
+        state.arena.set_upmap_table(upmap);
+        state.index_all();
         state.rebuild_aggregates();
         state
+    }
+
+    /// CRUSH-place every PG (arena order). Placement per PG is a pure
+    /// function of the CRUSH map, the chunk boundaries depend only on
+    /// the PG count, and chunk results merge in index order — the
+    /// serial↔parallel equivalence contract of RFC 0002.
+    fn place_all(&mut self) {
+        let n = self.arena.len();
+        if n == 0 {
+            return;
+        }
+        let mut rules: Vec<Rule> = Vec::with_capacity(self.arena.n_pools());
+        let mut slots: Vec<usize> = Vec::with_capacity(self.arena.n_pools());
+        for rank in 0..self.arena.n_pools() {
+            let pool = &self.pools[&self.arena.pool_at_rank(rank)];
+            let rule = self
+                .crush
+                .rule(pool.rule_id)
+                .unwrap_or_else(|| {
+                    panic!("pool {} references unknown rule {}", pool.id, pool.rule_id)
+                })
+                .clone();
+            rules.push(rule);
+            slots.push(pool.redundancy.shard_count());
+        }
+        let placed = {
+            let (arena, crush) = (&self.arena, &self.crush);
+            let (rules, slots) = (&rules, &slots);
+            place_rows(n, |i| {
+                let idx = PgIdx(i as u32);
+                let id = arena.id_at(idx);
+                let rank = arena.rank_at(idx);
+                map_rule(crush, &rules[rank], pg_input(id.pool, id.index), slots[rank])
+            })
+        };
+        for (i, acting) in placed.iter().enumerate() {
+            self.arena.set_acting(PgIdx(i as u32), acting);
+        }
+    }
+
+    /// Account every PG into the reverse indexes (serial, arena order).
+    fn index_all(&mut self) {
+        for i in 0..self.arena.len() as u32 {
+            self.index_pg(PgIdx(i));
+        }
     }
 
     /// Rebuild the incremental aggregates from the primary data. Called
@@ -203,7 +285,8 @@ impl ClusterState {
             &self.osd_used,
             &self.osd_size,
             &self.osd_up,
-            &self.osd_pool_shards,
+            &self.shards,
+            &self.arena,
         );
     }
 
@@ -231,37 +314,46 @@ impl ClusterState {
         self.rebuild_aggregates();
     }
 
-    fn index_pg(&mut self, pg: &Pg) {
-        for osd in pg.devices() {
+    fn index_pg(&mut self, idx: PgIdx) {
+        let bytes = self.arena.shard_bytes_at(idx);
+        let rank = self.arena.rank_at(idx);
+        for slot in 0..self.arena.slots_at_rank(rank) {
+            let Some(osd) = self.arena.acting_slot(idx, slot) else { continue };
             let o = osd as usize;
-            self.osd_used[o] += pg.shard_bytes;
-            self.osd_pgs[o].push(pg.id);
-            *self.osd_pool_shards[o].entry(pg.id.pool).or_insert(0) += 1;
+            self.osd_used[o] += bytes;
+            self.osd_pgs[o].push(idx);
+            self.shards.inc(o, rank);
         }
     }
 
     // ---- basic accessors --------------------------------------------------
 
+    /// Number of devices in the CRUSH map (up or down).
     pub fn osd_count(&self) -> usize {
         self.osd_size.len()
     }
 
+    /// Raw capacity of one OSD, bytes.
     pub fn osd_size(&self, osd: OsdId) -> u64 {
         self.osd_size[osd as usize]
     }
 
+    /// Stored bytes on one OSD.
     pub fn osd_used(&self, osd: OsdId) -> u64 {
         self.osd_used[osd as usize]
     }
 
+    /// Free bytes on one OSD (saturating).
     pub fn osd_free(&self, osd: OsdId) -> u64 {
         self.osd_size[osd as usize].saturating_sub(self.osd_used[osd as usize])
     }
 
+    /// Is the OSD up?
     pub fn osd_is_up(&self, osd: OsdId) -> bool {
         self.osd_up[osd as usize]
     }
 
+    /// Mark an OSD up or down, keeping the utilization index current.
     pub fn set_osd_up(&mut self, osd: OsdId, up: bool) {
         let o = osd as usize;
         if self.osd_up[o] == up {
@@ -272,6 +364,7 @@ impl ClusterState {
         self.agg.up_changed(osd, self.osd_used[o], self.osd_size[o], up, class);
     }
 
+    /// Device class of one OSD.
     pub fn osd_class(&self, osd: OsdId) -> DeviceClass {
         self.crush.devices[osd as usize].class
     }
@@ -367,42 +460,85 @@ impl ClusterState {
         stats::variance(&us)
     }
 
-    pub fn pg(&self, id: PgId) -> Option<&Pg> {
-        self.pgs.get(&id)
+    // ---- PG access (typed-index + view API) -------------------------------
+
+    /// Borrowed view of one PG by identity, if it exists.
+    pub fn pg(&self, id: PgId) -> Option<PgView<'_>> {
+        self.arena.index_of(id).map(|idx| self.arena.view(idx))
     }
 
+    /// Dense index of a PG, if it exists. The index is stable for the
+    /// lifetime of this state and O(1)-resolvable to all per-PG columns.
+    pub fn pg_idx(&self, id: PgId) -> Option<PgIdx> {
+        self.arena.index_of(id)
+    }
+
+    /// Borrowed view of the PG at a dense index.
+    pub fn pg_at(&self, idx: PgIdx) -> PgView<'_> {
+        self.arena.view(idx)
+    }
+
+    /// Identity of the PG at a dense index — O(1) column read.
+    pub fn pg_id_at(&self, idx: PgIdx) -> PgId {
+        self.arena.id_at(idx)
+    }
+
+    /// Per-shard size of the PG at a dense index — O(1) column read (the
+    /// balancer's shard-selection hot path).
+    pub fn shard_bytes_at(&self, idx: PgIdx) -> u64 {
+        self.arena.shard_bytes_at(idx)
+    }
+
+    /// Total number of PGs.
     pub fn pg_count(&self) -> usize {
-        self.pgs.len()
+        self.arena.len()
     }
 
-    pub fn pgs(&self) -> impl Iterator<Item = &Pg> {
-        self.pgs.values()
+    /// All PGs in ascending [`PgId`] order (the historical iteration
+    /// order, preserved for serialization and reporting).
+    pub fn pgs(&self) -> impl Iterator<Item = PgView<'_>> {
+        self.arena.iter_pgid_order().map(move |idx| self.arena.view(idx))
     }
 
-    /// PGs with a shard on `osd`.
-    pub fn shards_on(&self, osd: OsdId) -> &[PgId] {
+    /// The PGs of one pool, ascending PG index — a contiguous arena
+    /// stripe, so this walk streams cache lines (empty for unknown
+    /// pools).
+    pub fn pgs_of_pool(&self, pool: u32) -> impl Iterator<Item = PgView<'_>> {
+        self.arena.pool_range(pool).map(move |idx| self.arena.view(idx))
+    }
+
+    /// Dense indexes of the PGs with a shard on `osd`.
+    pub fn shards_on(&self, osd: OsdId) -> &[PgIdx] {
         &self.osd_pgs[osd as usize]
     }
 
-    /// Number of shards of `pool` on `osd`.
+    /// Number of shards of `pool` on `osd` (dense matrix read).
     pub fn pool_shards_on(&self, pool: u32, osd: OsdId) -> u32 {
-        self.osd_pool_shards[osd as usize].get(&pool).copied().unwrap_or(0)
+        match self.arena.pool_rank(pool) {
+            Some(rank) => self.shards.get(osd as usize, rank),
+            None => 0,
+        }
     }
 
     /// The upmap exception table entry for a PG (empty if none).
     pub fn upmap_items(&self, pg: PgId) -> &[(OsdId, OsdId)] {
-        self.upmap.get(&pg).map(Vec::as_slice).unwrap_or(&[])
+        match self.arena.index_of(pg) {
+            Some(idx) => self.arena.upmap_at(idx),
+            None => &[],
+        }
     }
 
-    /// The whole upmap exception table (used when the cluster is
-    /// reassembled around a mutated CRUSH map, e.g. host expansion).
-    pub fn upmap_table(&self) -> &BTreeMap<PgId, Vec<(OsdId, OsdId)>> {
-        &self.upmap
+    /// The whole upmap exception table as a [`PgId`]-keyed map. O(PGs) —
+    /// serialization/reassembly boundary only (host expansion, dumps);
+    /// live lookups go through [`ClusterState::upmap_items`].
+    pub fn upmap_table(&self) -> BTreeMap<PgId, Vec<(OsdId, OsdId)>> {
+        self.arena.upmap_table()
     }
 
-    /// Total number of PGs with at least one upmap exception.
+    /// Total number of PGs with at least one upmap exception
+    /// (incrementally counted).
     pub fn upmap_entry_count(&self) -> usize {
-        self.upmap.len()
+        self.arena.upmap_entries()
     }
 
     // ---- ideal shard counts (paper §2.2) ----------------------------------
@@ -449,11 +585,14 @@ impl ClusterState {
             Some(p) => p,
             None => return 0.0,
         };
+        let Some(rank) = self.arena.pool_rank(pool_id) else {
+            return 0.0;
+        };
         let g = pool.shard_growth_per_user_byte();
         let mut min_avail = f64::INFINITY;
         let mut any = false;
         for osd in 0..self.osd_count() as OsdId {
-            let n = self.pool_shards_on(pool_id, osd);
+            let n = self.shards.get(osd as usize, rank);
             if n == 0 {
                 continue;
             }
@@ -492,7 +631,13 @@ impl ClusterState {
 
     /// Validate a movement without applying it.
     pub fn check_movement(&self, pg_id: PgId, from: OsdId, to: OsdId) -> Result<(), StateError> {
-        let pg = self.pgs.get(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        let idx = self.arena.index_of(pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        self.check_movement_at(idx, from, to)
+    }
+
+    fn check_movement_at(&self, idx: PgIdx, from: OsdId, to: OsdId) -> Result<(), StateError> {
+        let pg = self.arena.view(idx);
+        let pg_id = pg.id();
         if (to as usize) >= self.osd_count() {
             return Err(StateError::UnknownOsd(to));
         }
@@ -507,8 +652,8 @@ impl ClusterState {
         }
         let used = self.osd_used[to as usize];
         let size = self.osd_size[to as usize];
-        if used + pg.shard_bytes > size {
-            return Err(StateError::WouldOverfill { osd: to, used, add: pg.shard_bytes, size });
+        if used + pg.shard_bytes() > size {
+            return Err(StateError::WouldOverfill { osd: to, used, add: pg.shard_bytes(), size });
         }
         Ok(())
     }
@@ -522,25 +667,23 @@ impl ClusterState {
         from: OsdId,
         to: OsdId,
     ) -> Result<Movement, StateError> {
-        self.check_movement(pg_id, from, to)?;
-        let pg = self.pgs.get_mut(&pg_id).unwrap();
-        let slot = pg.slot_of(from).unwrap();
-        pg.acting[slot] = Some(to);
-        let bytes = pg.shard_bytes;
+        let idx = self.arena.index_of(pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        self.check_movement_at(idx, from, to)?;
+        let slot = self.arena.view(idx).slot_of(from).expect("checked on source");
+        self.arena.acting_mut(idx)[slot] = Some(to);
+        let bytes = self.arena.shard_bytes_at(idx);
 
         // upmap bookkeeping (Ceph pg_upmap_items semantics): pairs map the
         // raw CRUSH result to the override. Chain-compress (raw→from) +
         // (from→to) into (raw→to); drop identity pairs.
-        let items = self.upmap.entry(pg_id).or_default();
-        if let Some(pair) = items.iter_mut().find(|(_, t)| *t == from) {
-            pair.1 = to;
-        } else {
-            items.push((from, to));
-        }
-        items.retain(|(a, b)| a != b);
-        if items.is_empty() {
-            self.upmap.remove(&pg_id);
-        }
+        self.arena.with_upmap_mut(idx, |items| {
+            if let Some(pair) = items.iter_mut().find(|(_, t)| *t == from) {
+                pair.1 = to;
+            } else {
+                items.push((from, to));
+            }
+            items.retain(|(a, b)| a != b);
+        });
 
         // accounting (aggregates track every delta: utilization index,
         // Σu/Σu², per-pool shard counts)
@@ -563,27 +706,25 @@ impl ClusterState {
             self.osd_up[to as usize],
         );
         let fpgs = &mut self.osd_pgs[from as usize];
-        if let Some(pos) = fpgs.iter().position(|&p| p == pg_id) {
+        if let Some(pos) = fpgs.iter().position(|&p| p == idx) {
             fpgs.swap_remove(pos);
         }
-        self.osd_pgs[to as usize].push(pg_id);
-        let fcount = self.osd_pool_shards[from as usize].entry(pg_id.pool).or_insert(0);
-        *fcount = fcount.saturating_sub(1);
-        if *fcount == 0 {
-            self.osd_pool_shards[from as usize].remove(&pg_id.pool);
-        }
-        *self.osd_pool_shards[to as usize].entry(pg_id.pool).or_insert(0) += 1;
+        self.osd_pgs[to as usize].push(idx);
+        let rank = self.arena.rank_at(idx);
+        self.shards.dec(from as usize, rank);
+        self.shards.inc(to as usize, rank);
         self.agg.shard_moved(pg_id.pool, from, to);
         self.agg.maybe_renormalize(&self.osd_used, &self.osd_size);
 
         Ok(Movement { pg: pg_id, from, to, bytes })
     }
 
-    /// Create a new pool on the live cluster: CRUSH-place all of its PGs,
-    /// index them, and rebuild the aggregates (pool creation is rare, so
-    /// the O(cluster) rebuild is acceptable). `shard_bytes` assigns each
-    /// new PG's per-shard size by PG index. Used by the scenario engine's
-    /// `CreatePool` event.
+    /// Create a new pool on the live cluster: append its arena stripe
+    /// (rank after all existing pools), restride the shard matrix,
+    /// CRUSH-place its PGs, index them, and rebuild the aggregates (pool
+    /// creation is rare, so the O(cluster) rebuild is acceptable).
+    /// `shard_bytes` assigns each new PG's per-shard size by PG index.
+    /// Used by the scenario engine's `CreatePool` event.
     pub fn add_pool(
         &mut self,
         pool: Pool,
@@ -597,16 +738,23 @@ impl ClusterState {
             None => return Err(StateError::UnknownRule { pool: pool.id, rule: pool.rule_id }),
         };
         let slots = pool.redundancy.shard_count();
+        self.arena.push_pool(pool.id, pool.pg_count, slots);
+        self.shards.add_pool();
         for idx in 0..pool.pg_count {
-            let x = pg_input(pool.id, idx);
-            let acting = map_rule(&self.crush, &rule, x, slots);
-            let pg = Pg {
-                id: PgId::new(pool.id, idx),
-                shard_bytes: shard_bytes(idx),
-                acting,
-            };
-            self.index_pg(&pg);
-            self.pgs.insert(pg.id, pg);
+            let i = self.arena.index_of(PgId::new(pool.id, idx)).expect("stripe exists");
+            self.arena.set_shard_bytes(i, shard_bytes(idx));
+        }
+        let placed = {
+            let (crush, rule) = (&self.crush, &rule);
+            let pool_id = pool.id;
+            place_rows(pool.pg_count as usize, |i| {
+                map_rule(crush, rule, pg_input(pool_id, i as u32), slots)
+            })
+        };
+        for (i, acting) in placed.iter().enumerate() {
+            let idx = self.arena.index_of(PgId::new(pool.id, i as u32)).expect("stripe exists");
+            self.arena.set_acting(idx, acting);
+            self.index_pg(idx);
         }
         self.pools.insert(pool.id, pool);
         self.rebuild_aggregates();
@@ -616,10 +764,12 @@ impl ClusterState {
     /// Grow a PG in place (new data written by clients); used by the
     /// coordinator's write-workload simulation.
     pub fn grow_pg(&mut self, pg_id: PgId, bytes_per_shard: u64) -> Result<(), StateError> {
-        let pg = self.pgs.get_mut(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
-        pg.shard_bytes += bytes_per_shard;
-        let devices: Vec<OsdId> = pg.devices().collect();
-        for osd in devices {
+        let idx = self.arena.index_of(pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        let bytes = self.arena.shard_bytes_at(idx);
+        self.arena.set_shard_bytes(idx, bytes + bytes_per_shard);
+        let rank = self.arena.rank_at(idx);
+        for slot in 0..self.arena.slots_at_rank(rank) {
+            let Some(osd) = self.arena.acting_slot(idx, slot) else { continue };
             let o = osd as usize;
             let old = self.osd_used[o];
             self.osd_used[o] += bytes_per_shard;
@@ -639,14 +789,14 @@ impl ClusterState {
             self.pools.get(&pg_id.pool).map(|p| p.redundancy),
             Some(super::pool::Redundancy::Replicated { .. })
         );
-        let pg = self.pgs.get_mut(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
-        let Some(slot) = pg.slot_of(new_primary) else {
+        let idx = self.arena.index_of(pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        let Some(slot) = self.arena.view(idx).slot_of(new_primary) else {
             return Err(StateError::NotOnSource { pg: pg_id, osd: new_primary });
         };
         if !is_replicated {
             return Err(StateError::NotOnSource { pg: pg_id, osd: new_primary });
         }
-        pg.acting.swap(0, slot);
+        self.arena.acting_mut(idx).swap(0, slot);
         Ok(())
     }
 
@@ -654,17 +804,19 @@ impl ClusterState {
     pub fn primaries_on(&self, osd: OsdId) -> usize {
         self.osd_pgs[osd as usize]
             .iter()
-            .filter(|&&pg| self.pgs[&pg].acting.first() == Some(&Some(osd)))
+            .filter(|&&idx| self.arena.acting_at(idx).first() == Some(&Some(osd)))
             .count()
     }
 
     /// Shrink a PG in place (object deletion); clamps at zero.
     pub fn shrink_pg_by(&mut self, pg_id: PgId, bytes_per_shard: u64) -> Result<(), StateError> {
-        let pg = self.pgs.get_mut(&pg_id).ok_or(StateError::UnknownPg(pg_id))?;
-        let delta = bytes_per_shard.min(pg.shard_bytes);
-        pg.shard_bytes -= delta;
-        let devices: Vec<OsdId> = pg.devices().collect();
-        for osd in devices {
+        let idx = self.arena.index_of(pg_id).ok_or(StateError::UnknownPg(pg_id))?;
+        let bytes = self.arena.shard_bytes_at(idx);
+        let delta = bytes_per_shard.min(bytes);
+        self.arena.set_shard_bytes(idx, bytes - delta);
+        let rank = self.arena.rank_at(idx);
+        for slot in 0..self.arena.slots_at_rank(rank) {
+            let Some(osd) = self.arena.acting_slot(idx, slot) else { continue };
             let o = osd as usize;
             let old = self.osd_used[o];
             self.osd_used[o] -= delta;
@@ -678,24 +830,29 @@ impl ClusterState {
     /// simulator after long runs). Returns a list of violations.
     pub fn verify(&self) -> Vec<String> {
         let mut problems = Vec::new();
-        let mut used = vec![0u64; self.osd_count()];
-        let mut pgs_on = vec![0usize; self.osd_count()];
-        for pg in self.pgs.values() {
+        let n = self.osd_count();
+        let mut used = vec![0u64; n];
+        let mut pgs_on = vec![0usize; n];
+        let mut expect = ShardMatrix::new(n, self.arena.n_pools());
+        for idx in self.arena.iter() {
+            let pg = self.arena.view(idx);
+            let rank = self.arena.rank_at(idx);
             let mut seen = Vec::new();
             for osd in pg.devices() {
-                if (osd as usize) >= self.osd_count() {
-                    problems.push(format!("pg {} references unknown osd.{}", pg.id, osd));
+                if (osd as usize) >= n {
+                    problems.push(format!("pg {} references unknown osd.{}", pg.id(), osd));
                     continue;
                 }
                 if seen.contains(&osd) {
-                    problems.push(format!("pg {} has duplicate shard on osd.{}", pg.id, osd));
+                    problems.push(format!("pg {} has duplicate shard on osd.{}", pg.id(), osd));
                 }
                 seen.push(osd);
-                used[osd as usize] += pg.shard_bytes;
+                used[osd as usize] += pg.shard_bytes();
                 pgs_on[osd as usize] += 1;
+                expect.inc(osd as usize, rank);
             }
         }
-        for o in 0..self.osd_count() {
+        for o in 0..n {
             if used[o] != self.osd_used[o] {
                 problems.push(format!(
                     "osd.{o} accounting drift: computed {} != tracked {}",
@@ -709,10 +866,17 @@ impl ClusterState {
                     self.osd_pgs[o].len()
                 ));
             }
-            let pool_sum: u32 = self.osd_pool_shards[o].values().sum();
-            if pool_sum as usize != pgs_on[o] {
+            if expect.row(o) != self.shards.row(o) {
                 problems.push(format!("osd.{o} pool shard-count drift"));
             }
+        }
+        let live_upmaps = self.arena.iter().filter(|&i| !self.arena.upmap_at(i).is_empty()).count();
+        if live_upmaps != self.arena.upmap_entries() {
+            problems.push(format!(
+                "upmap entry count drift: tracked {} != {}",
+                self.arena.upmap_entries(),
+                live_upmaps
+            ));
         }
         problems.extend(self.agg.check(
             &self.crush,
@@ -720,7 +884,8 @@ impl ClusterState {
             &self.osd_used,
             &self.osd_size,
             &self.osd_up,
-            &self.osd_pool_shards,
+            &self.shards,
+            &self.arena,
         ));
         problems
     }
@@ -770,10 +935,30 @@ mod tests {
     }
 
     #[test]
+    fn typed_index_round_trips() {
+        let s = small_cluster();
+        for pg in s.pgs() {
+            let idx = s.pg_idx(pg.id()).unwrap();
+            assert_eq!(s.pg_id_at(idx), pg.id());
+            assert_eq!(s.shard_bytes_at(idx), pg.shard_bytes());
+            assert_eq!(s.pg_at(idx).acting(), pg.acting());
+        }
+        assert!(s.pg_idx(PgId::new(1, 32)).is_none(), "index beyond pg_count");
+        assert!(s.pg_idx(PgId::new(9, 0)).is_none(), "unknown pool");
+        // pgs() yields ascending PgId order; pgs_of_pool is the stripe
+        let ids: Vec<PgId> = s.pgs().map(|p| p.id()).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        assert_eq!(ids, sorted);
+        assert_eq!(s.pgs_of_pool(1).count(), 32);
+        assert_eq!(s.pgs_of_pool(77).count(), 0);
+    }
+
+    #[test]
     fn movement_updates_accounting_and_upmap() {
         let mut s = small_cluster();
         // find a PG and a legal target (an OSD not holding it)
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let from = s.pg(pg).unwrap().devices().next().unwrap();
         let to = (0..s.osd_count() as OsdId)
             .find(|&o| !s.pg(pg).unwrap().on(o))
@@ -793,7 +978,7 @@ mod tests {
     #[test]
     fn upmap_chain_compression() {
         let mut s = small_cluster();
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let a = s.pg(pg).unwrap().devices().next().unwrap();
         let free: Vec<OsdId> = (0..s.osd_count() as OsdId)
             .filter(|&o| !s.pg(pg).unwrap().on(o))
@@ -813,7 +998,7 @@ mod tests {
     #[test]
     fn movement_validation_errors() {
         let mut s = small_cluster();
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let on = s.pg(pg).unwrap().devices().collect::<Vec<_>>();
         let off = (0..s.osd_count() as OsdId).find(|o| !on.contains(o)).unwrap();
         // not on source
@@ -869,7 +1054,7 @@ mod tests {
         }
         let before = s.pool_max_avail(1);
         // move one shard from fullest to emptiest if legal
-        let pg = s.shards_on(fullest).iter().copied().find(|&p| {
+        let pg = s.shards_on(fullest).iter().map(|&i| s.pg_id_at(i)).find(|&p| {
             !s.pg(p).unwrap().on(emptiest)
         });
         if let Some(pg) = pg {
@@ -900,7 +1085,7 @@ mod tests {
         assert_eq!(s.pg_count(), before_pgs + 16);
         assert_eq!(s.total_used(), before_used + 16 * 3 * 2 * GIB);
         // all new PGs placed on distinct hosts per the rule
-        for pg in s.pgs().filter(|p| p.id.pool == 2) {
+        for pg in s.pgs().filter(|p| p.id().pool == 2) {
             assert_eq!(pg.devices().count(), 3);
         }
         // aggregates were rebuilt consistently
@@ -920,7 +1105,7 @@ mod tests {
     #[test]
     fn grow_pg_adds_to_all_shards() {
         let mut s = small_cluster();
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let before = s.total_used();
         s.grow_pg(pg, GIB).unwrap();
         assert_eq!(s.total_used(), before + 3 * GIB);
@@ -948,14 +1133,14 @@ mod tests {
         assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
 
         // a movement reorders two devices
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let from = s.pg(pg).unwrap().devices().next().unwrap();
         let to = (0..s.osd_count() as OsdId).find(|&o| !s.pg(pg).unwrap().on(o)).unwrap();
         s.apply_movement(pg, from, to).unwrap();
         assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
 
         // writes re-rank devices
-        let other = s.pgs().nth(5).unwrap().id;
+        let other = s.pgs().nth(5).unwrap().id();
         s.grow_pg(other, 37 * GIB).unwrap();
         assert_eq!(s.osds_by_utilization().collect::<Vec<_>>(), expect_order(&s));
         s.shrink_pg_by(other, 11 * GIB).unwrap();
@@ -977,7 +1162,7 @@ mod tests {
     fn fast_variance_tracks_exact_variance() {
         let mut s = small_cluster();
         assert!((s.fast_variance() - s.utilization_variance()).abs() < 1e-12);
-        let pgs: Vec<PgId> = s.pgs().map(|p| p.id).collect();
+        let pgs: Vec<PgId> = s.pgs().map(|p| p.id()).collect();
         for (i, pg) in pgs.iter().enumerate() {
             s.grow_pg(*pg, (1 + i as u64 % 5) * GIB).unwrap();
         }
@@ -1007,7 +1192,7 @@ mod tests {
         assert_eq!(devices.len(), s.osd_count());
 
         // deviation metric stays consistent across a movement
-        let pg = s.pgs().next().unwrap().id;
+        let pg = s.pgs().next().unwrap().id();
         let from = s.pg(pg).unwrap().devices().next().unwrap();
         let to = (0..s.osd_count() as OsdId).find(|&o| !s.pg(pg).unwrap().on(o)).unwrap();
         s.apply_movement(pg, from, to).unwrap();
@@ -1017,5 +1202,20 @@ mod tests {
         assert!((s.pool_count_deviation(1) - manual).abs() < 1e-9);
         assert!(s.pool_shard_counts(99).is_none());
         assert!(s.verify().is_empty());
+    }
+
+    /// Parallel and serial construction must be bit-identical (the
+    /// serial↔parallel equivalence guarantee; the full property test
+    /// lives in `rust/tests/arena_equiv.rs`).
+    #[test]
+    fn parallel_build_matches_serial_build() {
+        let serial = crate::util::parallel::with_threads(1, small_cluster);
+        let par = crate::util::parallel::with_threads(4, small_cluster);
+        assert_eq!(serial.utilizations(), par.utilizations());
+        for (a, b) in serial.pgs().zip(par.pgs()) {
+            assert_eq!(a.id(), b.id());
+            assert_eq!(a.acting(), b.acting());
+            assert_eq!(a.shard_bytes(), b.shard_bytes());
+        }
     }
 }

@@ -82,7 +82,7 @@ pub fn age_epoch(state: &mut ClusterState, cfg: &AgingConfig, rng: &mut Rng) {
             let (sum, n) = pgs
                 .iter()
                 .filter_map(|&id| state.pg(id))
-                .fold((0u64, 0u64), |(s, n), pg| (s + pg.shard_bytes, n + 1));
+                .fold((0u64, 0u64), |(s, n), pg| (s + pg.shard_bytes(), n + 1));
             if n == 0 {
                 continue;
             }
@@ -122,7 +122,7 @@ pub fn age_epoch(state: &mut ClusterState, cfg: &AgingConfig, rng: &mut Rng) {
 /// Shrink helper (deletion of objects): reduce a PG's shard size,
 /// clamped at zero.
 pub fn shrink_pg(state: &mut ClusterState, pg_id: PgId, bytes: u64) -> Result<(), String> {
-    let current = state.pg(pg_id).ok_or("unknown pg")?.shard_bytes;
+    let current = state.pg(pg_id).ok_or("unknown pg")?.shard_bytes();
     let delta = bytes.min(current);
     if delta == 0 {
         return Ok(());

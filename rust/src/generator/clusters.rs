@@ -409,7 +409,7 @@ mod tests {
     #[test]
     fn hybrid_pgs_in_cluster_d_span_classes() {
         let d = cluster_d(0);
-        let pg = d.state.pgs().find(|p| p.id.pool == 1).unwrap();
+        let pg = d.state.pgs().find(|p| p.id().pool == 1).unwrap();
         let classes: Vec<DeviceClass> =
             pg.devices().map(|o| d.state.osd_class(o)).collect();
         assert_eq!(classes[0], DeviceClass::Ssd);

@@ -355,7 +355,7 @@ impl<'a> ScenarioEngine<'a> {
                 for idx in 0..pg_count {
                     let id = PgId::new(*pool, idx);
                     if let Some(pg) = self.state.pg(id) {
-                        raw += pg.shard_bytes * pg.devices().count() as u64;
+                        raw += pg.shard_bytes() * pg.devices().count() as u64;
                     }
                     let _ = self.state.shrink_pg_by(id, u64::MAX);
                 }
@@ -613,9 +613,8 @@ mod tests {
         engine.apply(&ScenarioEvent::DecommissionPool { pool: 10 }).unwrap();
         let drained: u64 = engine
             .state()
-            .pgs()
-            .filter(|p| p.id.pool == 10)
-            .map(|p| p.shard_bytes)
+            .pgs_of_pool(10)
+            .map(|p| p.shard_bytes())
             .sum();
         assert_eq!(drained, 0, "decommission empties every PG");
         // unknown-pool events error out

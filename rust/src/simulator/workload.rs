@@ -184,9 +184,8 @@ mod tests {
         );
 
         let pool_used = |s: &ClusterState, pool: u32| -> u64 {
-            s.pgs()
-                .filter(|p| p.id.pool == pool)
-                .map(|p| p.shard_bytes * p.devices().count() as u64)
+            s.pgs_of_pool(pool)
+                .map(|p| p.shard_bytes() * p.devices().count() as u64)
                 .sum()
         };
         let (hot_before, cold_before) = (pool_used(&s, 1), pool_used(&s, 2));

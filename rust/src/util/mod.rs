@@ -6,6 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

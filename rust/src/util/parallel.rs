@@ -1,0 +1,263 @@
+//! Hand-rolled fork-join parallelism with a **determinism contract**
+//! (RFC 0002) — zero dependencies, `std::thread::scope` only.
+//!
+//! The planner's golden-trace guarantee ("the engine may only change how
+//! *fast* a move is found, never *which* move") extends to thread count:
+//! every helper here produces **byte-identical results at any thread
+//! count, including 1** — but the two helpers earn it differently, and
+//! callers must pick the one whose contract their work satisfies:
+//!
+//! * [`map_reduce`] supports **order-sensitive combination** (float
+//!   sums, concatenation). Its chunk boundaries depend only on the
+//!   caller-fixed chunk length and the input size — never on the thread
+//!   count — and chunk results reduce strictly in chunk-index order, so
+//!   reduction order is a constant of the input.
+//! * [`for_chunks_mut`] partitions **by thread count** and is therefore
+//!   only deterministic for **elementwise** work: each output cell must
+//!   be a pure function of the input and the cell's global index. Any
+//!   per-region accumulation (a chunk-local running sum, say) WOULD be
+//!   thread-count-dependent — use [`map_reduce`] for that.
+//!
+//! Thread count resolution: an explicit [`with_threads`] override (used
+//! by tests and benches), else the `EQUILIBRIUM_THREADS` environment
+//! variable, else `std::thread::available_parallelism` capped at 8.
+//!
+//! Threads are spawned per call (`std::thread::scope`), not pooled, so
+//! callers gate on work size: both call sites (initial CRUSH placement
+//! in `ClusterState::build`, candidate scoring in `NativeScorer`) only
+//! fan out when the per-call work dwarfs the ~tens-of-microseconds spawn
+//! cost.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Hard cap on worker threads (diminishing returns beyond this for the
+/// memory-bound loops we parallelize).
+const MAX_THREADS: usize = 8;
+
+thread_local! {
+    /// Per-thread override installed by [`with_threads`] (0 = none).
+    static OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Process-wide default from `EQUILIBRIUM_THREADS` / the machine,
+/// resolved once.
+fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("EQUILIBRIUM_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n.min(MAX_THREADS);
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_THREADS)
+    })
+}
+
+/// The worker-thread budget for parallel sections started on this
+/// thread: the innermost [`with_threads`] override, else
+/// `EQUILIBRIUM_THREADS`, else the machine's parallelism (capped at 8).
+/// Always ≥ 1.
+pub fn threads() -> usize {
+    let o = OVERRIDE.with(|c| c.get());
+    if o >= 1 {
+        o.min(MAX_THREADS)
+    } else {
+        default_threads()
+    }
+}
+
+/// Run `f` with the thread budget forced to `n` (≥ 1) on this thread.
+/// Nests; the previous budget is restored on exit (also on panic-free
+/// early return). Used by the equivalence tests and the scale bench to
+/// pin serial-vs-parallel comparisons without touching the environment.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = OVERRIDE.with(|c| c.replace(n.max(1)));
+    let r = f();
+    OVERRIDE.with(|c| c.set(prev));
+    r
+}
+
+/// Split `data` into at most [`threads`] contiguous regions and run
+/// `f(start_offset, region)` on each, possibly concurrently.
+///
+/// Determinism contract: the regions ARE a function of the thread
+/// count, so `f` must write each element as a pure function of the
+/// input and the element's global index (`start_offset + i`) —
+/// elementwise work only. Under that contract the output is identical
+/// for every thread count, because regions are disjoint and no value
+/// depends on how the slice was partitioned; per-region accumulation
+/// belongs in [`map_reduce`] instead. `min_chunk` gates the fan-out:
+/// fewer than `2 × min_chunk` elements run inline on the calling
+/// thread.
+pub fn for_chunks_mut<T, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let workers = threads().min(n / min_chunk.max(1)).max(1);
+    if workers <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (i, region) in data.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i * per, region));
+        }
+    });
+}
+
+/// Map `0..n` in fixed chunks of `chunk_len` and reduce the results
+/// **in chunk-index order**.
+///
+/// The chunk boundaries depend only on `n` and `chunk_len` (rule 1), and
+/// `reduce(chunk_index, result)` is invoked strictly for chunk 0, 1, 2, …
+/// regardless of which worker finished first (rule 2) — so any
+/// order-sensitive combination (float sums, concatenation) is
+/// bit-identical at every thread count. Workers pull chunk indices from
+/// an atomic counter; results park in a slot table until the ordered
+/// reduction drains it.
+pub fn map_reduce<R, M, F>(n: usize, chunk_len: usize, map: M, mut reduce: F)
+where
+    R: Send,
+    M: Fn(Range<usize>) -> R + Sync,
+    F: FnMut(usize, R),
+{
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = n.div_ceil(chunk_len);
+    let range_of = |c: usize| c * chunk_len..(((c + 1) * chunk_len).min(n));
+    let workers = threads().min(n_chunks);
+    if workers <= 1 {
+        for c in 0..n_chunks {
+            reduce(c, map(range_of(c)));
+        }
+        return;
+    }
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n_chunks).map(|_| None).collect());
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= n_chunks {
+                    break;
+                }
+                let r = map(range_of(c));
+                slots.lock().expect("no poisoned workers")[c] = Some(r);
+            });
+        }
+    });
+    for (c, r) in slots.into_inner().expect("workers joined").into_iter().enumerate() {
+        reduce(c, r.expect("every chunk was computed"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let outer = threads();
+        with_threads(3, || {
+            assert_eq!(threads(), 3);
+            with_threads(1, || assert_eq!(threads(), 1));
+            assert_eq!(threads(), 3);
+        });
+        assert_eq!(threads(), outer);
+    }
+
+    #[test]
+    fn for_chunks_mut_is_elementwise_identical_across_thread_counts() {
+        let compute = |t: usize| {
+            with_threads(t, || {
+                let mut out = vec![0.0f64; 10_001];
+                for_chunks_mut(&mut out, 16, |start, chunk| {
+                    for (k, v) in chunk.iter_mut().enumerate() {
+                        let j = (start + k) as f64;
+                        *v = (j * 1.000001).sin() / (j + 1.0);
+                    }
+                });
+                out
+            })
+        };
+        let serial = compute(1);
+        for t in [2, 4, 7] {
+            let par = compute(t);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn map_reduce_sums_bit_identically_across_thread_counts() {
+        // float summation is reduction-order-sensitive: the ordered
+        // reduction must make it a constant of (n, chunk_len) alone
+        let total = |t: usize| {
+            with_threads(t, || {
+                let mut sum = 0.0f64;
+                map_reduce(
+                    5_000,
+                    37,
+                    |r| r.map(|i| 1.0 / (1.0 + i as f64)).sum::<f64>(),
+                    |_, part: f64| sum += part,
+                );
+                sum
+            })
+        };
+        let serial = total(1);
+        for t in [2, 3, 8] {
+            assert_eq!(serial.to_bits(), total(t).to_bits());
+        }
+    }
+
+    #[test]
+    fn map_reduce_preserves_chunk_order() {
+        with_threads(4, || {
+            let mut order = Vec::new();
+            let mut all = Vec::new();
+            map_reduce(
+                100,
+                9,
+                |r| r.collect::<Vec<usize>>(),
+                |c, chunk: Vec<usize>| {
+                    order.push(c);
+                    all.extend(chunk);
+                },
+            );
+            let expect_order: Vec<usize> = (0..100usize.div_ceil(9)).collect();
+            assert_eq!(order, expect_order);
+            assert_eq!(all, (0..100).collect::<Vec<usize>>());
+        });
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_fine() {
+        let mut empty: Vec<u8> = Vec::new();
+        for_chunks_mut(&mut empty, 4, |_, _| panic!("no work"));
+        let mut called = 0;
+        map_reduce(0, 8, |_| 1u32, |_, _| called += 1);
+        assert_eq!(called, 0);
+        let mut one = vec![7u64];
+        for_chunks_mut(&mut one, 1, |start, c| {
+            assert_eq!(start, 0);
+            c[0] *= 2;
+        });
+        assert_eq!(one[0], 14);
+    }
+}

@@ -1,0 +1,112 @@
+//! Columnar-core equivalence (RFC 0002): the arena-backed
+//! `ClusterState` must be indistinguishable from its serialized self,
+//! and parallel construction must equal serial construction **exactly**.
+//!
+//! * For seeded random clusters (with real upmap entries planted by the
+//!   balancer), a `dump.rs` round trip reproduces identical
+//!   utilizations, upmap tables, per-PG columns and `verify()` results.
+//! * Building the same cluster under `threads=4` and `threads=1` yields
+//!   byte-identical dumps — the fixed-chunk / ordered-reduction
+//!   contract of `util::parallel`.
+
+use equilibrium::balancer::{Balancer, Equilibrium};
+use equilibrium::cluster::dump;
+use equilibrium::cluster::ClusterState;
+use equilibrium::generator::clusters;
+use equilibrium::generator::synth::random_cluster;
+use equilibrium::util::parallel;
+use equilibrium::util::prop::check_seeded;
+use equilibrium::util::rng::Rng;
+
+/// Plant some upmap entries so the exception table is non-trivial.
+fn balanced(mut state: ClusterState) -> ClusterState {
+    let mut bal = Equilibrium::default();
+    let _ = bal.propose_batch(&mut state, 40);
+    state
+}
+
+fn assert_states_equal(a: &ClusterState, b: &ClusterState) -> Result<(), String> {
+    if a.utilizations() != b.utilizations() {
+        return Err("utilizations differ".into());
+    }
+    if a.upmap_table() != b.upmap_table() {
+        return Err("upmap tables differ".into());
+    }
+    if a.upmap_entry_count() != b.upmap_entry_count() {
+        return Err("upmap entry counts differ".into());
+    }
+    if a.pg_count() != b.pg_count() {
+        return Err("pg counts differ".into());
+    }
+    for (x, y) in a.pgs().zip(b.pgs()) {
+        if x.id() != y.id() || x.shard_bytes() != y.shard_bytes() || x.acting() != y.acting() {
+            return Err(format!("pg {} columns differ", x.id()));
+        }
+    }
+    let (va, vb) = (a.verify(), b.verify());
+    if va != vb {
+        return Err(format!("verify() results differ: {va:?} vs {vb:?}"));
+    }
+    if !va.is_empty() {
+        return Err(format!("invariants violated: {va:?}"));
+    }
+    Ok(())
+}
+
+/// Arena-backed state ↔ dump round trip: identical utilizations, upmap
+/// tables and verify() results.
+#[test]
+fn arena_state_matches_dump_roundtrip() {
+    check_seeded("arena-roundtrip", 0xA2E4A, 10, |rng| {
+        let state = balanced(random_cluster(rng));
+        let loaded = dump::load(&dump::dump(&state)).map_err(|e| e.to_string())?;
+        assert_states_equal(&state, &loaded)?;
+        // and the round trip is byte-stable
+        if dump::dump(&loaded) != dump::dump(&state) {
+            return Err("second dump differs from first".into());
+        }
+        Ok(())
+    });
+}
+
+/// Parallel build (threads=4) equals serial build (threads=1) exactly —
+/// bit-identical dumps, not just statistically similar clusters.
+#[test]
+fn parallel_build_equals_serial_build() {
+    check_seeded("parallel-build", 0x9A11E1, 8, |rng| {
+        let seed = rng.next_u64();
+        let serial = parallel::with_threads(1, || random_cluster(&mut Rng::new(seed)));
+        let par = parallel::with_threads(4, || random_cluster(&mut Rng::new(seed)));
+        assert_states_equal(&serial, &par)?;
+        if dump::dump(&serial) != dump::dump(&par) {
+            return Err("parallel dump differs from serial dump".into());
+        }
+        Ok(())
+    });
+}
+
+/// The same holds on a Table-1 cluster, and the balancer's decisions on
+/// the two builds are move-for-move identical.
+#[test]
+fn parallel_build_of_paper_cluster_balances_identically() {
+    let serial = parallel::with_threads(1, || clusters::by_name("a", 0).unwrap().state);
+    let par = parallel::with_threads(4, || clusters::by_name("a", 0).unwrap().state);
+    assert_states_equal(&serial, &par).unwrap();
+
+    let run = |initial: &ClusterState| {
+        let mut s = initial.clone();
+        let mut bal = Equilibrium::default();
+        let mut out = Vec::new();
+        while out.len() < 2_000 {
+            let Some(p) = bal.next_move(&s) else { break };
+            s.apply_movement(p.pg, p.from, p.to).unwrap();
+            out.push((p.pg, p.from, p.to, p.bytes));
+        }
+        out
+    };
+    // plan on the serial build at 1 thread, on the parallel build at 4:
+    // scoring fan-out must not change a single decision
+    let a = parallel::with_threads(1, || run(&serial));
+    let b = parallel::with_threads(4, || run(&par));
+    assert_eq!(a, b, "thread count changed the move sequence");
+}

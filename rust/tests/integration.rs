@@ -49,7 +49,7 @@ fn full_pipeline_on_cluster_c() {
 
     // every PG of every pool still satisfies its failure domain
     for pg in state.pgs() {
-        let pool = &state.pools[&pg.id.pool];
+        let pool = &state.pools[&pg.id().pool];
         let rule = state.crush.rule(pool.rule_id).unwrap();
         let cs = constraints::rule_slot_constraints(&state, rule, pool.redundancy.shard_count());
         for block in &cs {
@@ -59,12 +59,12 @@ fn full_pipeline_on_cluster_c() {
                 }
                 let mut domains = Vec::new();
                 for s in block.slots.clone() {
-                    if let Some(Some(osd)) = pg.acting.get(s) {
+                    if let Some(Some(osd)) = pg.acting().get(s) {
                         if let Some(d) = state.crush.ancestor_at(*osd as NodeId, *level) {
                             assert!(
                                 !domains.contains(&d),
                                 "pg {} violates {level:?} distinctness after balancing",
-                                pg.id
+                                pg.id()
                             );
                             domains.push(d);
                         }

@@ -222,7 +222,7 @@ fn prop_write_then_balance_interleaving_keeps_accounting() {
         let mut bal = Equilibrium::default();
         for _ in 0..20 {
             // random writes
-            let pgs: Vec<_> = state.pgs().map(|p| p.id).collect();
+            let pgs: Vec<_> = state.pgs().map(|p| p.id()).collect();
             for _ in 0..5 {
                 let pg = *rng.choose(&pgs).unwrap();
                 let _ = state.grow_pg(pg, rng.below(2 * GIB));
@@ -261,9 +261,9 @@ fn prop_failure_recovery_keeps_invariants() {
             for pg in state.pgs() {
                 if pg.on(victim) {
                     prop_assert!(
-                        report.degraded.contains(&pg.id),
+                        report.degraded.contains(&pg.id()),
                         "pg {} on failed osd but not reported degraded",
-                        pg.id
+                        pg.id()
                     );
                 }
             }
@@ -295,8 +295,8 @@ fn prop_workload_write_bounds_conservation_and_determinism() {
     fn pool_raw(state: &ClusterState) -> BTreeMap<u32, u64> {
         let mut out = BTreeMap::new();
         for pg in state.pgs() {
-            *out.entry(pg.id.pool).or_insert(0) +=
-                pg.shard_bytes * pg.devices().count() as u64;
+            *out.entry(pg.id().pool).or_insert(0) +=
+                pg.shard_bytes() * pg.devices().count() as u64;
         }
         out
     }
@@ -388,9 +388,8 @@ fn prop_zipf_ranks_follow_pool_ids() {
     let state = ClusterState::build(b.build().unwrap(), pools, |_, _| GIB);
 
     let pool_raw = |s: &ClusterState, pool: u32| -> u64 {
-        s.pgs()
-            .filter(|p| p.id.pool == pool)
-            .map(|p| p.shard_bytes * p.devices().count() as u64)
+        s.pgs_of_pool(pool)
+            .map(|p| p.shard_bytes() * p.devices().count() as u64)
             .sum()
     };
     let mut s = state.clone();

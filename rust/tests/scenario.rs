@@ -87,9 +87,8 @@ fn compound_scenarios_change_topology_as_declared() {
     decom.run().unwrap();
     let scratch_bytes: u64 = decom
         .state
-        .pgs()
-        .filter(|p| p.id.pool == 50)
-        .map(|p| p.shard_bytes)
+        .pgs_of_pool(50)
+        .map(|p| p.shard_bytes())
         .sum();
     assert_eq!(scratch_bytes, 0, "decommissioned pool is empty");
 }
@@ -150,6 +149,81 @@ fn kitchen_sink_timeline_is_deterministic() {
     let b = run(77);
     assert_eq!(a, b, "same seed must replay bit-for-bit");
     assert!(a.2 > 0.0, "virtual time advanced");
+}
+
+/// Regression (RFC 0002): pools created *after* an expansion must keep
+/// the dense pool-rank table and the per-OSD shard matrix consistent.
+/// Expansion reassembles the state (ranks re-derived in pool-id order);
+/// `add_pool` appends a rank — including one that is out of pool-id
+/// order — and restrides the matrix, which must also cover the freshly
+/// added OSDs. The pre-columnar state built its per-OSD counts lazily
+/// per pool, so this interleaving was never layout-sensitive before.
+#[test]
+fn pool_created_after_expansion_keeps_dense_counts_consistent() {
+    use equilibrium::cluster::{add_hosts, HostSpec, Pool};
+
+    let mut s = clusters::demo(41); // pools {1, 2}
+    let new_osds = add_hosts(&mut s, &HostSpec::hdd(2, 2, 8 * TIB)).unwrap();
+    assert_eq!(new_osds.len(), 4);
+    // one pool above the existing ids, one wedged between them: the
+    // second append gives a rank order that differs from pool-id order
+    s.add_pool(Pool::replicated(7, "after-high", 3, 16, 0), |_| GIB).unwrap();
+    s.add_pool(Pool::replicated(3, "after-low", 3, 16, 0), |_| 2 * GIB).unwrap();
+    assert!(s.verify().is_empty(), "{:?}", s.verify());
+
+    // dense counts match a from-scratch recount for every pool,
+    // including on the expansion's OSDs
+    let recount = |s: &equilibrium::cluster::ClusterState, pool: u32, osd: u32| -> u32 {
+        s.pgs_of_pool(pool).filter(|pg| pg.on(osd)).count() as u32
+    };
+    for &pool in &[1u32, 2, 3, 7] {
+        for o in 0..s.osd_count() as u32 {
+            assert_eq!(
+                s.pool_shards_on(pool, o),
+                recount(&s, pool, o),
+                "pool {pool} count drift on osd.{o}"
+            );
+        }
+    }
+
+    // balancing across old and new pools keeps everything consistent
+    // and lands data on the expansion
+    let mut bal = Equilibrium::default();
+    let moves = bal.propose_batch(&mut s, 300);
+    assert!(!moves.is_empty());
+    assert!(s.verify().is_empty(), "{:?}", s.verify());
+    let landed: u64 = new_osds.iter().map(|&o| s.osd_used(o)).sum();
+    assert!(landed > 0, "rebalancing must use the new hosts");
+
+    // a dump round trip (ranks re-derived in id order) agrees with the
+    // live state, upmap table included
+    let loaded = equilibrium::cluster::dump::load(&equilibrium::cluster::dump::dump(&s)).unwrap();
+    assert_eq!(loaded.utilizations(), s.utilizations());
+    assert_eq!(loaded.upmap_table(), s.upmap_table());
+    for &pool in &[1u32, 2, 3, 7] {
+        for o in 0..s.osd_count() as u32 {
+            assert_eq!(loaded.pool_shards_on(pool, o), s.pool_shards_on(pool, o));
+        }
+    }
+
+    // the same interleaving through the scenario engine's events
+    let mut state = clusters::demo(43);
+    let mut bal = Equilibrium::default();
+    let mut engine =
+        ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::default(), 43);
+    engine
+        .apply(&ScenarioEvent::AddHosts { spec: HostSpec::hdd(1, 2, 8 * TIB) })
+        .unwrap();
+    engine
+        .apply(&ScenarioEvent::CreatePool {
+            pool: Pool::replicated(9, "post-expansion", 3, 16, 0),
+            user_bytes: 32 * GIB,
+        })
+        .unwrap();
+    engine.apply(&ScenarioEvent::BalanceRound { max_moves: 100 }).unwrap();
+    drop(engine);
+    assert!(state.verify().is_empty(), "{:?}", state.verify());
+    assert!(state.pool_shard_counts(9).is_some());
 }
 
 /// Scenario events that reference missing entities fail loudly instead
