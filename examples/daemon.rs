@@ -12,6 +12,7 @@
 
 use equilibrium::balancer::Equilibrium;
 use equilibrium::coordinator::{run_daemon, DaemonConfig, ExecutorConfig};
+use equilibrium::plan::PlanConfig;
 use equilibrium::simulator::WorkloadModel;
 use equilibrium::generator::clusters;
 use equilibrium::util::units::{fmt_bytes_f, fmt_duration, GIB, MIB};
@@ -33,6 +34,9 @@ fn main() {
         // adaptive backpressure: keep each round's backfill under ~20 min
         target_round_seconds: Some(20.0 * 60.0),
         executor: ExecutorConfig { max_backfills: 2, bandwidth: 200.0 * MIB as f64 },
+        // plan pipeline (RFC 0003): cancel redundant movement and run
+        // each round in failure-domain-capped phases
+        plan: PlanConfig::phased(),
         seed: 1,
     };
     let report = run_daemon(&mut state, &mut balancer, &cfg);
@@ -56,6 +60,11 @@ fn main() {
             r.variance_after,
         );
     }
+    println!(
+        "\nplan pipeline saved {} of physical movement across {} phases",
+        fmt_bytes_f(report.plan.saved_bytes() as f64),
+        report.plan.phases,
+    );
     println!(
         "\ntotal virtual time {} — planning cost is negligible next to transfer time,\n\
          which is the paper's argument for accepting Equilibrium's longer calculation times.",

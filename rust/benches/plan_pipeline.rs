@@ -1,0 +1,168 @@
+//! Plan pipeline benchmark (RFC 0003) — bytes-moved and makespan, raw
+//! vs optimized+phased, across the whole scenario library.
+//!
+//! For every library scenario the bench runs the timeline twice from
+//! the same seed — once executing raw plans, once through the pipeline
+//! (optimizer + failure-domain-phased scheduler) — and records per
+//! scenario: planned vs executed bytes, phase count, and total virtual
+//! time. Both runs must land on the identical final balance, and the
+//! pipeline must never execute more bytes than planned (asserted in
+//! every mode — the CI `plan-smoke` contract).
+//!
+//! A **churn** section adds the guaranteed-savings demonstration: a
+//! convergence plan whose tail is later reverted (the pool-decommission
+//! / post-failure re-leveling shape). The optimizer must cancel the
+//! round trips — strictly fewer bytes, strictly lower makespan.
+//!
+//! Everything lands in machine-readable **`BENCH_plan.json`** at the
+//! repo root. `--smoke` (CI quick mode) uses the reduced library; the
+//! full mode additionally gates on the acceptance criterion: at least
+//! 2 library scenarios with strictly fewer bytes AND strictly lower
+//! virtual time.
+
+use std::time::Instant;
+
+use equilibrium::balancer::{Balancer, Equilibrium};
+use equilibrium::cluster::Movement;
+use equilibrium::coordinator::execute_plan;
+use equilibrium::generator::clusters;
+use equilibrium::plan::{optimize_plan, schedule_plan, PlanConfig, ScheduleConfig};
+use equilibrium::scenario::{library, ScenarioOutcome, ALL};
+use equilibrium::util::json::Json;
+use equilibrium::util::units::{fmt_bytes, fmt_bytes_f, fmt_duration};
+
+fn run_scenario(name: &str, reduced: bool, plan: PlanConfig) -> (f64, ScenarioOutcome) {
+    let mut case = library::by_name(name, 0, reduced).expect("library scenario");
+    case.config.plan = plan;
+    let out = case.run().unwrap_or_else(|e| panic!("{name}: {e}"));
+    let problems = case.state.verify();
+    assert!(problems.is_empty(), "{name}: {problems:?}");
+    (case.state.utilization_variance(), out)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let reduced = smoke;
+    println!(
+        "plan pipeline bench — optimizer + phased scheduler (RFC 0003); {} library",
+        if reduced { "reduced" } else { "full-size" }
+    );
+
+    // ---- scenario library: raw vs optimized+phased ----------------------
+    let mut rows: Vec<Json> = Vec::new();
+    let mut strict = 0usize;
+    for name in ALL {
+        let (var_raw, raw) = run_scenario(name, reduced, PlanConfig::default());
+        let (var_opt, opt) = run_scenario(name, reduced, PlanConfig::phased());
+        assert_eq!(
+            var_raw, var_opt,
+            "{name}: the pipeline must reach the raw plan's final variance"
+        );
+        assert!(
+            opt.plan.bytes <= opt.plan.raw_bytes,
+            "{name}: executed {} > planned {}",
+            opt.plan.bytes,
+            opt.plan.raw_bytes
+        );
+        assert_eq!(opt.plan.fallbacks, 0, "{name}: optimizer fell back");
+        let is_strict = opt.plan.bytes < opt.plan.raw_bytes && opt.elapsed < raw.elapsed;
+        strict += is_strict as usize;
+        println!(
+            "  {name:<28} {} planned -> {} executed ({} saved), {:>3} phases, vtime {} -> {}{}",
+            fmt_bytes(opt.plan.raw_bytes),
+            fmt_bytes(opt.plan.bytes),
+            fmt_bytes(opt.plan.saved_bytes()),
+            opt.plan.phases,
+            fmt_duration(raw.elapsed),
+            fmt_duration(opt.elapsed),
+            if is_strict { "  [strict win]" } else { "" },
+        );
+        rows.push(
+            Json::obj()
+                .set("name", name)
+                .set("raw_bytes", opt.plan.raw_bytes)
+                .set("executed_bytes", opt.plan.bytes)
+                .set("saved_bytes", opt.plan.saved_bytes())
+                .set("raw_moves", opt.plan.raw_moves)
+                .set("executed_moves", opt.plan.moves)
+                .set("phases", opt.plan.phases)
+                .set("rounds", opt.plan.rounds)
+                .set("elapsed_raw_seconds", raw.elapsed)
+                .set("elapsed_piped_seconds", opt.elapsed)
+                .set("strict_win", is_strict),
+        );
+    }
+
+    // ---- churn: guaranteed round-trip cancellation ----------------------
+    // converge, then revert the last three quarters — the shape of
+    // decommission / re-level churn. Savings are structural here.
+    let initial = clusters::demo(7);
+    let mut state = initial.clone();
+    let mut bal = Equilibrium::default();
+    let forward = bal.propose_batch(&mut state, 10_000);
+    let keep = forward.len() / 4;
+    let mut raw_plan: Vec<Movement> = forward.clone();
+    for m in forward[keep..].iter().rev() {
+        raw_plan.push(state.apply_movement(m.pg, m.to, m.from).unwrap());
+    }
+    let sched = ScheduleConfig { max_backfills_per_domain: 8, ..ScheduleConfig::default() };
+    let n = initial.osd_count();
+
+    let t0 = Instant::now();
+    let opt = optimize_plan(&initial, &raw_plan);
+    let optimize_seconds = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let phased = schedule_plan(&initial, &opt.movements, &sched);
+    let schedule_seconds = t1.elapsed().as_secs_f64();
+
+    let raw_makespan = execute_plan(&raw_plan, &sched.executor, n).makespan;
+    let phased_makespan = phased.makespan(&sched.executor, n);
+    assert!(opt.stats.bytes < opt.stats.raw_bytes, "churn must cancel bytes");
+    assert!(phased_makespan < raw_makespan, "churn must cut the makespan");
+    println!(
+        "\nchurn: {} raw -> {} executed, makespan {} -> {} ({} phases); optimize {} / schedule {}",
+        fmt_bytes(opt.stats.raw_bytes),
+        fmt_bytes(opt.stats.bytes),
+        fmt_duration(raw_makespan),
+        fmt_duration(phased_makespan),
+        phased.phases.len(),
+        fmt_duration(optimize_seconds),
+        fmt_duration(schedule_seconds),
+    );
+
+    let doc = Json::obj()
+        .set("bench", "plan_pipeline")
+        .set("smoke", smoke)
+        .set("scenarios", Json::Arr(rows))
+        .set("strict_wins", strict)
+        .set(
+            "churn",
+            Json::obj()
+                .set("raw_bytes", opt.stats.raw_bytes)
+                .set("executed_bytes", opt.stats.bytes)
+                .set("raw_makespan_seconds", raw_makespan)
+                .set("phased_makespan_seconds", phased_makespan)
+                .set("phases", phased.phases.len())
+                .set("optimize_seconds", optimize_seconds)
+                .set("schedule_seconds", schedule_seconds),
+        );
+    std::fs::write("BENCH_plan.json", doc.pretty()).expect("write BENCH_plan.json");
+    let library_saved: u64 = doc
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .map(|rows| rows.iter().filter_map(|r| r.get_u64("saved_bytes")).sum())
+        .unwrap_or(0);
+    println!("\nwrote BENCH_plan.json ({} of library movement saved)", fmt_bytes_f(library_saved as f64));
+
+    if smoke {
+        println!("smoke mode: acceptance gate skipped (reduced library)");
+    } else {
+        assert!(
+            strict >= 2,
+            "RFC 0003 gate: at least 2 library scenarios must show strictly fewer \
+             bytes AND strictly lower virtual time (got {strict})"
+        );
+        println!("gate passed: {strict} scenarios with strict byte + makespan wins");
+    }
+}

@@ -6,9 +6,9 @@
 //! balancer's product is not applied state but a command sequence (paper
 //! §3.1: "The output is a series of movement instructions").
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-use crate::cluster::{ClusterState, Movement, PgId};
+use crate::cluster::{ClusterState, Movement, PgId, StateError};
 use crate::crush::OsdId;
 
 /// Render one movement as a `ceph` CLI command. Ceph's upmap interface
@@ -25,17 +25,27 @@ pub fn render_pg_upmap(pg: PgId, items: &[(OsdId, OsdId)]) -> String {
 /// Render a whole plan against a starting state: applies each movement
 /// to a scratch copy to keep the accumulated upmap items per PG correct,
 /// emitting one command per movement (exactly what an operator pipes to
-/// `bash` step by step).
-pub fn render_plan(initial: &ClusterState, plan: &[Movement]) -> Vec<String> {
+/// `bash` step by step). Errors with the first offending movement's
+/// [`StateError`] if the plan is not applicable to `initial` — a stale
+/// plan must surface to the operator, not take the process down.
+pub fn render_plan(initial: &ClusterState, plan: &[Movement]) -> Result<Vec<String>, StateError> {
     let mut state = initial.clone();
+    render_plan_into(&mut state, plan)
+}
+
+/// [`render_plan`] continuing from a live scratch state, which advances
+/// under the plan. The plan pipeline renders one phase at a time against
+/// a single evolving state ([`crate::plan::PhasedPlan::render_scripts`]).
+pub fn render_plan_into(
+    state: &mut ClusterState,
+    plan: &[Movement],
+) -> Result<Vec<String>, StateError> {
     let mut out = Vec::with_capacity(plan.len());
     for m in plan {
-        state
-            .apply_movement(m.pg, m.from, m.to)
-            .expect("plan must be applicable to the initial state");
+        state.apply_movement(m.pg, m.from, m.to)?;
         out.push(render_pg_upmap(m.pg, state.upmap_items(m.pg)));
     }
-    out
+    Ok(out)
 }
 
 /// Parse errors for upmap scripts (payload = 1-based line number).
@@ -49,6 +59,10 @@ pub enum ScriptError {
     OddPairs(usize),
     /// An OSD id failed to parse.
     BadOsd(usize),
+    /// A `pg-upmap-items` line carried no pairs at all (`ceph` rejects
+    /// this too — an empty exception list is spelled `rm-pg-upmap-items`,
+    /// which is exactly what [`render_pg_upmap`] emits).
+    EmptyItems(usize),
 }
 
 impl std::fmt::Display for ScriptError {
@@ -58,6 +72,9 @@ impl std::fmt::Display for ScriptError {
             ScriptError::BadPgId(line) => write!(f, "line {line}: malformed pg id"),
             ScriptError::OddPairs(line) => write!(f, "line {line}: odd number of osd ids"),
             ScriptError::BadOsd(line) => write!(f, "line {line}: malformed osd id"),
+            ScriptError::EmptyItems(line) => {
+                write!(f, "line {line}: pg-upmap-items without pairs (use rm-pg-upmap-items)")
+            }
         }
     }
 }
@@ -81,6 +98,12 @@ pub fn parse_script(text: &str) -> Result<UpmapTable, ScriptError> {
         if words.len() >= 4 && words[..3] == ["ceph", "osd", "pg-upmap-items"] {
             let pg = parse_pgid(words[3]).ok_or(ScriptError::BadPgId(no + 1))?;
             let rest = &words[4..];
+            if rest.is_empty() {
+                // render/parse asymmetry guard: the renderer never emits
+                // a pair-less pg-upmap-items line (empty = rm); silently
+                // inserting an empty entry here would corrupt round trips
+                return Err(ScriptError::EmptyItems(no + 1));
+            }
             if rest.len() % 2 != 0 {
                 return Err(ScriptError::OddPairs(no + 1));
             }
@@ -106,6 +129,54 @@ fn parse_pgid(s: &str) -> Option<PgId> {
     Some(PgId::new(pool.parse().ok()?, u32::from_str_radix(idx, 16).ok()?))
 }
 
+/// Reconstruct the net movement plan that turns `initial`'s exception
+/// table into `table` — the inverse of rendering an (optimized) plan
+/// and parsing it back. For every raw CRUSH slot the tables disagree
+/// on, the shard's current location (per `initial`) must move to the
+/// target location (per `table`); slots absent from a table sit on
+/// their raw device. Errors on PGs the cluster does not have.
+///
+/// The result is a *net* plan — one movement per relocated slot — in
+/// canonical order (ascending PG, `initial`'s item order first, then
+/// new raw slots in `table` order). It is the same set of moves an
+/// optimizer pass over any plan producing `table` would emit, which is
+/// what makes `parse(render(optimize(plan)))` round-trippable
+/// (`rust/tests/plan_props.rs` pins this). The canonical order is not
+/// necessarily an executable sequence: net moves of one PG can depend
+/// on each other (a slot must vacate a device before a sibling slot
+/// lands on it) — executors apply with deferral, as
+/// [`crate::plan::optimize_plan`]'s replay does.
+pub fn diff_plan(initial: &ClusterState, table: &UpmapTable) -> Result<Vec<Movement>, StateError> {
+    let current = initial.upmap_table();
+    let pgs: BTreeSet<PgId> = current.keys().chain(table.keys()).copied().collect();
+    let mut out = Vec::new();
+    for pg in pgs {
+        let view = initial.pg(pg).ok_or(StateError::UnknownPg(pg))?;
+        let bytes = view.shard_bytes();
+        let cur = current.get(&pg).map(Vec::as_slice).unwrap_or(&[]);
+        let tgt = table.get(&pg).map(Vec::as_slice).unwrap_or(&[]);
+        let lookup = |items: &[(OsdId, OsdId)], raw: OsdId| {
+            items.iter().find(|(r, _)| *r == raw).map(|(_, t)| *t).unwrap_or(raw)
+        };
+        // raw slots in deterministic order: current items, then targets
+        // introducing raw slots the current table does not mention
+        let mut raws: Vec<OsdId> = cur.iter().map(|(r, _)| *r).collect();
+        for (r, _) in tgt {
+            if !raws.contains(r) {
+                raws.push(*r);
+            }
+        }
+        for raw in raws {
+            let from = lookup(cur, raw);
+            let to = lookup(tgt, raw);
+            if from != to {
+                out.push(Movement { pg, from, to, bytes });
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,7 +191,7 @@ mod tests {
         let plan = run_to_convergence(&mut bal, &mut state, 10_000);
         assert!(!plan.is_empty());
 
-        let script = render_plan(&initial, &plan).join("\n");
+        let script = render_plan(&initial, &plan).unwrap().join("\n");
         let table = parse_script(&script).unwrap();
 
         // the parsed table equals the final state's exception table
@@ -128,6 +199,118 @@ mod tests {
         for (pg, items) in &table {
             assert_eq!(state.upmap_items(*pg), items.as_slice(), "pg {pg}");
         }
+
+        // ... and the table diffs back into a net plan that reaches the
+        // same final state from the same initial state (net moves of one
+        // PG may need sequencing — apply with deferral, like the
+        // optimizer's replay does)
+        let net = diff_plan(&initial, &table).unwrap();
+        assert!(net.len() <= plan.len());
+        let mut replay = initial.clone();
+        let mut pending = net;
+        while !pending.is_empty() {
+            let before = pending.len();
+            pending.retain(|m| replay.apply_movement(m.pg, m.from, m.to).is_err());
+            assert!(pending.len() < before, "net plan must be applicable");
+        }
+        assert_eq!(replay.upmap_table(), state.upmap_table());
+    }
+
+    /// A stale plan (initial state does not match) must surface a typed
+    /// error — this used to be an `expect` panic deep in the renderer.
+    #[test]
+    fn render_plan_on_stale_state_errors() {
+        let initial = clusters::demo(21);
+        let mut state = initial.clone();
+        let mut bal = Equilibrium::default();
+        let plan = run_to_convergence(&mut bal, &mut state, 10);
+        assert!(!plan.is_empty());
+        // rendering against the POST-plan state: move 0's source no
+        // longer holds the shard
+        let err = render_plan(&state, &plan);
+        assert!(
+            matches!(err, Err(crate::cluster::StateError::NotOnSource { .. })),
+            "stale plan must error, got {err:?}"
+        );
+        // rendering against a cluster that lacks the PG entirely
+        let ghost = Movement { pg: PgId::new(99, 0), from: 0, to: 1, bytes: 1 };
+        assert!(matches!(
+            render_plan(&initial, &[ghost]),
+            Err(crate::cluster::StateError::UnknownPg(_))
+        ));
+    }
+
+    /// Multi-slot PGs: two movements of one PG accumulate two upmap
+    /// pairs on a single script line, and the diff recovers both moves.
+    #[test]
+    fn multi_item_pg_round_trips() {
+        let initial = clusters::demo(5);
+        let mut state = initial.clone();
+        let pg = state.pgs().next().unwrap().id();
+        let devices: Vec<OsdId> = state.pg(pg).unwrap().devices().collect();
+        let free: Vec<OsdId> = (0..state.osd_count() as OsdId)
+            .filter(|o| {
+                !devices.contains(o)
+                    && state.check_movement(pg, devices[0], *o).is_ok()
+                    && state.check_movement(pg, devices[1], *o).is_ok()
+            })
+            .collect();
+        assert!(free.len() >= 2, "demo cluster must offer two free devices");
+        let m1 = state.apply_movement(pg, devices[0], free[0]).unwrap();
+        let m2 = state.apply_movement(pg, devices[1], free[1]).unwrap();
+        assert_eq!(state.upmap_items(pg).len(), 2, "two accumulated pairs");
+
+        let script = render_plan(&initial, &[m1, m2]).unwrap().join("\n");
+        assert!(script.lines().last().unwrap().contains("pg-upmap-items"));
+        let table = parse_script(&script).unwrap();
+        assert_eq!(table[&pg].len(), 2);
+        let net = diff_plan(&initial, &table).unwrap();
+        let mut got: Vec<_> = net.iter().map(|m| (m.from, m.to)).collect();
+        got.sort();
+        let mut want = vec![(m1.from, m1.to), (m2.from, m2.to)];
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    /// An entry removal (shard moved back to its raw device) renders as
+    /// `rm-pg-upmap-items` and diffs into the restoring movement.
+    #[test]
+    fn removal_lines_round_trip() {
+        let initial = clusters::demo(9);
+        let mut state = initial.clone();
+        let pg = state.pgs().next().unwrap().id();
+        let a = state.pg(pg).unwrap().devices().next().unwrap();
+        let b = (0..state.osd_count() as OsdId)
+            .find(|&o| state.check_movement(pg, a, o).is_ok())
+            .unwrap();
+        let m1 = state.apply_movement(pg, a, b).unwrap();
+        let m2 = state.apply_movement(pg, b, a).unwrap();
+        assert_eq!(state.upmap_items(pg), &[] as &[(OsdId, OsdId)]);
+
+        let script = render_plan(&initial, &[m1, m2]).unwrap();
+        assert!(script[1].starts_with("ceph osd rm-pg-upmap-items"));
+        let table = parse_script(&script.join("\n")).unwrap();
+        assert!(!table.contains_key(&pg));
+        // no net difference → empty net plan
+        assert!(diff_plan(&initial, &table).unwrap().is_empty());
+
+        // but diffing from MID-plan state recovers the restoring move
+        let mut mid = initial.clone();
+        mid.apply_movement(pg, a, b).unwrap();
+        let net = diff_plan(&mid, &table).unwrap();
+        assert_eq!(net.len(), 1);
+        assert_eq!((net[0].from, net[0].to), (b, a));
+    }
+
+    #[test]
+    fn diff_plan_rejects_unknown_pgs() {
+        let initial = clusters::demo(11);
+        let mut table = UpmapTable::new();
+        table.insert(PgId::new(42, 0), vec![(0, 1)]);
+        assert!(matches!(
+            diff_plan(&initial, &table),
+            Err(crate::cluster::StateError::UnknownPg(_))
+        ));
     }
 
     #[test]
@@ -169,6 +352,12 @@ mod tests {
         assert_eq!(
             parse_script("ceph osd pg-upmap-items 1.1 1 x"),
             Err(ScriptError::BadOsd(1))
+        );
+        // pair-less pg-upmap-items used to sneak an empty entry into the
+        // table (render/parse asymmetry); it is now rejected outright
+        assert_eq!(
+            parse_script("ceph osd pg-upmap-items 1.1"),
+            Err(ScriptError::EmptyItems(1))
         );
     }
 }

@@ -15,6 +15,7 @@
 
 use crate::balancer::Balancer;
 use crate::cluster::ClusterState;
+use crate::plan::{PlanConfig, PlanReport};
 use crate::scenario::{ScenarioConfig, ScenarioEngine, ScenarioEvent};
 use crate::simulator::workload::WorkloadModel;
 
@@ -38,6 +39,9 @@ pub struct DaemonConfig {
     pub target_round_seconds: Option<f64>,
     /// Executor limits.
     pub executor: ExecutorConfig,
+    /// Movement plan pipeline (RFC 0003): optimize each round's plan
+    /// and/or execute it in concurrency-capped phases. Off by default.
+    pub plan: PlanConfig,
     /// Workload seed.
     pub seed: u64,
 }
@@ -51,6 +55,7 @@ impl Default for DaemonConfig {
             workload: WorkloadModel::Uniform,
             target_round_seconds: None,
             executor: ExecutorConfig::default(),
+            plan: PlanConfig::default(),
             seed: 0xDAE_0001,
         }
     }
@@ -63,6 +68,11 @@ pub struct RoundReport {
     pub written_user_bytes: u64,
     pub planned_moves: usize,
     pub moved_bytes: u64,
+    /// Bytes physically executed — less than `moved_bytes` when the
+    /// plan pipeline cancelled redundant movement.
+    pub executed_bytes: u64,
+    /// Phases the round executed in (1 without a scheduler).
+    pub phases: usize,
     /// Executor makespan of this round's plan, seconds (virtual).
     pub makespan: f64,
     pub variance_after: f64,
@@ -75,6 +85,8 @@ pub struct RoundReport {
 pub struct DaemonReport {
     pub rounds: Vec<RoundReport>,
     pub log: EventLog,
+    /// Aggregated plan-pipeline effect (zeros when disabled).
+    pub plan: PlanReport,
     /// Total virtual time elapsed, seconds.
     pub elapsed: f64,
 }
@@ -105,6 +117,7 @@ pub fn run_daemon(
             // the time series — skip sample capture entirely
             sample_every: usize::MAX,
             record_series: false,
+            plan: cfg.plan.clone(),
         },
         cfg.seed,
     );
@@ -128,6 +141,8 @@ pub fn run_daemon(
             written_user_bytes: writes.written_bytes,
             planned_moves: plan.planned_moves,
             moved_bytes: plan.moved_bytes,
+            executed_bytes: plan.executed_bytes,
+            phases: plan.phases,
             makespan: plan.makespan,
             variance_after: engine.state().utilization_variance(),
             total_avail_after: engine.state().total_max_avail(true),
@@ -140,7 +155,7 @@ pub fn run_daemon(
     }
 
     let out = engine.finish();
-    DaemonReport { rounds, log: out.log, elapsed: out.elapsed }
+    DaemonReport { rounds, log: out.log, plan: out.plan, elapsed: out.elapsed }
 }
 
 #[cfg(test)]
@@ -198,6 +213,40 @@ mod tests {
             assert!(report.elapsed > 0.0);
         }
         assert!(s.verify().is_empty());
+    }
+
+    /// With the plan pipeline on, every round executes at most the raw
+    /// plan's bytes, in at least one phase, and the daemon converges to
+    /// the same balance as without the pipeline.
+    #[test]
+    fn daemon_with_plan_pipeline_matches_raw_balance() {
+        let initial = cluster();
+
+        let mut s_raw = initial.clone();
+        let mut b_raw = Equilibrium::default();
+        let raw = run_daemon(&mut s_raw, &mut b_raw, &DaemonConfig::default());
+
+        let mut s_opt = initial;
+        let mut b_opt = Equilibrium::default();
+        let cfg = DaemonConfig { plan: crate::plan::PlanConfig::phased(), ..Default::default() };
+        let opt = run_daemon(&mut s_opt, &mut b_opt, &cfg);
+
+        // identical planning streams → identical final cluster
+        assert_eq!(s_raw.utilizations(), s_opt.utilizations());
+        assert_eq!(raw.rounds.len(), opt.rounds.len());
+        for (a, b) in raw.rounds.iter().zip(&opt.rounds) {
+            assert_eq!(a.planned_moves, b.planned_moves);
+            assert!(b.executed_bytes <= b.moved_bytes);
+            if b.planned_moves > 0 {
+                assert!(b.phases >= 1);
+            }
+        }
+        assert_eq!(opt.plan.rounds, opt.rounds.len());
+        assert!(opt.plan.bytes <= opt.plan.raw_bytes);
+        assert_eq!(opt.plan.fallbacks, 0, "balancer plans never fall back");
+        assert!(s_opt.verify().is_empty());
+        // the raw daemon does not engage the pipeline
+        assert_eq!(raw.plan.rounds, 0);
     }
 
     #[test]

@@ -12,6 +12,11 @@ pub enum Event {
     RoundStarted { round: usize },
     WritesApplied { round: usize, user_bytes: u64 },
     PlanComputed { round: usize, moves: usize, bytes: u64, calc_seconds: f64 },
+    /// The plan pipeline (RFC 0003) rewrote a round's raw plan into its
+    /// minimal equivalent before execution.
+    PlanOptimized { round: usize, raw_moves: usize, moves: usize, raw_bytes: u64, bytes: u64 },
+    /// One concurrency-capped phase of a scheduled plan was executed.
+    PhaseExecuted { round: usize, phase: usize, moves: usize, makespan: f64 },
     PlanExecuted { round: usize, makespan: f64, peak_concurrency: usize },
     Converged { round: usize },
     /// A device failed; its shards were re-placed (`backfills` of them,
@@ -73,6 +78,16 @@ impl EventLog {
                     "round {round}: planned {moves} moves ({}) in {}",
                     fmt_bytes(*bytes),
                     fmt_duration(*calc_seconds)
+                ),
+                Event::PlanOptimized { round, raw_moves, moves, raw_bytes, bytes } => format!(
+                    "round {round}: plan optimized {raw_moves} -> {moves} moves ({} -> {})",
+                    fmt_bytes(*raw_bytes),
+                    fmt_bytes(*bytes)
+                ),
+                Event::PhaseExecuted { round, phase, moves, makespan } => format!(
+                    "round {round}: phase {} executed {moves} moves in {}",
+                    phase + 1,
+                    fmt_duration(*makespan)
                 ),
                 Event::PlanExecuted { round, makespan, peak_concurrency } => format!(
                     "round {round}: plan executed in {} (peak {} concurrent backfills)",
@@ -136,11 +151,18 @@ mod tests {
         );
         log.push(60.0, Event::PlanExecuted { round: 1, makespan: 58.0, peak_concurrency: 3 });
         log.push(61.0, Event::Converged { round: 1 });
+        log.push(
+            62.0,
+            Event::PlanOptimized { round: 2, raw_moves: 9, moves: 6, raw_bytes: 9 << 30, bytes: 6 << 30 },
+        );
+        log.push(63.0, Event::PhaseExecuted { round: 2, phase: 0, moves: 3, makespan: 30.0 });
         let text = log.render();
-        assert_eq!(text.lines().count(), 5);
+        assert_eq!(text.lines().count(), 7);
         assert!(text.contains("planned 5 moves"));
         assert!(text.contains("converged"));
-        assert_eq!(log.len(), 5);
+        assert!(text.contains("plan optimized 9 -> 6 moves"));
+        assert!(text.contains("phase 1 executed 3 moves"));
+        assert_eq!(log.len(), 7);
         assert!(!log.is_empty());
     }
 

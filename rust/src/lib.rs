@@ -17,6 +17,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod crush;
 pub mod generator;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod scenario;

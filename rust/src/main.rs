@@ -21,7 +21,9 @@ use equilibrium::app_err;
 use equilibrium::balancer::{Balancer, EquilibriumConfig, MgrBalancer};
 use equilibrium::cluster::dump;
 use equilibrium::coordinator::{run_daemon, DaemonConfig, ExecutorConfig};
+use equilibrium::crush::Level;
 use equilibrium::generator::clusters;
+use equilibrium::plan::{schedule_plan, PlanConfig, ScheduleConfig};
 use equilibrium::report::{self, Scoring};
 use equilibrium::runtime::Runtime;
 use equilibrium::simulator::{simulate, SimOptions};
@@ -65,13 +67,15 @@ fn usage() -> String {
      Subcommands:\n\
      \x20 generate      --cluster <a..f|demo> [--seed N] [--out FILE]\n\
      \x20 balance       --state FILE [--balancer equilibrium|mgr] [--scoring native|xla]\n\
-     \x20                [--max-moves N] [--k N] [--out FILE]\n\
+     \x20                [--max-moves N] [--k N] [--out FILE] [--optimize] [--phases]\n\
+     \x20                [--max-backfills N] [--domain-level L] [--domain-backfills N]\n\
      \x20 simulate      --cluster <a..f|demo> [--seed N] [--scoring S] [--max-moves N]\n\
-     \x20 report        <table1|fig4|fig5|fig6|ablate-k|ablate-count> [--clusters a,b,..]\n\
+     \x20 report        <table1|fig4|fig5|fig6|plan|ablate-k|ablate-count> [--clusters a,b,..]\n\
      \x20                [--scoring S] [--seed N] [--out-dir DIR]\n\
      \x20 daemon        --cluster <a..f|demo> [--rounds N] [--write-gib X] [--moves-per-round N]\n\
+     \x20                [--optimize] [--phases]\n\
      \x20 scenario      list | run [--name NAME | --all] [--seed N] [--reduced]\n\
-     \x20                [--out-dir DIR] [--quiet]\n\
+     \x20                [--out-dir DIR] [--quiet] [--optimize] [--phases]\n\
      \x20 df            --cluster <a..f|demo> | --state FILE   (ceph-df-style report)\n\
      \x20 crush         --cluster <a..f|demo> | --state FILE [--tree]  (decompile CRUSH map)\n\
      \x20 runtime-info\n"
@@ -84,6 +88,38 @@ fn scoring_from(args: &equilibrium::util::cli::Args) -> AppResult<Scoring> {
         "xla" => Ok(Scoring::Xla),
         other => Err(app_err!("unknown scoring backend '{other}' (native|xla)")),
     }
+}
+
+fn level_from(name: &str) -> AppResult<Level> {
+    match name {
+        "osd" => Ok(Level::Osd),
+        "host" => Ok(Level::Host),
+        "rack" => Ok(Level::Rack),
+        "row" => Ok(Level::Row),
+        "datacenter" => Ok(Level::Datacenter),
+        "root" => Ok(Level::Root),
+        other => Err(app_err!("unknown failure-domain level '{other}' (osd|host|rack|row|datacenter|root)")),
+    }
+}
+
+/// Build the plan pipeline config from the shared `--optimize` /
+/// `--phases` (+ scheduler tuning) flags.
+fn plan_config_from(a: &equilibrium::util::cli::Args) -> AppResult<PlanConfig> {
+    let schedule = if a.flag("phases") {
+        let osd_cap = a.get_u64("max-backfills")?.unwrap_or(1) as usize;
+        Some(ScheduleConfig {
+            max_backfills_per_osd: osd_cap,
+            domain_level: level_from(a.get_or("domain-level", "host"))?,
+            max_backfills_per_domain: a.get_u64("domain-backfills")?.unwrap_or(2) as usize,
+            // the makespan-estimate model must simulate the same per-OSD
+            // concurrency the phases were packed for
+            executor: ExecutorConfig { max_backfills: osd_cap, ..ExecutorConfig::default() },
+            ..ScheduleConfig::default()
+        })
+    } else {
+        None
+    };
+    Ok(PlanConfig { optimize: a.flag("optimize") || schedule.is_some(), schedule })
 }
 
 fn load_cluster(name: &str, seed: u64) -> AppResult<equilibrium::cluster::ClusterState> {
@@ -123,6 +159,11 @@ fn cmd_balance(argv: &[String]) -> AppResult {
         .opt_default("k", "N", "25", "equilibrium: sources to try")
         .opt("out", "FILE", "write the resulting state dump here")
         .opt("upmap-script", "FILE", "write `ceph osd pg-upmap-items` commands here")
+        .flag("optimize", "coalesce the plan to its minimal equivalent (RFC 0003)")
+        .flag("phases", "schedule into concurrency-capped phases (implies --optimize)")
+        .opt_default("max-backfills", "N", "1", "phases: concurrent transfers per OSD")
+        .opt_default("domain-level", "LEVEL", "host", "phases: failure-domain level")
+        .opt_default("domain-backfills", "N", "2", "phases: concurrent transfers per domain")
         .flag("quiet", "suppress per-move output");
     let a = cli.parse(argv.iter())?;
     let path = a
@@ -140,15 +181,20 @@ fn cmd_balance(argv: &[String]) -> AppResult {
         other => return Err(app_err!("unknown balancer '{other}'")),
     };
 
+    let plan_cfg = plan_config_from(&a)?;
     let opts = SimOptions {
         max_moves: a.get_u64("max-moves")?.unwrap_or(10_000) as usize,
         sample_every: usize::MAX, // only endpoints needed
+        plan: plan_cfg.clone(),
     };
     let before_avail = state.total_max_avail(false);
     let before_var = state.utilization_variance();
     let res = simulate(balancer.as_mut(), &mut state, &opts);
+    // the plan to ship: minimal when the pipeline ran, raw otherwise
+    let final_plan: &[equilibrium::cluster::Movement] =
+        res.optimized.as_deref().unwrap_or(&res.movements);
     if !a.flag("quiet") {
-        for m in &res.movements {
+        for m in final_plan {
             println!("{m}");
         }
     }
@@ -162,13 +208,42 @@ fn cmd_balance(argv: &[String]) -> AppResult {
         state.utilization_variance(),
         fmt_duration(res.total_calc_seconds),
     );
+    if plan_cfg.optimize {
+        eprintln!(
+            "optimized: {} -> {} moves, {} -> {} to move ({} saved)",
+            res.plan.raw_moves,
+            res.plan.moves,
+            fmt_bytes_f(res.plan.raw_bytes as f64),
+            fmt_bytes_f(res.plan.bytes as f64),
+            fmt_bytes_f(res.plan.saved_bytes() as f64),
+        );
+    }
+    let phased = plan_cfg
+        .schedule
+        .as_ref()
+        .map(|sched| schedule_plan(&initial, final_plan, sched));
+    if let (Some(phased), Some(sched)) = (&phased, &plan_cfg.schedule) {
+        eprintln!(
+            "scheduled: {} phases, estimated makespan {}",
+            phased.phases.len(),
+            fmt_duration(phased.makespan(&sched.executor, initial.osd_count())),
+        );
+    }
     if let Some(out) = a.get("out") {
         std::fs::write(out, dump::dump(&state))?;
         eprintln!("wrote {out}");
     }
     if let Some(path) = a.get("upmap-script") {
-        let script =
-            equilibrium::balancer::upmap_script::render_plan(&initial, &res.movements).join("\n");
+        let script = match &phased {
+            // one block per phase: apply, wait for HEALTH_OK, continue
+            Some(phased) => phased
+                .render_scripts(&initial)
+                .map_err(|e| app_err!("plan not applicable: {e}"))?
+                .join("\n\n"),
+            None => equilibrium::balancer::upmap_script::render_plan(&initial, final_plan)
+                .map_err(|e| app_err!("plan not applicable: {e}"))?
+                .join("\n"),
+        };
         std::fs::write(path, script + "\n")?;
         eprintln!("wrote {path}");
     }
@@ -228,6 +303,7 @@ fn cmd_simulate(argv: &[String]) -> AppResult {
     let opts = SimOptions {
         max_moves: a.get_u64("max-moves")?.unwrap_or(10_000) as usize,
         sample_every: usize::MAX,
+        ..SimOptions::default()
     };
     let scoring = scoring_from(&a)?;
     let (mgr, eq) = equilibrium::simulator::compare(
@@ -255,7 +331,7 @@ fn cmd_simulate(argv: &[String]) -> AppResult {
 fn cmd_report(argv: &[String]) -> AppResult {
     let Some((which, rest)) = argv.split_first() else {
         return Err(app_err!(
-            "report requires an artifact: table1|fig4|fig5|fig6|ablate-k|ablate-count"
+            "report requires an artifact: table1|fig4|fig5|fig6|plan|ablate-k|ablate-count"
         ));
     };
     let cli = Cli::new("equilibrium report", "regenerate paper tables/figures")
@@ -272,6 +348,7 @@ fn cmd_report(argv: &[String]) -> AppResult {
     let opts = SimOptions {
         max_moves: a.get_u64("max-moves")?.unwrap_or(10_000) as usize,
         sample_every: usize::MAX,
+        ..SimOptions::default()
     };
 
     match which.as_str() {
@@ -303,6 +380,12 @@ fn cmd_report(argv: &[String]) -> AppResult {
             report::figure6(&out_dir, seed, scoring)?;
             println!("fig6 CSVs written to {}", out_dir.display());
         }
+        "plan" => {
+            let names: Vec<&str> = a.get_or("clusters", "a,b,c,d,e,f").split(',').collect();
+            let t = report::plan_table(&names, seed, scoring, &opts, &ScheduleConfig::default());
+            println!("Plan pipeline — bytes moved and makespan, raw vs optimized+phased");
+            println!("{}", t.render());
+        }
         "ablate-k" => {
             let t = report::ablate_k(a.get_or("cluster", "a"), seed, &[1, 5, 25, 100], scoring);
             println!("k ablation on cluster {}:", a.get_or("cluster", "a"));
@@ -327,6 +410,10 @@ fn cmd_daemon(argv: &[String]) -> AppResult {
         .opt_default("write-gib", "X", "0", "client writes per round (GiB)")
         .opt_default("max-backfills", "N", "1", "concurrent transfers per OSD")
         .opt("target-round-seconds", "T", "adaptive movement budget targeting T s/round")
+        .flag("optimize", "coalesce each round's plan before execution (RFC 0003)")
+        .flag("phases", "execute each round in failure-domain-capped phases (implies --optimize)")
+        .opt_default("domain-level", "LEVEL", "host", "phases: failure-domain level")
+        .opt_default("domain-backfills", "N", "2", "phases: concurrent transfers per domain")
         .opt_default("scoring", "BACKEND", "native", "native|xla");
     let a = cli.parse(argv.iter())?;
     let seed = a.get_u64("seed")?.unwrap_or(0);
@@ -342,6 +429,7 @@ fn cmd_daemon(argv: &[String]) -> AppResult {
             max_backfills: a.get_u64("max-backfills")?.unwrap_or(1) as usize,
             ..Default::default()
         },
+        plan: plan_config_from(&a)?,
         seed: seed ^ 0xDAEE,
     };
     let report = run_daemon(&mut state, balancer.as_mut(), &cfg);
@@ -357,6 +445,16 @@ fn cmd_daemon(argv: &[String]) -> AppResult {
             fmt_duration(r.makespan),
             r.variance_after,
             to_tib_f(r.total_avail_after),
+        );
+    }
+    if cfg.plan.enabled() {
+        println!(
+            "plan pipeline: {} planned -> {} executed ({} saved), {} phases over {} rounds",
+            fmt_bytes_f(report.plan.raw_bytes as f64),
+            fmt_bytes_f(report.plan.bytes as f64),
+            fmt_bytes_f(report.plan.saved_bytes() as f64),
+            report.plan.phases,
+            report.plan.rounds,
         );
     }
     println!("total virtual time: {}", fmt_duration(report.elapsed));
@@ -387,10 +485,16 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
         .opt_default("seed", "N", "0", "scenario seed")
         .flag("reduced", "reduced-size mode (small cluster, small volumes; CI smoke)")
         .opt("out-dir", "DIR", "write the unified time series CSVs here")
+        .flag("optimize", "run balance-round plans through the optimizer (RFC 0003)")
+        .flag("phases", "execute plans in failure-domain-capped phases (implies --optimize)")
+        .opt_default("max-backfills", "N", "1", "phases: concurrent transfers per OSD")
+        .opt_default("domain-level", "LEVEL", "host", "phases: failure-domain level")
+        .opt_default("domain-backfills", "N", "2", "phases: concurrent transfers per domain")
         .flag("quiet", "suppress the per-event log");
     let a = cli.parse(argv.iter())?;
     let seed = a.get_u64("seed")?.unwrap_or(0);
     let reduced = a.flag("reduced");
+    let plan_cfg = plan_config_from(&a)?;
 
     let names: Vec<&str> = if a.flag("all") {
         equilibrium::scenario::ALL.to_vec()
@@ -404,6 +508,7 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
     for name in names {
         let mut case = equilibrium::scenario::library::by_name(name, seed, reduced)
             .ok_or_else(|| app_err!("unknown scenario '{name}' (see `scenario list`)"))?;
+        case.config.plan = plan_cfg.clone();
         let var_before = case.state.utilization_variance();
         let outcome = case
             .run()
@@ -420,6 +525,16 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
             fmt_duration(outcome.elapsed),
             fmt_duration(outcome.total_calc_seconds),
         );
+        if plan_cfg.enabled() {
+            println!(
+                "  plan pipeline: {} planned -> {} executed ({} saved), {} phases over {} rounds",
+                fmt_bytes_f(outcome.plan.raw_bytes as f64),
+                fmt_bytes_f(outcome.plan.bytes as f64),
+                fmt_bytes_f(outcome.plan.saved_bytes() as f64),
+                outcome.plan.phases,
+                outcome.plan.rounds,
+            );
+        }
         let problems = case.state.verify();
         if !problems.is_empty() {
             return Err(app_err!("scenario '{name}' violated invariants: {problems:?}"));

@@ -1,0 +1,195 @@
+//! Movement plan pipeline: the post-planning stage between balancer
+//! output and execution (RFC 0003).
+//!
+//! Balancers emit raw `Vec<Movement>` plans one improving step at a
+//! time; across a batched round the projected state drifts under the
+//! plan itself, so raw plans routinely carry redundant physical work —
+//! a shard hops A→B early in the round and B→C near convergence, or a
+//! later round reverses an earlier placement outright. The paper's
+//! second headline claim is balancing "while reducing the amount of
+//! needed data movement"; this module closes that loop for the
+//! *execution* side:
+//!
+//! * [`optimize`] rewrites a plan into a minimal equivalent one —
+//!   transitive chains collapse to their net movement, round trips
+//!   cancel entirely — re-validated move by move against the pool's
+//!   CRUSH slot constraints ([`crate::balancer::constraints`]).
+//! * [`schedule`] orders the optimized plan into executable **phases**
+//!   under per-OSD and per-failure-domain backfill concurrency caps, so
+//!   the executor's virtual-time makespan models realistic parallel
+//!   backfill and an operator can apply one phase's `upmap_script` at a
+//!   time, waiting for `HEALTH_OK` between phases.
+//!
+//! The pipeline is wired behind [`PlanConfig`] into every
+//! `propose_batch` consumer: the scenario engine's `BalanceRound`, the
+//! daemon, `simulator::simulate`, and the `balance` CLI subcommand
+//! (`--optimize`, `--phases`). It is **off by default** — golden traces
+//! and every historical consumer see byte-identical behavior unless a
+//! caller opts in.
+#![warn(missing_docs)]
+
+pub mod optimize;
+pub mod schedule;
+
+pub use optimize::{net_relocations, optimize_plan, OptimizedPlan};
+pub use schedule::{schedule_plan, PhasedPlan, ScheduleConfig};
+
+use crate::cluster::Movement;
+
+/// What the pipeline did to one plan (optimizer stats; raw = input).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlanStats {
+    /// Moves in the raw plan.
+    pub raw_moves: usize,
+    /// Bytes the raw plan would transfer.
+    pub raw_bytes: u64,
+    /// Moves in the optimized plan.
+    pub moves: usize,
+    /// Bytes the optimized plan transfers.
+    pub bytes: u64,
+    /// The optimizer could not produce a valid reordering and returned
+    /// the raw plan unchanged (never happens for balancer output; the
+    /// escape hatch exists for adversarial inputs).
+    pub fell_back: bool,
+}
+
+impl PlanStats {
+    /// Identity stats for a plan that bypassed the optimizer.
+    pub fn raw(plan: &[Movement]) -> PlanStats {
+        let bytes = plan.iter().map(|m| m.bytes).sum();
+        PlanStats {
+            raw_moves: plan.len(),
+            raw_bytes: bytes,
+            moves: plan.len(),
+            bytes,
+            fell_back: false,
+        }
+    }
+
+    /// Moves the optimizer cancelled or coalesced away.
+    pub fn cancelled_moves(&self) -> usize {
+        self.raw_moves.saturating_sub(self.moves)
+    }
+
+    /// Bytes of physical transfer the optimizer saved.
+    pub fn saved_bytes(&self) -> u64 {
+        self.raw_bytes.saturating_sub(self.bytes)
+    }
+}
+
+/// Pipeline tuning carried by every `propose_batch` consumer
+/// ([`crate::scenario::ScenarioConfig`], the daemon, `SimOptions`).
+/// Default: disabled — plans execute raw, as they always did.
+#[derive(Debug, Clone, Default)]
+pub struct PlanConfig {
+    /// Rewrite each round's plan into its minimal equivalent before
+    /// execution / script rendering.
+    pub optimize: bool,
+    /// Order the (optimized) plan into concurrency-capped phases. The
+    /// engine executes phase by phase, advancing virtual time per phase.
+    pub schedule: Option<ScheduleConfig>,
+}
+
+impl PlanConfig {
+    /// Optimizer only — minimal plan, single executor pass.
+    pub fn optimized() -> PlanConfig {
+        PlanConfig { optimize: true, schedule: None }
+    }
+
+    /// The full pipeline: optimizer + default phased scheduler.
+    pub fn phased() -> PlanConfig {
+        PlanConfig { optimize: true, schedule: Some(ScheduleConfig::default()) }
+    }
+
+    /// Is any pipeline stage active?
+    pub fn enabled(&self) -> bool {
+        self.optimize || self.schedule.is_some()
+    }
+}
+
+/// Aggregated pipeline effect over a whole run (all balance rounds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanReport {
+    /// Balance rounds that went through the pipeline.
+    pub rounds: usize,
+    /// Raw planned moves across those rounds.
+    pub raw_moves: usize,
+    /// Raw planned bytes across those rounds.
+    pub raw_bytes: u64,
+    /// Physically executed moves.
+    pub moves: usize,
+    /// Physically executed bytes.
+    pub bytes: u64,
+    /// Total executed phases (1 per round without a scheduler).
+    pub phases: usize,
+    /// Rounds where the optimizer fell back to the raw plan.
+    pub fallbacks: usize,
+}
+
+impl PlanReport {
+    /// Fold one round's stats into the aggregate.
+    pub fn absorb(&mut self, stats: &PlanStats, phases: usize) {
+        self.rounds += 1;
+        self.raw_moves += stats.raw_moves;
+        self.raw_bytes += stats.raw_bytes;
+        self.moves += stats.moves;
+        self.bytes += stats.bytes;
+        self.phases += phases;
+        self.fallbacks += stats.fell_back as usize;
+    }
+
+    /// Bytes of physical transfer the pipeline saved overall.
+    pub fn saved_bytes(&self) -> u64 {
+        self.raw_bytes.saturating_sub(self.bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PgId;
+
+    fn mv(pg: u32, from: u32, to: u32, bytes: u64) -> Movement {
+        Movement { pg: PgId::new(1, pg), from, to, bytes }
+    }
+
+    #[test]
+    fn stats_raw_is_identity() {
+        let plan = vec![mv(0, 0, 1, 100), mv(1, 2, 3, 50)];
+        let s = PlanStats::raw(&plan);
+        assert_eq!(s.raw_moves, 2);
+        assert_eq!(s.moves, 2);
+        assert_eq!(s.raw_bytes, 150);
+        assert_eq!(s.bytes, 150);
+        assert_eq!(s.cancelled_moves(), 0);
+        assert_eq!(s.saved_bytes(), 0);
+        assert!(!s.fell_back);
+    }
+
+    #[test]
+    fn report_absorbs_rounds() {
+        let mut r = PlanReport::default();
+        r.absorb(
+            &PlanStats { raw_moves: 10, raw_bytes: 1000, moves: 6, bytes: 600, fell_back: false },
+            3,
+        );
+        r.absorb(
+            &PlanStats { raw_moves: 4, raw_bytes: 400, moves: 4, bytes: 400, fell_back: true },
+            1,
+        );
+        assert_eq!(r.rounds, 2);
+        assert_eq!(r.raw_moves, 14);
+        assert_eq!(r.moves, 10);
+        assert_eq!(r.saved_bytes(), 400);
+        assert_eq!(r.phases, 4);
+        assert_eq!(r.fallbacks, 1);
+    }
+
+    #[test]
+    fn config_enablement() {
+        assert!(!PlanConfig::default().enabled());
+        assert!(PlanConfig::optimized().enabled());
+        assert!(PlanConfig::phased().enabled());
+        assert!(PlanConfig::phased().schedule.is_some());
+    }
+}

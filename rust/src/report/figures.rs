@@ -158,7 +158,7 @@ pub fn figure4(out_dir: &Path, seed: u64, scoring: Scoring) -> std::io::Result<(
 /// keep the CSV manageable; the paper plots are line plots anyway.
 pub fn figure5(out_dir: &Path, seed: u64, scoring: Scoring) -> std::io::Result<(SimResult, SimResult)> {
     let c = by_name("b", seed).unwrap();
-    let opts = SimOptions { max_moves: 10_000, sample_every: 10 };
+    let opts = SimOptions { max_moves: 10_000, sample_every: 10, ..SimOptions::default() };
     let (mgr, eq) = run_cluster(&c, scoring, &opts);
     write_csv_file(&out_dir.join("fig5_mgr.csv"), &mgr.series.to_csv())?;
     write_csv_file(&out_dir.join("fig5_equilibrium.csv"), &eq.series.to_csv())?;
@@ -213,6 +213,55 @@ pub fn ablate_k(cluster: &str, seed: u64, ks: &[usize], scoring: Scoring) -> Tab
     t
 }
 
+/// Plan pipeline report (RFC 0003): for each cluster, run Equilibrium
+/// to convergence, then compare executing the raw plan against the
+/// optimized + phased plan — bytes moved before/after, phase count, and
+/// virtual-time makespan under the schedule's executor model.
+pub fn plan_table(
+    clusters: &[&str],
+    seed: u64,
+    scoring: Scoring,
+    opts: &SimOptions,
+    sched: &crate::plan::ScheduleConfig,
+) -> Table {
+    let mut t = Table::new(&[
+        "Cluster",
+        "Moves raw",
+        "Moves opt",
+        "Moved (TiB) raw",
+        "Moved (TiB) opt",
+        "Saved (TiB)",
+        "Phases",
+        "Makespan raw (h)",
+        "Makespan phased (h)",
+    ]);
+    for name in clusters {
+        let c = by_name(name, seed).unwrap_or_else(|| panic!("unknown cluster '{name}'"));
+        let mut state = c.state.clone();
+        let mut bal = make_equilibrium(scoring, EquilibriumConfig::default());
+        let res = crate::simulator::simulate(bal.as_mut(), &mut state, opts);
+
+        let opt = crate::plan::optimize_plan(&c.state, &res.movements);
+        let phased = crate::plan::schedule_plan(&c.state, &opt.movements, sched);
+        let n = c.state.osd_count();
+        let raw_makespan =
+            crate::coordinator::execute_plan(&res.movements, &sched.executor, n).makespan;
+        let phased_makespan = phased.makespan(&sched.executor, n);
+        t.push_row(vec![
+            c.name.to_string(),
+            opt.stats.raw_moves.to_string(),
+            opt.stats.moves.to_string(),
+            format!("{:.2}", to_tib_f(opt.stats.raw_bytes as f64)),
+            format!("{:.2}", to_tib_f(opt.stats.bytes as f64)),
+            format!("{:.2}", to_tib_f(opt.stats.saved_bytes() as f64)),
+            phased.phases.len().to_string(),
+            format!("{:.2}", raw_makespan / 3600.0),
+            format!("{:.2}", phased_makespan / 3600.0),
+        ]);
+    }
+    t
+}
+
 /// Ablation: disable the PG-count-improvement criterion (DESIGN.md calls
 /// this configuration out as a design choice worth isolating).
 pub fn ablate_count_criterion(cluster: &str, seed: u64, scoring: Scoring) -> Table {
@@ -259,5 +308,20 @@ mod tests {
     fn ablate_k_runs() {
         let t = ablate_k("a", 0, &[1, 25], Scoring::Native);
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn plan_table_reports_pipeline_columns() {
+        let t = plan_table(
+            &["a"],
+            0,
+            Scoring::Native,
+            &SimOptions::default(),
+            &crate::plan::ScheduleConfig::default(),
+        );
+        assert_eq!(t.rows.len(), 1);
+        let text = t.render();
+        assert!(text.contains("Phases"));
+        assert!(text.contains("Makespan"));
     }
 }

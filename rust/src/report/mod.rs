@@ -6,7 +6,7 @@ pub mod figures;
 pub mod table;
 
 pub use figures::{
-    ablate_count_criterion, ablate_k, figure4, figure5, figure6, make_equilibrium, run_cluster,
-    scenario_series, table1, Scoring, Table1Row,
+    ablate_count_criterion, ablate_k, figure4, figure5, figure6, make_equilibrium, plan_table,
+    run_cluster, scenario_series, table1, Scoring, Table1Row,
 };
 pub use table::Table;

@@ -19,6 +19,7 @@ use crate::cluster::{add_hosts, fail_osd, ClusterState, ExpandError, Movement, P
 use crate::coordinator::{execute_plan, Event, EventLog, ExecutorConfig, Throttle};
 use crate::crush::NodeId;
 use crate::generator::aging::age_epoch;
+use crate::plan::{optimize_plan, schedule_plan, PlanConfig, PlanReport, PlanStats};
 use crate::simulator::{delete_from_pool, write_pool, Sample, TimeSeries, Workload};
 use crate::util::rng::Rng;
 
@@ -42,6 +43,11 @@ pub struct ScenarioConfig {
     /// discard the series (the daemon, aging) turn this off so no
     /// O(pools × OSDs) sample captures are paid.
     pub record_series: bool,
+    /// The movement plan pipeline (RFC 0003): optimize each balance
+    /// round's plan before execution and/or schedule it into
+    /// concurrency-capped phases. Off by default — every historical
+    /// consumer and golden trace sees byte-identical behavior.
+    pub plan: PlanConfig,
 }
 
 impl Default for ScenarioConfig {
@@ -51,6 +57,7 @@ impl Default for ScenarioConfig {
             target_round_seconds: None,
             sample_every: 1,
             record_series: true,
+            plan: PlanConfig::default(),
         }
     }
 }
@@ -65,6 +72,7 @@ impl ScenarioConfig {
             target_round_seconds: None,
             sample_every,
             record_series: true,
+            plan: PlanConfig::default(),
         }
     }
 
@@ -117,6 +125,14 @@ pub struct EventOutcome {
     pub planned_moves: usize,
     /// Raw bytes those movements carry.
     pub moved_bytes: u64,
+    /// Movements physically executed — equals `planned_moves` unless
+    /// the plan pipeline cancelled some (balance rounds only).
+    pub executed_moves: usize,
+    /// Bytes physically executed (≤ `moved_bytes` under the pipeline).
+    pub executed_bytes: u64,
+    /// Executed phases (balance rounds: 1 without a scheduler, 0 when
+    /// nothing ran or no executor is configured).
+    pub phases: usize,
     /// Virtual seconds this event advanced the clock.
     pub makespan: f64,
     /// Balance round only: the balancer ran out of improving moves.
@@ -134,8 +150,17 @@ pub struct ScenarioOutcome {
     /// Measurement samples (figures-compatible; `vtime` stamped).
     pub series: TimeSeries,
     /// Every balancing movement, in plan order (backfills excluded —
-    /// they are recovery, not balancing).
+    /// they are recovery, not balancing). Always the balancer's **raw**
+    /// output; what was physically executed is in `executed` when the
+    /// plan pipeline ran.
     pub movements: Vec<Movement>,
+    /// The physically executed movements, per-round pipeline output
+    /// concatenated in execution order. `Some` only when
+    /// [`ScenarioConfig::plan`] enabled any pipeline stage.
+    pub executed: Option<Vec<Movement>>,
+    /// Aggregated plan-pipeline effect over all balance rounds (zeros
+    /// when the pipeline is disabled).
+    pub plan: PlanReport,
     /// Total virtual time elapsed, seconds.
     pub elapsed: f64,
     /// Total balancer planning time, wall-clock seconds.
@@ -156,6 +181,10 @@ pub struct ScenarioEngine<'a> {
     log: EventLog,
     series: TimeSeries,
     movements: Vec<Movement>,
+    /// Physically executed movements (`Some` iff the plan pipeline is
+    /// enabled; mirrors `movements` per round otherwise).
+    executed: Option<Vec<Movement>>,
+    plan_report: PlanReport,
     moved_bytes: u64,
     total_calc_seconds: f64,
     throttle: Option<Throttle>,
@@ -175,6 +204,7 @@ impl<'a> ScenarioEngine<'a> {
         cfg: ScenarioConfig,
         seed: u64,
     ) -> ScenarioEngine<'a> {
+        let executed = cfg.plan.enabled().then(Vec::new);
         let mut engine = ScenarioEngine {
             state,
             balancer,
@@ -185,6 +215,8 @@ impl<'a> ScenarioEngine<'a> {
             log: EventLog::default(),
             series: TimeSeries::default(),
             movements: Vec::new(),
+            executed,
+            plan_report: PlanReport::default(),
             moved_bytes: 0,
             total_calc_seconds: 0.0,
             throttle: None,
@@ -398,11 +430,16 @@ impl<'a> ScenarioEngine<'a> {
     }
 
     /// Plan one bounded round via `propose_batch` (chunked for the
-    /// sampling stride), then execute it under the backfill limits.
+    /// sampling stride), run the plan through the pipeline when
+    /// configured (optimize, schedule into phases — RFC 0003), then
+    /// execute it under the backfill limits.
     fn balance_round(&mut self, max_moves: usize) -> Result<EventOutcome, ScenarioError> {
         if self.balancer.is_none() {
             return Err(ScenarioError::NoBalancer);
         }
+        // the pipeline rewrites the plan relative to the pre-round
+        // state; snapshot it before planning mutates the projection
+        let snapshot = self.cfg.plan.enabled().then(|| self.state.clone());
         // round framing (`RoundStarted`) is the adapter's business — the
         // daemon emits it before its writes via `log_event`; here the
         // counter only numbers the plan/execute/converge events
@@ -450,32 +487,86 @@ impl<'a> ScenarioEngine<'a> {
             calc_seconds: calc_total,
         });
 
-        let mut makespan = 0.0;
-        if let Some(exec) = &self.cfg.executor {
-            let report = execute_plan(&plan, exec, self.state.osd_count());
-            makespan = report.makespan;
-            self.vtime += makespan;
-            self.dirty |= makespan > 0.0;
-            self.log_event(Event::PlanExecuted {
+        // ---- plan pipeline (RFC 0003): optimize against the pre-round
+        // snapshot; raw and optimized plans land on the identical final
+        // state, so the already-projected `self.state` needs no fixup
+        let mut stats = PlanStats::raw(&plan);
+        let mut optimized: Option<Vec<Movement>> = None;
+        if let (Some(initial), true) = (&snapshot, self.cfg.plan.optimize) {
+            let opt = optimize_plan(initial, &plan);
+            self.log_event(Event::PlanOptimized {
                 round,
-                makespan,
-                peak_concurrency: report.peak_concurrency,
+                raw_moves: opt.stats.raw_moves,
+                moves: opt.stats.moves,
+                raw_bytes: opt.stats.raw_bytes,
+                bytes: opt.stats.bytes,
             });
+            stats = opt.stats;
+            optimized = Some(opt.movements);
+        }
+        let exec_plan: &[Movement] = optimized.as_deref().unwrap_or(&plan);
+
+        let mut makespan = 0.0;
+        let mut phases = 0usize;
+        // clone the (small) configs out of self so the phase loop can
+        // log events (&mut self) while holding them
+        let exec_cfg = self.cfg.executor.clone();
+        let sched_cfg = self.cfg.plan.schedule.clone();
+        if let Some(exec) = &exec_cfg {
+            let mut peak = 0usize;
+            match (&snapshot, &sched_cfg) {
+                (Some(initial), Some(sched)) => {
+                    let phased = schedule_plan(initial, exec_plan, sched);
+                    phases = phased.phases.len();
+                    for (p, phase) in phased.phases.iter().enumerate() {
+                        let report = execute_plan(phase, exec, self.state.osd_count());
+                        self.vtime += report.makespan;
+                        makespan += report.makespan;
+                        peak = peak.max(report.peak_concurrency);
+                        self.log_event(Event::PhaseExecuted {
+                            round,
+                            phase: p,
+                            moves: phase.len(),
+                            makespan: report.makespan,
+                        });
+                    }
+                }
+                _ => {
+                    let report = execute_plan(exec_plan, exec, self.state.osd_count());
+                    makespan = report.makespan;
+                    peak = report.peak_concurrency;
+                    phases = if exec_plan.is_empty() { 0 } else { 1 };
+                    self.vtime += makespan;
+                }
+            }
+            self.dirty |= makespan > 0.0;
+            self.log_event(Event::PlanExecuted { round, makespan, peak_concurrency: peak });
         }
         if let Some(t) = self.throttle.as_mut() {
-            t.observe(makespan, plan.len());
+            t.observe(makespan, exec_plan.len());
         }
         if converged {
             self.log_event(Event::Converged { round });
         }
-        Ok(EventOutcome {
+
+        let outcome = EventOutcome {
             planned_moves: plan.len(),
             moved_bytes: bytes,
+            executed_moves: exec_plan.len(),
+            executed_bytes: stats.bytes,
+            phases,
             makespan,
             converged,
             calc_seconds: calc_total,
             ..Default::default()
-        })
+        };
+        if self.cfg.plan.enabled() {
+            self.plan_report.absorb(&stats, phases);
+            if let Some(acc) = self.executed.as_mut() {
+                acc.extend_from_slice(exec_plan);
+            }
+        }
+        Ok(outcome)
     }
 
     /// Run recovery traffic through the executor (when configured),
@@ -521,6 +612,8 @@ impl<'a> ScenarioEngine<'a> {
             log: self.log,
             series: self.series,
             movements: self.movements,
+            executed: self.executed,
+            plan: self.plan_report,
             elapsed: self.vtime,
             total_calc_seconds: self.total_calc_seconds,
         }
@@ -656,6 +749,54 @@ mod tests {
             engine2.apply(&ScenarioEvent::FailHost { host: "nope".into() }),
             Err(ScenarioError::UnknownHost(_))
         ));
+    }
+
+    /// The plan pipeline must not disturb planning (raw trace identical)
+    /// while executing no more bytes than planned, in phases.
+    #[test]
+    fn plan_pipeline_preserves_trace_and_bounds_execution() {
+        use crate::plan::PlanConfig;
+
+        let spec = ScenarioSpec::new("piped", 47)
+            .workload(WorkloadModel::ZipfPools { exponent: 1.1 }, 24 * GIB, 300.0)
+            .balance(150)
+            .fail_osd(1)
+            .balance(150)
+            .snapshot("end");
+
+        let run = |plan: PlanConfig| {
+            let mut state = clusters::demo(47);
+            let mut bal = Equilibrium::default();
+            let cfg = ScenarioConfig { plan, ..ScenarioConfig::default() };
+            let engine = ScenarioEngine::new(&mut state, Some(&mut bal), cfg, spec.seed);
+            let out = engine.run(&spec).unwrap();
+            (state, out)
+        };
+        let (s_raw, raw) = run(PlanConfig::default());
+        let (s_opt, opt) = run(PlanConfig::phased());
+
+        // identical raw planning stream
+        assert_eq!(raw.movements.len(), opt.movements.len());
+        for (a, b) in raw.movements.iter().zip(&opt.movements) {
+            assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+        }
+        assert_eq!(s_raw.utilizations(), s_opt.utilizations(), "same final balance");
+
+        // pipeline accounting: executed ≤ planned, phases logged
+        assert!(raw.executed.is_none() && raw.plan.rounds == 0);
+        let executed = opt.executed.as_ref().expect("pipeline records executed plan");
+        assert!(executed.len() <= opt.movements.len());
+        assert!(opt.plan.bytes <= opt.plan.raw_bytes);
+        assert_eq!(opt.plan.fallbacks, 0);
+        assert_eq!(opt.plan.rounds, 2);
+        let phase_events = opt
+            .log
+            .events()
+            .iter()
+            .filter(|(_, e)| matches!(e, Event::PhaseExecuted { .. }))
+            .count();
+        assert_eq!(phase_events, opt.plan.phases);
+        assert!(s_opt.verify().is_empty());
     }
 
     #[test]

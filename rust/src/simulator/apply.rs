@@ -13,6 +13,7 @@
 
 use crate::balancer::Balancer;
 use crate::cluster::{ClusterState, Movement};
+use crate::plan::{PlanConfig, PlanReport};
 use crate::scenario::{ScenarioConfig, ScenarioEngine, ScenarioEvent};
 
 use super::timeseries::TimeSeries;
@@ -26,11 +27,16 @@ pub struct SimOptions {
     /// figures need; larger values keep huge runs cheap). 0 is clamped
     /// to 1.
     pub sample_every: usize,
+    /// Movement plan pipeline (RFC 0003). With `optimize` on, the
+    /// result additionally carries the minimal equivalent plan in
+    /// [`SimResult::optimized`]; the recorded `movements` stay the raw
+    /// planner output. Off by default.
+    pub plan: PlanConfig,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { max_moves: 10_000, sample_every: 1 }
+        SimOptions { max_moves: 10_000, sample_every: 1, plan: PlanConfig::default() }
     }
 }
 
@@ -48,6 +54,11 @@ pub struct SimResult {
     pub converged: bool,
     /// Total balancer compute time, seconds.
     pub total_calc_seconds: f64,
+    /// The minimal equivalent plan, when [`SimOptions::plan`] enabled
+    /// the optimizer (`None` otherwise).
+    pub optimized: Option<Vec<Movement>>,
+    /// Aggregated pipeline stats (zeros when the pipeline is off).
+    pub plan: PlanReport,
 }
 
 impl SimResult {
@@ -65,12 +76,9 @@ impl SimResult {
 /// suite pins to the exact per-move sequence.
 pub fn simulate(balancer: &mut dyn Balancer, state: &mut ClusterState, opts: &SimOptions) -> SimResult {
     let name = balancer.name().to_string();
-    let mut engine = ScenarioEngine::new(
-        state,
-        Some(balancer),
-        ScenarioConfig::planning_only(opts.sample_every.max(1)),
-        0,
-    );
+    let mut cfg = ScenarioConfig::planning_only(opts.sample_every.max(1));
+    cfg.plan = opts.plan.clone();
+    let mut engine = ScenarioEngine::new(state, Some(balancer), cfg, 0);
     let round = engine
         .apply(&ScenarioEvent::BalanceRound { max_moves: opts.max_moves })
         .expect("a balancer is attached, so BalanceRound cannot fail");
@@ -82,6 +90,8 @@ pub fn simulate(balancer: &mut dyn Balancer, state: &mut ClusterState, opts: &Si
         series: out.series,
         converged: round.converged,
         total_calc_seconds: out.total_calc_seconds,
+        optimized: out.executed.filter(|_| opts.plan.optimize),
+        plan: out.plan,
     }
 }
 
@@ -154,11 +164,44 @@ mod tests {
     fn move_cap_is_respected_and_flagged() {
         let mut state = cluster();
         let mut bal = Equilibrium::default();
-        let res = simulate(&mut bal, &mut state, &SimOptions { max_moves: 2, sample_every: 1 });
+        let res = simulate(&mut bal, &mut state, &SimOptions { max_moves: 2, sample_every: 1, ..SimOptions::default() });
         assert!(res.movements.len() <= 2);
         if res.movements.len() == 2 {
             assert!(!res.converged);
         }
+    }
+
+    /// With the optimizer on, the raw movement sequence is untouched
+    /// (golden contract) and the optimized plan reaches the same state
+    /// with no more bytes.
+    #[test]
+    fn simulate_with_optimizer_keeps_raw_trace() {
+        let initial = cluster();
+
+        let mut s_raw = initial.clone();
+        let mut b_raw = Equilibrium::default();
+        let raw = simulate(&mut b_raw, &mut s_raw, &SimOptions::default());
+        assert!(raw.optimized.is_none());
+
+        let mut s_opt = initial.clone();
+        let mut b_opt = Equilibrium::default();
+        let opts = SimOptions { plan: crate::plan::PlanConfig::optimized(), ..SimOptions::default() };
+        let opt = simulate(&mut b_opt, &mut s_opt, &opts);
+
+        assert_eq!(raw.movements.len(), opt.movements.len());
+        for (a, b) in raw.movements.iter().zip(&opt.movements) {
+            assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+        }
+        let minimal = opt.optimized.expect("optimizer ran");
+        assert!(minimal.len() <= opt.movements.len());
+        assert!(opt.plan.bytes <= opt.plan.raw_bytes);
+        // replaying the minimal plan lands on the same cluster
+        let mut replay = initial;
+        for m in &minimal {
+            replay.apply_movement(m.pg, m.from, m.to).unwrap();
+        }
+        assert_eq!(replay.utilizations(), s_opt.utilizations());
+        assert_eq!(replay.upmap_table(), s_opt.upmap_table());
     }
 
     #[test]
@@ -183,7 +226,7 @@ mod tests {
     fn sampling_stride_thins_series() {
         let mut state = cluster();
         let mut bal = Equilibrium::default();
-        let res = simulate(&mut bal, &mut state, &SimOptions { max_moves: 10_000, sample_every: 5 });
+        let res = simulate(&mut bal, &mut state, &SimOptions { max_moves: 10_000, sample_every: 5, ..SimOptions::default() });
         assert!(res.series.samples.len() <= res.movements.len() / 5 + 2);
         assert_eq!(res.series.last().unwrap().moves, res.movements.len());
     }
@@ -195,10 +238,10 @@ mod tests {
         let initial = cluster();
         let mut s0 = initial.clone();
         let mut b0 = Equilibrium::default();
-        let zero = simulate(&mut b0, &mut s0, &SimOptions { max_moves: 50, sample_every: 0 });
+        let zero = simulate(&mut b0, &mut s0, &SimOptions { max_moves: 50, sample_every: 0, ..SimOptions::default() });
         let mut s1 = initial;
         let mut b1 = Equilibrium::default();
-        let one = simulate(&mut b1, &mut s1, &SimOptions { max_moves: 50, sample_every: 1 });
+        let one = simulate(&mut b1, &mut s1, &SimOptions { max_moves: 50, sample_every: 1, ..SimOptions::default() });
         assert_eq!(zero.movements.len(), one.movements.len());
         assert_eq!(zero.series.samples.len(), one.series.samples.len());
         assert_eq!(zero.series.samples.len(), zero.movements.len() + 1);

@@ -7,12 +7,15 @@
 //! This is the refactor's correctness contract (RFC 0001): the engine
 //! may only change *how fast* a move is found, never *which* move.
 
+use equilibrium::balancer::upmap_script::diff_plan;
 use equilibrium::balancer::{Balancer, Equilibrium, ReferenceEquilibrium};
-use equilibrium::cluster::{ClusterState, PgId};
+use equilibrium::cluster::{ClusterState, Movement, PgId};
 use equilibrium::crush::OsdId;
 use equilibrium::generator::clusters;
 use equilibrium::generator::synth::random_cluster;
+use equilibrium::plan::{net_relocations, optimize_plan, schedule_plan, ScheduleConfig};
 use equilibrium::simulator::{Workload, WorkloadModel};
+use equilibrium::util::parallel;
 use equilibrium::util::prop::check_seeded;
 
 type Trace = Vec<(PgId, OsdId, OsdId, u64)>;
@@ -126,6 +129,96 @@ fn golden_trace_random_clusters() {
         }
         Ok(())
     });
+}
+
+/// Pin the plan pipeline's output alongside a raw trace: the optimized
+/// move sequence is deterministic, matches an independent upmap-table
+/// diff oracle as a set, reaches the identical final state within the
+/// raw budget, and its phase assignment is byte-identical across
+/// thread counts.
+fn assert_optimized_pinned(label: &str, initial: &ClusterState, cap: usize) {
+    let mut state = initial.clone();
+    let mut bal = Equilibrium::default();
+    let raw = bal.propose_batch(&mut state, cap);
+    assert!(!raw.is_empty(), "{label}: cluster must need balancing");
+
+    let opt = optimize_plan(initial, &raw);
+    assert!(!opt.stats.fell_back, "{label}: balancer plans never fall back");
+    assert!(opt.movements.len() <= raw.len(), "{label}: move budget");
+    assert!(opt.stats.bytes <= opt.stats.raw_bytes, "{label}: byte budget");
+
+    // determinism pin: re-optimizing emits the identical sequence
+    let again = optimize_plan(initial, &raw);
+    assert_eq!(
+        opt.movements.len(),
+        again.movements.len(),
+        "{label}: optimizer sequence unstable"
+    );
+    for (i, (a, b)) in opt.movements.iter().zip(&again.movements).enumerate() {
+        assert_eq!(
+            (a.pg, a.from, a.to, a.bytes),
+            (b.pg, b.from, b.to, b.bytes),
+            "{label}: optimizer diverges at move {i}"
+        );
+    }
+
+    // independent oracle: the optimized plan's net relocations equal
+    // the upmap-table diff of the raw plan's final state (a separate,
+    // table-based derivation). Folding to nets keeps the pin valid even
+    // if the optimizer ever realizes a slot-swap cycle via an
+    // intermediate hop.
+    let key = |m: &Movement| (m.pg, m.from, m.to, m.bytes);
+    let net = diff_plan(initial, &state.upmap_table()).unwrap();
+    let mut want: Vec<_> = net.iter().map(key).collect();
+    want.sort(); // diff is already one net move per slot — no folding
+    let mut got: Vec<_> = net_relocations(&opt.movements).iter().map(key).collect();
+    got.sort();
+    assert_eq!(want, got, "{label}: optimizer disagrees with the table-diff oracle");
+
+    // identical final state when replayed
+    let mut replay = initial.clone();
+    for m in &opt.movements {
+        replay.apply_movement(m.pg, m.from, m.to).unwrap();
+    }
+    assert_eq!(replay.upmap_table(), state.upmap_table(), "{label}: upmap differs");
+    for o in 0..initial.osd_count() as OsdId {
+        assert_eq!(replay.osd_used(o), state.osd_used(o), "{label}: osd.{o} differs");
+    }
+
+    // phase assignment: a pure function of the plan, pinned across
+    // thread counts like every other artifact in this suite
+    let phases = |threads: usize| -> Vec<Vec<(PgId, OsdId, OsdId)>> {
+        parallel::with_threads(threads, || {
+            schedule_plan(initial, &opt.movements, &ScheduleConfig::default())
+                .phases
+                .iter()
+                .map(|p| p.iter().map(|m| (m.pg, m.from, m.to)).collect())
+                .collect()
+        })
+    };
+    let p1 = phases(1);
+    let p4 = phases(4);
+    assert_eq!(p1, p4, "{label}: phase assignment diverges across thread counts");
+    assert_eq!(
+        p1.iter().map(Vec::len).sum::<usize>(),
+        opt.movements.len(),
+        "{label}: schedule must place every optimized move"
+    );
+}
+
+/// Cluster A (Table 1): optimized plan + phases pinned on the full run.
+#[test]
+fn optimized_trace_cluster_a_full() {
+    let c = clusters::by_name("a", 0).unwrap();
+    assert_optimized_pinned("cluster A optimized", &c.state, 10_000);
+}
+
+/// Cluster C (Table 1): optimized plan + phases pinned on the 300-move
+/// prefix (mirrors the raw-plan prefix pin above).
+#[test]
+fn optimized_trace_cluster_c_prefix() {
+    let c = clusters::by_name("c", 0).unwrap();
+    assert_optimized_pinned("cluster C optimized", &c.state, 300);
 }
 
 /// After a device failure the ideal-count caches shift (the failed

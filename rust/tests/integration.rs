@@ -210,6 +210,22 @@ fn cli_generate_balance_roundtrip() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("moves"), "summary missing: {stderr}");
 
+    // plan pipeline end to end: optimized + phased plan, per-phase script
+    let script_path = dir.join("phased.sh");
+    let out = Command::new(bin)
+        .args(["balance", "--state", state_path.to_str().unwrap(), "--quiet"])
+        .args(["--optimize", "--phases"])
+        .args(["--upmap-script", script_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "piped balance failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("optimized:"), "optimizer summary missing: {stderr}");
+    assert!(stderr.contains("scheduled:"), "scheduler summary missing: {stderr}");
+    let script = std::fs::read_to_string(&script_path).unwrap();
+    assert!(script.contains("# phase 1/"), "phase headers missing");
+    equilibrium::balancer::upmap_script::parse_script(&script).expect("script must parse back");
+
     let out = Command::new(bin).args(["simulate", "--cluster", "demo"]).output().unwrap();
     assert!(out.status.success());
     let stdout = String::from_utf8_lossy(&out.stdout);

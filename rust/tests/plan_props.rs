@@ -1,0 +1,371 @@
+//! Plan-invariant property suite (RFC 0003): the optimizer and the
+//! phased scheduler pinned against random clusters and random plans.
+//!
+//! The contract, for any cluster and any valid plan:
+//! (a) the optimized plan reaches a final `ClusterState` identical to
+//!     the raw plan's — acting slots, upmap table, per-OSD accounting;
+//! (b) every optimized move satisfies the pool's CRUSH slot
+//!     constraints at its position in the sequence;
+//! (c) the optimized plan never moves more bytes (or moves) than raw;
+//! (d) the whole pipeline is byte-identical across thread counts
+//!     (`EQUILIBRIUM_THREADS=1/4` — the RFC 0002 determinism contract
+//!     extends to the pipeline).
+//!
+//! Plus the scheduler's structural invariants (permutation, per-OSD and
+//! per-domain caps, same-PG phase exclusion, sequential applicability)
+//! and the measurable-savings acceptance scenarios: churn plans whose
+//! later rounds revert earlier placements must execute strictly fewer
+//! bytes in strictly less virtual time, landing on the same balance.
+
+use equilibrium::balancer::constraints::{check_move, legal_destinations};
+use equilibrium::balancer::upmap_script::{diff_plan, parse_script, render_plan};
+use equilibrium::balancer::{Balancer, Equilibrium};
+use equilibrium::cluster::{ClusterState, Movement, PgId};
+use equilibrium::coordinator::execute_plan;
+use equilibrium::crush::{NodeId, OsdId};
+use equilibrium::generator::clusters;
+use equilibrium::generator::synth::random_cluster;
+use equilibrium::plan::{net_relocations, optimize_plan, schedule_plan, PlanConfig, ScheduleConfig};
+use equilibrium::util::parallel;
+use equilibrium::util::prop::check_seeded;
+use equilibrium::util::rng::Rng;
+
+/// Random valid plan: legal moves on a scratch state, with a bias
+/// toward reverting earlier moves so chains and round trips occur.
+fn random_plan(state: &mut ClusterState, rng: &mut Rng, target: usize) -> Vec<Movement> {
+    let pgs: Vec<PgId> = state.pgs().map(|p| p.id()).collect();
+    let mut plan: Vec<Movement> = Vec::new();
+    let mut attempts = 0;
+    while plan.len() < target && attempts < target * 20 {
+        attempts += 1;
+        if !plan.is_empty() && rng.chance(0.3) {
+            // revert a random earlier move if still legal
+            let m = *rng.choose(&plan).unwrap();
+            if check_move(state, m.pg, m.to, m.from).is_ok() {
+                plan.push(state.apply_movement(m.pg, m.to, m.from).unwrap());
+            }
+            continue;
+        }
+        let pg = *rng.choose(&pgs).unwrap();
+        let devices: Vec<OsdId> = state.pg(pg).unwrap().devices().collect();
+        let Some(&from) = rng.choose(&devices) else { continue };
+        let dests = legal_destinations(state, pg, from);
+        let Some(&to) = rng.choose(&dests) else { continue };
+        plan.push(state.apply_movement(pg, from, to).unwrap());
+    }
+    plan
+}
+
+fn apply_all(initial: &ClusterState, plan: &[Movement]) -> ClusterState {
+    let mut s = initial.clone();
+    for m in plan {
+        s.apply_movement(m.pg, m.from, m.to)
+            .unwrap_or_else(|e| panic!("plan not applicable: {e}"));
+    }
+    s
+}
+
+/// Byte-level state equivalence: acting slots, upmap table, accounting.
+fn assert_states_equal(a: &ClusterState, b: &ClusterState, label: &str) -> Result<(), String> {
+    if a.upmap_table() != b.upmap_table() {
+        return Err(format!("{label}: upmap tables differ"));
+    }
+    for (pa, pb) in a.pgs().zip(b.pgs()) {
+        if pa.id() != pb.id() || pa.acting() != pb.acting() {
+            return Err(format!("{label}: pg {} acting differs", pa.id()));
+        }
+    }
+    for o in 0..a.osd_count() as OsdId {
+        if a.osd_used(o) != b.osd_used(o) {
+            return Err(format!("{label}: osd.{o} usage differs"));
+        }
+    }
+    Ok(())
+}
+
+/// Properties (a), (b), (c) on random clusters and random plans.
+#[test]
+fn optimizer_reaches_identical_state_within_raw_budget() {
+    check_seeded("plan-opt-equivalence", 0x9A_0001, 24, |rng| {
+        let initial = random_cluster(rng);
+        let mut raw_state = initial.clone();
+        let raw = random_plan(&mut raw_state, rng, 50);
+
+        let opt = optimize_plan(&initial, &raw);
+        // (c) never more work than the raw plan
+        if opt.movements.len() > raw.len() {
+            return Err(format!("{} opt moves > {} raw", opt.movements.len(), raw.len()));
+        }
+        let raw_bytes: u64 = raw.iter().map(|m| m.bytes).sum();
+        if opt.stats.bytes > raw_bytes {
+            return Err(format!("{} opt bytes > {} raw", opt.stats.bytes, raw_bytes));
+        }
+        if opt.stats.fell_back {
+            return Err("optimizer fell back on a valid random plan".into());
+        }
+        // (b) CRUSH slot constraints hold at every step of the sequence
+        let mut opt_state = initial.clone();
+        for m in &opt.movements {
+            if let Err(v) = check_move(&opt_state, m.pg, m.from, m.to) {
+                return Err(format!("optimized move {m} violates constraints: {v:?}"));
+            }
+            opt_state
+                .apply_movement(m.pg, m.from, m.to)
+                .map_err(|e| format!("optimized move {m} not applicable: {e}"))?;
+        }
+        // (a) identical final state
+        assert_states_equal(&opt_state, &raw_state, "optimized vs raw")?;
+        let problems = opt_state.verify();
+        if !problems.is_empty() {
+            return Err(format!("invariants violated: {problems:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Property (d): the full pipeline is bit-identical at 1 and 4 threads
+/// — cluster build, planning, optimization, and scheduling.
+#[test]
+fn pipeline_is_deterministic_across_thread_counts() {
+    type Trace = (Vec<(PgId, OsdId, OsdId, u64)>, Vec<usize>);
+    let run = |threads: usize| -> Trace {
+        parallel::with_threads(threads, || {
+            let mut rng = Rng::new(0xD17E_0003);
+            let initial = random_cluster(&mut rng);
+            let mut state = initial.clone();
+            let mut bal = Equilibrium::default();
+            let raw = bal.propose_batch(&mut state, 400);
+            let opt = optimize_plan(&initial, &raw);
+            let phased = schedule_plan(&initial, &opt.movements, &ScheduleConfig::default());
+            (
+                phased
+                    .movements()
+                    .map(|m| (m.pg, m.from, m.to, m.bytes))
+                    .collect(),
+                phased.phases.iter().map(|p| p.len()).collect(),
+            )
+        })
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert_eq!(t1.0, t4.0, "move sequences diverged across thread counts");
+    assert_eq!(t1.1, t4.1, "phase assignments diverged across thread counts");
+}
+
+/// Scheduler invariants on random clusters/plans under varied caps.
+#[test]
+fn scheduler_invariants_hold_for_random_plans() {
+    check_seeded("plan-sched-invariants", 0x5C_4ED0, 16, |rng| {
+        let initial = random_cluster(rng);
+        let mut raw_state = initial.clone();
+        let raw = random_plan(&mut raw_state, rng, 40);
+        let opt = optimize_plan(&initial, &raw);
+
+        let cfg = ScheduleConfig {
+            max_backfills_per_osd: 1 + rng.index(2),
+            max_backfills_per_domain: 1 + rng.index(3),
+            ..ScheduleConfig::default()
+        };
+        let phased = schedule_plan(&initial, &opt.movements, &cfg);
+
+        // permutation of the input
+        let key = |m: &Movement| (m.pg, m.from, m.to, m.bytes);
+        let mut want: Vec<_> = opt.movements.iter().map(key).collect();
+        let mut got: Vec<_> = phased.movements().map(key).collect();
+        want.sort();
+        got.sort();
+        if want != got {
+            return Err("schedule is not a permutation of the plan".into());
+        }
+
+        for (i, phase) in phased.phases.iter().enumerate() {
+            if phase.is_empty() {
+                return Err(format!("phase {i} is empty"));
+            }
+            let mut osd_load = std::collections::BTreeMap::<OsdId, usize>::new();
+            let mut dom_load = std::collections::BTreeMap::<NodeId, usize>::new();
+            let mut pgs = Vec::new();
+            for m in phase {
+                if pgs.contains(&m.pg) {
+                    return Err(format!("phase {i}: pg {} scheduled twice", m.pg));
+                }
+                pgs.push(m.pg);
+                for o in [m.from, m.to] {
+                    *osd_load.entry(o).or_insert(0) += 1;
+                }
+                let df = initial.crush.ancestor_at(m.from as NodeId, cfg.domain_level);
+                let dt = initial.crush.ancestor_at(m.to as NodeId, cfg.domain_level);
+                let mut doms: Vec<NodeId> = df.into_iter().chain(dt).collect();
+                doms.dedup();
+                for d in doms {
+                    *dom_load.entry(d).or_insert(0) += 1;
+                }
+            }
+            if osd_load.values().any(|&l| l > cfg.max_backfills_per_osd) {
+                return Err(format!("phase {i}: per-OSD cap violated"));
+            }
+            if dom_load.values().any(|&l| l > cfg.max_backfills_per_domain) {
+                return Err(format!("phase {i}: per-domain cap violated"));
+            }
+        }
+
+        // phases apply in order and land on the optimized plan's state
+        let mut s = initial.clone();
+        for m in phased.movements() {
+            s.apply_movement(m.pg, m.from, m.to)
+                .map_err(|e| format!("scheduled order not applicable: {e}"))?;
+        }
+        assert_states_equal(&s, &apply_all(&initial, &opt.movements), "scheduled vs optimized")?;
+        Ok(())
+    });
+}
+
+/// Upmap-script round trip over the pipeline: render the optimized
+/// plan, parse it back, and the table diff reproduces the plan.
+#[test]
+fn upmap_script_round_trips_optimized_plans() {
+    check_seeded("plan-upmap-roundtrip", 0x0F_F00D, 16, |rng| {
+        let initial = random_cluster(rng);
+        let mut raw_state = initial.clone();
+        let raw = random_plan(&mut raw_state, rng, 40);
+        let opt = optimize_plan(&initial, &raw);
+
+        let script = render_plan(&initial, &opt.movements)
+            .map_err(|e| format!("render failed: {e}"))?
+            .join("\n");
+        let table = parse_script(&script).map_err(|e| format!("parse failed: {e}"))?;
+        // the parsed table is exactly the final state's exception table
+        let done = apply_all(&initial, &opt.movements);
+        if table != done.upmap_table() {
+            return Err("parsed table differs from the final upmap table".into());
+        }
+        // ... and diffing it against the initial state reproduces the
+        // optimized plan's net relocations (fold to nets: the optimizer
+        // may realize a slot-swap cycle via an intermediate hop, and
+        // diff order is canonical, not execution order)
+        let key = |m: &Movement| (m.pg, m.from, m.to, m.bytes);
+        let net = diff_plan(&initial, &table).map_err(|e| format!("diff failed: {e}"))?;
+        let mut want: Vec<_> = net.iter().map(key).collect();
+        want.sort(); // diff is already one net move per slot — no folding
+        let mut got: Vec<_> = net_relocations(&opt.movements).iter().map(key).collect();
+        got.sort();
+        if want != got {
+            return Err(format!("diff nets {} moves, optimizer nets {}", want.len(), got.len()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Measurable-savings acceptance: churn timelines where later rounds
+// revert earlier placements. The pipeline must land on the same balance
+// with strictly fewer bytes moved and a strictly lower virtual-time
+// makespan than executing the raw plan.
+// ---------------------------------------------------------------------
+
+/// Balance to convergence, then revert every move after `keep` in
+/// reverse order — the shape a later scenario round produces when it
+/// undoes earlier placements (pool decommission, post-failure
+/// re-leveling). Returns (initial, raw plan, final state).
+fn churn_plan(seed: u64, keep: impl Fn(usize) -> usize) -> (ClusterState, Vec<Movement>, ClusterState) {
+    let initial = clusters::demo(seed);
+    let mut state = initial.clone();
+    let mut bal = Equilibrium::default();
+    let forward = bal.propose_batch(&mut state, 10_000);
+    assert!(forward.len() >= 4, "demo cluster must need balancing");
+    let k = keep(forward.len());
+    let mut raw = forward.clone();
+    for m in forward[k..].iter().rev() {
+        raw.push(state.apply_movement(m.pg, m.to, m.from).unwrap());
+    }
+    (initial, raw, state)
+}
+
+fn assert_churn_savings(name: &str, seed: u64, keep: impl Fn(usize) -> usize) {
+    let (initial, raw, final_state) = churn_plan(seed, keep);
+    let n = initial.osd_count();
+    let sched = ScheduleConfig {
+        // generous domain headroom: the comparison isolates coalescing
+        max_backfills_per_domain: 8,
+        ..ScheduleConfig::default()
+    };
+
+    let opt = optimize_plan(&initial, &raw);
+    let phased = schedule_plan(&initial, &opt.movements, &sched);
+
+    let raw_bytes: u64 = raw.iter().map(|m| m.bytes).sum();
+    assert!(
+        opt.stats.bytes < raw_bytes,
+        "{name}: optimized bytes {} must be strictly below raw {}",
+        opt.stats.bytes,
+        raw_bytes
+    );
+    let raw_makespan = execute_plan(&raw, &sched.executor, n).makespan;
+    let phased_makespan = phased.makespan(&sched.executor, n);
+    assert!(
+        phased_makespan < raw_makespan,
+        "{name}: phased makespan {phased_makespan} must beat raw {raw_makespan}"
+    );
+
+    // same final balance, bit for bit
+    let opt_state = apply_all(&initial, &opt.movements);
+    assert_eq!(
+        opt_state.utilization_variance(),
+        final_state.utilization_variance(),
+        "{name}: optimized plan must reach the raw plan's variance"
+    );
+    assert_states_equal(&opt_state, &final_state, name).unwrap();
+}
+
+/// Full reversal: the whole balance is undone by later churn — the
+/// optimized plan is empty and executes in zero time.
+#[test]
+fn full_reversal_churn_cancels_to_nothing() {
+    let (initial, raw, final_state) = churn_plan(3, |_| 0);
+    let opt = optimize_plan(&initial, &raw);
+    assert!(opt.movements.is_empty(), "full round trip must cancel entirely");
+    assert_eq!(opt.stats.bytes, 0);
+    assert!(opt.stats.raw_bytes > 0);
+    assert_states_equal(&initial, &final_state, "full reversal").unwrap();
+    let phased = schedule_plan(&initial, &opt.movements, &ScheduleConfig::default());
+    assert_eq!(phased.move_count(), 0);
+    assert_churn_savings("full-reversal", 3, |_| 0);
+}
+
+/// Partial reversal: three quarters of the balance is later undone —
+/// the pipeline executes a fraction of the raw bytes, faster.
+#[test]
+fn partial_reversal_churn_saves_bytes_and_makespan() {
+    assert_churn_savings("partial-reversal", 7, |len| len / 4);
+}
+
+/// The whole scenario library, pipeline on vs off: identical final
+/// balance, never more executed bytes than planned — on all 7
+/// scenarios (the CI plan-smoke contract).
+#[test]
+fn library_scenarios_execute_within_raw_budget() {
+    for name in equilibrium::scenario::ALL {
+        let run = |plan: PlanConfig| {
+            let mut case = equilibrium::scenario::library::by_name(name, 5, true).unwrap();
+            case.config.plan = plan;
+            let out = case.run().unwrap_or_else(|e| panic!("{name}: {e}"));
+            (case, out)
+        };
+        let (case_raw, _) = run(PlanConfig::default());
+        let (case_opt, out) = run(PlanConfig::phased());
+
+        assert_eq!(
+            case_raw.state.utilizations(),
+            case_opt.state.utilizations(),
+            "{name}: the pipeline must not change the final balance"
+        );
+        assert!(
+            out.plan.bytes <= out.plan.raw_bytes,
+            "{name}: executed {} > planned {}",
+            out.plan.bytes,
+            out.plan.raw_bytes
+        );
+        assert_eq!(out.plan.fallbacks, 0, "{name}: balancer plans never fall back");
+        assert!(case_opt.state.verify().is_empty(), "{name}: invariants violated");
+    }
+}

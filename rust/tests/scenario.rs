@@ -40,7 +40,7 @@ fn scenario_balance_round_matches_manual_loop_on_cluster_a() {
         let res = simulate(
             bal.as_mut(),
             &mut state,
-            &SimOptions { max_moves: 600, sample_every: 7 },
+            &SimOptions { max_moves: 600, sample_every: 7, ..SimOptions::default() },
         );
         assert_eq!(res.movements.len(), manual.len(), "{which}: lengths differ");
         for (i, (a, b)) in res.movements.iter().zip(&manual).enumerate() {
