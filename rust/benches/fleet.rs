@@ -1,0 +1,83 @@
+//! Fleet sweep benchmark (RFC 0004): wall time of the whole library
+//! sweep at 1/2/4 worker threads, pinning the aggregate output
+//! byte-identical across thread counts. Emits **`BENCH_fleet.json`** at
+//! the repo root.
+//!
+//! Scenarios run reduced-size in both modes — the quantity under test
+//! is the fleet fan-out, not cluster scale (that's `benches/scale.rs`).
+//! `--smoke` shrinks the sweep to 4 seeds; the full (non-smoke) sweep
+//! uses the default 16 seeds per scenario and gates on parallel
+//! speedup when the machine has ≥ 4 cores.
+
+use std::time::Instant;
+
+use equilibrium::fleet::{run_library, FleetConfig};
+use equilibrium::scenario::ALL;
+use equilibrium::util::json::Json;
+use equilibrium::util::parallel::with_threads;
+use equilibrium::util::units::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let cfg = FleetConfig {
+        seeds: if smoke { 4 } else { 16 },
+        reduced: true,
+        ..FleetConfig::default()
+    };
+    let names: Vec<&str> = ALL.to_vec();
+    println!(
+        "fleet bench — {} scenarios × {} seeds (reduced), threads 1/2/4",
+        names.len(),
+        cfg.seeds
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut walls: Vec<f64> = Vec::new();
+    let mut first_render: Option<String> = None;
+    for threads in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let result = with_threads(threads, || run_library(&names, &cfg)).expect("fleet sweep");
+        let wall = t0.elapsed().as_secs_f64();
+        let rendered = result.to_baseline().render();
+        match &first_render {
+            None => first_render = Some(rendered),
+            Some(first) => assert_eq!(
+                first, &rendered,
+                "aggregate output diverged at {threads} threads"
+            ),
+        }
+        println!("  threads {threads}: sweep wall time {}", fmt_duration(wall));
+        walls.push(wall);
+        rows.push(Json::obj().set("threads", threads).set("wall_seconds", wall));
+    }
+    let speedup = walls[0] / walls[2];
+    println!("speedup 1 → 4 threads: {speedup:.2}×  (aggregates byte-identical)");
+
+    let doc = Json::obj()
+        .set("bench", "fleet")
+        .set("smoke", smoke)
+        .set("scenarios", names.len())
+        .set("seeds", cfg.seeds)
+        .set("reduced", true)
+        .set("byte_identical", true)
+        .set("threads", Json::Arr(rows))
+        .set("speedup_1_to_4", speedup);
+    std::fs::write("BENCH_fleet.json", doc.pretty()).expect("write BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json");
+
+    if smoke {
+        println!("smoke mode: speedup gate skipped (reduced seed count)");
+    } else {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores >= 4 {
+            assert!(
+                speedup > 1.2,
+                "full sweep must show parallel speedup at 4 threads (got {speedup:.2}×)"
+            );
+            println!("gate passed: {speedup:.2}× sweep speedup at 4 threads");
+        } else {
+            println!("speedup gate skipped: only {cores} core(s) available");
+        }
+    }
+}

@@ -360,4 +360,77 @@ mod tests {
             Err(ScriptError::EmptyItems(1))
         );
     }
+
+    #[test]
+    fn parse_rejects_truncated_and_trailing_garbage() {
+        // too few words to be either command shape
+        assert_eq!(parse_script("ceph osd pg-upmap-items"), Err(ScriptError::NotUpmap(1)));
+        // rm-pg-upmap-items takes exactly one PG id — trailing garbage
+        // is not a recognized command
+        assert_eq!(
+            parse_script("ceph osd rm-pg-upmap-items 1.1 junk"),
+            Err(ScriptError::NotUpmap(1))
+        );
+        // negative ids cannot be devices
+        assert_eq!(
+            parse_script("ceph osd pg-upmap-items 1.1 -1 2"),
+            Err(ScriptError::BadOsd(1))
+        );
+        // malformed pg id in a removal line
+        assert_eq!(
+            parse_script("ceph osd rm-pg-upmap-items x.y"),
+            Err(ScriptError::BadPgId(1))
+        );
+        // the reported line number is 1-based and skips comments/blanks
+        assert_eq!(
+            parse_script("# header\n\nceph osd pg-upmap-items 1.zz 1 2"),
+            Err(ScriptError::BadPgId(3))
+        );
+    }
+
+    /// `diff_plan` on tables that share no PGs: disjoint-but-known
+    /// tables diff into a net plan covering both sides (restore what
+    /// only the current state has, relocate what only the target
+    /// names); any PG the cluster lacks is a typed error — never a
+    /// panic.
+    #[test]
+    fn diff_plan_with_disjoint_tables() {
+        let initial = clusters::demo(13);
+        let mut moved = initial.clone();
+        // current state: an upmap entry on pg_a only
+        let pg_a = moved.pgs().next().unwrap().id();
+        let a_from = moved.pg(pg_a).unwrap().devices().next().unwrap();
+        let a_to = (0..moved.osd_count() as OsdId)
+            .find(|&o| moved.check_movement(pg_a, a_from, o).is_ok())
+            .unwrap();
+        moved.apply_movement(pg_a, a_from, a_to).unwrap();
+
+        // target table: a different PG entirely
+        let pg_b = moved.pgs().map(|p| p.id()).find(|&id| id != pg_a).unwrap();
+        let b_from = moved.pg(pg_b).unwrap().devices().next().unwrap();
+        let b_to = (0..moved.osd_count() as OsdId)
+            .find(|&o| moved.check_movement(pg_b, b_from, o).is_ok())
+            .unwrap();
+        let mut table = UpmapTable::new();
+        table.insert(pg_b, vec![(b_from, b_to)]);
+
+        let net = diff_plan(&moved, &table).unwrap();
+        assert_eq!(net.len(), 2, "restore pg_a, relocate pg_b");
+        assert!(net.iter().any(|m| m.pg == pg_a && m.from == a_to && m.to == a_from));
+        assert!(net.iter().any(|m| m.pg == pg_b && m.from == b_from && m.to == b_to));
+
+        // a target table naming a PG the cluster lacks: typed error
+        let mut ghost = UpmapTable::new();
+        ghost.insert(PgId::new(77, 1), vec![(0, 1)]);
+        assert!(matches!(
+            diff_plan(&moved, &ghost),
+            Err(crate::cluster::StateError::UnknownPg(_))
+        ));
+        // ... even when mixed with valid entries
+        ghost.insert(pg_b, vec![(b_from, b_to)]);
+        assert!(matches!(
+            diff_plan(&moved, &ghost),
+            Err(crate::cluster::StateError::UnknownPg(_))
+        ));
+    }
 }

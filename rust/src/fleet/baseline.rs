@@ -1,0 +1,291 @@
+//! `FLEET_baseline.json`: the committed form of a fleet sweep's
+//! per-scenario metric distributions.
+//!
+//! A baseline is the *statistical contract* of the balancer: "over
+//! these seeds, on these scenarios, through this pipeline, the metrics
+//! distribute like this". It is emitted by `fleet run --out`, diffed by
+//! [`super::gate::gate`], and rendered by `report fleet`. Serialization goes
+//! through the hand-rolled [`crate::util::json`] (sorted object keys,
+//! shortest-round-trip floats), so the same sweep produces the same
+//! bytes on every run at every thread count — CI pins exactly that.
+//!
+//! Wall-clock channels (balancer calculation time) are deliberately
+//! **absent**: a baseline may only contain values that replay
+//! bit-for-bit from the seeds.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::util::json::{Json, JsonError};
+
+use super::stats::Distribution;
+
+/// Scheduler knobs recorded for `"phased"` sweeps — the CLI-reachable
+/// subset of `ScheduleConfig` — so a gate replays the exact schedule
+/// that produced the baseline (phase counts and makespans depend on
+/// them). Library callers building exotic `ScheduleConfig`s (e.g.
+/// `target_phase_seconds`) should gate through the library API, where
+/// the full config is in hand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleMeta {
+    /// Max concurrent transfers per OSD within a phase.
+    pub max_backfills_per_osd: u64,
+    /// Failure-domain level name (`Level::as_str` form, e.g. `"host"`).
+    pub domain_level: String,
+    /// Max concurrent transfers per failure domain within a phase.
+    pub max_backfills_per_domain: u64,
+}
+
+/// The sweep parameters a baseline was produced under. A gate replays
+/// the sweep with exactly these parameters; any difference is a
+/// structural mismatch, not a tolerance question.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepMeta {
+    /// Seeds per scenario.
+    pub seeds: u64,
+    /// First seed (the sweep covers `seed_base .. seed_base + seeds`).
+    pub seed_base: u64,
+    /// Reduced-size scenarios (small cluster/volumes, CI smoke)?
+    pub reduced: bool,
+    /// Plan pipeline shape: `"raw"`, `"optimized"`, or `"phased"`.
+    pub pipeline: String,
+    /// Scheduler knobs; `Some` exactly when `pipeline == "phased"`.
+    pub schedule: Option<ScheduleMeta>,
+}
+
+/// One scenario's metric distributions over the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioDist {
+    /// Library scenario name.
+    pub name: String,
+    /// Metric name → distribution (keys from [`super::METRICS`]).
+    pub metrics: BTreeMap<String, Distribution>,
+}
+
+/// A complete fleet baseline: sweep parameters + per-scenario
+/// distributions, in sweep order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetBaseline {
+    /// The sweep parameters.
+    pub meta: SweepMeta,
+    /// Per-scenario summaries, in the order they were swept.
+    pub scenarios: Vec<ScenarioDist>,
+}
+
+impl FleetBaseline {
+    /// Look up one scenario's summary by name.
+    pub fn scenario(&self, name: &str) -> Option<&ScenarioDist> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    /// Serialize to the `FLEET_baseline.json` document.
+    pub fn to_json(&self) -> Json {
+        let scenarios: Vec<Json> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                let mut metrics = Json::obj();
+                for (name, dist) in &s.metrics {
+                    metrics = metrics.set(name, dist.to_json());
+                }
+                Json::obj().set("name", s.name.as_str()).set("metrics", metrics)
+            })
+            .collect();
+        let mut doc = Json::obj()
+            .set("kind", "fleet_baseline")
+            .set("version", 1u64)
+            .set("seeds", self.meta.seeds)
+            .set("seed_base", self.meta.seed_base)
+            .set("reduced", self.meta.reduced)
+            .set("pipeline", self.meta.pipeline.as_str())
+            .set("scenarios", Json::Arr(scenarios));
+        if let Some(s) = &self.meta.schedule {
+            doc = doc.set(
+                "schedule",
+                Json::obj()
+                    .set("max_backfills_per_osd", s.max_backfills_per_osd)
+                    .set("domain_level", s.domain_level.as_str())
+                    .set("max_backfills_per_domain", s.max_backfills_per_domain),
+            );
+        }
+        doc
+    }
+
+    /// The exact file content `fleet run --out` writes (pretty JSON +
+    /// trailing newline). Byte-identical for identical sweeps — the
+    /// thread-determinism pin compares this string directly.
+    pub fn render(&self) -> String {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        text
+    }
+}
+
+/// Why a baseline document could not be loaded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BaselineError {
+    /// The text is not valid JSON.
+    Json(JsonError),
+    /// The JSON does not have the baseline schema.
+    Schema(String),
+}
+
+impl fmt::Display for BaselineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BaselineError::Json(e) => write!(f, "baseline is not valid JSON: {e}"),
+            BaselineError::Schema(msg) => write!(f, "baseline schema error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BaselineError {}
+
+fn schema(msg: impl Into<String>) -> BaselineError {
+    BaselineError::Schema(msg.into())
+}
+
+/// Parse a `FLEET_baseline.json` document (the inverse of
+/// [`FleetBaseline::render`]). Every structural problem is a typed
+/// [`BaselineError`] — a hand-edited or truncated baseline can never
+/// panic the gate.
+pub fn parse_baseline(text: &str) -> Result<FleetBaseline, BaselineError> {
+    let v = Json::parse(text).map_err(BaselineError::Json)?;
+    if v.get_str("kind") != Some("fleet_baseline") {
+        return Err(schema("'kind' must be \"fleet_baseline\""));
+    }
+    let pipeline = v
+        .get_str("pipeline")
+        .ok_or_else(|| schema("missing string 'pipeline'"))?
+        .to_string();
+    let schedule = match v.get("schedule") {
+        Some(s) => Some(ScheduleMeta {
+            max_backfills_per_osd: s
+                .get_u64("max_backfills_per_osd")
+                .ok_or_else(|| schema("schedule: missing integer 'max_backfills_per_osd'"))?,
+            domain_level: s
+                .get_str("domain_level")
+                .ok_or_else(|| schema("schedule: missing string 'domain_level'"))?
+                .to_string(),
+            max_backfills_per_domain: s
+                .get_u64("max_backfills_per_domain")
+                .ok_or_else(|| schema("schedule: missing integer 'max_backfills_per_domain'"))?,
+        }),
+        None => None,
+    };
+    if (pipeline == "phased") != schedule.is_some() {
+        return Err(schema("'schedule' must be present exactly when pipeline is \"phased\""));
+    }
+    let meta = SweepMeta {
+        seeds: v.get_u64("seeds").ok_or_else(|| schema("missing integer 'seeds'"))?,
+        seed_base: v
+            .get_u64("seed_base")
+            .ok_or_else(|| schema("missing integer 'seed_base'"))?,
+        reduced: v
+            .get("reduced")
+            .and_then(|j| j.as_bool())
+            .ok_or_else(|| schema("missing boolean 'reduced'"))?,
+        pipeline,
+        schedule,
+    };
+    let mut scenarios = Vec::new();
+    for (i, s) in v
+        .get_arr("scenarios")
+        .ok_or_else(|| schema("missing array 'scenarios'"))?
+        .iter()
+        .enumerate()
+    {
+        let name = s
+            .get_str("name")
+            .ok_or_else(|| schema(format!("scenario #{i}: missing string 'name'")))?
+            .to_string();
+        let raw_metrics = s
+            .get("metrics")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| schema(format!("scenario '{name}': missing object 'metrics'")))?;
+        let mut metrics = BTreeMap::new();
+        for (metric, dist) in raw_metrics {
+            let d = Distribution::from_json(dist)
+                .ok_or_else(|| schema(format!("scenario '{name}': malformed metric '{metric}'")))?;
+            metrics.insert(metric.clone(), d);
+        }
+        scenarios.push(ScenarioDist { name, metrics });
+    }
+    Ok(FleetBaseline { meta, scenarios })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FleetBaseline {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("variance".to_string(), Distribution::from_values(&[1e-4, 2e-4, 3e-4]));
+        metrics.insert("raw_bytes".to_string(), Distribution::from_values(&[10.0, 20.0, 15.0]));
+        FleetBaseline {
+            meta: SweepMeta {
+                seeds: 3,
+                seed_base: 0,
+                reduced: true,
+                pipeline: "raw".to_string(),
+                schedule: None,
+            },
+            scenarios: vec![ScenarioDist { name: "pool-growth".to_string(), metrics }],
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let b = sample();
+        let parsed = parse_baseline(&b.render()).unwrap();
+        assert_eq!(parsed, b);
+        assert!(parsed.scenario("pool-growth").is_some());
+        assert!(parsed.scenario("nope").is_none());
+    }
+
+    #[test]
+    fn render_is_deterministic() {
+        assert_eq!(sample().render(), sample().render());
+        assert!(sample().render().ends_with('\n'));
+    }
+
+    #[test]
+    fn phased_baselines_round_trip_their_scheduler_knobs() {
+        let mut b = sample();
+        b.meta.pipeline = "phased".to_string();
+        b.meta.schedule = Some(ScheduleMeta {
+            max_backfills_per_osd: 4,
+            domain_level: "rack".to_string(),
+            max_backfills_per_domain: 8,
+        });
+        let parsed = parse_baseline(&b.render()).unwrap();
+        assert_eq!(parsed, b);
+        assert_eq!(parsed.meta.schedule.as_ref().unwrap().domain_level, "rack");
+
+        // a phased baseline WITHOUT its schedule is a schema error …
+        b.meta.schedule = None;
+        assert!(matches!(parse_baseline(&b.render()), Err(BaselineError::Schema(_))));
+        // … and so is a schedule on a non-phased baseline
+        let mut raw = sample();
+        raw.meta.schedule = Some(ScheduleMeta {
+            max_backfills_per_osd: 1,
+            domain_level: "host".to_string(),
+            max_backfills_per_domain: 2,
+        });
+        assert!(matches!(parse_baseline(&raw.render()), Err(BaselineError::Schema(_))));
+    }
+
+    #[test]
+    fn malformed_documents_are_typed_errors() {
+        assert!(matches!(parse_baseline("not json"), Err(BaselineError::Json(_))));
+        assert!(matches!(parse_baseline("{}"), Err(BaselineError::Schema(_))));
+        assert!(matches!(
+            parse_baseline(r#"{"kind":"fleet_baseline"}"#),
+            Err(BaselineError::Schema(_))
+        ));
+        // a scenario with a truncated metric object
+        let bad = r#"{"kind":"fleet_baseline","seeds":1,"seed_base":0,"reduced":true,
+                      "pipeline":"raw","scenarios":[{"name":"x","metrics":{"variance":{"mean":1}}}]}"#;
+        assert!(matches!(parse_baseline(bad), Err(BaselineError::Schema(_))));
+    }
+}

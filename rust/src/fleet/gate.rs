@@ -1,0 +1,240 @@
+//! The statistical regression gate: diff a freshly swept
+//! [`FleetBaseline`] against a committed one under per-field
+//! tolerances.
+//!
+//! Two failure classes are kept apart on purpose:
+//!
+//! * **mismatches** — the sweeps are not comparable at all (different
+//!   seed counts, scenario sets, or pipeline shapes). Tolerances do not
+//!   apply; the gate fails structurally.
+//! * **violations** — comparable sweeps whose metric fields drifted
+//!   past tolerance (the optimizer suddenly moving more bytes at p90,
+//!   variance regressing at the tail, an extra scheduling phase…).
+//!
+//! Since every sweep is a pure function of its seeds, an unchanged
+//! balancer reproduces the baseline *exactly*; the tolerance only
+//! absorbs intentional cross-platform float-formation differences and
+//! lets operators loosen the gate deliberately.
+
+use std::fmt;
+
+use super::baseline::FleetBaseline;
+
+/// Gate tolerances. A field passes when
+/// `|current − baseline| ≤ abs + rel · max(|baseline|, |current|)`.
+#[derive(Debug, Clone)]
+pub struct GateConfig {
+    /// Relative tolerance (default 1%).
+    pub rel: f64,
+    /// Absolute floor, for metrics that sit at or near zero
+    /// (`min_fill` on clusters with empty devices).
+    pub abs: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig { rel: 0.01, abs: 1e-12 }
+    }
+}
+
+/// One metric field outside tolerance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateViolation {
+    /// Library scenario name.
+    pub scenario: String,
+    /// Metric name (see [`super::METRICS`]).
+    pub metric: String,
+    /// Distribution field (`mean`, `p90`, …).
+    pub field: &'static str,
+    /// The committed value.
+    pub baseline: f64,
+    /// The observed value.
+    pub current: f64,
+    /// The tolerance that was exceeded.
+    pub allowed: f64,
+}
+
+impl fmt::Display for GateViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}/{}.{}: baseline {}, current {} (allowed Δ {})",
+            self.scenario, self.metric, self.field, self.baseline, self.current, self.allowed
+        )
+    }
+}
+
+/// Everything one gate evaluation found.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// Structural incomparabilities (config or scenario-set drift).
+    pub mismatches: Vec<String>,
+    /// Metric fields outside tolerance.
+    pub violations: Vec<GateViolation>,
+    /// Metric fields compared.
+    pub checked: usize,
+}
+
+impl GateReport {
+    /// Did the gate pass (no mismatches, no violations)?
+    pub fn passed(&self) -> bool {
+        self.mismatches.is_empty() && self.violations.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline` under `cfg`. Never panics:
+/// missing scenarios/metrics surface as mismatches.
+pub fn gate(baseline: &FleetBaseline, current: &FleetBaseline, cfg: &GateConfig) -> GateReport {
+    let mut report = GateReport::default();
+    if baseline.scenarios.is_empty() {
+        // an empty baseline gates nothing — refuse rather than
+        // green-light CI on a truncated or mis-merged file
+        report.mismatches.push("baseline contains no scenarios".to_string());
+    }
+    if baseline.meta != current.meta {
+        report.mismatches.push(format!(
+            "sweep config differs: baseline {:?} vs current {:?}",
+            baseline.meta, current.meta
+        ));
+    }
+    for b in &baseline.scenarios {
+        let Some(c) = current.scenario(&b.name) else {
+            report
+                .mismatches
+                .push(format!("scenario '{}' missing from the current sweep", b.name));
+            continue;
+        };
+        for (metric, bd) in &b.metrics {
+            let Some(cd) = c.metrics.get(metric) else {
+                report.mismatches.push(format!(
+                    "scenario '{}': metric '{metric}' missing from the current sweep",
+                    b.name
+                ));
+                continue;
+            };
+            for ((field, bv), (_, cv)) in bd.fields().into_iter().zip(cd.fields()) {
+                report.checked += 1;
+                let allowed = cfg.abs + cfg.rel * bv.abs().max(cv.abs());
+                if (bv - cv).abs() > allowed {
+                    report.violations.push(GateViolation {
+                        scenario: b.name.clone(),
+                        metric: metric.clone(),
+                        field,
+                        baseline: bv,
+                        current: cv,
+                        allowed,
+                    });
+                }
+            }
+        }
+        // metric-set drift in the other direction: a metric the current
+        // sweep produces but the baseline never pinned (a trimmed
+        // baseline, or a METRICS addition) must not pass silently
+        for metric in c.metrics.keys() {
+            if !b.metrics.contains_key(metric) {
+                report.mismatches.push(format!(
+                    "scenario '{}': metric '{metric}' missing from the baseline",
+                    b.name
+                ));
+            }
+        }
+    }
+    for c in &current.scenarios {
+        if baseline.scenario(&c.name).is_none() {
+            report
+                .mismatches
+                .push(format!("scenario '{}' is not in the baseline", c.name));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::super::baseline::{ScenarioDist, SweepMeta};
+    use super::super::stats::Distribution;
+    use super::*;
+
+    fn baseline_with(values: &[f64]) -> FleetBaseline {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("raw_bytes".to_string(), Distribution::from_values(values));
+        FleetBaseline {
+            meta: SweepMeta {
+                seeds: values.len() as u64,
+                seed_base: 0,
+                reduced: true,
+                pipeline: "raw".to_string(),
+                schedule: None,
+            },
+            scenarios: vec![ScenarioDist { name: "s".to_string(), metrics }],
+        }
+    }
+
+    #[test]
+    fn identical_baselines_pass() {
+        let b = baseline_with(&[10.0, 20.0, 30.0]);
+        let r = gate(&b, &b.clone(), &GateConfig::default());
+        assert!(r.passed());
+        assert_eq!(r.checked, 7);
+    }
+
+    #[test]
+    fn drift_past_tolerance_is_a_violation() {
+        let b = baseline_with(&[10.0, 20.0, 30.0]);
+        let mut c = b.clone();
+        c.scenarios[0].metrics.get_mut("raw_bytes").unwrap().p90 *= 1.1;
+        let r = gate(&b, &c, &GateConfig::default());
+        assert!(!r.passed());
+        assert_eq!(r.violations.len(), 1);
+        let v = &r.violations[0];
+        assert_eq!((v.scenario.as_str(), v.metric.as_str(), v.field), ("s", "raw_bytes", "p90"));
+        // a looser gate admits the same drift
+        assert!(gate(&b, &c, &GateConfig { rel: 0.2, ..GateConfig::default() }).passed());
+    }
+
+    #[test]
+    fn structural_drift_is_a_mismatch() {
+        let b = baseline_with(&[1.0, 2.0]);
+        // different seed count
+        let mut c = b.clone();
+        c.meta.seeds = 99;
+        assert!(!gate(&b, &c, &GateConfig::default()).passed());
+        // scenario present only on one side (both directions)
+        let mut extra = b.clone();
+        extra.scenarios.push(ScenarioDist { name: "extra".to_string(), metrics: BTreeMap::new() });
+        assert!(!gate(&b, &extra, &GateConfig::default()).passed());
+        assert!(!gate(&extra, &b, &GateConfig::default()).passed());
+        // metric missing from the current sweep
+        let mut thin = b.clone();
+        thin.scenarios[0].metrics.clear();
+        assert!(!gate(&b, &thin, &GateConfig::default()).passed());
+        // ... and metric missing from the BASELINE (trimmed file) — the
+        // reverse direction must not pass silently either
+        let mut trimmed = b.clone();
+        trimmed.scenarios[0].metrics.clear();
+        let r = gate(&trimmed, &b, &GateConfig::default());
+        assert!(!r.passed());
+        assert!(r.mismatches.iter().any(|m| m.contains("missing from the baseline")), "{r:?}");
+    }
+
+    #[test]
+    fn empty_baseline_is_refused() {
+        let b = baseline_with(&[1.0]);
+        let mut empty = b.clone();
+        empty.scenarios.clear();
+        // gating anything against an empty baseline fails structurally
+        // instead of passing with zero checked fields
+        let r = gate(&empty, &b, &GateConfig::default());
+        assert!(!r.passed());
+        assert!(r.mismatches.iter().any(|m| m.contains("no scenarios")), "{r:?}");
+    }
+
+    #[test]
+    fn zero_valued_metrics_use_the_absolute_floor() {
+        let b = baseline_with(&[0.0, 0.0]);
+        let r = gate(&b, &b.clone(), &GateConfig::default());
+        assert!(r.passed(), "exact zeros must compare equal under the abs floor");
+    }
+}

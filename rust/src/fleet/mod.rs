@@ -1,0 +1,464 @@
+//! Deterministic multi-seed scenario fleet (RFC 0004).
+//!
+//! One scenario run is one trajectory; the paper's claims (variance
+//! reduction, movement amount, makespan) are claims about
+//! *distributions*. The fleet layer runs any [`ScenarioSpec`] — or the
+//! whole [`crate::scenario::library`] — across an N-seed sweep in
+//! parallel and folds every run into a compact [`RunStats`], then into
+//! per-scenario [`Distribution`]s ([`stats`]). The aggregate output is
+//! **byte-identical at any `EQUILIBRIUM_THREADS`, including 1**: the
+//! sweep fans out through [`crate::util::parallel::map_collect`]
+//! (fixed chunk schedule + ordered reduction), each run is a pure
+//! function of its seed, and wall-clock channels never enter the
+//! aggregate.
+//!
+//! Downstream: [`baseline`] pins a sweep as `FLEET_baseline.json`,
+//! [`gate::gate`] turns drift past per-metric tolerances into a CI
+//! failure, and `report fleet` renders the distributions as a
+//! table/CSV.
+#![warn(missing_docs)]
+
+pub mod baseline;
+pub mod gate;
+pub mod stats;
+
+pub use baseline::{
+    parse_baseline, BaselineError, FleetBaseline, ScenarioDist, ScheduleMeta, SweepMeta,
+};
+pub use gate::{gate, GateConfig, GateReport, GateViolation};
+pub use stats::Distribution;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::balancer::Equilibrium;
+use crate::cluster::ClusterState;
+use crate::crush::OsdId;
+use crate::plan::PlanConfig;
+use crate::scenario::{
+    library, ScenarioConfig, ScenarioEngine, ScenarioError, ScenarioOutcome, ScenarioSpec,
+};
+use crate::util::parallel;
+
+/// The metrics every run reduces to, in canonical order. Baseline
+/// documents and summaries key their distributions by these names.
+pub const METRICS: [&str; 9] = [
+    "variance",
+    "max_fill",
+    "min_fill",
+    "planned_moves",
+    "raw_bytes",
+    "executed_moves",
+    "executed_bytes",
+    "phases",
+    "makespan",
+];
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Seeds per scenario (the sweep covers
+    /// `seed_base .. seed_base + seeds`).
+    pub seeds: u64,
+    /// First seed.
+    pub seed_base: u64,
+    /// Reduced-size scenarios (small cluster/volumes; CI smoke).
+    pub reduced: bool,
+    /// Plan pipeline every balance round runs through (RFC 0003);
+    /// default off — raw execution, the historical behavior.
+    pub plan: PlanConfig,
+    /// Parallel chunk length for the seed fan-out. 1 (the default)
+    /// gives per-run work stealing — the right schedule for
+    /// heterogeneous-cost items — and, like any fixed value, leaves the
+    /// ordered reduction byte-identical at every thread count.
+    pub chunk: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            seeds: 16,
+            seed_base: 0,
+            reduced: false,
+            plan: PlanConfig::default(),
+            chunk: 1,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// CI quick mode: reduced scenarios, 4 seeds.
+    pub fn smoke() -> FleetConfig {
+        FleetConfig { seeds: 4, reduced: true, ..FleetConfig::default() }
+    }
+
+    /// The pipeline shape recorded in baselines: `"raw"`,
+    /// `"optimized"`, or `"phased"`.
+    pub fn pipeline_label(&self) -> &'static str {
+        if self.plan.schedule.is_some() {
+            "phased"
+        } else if self.plan.optimize {
+            "optimized"
+        } else {
+            "raw"
+        }
+    }
+
+    /// The [`SweepMeta`] a baseline of this sweep carries — including
+    /// the scheduler knobs for phased pipelines, so a gate can replay
+    /// the exact schedule that produced the numbers.
+    pub fn meta(&self) -> SweepMeta {
+        SweepMeta {
+            seeds: self.seeds,
+            seed_base: self.seed_base,
+            reduced: self.reduced,
+            pipeline: self.pipeline_label().to_string(),
+            schedule: self.plan.schedule.as_ref().map(|s| ScheduleMeta {
+                max_backfills_per_osd: s.max_backfills_per_osd as u64,
+                domain_level: s.domain_level.as_str().to_string(),
+                max_backfills_per_domain: s.max_backfills_per_domain as u64,
+            }),
+        }
+    }
+}
+
+/// What one scenario run reduces to. Every field except
+/// [`RunStats::calc_seconds`] is a pure function of the seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunStats {
+    /// The seed this run used.
+    pub seed: u64,
+    /// Final population variance of per-device utilization (the
+    /// paper's balance metric).
+    pub variance: f64,
+    /// Final fill of the fullest up device (relative utilization).
+    pub max_fill: f64,
+    /// Final fill of the emptiest up device.
+    pub min_fill: f64,
+    /// Movements the balancer planned over the whole timeline.
+    pub planned_moves: usize,
+    /// Bytes the raw plans would transfer.
+    pub raw_bytes: u64,
+    /// Movements physically executed (= planned without the pipeline).
+    pub executed_moves: usize,
+    /// Bytes physically executed (≤ raw under the pipeline).
+    pub executed_bytes: u64,
+    /// Executed phases (scheduler phases under the pipeline; rounds
+    /// that physically moved data otherwise).
+    pub phases: usize,
+    /// Total virtual time, seconds (executor makespans + declared
+    /// workload durations; calculation time never enters it).
+    pub makespan: f64,
+    /// Wall-clock balancer planning time, seconds. Measurement channel
+    /// only — excluded from summaries, baselines, and gates.
+    pub calc_seconds: f64,
+}
+
+impl RunStats {
+    /// Reduce a finished run. `state` is the post-run cluster.
+    pub fn reduce(seed: u64, state: &ClusterState, out: &ScenarioOutcome) -> RunStats {
+        let mut max_fill = 0.0f64;
+        let mut min_fill = f64::INFINITY;
+        let mut any = false;
+        for o in 0..state.osd_count() as OsdId {
+            if !state.osd_is_up(o) || state.osd_size(o) == 0 {
+                continue;
+            }
+            let u = state.utilization(o);
+            max_fill = max_fill.max(u);
+            min_fill = min_fill.min(u);
+            any = true;
+        }
+        if !any {
+            min_fill = 0.0;
+        }
+        RunStats {
+            seed,
+            variance: state.utilization_variance(),
+            max_fill,
+            min_fill,
+            planned_moves: out.movements.len(),
+            raw_bytes: out.moved_bytes(),
+            executed_moves: out.executed_move_count(),
+            executed_bytes: out.executed_bytes(),
+            phases: out.executed_phases(),
+            makespan: out.elapsed,
+            calc_seconds: out.total_calc_seconds,
+        }
+    }
+
+    /// The deterministic metric values, aligned with [`METRICS`]
+    /// (wall-clock `calc_seconds` deliberately absent).
+    pub fn metric_values(&self) -> [f64; METRICS.len()] {
+        [
+            self.variance,
+            self.max_fill,
+            self.min_fill,
+            self.planned_moves as f64,
+            self.raw_bytes as f64,
+            self.executed_moves as f64,
+            self.executed_bytes as f64,
+            self.phases as f64,
+            self.makespan,
+        ]
+    }
+}
+
+/// One scenario's sweep: per-seed stats in seed order.
+#[derive(Debug, Clone)]
+pub struct ScenarioSweep {
+    /// Scenario (or custom spec) name.
+    pub name: String,
+    /// Per-seed reductions, ascending seed.
+    pub runs: Vec<RunStats>,
+}
+
+impl ScenarioSweep {
+    /// Fold the sweep into per-metric distributions.
+    pub fn summarize(&self) -> ScenarioDist {
+        let mut metrics = BTreeMap::new();
+        for (i, name) in METRICS.iter().enumerate() {
+            let values: Vec<f64> = self.runs.iter().map(|r| r.metric_values()[i]).collect();
+            metrics.insert(name.to_string(), Distribution::from_values(&values));
+        }
+        ScenarioDist { name: self.name.clone(), metrics }
+    }
+}
+
+/// A whole fleet run: the sweep parameters plus every scenario's sweep.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    /// The parameters the sweep ran under.
+    pub meta: SweepMeta,
+    /// Per-scenario sweeps, in input order.
+    pub sweeps: Vec<ScenarioSweep>,
+}
+
+impl FleetResult {
+    /// Summarize into the committable baseline form.
+    pub fn to_baseline(&self) -> FleetBaseline {
+        FleetBaseline {
+            meta: self.meta.clone(),
+            scenarios: self.sweeps.iter().map(ScenarioSweep::summarize).collect(),
+        }
+    }
+
+    /// Mean wall-clock balancer planning time per run (reporting only;
+    /// never part of the baseline).
+    pub fn mean_calc_seconds(&self) -> f64 {
+        let mut n = 0usize;
+        let mut sum = 0.0;
+        for s in &self.sweeps {
+            for r in &s.runs {
+                n += 1;
+                sum += r.calc_seconds;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+/// Why a fleet sweep failed.
+#[derive(Debug)]
+pub enum FleetError {
+    /// The requested name is not in [`crate::scenario::library::ALL`].
+    UnknownScenario(String),
+    /// One run of the sweep failed.
+    Run {
+        /// The scenario that failed.
+        scenario: String,
+        /// The seed it failed at.
+        seed: u64,
+        /// The engine's error.
+        error: ScenarioError,
+    },
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::UnknownScenario(name) => {
+                write!(f, "unknown library scenario '{name}' (see `scenario list`)")
+            }
+            FleetError::Run { scenario, seed, error } => {
+                write!(f, "scenario '{scenario}' failed at seed {seed}: {error}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// Run one library scenario at one seed and reduce it.
+fn run_library_once(name: &str, seed: u64, cfg: &FleetConfig) -> Result<RunStats, FleetError> {
+    let mut case = library::by_name(name, seed, cfg.reduced)
+        .ok_or_else(|| FleetError::UnknownScenario(name.to_string()))?
+        .with_plan(cfg.plan.clone());
+    // the fleet only reads terminal metrics — skip the O(pools × OSDs)
+    // per-move sample captures
+    case.config.record_series = false;
+    let out = case.run().map_err(|error| FleetError::Run {
+        scenario: name.to_string(),
+        seed,
+        error,
+    })?;
+    Ok(RunStats::reduce(seed, &case.state, &out))
+}
+
+fn collect_runs(
+    name: &str,
+    results: Vec<Result<RunStats, FleetError>>,
+) -> Result<ScenarioSweep, FleetError> {
+    let mut runs = Vec::with_capacity(results.len());
+    for r in results {
+        runs.push(r?);
+    }
+    Ok(ScenarioSweep { name: name.to_string(), runs })
+}
+
+/// Sweep one library scenario over `cfg.seeds` seeds in parallel.
+///
+/// ```
+/// use equilibrium::fleet::{sweep_case, FleetConfig};
+///
+/// let cfg = FleetConfig { seeds: 2, reduced: true, ..FleetConfig::default() };
+/// let sweep = sweep_case("device-failure", &cfg).unwrap();
+/// assert_eq!(sweep.runs.len(), 2);
+/// let dist = sweep.summarize();
+/// assert!(dist.metrics["variance"].max >= dist.metrics["variance"].min);
+/// ```
+pub fn sweep_case(name: &str, cfg: &FleetConfig) -> Result<ScenarioSweep, FleetError> {
+    if !library::ALL.contains(&name) {
+        return Err(FleetError::UnknownScenario(name.to_string()));
+    }
+    let results = parallel::map_collect(cfg.seeds as usize, cfg.chunk.max(1), |i| {
+        run_library_once(name, cfg.seed_base + i as u64, cfg)
+    });
+    collect_runs(name, results)
+}
+
+/// Sweep an arbitrary [`ScenarioSpec`] over `cfg.seeds` seeds:
+/// `make_state(seed)` builds each run's initial cluster, the spec's
+/// seed is overridden per run ([`ScenarioSpec::with_seed`]), and every
+/// run drives a fresh default [`Equilibrium`] balancer.
+pub fn sweep_spec<F>(
+    spec: &ScenarioSpec,
+    cfg: &FleetConfig,
+    make_state: F,
+) -> Result<ScenarioSweep, FleetError>
+where
+    F: Fn(u64) -> ClusterState + Sync,
+{
+    let results = parallel::map_collect(cfg.seeds as usize, cfg.chunk.max(1), |i| {
+        let seed = cfg.seed_base + i as u64;
+        let run_spec = spec.clone().with_seed(seed);
+        let mut state = make_state(seed);
+        let mut balancer = Equilibrium::default();
+        let config = ScenarioConfig {
+            plan: cfg.plan.clone(),
+            record_series: false,
+            ..ScenarioConfig::default()
+        };
+        let engine = ScenarioEngine::new(&mut state, Some(&mut balancer), config, run_spec.seed);
+        match engine.run(&run_spec) {
+            Ok(out) => Ok(RunStats::reduce(seed, &state, &out)),
+            Err(error) => Err(FleetError::Run { scenario: spec.name.clone(), seed, error }),
+        }
+    });
+    collect_runs(&spec.name, results)
+}
+
+/// Sweep several library scenarios, fanning out over **every
+/// (scenario, seed) pair jointly** so the work-stealing schedule
+/// balances heterogeneous scenario costs across threads. Results come
+/// back grouped per scenario in input order, each sweep in seed order —
+/// independent of thread count.
+pub fn run_library(names: &[&str], cfg: &FleetConfig) -> Result<FleetResult, FleetError> {
+    for name in names {
+        if !library::ALL.contains(name) {
+            return Err(FleetError::UnknownScenario(name.to_string()));
+        }
+    }
+    let per = cfg.seeds as usize;
+    let results = parallel::map_collect(names.len() * per, cfg.chunk.max(1), |i| {
+        run_library_once(names[i / per], cfg.seed_base + (i % per) as u64, cfg)
+    });
+    let mut it = results.into_iter();
+    let mut sweeps = Vec::with_capacity(names.len());
+    for name in names {
+        let mut runs = Vec::with_capacity(per);
+        for _ in 0..per {
+            runs.push(it.next().expect("one result per (scenario, seed) pair")?);
+        }
+        sweeps.push(ScenarioSweep { name: name.to_string(), runs });
+    }
+    Ok(FleetResult { meta: cfg.meta(), sweeps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_labels_cover_the_shapes() {
+        let mut cfg = FleetConfig::default();
+        assert_eq!(cfg.pipeline_label(), "raw");
+        cfg.plan = PlanConfig::optimized();
+        assert_eq!(cfg.pipeline_label(), "optimized");
+        cfg.plan = PlanConfig::phased();
+        assert_eq!(cfg.pipeline_label(), "phased");
+        let meta = cfg.meta();
+        assert_eq!(meta.pipeline, "phased");
+        // the knobs that shape phases/makespans are pinned in the meta
+        let sched = meta.schedule.expect("phased meta records its scheduler knobs");
+        assert_eq!(sched.max_backfills_per_osd, 1);
+        assert_eq!(sched.domain_level, "host");
+        assert_eq!(sched.max_backfills_per_domain, 2);
+    }
+
+    #[test]
+    fn smoke_config_is_reduced() {
+        let cfg = FleetConfig::smoke();
+        assert!(cfg.reduced);
+        assert_eq!(cfg.seeds, 4);
+        assert_eq!(cfg.pipeline_label(), "raw");
+    }
+
+    #[test]
+    fn metric_values_align_with_the_metric_names() {
+        let r = RunStats {
+            seed: 1,
+            variance: 0.5,
+            max_fill: 0.9,
+            min_fill: 0.1,
+            planned_moves: 10,
+            raw_bytes: 1000,
+            executed_moves: 8,
+            executed_bytes: 800,
+            phases: 3,
+            makespan: 60.0,
+            calc_seconds: 123.0,
+        };
+        let values = r.metric_values();
+        assert_eq!(values.len(), METRICS.len());
+        let lookup: BTreeMap<&str, f64> = METRICS.iter().copied().zip(values).collect();
+        assert_eq!(lookup["variance"], 0.5);
+        assert_eq!(lookup["raw_bytes"], 1000.0);
+        assert_eq!(lookup["executed_bytes"], 800.0);
+        assert_eq!(lookup["phases"], 3.0);
+        // wall clock never enters the deterministic metrics
+        assert!(!values.contains(&123.0));
+    }
+
+    #[test]
+    fn empty_sweep_summarizes_to_zeroed_distributions() {
+        let sweep = ScenarioSweep { name: "x".to_string(), runs: Vec::new() };
+        let dist = sweep.summarize();
+        assert_eq!(dist.metrics.len(), METRICS.len());
+        assert_eq!(dist.metrics["variance"], Distribution::default());
+    }
+}

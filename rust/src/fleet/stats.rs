@@ -1,0 +1,152 @@
+//! The fleet's summary-statistics kernel: fold a sweep's per-seed
+//! metric values into one [`Distribution`].
+//!
+//! Zero dependencies, exact semantics: mean and (population) stddev
+//! come from the Welford accumulator (`util/stats.rs`), percentiles use
+//! the **nearest-rank** definition on a sorted copy — every reported
+//! percentile is a value that actually occurred in the sweep, never an
+//! interpolated artifact. That matters for the statistical gate: a
+//! baseline pins real observations, so a deterministic replay
+//! reproduces them bit for bit.
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+/// Summary of one metric's distribution over a seed sweep.
+///
+/// All fields are exact functions of the input multiset (and, for the
+/// Welford channels, of the input *order*, which the fleet fixes to
+/// seed order) — serializing a [`Distribution`] is therefore
+/// deterministic at any thread count.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Distribution {
+    /// Arithmetic mean (Welford; 0 on an empty sweep).
+    pub mean: f64,
+    /// Population standard deviation (Welford; 0 on an empty sweep).
+    pub stddev: f64,
+    /// Smallest observation.
+    pub min: f64,
+    /// Nearest-rank 50th percentile (the median's lower variant).
+    pub p50: f64,
+    /// Nearest-rank 90th percentile.
+    pub p90: f64,
+    /// Nearest-rank 99th percentile.
+    pub p99: f64,
+    /// Largest observation.
+    pub max: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice: the value at
+/// 1-based rank `ceil(p/100 · n)`, clamped into the slice (0.0 on
+/// empty input). Unlike linear interpolation
+/// ([`crate::util::stats::percentile`]), the result is always an
+/// observed value.
+pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+impl Distribution {
+    /// Summarize `xs` (any order; a sorted copy is made internally).
+    /// Metric values are finite by construction — NaN input panics.
+    pub fn from_values(xs: &[f64]) -> Distribution {
+        if xs.is_empty() {
+            return Distribution::default();
+        }
+        let mut w = Welford::new();
+        for &x in xs {
+            w.push(x);
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("fleet metrics are never NaN"));
+        Distribution {
+            mean: w.mean(),
+            stddev: w.stddev(),
+            min: sorted[0],
+            p50: nearest_rank(&sorted, 50.0),
+            p90: nearest_rank(&sorted, 90.0),
+            p99: nearest_rank(&sorted, 99.0),
+            max: *sorted.last().expect("non-empty"),
+        }
+    }
+
+    /// `(field name, value)` pairs in canonical order — the gate and the
+    /// CSV emitter iterate this so field coverage can never drift
+    /// between the two.
+    pub fn fields(&self) -> [(&'static str, f64); 7] {
+        [
+            ("mean", self.mean),
+            ("stddev", self.stddev),
+            ("min", self.min),
+            ("p50", self.p50),
+            ("p90", self.p90),
+            ("p99", self.p99),
+            ("max", self.max),
+        ]
+    }
+
+    /// Serialize for `FLEET_baseline.json` (sorted keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (name, value) in self.fields() {
+            obj = obj.set(name, value);
+        }
+        obj
+    }
+
+    /// Parse the [`Distribution::to_json`] form (`None` on any missing
+    /// or non-numeric field).
+    pub fn from_json(v: &Json) -> Option<Distribution> {
+        Some(Distribution {
+            mean: v.get_f64("mean")?,
+            stddev: v.get_f64("stddev")?,
+            min: v.get_f64("min")?,
+            p50: v.get_f64("p50")?,
+            p90: v.get_f64("p90")?,
+            p99: v.get_f64("p99")?,
+            max: v.get_f64("max")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_is_an_observed_value() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(nearest_rank(&xs, 50.0), 2.0);
+        assert_eq!(nearest_rank(&xs, 90.0), 4.0);
+        assert_eq!(nearest_rank(&xs, 0.0), 1.0);
+        assert_eq!(nearest_rank(&xs, 100.0), 4.0);
+        assert_eq!(nearest_rank(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn summary_matches_batch_formulas() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let d = Distribution::from_values(&xs);
+        assert!((d.mean - 5.5).abs() < 1e-12);
+        // population stddev of 1..=10: sqrt(33/4)
+        assert!((d.stddev - (33.0f64 / 4.0).sqrt()).abs() < 1e-12);
+        assert_eq!(d.min, 1.0);
+        assert_eq!(d.max, 10.0);
+        assert_eq!(d.p50, 5.0);
+        assert_eq!(d.p90, 9.0);
+        assert_eq!(d.p99, 10.0);
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let d = Distribution::from_values(&[0.125, 3.5, 7.75, 0.0625]);
+        let back = Distribution::from_json(&Json::parse(&d.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(d, back);
+        // malformed input is None, not a panic
+        assert!(Distribution::from_json(&Json::parse("{\"mean\":1}").unwrap()).is_none());
+    }
+}

@@ -16,6 +16,7 @@ pub mod balancer;
 pub mod cluster;
 pub mod coordinator;
 pub mod crush;
+pub mod fleet;
 pub mod generator;
 pub mod plan;
 pub mod report;

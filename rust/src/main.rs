@@ -12,6 +12,9 @@
 //!   execution)
 //! * `scenario`  — list or run discrete-event scenario timelines (the
 //!   paper's §3 situations plus compound churn scenarios)
+//! * `fleet`     — deterministic multi-seed scenario sweeps: run a sweep,
+//!   compare raw vs piped execution, or gate a sweep against a committed
+//!   statistical baseline (RFC 0004)
 //! * `runtime-info` — show PJRT artifact status
 
 use std::path::PathBuf;
@@ -22,6 +25,7 @@ use equilibrium::balancer::{Balancer, EquilibriumConfig, MgrBalancer};
 use equilibrium::cluster::dump;
 use equilibrium::coordinator::{run_daemon, DaemonConfig, ExecutorConfig};
 use equilibrium::crush::Level;
+use equilibrium::fleet::{self, FleetConfig, GateConfig};
 use equilibrium::generator::clusters;
 use equilibrium::plan::{schedule_plan, PlanConfig, ScheduleConfig};
 use equilibrium::report::{self, Scoring};
@@ -44,6 +48,7 @@ fn main() -> ExitCode {
         "report" => cmd_report(rest),
         "daemon" => cmd_daemon(rest),
         "scenario" => cmd_scenario(rest),
+        "fleet" => cmd_fleet(rest),
         "df" => cmd_df(rest),
         "crush" => cmd_crush(rest),
         "runtime-info" => cmd_runtime_info(),
@@ -70,12 +75,16 @@ fn usage() -> String {
      \x20                [--max-moves N] [--k N] [--out FILE] [--optimize] [--phases]\n\
      \x20                [--max-backfills N] [--domain-level L] [--domain-backfills N]\n\
      \x20 simulate      --cluster <a..f|demo> [--seed N] [--scoring S] [--max-moves N]\n\
-     \x20 report        <table1|fig4|fig5|fig6|plan|ablate-k|ablate-count> [--clusters a,b,..]\n\
-     \x20                [--scoring S] [--seed N] [--out-dir DIR]\n\
+     \x20 report        <table1|fig4|fig5|fig6|plan|fleet|ablate-k|ablate-count> [--clusters a,b,..]\n\
+     \x20                [--scoring S] [--seed N] [--out-dir DIR] [--baseline FILE]\n\
      \x20 daemon        --cluster <a..f|demo> [--rounds N] [--write-gib X] [--moves-per-round N]\n\
      \x20                [--optimize] [--phases]\n\
      \x20 scenario      list | run [--name NAME | --all] [--seed N] [--reduced]\n\
      \x20                [--out-dir DIR] [--quiet] [--optimize] [--phases]\n\
+     \x20 fleet         run [--name NAME] [--seeds N] [--seed-base N] [--reduced|--smoke]\n\
+     \x20                [--optimize] [--phases] [--out FILE] [--out-dir DIR] [--quiet]\n\
+     \x20                | compare [same sweep flags]\n\
+     \x20                | gate --baseline FILE [--rel X]\n\
      \x20 df            --cluster <a..f|demo> | --state FILE   (ceph-df-style report)\n\
      \x20 crush         --cluster <a..f|demo> | --state FILE [--tree]  (decompile CRUSH map)\n\
      \x20 runtime-info\n"
@@ -331,7 +340,7 @@ fn cmd_simulate(argv: &[String]) -> AppResult {
 fn cmd_report(argv: &[String]) -> AppResult {
     let Some((which, rest)) = argv.split_first() else {
         return Err(app_err!(
-            "report requires an artifact: table1|fig4|fig5|fig6|plan|ablate-k|ablate-count"
+            "report requires an artifact: table1|fig4|fig5|fig6|plan|fleet|ablate-k|ablate-count"
         ));
     };
     let cli = Cli::new("equilibrium report", "regenerate paper tables/figures")
@@ -340,7 +349,8 @@ fn cmd_report(argv: &[String]) -> AppResult {
         .opt_default("scoring", "BACKEND", "native", "native|xla")
         .opt_default("seed", "N", "0", "generator seed")
         .opt_default("out-dir", "DIR", "target/figures", "CSV output directory")
-        .opt_default("max-moves", "N", "10000", "movement cap");
+        .opt_default("max-moves", "N", "10000", "movement cap")
+        .opt_default("baseline", "FILE", "FLEET_baseline.json", "fleet sweep JSON (report fleet)");
     let a = cli.parse(rest.iter())?;
     let seed = a.get_u64("seed")?.unwrap_or(0);
     let scoring = scoring_from(&a)?;
@@ -385,6 +395,20 @@ fn cmd_report(argv: &[String]) -> AppResult {
             let t = report::plan_table(&names, seed, scoring, &opts, &ScheduleConfig::default());
             println!("Plan pipeline — bytes moved and makespan, raw vs optimized+phased");
             println!("{}", t.render());
+        }
+        "fleet" => {
+            let path = a.get_or("baseline", "FLEET_baseline.json");
+            let b = fleet::parse_baseline(&std::fs::read_to_string(path)?)
+                .map_err(|e| app_err!("cannot load fleet baseline '{path}': {e}"))?;
+            println!(
+                "Fleet summary — {} scenarios × {} seeds ({}, {} pipeline)",
+                b.scenarios.len(),
+                b.meta.seeds,
+                if b.meta.reduced { "reduced" } else { "full-size" },
+                b.meta.pipeline,
+            );
+            println!("{}", report::fleet_table(&b).render());
+            report::write_fleet_csv(&out_dir, &b)?;
         }
         "ablate-k" => {
             let t = report::ablate_k(a.get_or("cluster", "a"), seed, &[1, 5, 25, 100], scoring);
@@ -544,6 +568,237 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
         }
     }
     Ok(())
+}
+
+fn cmd_fleet(argv: &[String]) -> AppResult {
+    let Some((which, rest)) = argv.split_first() else {
+        return Err(app_err!("fleet requires an action: run|compare|gate"));
+    };
+    match which.as_str() {
+        "run" => cmd_fleet_run(rest),
+        "compare" => cmd_fleet_compare(rest),
+        "gate" => cmd_fleet_gate(rest),
+        other => Err(app_err!("unknown fleet action '{other}' (run|compare|gate)")),
+    }
+}
+
+/// The sweep flags `fleet run` and `fleet compare` share.
+fn fleet_cli(program: &'static str, about: &'static str) -> Cli {
+    Cli::new(program, about)
+        .opt("name", "NAME", "sweep one library scenario (default: the whole library)")
+        .opt("seeds", "N", "seeds per scenario (default: 16, or 4 with --smoke)")
+        .opt_default("seed-base", "N", "0", "first seed of the sweep")
+        .flag("reduced", "reduced-size scenarios (small cluster and volumes)")
+        .flag("smoke", "CI quick mode: implies --reduced, defaults --seeds to 4")
+}
+
+fn fleet_config_from(a: &equilibrium::util::cli::Args) -> AppResult<FleetConfig> {
+    let smoke = a.flag("smoke");
+    let seeds = match a.get_u64("seeds")? {
+        Some(n) if n >= 1 => n,
+        Some(_) => return Err(app_err!("--seeds must be ≥ 1")),
+        None => {
+            if smoke {
+                4
+            } else {
+                16
+            }
+        }
+    };
+    Ok(FleetConfig {
+        seeds,
+        seed_base: a.get_u64("seed-base")?.unwrap_or(0),
+        reduced: smoke || a.flag("reduced"),
+        plan: plan_config_from(a)?,
+        chunk: 1,
+    })
+}
+
+fn fleet_names(a: &equilibrium::util::cli::Args) -> Vec<&str> {
+    match a.get("name") {
+        Some(n) => vec![n],
+        None => equilibrium::scenario::ALL.to_vec(),
+    }
+}
+
+fn size_label(reduced: bool) -> &'static str {
+    if reduced {
+        "reduced"
+    } else {
+        "full-size"
+    }
+}
+
+fn cmd_fleet_run(argv: &[String]) -> AppResult {
+    let cli = fleet_cli("equilibrium fleet run", "deterministic multi-seed scenario sweep")
+        .flag("optimize", "run each round's plan through the optimizer (RFC 0003)")
+        .flag("phases", "execute plans in failure-domain-capped phases (implies --optimize)")
+        .opt_default("max-backfills", "N", "1", "phases: concurrent transfers per OSD")
+        .opt_default("domain-level", "LEVEL", "host", "phases: failure-domain level")
+        .opt_default("domain-backfills", "N", "2", "phases: concurrent transfers per domain")
+        .opt("out", "FILE", "write the sweep summary as FLEET baseline JSON")
+        .opt("out-dir", "DIR", "write fleet_summary.csv here")
+        .flag("quiet", "suppress the summary table");
+    let a = cli.parse(argv.iter())?;
+    let cfg = fleet_config_from(&a)?;
+    let names = fleet_names(&a);
+    println!(
+        "fleet: sweeping {} scenario(s) × {} seeds ({}, {} pipeline)",
+        names.len(),
+        cfg.seeds,
+        size_label(cfg.reduced),
+        cfg.pipeline_label(),
+    );
+    let result = fleet::run_library(&names, &cfg).map_err(|e| app_err!("fleet sweep failed: {e}"))?;
+    let baseline = result.to_baseline();
+    if !a.flag("quiet") {
+        println!("{}", report::fleet_table(&baseline).render());
+        println!("mean calc time per run: {}", fmt_duration(result.mean_calc_seconds()));
+    }
+    if let Some(path) = a.get("out") {
+        std::fs::write(path, baseline.render())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(dir) = a.get("out-dir") {
+        report::write_fleet_csv(std::path::Path::new(dir), &baseline)?;
+    }
+    Ok(())
+}
+
+fn cmd_fleet_compare(argv: &[String]) -> AppResult {
+    let cli = fleet_cli(
+        "equilibrium fleet compare",
+        "sweep raw vs optimized+phased pipelines side by side",
+    );
+    let a = cli.parse(argv.iter())?;
+    let mut cfg = fleet_config_from(&a)?;
+    let names = fleet_names(&a);
+    println!(
+        "fleet compare: {} scenario(s) × {} seeds ({}) — raw vs phased pipeline",
+        names.len(),
+        cfg.seeds,
+        size_label(cfg.reduced),
+    );
+    cfg.plan = PlanConfig::default();
+    let raw = fleet::run_library(&names, &cfg)
+        .map_err(|e| app_err!("raw sweep failed: {e}"))?
+        .to_baseline();
+    cfg.plan = PlanConfig::phased();
+    let piped = fleet::run_library(&names, &cfg)
+        .map_err(|e| app_err!("phased sweep failed: {e}"))?
+        .to_baseline();
+    let mut t = report::Table::new(&[
+        "Scenario",
+        "Moved p50 raw",
+        "Exec p50 piped",
+        "Saved p50",
+        "Phases p50",
+        "Makespan p50 raw",
+        "Makespan p50 piped",
+    ]);
+    for (r, p) in raw.scenarios.iter().zip(&piped.scenarios) {
+        let g = |s: &equilibrium::fleet::ScenarioDist, m: &str| {
+            s.metrics.get(m).copied().unwrap_or_default()
+        };
+        let moved = g(r, "raw_bytes").p50;
+        let exec = g(p, "executed_bytes").p50;
+        t.push_row(vec![
+            r.name.clone(),
+            fmt_bytes_f(moved),
+            fmt_bytes_f(exec),
+            // signed: executing more than planned must be visible
+            fmt_bytes_f(moved - exec),
+            format!("{:.0}", g(p, "phases").p50),
+            fmt_duration(g(r, "makespan").p50),
+            fmt_duration(g(p, "makespan").p50),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fleet_gate(argv: &[String]) -> AppResult {
+    let cli = Cli::new(
+        "equilibrium fleet gate",
+        "replay a sweep and diff it against a committed statistical baseline",
+    )
+    .opt("baseline", "FILE", "committed FLEET baseline JSON (required)")
+    .opt_default("rel", "X", "0.01", "relative tolerance per metric field");
+    let a = cli.parse(argv.iter())?;
+    let path = a
+        .get("baseline")
+        .ok_or_else(|| app_err!("--baseline is required"))?;
+    let baseline = fleet::parse_baseline(&std::fs::read_to_string(path)?)
+        .map_err(|e| app_err!("cannot load baseline '{path}': {e}"))?;
+    // replay under exactly the sweep parameters the baseline records —
+    // including the scheduler knobs for phased pipelines (phase counts
+    // and makespans depend on them)
+    let plan = match baseline.meta.pipeline.as_str() {
+        "raw" => PlanConfig::default(),
+        "optimized" => PlanConfig::optimized(),
+        "phased" => {
+            let sm = baseline
+                .meta
+                .schedule
+                .as_ref()
+                .ok_or_else(|| app_err!("phased baseline lacks its scheduler parameters"))?;
+            let level = Level::parse(&sm.domain_level).ok_or_else(|| {
+                app_err!("baseline has unknown failure-domain level '{}'", sm.domain_level)
+            })?;
+            let osd_cap = sm.max_backfills_per_osd as usize;
+            PlanConfig {
+                optimize: true,
+                schedule: Some(ScheduleConfig {
+                    max_backfills_per_osd: osd_cap,
+                    domain_level: level,
+                    max_backfills_per_domain: sm.max_backfills_per_domain as usize,
+                    // mirror plan_config_from: the makespan model simulates
+                    // the same per-OSD concurrency the phases are packed for
+                    executor: ExecutorConfig { max_backfills: osd_cap, ..ExecutorConfig::default() },
+                    ..ScheduleConfig::default()
+                }),
+            }
+        }
+        other => return Err(app_err!("baseline has unknown pipeline '{other}'")),
+    };
+    let cfg = FleetConfig {
+        seeds: baseline.meta.seeds,
+        seed_base: baseline.meta.seed_base,
+        reduced: baseline.meta.reduced,
+        plan,
+        chunk: 1,
+    };
+    let names: Vec<&str> = baseline.scenarios.iter().map(|s| s.name.as_str()).collect();
+    println!(
+        "fleet gate: replaying {} scenario(s) × {} seeds against {path}",
+        names.len(),
+        cfg.seeds,
+    );
+    let current = fleet::run_library(&names, &cfg)
+        .map_err(|e| app_err!("fleet sweep failed: {e}"))?
+        .to_baseline();
+    let gate_cfg = GateConfig { rel: a.get_f64("rel")?.unwrap_or(0.01), ..GateConfig::default() };
+    let outcome = fleet::gate(&baseline, &current, &gate_cfg);
+    for m in &outcome.mismatches {
+        eprintln!("mismatch: {m}");
+    }
+    for v in &outcome.violations {
+        eprintln!("violation: {v}");
+    }
+    if outcome.passed() {
+        println!(
+            "gate OK: {} metric fields within tolerance (rel {})",
+            outcome.checked, gate_cfg.rel
+        );
+        Ok(())
+    } else {
+        Err(app_err!(
+            "fleet gate FAILED: {} mismatch(es), {} violation(s) over {} checked fields",
+            outcome.mismatches.len(),
+            outcome.violations.len(),
+            outcome.checked
+        ))
+    }
 }
 
 fn cmd_runtime_info() -> AppResult {

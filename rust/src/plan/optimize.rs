@@ -303,6 +303,23 @@ mod tests {
     }
 
     #[test]
+    fn single_move_plan_is_identity() {
+        let initial = cluster();
+        let mut s = initial.clone();
+        let pg = s.pgs().next().unwrap().id();
+        let a = s.pg(pg).unwrap().devices().next().unwrap();
+        let b = dest(&s, pg, a, &[]);
+        let m = s.apply_movement(pg, a, b).unwrap();
+        let opt = optimize_plan(&initial, &[m]);
+        assert_eq!(opt.movements.len(), 1);
+        let o = &opt.movements[0];
+        assert_eq!((o.pg, o.from, o.to, o.bytes), (m.pg, m.from, m.to, m.bytes));
+        assert!(!opt.stats.fell_back);
+        assert_eq!(opt.stats.saved_bytes(), 0);
+        assert_equivalent(&apply_all(&initial, &opt.movements), &s);
+    }
+
+    #[test]
     fn chain_collapses_to_net_move() {
         let initial = cluster();
         let mut s = initial.clone();
@@ -358,6 +375,53 @@ mod tests {
         let opt = optimize_plan(&initial, &[m1, m2, m3]);
         assert!(!opt.stats.fell_back, "cycle must be resolvable");
         assert!(opt.movements.len() <= 3);
+        assert_equivalent(&apply_all(&initial, &opt.movements), &s);
+    }
+
+    /// Round trips across SEVERAL PGs must all cancel at once — the
+    /// decommission / re-level churn shape, plan-wide.
+    #[test]
+    fn multi_pg_round_trips_all_cancel() {
+        let initial = cluster();
+        let mut s = initial.clone();
+        let mut raw = Vec::new();
+        for pg in s.pgs().map(|p| p.id()).take(3).collect::<Vec<_>>() {
+            let a = s.pg(pg).unwrap().devices().next().unwrap();
+            let b = dest(&s, pg, a, &[]);
+            raw.push(s.apply_movement(pg, a, b).unwrap());
+            raw.push(s.apply_movement(pg, b, a).unwrap());
+        }
+        assert_eq!(raw.len(), 6);
+        let opt = optimize_plan(&initial, &raw);
+        assert!(opt.movements.is_empty(), "every round trip must cancel");
+        assert_eq!(opt.stats.raw_moves, 6);
+        assert_eq!(opt.stats.bytes, 0);
+        assert!(!opt.stats.fell_back);
+        assert_equivalent(&apply_all(&initial, &opt.movements), &s);
+    }
+
+    /// A full 3-slot rotation (a→b→c→a over one PG's acting set) has no
+    /// direct net realization — every destination is occupied by a
+    /// sibling slot. The optimizer must route exactly one member through
+    /// the raw plan's intermediate and still land on the raw final
+    /// state, without exceeding the raw move/byte budget.
+    #[test]
+    fn three_osd_rotation_cycle_resolves_without_fallback() {
+        let initial = cluster();
+        let mut s = initial.clone();
+        let pg = s.pgs().next().unwrap().id();
+        let devices: Vec<OsdId> = s.pg(pg).unwrap().devices().collect();
+        let (a, b, c) = (devices[0], devices[1], devices[2]);
+        let t = dest(&s, pg, a, &[b, c]);
+        let m1 = s.apply_movement(pg, a, t).unwrap();
+        let m2 = s.apply_movement(pg, b, a).unwrap();
+        let m3 = s.apply_movement(pg, c, b).unwrap();
+        let m4 = s.apply_movement(pg, t, c).unwrap();
+
+        let opt = optimize_plan(&initial, &[m1, m2, m3, m4]);
+        assert!(!opt.stats.fell_back, "the 3-cycle must resolve via the intermediate");
+        assert!(opt.movements.len() <= 4);
+        assert!(opt.stats.bytes <= opt.stats.raw_bytes);
         assert_equivalent(&apply_all(&initial, &opt.movements), &s);
     }
 

@@ -331,6 +331,49 @@ mod tests {
         assert_valid_schedule(&initial, &plan, &p_loose, &loose);
     }
 
+    /// `max_backfills_per_osd = 1` on a plan whose moves all share one
+    /// source OSD must serialize to exactly one move per phase — and
+    /// still terminate: the conservative reordering cannot deadlock
+    /// because the head of the pending list is always admissible.
+    #[test]
+    fn max_backfills_one_serializes_shared_osd_plans() {
+        let initial = clusters::demo(3);
+        let mut s = initial.clone();
+        let src: OsdId = 0;
+        let pgs: Vec<PgId> = s
+            .pgs()
+            .filter(|p| p.devices().any(|d| d == src))
+            .map(|p| p.id())
+            .take(4)
+            .collect();
+        let mut plan = Vec::new();
+        for pg in pgs {
+            let Some(to) =
+                (0..s.osd_count() as OsdId).find(|&o| s.check_movement(pg, src, o).is_ok())
+            else {
+                continue;
+            };
+            plan.push(s.apply_movement(pg, src, to).unwrap());
+        }
+        assert!(plan.len() >= 2, "demo cluster must offer several shed moves");
+
+        let cfg = ScheduleConfig {
+            max_backfills_per_osd: 1,
+            max_backfills_per_domain: usize::MAX,
+            ..ScheduleConfig::default()
+        };
+        let phased = schedule_plan(&initial, &plan, &cfg);
+        assert_valid_schedule(&initial, &plan, &phased, &cfg);
+        assert_eq!(
+            phased.phases.len(),
+            plan.len(),
+            "a shared source under cap 1 serializes one move per phase"
+        );
+        for phase in &phased.phases {
+            assert_eq!(phase.len(), 1);
+        }
+    }
+
     #[test]
     fn empty_plan_schedules_to_no_phases() {
         let initial = clusters::demo(1);

@@ -1,0 +1,134 @@
+//! Fleet sweep reporting: render a [`FleetBaseline`]'s per-scenario
+//! metric distributions as the `report fleet` text table and a
+//! machine-readable CSV.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::fleet::{Distribution, FleetBaseline};
+use crate::util::units::{fmt_bytes_f, fmt_duration};
+
+use super::csv::{to_csv, write_csv_file};
+use super::table::Table;
+
+/// Headline table: one row per scenario, the distribution fields an
+/// operator scans first (variance level and tail, fill headroom, moved
+/// vs executed volume, phases, virtual makespan).
+pub fn fleet_table(b: &FleetBaseline) -> Table {
+    let mut t = Table::new(&[
+        "Scenario",
+        "Var mean",
+        "Var p90",
+        "Max fill p90",
+        "Moved p50",
+        "Exec p50",
+        "Saved p50",
+        "Phases p50",
+        "Makespan p50",
+    ]);
+    for s in &b.scenarios {
+        let g = |m: &str| s.metrics.get(m).copied().unwrap_or_default();
+        let moved = g("raw_bytes");
+        let exec = g("executed_bytes");
+        t.push_row(vec![
+            s.name.clone(),
+            format!("{:.3e}", g("variance").mean),
+            format!("{:.3e}", g("variance").p90),
+            format!("{:.1}%", g("max_fill").p90 * 100.0),
+            fmt_bytes_f(moved.p50),
+            fmt_bytes_f(exec.p50),
+            // signed on purpose: a pipeline executing MORE than planned
+            // is the anomaly this table exists to surface
+            fmt_bytes_f(moved.p50 - exec.p50),
+            format!("{:.0}", g("phases").p50),
+            fmt_duration(g("makespan").p50),
+        ]);
+    }
+    t
+}
+
+/// Full CSV: one row per (scenario, metric) with every distribution
+/// field, floats in their exact shortest-round-trip form.
+pub fn fleet_csv(b: &FleetBaseline) -> String {
+    let mut rows = Vec::new();
+    for s in &b.scenarios {
+        for (metric, d) in &s.metrics {
+            let mut row = vec![s.name.clone(), metric.clone()];
+            row.extend(d.fields().into_iter().map(|(_, v)| v.to_string()));
+            rows.push(row);
+        }
+    }
+    let field_names: Vec<&str> = Distribution::default()
+        .fields()
+        .into_iter()
+        .map(|(name, _)| name)
+        .collect();
+    let mut header = vec!["scenario", "metric"];
+    header.extend(field_names);
+    to_csv(&header, &rows)
+}
+
+/// Write [`fleet_csv`] as `fleet_summary.csv` under `dir`; returns the
+/// path.
+pub fn write_fleet_csv(dir: &Path, b: &FleetBaseline) -> io::Result<PathBuf> {
+    let path = dir.join("fleet_summary.csv");
+    write_csv_file(&path, &fleet_csv(b))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use crate::fleet::{ScenarioDist, SweepMeta};
+
+    use super::*;
+
+    fn baseline() -> FleetBaseline {
+        let mut metrics = BTreeMap::new();
+        for name in crate::fleet::METRICS {
+            metrics.insert(name.to_string(), Distribution::from_values(&[1.0, 2.0, 4.0]));
+        }
+        FleetBaseline {
+            meta: SweepMeta {
+                seeds: 3,
+                seed_base: 0,
+                reduced: true,
+                pipeline: "raw".into(),
+                schedule: None,
+            },
+            scenarios: vec![ScenarioDist { name: "pool-growth".into(), metrics }],
+        }
+    }
+
+    #[test]
+    fn table_has_one_row_per_scenario() {
+        let t = fleet_table(&baseline());
+        assert_eq!(t.rows.len(), 1);
+        let text = t.render();
+        assert!(text.contains("pool-growth"));
+        assert!(text.contains("Var p90"));
+    }
+
+    #[test]
+    fn csv_covers_every_metric_and_field() {
+        let csv = fleet_csv(&baseline());
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "scenario,metric,mean,stddev,min,p50,p90,p99,max"
+        );
+        assert_eq!(lines.count(), crate::fleet::METRICS.len());
+        assert!(csv.contains("pool-growth,variance,"));
+    }
+
+    #[test]
+    fn csv_file_lands_in_the_requested_dir() {
+        let dir = std::env::temp_dir().join(format!("eq_fleet_csv_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = write_fleet_csv(&dir, &baseline()).unwrap();
+        assert!(path.ends_with("fleet_summary.csv"));
+        assert!(std::fs::read_to_string(&path).unwrap().starts_with("scenario,metric"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

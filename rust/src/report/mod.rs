@@ -3,10 +3,12 @@
 
 pub mod csv;
 pub mod figures;
+pub mod fleet;
 pub mod table;
 
 pub use figures::{
     ablate_count_criterion, ablate_k, figure4, figure5, figure6, make_equilibrium, plan_table,
     run_cluster, scenario_series, table1, Scoring, Table1Row,
 };
+pub use fleet::{fleet_csv, fleet_table, write_fleet_csv};
 pub use table::Table;

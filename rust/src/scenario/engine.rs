@@ -167,6 +167,49 @@ pub struct ScenarioOutcome {
     pub total_calc_seconds: f64,
 }
 
+impl ScenarioOutcome {
+    /// Total bytes of the raw balancing plan (sum over
+    /// [`ScenarioOutcome::movements`]).
+    pub fn moved_bytes(&self) -> u64 {
+        self.movements.iter().map(|m| m.bytes).sum()
+    }
+
+    /// The movements that were physically executed: the pipeline's
+    /// output when it ran, the raw plan otherwise.
+    pub fn executed_movements(&self) -> &[Movement] {
+        self.executed.as_deref().unwrap_or(&self.movements)
+    }
+
+    /// Count of physically executed movements.
+    pub fn executed_move_count(&self) -> usize {
+        self.executed_movements().len()
+    }
+
+    /// Bytes physically executed (equals [`ScenarioOutcome::moved_bytes`]
+    /// when the pipeline is off; ≤ it when the optimizer ran).
+    pub fn executed_bytes(&self) -> u64 {
+        self.executed_movements().iter().map(|m| m.bytes).sum()
+    }
+
+    /// Executed phases: the pipeline's scheduler phase count when it
+    /// ran; otherwise the number of executed rounds that physically
+    /// moved data (each an implicit single phase). The fleet runner's
+    /// per-run reduction channel.
+    pub fn executed_phases(&self) -> usize {
+        if self.plan.rounds > 0 {
+            self.plan.phases
+        } else {
+            self.log
+                .events()
+                .iter()
+                .filter(|(_, e)| {
+                    matches!(e, Event::PlanExecuted { makespan, .. } if *makespan > 0.0)
+                })
+                .count()
+        }
+    }
+}
+
 /// The discrete-event executor for [`ScenarioSpec`] timelines.
 ///
 /// Adapters drive it event by event ([`ScenarioEngine::apply`]); whole

@@ -33,6 +33,13 @@ pub struct ScenarioCase {
 }
 
 impl ScenarioCase {
+    /// Route every balance round through the given plan pipeline
+    /// (builder used by the fleet runner and the pipeline bench).
+    pub fn with_plan(mut self, plan: crate::plan::PlanConfig) -> Self {
+        self.config.plan = plan;
+        self
+    }
+
     /// Run the case with the default Equilibrium balancer, mutating
     /// `self.state` in place (inspect it afterwards for final metrics).
     pub fn run(&mut self) -> Result<ScenarioOutcome, ScenarioError> {

@@ -19,6 +19,7 @@
 //! (`simulator::simulate`, `coordinator::run_daemon`, `generator::age`),
 //! and [`library`] ships ready-made timelines: the paper's §3
 //! experiments plus compound churn scenarios.
+#![warn(missing_docs)]
 
 pub mod engine;
 pub mod library;

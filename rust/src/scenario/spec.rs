@@ -147,6 +147,13 @@ impl ScenarioSpec {
         self
     }
 
+    /// Override the master seed — the fleet runner's per-seed hook:
+    /// the same timeline replayed under different random draws.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
     /// Append [`ScenarioEvent::FailOsd`].
     pub fn fail_osd(self, osd: OsdId) -> Self {
         self.event(ScenarioEvent::FailOsd { osd })

@@ -165,6 +165,29 @@ where
     }
 }
 
+/// Map each index in `0..n` to a value and collect the results in
+/// index order — [`map_reduce`] with concatenation as the ordered
+/// reduction. Inherits the full determinism contract: the chunk
+/// schedule is a constant of `(n, chunk_len)` and chunks concatenate
+/// strictly in index order, so the output vector is byte-identical at
+/// every thread count. With `chunk_len == 1` the atomic work-stealing
+/// loop also load-balances heterogeneous-cost items (the fleet
+/// runner's scenario × seed sweeps) without affecting the result.
+pub fn map_collect<R, M>(n: usize, chunk_len: usize, map: M) -> Vec<R>
+where
+    R: Send,
+    M: Fn(usize) -> R + Sync,
+{
+    let mut out = Vec::with_capacity(n);
+    map_reduce(
+        n,
+        chunk_len,
+        |range| range.map(&map).collect::<Vec<R>>(),
+        |_, part| out.extend(part),
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +267,16 @@ mod tests {
             assert_eq!(order, expect_order);
             assert_eq!(all, (0..100).collect::<Vec<usize>>());
         });
+    }
+
+    #[test]
+    fn map_collect_preserves_index_order() {
+        let expect: Vec<usize> = (0..100).map(|i| i * 3).collect();
+        for t in [1, 2, 5] {
+            let got = with_threads(t, || map_collect(100, 7, |i| i * 3));
+            assert_eq!(got, expect, "threads {t}");
+        }
+        assert!(map_collect(0, 1, |i| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! CLI integration tests: spawn the `equilibrium` binary (built by
+//! cargo for this profile) and assert exit codes plus the stable
+//! first-line output of the listing / fleet / report surfaces that the
+//! CI jobs and operator scripts key on.
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_equilibrium")
+}
+
+#[test]
+fn scenario_list_has_stable_first_line() {
+    let out = Command::new(bin()).args(["scenario", "list"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(
+        stdout.lines().next().unwrap(),
+        "library scenarios (seeded, deterministic):"
+    );
+    for name in equilibrium::scenario::ALL {
+        assert!(stdout.contains(name), "scenario '{name}' missing from the listing");
+    }
+}
+
+#[test]
+fn fleet_run_smoke_report_and_gate() {
+    let dir = std::env::temp_dir().join(format!("eq_fleet_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let baseline_path = dir.join("FLEET_baseline.json");
+
+    // ---- fleet run --smoke: stable first line, baseline emitted ---------
+    let out = Command::new(bin())
+        .args(["fleet", "run", "--smoke", "--seeds", "2", "--quiet"])
+        .args(["--out", baseline_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "fleet run failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(
+        stdout.lines().next().unwrap(),
+        "fleet: sweeping 7 scenario(s) × 2 seeds (reduced, raw pipeline)"
+    );
+    let text = std::fs::read_to_string(&baseline_path).unwrap();
+    let parsed = equilibrium::fleet::parse_baseline(&text).unwrap();
+    assert_eq!(parsed.scenarios.len(), 7);
+    assert_eq!(parsed.meta.seeds, 2);
+
+    // ---- report fleet: table + CSV --------------------------------------
+    let out = Command::new(bin())
+        .args(["report", "fleet", "--baseline", baseline_path.to_str().unwrap()])
+        .args(["--out-dir", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "report fleet failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(
+        stdout
+            .lines()
+            .next()
+            .unwrap()
+            .starts_with("Fleet summary — 7 scenarios × 2 seeds"),
+        "unexpected first line: {stdout}"
+    );
+    assert!(stdout.contains("pool-growth"));
+    let csv = std::fs::read_to_string(dir.join("fleet_summary.csv")).unwrap();
+    assert!(csv.lines().next().unwrap().starts_with("scenario,metric,mean"));
+
+    // ---- fleet gate: a deterministic replay passes ----------------------
+    let out = Command::new(bin())
+        .args(["fleet", "gate", "--baseline", baseline_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "self-gate failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(stdout.contains("gate OK"), "{stdout}");
+
+    // ---- and a perturbed baseline fails with a non-zero exit ------------
+    let mut bad = parsed.clone();
+    let d = bad.scenarios[0].metrics.get_mut("raw_bytes").unwrap();
+    d.mean *= 1.5;
+    d.p90 *= 1.5;
+    let bad_path = dir.join("FLEET_bad.json");
+    std::fs::write(&bad_path, bad.render()).unwrap();
+    let out = Command::new(bin())
+        .args(["fleet", "gate", "--baseline", bad_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "perturbed baseline must fail the gate");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("violation"), "violations must be reported: {stderr}");
+    assert!(stderr.contains("raw_bytes"), "the drifted metric must be named: {stderr}");
+
+    // ---- malformed baseline: clean error, no panic ----------------------
+    let junk_path = dir.join("junk.json");
+    std::fs::write(&junk_path, "{not json").unwrap();
+    let out = Command::new(bin())
+        .args(["fleet", "gate", "--baseline", junk_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error:"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_rejects_bad_arguments() {
+    // unknown action
+    let out = Command::new(bin()).args(["fleet", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    // unknown scenario name
+    let out = Command::new(bin())
+        .args(["fleet", "run", "--smoke", "--seeds", "1", "--name", "nope"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown library scenario"));
+    // gate without a baseline
+    let out = Command::new(bin()).args(["fleet", "gate"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--baseline is required"));
+}

@@ -1,0 +1,173 @@
+//! Fleet runner suite (RFC 0004): thread-count determinism of the
+//! aggregate output, baseline JSON round trips, the statistical gate's
+//! pass/fail behavior — including the committed-baseline perturbation
+//! failure the CI contract requires — and custom-spec sweeps through
+//! the seed-override hook.
+
+use equilibrium::fleet::{
+    gate, parse_baseline, run_library, sweep_case, sweep_spec, Distribution, FleetConfig,
+    FleetError, GateConfig, METRICS,
+};
+use equilibrium::generator::clusters;
+use equilibrium::plan::PlanConfig;
+use equilibrium::scenario::ScenarioSpec;
+use equilibrium::simulator::WorkloadModel;
+use equilibrium::util::parallel::with_threads;
+use equilibrium::util::units::GIB;
+
+fn small_cfg() -> FleetConfig {
+    FleetConfig { seeds: 3, reduced: true, ..FleetConfig::default() }
+}
+
+/// The headline determinism pin: the serialized sweep aggregate is
+/// byte-identical at 1, 2, and 4 worker threads.
+#[test]
+fn sweep_aggregates_are_byte_identical_across_thread_counts() {
+    let names = ["pool-growth", "device-failure"];
+    let cfg = small_cfg();
+    let t1 = with_threads(1, || run_library(&names, &cfg)).unwrap().to_baseline().render();
+    for threads in [2, 4] {
+        let tn = with_threads(threads, || run_library(&names, &cfg))
+            .unwrap()
+            .to_baseline()
+            .render();
+        assert_eq!(t1, tn, "fleet aggregate diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn baseline_round_trips_through_json() {
+    let b = run_library(&["pool-decommission"], &small_cfg()).unwrap().to_baseline();
+    let parsed = parse_baseline(&b.render()).unwrap();
+    assert_eq!(parsed, b);
+    assert_eq!(parsed.meta.seeds, 3);
+    assert_eq!(parsed.scenarios.len(), 1);
+    for s in &parsed.scenarios {
+        for m in METRICS {
+            let d = s.metrics.get(m).unwrap_or_else(|| panic!("metric '{m}' missing"));
+            assert!(d.mean.is_finite(), "{m}: non-finite mean");
+            assert!(d.min <= d.p50 && d.p50 <= d.p90 && d.p90 <= d.p99 && d.p99 <= d.max);
+        }
+    }
+    // wall-clock channels must never be committed
+    assert!(!b.render().contains("calc"), "baselines must exclude wall-clock metrics");
+}
+
+/// The acceptance-criterion demonstration: a deterministic replay
+/// passes the gate against its own baseline, and a perturbed baseline
+/// fails it.
+#[test]
+fn gate_passes_on_identical_sweep_and_fails_on_perturbation() {
+    let base = run_library(&["device-failure"], &small_cfg()).unwrap().to_baseline();
+    let report = gate(&base, &base, &GateConfig::default());
+    assert!(report.passed(), "self-gate must pass: {:?}", report.violations);
+    assert!(report.checked >= METRICS.len() * 7, "every field of every metric is checked");
+
+    // drift inside the tolerance band passes
+    let mut near = base.clone();
+    near.scenarios[0].metrics.get_mut("raw_bytes").unwrap().mean *= 1.001;
+    assert!(gate(&near, &base, &GateConfig::default()).passed());
+
+    // a 10% drift at p90 (the optimizer suddenly moving more bytes) fails
+    let mut bad = base.clone();
+    bad.scenarios[0].metrics.get_mut("raw_bytes").unwrap().p90 *= 1.10;
+    let report = gate(&bad, &base, &GateConfig::default());
+    assert!(!report.passed(), "perturbed baseline must fail the gate");
+    assert!(
+        report
+            .violations
+            .iter()
+            .any(|v| v.metric == "raw_bytes" && v.field == "p90"),
+        "the perturbed field must be named: {:?}",
+        report.violations
+    );
+
+    // structural drift is a mismatch, not a silent pass
+    let mut other = base.clone();
+    other.meta.seeds += 1;
+    assert!(!gate(&other, &base, &GateConfig::default()).passed());
+}
+
+#[test]
+fn custom_spec_sweeps_with_seed_override() {
+    let spec = ScenarioSpec::new("custom", 0)
+        .workload(WorkloadModel::ZipfPools { exponent: 1.1 }, 8 * GIB, 60.0)
+        .balance(50);
+    let cfg = FleetConfig { seeds: 2, seed_base: 7, reduced: true, ..FleetConfig::default() };
+    let sweep = sweep_spec(&spec, &cfg, clusters::demo).unwrap();
+    assert_eq!(sweep.runs.len(), 2);
+    assert_eq!(sweep.runs[0].seed, 7);
+    assert_eq!(sweep.runs[1].seed, 8);
+    // different seeds rebuild the cluster AND reseed the workload, so
+    // the trajectories must differ
+    assert_ne!(
+        (sweep.runs[0].raw_bytes, sweep.runs[0].variance.to_bits()),
+        (sweep.runs[1].raw_bytes, sweep.runs[1].variance.to_bits()),
+    );
+    let dist = sweep.summarize();
+    assert_eq!(dist.name, "custom");
+    let moves = &dist.metrics["planned_moves"];
+    assert!(moves.max >= moves.min);
+}
+
+/// Raw vs phased sweeps share the planning stream; the pipeline may
+/// only shrink what is physically executed.
+#[test]
+fn pipeline_sweep_never_executes_more_than_planned() {
+    let cfg = FleetConfig {
+        seeds: 2,
+        reduced: true,
+        plan: PlanConfig::phased(),
+        ..FleetConfig::default()
+    };
+    let sweep = sweep_case("pool-decommission", &cfg).unwrap();
+    for r in &sweep.runs {
+        assert!(
+            r.executed_bytes <= r.raw_bytes,
+            "seed {}: executed {} > planned {}",
+            r.seed,
+            r.executed_bytes,
+            r.raw_bytes
+        );
+        assert!(r.executed_moves <= r.planned_moves);
+        assert!(r.phases >= 1, "seed {}: a moving round must execute phases", r.seed);
+    }
+}
+
+#[test]
+fn unknown_scenarios_are_typed_errors() {
+    let cfg = small_cfg();
+    assert!(matches!(sweep_case("nope", &cfg), Err(FleetError::UnknownScenario(_))));
+    assert!(matches!(
+        run_library(&["pool-growth", "nope"], &cfg),
+        Err(FleetError::UnknownScenario(_))
+    ));
+}
+
+#[test]
+fn stats_kernel_is_exact() {
+    let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+    let d = Distribution::from_values(&xs);
+    assert_eq!(d.p50, 50.0);
+    assert_eq!(d.p90, 90.0);
+    assert_eq!(d.p99, 99.0);
+    assert_eq!(d.min, 1.0);
+    assert_eq!(d.max, 100.0);
+    assert!((d.mean - 50.5).abs() < 1e-12);
+    // population stddev of 1..N is sqrt((N² − 1) / 12)
+    let expect = ((100.0f64 * 100.0 - 1.0) / 12.0).sqrt();
+    assert!((d.stddev - expect).abs() < 1e-9);
+
+    let one = Distribution::from_values(&[3.5]);
+    assert_eq!(
+        (one.mean, one.stddev, one.p50, one.p99, one.min, one.max),
+        (3.5, 0.0, 3.5, 3.5, 3.5, 3.5)
+    );
+    assert_eq!(Distribution::from_values(&[]), Distribution::default());
+
+    // unsorted input is sorted internally
+    let d2 = Distribution::from_values(&[9.0, 1.0, 5.0]);
+    assert_eq!(d2.p50, 5.0);
+    assert_eq!(d2.min, 1.0);
+    assert_eq!(d2.max, 9.0);
+}
