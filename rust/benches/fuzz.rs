@@ -1,0 +1,72 @@
+//! Chaos fuzz sweep benchmark (RFC 0005): wall time of a generated
+//! scenario sweep at 1/2/4 worker threads, pinning the report
+//! byte-identical across thread counts and violation-free. Emits
+//! **`BENCH_fuzz.json`** at the repo root.
+//!
+//! The sweep runs reduced-size — the quantity under test is the fuzz
+//! fan-out (generate → replay → check invariants per case), not
+//! cluster scale. `--smoke` shrinks the sweep to 8 cases; the full run
+//! uses 64 cases across all four weight profiles.
+
+use std::time::Instant;
+
+use equilibrium::fuzz::{run_sweep, FuzzConfig};
+use equilibrium::util::json::Json;
+use equilibrium::util::parallel::with_threads;
+use equilibrium::util::units::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let cfg = FuzzConfig {
+        cases: if smoke { 8 } else { 64 },
+        reduced: true,
+        ..FuzzConfig::default()
+    };
+    println!(
+        "fuzz bench — {} generated cases × {} profiles (reduced), threads 1/2/4",
+        cfg.cases,
+        cfg.profiles.len()
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut walls: Vec<f64> = Vec::new();
+    let mut first_render: Option<String> = None;
+    let mut events = 0usize;
+    for threads in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let report = with_threads(threads, || run_sweep(&cfg));
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(
+            report.is_clean(),
+            "fuzz sweep found violations:\n{}",
+            report.render()
+        );
+        events = report.total_events;
+        let rendered = report.render();
+        match &first_render {
+            None => first_render = Some(rendered),
+            Some(first) => {
+                assert_eq!(first, &rendered, "fuzz report diverged at {threads} threads")
+            }
+        }
+        println!("  threads {threads}: sweep wall time {}", fmt_duration(wall));
+        walls.push(wall);
+        rows.push(Json::obj().set("threads", threads).set("wall_seconds", wall));
+    }
+    let speedup = walls[0] / walls[2];
+    println!("speedup 1 → 4 threads: {speedup:.2}×  (reports byte-identical, zero violations)");
+
+    let doc = Json::obj()
+        .set("bench", "fuzz")
+        .set("smoke", smoke)
+        .set("cases", cfg.cases)
+        .set("events", events)
+        .set("reduced", true)
+        .set("byte_identical", true)
+        .set("violations", 0u64)
+        .set("threads", Json::Arr(rows))
+        .set("speedup_1_to_4", speedup);
+    std::fs::write("BENCH_fuzz.json", doc.pretty()).expect("write BENCH_fuzz.json");
+    println!("wrote BENCH_fuzz.json");
+}

@@ -851,6 +851,35 @@ impl ClusterState {
                 pgs_on[osd as usize] += 1;
                 expect.inc(osd as usize, rank);
             }
+            // upmap pairs must describe this PG's acting set: in-range
+            // ids, no identity pairs (chain compression drops them), the
+            // replacement actually acting, one pair per raw source
+            let mut sources: Vec<OsdId> = Vec::new();
+            for &(raw, repl) in self.arena.upmap_at(idx) {
+                if (raw as usize) >= n || (repl as usize) >= n {
+                    problems.push(format!(
+                        "pg {} upmap pair {raw}→{repl} references unknown osd",
+                        pg.id()
+                    ));
+                    continue;
+                }
+                if raw == repl {
+                    problems.push(format!("pg {} upmap has identity pair {raw}→{raw}", pg.id()));
+                }
+                if !seen.contains(&repl) {
+                    problems.push(format!(
+                        "pg {} upmap replacement osd.{repl} is not in the acting set",
+                        pg.id()
+                    ));
+                }
+                if sources.contains(&raw) {
+                    problems.push(format!(
+                        "pg {} upmap has duplicate source osd.{raw}",
+                        pg.id()
+                    ));
+                }
+                sources.push(raw);
+            }
         }
         for o in 0..n {
             if used[o] != self.osd_used[o] {
@@ -993,6 +1022,33 @@ mod tests {
         assert_eq!(s.upmap_items(pg), &[] as &[(OsdId, OsdId)]);
         assert_eq!(s.upmap_entry_count(), 0);
         assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn verify_fires_on_each_upmap_corruption() {
+        // build a state with one legitimate upmap entry, corrupt the
+        // table a specific way, and assert the matching check fires
+        let corrupt = |f: &dyn Fn(OsdId, OsdId, &[OsdId]) -> (OsdId, OsdId), needle: &str| {
+            let mut s = small_cluster();
+            let pg = s.pgs().next().unwrap().id();
+            let from = s.pg(pg).unwrap().devices().next().unwrap();
+            let free: Vec<OsdId> =
+                (0..s.osd_count() as OsdId).filter(|&o| !s.pg(pg).unwrap().on(o)).collect();
+            s.apply_movement(pg, from, free[0]).unwrap();
+            assert!(s.verify().is_empty());
+            let idx = s.arena.index_of(pg).unwrap();
+            let bogus = f(from, free[0], &free);
+            s.arena.with_upmap_mut(idx, |items| items.push(bogus));
+            let problems = s.verify();
+            assert!(
+                problems.iter().any(|p| p.contains(needle)),
+                "expected a problem containing '{needle}', got {problems:?}"
+            );
+        };
+        corrupt(&|_, _, _| (999, 1000), "references unknown osd");
+        corrupt(&|_, _, free| (free[1], free[1]), "identity pair");
+        corrupt(&|_, _, free| (free[1], free[2]), "not in the acting set");
+        corrupt(&|from, to, _| (from, to), "duplicate source");
     }
 
     #[test]

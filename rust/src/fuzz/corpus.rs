@@ -1,0 +1,340 @@
+//! Corpus runner: sweep generated scenarios through the invariant
+//! machine, minimize every failure by prefix bisection, and promote
+//! the minimal spec into the on-disk regression corpus.
+//!
+//! The sweep fans out through [`crate::util::parallel::map_collect`]
+//! exactly like the fleet runner, so the report is byte-identical at
+//! any `EQUILIBRIUM_THREADS` — it contains seeds, event counts, and
+//! violations, never wall-clock time.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::balancer::Equilibrium;
+use crate::fuzz::gen::{generate_spec, Profile};
+use crate::fuzz::invariant::{InvariantMachine, Violation};
+use crate::generator::clusters;
+use crate::scenario::{serde, ScenarioConfig, ScenarioEngine, ScenarioSpec};
+use crate::util::json::Json;
+use crate::util::parallel;
+
+/// Knobs for one fuzz sweep.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Case `i` uses seed `seed_base + i`.
+    pub seed_base: u64,
+    /// Weight profiles to cycle through (case `i` uses `i % len`).
+    pub profiles: Vec<Profile>,
+    /// Shorter timelines and smaller writes (CI smoke mode).
+    pub reduced: bool,
+    /// Parallel chunk length for the sweep.
+    pub chunk: usize,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> FuzzConfig {
+        FuzzConfig {
+            cases: 64,
+            seed_base: 0xFA22_0000,
+            profiles: Profile::ALL.to_vec(),
+            reduced: false,
+            chunk: 1,
+        }
+    }
+}
+
+/// What one replay of one spec produced.
+#[derive(Debug, Clone, Default)]
+pub struct CaseOutcome {
+    /// Invariant violations, in event order.
+    pub violations: Vec<Violation>,
+    /// Engine error, if the run aborted.
+    pub error: Option<String>,
+}
+
+impl CaseOutcome {
+    /// A case fails if the engine errored or any invariant fired.
+    pub fn failed(&self) -> bool {
+        self.error.is_some() || !self.violations.is_empty()
+    }
+}
+
+/// A failing case after minimization, ready for promotion.
+#[derive(Debug, Clone)]
+pub struct FailingCase {
+    /// Corpus name (`fuzz-<profile>-<seed>`), also the file stem.
+    pub name: String,
+    /// Profile that generated it.
+    pub profile: Profile,
+    /// Generating seed.
+    pub seed: u64,
+    /// Event count before minimization.
+    pub original_events: usize,
+    /// The minimal failing spec.
+    pub spec: ScenarioSpec,
+    /// Outcome of replaying the minimal spec.
+    pub outcome: CaseOutcome,
+}
+
+/// Deterministic summary of a sweep.
+#[derive(Debug, Clone)]
+pub struct FuzzReport {
+    /// Cases swept.
+    pub cases: usize,
+    /// First seed.
+    pub seed_base: u64,
+    /// Smoke mode flag.
+    pub reduced: bool,
+    /// Profiles cycled through.
+    pub profiles: Vec<Profile>,
+    /// Total events replayed across all original cases.
+    pub total_events: usize,
+    /// Every failing case, minimized, in case order.
+    pub failing: Vec<FailingCase>,
+}
+
+/// Replay `spec` on a fresh demo cluster (seeded by the spec's seed)
+/// under the standard invariant suite.
+pub fn replay(spec: &ScenarioSpec) -> CaseOutcome {
+    let mut state = clusters::demo(spec.seed);
+    let mut balancer = Equilibrium::default();
+    let mut machine = InvariantMachine::standard();
+    let config = ScenarioConfig { record_series: false, ..ScenarioConfig::default() };
+    let engine = ScenarioEngine::new(&mut state, Some(&mut balancer), config, spec.seed)
+        .with_observer(|s, e, o, t| machine.observe(s, e, o, t));
+    let error = engine.run(spec).err().map(|e| e.to_string());
+    CaseOutcome { violations: machine.into_violations(), error }
+}
+
+/// Shrink a failing spec to a locally-minimal failing event prefix by
+/// bisection (the same discipline as
+/// [`crate::util::prop::check_shrinking`]). Prefixes of a generated
+/// timeline are themselves valid timelines, so truncation never turns
+/// an invariant violation into a bogus engine error.
+pub fn minimize(spec: &ScenarioSpec) -> ScenarioSpec {
+    let truncated = |len: usize| -> ScenarioSpec {
+        let mut s = spec.clone();
+        s.events.truncate(len);
+        s
+    };
+    let mut lo = 0usize;
+    let mut hi = spec.events.len();
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if replay(&truncated(mid)).failed() {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    truncated(hi)
+}
+
+/// Sweep `cfg.cases` generated specs. Generation and replay fan out in
+/// parallel; minimization of the (rare) failures runs serially, in
+/// case order, so the report is deterministic.
+pub fn run_sweep(cfg: &FuzzConfig) -> FuzzReport {
+    let profiles = if cfg.profiles.is_empty() { Profile::ALL.to_vec() } else { cfg.profiles.clone() };
+    let results = parallel::map_collect(cfg.cases, cfg.chunk.max(1), |i| {
+        let seed = cfg.seed_base + i as u64;
+        let profile = profiles[i % profiles.len()];
+        let spec = generate_spec(&clusters::demo(seed), seed, profile, cfg.reduced);
+        let outcome = replay(&spec);
+        (profile, spec, outcome)
+    });
+    let mut total_events = 0;
+    let mut failing = Vec::new();
+    for (profile, spec, outcome) in results {
+        total_events += spec.events.len();
+        if !outcome.failed() {
+            continue;
+        }
+        let minimal = minimize(&spec);
+        let minimal_outcome = replay(&minimal);
+        failing.push(FailingCase {
+            name: spec.name.clone(),
+            profile,
+            seed: minimal.seed,
+            original_events: spec.events.len(),
+            spec: minimal,
+            outcome: minimal_outcome,
+        });
+    }
+    FuzzReport {
+        cases: cfg.cases,
+        seed_base: cfg.seed_base,
+        reduced: cfg.reduced,
+        profiles,
+        total_events,
+        failing,
+    }
+}
+
+impl FuzzReport {
+    /// Total invariant violations across minimized failing cases.
+    pub fn violation_count(&self) -> usize {
+        self.failing.iter().map(|f| f.outcome.violations.len()).sum()
+    }
+
+    /// The sweep is clean if no case failed.
+    pub fn is_clean(&self) -> bool {
+        self.failing.is_empty()
+    }
+
+    /// Deterministic JSON summary (sorted keys, no wall-clock fields).
+    pub fn to_json(&self) -> Json {
+        let mut kinds: Vec<(&'static str, u64)> = Vec::new();
+        for case in &self.failing {
+            for v in &case.outcome.violations {
+                match kinds.iter_mut().find(|(k, _)| *k == v.invariant) {
+                    Some((_, n)) => *n += 1,
+                    None => kinds.push((v.invariant, 1)),
+                }
+            }
+        }
+        kinds.sort_by_key(|&(k, _)| k);
+        let mut kind_obj = Json::obj();
+        for (k, n) in kinds {
+            kind_obj = kind_obj.set(k, n);
+        }
+        let failing: Vec<Json> = self
+            .failing
+            .iter()
+            .map(|case| {
+                let violations: Vec<Json> = case
+                    .outcome
+                    .violations
+                    .iter()
+                    .map(|v| {
+                        Json::obj()
+                            .set("detail", v.detail.as_str())
+                            .set("event_index", v.event_index)
+                            .set("invariant", v.invariant)
+                    })
+                    .collect();
+                Json::obj()
+                    .set(
+                        "error",
+                        match &case.outcome.error {
+                            Some(e) => Json::from(e.as_str()),
+                            None => Json::Null,
+                        },
+                    )
+                    .set("minimized_events", case.spec.events.len())
+                    .set("name", case.name.as_str())
+                    .set("original_events", case.original_events)
+                    .set("profile", case.profile.name())
+                    .set("seed", case.seed)
+                    .set("violations", violations)
+            })
+            .collect();
+        Json::obj()
+            .set("cases", self.cases)
+            .set("events", self.total_events)
+            .set("failing", failing)
+            .set("profiles", self.profiles.iter().map(|p| Json::from(p.name())).collect::<Vec<_>>())
+            .set("reduced", self.reduced)
+            .set("seed_base", self.seed_base)
+            .set("violation_kinds", kind_obj)
+            .set("violations", self.violation_count())
+    }
+
+    /// Pretty-printed report with a trailing newline.
+    pub fn render(&self) -> String {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        text
+    }
+}
+
+/// Write every minimized failing spec under `dir` as self-contained
+/// spec JSON (`<name>.json`); returns the created paths. The corpus
+/// replay test (`tests/fuzz_corpus.rs`) picks them up on the next run.
+pub fn promote(dir: &Path, report: &FuzzReport) -> io::Result<Vec<PathBuf>> {
+    if report.failing.is_empty() {
+        return Ok(Vec::new());
+    }
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::new();
+    for case in &report.failing {
+        let path = dir.join(format!("{}.json", case.name));
+        std::fs::write(&path, serde::dump(&case.spec))?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduced_sweep_is_clean_and_thread_invariant() {
+        let cfg = FuzzConfig { cases: 8, reduced: true, ..FuzzConfig::default() };
+        let a = parallel::with_threads(1, || run_sweep(&cfg));
+        let b = parallel::with_threads(4, || run_sweep(&cfg));
+        assert_eq!(a.render(), b.render(), "report must not depend on thread count");
+        assert!(
+            a.is_clean(),
+            "reduced sweep found violations:\n{}",
+            a.render()
+        );
+        assert_eq!(a.cases, 8);
+        assert!(a.total_events > 8 * 8, "suspiciously few events: {}", a.total_events);
+    }
+
+    #[test]
+    fn replay_flags_engine_errors_as_failures() {
+        // a spec that grows a pool that never existed must fail the
+        // case (engine error), not panic or pass silently
+        let spec = ScenarioSpec::new("bogus-pool", 3).grow_pool(999, 1 << 30);
+        let out = replay(&spec);
+        assert!(out.failed());
+        let err = out.error.expect("engine error surfaced");
+        assert!(err.contains("999"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn minimize_finds_the_failing_prefix() {
+        // build a hand-made failing spec: benign snapshots, then the
+        // bogus event, then more benign tail — minimization must cut
+        // the tail and keep the prefix through the bogus event
+        let spec = ScenarioSpec::new("shrink-me", 5)
+            .snapshot("a")
+            .snapshot("b")
+            .grow_pool(999, 1 << 30)
+            .snapshot("c")
+            .balance(16)
+            .snapshot("d");
+        assert!(replay(&spec).failed());
+        let minimal = minimize(&spec);
+        assert_eq!(minimal.events.len(), 3, "expected prefix through the bogus grow");
+        assert!(replay(&minimal).failed());
+    }
+
+    #[test]
+    fn promotion_writes_replayable_specs() {
+        let cfg = FuzzConfig { cases: 2, reduced: true, ..FuzzConfig::default() };
+        let mut report = run_sweep(&cfg);
+        // force one failing case so promote has something to write
+        let spec = ScenarioSpec::new("forced-failure", 9).grow_pool(999, 1 << 30);
+        let outcome = replay(&spec);
+        report.failing.push(FailingCase {
+            name: spec.name.clone(),
+            profile: Profile::KitchenSink,
+            seed: 9,
+            original_events: spec.events.len(),
+            spec,
+            outcome,
+        });
+        let dir = std::env::temp_dir().join("equilibrium-fuzz-promote-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = promote(&dir, &report).expect("promotion succeeds");
+        assert_eq!(paths.len(), 1);
+        let loaded = serde::load_file(&paths[0]).expect("promoted spec loads");
+        assert!(replay(&loaded).failed(), "promoted spec must still fail");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

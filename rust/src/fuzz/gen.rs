@@ -1,0 +1,487 @@
+//! Seeded random [`ScenarioSpec`] generator: a weighted event grammar
+//! over all eleven [`ScenarioEvent`] variants, structurally valid by
+//! construction.
+//!
+//! The generator maintains a lightweight model of the cluster it is
+//! scripting against (hosts and their devices, live pools with byte
+//! estimates, remaining capacity) and refuses to emit an event that
+//! would break the engine or the invariant suite for boring reasons:
+//! it never fails the last hosts CRUSH needs for an acting set, never
+//! references a pool that does not exist, and keeps the projected raw
+//! volume under a capacity budget so recovery always has room. Every
+//! draw derives from the spec seed — the same seed and profile always
+//! produce the same timeline.
+
+use crate::cluster::{ClusterState, HostSpec, Pool};
+use crate::crush::{Level, OsdId};
+use crate::generator::aging::AgingConfig;
+use crate::scenario::{ScenarioEvent, ScenarioSpec};
+use crate::simulator::WorkloadModel;
+use crate::util::rng::Rng;
+use crate::util::units::{GIB, TIB};
+
+/// Keep projected raw bytes under this fraction of live capacity, so
+/// failures can always recover and writes never push a device over.
+const BUDGET_FRAC: f64 = 0.55;
+
+/// Weight profile of the event grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Device and host failures dominate, with recovery balancing.
+    FailureHeavy,
+    /// Pool grow/shrink/decommission churn and workload phases.
+    ChurnHeavy,
+    /// Expansions, new pools, and sustained ingest.
+    GrowthHeavy,
+    /// Everything, roughly uniformly.
+    KitchenSink,
+}
+
+impl Profile {
+    /// Every profile, in the order the sweep cycles through them.
+    pub const ALL: [Profile; 4] =
+        [Profile::FailureHeavy, Profile::ChurnHeavy, Profile::GrowthHeavy, Profile::KitchenSink];
+
+    /// Stable name (CLI flag value, report key, corpus file names).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::FailureHeavy => "failure-heavy",
+            Profile::ChurnHeavy => "churn-heavy",
+            Profile::GrowthHeavy => "growth-heavy",
+            Profile::KitchenSink => "kitchen-sink",
+        }
+    }
+
+    /// Parse a profile name (the CLI's `--profile`).
+    pub fn parse(name: &str) -> Option<Profile> {
+        Profile::ALL.into_iter().find(|p| p.name() == name)
+    }
+
+    /// Event-kind weights, indexed like [`EventKind::ALL`].
+    fn weights(&self) -> [f64; 11] {
+        // [FailOsd, FailHost, AddHosts, CreatePool, GrowPool, ShrinkPool,
+        //  Decommission, Workload, Balance, Age, Snapshot]
+        match self {
+            Profile::FailureHeavy => [5.0, 3.0, 0.5, 0.5, 1.0, 1.0, 0.25, 1.0, 4.0, 0.25, 0.5],
+            Profile::ChurnHeavy => [0.5, 0.25, 0.5, 2.0, 4.0, 4.0, 1.5, 3.0, 3.0, 1.0, 0.5],
+            Profile::GrowthHeavy => [0.25, 0.25, 3.0, 3.0, 4.0, 0.5, 0.25, 3.0, 3.0, 1.0, 0.5],
+            Profile::KitchenSink => [1.0; 11],
+        }
+    }
+}
+
+/// The eleven event kinds of the grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    FailOsd,
+    FailHost,
+    AddHosts,
+    CreatePool,
+    GrowPool,
+    ShrinkPool,
+    Decommission,
+    Workload,
+    Balance,
+    Age,
+    Snapshot,
+}
+
+impl EventKind {
+    const ALL: [EventKind; 11] = [
+        EventKind::FailOsd,
+        EventKind::FailHost,
+        EventKind::AddHosts,
+        EventKind::CreatePool,
+        EventKind::GrowPool,
+        EventKind::ShrinkPool,
+        EventKind::Decommission,
+        EventKind::Workload,
+        EventKind::Balance,
+        EventKind::Age,
+        EventKind::Snapshot,
+    ];
+}
+
+/// A host the generator may fail: name plus its devices.
+struct HostModel {
+    name: String,
+    osds: Vec<OsdId>,
+}
+
+/// A live pool the generator may target.
+struct PoolModel {
+    id: u32,
+    user_bytes: u64,
+    raw_ratio: f64,
+    shard_count: usize,
+    fuzz_created: bool,
+}
+
+/// The generator's model of the evolving cluster.
+struct GenModel {
+    hosts: Vec<HostModel>,
+    osd_up: Vec<bool>,
+    osd_size: Vec<u64>,
+    pools: Vec<PoolModel>,
+    next_pool_id: u32,
+    rule_id: u32,
+}
+
+impl GenModel {
+    fn from_state(state: &ClusterState) -> GenModel {
+        let mut hosts: Vec<HostModel> = state
+            .crush
+            .buckets
+            .values()
+            .filter(|b| b.level == Level::Host)
+            .map(|b| HostModel { name: b.name.clone(), osds: state.crush.devices_under(b.id, None) })
+            .collect();
+        hosts.sort_by(|a, b| a.name.cmp(&b.name));
+        let n = state.osd_count();
+        let pools = state
+            .pools
+            .values()
+            .map(|p| {
+                let raw: u64 = state
+                    .pgs_of_pool(p.id)
+                    .map(|pg| pg.shard_bytes() * pg.devices().count() as u64)
+                    .sum();
+                PoolModel {
+                    id: p.id,
+                    user_bytes: (raw as f64 / p.redundancy.raw_ratio()) as u64,
+                    raw_ratio: p.redundancy.raw_ratio(),
+                    shard_count: p.redundancy.shard_count(),
+                    fuzz_created: false,
+                }
+            })
+            .collect();
+        let rule_id = state.pools.values().next().map(|p| p.rule_id).unwrap_or(0);
+        GenModel {
+            hosts,
+            osd_up: (0..n as OsdId).map(|o| state.osd_is_up(o)).collect(),
+            osd_size: (0..n as OsdId).map(|o| state.osd_size(o)).collect(),
+            pools,
+            next_pool_id: state.pools.keys().max().map(|&id| id.max(9) + 1).unwrap_or(10),
+            rule_id,
+        }
+    }
+
+    /// Live capacity: bytes on up devices (devices added by `AddHosts`
+    /// events are appended to the vectors as they are scripted).
+    fn capacity(&self) -> u64 {
+        self.osd_size
+            .iter()
+            .zip(&self.osd_up)
+            .filter(|&(_, &up)| up)
+            .map(|(&s, _)| s)
+            .sum()
+    }
+
+    /// Projected raw bytes stored across all pools.
+    fn raw_total(&self) -> u64 {
+        self.pools.iter().map(|p| (p.user_bytes as f64 * p.raw_ratio) as u64).sum()
+    }
+
+    /// Raw-byte headroom under the capacity budget.
+    fn headroom(&self) -> u64 {
+        (self.capacity() as f64 * BUDGET_FRAC) as u64 - self.raw_total().min(
+            (self.capacity() as f64 * BUDGET_FRAC) as u64,
+        )
+    }
+
+    /// Hosts CRUSH still needs for the widest acting set.
+    fn needed_hosts(&self) -> usize {
+        self.pools.iter().map(|p| p.shard_count).max().unwrap_or(3)
+    }
+
+    /// Number of hosts with at least one up device.
+    fn up_hosts(&self) -> usize {
+        self.hosts
+            .iter()
+            .filter(|h| h.osds.iter().any(|&o| self.osd_up[o as usize]))
+            .count()
+    }
+
+    /// Worst-case raw ratio a user byte can cost (workload spread).
+    fn max_ratio(&self) -> f64 {
+        self.pools.iter().map(|p| p.raw_ratio).fold(3.0, f64::max)
+    }
+}
+
+/// Generate a structurally valid random timeline for `base` (the
+/// cluster the runner will replay it against). `reduced` scales the
+/// event count and write volumes down for CI smoke runs. Deterministic
+/// in (`seed`, `profile`, `reduced`).
+pub fn generate_spec(
+    base: &ClusterState,
+    seed: u64,
+    profile: Profile,
+    reduced: bool,
+) -> ScenarioSpec {
+    // salted so grammar draws never collide with the engine's own
+    // event randomness for the same seed
+    let mut rng = Rng::new(seed ^ 0xF022_BA5E_0000_0001);
+    let mut model = GenModel::from_state(base);
+    let weights = profile.weights();
+    let body_events = if reduced { 8 } else { 14 };
+    let (vol_lo, vol_hi) = if reduced { (4 * GIB, 64 * GIB) } else { (16 * GIB, 512 * GIB) };
+
+    let name = format!("fuzz-{}-{seed:08x}", profile.name());
+    let mut spec = ScenarioSpec::new(&name, seed).snapshot("initial");
+    for i in 0..body_events {
+        let mut emitted = false;
+        // rejection sampling over the weighted grammar: an event kind
+        // whose validity rules cannot be met right now is redrawn
+        for _ in 0..8 {
+            let kind = EventKind::ALL[rng.choose_weighted(&weights).expect("non-empty weights")];
+            if let Some(event) = try_emit(kind, &mut model, &mut rng, i, vol_lo, vol_hi) {
+                spec = spec.event(event);
+                emitted = true;
+                break;
+            }
+        }
+        if !emitted {
+            // nothing valid drawn — a balance round is always legal
+            spec = spec.balance(64);
+        }
+    }
+    spec.balance(256).snapshot("final")
+}
+
+fn try_emit(
+    kind: EventKind,
+    model: &mut GenModel,
+    rng: &mut Rng,
+    index: usize,
+    vol_lo: u64,
+    vol_hi: u64,
+) -> Option<ScenarioEvent> {
+    match kind {
+        EventKind::FailOsd => {
+            // candidate devices: up, on a modelled host, and with both
+            // enough surviving hosts for CRUSH and enough surviving
+            // capacity for recovery under the budget
+            let raw = model.raw_total();
+            let budget_cap = |remaining: u64| (remaining as f64 * BUDGET_FRAC) as u64;
+            let candidates: Vec<OsdId> = model
+                .hosts
+                .iter()
+                .flat_map(|h| h.osds.iter().copied())
+                .filter(|&o| model.osd_up[o as usize])
+                .filter(|&o| {
+                    let host = model.hosts.iter().find(|h| h.osds.contains(&o)).expect("host");
+                    let host_survives =
+                        host.osds.iter().any(|&x| x != o && model.osd_up[x as usize]);
+                    let hosts_after = model.up_hosts() - usize::from(!host_survives);
+                    let cap_after = model.capacity() - model.osd_size[o as usize];
+                    hosts_after >= model.needed_hosts() && raw <= budget_cap(cap_after)
+                })
+                .collect();
+            let &osd = rng.choose(&candidates)?;
+            model.osd_up[osd as usize] = false;
+            Some(ScenarioEvent::FailOsd { osd })
+        }
+        EventKind::FailHost => {
+            let raw = model.raw_total();
+            let candidates: Vec<usize> = (0..model.hosts.len())
+                .filter(|&h| {
+                    let host = &model.hosts[h];
+                    let host_up: Vec<OsdId> = host
+                        .osds
+                        .iter()
+                        .copied()
+                        .filter(|&o| model.osd_up[o as usize])
+                        .collect();
+                    if host_up.is_empty() {
+                        return false; // failing a dead host is a no-op
+                    }
+                    let lost: u64 = host_up.iter().map(|&o| model.osd_size[o as usize]).sum();
+                    let cap_after = model.capacity() - lost;
+                    model.up_hosts() - 1 >= model.needed_hosts()
+                        && raw <= (cap_after as f64 * BUDGET_FRAC) as u64
+                })
+                .collect();
+            let &h = rng.choose(&candidates)?;
+            for o in model.hosts[h].osds.clone() {
+                model.osd_up[o as usize] = false;
+            }
+            Some(ScenarioEvent::FailHost { host: model.hosts[h].name.clone() })
+        }
+        EventKind::AddHosts => {
+            let hosts = 1 + rng.index(2);
+            let osds_per_host = 1 + rng.index(3);
+            let osd_bytes = [2 * TIB, 4 * TIB, 8 * TIB][rng.index(3)];
+            // new devices extend the model's capacity; they are never
+            // failure candidates (their bucket names are assigned at
+            // apply time), which only errs on the safe side
+            for _ in 0..hosts * osds_per_host {
+                model.osd_up.push(true);
+                model.osd_size.push(osd_bytes);
+            }
+            Some(ScenarioEvent::AddHosts {
+                spec: HostSpec::hdd(hosts, osds_per_host, osd_bytes),
+            })
+        }
+        EventKind::CreatePool => {
+            let id = model.next_pool_id;
+            // replicated 3× mostly; sometimes EC 2+1 (same 3-slot width,
+            // so the host budget CRUSH needs does not grow)
+            let (pool, ratio, shards) = if rng.chance(0.2) {
+                (Pool::erasure(id, &format!("fz{id}"), 2, 1, 16, model.rule_id), 1.5, 3)
+            } else {
+                let pg_count = [8u32, 16, 32][rng.index(3)];
+                (Pool::replicated(id, &format!("fz{id}"), 3, pg_count, model.rule_id), 3.0, 3)
+            };
+            let max_user = ((model.headroom() as f64 / ratio) as u64 / 2).min(vol_hi);
+            if max_user < vol_lo {
+                return None;
+            }
+            let user_bytes = rng.range_u64(vol_lo, max_user);
+            model.next_pool_id += 1;
+            model.pools.push(PoolModel {
+                id,
+                user_bytes,
+                raw_ratio: ratio,
+                shard_count: shards,
+                fuzz_created: true,
+            });
+            Some(ScenarioEvent::CreatePool { pool, user_bytes })
+        }
+        EventKind::GrowPool => {
+            let p = rng.index(model.pools.len());
+            let ratio = model.pools[p].raw_ratio;
+            let max_user = ((model.headroom() as f64 / ratio) as u64 / 2).min(vol_hi);
+            if max_user < vol_lo {
+                return None;
+            }
+            let user_bytes = rng.range_u64(vol_lo, max_user);
+            model.pools[p].user_bytes += user_bytes;
+            Some(ScenarioEvent::GrowPool { pool: model.pools[p].id, user_bytes })
+        }
+        EventKind::ShrinkPool => {
+            let candidates: Vec<usize> = (0..model.pools.len())
+                .filter(|&p| model.pools[p].user_bytes > 2 * GIB)
+                .collect();
+            let &p = rng.choose(&candidates)?;
+            let user_bytes = rng.range_u64(GIB, model.pools[p].user_bytes / 2);
+            model.pools[p].user_bytes -= user_bytes;
+            Some(ScenarioEvent::ShrinkPool { pool: model.pools[p].id, user_bytes })
+        }
+        EventKind::Decommission => {
+            let candidates: Vec<usize> =
+                (0..model.pools.len()).filter(|&p| model.pools[p].fuzz_created).collect();
+            let &p = rng.choose(&candidates)?;
+            // drop it from the model so no later event references it
+            let pool = model.pools.remove(p).id;
+            Some(ScenarioEvent::DecommissionPool { pool })
+        }
+        EventKind::Workload => {
+            let max_user = ((model.headroom() as f64 / model.max_ratio()) as u64 / 2).min(vol_hi);
+            if max_user < vol_lo {
+                return None;
+            }
+            let user_bytes = rng.range_u64(vol_lo, max_user);
+            let pool_ids: Vec<u32> = model.pools.iter().map(|p| p.id).collect();
+            let workload_model = match rng.index(3) {
+                0 => WorkloadModel::Uniform,
+                1 => WorkloadModel::ZipfPools { exponent: rng.range_f64(0.5, 1.5) },
+                _ => WorkloadModel::Hotspot {
+                    pool: *rng.choose(&pool_ids)?,
+                    fraction: rng.range_f64(0.5, 0.9),
+                },
+            };
+            // conservative: attribute the whole phase at the worst ratio
+            let spread = (user_bytes as f64 / model.pools.len().max(1) as f64) as u64;
+            for p in &mut model.pools {
+                p.user_bytes += spread;
+            }
+            Some(ScenarioEvent::WorkloadPhase {
+                model: workload_model,
+                user_bytes,
+                duration: rng.range_f64(30.0, 600.0),
+            })
+        }
+        EventKind::Balance => {
+            // max_moves 0 is a deliberate edge case the engine must absorb
+            let max_moves = [0usize, 16, 64, 256][rng.choose_weighted(&[0.1, 0.3, 0.3, 0.3])?];
+            Some(ScenarioEvent::BalanceRound { max_moves })
+        }
+        EventKind::Age => {
+            let epochs = 1 + rng.index(3);
+            let max_grow = rng.range_f64(0.02, 0.08);
+            let growth_bound = (1.0 + max_grow).powi(epochs as i32);
+            let projected = (model.raw_total() as f64 * growth_bound) as u64;
+            if projected > (model.capacity() as f64 * BUDGET_FRAC) as u64 {
+                return None;
+            }
+            for p in &mut model.pools {
+                p.user_bytes = (p.user_bytes as f64 * growth_bound) as u64;
+            }
+            Some(ScenarioEvent::Age {
+                cfg: AgingConfig {
+                    epochs,
+                    max_grow,
+                    max_shrink: rng.range_f64(0.02, 0.06),
+                    dormant_prob: rng.range_f64(0.2, 0.6),
+                },
+            })
+        }
+        EventKind::Snapshot => Some(ScenarioEvent::Snapshot { label: format!("s{index}") }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::clusters;
+
+    #[test]
+    fn generation_is_deterministic_per_seed_and_profile() {
+        let base = clusters::demo(7);
+        for profile in Profile::ALL {
+            let a = generate_spec(&base, 7, profile, true);
+            let b = generate_spec(&base, 7, profile, true);
+            assert_eq!(crate::scenario::serde::dump(&a), crate::scenario::serde::dump(&b));
+            assert_eq!(a.name, format!("fuzz-{}-{:08x}", profile.name(), 7));
+            // snapshot bookends plus the body
+            assert!(a.events.len() >= 10, "{} events", a.events.len());
+        }
+        let c = generate_spec(&base, 8, Profile::KitchenSink, true);
+        let d = generate_spec(&base, 7, Profile::KitchenSink, true);
+        assert_ne!(
+            crate::scenario::serde::dump(&c),
+            crate::scenario::serde::dump(&d),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn profiles_parse_and_roundtrip_names() {
+        for p in Profile::ALL {
+            assert_eq!(Profile::parse(p.name()), Some(p));
+        }
+        assert_eq!(Profile::parse("nope"), None);
+    }
+
+    #[test]
+    fn generated_failures_never_exhaust_crush_hosts() {
+        // drive the failure-heavy profile across many seeds and count
+        // host failures scripted into each timeline: the demo cluster
+        // has 6 hosts and 3-wide acting sets, so at most 3 may ever fail
+        let base = clusters::demo(1);
+        for seed in 0..32u64 {
+            let spec = generate_spec(&base, seed, Profile::FailureHeavy, true);
+            let failed_hosts = spec
+                .events
+                .iter()
+                .filter(|e| matches!(e, ScenarioEvent::FailHost { .. }))
+                .count();
+            assert!(failed_hosts <= 3, "seed {seed} scripted {failed_hosts} host failures");
+            for e in &spec.events {
+                if let ScenarioEvent::FailOsd { osd } = e {
+                    assert!((*osd as usize) < base.osd_count(), "seed {seed} fails unknown osd");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! The cluster invariant machine: properties that must hold after
+//! *every* scenario event, checked through the
+//! [`crate::scenario::ScenarioEngine`] observer hook.
+//!
+//! Each [`Invariant`] sees the post-event cluster plus the event and its
+//! outcome; stateful invariants (convergence, clock monotonicity) carry
+//! their own memory between events. The standard suite pins exactly the
+//! properties the paper's machinery promises: bounded fill, consistent
+//! accounting, CRUSH-rule compliance for every acting set, variance
+//! non-increasing across balance rounds, a monotone virtual clock, and
+//! an upmap table that describes the acting sets.
+
+use crate::balancer::constraints::rule_slot_constraints;
+use crate::cluster::ClusterState;
+use crate::crush::{Level, NodeId, OsdId};
+use crate::scenario::{EventOutcome, ScenarioEvent};
+
+/// One invariant violation: which check, after which event, and why.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Name of the invariant that fired.
+    pub invariant: &'static str,
+    /// Zero-based index of the event after which it fired.
+    pub event_index: usize,
+    /// Human-readable description of the violation.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] after event {}: {}", self.invariant, self.event_index, self.detail)
+    }
+}
+
+/// Everything an invariant may look at after one event.
+pub struct CheckContext<'a> {
+    /// The cluster, post-event.
+    pub state: &'a ClusterState,
+    /// The event that was just applied.
+    pub event: &'a ScenarioEvent,
+    /// What the event did.
+    pub outcome: &'a EventOutcome,
+    /// Virtual time after the event, seconds.
+    pub vtime: f64,
+    /// Zero-based index of the event in the timeline.
+    pub event_index: usize,
+}
+
+/// A property of the cluster checked after every event. Implementations
+/// may keep state across events (`&mut self`) — e.g. the previous
+/// variance or clock reading.
+pub trait Invariant {
+    /// Short stable name, used in reports and corpus files.
+    fn name(&self) -> &'static str;
+    /// `Ok(())` if the property holds, `Err(detail)` otherwise.
+    fn check(&mut self, cx: &CheckContext<'_>) -> Result<(), String>;
+}
+
+/// No device stores more bytes than its physical capacity.
+struct NoOverfill;
+
+impl Invariant for NoOverfill {
+    fn name(&self) -> &'static str {
+        "no-overfill"
+    }
+
+    fn check(&mut self, cx: &CheckContext<'_>) -> Result<(), String> {
+        for o in 0..cx.state.osd_count() as OsdId {
+            let (used, size) = (cx.state.osd_used(o), cx.state.osd_size(o));
+            if size > 0 && used > size {
+                return Err(format!("osd.{o} holds {used} bytes of {size} capacity"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// [`ClusterState::verify`] reports no problems (accounting, shard
+/// matrix, aggregates, upmap table — the cluster's own self-checks).
+struct VerifyClean;
+
+impl Invariant for VerifyClean {
+    fn name(&self) -> &'static str {
+        "verify-clean"
+    }
+
+    fn check(&mut self, cx: &CheckContext<'_>) -> Result<(), String> {
+        let problems = cx.state.verify();
+        if problems.is_empty() {
+            Ok(())
+        } else {
+            Err(problems.join("; "))
+        }
+    }
+}
+
+/// Every acting set satisfies its pool's CRUSH rule: device class, take
+/// subtree, and failure-domain distinctness at every level of every
+/// take/emit block.
+struct CrushDomains;
+
+impl Invariant for CrushDomains {
+    fn name(&self) -> &'static str {
+        "crush-domains"
+    }
+
+    fn check(&mut self, cx: &CheckContext<'_>) -> Result<(), String> {
+        let state = cx.state;
+        for pool in state.pools.values() {
+            let rule = state
+                .crush
+                .rule(pool.rule_id)
+                .ok_or_else(|| format!("pool {} references unknown rule {}", pool.id, pool.rule_id))?;
+            let blocks = rule_slot_constraints(state, rule, pool.redundancy.shard_count());
+            for pg in state.pgs_of_pool(pool.id) {
+                let acting = pg.acting();
+                for block in &blocks {
+                    let osds: Vec<OsdId> = block
+                        .slots
+                        .clone()
+                        .filter_map(|s| acting.get(s).copied().flatten())
+                        .collect();
+                    for &o in &osds {
+                        if let Some(class) = block.class {
+                            if state.osd_class(o) != class {
+                                return Err(format!(
+                                    "pg {} shard on osd.{o} violates class {class:?}",
+                                    pg.id()
+                                ));
+                            }
+                        }
+                        if !state.crush.in_subtree(o as NodeId, block.take_root) {
+                            return Err(format!(
+                                "pg {} shard on osd.{o} is outside its take subtree",
+                                pg.id()
+                            ));
+                        }
+                    }
+                    for &level in &block.distinct_at {
+                        if level == Level::Osd {
+                            continue;
+                        }
+                        let mut domains: Vec<NodeId> = Vec::with_capacity(osds.len());
+                        for &o in &osds {
+                            let Some(d) = state.crush.ancestor_at(o as NodeId, level) else {
+                                return Err(format!(
+                                    "pg {} shard on osd.{o} has no {level:?} ancestor",
+                                    pg.id()
+                                ));
+                            };
+                            if domains.contains(&d) {
+                                return Err(format!(
+                                    "pg {} places two shards in one {level:?} domain",
+                                    pg.id()
+                                ));
+                            }
+                            domains.push(d);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Utilization variance never increases across a `BalanceRound`: the
+/// balancer only applies improving moves, so a round at stable topology
+/// (rounds never change topology themselves) must converge. Stateful:
+/// remembers the variance after the previous event as the pre-round
+/// reading.
+struct Convergence {
+    last: Option<f64>,
+}
+
+impl Invariant for Convergence {
+    fn name(&self) -> &'static str {
+        "balance-converges"
+    }
+
+    fn check(&mut self, cx: &CheckContext<'_>) -> Result<(), String> {
+        let var = cx.state.utilization_variance();
+        let result = match (cx.event, self.last) {
+            (ScenarioEvent::BalanceRound { .. }, Some(prev))
+                if var > prev + prev.abs() * 1e-6 + 1e-12 =>
+            {
+                Err(format!("variance rose across a balance round: {prev:.6e} -> {var:.6e}"))
+            }
+            _ => Ok(()),
+        };
+        self.last = Some(var);
+        result
+    }
+}
+
+/// The virtual clock never runs backwards.
+struct ClockMonotone {
+    last: f64,
+}
+
+impl Invariant for ClockMonotone {
+    fn name(&self) -> &'static str {
+        "clock-monotone"
+    }
+
+    fn check(&mut self, cx: &CheckContext<'_>) -> Result<(), String> {
+        let prev = self.last;
+        self.last = cx.vtime;
+        if cx.vtime + 1e-12 < prev {
+            Err(format!("virtual clock went backwards: {prev} -> {}", cx.vtime))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// The upmap exception table describes the acting sets: in-range ids,
+/// no identity pairs, every replacement acting, one pair per raw
+/// source. Intentionally redundant with [`ClusterState::verify`] — the
+/// direct check keeps firing even if `verify` regresses.
+struct UpmapConsistent;
+
+impl Invariant for UpmapConsistent {
+    fn name(&self) -> &'static str {
+        "upmap-consistent"
+    }
+
+    fn check(&mut self, cx: &CheckContext<'_>) -> Result<(), String> {
+        let state = cx.state;
+        let n = state.osd_count();
+        for pg in state.pgs() {
+            let acting: Vec<OsdId> = pg.devices().collect();
+            let mut sources: Vec<OsdId> = Vec::new();
+            for &(raw, repl) in state.upmap_items(pg.id()) {
+                if (raw as usize) >= n || (repl as usize) >= n {
+                    return Err(format!("pg {} upmap pair {raw}→{repl} out of range", pg.id()));
+                }
+                if raw == repl {
+                    return Err(format!("pg {} upmap identity pair {raw}→{raw}", pg.id()));
+                }
+                if !acting.contains(&repl) {
+                    return Err(format!(
+                        "pg {} upmap replacement osd.{repl} is not acting",
+                        pg.id()
+                    ));
+                }
+                if sources.contains(&raw) {
+                    return Err(format!("pg {} upmap duplicate source osd.{raw}", pg.id()));
+                }
+                sources.push(raw);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The standard suite wired to run after every engine event — the
+/// canonical consumer of [`crate::scenario::ScenarioEngine::with_observer`].
+pub struct InvariantMachine {
+    invariants: Vec<Box<dyn Invariant>>,
+    violations: Vec<Violation>,
+    next_index: usize,
+}
+
+impl InvariantMachine {
+    /// The standard suite (fill, verify, CRUSH domains, convergence,
+    /// clock, upmap).
+    pub fn standard() -> InvariantMachine {
+        InvariantMachine {
+            invariants: vec![
+                Box::new(NoOverfill),
+                Box::new(VerifyClean),
+                Box::new(CrushDomains),
+                Box::new(Convergence { last: None }),
+                Box::new(ClockMonotone { last: 0.0 }),
+                Box::new(UpmapConsistent),
+            ],
+            violations: Vec::new(),
+            next_index: 0,
+        }
+    }
+
+    /// A machine with a custom invariant set (tests, focused replays).
+    pub fn with_invariants(invariants: Vec<Box<dyn Invariant>>) -> InvariantMachine {
+        InvariantMachine { invariants, violations: Vec::new(), next_index: 0 }
+    }
+
+    /// Run every invariant against one post-event snapshot. Shaped to
+    /// drop straight into the engine's observer hook:
+    /// `engine.with_observer(|s, e, o, t| machine.observe(s, e, o, t))`.
+    pub fn observe(
+        &mut self,
+        state: &ClusterState,
+        event: &ScenarioEvent,
+        outcome: &EventOutcome,
+        vtime: f64,
+    ) {
+        let cx = CheckContext { state, event, outcome, vtime, event_index: self.next_index };
+        for inv in &mut self.invariants {
+            if let Err(detail) = inv.check(&cx) {
+                self.violations.push(Violation {
+                    invariant: inv.name(),
+                    event_index: cx.event_index,
+                    detail,
+                });
+            }
+        }
+        self.next_index += 1;
+    }
+
+    /// `true` while no invariant has fired.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Violations recorded so far.
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    /// Consume the machine, yielding its violations.
+    pub fn into_violations(self) -> Vec<Violation> {
+        self.violations
+    }
+
+    /// Number of events observed.
+    pub fn events_observed(&self) -> usize {
+        self.next_index
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::Equilibrium;
+    use crate::generator::clusters;
+    use crate::scenario::{ScenarioConfig, ScenarioEngine, ScenarioSpec};
+    use crate::simulator::WorkloadModel;
+    use crate::util::units::GIB;
+
+    #[test]
+    fn clean_timeline_observes_every_event_without_violations() {
+        let spec = ScenarioSpec::new("machine-clean", 41)
+            .snapshot("initial")
+            .workload(WorkloadModel::Uniform, 64 * GIB, 120.0)
+            .fail_osd(3)
+            .balance(200)
+            .snapshot("final");
+        let mut state = clusters::demo(spec.seed);
+        let mut bal = Equilibrium::default();
+        let mut machine = InvariantMachine::standard();
+        let config = ScenarioConfig { record_series: false, ..ScenarioConfig::default() };
+        let engine = ScenarioEngine::new(&mut state, Some(&mut bal), config, spec.seed)
+            .with_observer(|s, e, o, t| machine.observe(s, e, o, t));
+        engine.run(&spec).unwrap();
+        assert_eq!(machine.events_observed(), 5);
+        assert!(machine.is_clean(), "{:?}", machine.violations());
+    }
+
+    #[test]
+    fn overfill_and_clock_regression_fire() {
+        let state = clusters::demo(43);
+        let event = ScenarioSpec::new("x", 0).snapshot("s").events.remove(0);
+        let outcome = EventOutcome::default();
+
+        // a clock regression fires the monotone invariant
+        let mut machine = InvariantMachine::with_invariants(vec![Box::new(ClockMonotone {
+            last: 0.0,
+        })]);
+        machine.observe(&state, &event, &outcome, 10.0);
+        machine.observe(&state, &event, &outcome, 5.0);
+        assert_eq!(machine.violations().len(), 1);
+        assert_eq!(machine.violations()[0].invariant, "clock-monotone");
+        assert_eq!(machine.violations()[0].event_index, 1);
+
+        // an overfilled device fires no-overfill (forced via raw writes
+        // far beyond the demo cluster's capacity on one pool)
+        let mut full = clusters::demo(47);
+        let total = full.osd_count() as u64
+            * (0..full.osd_count() as OsdId).map(|o| full.osd_size(o)).max().unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        crate::simulator::write_pool(&mut full, 1, total, &mut rng);
+        let mut machine = InvariantMachine::with_invariants(vec![Box::new(NoOverfill)]);
+        machine.observe(&full, &event, &outcome, 0.0);
+        assert!(!machine.is_clean(), "writing {total} bytes must overfill something");
+    }
+
+    #[test]
+    fn upmap_invariant_fires_on_corruption() {
+        let mut s = clusters::demo(53);
+        let pg = s.pgs().next().unwrap().id();
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let to = (0..s.osd_count() as OsdId).find(|&o| !s.pg(pg).unwrap().on(o)).unwrap();
+        s.apply_movement(pg, from, to).unwrap();
+        let event = ScenarioSpec::new("x", 0).snapshot("s").events.remove(0);
+        let mut machine = InvariantMachine::with_invariants(vec![Box::new(UpmapConsistent)]);
+        machine.observe(&s, &event, &EventOutcome::default(), 0.0);
+        assert!(machine.is_clean(), "{:?}", machine.violations());
+    }
+}

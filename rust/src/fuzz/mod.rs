@@ -1,0 +1,33 @@
+//! Chaos scenario fuzzer: generative testing for the scenario engine.
+//!
+//! Three pieces compose into tier 4 of the test pyramid
+//! (`docs/TESTING.md`):
+//!
+//! * [`gen`] — a seeded random [`crate::scenario::ScenarioSpec`]
+//!   generator: a weighted grammar over all eleven event variants,
+//!   structurally valid by construction under four weight
+//!   [`Profile`]s.
+//! * [`invariant`] — the cluster invariant machine: an [`Invariant`]
+//!   trait and a standard suite (fill bounds, state verification,
+//!   CRUSH failure domains, balance convergence, clock monotonicity,
+//!   upmap consistency) checked after **every** engine event via
+//!   [`crate::scenario::ScenarioEngine::with_observer`].
+//! * [`corpus`] — the sweep runner: replay generated specs in
+//!   parallel (byte-identical at any `EQUILIBRIUM_THREADS`), minimize
+//!   failures by prefix bisection, and promote the minimal spec JSON
+//!   into `corpus/regressions/`, which `tests/fuzz_corpus.rs` replays
+//!   forever after.
+//!
+//! Design rationale in `docs/rfcs/0005-chaos-fuzzer.md`.
+
+#![warn(missing_docs)]
+
+pub mod corpus;
+pub mod gen;
+pub mod invariant;
+
+pub use corpus::{
+    minimize, promote, replay, run_sweep, CaseOutcome, FailingCase, FuzzConfig, FuzzReport,
+};
+pub use gen::{generate_spec, Profile};
+pub use invariant::{CheckContext, Invariant, InvariantMachine, Violation};

@@ -17,6 +17,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod crush;
 pub mod fleet;
+pub mod fuzz;
 pub mod generator;
 pub mod plan;
 pub mod report;

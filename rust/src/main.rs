@@ -15,6 +15,9 @@
 //! * `fleet`     — deterministic multi-seed scenario sweeps: run a sweep,
 //!   compare raw vs piped execution, or gate a sweep against a committed
 //!   statistical baseline (RFC 0004)
+//! * `fuzz`      — chaos scenario fuzzing: sweep generated timelines
+//!   through the invariant machine, minimize failures, and promote them
+//!   into the regression corpus (RFC 0005)
 //! * `runtime-info` — show PJRT artifact status
 
 use std::path::PathBuf;
@@ -49,6 +52,7 @@ fn main() -> ExitCode {
         "daemon" => cmd_daemon(rest),
         "scenario" => cmd_scenario(rest),
         "fleet" => cmd_fleet(rest),
+        "fuzz" => cmd_fuzz(rest),
         "df" => cmd_df(rest),
         "crush" => cmd_crush(rest),
         "runtime-info" => cmd_runtime_info(),
@@ -79,12 +83,15 @@ fn usage() -> String {
      \x20                [--scoring S] [--seed N] [--out-dir DIR] [--baseline FILE]\n\
      \x20 daemon        --cluster <a..f|demo> [--rounds N] [--write-gib X] [--moves-per-round N]\n\
      \x20                [--optimize] [--phases]\n\
-     \x20 scenario      list | run [--name NAME | --all] [--seed N] [--reduced]\n\
+     \x20 scenario      list | run [--name NAME | --all | --spec FILE] [--seed N] [--reduced]\n\
      \x20                [--out-dir DIR] [--quiet] [--optimize] [--phases]\n\
      \x20 fleet         run [--name NAME] [--seeds N] [--seed-base N] [--reduced|--smoke]\n\
      \x20                [--optimize] [--phases] [--out FILE] [--out-dir DIR] [--quiet]\n\
      \x20                | compare [same sweep flags]\n\
      \x20                | gate --baseline FILE [--rel X]\n\
+     \x20 fuzz          run [--cases N] [--seed-base N] [--profile P] [--reduced] [--chunk N]\n\
+     \x20                [--out FILE] [--promote-dir DIR] [--quiet]\n\
+     \x20                | gen --seed N [--profile P] [--reduced] [--out FILE]\n\
      \x20 df            --cluster <a..f|demo> | --state FILE   (ceph-df-style report)\n\
      \x20 crush         --cluster <a..f|demo> | --state FILE [--tree]  (decompile CRUSH map)\n\
      \x20 runtime-info\n"
@@ -506,6 +513,7 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium scenario run", "execute scenario timelines")
         .opt("name", "NAME", "library scenario to run (see `scenario list`)")
         .flag("all", "run the whole library")
+        .opt("spec", "FILE", "replay a scenario spec JSON file (e.g. a corpus regression)")
         .opt_default("seed", "N", "0", "scenario seed")
         .flag("reduced", "reduced-size mode (small cluster, small volumes; CI smoke)")
         .opt("out-dir", "DIR", "write the unified time series CSVs here")
@@ -519,6 +527,10 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
     let seed = a.get_u64("seed")?.unwrap_or(0);
     let reduced = a.flag("reduced");
     let plan_cfg = plan_config_from(&a)?;
+
+    if let Some(path) = a.get("spec") {
+        return run_spec_file(std::path::Path::new(path), a.flag("quiet"));
+    }
 
     let names: Vec<&str> = if a.flag("all") {
         equilibrium::scenario::ALL.to_vec()
@@ -627,6 +639,136 @@ fn size_label(reduced: bool) -> &'static str {
     } else {
         "full-size"
     }
+}
+
+/// Replay a spec JSON file on a fresh demo cluster under the standard
+/// invariant suite (the `scenario run --spec` path; how promoted corpus
+/// regressions are reproduced by hand).
+fn run_spec_file(path: &std::path::Path, quiet: bool) -> AppResult {
+    let spec = equilibrium::scenario::serde::load_file(path)
+        .map_err(|e| app_err!("cannot replay '{}': {e}", path.display()))?;
+    println!(
+        "scenario: replaying spec '{}' ({} events, seed {})",
+        spec.name,
+        spec.events.len(),
+        spec.seed,
+    );
+    let outcome = equilibrium::fuzz::replay(&spec);
+    if !quiet {
+        for v in &outcome.violations {
+            println!("  violation {v}");
+        }
+    }
+    if let Some(err) = &outcome.error {
+        return Err(app_err!("spec '{}' aborted: {err}", spec.name));
+    }
+    if !outcome.violations.is_empty() {
+        return Err(app_err!(
+            "spec '{}' violated {} invariant(s)",
+            spec.name,
+            outcome.violations.len()
+        ));
+    }
+    println!("clean: all invariants held across {} events", spec.events.len());
+    Ok(())
+}
+
+fn cmd_fuzz(argv: &[String]) -> AppResult {
+    let Some((which, rest)) = argv.split_first() else {
+        return Err(app_err!("fuzz requires an action: run|gen"));
+    };
+    match which.as_str() {
+        "run" => cmd_fuzz_run(rest),
+        "gen" => cmd_fuzz_gen(rest),
+        other => Err(app_err!("unknown fuzz action '{other}' (run|gen)")),
+    }
+}
+
+/// Parse `--profile` into the profile list for a sweep (all four when
+/// the flag is absent).
+fn fuzz_profiles(a: &equilibrium::util::cli::Args) -> AppResult<Vec<equilibrium::fuzz::Profile>> {
+    match a.get("profile") {
+        None => Ok(equilibrium::fuzz::Profile::ALL.to_vec()),
+        Some(name) => equilibrium::fuzz::Profile::parse(name).map(|p| vec![p]).ok_or_else(|| {
+            app_err!(
+                "unknown profile '{name}' (failure-heavy|churn-heavy|growth-heavy|kitchen-sink)"
+            )
+        }),
+    }
+}
+
+fn cmd_fuzz_run(argv: &[String]) -> AppResult {
+    let cli = Cli::new("equilibrium fuzz run", "chaos sweep through the invariant machine")
+        .opt_default("cases", "N", "64", "generated scenario cases")
+        .opt("seed-base", "N", "first case seed (default: 0xFA220000)")
+        .opt("profile", "P", "sweep one weight profile (default: cycle all four)")
+        .flag("reduced", "shorter timelines and smaller writes (CI smoke)")
+        .opt_default("chunk", "N", "1", "parallel chunk length")
+        .opt("out", "FILE", "write the report JSON here instead of stdout")
+        .opt_default(
+            "promote-dir",
+            "DIR",
+            "corpus/regressions",
+            "where minimized failing specs are promoted",
+        )
+        .flag("quiet", "suppress the report on stdout");
+    let a = cli.parse(argv.iter())?;
+    let cfg = equilibrium::fuzz::FuzzConfig {
+        cases: a.get_u64("cases")?.unwrap_or(64) as usize,
+        seed_base: a.get_u64("seed-base")?.unwrap_or(0xFA22_0000),
+        profiles: fuzz_profiles(&a)?,
+        reduced: a.flag("reduced"),
+        chunk: a.get_u64("chunk")?.unwrap_or(1).max(1) as usize,
+    };
+    println!(
+        "fuzz: sweeping {} case(s) across {} profile(s) ({})",
+        cfg.cases,
+        cfg.profiles.len(),
+        size_label(cfg.reduced),
+    );
+    let report = equilibrium::fuzz::run_sweep(&cfg);
+    if let Some(path) = a.get("out") {
+        std::fs::write(path, report.render())?;
+        eprintln!("wrote {path}");
+    } else if !a.flag("quiet") {
+        print!("{}", report.render());
+    }
+    if report.is_clean() {
+        return Ok(());
+    }
+    let dir = PathBuf::from(a.get_or("promote-dir", "corpus/regressions"));
+    let paths = equilibrium::fuzz::promote(&dir, &report)?;
+    for p in &paths {
+        eprintln!("promoted {}", p.display());
+    }
+    Err(app_err!(
+        "fuzz: {} failing case(s) with {} violation(s); minimized specs promoted to {}",
+        report.failing.len(),
+        report.violation_count(),
+        dir.display(),
+    ))
+}
+
+fn cmd_fuzz_gen(argv: &[String]) -> AppResult {
+    let cli = Cli::new("equilibrium fuzz gen", "emit one generated scenario spec as JSON")
+        .opt("seed", "N", "generation seed (required)")
+        .opt_default("profile", "P", "kitchen-sink", "weight profile")
+        .flag("reduced", "shorter timeline and smaller writes")
+        .opt("out", "FILE", "write the spec here instead of stdout");
+    let a = cli.parse(argv.iter())?;
+    let seed = a.get_u64("seed")?.ok_or_else(|| app_err!("--seed is required"))?;
+    let profile = fuzz_profiles(&a)?[0];
+    let spec =
+        equilibrium::fuzz::generate_spec(&clusters::demo(seed), seed, profile, a.flag("reduced"));
+    let text = equilibrium::scenario::serde::dump(&spec);
+    match a.get("out") {
+        Some(path) => {
+            std::fs::write(path, text)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
 }
 
 fn cmd_fleet_run(argv: &[String]) -> AppResult {

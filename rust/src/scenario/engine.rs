@@ -210,6 +210,13 @@ impl ScenarioOutcome {
     }
 }
 
+/// Callback invoked after every successfully applied event: the
+/// post-event cluster, the event itself, what it did, and the current
+/// virtual time. Installed via [`ScenarioEngine::with_observer`]; the
+/// fuzz invariant machine is the canonical consumer.
+pub type EventObserver<'a> =
+    Box<dyn FnMut(&ClusterState, &ScenarioEvent, &EventOutcome, f64) + 'a>;
+
 /// The discrete-event executor for [`ScenarioSpec`] timelines.
 ///
 /// Adapters drive it event by event ([`ScenarioEngine::apply`]); whole
@@ -235,6 +242,9 @@ pub struct ScenarioEngine<'a> {
     /// [`ScenarioEngine::finish`] whether a terminal capture is needed
     /// (move counts alone would miss trailing failures/shrinks).
     dirty: bool,
+    /// Post-event observer hook (opt-in; `None` leaves every historical
+    /// behavior and golden trace byte-identical).
+    observer: Option<EventObserver<'a>>,
 }
 
 impl<'a> ScenarioEngine<'a> {
@@ -264,9 +274,25 @@ impl<'a> ScenarioEngine<'a> {
             total_calc_seconds: 0.0,
             throttle: None,
             dirty: false,
+            observer: None,
         };
         engine.capture_sample(0.0);
         engine
+    }
+
+    /// Install an observer invoked after every successfully applied
+    /// event with the post-event state, the event, its
+    /// [`EventOutcome`], and the virtual time. The hook is strictly
+    /// read-only over the cluster: with no observer installed (the
+    /// default) the engine's behavior — including every golden trace —
+    /// is byte-identical to before the hook existed. The fuzz invariant
+    /// machine ([`crate::fuzz::InvariantMachine`]) attaches here.
+    pub fn with_observer(
+        mut self,
+        observer: impl FnMut(&ClusterState, &ScenarioEvent, &EventOutcome, f64) + 'a,
+    ) -> Self {
+        self.observer = Some(Box::new(observer));
+        self
     }
 
     /// The cluster under the engine (adapters read metrics between
@@ -296,8 +322,19 @@ impl<'a> ScenarioEngine<'a> {
         self.dirty = false;
     }
 
-    /// Execute one event; returns what it did.
+    /// Execute one event; returns what it did. When an observer is
+    /// installed it fires after the event has fully applied (recovery
+    /// executed, clock advanced) — for both [`ScenarioEngine::run`] and
+    /// adapter-driven event streams.
     pub fn apply(&mut self, event: &ScenarioEvent) -> Result<EventOutcome, ScenarioError> {
+        let outcome = self.apply_inner(event)?;
+        if let Some(obs) = self.observer.as_mut() {
+            obs(&*self.state, event, &outcome, self.vtime);
+        }
+        Ok(outcome)
+    }
+
+    fn apply_inner(&mut self, event: &ScenarioEvent) -> Result<EventOutcome, ScenarioError> {
         match event {
             ScenarioEvent::FailOsd { osd } => {
                 if (*osd as usize) >= self.state.osd_count() {

@@ -23,8 +23,12 @@
 
 pub mod engine;
 pub mod library;
+pub mod serde;
 pub mod spec;
 
-pub use engine::{EventOutcome, ScenarioConfig, ScenarioEngine, ScenarioError, ScenarioOutcome};
+pub use engine::{
+    EventObserver, EventOutcome, ScenarioConfig, ScenarioEngine, ScenarioError, ScenarioOutcome,
+};
 pub use library::{ScenarioCase, ALL, CATALOG, COMPOUND};
+pub use serde::SpecError;
 pub use spec::{ScenarioEvent, ScenarioSpec};

@@ -3,8 +3,10 @@
 //!
 //! A property is a closure from a seeded [`Rng`] to `Result<(), String>`;
 //! the harness runs it for many seeds and reports the first failing seed,
-//! which makes failures reproducible (`check_seeded`). Shrinking is
-//! deliberately out of scope — failures report the seed instead.
+//! which makes failures reproducible (`check_seeded`). For properties
+//! over generated sequences, [`check_shrinking`] additionally bisects a
+//! failing case down to a locally-minimal failing prefix before
+//! reporting — the fuzzer's corpus minimizer builds on the same idea.
 
 use crate::util::rng::Rng;
 
@@ -29,6 +31,51 @@ pub fn check_seeded(
 /// Run with the default seed and 64 cases.
 pub fn check(name: &str, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
     check_seeded(name, 0xEC5B_A1A4_CE00_0001, 64, prop)
+}
+
+/// Sequence property with prefix shrinking: `gen` draws a sequence from
+/// the seeded [`Rng`], `prop` judges any prefix of it. On failure the
+/// harness bisects to a locally-minimal failing prefix (the prefix one
+/// shorter passes) and panics with the seed *and* the minimal length —
+/// so a 400-event counterexample reports as the 6 events that matter.
+///
+/// `prop` must be deterministic and meaningful on every prefix of a
+/// generated sequence (true for event timelines and sequentially-valid
+/// movement plans).
+pub fn check_shrinking<T>(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> Vec<T>,
+    mut prop: impl FnMut(&[T]) -> Result<(), String>,
+) {
+    let mut meta = Rng::new(base_seed);
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let items = gen(&mut rng);
+        if let Err(msg) = prop(&items) {
+            // bisect: lo = longest prefix known to pass, hi = shortest
+            // known to fail; invariant holds because we only move a
+            // bound after re-running `prop` on the probe prefix
+            let mut lo = 0usize;
+            let mut hi = items.len();
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if prop(&items[..mid]).is_err() {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            let minimal_msg = prop(&items[..hi]).err().unwrap_or(msg);
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): \
+                 minimal failing prefix {hi} of {} items: {minimal_msg}",
+                items.len()
+            );
+        }
+    }
 }
 
 /// Assertion helper for property bodies.
@@ -68,6 +115,42 @@ mod tests {
             prop_assert!(x < 50, "x={x} not < 50");
             Ok(())
         });
+    }
+
+    #[test]
+    fn shrinking_passes_clean_properties_through() {
+        let mut runs = 0;
+        check_shrinking(
+            "all-good",
+            7,
+            8,
+            |r| (0..10).map(|_| r.below(100)).collect::<Vec<u64>>(),
+            |_| {
+                runs += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(runs, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal failing prefix 8 of 10 items")]
+    fn shrinking_reports_the_minimal_failing_prefix() {
+        // deterministic sequence 0..10; the property fails as soon as the
+        // prefix includes the value 7 — the minimal failing prefix is 8
+        check_shrinking(
+            "needs-seven",
+            11,
+            1,
+            |_| (0u64..10).collect::<Vec<u64>>(),
+            |items| {
+                if items.contains(&7) {
+                    Err("found 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
     }
 
     #[test]

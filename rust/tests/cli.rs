@@ -105,6 +105,92 @@ fn fleet_run_smoke_report_and_gate() {
 }
 
 #[test]
+fn fuzz_gen_and_spec_replay_round_trip() {
+    let dir = std::env::temp_dir().join(format!("eq_fuzz_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec_path = dir.join("spec.json");
+
+    // ---- fuzz gen emits a loadable spec ---------------------------------
+    let out = Command::new(bin())
+        .args(["fuzz", "gen", "--seed", "7", "--reduced"])
+        .args(["--out", spec_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "fuzz gen failed: {}", String::from_utf8_lossy(&out.stderr));
+    let spec = equilibrium::scenario::serde::load_file(&spec_path).unwrap();
+    assert_eq!(spec.name, "fuzz-kitchen-sink-00000007");
+    assert_eq!(spec.seed, 7);
+
+    // ---- scenario run --spec replays it clean ---------------------------
+    let out = Command::new(bin())
+        .args(["scenario", "run", "--spec", spec_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "replay failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(
+        stdout.lines().next().unwrap(),
+        format!(
+            "scenario: replaying spec 'fuzz-kitchen-sink-00000007' ({} events, seed 7)",
+            spec.events.len()
+        )
+    );
+    assert!(stdout.contains("clean: all invariants held"), "{stdout}");
+
+    // ---- malformed spec: clean error, non-zero exit ---------------------
+    let junk_path = dir.join("junk.json");
+    std::fs::write(&junk_path, "{not json").unwrap();
+    let out = Command::new(bin())
+        .args(["scenario", "run", "--spec", junk_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "malformed spec must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "{stderr}");
+    assert!(stderr.contains("invalid JSON"), "the parse failure must be explained: {stderr}");
+
+    // a structurally-valid JSON document that is not a spec also fails
+    let foreign_path = dir.join("foreign.json");
+    std::fs::write(&foreign_path, "{\"format\": \"something-else\"}\n").unwrap();
+    let out = Command::new(bin())
+        .args(["scenario", "run", "--spec", foreign_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error:"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fuzz_run_smoke_is_clean_and_reports() {
+    let dir = std::env::temp_dir().join(format!("eq_fuzz_run_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let report_path = dir.join("fuzz.json");
+
+    let out = Command::new(bin())
+        .args(["fuzz", "run", "--cases", "4", "--reduced", "--quiet"])
+        .args(["--out", report_path.to_str().unwrap()])
+        .args(["--promote-dir", dir.join("promoted").to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "fuzz run failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(
+        stdout.lines().next().unwrap(),
+        "fuzz: sweeping 4 case(s) across 4 profile(s) (reduced)"
+    );
+    let report = std::fs::read_to_string(&report_path).unwrap();
+    let json = equilibrium::util::json::Json::parse(&report).unwrap();
+    assert_eq!(json.get("cases").and_then(|j| j.as_u64()), Some(4));
+    assert_eq!(json.get("violations").and_then(|j| j.as_u64()), Some(0));
+    // a clean sweep must not create the promotion directory
+    assert!(!dir.join("promoted").exists(), "clean sweeps promote nothing");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn fleet_rejects_bad_arguments() {
     // unknown action
     let out = Command::new(bin()).args(["fleet", "nope"]).output().unwrap();

@@ -1,0 +1,78 @@
+//! Replay the promoted fuzz regression corpus (`corpus/regressions/`).
+//!
+//! Every spec the fuzzer ever minimized and promoted is replayed here
+//! under the standard invariant suite forever after. A spec in the
+//! corpus is *expected to pass now*: promotion happens when a violation
+//! is found, the underlying bug gets fixed, and the spec stays behind
+//! as a pinned regression test. A failing replay therefore means a
+//! previously-fixed bug is back (or a promoted spec was committed
+//! without its fix — see `corpus/README.md`).
+
+use std::path::PathBuf;
+
+use equilibrium::fuzz::replay;
+use equilibrium::scenario::serde;
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("corpus").join("regressions")
+}
+
+/// Sorted spec paths, so the replay order (and any failure output) is
+/// stable across filesystems.
+fn corpus_specs() -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(corpus_dir()) else {
+        return Vec::new(); // no corpus yet — vacuously green
+    };
+    let mut specs: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    specs.sort();
+    specs
+}
+
+#[test]
+fn every_promoted_regression_replays_clean() {
+    let mut failures = Vec::new();
+    for path in corpus_specs() {
+        let spec = match serde::load_file(&path) {
+            Ok(spec) => spec,
+            Err(e) => {
+                failures.push(format!("{}: does not load: {e}", path.display()));
+                continue;
+            }
+        };
+        let outcome = replay(&spec);
+        if let Some(err) = &outcome.error {
+            failures.push(format!("{}: engine error: {err}", path.display()));
+        }
+        for v in &outcome.violations {
+            failures.push(format!("{}: {v}", path.display()));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} corpus regression(s) failing:\n  {}",
+        failures.len(),
+        failures.join("\n  ")
+    );
+}
+
+#[test]
+fn corpus_files_are_canonically_formatted() {
+    // promoted specs are exactly `serde::dump` output, so diffs stay
+    // reviewable and replays are byte-reproducible
+    for path in corpus_specs() {
+        let text = std::fs::read_to_string(&path).expect("corpus file readable");
+        let spec = serde::load_file(&path).expect("corpus file loads");
+        assert_eq!(
+            serde::dump(&spec),
+            text,
+            "{} is not canonical serde::dump output",
+            path.display()
+        );
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or_default();
+        assert_eq!(spec.name, stem, "{}: spec name must match file stem", path.display());
+    }
+}

@@ -27,7 +27,7 @@ use equilibrium::generator::clusters;
 use equilibrium::generator::synth::random_cluster;
 use equilibrium::plan::{net_relocations, optimize_plan, schedule_plan, PlanConfig, ScheduleConfig};
 use equilibrium::util::parallel;
-use equilibrium::util::prop::check_seeded;
+use equilibrium::util::prop::{check_seeded, check_shrinking};
 use equilibrium::util::rng::Rng;
 
 /// Random valid plan: legal moves on a scratch state, with a bias
@@ -152,72 +152,90 @@ fn pipeline_is_deterministic_across_thread_counts() {
     assert_eq!(t1.1, t4.1, "phase assignments diverged across thread counts");
 }
 
-/// Scheduler invariants on random clusters/plans under varied caps.
+/// Scheduler invariants on random clusters/plans under varied caps —
+/// ported to `check_shrinking`: the generated sequence is the optimized
+/// movement plan, and because prefixes of a sequentially-valid plan are
+/// themselves valid plans, a failure bisects down to the few moves that
+/// actually break the scheduler instead of the full 40-move plan.
 #[test]
 fn scheduler_invariants_hold_for_random_plans() {
-    check_seeded("plan-sched-invariants", 0x5C_4ED0, 16, |rng| {
-        let initial = random_cluster(rng);
-        let mut raw_state = initial.clone();
-        let raw = random_plan(&mut raw_state, rng, 40);
-        let opt = optimize_plan(&initial, &raw);
+    // gen and prop are separate closures: the cluster and caps the plan
+    // was generated against travel through this cell
+    let ctx: std::cell::RefCell<Option<(ClusterState, ScheduleConfig)>> =
+        std::cell::RefCell::new(None);
+    check_shrinking(
+        "plan-sched-invariants",
+        0x5C_4ED0,
+        16,
+        |rng| {
+            let initial = random_cluster(rng);
+            let mut raw_state = initial.clone();
+            let raw = random_plan(&mut raw_state, rng, 40);
+            let opt = optimize_plan(&initial, &raw);
+            let cfg = ScheduleConfig {
+                max_backfills_per_osd: 1 + rng.index(2),
+                max_backfills_per_domain: 1 + rng.index(3),
+                ..ScheduleConfig::default()
+            };
+            *ctx.borrow_mut() = Some((initial, cfg));
+            opt.movements
+        },
+        |plan| {
+            let guard = ctx.borrow();
+            let (initial, cfg) = guard.as_ref().expect("gen runs before prop");
+            let phased = schedule_plan(initial, plan, cfg);
 
-        let cfg = ScheduleConfig {
-            max_backfills_per_osd: 1 + rng.index(2),
-            max_backfills_per_domain: 1 + rng.index(3),
-            ..ScheduleConfig::default()
-        };
-        let phased = schedule_plan(&initial, &opt.movements, &cfg);
-
-        // permutation of the input
-        let key = |m: &Movement| (m.pg, m.from, m.to, m.bytes);
-        let mut want: Vec<_> = opt.movements.iter().map(key).collect();
-        let mut got: Vec<_> = phased.movements().map(key).collect();
-        want.sort();
-        got.sort();
-        if want != got {
-            return Err("schedule is not a permutation of the plan".into());
-        }
-
-        for (i, phase) in phased.phases.iter().enumerate() {
-            if phase.is_empty() {
-                return Err(format!("phase {i} is empty"));
+            // permutation of the input
+            let key = |m: &Movement| (m.pg, m.from, m.to, m.bytes);
+            let mut want: Vec<_> = plan.iter().map(key).collect();
+            let mut got: Vec<_> = phased.movements().map(key).collect();
+            want.sort();
+            got.sort();
+            if want != got {
+                return Err("schedule is not a permutation of the plan".into());
             }
-            let mut osd_load = std::collections::BTreeMap::<OsdId, usize>::new();
-            let mut dom_load = std::collections::BTreeMap::<NodeId, usize>::new();
-            let mut pgs = Vec::new();
-            for m in phase {
-                if pgs.contains(&m.pg) {
-                    return Err(format!("phase {i}: pg {} scheduled twice", m.pg));
+
+            for (i, phase) in phased.phases.iter().enumerate() {
+                if phase.is_empty() {
+                    return Err(format!("phase {i} is empty"));
                 }
-                pgs.push(m.pg);
-                for o in [m.from, m.to] {
-                    *osd_load.entry(o).or_insert(0) += 1;
+                let mut osd_load = std::collections::BTreeMap::<OsdId, usize>::new();
+                let mut dom_load = std::collections::BTreeMap::<NodeId, usize>::new();
+                let mut pgs = Vec::new();
+                for m in phase {
+                    if pgs.contains(&m.pg) {
+                        return Err(format!("phase {i}: pg {} scheduled twice", m.pg));
+                    }
+                    pgs.push(m.pg);
+                    for o in [m.from, m.to] {
+                        *osd_load.entry(o).or_insert(0) += 1;
+                    }
+                    let df = initial.crush.ancestor_at(m.from as NodeId, cfg.domain_level);
+                    let dt = initial.crush.ancestor_at(m.to as NodeId, cfg.domain_level);
+                    let mut doms: Vec<NodeId> = df.into_iter().chain(dt).collect();
+                    doms.dedup();
+                    for d in doms {
+                        *dom_load.entry(d).or_insert(0) += 1;
+                    }
                 }
-                let df = initial.crush.ancestor_at(m.from as NodeId, cfg.domain_level);
-                let dt = initial.crush.ancestor_at(m.to as NodeId, cfg.domain_level);
-                let mut doms: Vec<NodeId> = df.into_iter().chain(dt).collect();
-                doms.dedup();
-                for d in doms {
-                    *dom_load.entry(d).or_insert(0) += 1;
+                if osd_load.values().any(|&l| l > cfg.max_backfills_per_osd) {
+                    return Err(format!("phase {i}: per-OSD cap violated"));
+                }
+                if dom_load.values().any(|&l| l > cfg.max_backfills_per_domain) {
+                    return Err(format!("phase {i}: per-domain cap violated"));
                 }
             }
-            if osd_load.values().any(|&l| l > cfg.max_backfills_per_osd) {
-                return Err(format!("phase {i}: per-OSD cap violated"));
-            }
-            if dom_load.values().any(|&l| l > cfg.max_backfills_per_domain) {
-                return Err(format!("phase {i}: per-domain cap violated"));
-            }
-        }
 
-        // phases apply in order and land on the optimized plan's state
-        let mut s = initial.clone();
-        for m in phased.movements() {
-            s.apply_movement(m.pg, m.from, m.to)
-                .map_err(|e| format!("scheduled order not applicable: {e}"))?;
-        }
-        assert_states_equal(&s, &apply_all(&initial, &opt.movements), "scheduled vs optimized")?;
-        Ok(())
-    });
+            // phases apply in order and land on the plan's state
+            let mut s = initial.clone();
+            for m in phased.movements() {
+                s.apply_movement(m.pg, m.from, m.to)
+                    .map_err(|e| format!("scheduled order not applicable: {e}"))?;
+            }
+            assert_states_equal(&s, &apply_all(initial, plan), "scheduled vs plan")?;
+            Ok(())
+        },
+    );
 }
 
 /// Upmap-script round trip over the pipeline: render the optimized

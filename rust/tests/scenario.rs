@@ -226,6 +226,91 @@ fn pool_created_after_expansion_keeps_dense_counts_consistent() {
     assert!(state.pool_shard_counts(9).is_some());
 }
 
+/// Edge cases the chaos fuzzer leans on, pinned individually: each has
+/// a defined non-panicking outcome even though nothing sensible is left
+/// to do.
+#[test]
+fn edge_case_events_have_pinned_outcomes() {
+    use equilibrium::cluster::Pool;
+
+    // -- ShrinkPool far past the pool's contents drains it to zero
+    let mut state = clusters::demo(11);
+    let mut bal = Equilibrium::default();
+    let mut engine =
+        ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::silent(), 11);
+    let out = engine.apply(&ScenarioEvent::ShrinkPool { pool: 1, user_bytes: u64::MAX / 4 }).unwrap();
+    assert!(out.written_bytes > 0, "something was deleted");
+    // a second over-shrink finds nothing left and is still not an error
+    let out = engine.apply(&ScenarioEvent::ShrinkPool { pool: 1, user_bytes: u64::MAX / 4 }).unwrap();
+    assert_eq!(out.written_bytes, 0, "pool already empty");
+    drop(engine);
+    let drained: u64 = state.pgs_of_pool(1).map(|pg| pg.shard_bytes()).sum();
+    assert_eq!(drained, 0, "every PG of the pool is empty");
+    assert!(state.verify().is_empty(), "{:?}", state.verify());
+
+    // -- DecommissionPool works on every pool, including the last one:
+    // pools drain (PGs stay mapped but hold zero bytes) and the cluster
+    // stays consistent with nothing left to store
+    let mut state = clusters::demo(12);
+    let mut bal = Equilibrium::default();
+    let mut engine =
+        ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::silent(), 12);
+    let pool_ids: Vec<u32> = engine.state().pools.keys().copied().collect();
+    for pool in pool_ids {
+        engine.apply(&ScenarioEvent::DecommissionPool { pool }).unwrap();
+    }
+    // balancing an empty cluster must also be a graceful no-op
+    let out = engine.apply(&ScenarioEvent::BalanceRound { max_moves: 100 }).unwrap();
+    assert_eq!(out.executed_moves, 0, "nothing to balance after draining every pool");
+    drop(engine);
+    assert_eq!(state.total_used(), 0, "decommissioning every pool empties the cluster");
+    assert!(state.verify().is_empty(), "{:?}", state.verify());
+
+    // -- FailHost on an already-degraded host fails only the survivors,
+    // and on a fully-dead host it is a defined no-op
+    let mut state = clusters::demo(13);
+    let host_osds: Vec<u32> = {
+        let node = state.crush.bucket_by_name["host000"];
+        state.crush.devices_under(node, None)
+    };
+    assert!(host_osds.len() >= 2, "demo hosts have two devices");
+    let mut bal = Equilibrium::default();
+    let mut engine =
+        ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::silent(), 13);
+    engine.apply(&ScenarioEvent::FailOsd { osd: host_osds[0] }).unwrap();
+    engine.apply(&ScenarioEvent::FailHost { host: "host000".into() }).unwrap();
+    for &o in &host_osds {
+        assert!(!engine.state().osd_is_up(o), "osd.{o} down after host failure");
+    }
+    // the host is fully dead now: failing it again must not error
+    engine.apply(&ScenarioEvent::FailHost { host: "host000".into() }).unwrap();
+    drop(engine);
+    assert!(state.verify().is_empty(), "{:?}", state.verify());
+
+    // -- BalanceRound with a zero move budget plans nothing, moves
+    // nothing, and reports non-convergence rather than lying
+    let mut state = clusters::demo(14);
+    let var_before = state.utilization_variance();
+    let mut bal = Equilibrium::default();
+    let mut engine =
+        ScenarioEngine::new(&mut state, Some(&mut bal), ScenarioConfig::silent(), 14);
+    // grow a brand-new pool so there is real imbalance to (not) fix
+    engine
+        .apply(&ScenarioEvent::CreatePool {
+            pool: Pool::replicated(5, "untouched", 3, 16, 0),
+            user_bytes: 64 * GIB,
+        })
+        .unwrap();
+    let out = engine.apply(&ScenarioEvent::BalanceRound { max_moves: 0 }).unwrap();
+    assert_eq!(out.planned_moves, 0);
+    assert_eq!(out.executed_moves, 0);
+    assert_eq!(out.moved_bytes, 0);
+    assert!(!out.converged, "a zero-budget round must not claim convergence");
+    drop(engine);
+    let _ = var_before;
+    assert!(state.verify().is_empty(), "{:?}", state.verify());
+}
+
 /// Scenario events that reference missing entities fail loudly instead
 /// of silently skipping.
 #[test]
