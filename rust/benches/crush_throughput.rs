@@ -3,7 +3,8 @@
 //! happen per experiment).
 
 use equilibrium::crush::{map_rule, pg_input, CrushBuilder, DeviceClass, Level, Rule};
-use equilibrium::util::bench::{black_box, section, Bench};
+use equilibrium::util::bench::{black_box, section, write_bench_json, Bench};
+use equilibrium::util::json::Json;
 use equilibrium::util::units::TIB;
 
 fn build(hosts: usize, osds_per_host: usize) -> equilibrium::crush::CrushMap {
@@ -22,6 +23,16 @@ fn build(hosts: usize, osds_per_host: usize) -> equilibrium::crush::CrushMap {
 
 fn main() {
     let bench = Bench::default();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut record = |rows: &mut Vec<Json>, r: &equilibrium::util::bench::BenchResult| {
+        rows.push(
+            Json::obj()
+                .set("name", r.name.as_str())
+                .set("mean_seconds", r.mean())
+                .set("p50_seconds", r.p50())
+                .set("min_seconds", r.min()),
+        );
+    };
 
     section("CRUSH replicated mapping (3 slots)");
     for (hosts, per) in [(8usize, 4usize), (45, 18), (128, 16)] {
@@ -38,6 +49,7 @@ fn main() {
         );
         let per_sec = 1.0 / r.mean();
         println!("    -> {per_sec:.0} mappings/s");
+        record(&mut rows, &r);
     }
 
     section("CRUSH erasure mapping (11 slots)");
@@ -55,22 +67,28 @@ fn main() {
         );
         let per_sec = 1.0 / r.mean();
         println!("    -> {per_sec:.0} mappings/s");
+        record(&mut rows, &r);
     }
 
     section("full cluster-B state build (8731 PGs incl. CRUSH placement)");
     let quick = Bench { warmup_iters: 0, sample_count: 3, min_seconds: 0.0 };
-    quick.run("generator cluster B", || {
+    let r = quick.run("generator cluster B", || {
         black_box(equilibrium::generator::clusters::by_name("b", 0).unwrap().state.pg_count())
     });
+    record(&mut rows, &r);
 
     section("batched planning throughput (incremental engine, demo cluster)");
     // build the cluster once outside the timer; the measured body is a
     // state clone (cheap) plus the whole batch, which amortizes
     // constraint caches and candidate buffers (RFC 0001)
     let demo = equilibrium::generator::clusters::demo(17);
-    quick.run("Equilibrium::propose_batch(demo, 64)", || {
+    let r = quick.run("Equilibrium::propose_batch(demo, 64)", || {
         let mut state = demo.clone();
         let mut bal = equilibrium::balancer::Equilibrium::default();
         black_box(bal.propose_batch(&mut state, 64).len())
     });
+    record(&mut rows, &r);
+
+    let doc = Json::obj().set("bench", "crush_throughput").set("results", Json::Arr(rows));
+    write_bench_json("crush_throughput", &doc);
 }

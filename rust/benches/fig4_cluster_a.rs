@@ -9,6 +9,8 @@
 
 use equilibrium::report::figure4;
 use equilibrium::report::Scoring;
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
 use equilibrium::util::units::to_tib_f;
 use std::path::PathBuf;
 
@@ -17,6 +19,7 @@ fn main() {
     let (mgr, eq) = figure4(&out, 0, Scoring::Native).expect("write CSVs");
 
     println!("\nFigure 4 (cluster A) — summary of the plotted series:");
+    let mut rows: Vec<Json> = Vec::new();
     for r in [&mgr, &eq] {
         let first = r.series.first().unwrap();
         let last = r.series.last().unwrap();
@@ -28,7 +31,16 @@ fn main() {
             last.variance,
             to_tib_f(r.series.total_gained(None)),
         );
+        rows.push(
+            Json::obj()
+                .set("balancer", r.balancer.as_str())
+                .set("moves", r.movements.len())
+                .set("variance_initial", first.variance)
+                .set("variance_final", last.variance)
+                .set("gained_tib", to_tib_f(r.series.total_gained(None))),
+        );
     }
+    write_bench_json("fig4", &Json::obj().set("bench", "fig4").set("balancers", Json::Arr(rows)));
 
     // paper's qualitative shape for cluster A
     assert!(

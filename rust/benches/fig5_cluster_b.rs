@@ -9,6 +9,8 @@
 //! more summed over the many small pools.
 
 use equilibrium::report::{figure5, Scoring};
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
 use equilibrium::util::units::to_tib_f;
 use std::path::PathBuf;
 
@@ -18,6 +20,7 @@ fn main() {
 
     let big: &[u32] = &[1, 2, 3]; // archive1, archive2, rbd_big
     println!("\nFigure 5 (cluster B) — summary of the plotted series:");
+    let mut rows: Vec<Json> = Vec::new();
     for r in [&mgr, &eq] {
         let last = r.series.last().unwrap();
         println!(
@@ -31,7 +34,17 @@ fn main() {
             to_tib_f(r.series.total_gained(Some(big))),
             to_tib_f(r.series.total_gained(None)),
         );
+        rows.push(
+            Json::obj()
+                .set("balancer", r.balancer.as_str())
+                .set("moves", r.movements.len())
+                .set("var_hdd_final", last.variance_by_class["hdd"])
+                .set("var_ssd_final", last.variance_by_class["ssd"])
+                .set("big_pool_gain_tib", to_tib_f(r.series.total_gained(Some(big))))
+                .set("all_pool_gain_tib", to_tib_f(r.series.total_gained(None))),
+        );
     }
+    write_bench_json("fig5", &Json::obj().set("bench", "fig5").set("balancers", Json::Arr(rows)));
 
     // the paper's qualitative shape for cluster B:
     assert!(

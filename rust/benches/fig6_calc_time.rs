@@ -24,6 +24,8 @@
 use equilibrium::balancer::{Balancer, Equilibrium, ReferenceEquilibrium};
 use equilibrium::generator::clusters::by_name;
 use equilibrium::report::{run_cluster, Scoring};
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
 use equilibrium::util::stats;
 use equilibrium::util::units::fmt_duration;
 use std::path::PathBuf;
@@ -103,6 +105,7 @@ fn main() {
 
     let figure_clusters: &[&str] = if smoke { &["a"] } else { &["a", "b"] };
     println!("\nFigure 6 — movement calculation time distributions:");
+    let mut rows: Vec<Json> = Vec::new();
     for name in figure_clusters {
         let c = by_name(name, 0).unwrap();
         let (mgr, eq) = run_cluster(&c, Scoring::Native, &Default::default());
@@ -130,6 +133,15 @@ fn main() {
             let csv = r.series.to_csv();
             let path = out.join(format!("fig6_{}_{}.csv", name, r.balancer));
             std::fs::write(&path, csv).unwrap();
+            rows.push(
+                Json::obj()
+                    .set("cluster", *name)
+                    .set("balancer", r.balancer.as_str())
+                    .set("moves", times.len())
+                    .set("calc_mean_seconds", stats::mean(&times))
+                    .set("calc_p50_seconds", stats::percentile(&times, 50.0))
+                    .set("calc_p99_seconds", stats::percentile(&times, 99.0)),
+            );
         }
 
         // shape: equilibrium per-move calc time exceeds the baseline's
@@ -154,6 +166,10 @@ fn main() {
     }
     println!("\nCSV series written to target/figures/fig6_*.csv");
     println!("shape checks passed (ours slower per move, slowest near termination)");
+    write_bench_json(
+        "fig6",
+        &Json::obj().set("bench", "fig6").set("smoke", smoke).set("series", Json::Arr(rows)),
+    );
 
     if smoke {
         // tiny cluster: report the ratio but do not gate on it

@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use equilibrium::fleet::{run_library, FleetConfig};
 use equilibrium::scenario::ALL;
+use equilibrium::util::bench::write_bench_json;
 use equilibrium::util::json::Json;
 use equilibrium::util::parallel::with_threads;
 use equilibrium::util::units::fmt_duration;
@@ -63,8 +64,7 @@ fn main() {
         .set("byte_identical", true)
         .set("threads", Json::Arr(rows))
         .set("speedup_1_to_4", speedup);
-    std::fs::write("BENCH_fleet.json", doc.pretty()).expect("write BENCH_fleet.json");
-    println!("wrote BENCH_fleet.json");
+    write_bench_json("fleet", &doc);
 
     if smoke {
         println!("smoke mode: speedup gate skipped (reduced seed count)");

@@ -11,6 +11,7 @@
 use std::time::Instant;
 
 use equilibrium::fuzz::{run_sweep, FuzzConfig};
+use equilibrium::util::bench::write_bench_json;
 use equilibrium::util::json::Json;
 use equilibrium::util::parallel::with_threads;
 use equilibrium::util::units::fmt_duration;
@@ -67,6 +68,5 @@ fn main() {
         .set("violations", 0u64)
         .set("threads", Json::Arr(rows))
         .set("speedup_1_to_4", speedup);
-    std::fs::write("BENCH_fuzz.json", doc.pretty()).expect("write BENCH_fuzz.json");
-    println!("wrote BENCH_fuzz.json");
+    write_bench_json("fuzz", &doc);
 }

@@ -1,0 +1,219 @@
+//! Hyperscale benchmark — the 10k-OSD / million-PG regime (RFC 0006).
+//!
+//! Builds the datacenter tiers from `generator::hyperscale` (1k / 4k /
+//! 10k OSDs; the 10k tier carries ≥1M PGs) and measures, per tier:
+//!
+//! * **build time** — deterministic datacenter generation + CRUSH
+//!   placement at the ambient thread count;
+//! * **arena memory** — compact-state bytes/PG against the analytic
+//!   pre-PR `legacy_heap_bytes()` model (gate: ≥30% reduction);
+//! * **per-round partitioned planning** — wall time of
+//!   `balance_partitioned` rounds (parallel per-pool plan + serial
+//!   commit), plus one fresh-clone round at 1 / 2 / 4 threads.
+//!
+//! Applied movements are folded into an order-sensitive FNV-1a digest
+//! recorded in the JSON, so CI can byte-diff the determinism-pinned
+//! fields across `EQUILIBRIUM_THREADS=1` and `=4` runs: thread count may
+//! change how fast a round plans, never which moves it commits.
+//!
+//! Everything lands in **`BENCH_hyperscale.json`** at the repo root via
+//! the shared `write_bench_json` writer.
+//!
+//! `--smoke` (CI quick mode): the 128-OSD smoke tier only, two rounds;
+//! the memory gate still applies (it is analytic, not load-dependent),
+//! the wall-clock ceilings are left to CI's jq gates.
+
+use equilibrium::balancer::{balance_partitioned, PartitionConfig};
+use equilibrium::cluster::{ClusterState, Movement};
+use equilibrium::generator::hyperscale::{self, HyperscaleSpec};
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
+use equilibrium::util::parallel;
+use equilibrium::util::units::fmt_duration;
+use std::time::Instant;
+
+/// Thread counts of the fresh-clone round sweep.
+const SWEEP: [usize; 3] = [1, 2, 4];
+
+/// Cluster-generation seed, shared by every tier.
+const SEED: u64 = 0xD47AC;
+
+/// Per-round wall-clock ceilings (seconds), full mode only, indexed by
+/// tier name. Deliberately generous — they catch complexity regressions
+/// (a round going quadratic), not scheduler noise.
+fn round_ceiling(tier: &str) -> f64 {
+    match tier {
+        "1k" => 30.0,
+        "4k" => 60.0,
+        _ => 120.0,
+    }
+}
+
+/// Order-sensitive FNV-1a over the applied movement sequence. Two runs
+/// commit identical moves in identical order iff the digests match.
+fn moves_digest(moves: &[Movement]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x1_0000_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |h: u64, v: u64| (h ^ v).wrapping_mul(PRIME);
+    for m in moves {
+        h = mix(h, m.pg.pool as u64);
+        h = mix(h, m.pg.index as u64);
+        h = mix(h, m.from as u64);
+        h = mix(h, m.to as u64);
+        h = mix(h, m.bytes);
+    }
+    h
+}
+
+/// Measure one tier end to end; returns its JSON row.
+fn run_tier(spec: &HyperscaleSpec, smoke: bool) -> Json {
+    println!("\n=== tier {} ({} OSDs) ===", spec.name, spec.osd_count());
+
+    let t0 = Instant::now();
+    let mut state = hyperscale::build(spec, SEED);
+    let build_secs = t0.elapsed().as_secs_f64();
+    let pgs = state.pg_count();
+    let osds = state.osd_count();
+    println!(
+        "  build     {} ({pgs} PGs / {osds} OSDs / {} pools)",
+        fmt_duration(build_secs),
+        state.pools.len()
+    );
+    // Full invariant verification walks every PG; affordable below the
+    // million-PG tier, sampled out above it (build() already asserts
+    // failure domains in its own tests).
+    if pgs <= 300_000 {
+        assert!(state.verify().is_empty(), "tier {} cluster invariants", spec.name);
+    }
+
+    // arena memory: compact columns vs the analytic pre-PR model
+    let arena = state.arena_bytes();
+    let legacy = state.arena_legacy_bytes();
+    let bytes_per_pg = arena as f64 / pgs as f64;
+    let legacy_per_pg = legacy as f64 / pgs as f64;
+    let ratio = arena as f64 / legacy as f64;
+    println!(
+        "  arena     {:.1} B/PG compact vs {:.1} B/PG legacy model ({:.0}% of legacy)",
+        bytes_per_pg,
+        legacy_per_pg,
+        ratio * 100.0
+    );
+    assert!(
+        ratio < 0.7,
+        "RFC 0006 gate: compact arena must be ≥30% smaller than the pre-PR \
+         layout (tier {}: {arena} vs {legacy} bytes, {:.0}%)",
+        spec.name,
+        ratio * 100.0
+    );
+
+    // partitioned planning rounds on the live state, each timed
+    let cfg = PartitionConfig::default();
+    let n_rounds = if smoke { 2 } else { 3 };
+    let mut rounds: Vec<Json> = Vec::new();
+    let mut all_moves: Vec<Movement> = Vec::new();
+    for round in 0..n_rounds {
+        let t0 = Instant::now();
+        let report = balance_partitioned(&mut state, &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "  round {}   {} ({} planned, {} applied, {} rejected)",
+            round + 1,
+            fmt_duration(secs),
+            report.planned,
+            report.applied.len(),
+            report.rejected
+        );
+        if !smoke {
+            let ceiling = round_ceiling(spec.name);
+            assert!(
+                secs < ceiling,
+                "RFC 0006 gate: tier {} round {} took {secs:.1}s (ceiling {ceiling}s)",
+                spec.name,
+                round + 1
+            );
+        }
+        rounds.push(
+            Json::obj()
+                .set("round", (round + 1) as u64)
+                .set("seconds", secs)
+                .set("planned", report.planned)
+                .set("applied", report.applied.len())
+                .set("rejected", report.rejected),
+        );
+        all_moves.extend(report.applied);
+    }
+    let digest = moves_digest(&all_moves);
+    println!("  moves     {} total, digest {digest:#018x}", all_moves.len());
+
+    // one fresh-clone round per thread count (timing sweep; the moves
+    // themselves are pinned by the digest above + the CI double-run)
+    let baseline = hyperscale::build(spec, SEED);
+    let mut sweep = Json::obj();
+    for &t in &SWEEP {
+        let mut s = baseline.clone();
+        let t0 = Instant::now();
+        let report = parallel::with_threads(t, || balance_partitioned(&mut s, &cfg));
+        let secs = t0.elapsed().as_secs_f64();
+        println!("  sweep t={t}  {} ({} applied)", fmt_duration(secs), report.applied.len());
+        sweep = sweep.set(&format!("t{t}"), secs);
+    }
+
+    Json::obj()
+        .set("tier", spec.name)
+        .set("osds", osds)
+        .set("hosts", spec.host_count())
+        .set("pools", state.pools.len())
+        .set("pgs", pgs)
+        .set("build_seconds", build_secs)
+        .set(
+            "memory",
+            Json::obj()
+                .set("arena_bytes", arena)
+                .set("legacy_bytes", legacy)
+                .set("bytes_per_pg", bytes_per_pg)
+                .set("legacy_bytes_per_pg", legacy_per_pg)
+                .set("ratio_vs_legacy", ratio),
+        )
+        .set("rounds", Json::Arr(rounds))
+        .set("round_plan_seconds", sweep)
+        .set("moves_total", all_moves.len())
+        .set("moves_digest", format!("{digest:#018x}"))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let tiers: &[&HyperscaleSpec] = if smoke {
+        &[&hyperscale::SMOKE]
+    } else {
+        &[&hyperscale::TIER_1K, &hyperscale::TIER_4K, &hyperscale::TIER_10K]
+    };
+    let ambient = parallel::threads();
+    println!("hyperscale bench — compact state + partitioned planning (RFC 0006); ambient threads: {ambient}");
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut saw_million_pgs = false;
+    for spec in tiers {
+        let row = run_tier(spec, smoke);
+        saw_million_pgs |= row.get_u64("pgs").unwrap_or(0) >= 1_000_000;
+        rows.push(row);
+    }
+    if !smoke {
+        assert!(saw_million_pgs, "RFC 0006 gate: the full sweep must cover a ≥1M-PG tier");
+    }
+
+    let doc = Json::obj()
+        .set("bench", "hyperscale")
+        .set("smoke", smoke)
+        .set("ambient_threads", ambient)
+        .set("seed", SEED)
+        .set("tiers", Json::Arr(rows));
+    write_bench_json("hyperscale", &doc);
+
+    if smoke {
+        println!("smoke mode: wall-clock ceilings left to CI jq gates");
+    } else {
+        println!("gates passed: memory ≥30% reduction + per-round ceilings at every tier");
+    }
+}

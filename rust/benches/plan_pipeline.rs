@@ -28,6 +28,7 @@ use equilibrium::coordinator::execute_plan;
 use equilibrium::generator::clusters;
 use equilibrium::plan::{optimize_plan, schedule_plan, PlanConfig, ScheduleConfig};
 use equilibrium::scenario::{library, ScenarioOutcome, ALL};
+use equilibrium::util::bench::write_bench_json;
 use equilibrium::util::json::Json;
 use equilibrium::util::units::{fmt_bytes, fmt_bytes_f, fmt_duration};
 
@@ -147,13 +148,13 @@ fn main() {
                 .set("optimize_seconds", optimize_seconds)
                 .set("schedule_seconds", schedule_seconds),
         );
-    std::fs::write("BENCH_plan.json", doc.pretty()).expect("write BENCH_plan.json");
+    write_bench_json("plan", &doc);
     let library_saved: u64 = doc
         .get("scenarios")
         .and_then(Json::as_arr)
         .map(|rows| rows.iter().filter_map(|r| r.get_u64("saved_bytes")).sum())
         .unwrap_or(0);
-    println!("\nwrote BENCH_plan.json ({} of library movement saved)", fmt_bytes_f(library_saved as f64));
+    println!("{} of library movement saved", fmt_bytes_f(library_saved as f64));
 
     if smoke {
         println!("smoke mode: acceptance gate skipped (reduced library)");

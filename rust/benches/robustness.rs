@@ -12,6 +12,8 @@ use equilibrium::cluster::PoolKind;
 use equilibrium::generator::synth::random_cluster;
 use equilibrium::generator::{age, AgingConfig};
 use equilibrium::simulator::{compare, SimOptions};
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
 use equilibrium::util::rng::Rng;
 use equilibrium::util::units::to_tib_f;
 
@@ -20,6 +22,7 @@ fn main() {
     let instances = 12;
     let mut eq_variance_wins = 0;
     let mut eq_gain_wins = 0;
+    let mut rows: Vec<Json> = Vec::new();
 
     println!(
         "{:<5} {:>5} {:>5} {:>11} {:>11} {:>12} {:>12} {:>9} {:>9}",
@@ -71,7 +74,28 @@ fn main() {
             mgr.movements.len(),
             eq.movements.len(),
         );
+        rows.push(
+            Json::obj()
+                .set("case", case as u64)
+                .set("osds", initial.osd_count())
+                .set("pools", initial.pools.len())
+                .set("variance_mgr", v_mgr)
+                .set("variance_eq", v_eq)
+                .set("gain_mgr_tib", to_tib_f(g_mgr))
+                .set("gain_eq_tib", to_tib_f(g_eq))
+                .set("moves_mgr", mgr.movements.len())
+                .set("moves_eq", eq.movements.len()),
+        );
     }
+    write_bench_json(
+        "robustness",
+        &Json::obj()
+            .set("bench", "robustness")
+            .set("instances", instances as u64)
+            .set("variance_wins", eq_variance_wins as u64)
+            .set("gain_wins", eq_gain_wins as u64)
+            .set("cases", Json::Arr(rows)),
+    );
     println!(
         "\nequilibrium ends at lower/equal variance on {eq_variance_wins}/{instances}, \
          gains >= default user-pool space on {eq_gain_wins}/{instances}"

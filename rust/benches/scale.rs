@@ -29,6 +29,7 @@ use equilibrium::balancer::{Balancer, Equilibrium, ReferenceEquilibrium};
 use equilibrium::cluster::ClusterState;
 use equilibrium::crush::{DeviceClass, Level, Rule};
 use equilibrium::generator::synth::{build_cluster, DeviceSpec, PoolSpec};
+use equilibrium::util::bench::write_bench_json;
 use equilibrium::util::json::Json;
 use equilibrium::util::parallel;
 use equilibrium::util::units::{fmt_duration, GIB, PIB, TIB};
@@ -227,8 +228,7 @@ fn main() {
                 .set("engine_seconds", t_inc)
                 .set("speedup", speedup),
         );
-    std::fs::write("BENCH_scale.json", doc.pretty()).expect("write BENCH_scale.json");
-    println!("\nwrote BENCH_scale.json");
+    write_bench_json("scale", &doc);
 
     if smoke {
         println!("smoke mode: speedup gate skipped (tiny prefix, 1x cluster)");

@@ -15,7 +15,8 @@ use equilibrium::balancer::{Equilibrium, EquilibriumConfig};
 use equilibrium::generator::clusters::by_name;
 use equilibrium::runtime::{Runtime, XlaScorer};
 use equilibrium::simulator::{simulate, SimOptions};
-use equilibrium::util::bench::{black_box, section, Bench};
+use equilibrium::util::bench::{black_box, section, write_bench_json, Bench, BenchResult};
+use equilibrium::util::json::Json;
 use equilibrium::util::rng::Rng;
 
 fn request_data(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<bool>) {
@@ -36,37 +37,59 @@ fn main() {
         None
     };
 
+    let mut rows: Vec<Json> = Vec::new();
+    let record = |rows: &mut Vec<Json>, r: &BenchResult| {
+        rows.push(
+            Json::obj()
+                .set("name", r.name.as_str())
+                .set("mean_seconds", r.mean())
+                .set("p50_seconds", r.p50())
+                .set("min_seconds", r.min()),
+        );
+    };
+
     for n in [256usize, 995, 4096] {
         section(&format!("single score call, N = {n} OSDs"));
         let (used, size, mask) = request_data(n, 7);
         let req = ScoreRequest { used: &used, size: &size, src: 0, shard: 1e11, mask: &mask };
 
-        bench.run_batched(&format!("naive  O(N^2)  n={n}"), 10, || {
+        let r = bench.run_batched(&format!("naive  O(N^2)  n={n}"), 10, || {
             black_box(score_naive(&req).var_after[n - 1])
         });
-        bench.run_batched(&format!("native rank-1  n={n}"), 100, || {
+        record(&mut rows, &r);
+        let r = bench.run_batched(&format!("native rank-1  n={n}"), 100, || {
             black_box(NativeScorer.score(&req).var_after[n - 1])
         });
+        record(&mut rows, &r);
         if let Some(x) = xla.as_mut() {
-            bench.run(&format!("xla    PJRT    n={n}"), || {
+            let r = bench.run(&format!("xla    PJRT    n={n}"), || {
                 black_box(x.score(&req).var_after[n - 1])
             });
+            record(&mut rows, &r);
         }
     }
 
     section("full Equilibrium run on cluster A (backend end-to-end)");
     let quick = Bench { warmup_iters: 0, sample_count: 3, min_seconds: 0.0 };
-    quick.run("cluster A, native scoring", || {
+    let r = quick.run("cluster A, native scoring", || {
         let mut state = by_name("a", 0).unwrap().state;
         let mut bal = Equilibrium::default();
         black_box(simulate(&mut bal, &mut state, &SimOptions::default()).movements.len())
     });
+    record(&mut rows, &r);
     if have_artifacts {
-        quick.run("cluster A, xla scoring", || {
+        let r = quick.run("cluster A, xla scoring", || {
             let mut state = by_name("a", 0).unwrap().state;
             let scorer = XlaScorer::load_default().unwrap();
             let mut bal = Equilibrium::new(EquilibriumConfig::default(), scorer);
             black_box(simulate(&mut bal, &mut state, &SimOptions::default()).movements.len())
         });
+        record(&mut rows, &r);
     }
+
+    let doc = Json::obj()
+        .set("bench", "scoring_backends")
+        .set("xla_artifacts_present", have_artifacts)
+        .set("results", Json::Arr(rows));
+    write_bench_json("scoring_backends", &doc);
 }

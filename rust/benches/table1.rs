@@ -14,6 +14,8 @@
 
 use equilibrium::report::{table1, Scoring};
 use equilibrium::simulator::SimOptions;
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
 use std::time::Instant;
 
 fn main() {
@@ -29,6 +31,24 @@ fn main() {
     println!("\nTable 1 — generated data movement amounts and resulting gained pool space");
     println!("{}", table.render());
     println!("(total benchmark time: {:.1}s)", t0.elapsed().as_secs_f64());
+
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("cluster", r.cluster)
+                .set("gained_default_tib", r.gained_default_tib)
+                .set("gained_ours_tib", r.gained_ours_tib)
+                .set("moved_default_tib", r.moved_default_tib)
+                .set("moved_ours_tib", r.moved_ours_tib)
+                .set("moves_default", r.moves_default)
+                .set("moves_ours", r.moves_ours)
+        })
+        .collect();
+    write_bench_json(
+        "table1",
+        &Json::obj().set("bench", "table1").set("clusters", Json::Arr(json_rows)),
+    );
 
     // shape assertions (the reproduction criteria)
     for r in &rows {

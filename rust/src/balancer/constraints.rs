@@ -230,8 +230,8 @@ impl MoveFilter {
                 if s == slot {
                     continue;
                 }
-                if let Some(Some(osd)) = pg.acting().get(s) {
-                    if let Some(d) = state.crush.ancestor_at(*osd as NodeId, level) {
+                if let Some(osd) = pg.acting_osd(s) {
+                    if let Some(d) = state.crush.ancestor_at(osd as NodeId, level) {
                         domains.push(d);
                     }
                 }
@@ -435,14 +435,14 @@ mod tests {
     fn hybrid_block_keeps_ssd_slot_on_ssd() {
         let s = cluster();
         let pg = s.pgs().find(|p| p.id().pool == 3).unwrap();
-        let ssd_shard = pg.acting()[0].unwrap();
+        let ssd_shard = pg.acting()[0].get().unwrap();
         assert_eq!(s.osd_class(ssd_shard), DeviceClass::Ssd);
         // the SSD slot may only move to another SSD
         for to in legal_destinations(&s, pg.id(), ssd_shard) {
             assert_eq!(s.osd_class(to), DeviceClass::Ssd);
         }
         // an HDD slot may only move to HDDs
-        let hdd_shard = pg.acting()[1].unwrap();
+        let hdd_shard = pg.acting()[1].get().unwrap();
         for to in legal_destinations(&s, pg.id(), hdd_shard) {
             assert_eq!(s.osd_class(to), DeviceClass::Hdd);
         }

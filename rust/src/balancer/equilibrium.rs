@@ -282,7 +282,7 @@ impl<S: MoveScorer> Equilibrium<S> {
                 scratch.used.clear();
                 scratch.size.clear();
                 for &o in state.pool_rule_devices(pool_id).expect("pool has aggregates") {
-                    if state.osd_is_up(o) && state.osd_size(o) > 0 {
+                    if state.osd_is_indexed(o) {
                         scratch.active.push(o);
                         scratch.used.push(state.osd_used(o) as f64);
                         scratch.size.push(state.osd_size(o) as f64);

@@ -11,6 +11,7 @@
 pub mod constraints;
 pub mod equilibrium;
 pub mod mgr;
+pub mod partition;
 pub mod primary;
 pub mod reference;
 pub mod scoring;
@@ -21,6 +22,7 @@ use crate::crush::OsdId;
 
 pub use equilibrium::{Equilibrium, EquilibriumConfig};
 pub use mgr::{MgrBalancer, MgrConfig};
+pub use partition::{balance_partitioned, run_partitioned, PartitionConfig, PartitionReport};
 pub use primary::{balance_primaries, primary_variance, PrimaryConfig, PrimarySwap};
 pub use reference::ReferenceEquilibrium;
 pub use scoring::{MoveScorer, NativeScorer, ScoreRequest, ScoreResponse};

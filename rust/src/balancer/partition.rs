@@ -1,0 +1,422 @@
+//! Per-pool partitioned planning (RFC 0006) — the hyperscale balancing
+//! round.
+//!
+//! The serial engine ([`super::Equilibrium`]) interleaves every pool's
+//! moves through one global fullest-first walk. That is the golden
+//! sequence — but at 10k OSDs and a million-plus PGs a planning round is
+//! minutes of single-core work, while the selection criteria themselves
+//! are already **pool-scoped**: criterion (b) reads per-pool shard
+//! counts and criterion (c) evaluates variance over the pool's rule
+//! devices only. This module exploits that scoping:
+//!
+//! 1. **Plan** (parallel): every pool is planned independently against
+//!    the *frozen* pre-round snapshot. A pool's planner keeps a private
+//!    overlay (per-device used bytes, per-device shard counts, its own
+//!    acting sets) and runs the same select loop as the serial engine —
+//!    fullest source first with the per-class `k` budget, largest shard
+//!    first, emptiest variance-improving CRUSH-legal destination. The
+//!    fan-out goes through [`crate::util::parallel::partitioned`]: each
+//!    pool's plan is a pure function of the snapshot, so the proposal
+//!    lists are **byte-identical at any `EQUILIBRIUM_THREADS`**.
+//! 2. **Commit** (serial, ascending pool id): each proposal is
+//!    re-validated against the *live* state — full CRUSH legality via
+//!    [`check_move`] plus a strict pool-population variance improvement
+//!    — and applied, or counted as rejected. Pools planned against the
+//!    same snapshot can race for the same destination's free space;
+//!    the commit gate is what keeps the composed result safe.
+//!
+//! The price of partitioning is cross-pool blindness *within a round*:
+//! pool A's planner cannot see pool B's planned moves, so a round
+//! extracts less improvement than the same number of serial selections,
+//! and convergence takes a few rounds ([`run_partitioned`] loops until
+//! a round commits nothing). The golden traces pin the serial engine;
+//! this is a separate opt-in path whose own contract — thread-count
+//! determinism and strict per-move improvement — is pinned by the tests
+//! below and by the hyperscale bench gate.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterState, Movement, PgId, PgView, Slot};
+use crate::crush::{DeviceClass, OsdId};
+use crate::util::parallel;
+
+use super::constraints::{check_move, rule_slot_constraints, MoveFilter};
+use super::scoring::{MoveScorer, NativeScorer, ScoreRequest, ScoreResponse};
+use super::{EquilibriumConfig, Proposal};
+
+/// Tunables for a partitioned round.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    /// Movement-selection criteria, shared with the serial engine.
+    pub selection: EquilibriumConfig,
+    /// Per-pool proposal cap per round. Bounds each partition's work and
+    /// the cross-pool drift a round can accumulate before the commit
+    /// phase re-validates.
+    pub per_pool_moves: usize,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig { selection: EquilibriumConfig::default(), per_pool_moves: 64 }
+    }
+}
+
+/// Outcome of one partitioned round.
+#[derive(Debug)]
+pub struct PartitionReport {
+    /// Proposals produced by the plan phase across all pools.
+    pub planned: usize,
+    /// Movements that passed live re-validation and were applied, in
+    /// commit order (ascending pool id, plan order within a pool).
+    pub applied: Vec<Movement>,
+    /// Proposals dropped at commit time (stale against the live state).
+    pub rejected: usize,
+}
+
+/// Run one partitioned balancing round: plan every pool in parallel
+/// against the frozen `state`, then commit serially with live
+/// re-validation. Byte-identical output at any thread count.
+pub fn balance_partitioned(state: &mut ClusterState, cfg: &PartitionConfig) -> PartitionReport {
+    let pool_ids: Vec<u32> = state.pools.keys().copied().collect();
+    let plans: Vec<Vec<Proposal>> = {
+        let frozen: &ClusterState = state;
+        parallel::partitioned(&pool_ids, |&pid| plan_pool(frozen, pid, cfg))
+    };
+    let planned = plans.iter().map(|p| p.len()).sum();
+
+    let mut applied = Vec::new();
+    let mut rejected = 0usize;
+    for (pid, plan) in pool_ids.iter().zip(&plans) {
+        for p in plan {
+            if check_move(state, p.pg, p.from, p.to).is_err()
+                || !improves_pool_variance(state, *pid, p, cfg.selection.min_variance_gain)
+            {
+                rejected += 1;
+                continue;
+            }
+            match state.apply_movement(p.pg, p.from, p.to) {
+                Ok(m) => applied.push(m),
+                Err(_) => rejected += 1,
+            }
+        }
+    }
+    PartitionReport { planned, applied, rejected }
+}
+
+/// Drive partitioned rounds until one commits nothing (or `max_rounds`).
+/// Returns all applied movements in commit order.
+pub fn run_partitioned(
+    state: &mut ClusterState,
+    cfg: &PartitionConfig,
+    max_rounds: usize,
+) -> Vec<Movement> {
+    let mut all = Vec::new();
+    for _ in 0..max_rounds {
+        let round = balance_partitioned(state, cfg);
+        if round.applied.is_empty() {
+            break;
+        }
+        all.extend(round.applied);
+    }
+    all
+}
+
+/// Plan one pool against the frozen snapshot. Pure function of
+/// `(state, pool_id, cfg)` — the determinism contract of the fan-out.
+fn plan_pool(state: &ClusterState, pool_id: u32, cfg: &PartitionConfig) -> Vec<Proposal> {
+    let eq = &cfg.selection;
+    let Some(devices) = state.pool_rule_devices(pool_id) else {
+        return Vec::new();
+    };
+    let active: Vec<OsdId> =
+        devices.iter().copied().filter(|&o| state.osd_is_indexed(o)).collect();
+    let m = active.len();
+    if m < 2 || cfg.per_pool_moves == 0 {
+        return Vec::new();
+    }
+    let mut sub_of = vec![u32::MAX; state.osd_count()];
+    for (j, &o) in active.iter().enumerate() {
+        sub_of[o as usize] = j as u32;
+    }
+    // overlay columns over the pool's active devices (size > 0 for all:
+    // that is the indexed predicate)
+    let mut used: Vec<f64> = active.iter().map(|&o| state.osd_used(o) as f64).collect();
+    let size: Vec<f64> = active.iter().map(|&o| state.osd_size(o) as f64).collect();
+    let class: Vec<DeviceClass> = active.iter().map(|&o| state.osd_class(o)).collect();
+    let all_counts = state.pool_shard_counts(pool_id).expect("pool has aggregates");
+    let all_ideal = state.pool_ideal_counts(pool_id).expect("pool has aggregates");
+    let mut counts: Vec<f64> =
+        active.iter().map(|&o| all_counts[o as usize] as f64).collect();
+    let ideal: Vec<f64> = active.iter().map(|&o| all_ideal[o as usize]).collect();
+
+    // overlay acting sets + per-device shard lists for this pool only
+    let mut acting: Vec<Vec<Slot>> = Vec::new();
+    let mut bytes: Vec<u64> = Vec::new();
+    for pg in state.pgs_of_pool(pool_id) {
+        acting.push(pg.acting().to_vec());
+        bytes.push(pg.shard_bytes());
+    }
+    let mut on_dev: Vec<Vec<u32>> = vec![Vec::new(); m];
+    for (i, a) in acting.iter().enumerate() {
+        for s in a {
+            if let Some(o) = s.get() {
+                let j = sub_of[o as usize];
+                if j != u32::MAX {
+                    on_dev[j as usize].push(i as u32);
+                }
+            }
+        }
+    }
+
+    let pool = &state.pools[&pool_id];
+    let rule = state.crush.rule(pool.rule_id).expect("pool references unknown rule");
+    let constraints = rule_slot_constraints(state, rule, pool.redundancy.shard_count());
+
+    let mut scorer = NativeScorer;
+    let mut response = ScoreResponse { var_before: 0.0, var_after: Vec::new() };
+    let mut mask = vec![false; m];
+    let mut out = Vec::new();
+
+    'rounds: while out.len() < cfg.per_pool_moves {
+        // fullest-first source order over the overlay, OSD id tie-break
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            (used[b] / size[b])
+                .partial_cmp(&(used[a] / size[a]))
+                .expect("finite utilizations")
+                .then(active[a].cmp(&active[b]))
+        });
+        let mut taken: BTreeMap<DeviceClass, usize> = BTreeMap::new();
+        for &src_sub in &order {
+            let budget = taken.entry(class[src_sub]).or_insert(0);
+            *budget += 1;
+            if *budget > eq.k {
+                continue;
+            }
+            let src = active[src_sub];
+            let src_util = used[src_sub] / size[src_sub];
+            // this pool's shards on the source, largest first, index asc
+            let mut shards: Vec<u32> = on_dev[src_sub].clone();
+            shards.sort_by(|&a, &b| {
+                bytes[b as usize].cmp(&bytes[a as usize]).then(a.cmp(&b))
+            });
+            for &i in &shards {
+                let shard_bytes = bytes[i as usize];
+                if shard_bytes == 0 {
+                    break; // size-ordered: the rest are empty too
+                }
+                if eq.require_count_improvement {
+                    let (c, id) = (counts[src_sub], ideal[src_sub]);
+                    if ((c - 1.0) - id).abs() > (c - id).abs() + 1e-9 {
+                        continue;
+                    }
+                }
+                let pg_id = PgId::new(pool_id, i);
+                let view = PgView::new(pg_id, shard_bytes, &acting[i as usize]);
+                let Ok(filter) = MoveFilter::new_for(state, view, src, &constraints)
+                else {
+                    continue;
+                };
+                mask.iter_mut().for_each(|x| *x = false);
+                let mut any = false;
+                for j in 0..m {
+                    if j == src_sub {
+                        continue;
+                    }
+                    if eq.require_emptier_target && used[j] / size[j] >= src_util {
+                        continue;
+                    }
+                    if eq.require_count_improvement {
+                        let (c, id) = (counts[j], ideal[j]);
+                        if ((c + 1.0) - id).abs() > (c - id).abs() + 1e-9 {
+                            continue;
+                        }
+                    }
+                    // note: the filter's free-space check reads the
+                    // frozen snapshot; the commit phase re-validates
+                    // against live capacity
+                    if filter.allows(state, active[j]).is_err() {
+                        continue;
+                    }
+                    mask[j] = true;
+                    any = true;
+                }
+                if !any {
+                    continue;
+                }
+                let req = ScoreRequest {
+                    used: &used,
+                    size: &size,
+                    src: src_sub,
+                    shard: shard_bytes as f64,
+                    mask: &mask,
+                };
+                scorer.score_into(&req, &mut response);
+                let mut best: Option<(f64, usize)> = None;
+                for j in 0..m {
+                    if !mask[j] {
+                        continue;
+                    }
+                    if response.var_after[j]
+                        >= response.var_before - eq.min_variance_gain
+                    {
+                        continue;
+                    }
+                    let u = used[j] / size[j];
+                    match best {
+                        Some((bu, bj)) if (bu, active[bj]) <= (u, active[j]) => {}
+                        _ => best = Some((u, j)),
+                    }
+                }
+                let Some((_, to_sub)) = best else { continue };
+                // accept: update the overlay, record, restart selection
+                let to = active[to_sub];
+                let slot = acting[i as usize]
+                    .iter()
+                    .position(|s| s.is(src))
+                    .expect("source holds the shard");
+                acting[i as usize][slot] = Slot::osd(to);
+                used[src_sub] -= shard_bytes as f64;
+                used[to_sub] += shard_bytes as f64;
+                counts[src_sub] -= 1.0;
+                counts[to_sub] += 1.0;
+                on_dev[src_sub].retain(|&x| x != i);
+                on_dev[to_sub].push(i);
+                out.push(Proposal { pg: pg_id, from: src, to, bytes: shard_bytes });
+                continue 'rounds;
+            }
+        }
+        break; // no source produced a move: the pool converged
+    }
+    out
+}
+
+/// Does applying `p` strictly reduce the utilization variance over
+/// `pool`'s live active device population? The commit phase's
+/// criterion (c) against current (not snapshot) usage.
+fn improves_pool_variance(
+    state: &ClusterState,
+    pool: u32,
+    p: &Proposal,
+    min_gain: f64,
+) -> bool {
+    let Some(devices) = state.pool_rule_devices(pool) else {
+        return false;
+    };
+    let (mut n, mut sum_b, mut sq_b, mut sum_a, mut sq_a) = (0.0f64, 0.0, 0.0, 0.0, 0.0);
+    for &o in devices {
+        if !state.osd_is_indexed(o) {
+            continue;
+        }
+        let size = state.osd_size(o) as f64;
+        let used = state.osd_used(o) as f64;
+        let used_after = if o == p.from {
+            used - p.bytes as f64
+        } else if o == p.to {
+            used + p.bytes as f64
+        } else {
+            used
+        };
+        let (u_b, u_a) = (used / size, used_after / size);
+        sum_b += u_b;
+        sq_b += u_b * u_b;
+        sum_a += u_a;
+        sq_a += u_a * u_a;
+        n += 1.0;
+    }
+    if n == 0.0 {
+        return false;
+    }
+    let var_b = sq_b / n - (sum_b / n) * (sum_b / n);
+    let var_a = sq_a / n - (sum_a / n) * (sum_a / n);
+    var_a < var_b - min_gain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::{run_to_convergence, Equilibrium};
+    use crate::generator::clusters;
+    use crate::util::parallel::with_threads;
+
+    #[test]
+    fn round_moves_are_legal_and_reduce_variance() {
+        let mut s = clusters::demo(91);
+        let before = s.utilization_variance();
+        let report = balance_partitioned(&mut s, &PartitionConfig::default());
+        assert!(!report.applied.is_empty(), "imbalanced demo cluster must yield moves");
+        assert!(report.planned >= report.applied.len());
+        assert_eq!(report.planned, report.applied.len() + report.rejected);
+        assert!(s.utilization_variance() < before);
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+    }
+
+    #[test]
+    fn rounds_are_byte_identical_across_thread_counts() {
+        let initial = clusters::demo(93);
+        let run = |t: usize| {
+            with_threads(t, || {
+                let mut s = initial.clone();
+                let moves = run_partitioned(&mut s, &PartitionConfig::default(), 8);
+                (moves, s.utilization_variance())
+            })
+        };
+        let (serial, var1) = run(1);
+        for t in [2, 4] {
+            let (par, var_t) = run(t);
+            assert_eq!(serial.len(), par.len(), "threads {t}");
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(
+                    (a.pg, a.from, a.to, a.bytes),
+                    (b.pg, b.from, b.to, b.bytes),
+                    "threads {t}"
+                );
+            }
+            assert_eq!(var1.to_bits(), var_t.to_bits(), "threads {t}");
+        }
+    }
+
+    #[test]
+    fn per_pool_cap_bounds_each_partition() {
+        let mut s = clusters::demo(95);
+        let cfg = PartitionConfig { per_pool_moves: 2, ..Default::default() };
+        let report = balance_partitioned(&mut s, &cfg);
+        let mut per_pool: BTreeMap<u32, usize> = BTreeMap::new();
+        for m in &report.applied {
+            *per_pool.entry(m.pg.pool).or_insert(0) += 1;
+        }
+        for (pool, count) in per_pool {
+            assert!(count <= 2, "pool {pool} committed {count} moves, cap is 2");
+        }
+    }
+
+    #[test]
+    fn serially_converged_state_yields_no_partitioned_moves() {
+        // partitioned selection uses the same pool-scoped criteria, so
+        // any move it could make, the serial engine would have found
+        let mut s = clusters::demo(97);
+        let mut bal = Equilibrium::default();
+        run_to_convergence(&mut bal, &mut s, 100_000);
+        let report = balance_partitioned(&mut s, &PartitionConfig::default());
+        assert!(report.applied.is_empty(), "{} stale moves applied", report.applied.len());
+    }
+
+    #[test]
+    fn repeated_rounds_converge() {
+        let mut s = clusters::demo(99);
+        let before = s.utilization_variance();
+        let cfg = PartitionConfig::default();
+        let mut rounds = 0;
+        loop {
+            let report = balance_partitioned(&mut s, &cfg);
+            if report.applied.is_empty() {
+                break;
+            }
+            rounds += 1;
+            assert!(rounds < 100, "partitioned rounds must converge");
+        }
+        assert!(rounds >= 1);
+        assert!(s.utilization_variance() < before);
+        assert!(s.verify().is_empty());
+    }
+}

@@ -62,8 +62,8 @@ pub fn balance_primaries(state: &mut ClusterState, cfg: &PrimaryConfig) -> Vec<P
             let mut pgs_of_pool: Vec<PgId> = Vec::new();
             for pg in state.pgs_of_pool(pool_id) {
                 pgs_of_pool.push(pg.id());
-                if let Some(Some(p0)) = pg.acting().first() {
-                    primaries[*p0 as usize] += 1;
+                if let Some(p0) = pg.acting_osd(0) {
+                    primaries[p0 as usize] += 1;
                 }
             }
             if pgs_of_pool.is_empty() {
@@ -97,7 +97,7 @@ pub fn balance_primaries(state: &mut ClusterState, cfg: &PrimaryConfig) -> Vec<P
             let mut done = false;
             for &pg_id in &pgs_of_pool {
                 let pg = state.pg(pg_id).unwrap();
-                if pg.acting().first() != Some(&Some(over)) {
+                if pg.acting_osd(0) != Some(over) {
                     continue;
                 }
                 let mut candidate: Option<(f64, OsdId)> = None;

@@ -151,7 +151,7 @@ impl<S: MoveScorer> ReferenceEquilibrium<S> {
             let active: Vec<OsdId> = devset
                 .iter()
                 .copied()
-                .filter(|&o| state.osd_is_up(o) && state.osd_size(o) > 0)
+                .filter(|&o| state.osd_is_indexed(o))
                 .collect();
             let Some(src_sub) = active.iter().position(|&d| d == src) else {
                 continue; // shard stranded outside its rule's devices
@@ -247,7 +247,7 @@ impl<S: MoveScorer> Balancer for ReferenceEquilibrium<S> {
         // source order: fullest first (skip down/zero-size OSDs), with
         // the k budget applied per device class
         let mut order: Vec<OsdId> = (0..n as OsdId)
-            .filter(|&o| state.osd_is_up(o) && state.osd_size(o) > 0)
+            .filter(|&o| state.osd_is_indexed(o))
             .collect();
         order.sort_by(|&a, &b| {
             utils[b as usize]

@@ -28,6 +28,8 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::crush::{CrushMap, DeviceClass, OsdId};
+use crate::util::bitset::BitSet;
+use crate::util::mem::{vec_capacity_bytes, MemoryFootprint};
 
 use super::arena::{PgArena, ShardMatrix};
 use super::pool::Pool;
@@ -113,6 +115,11 @@ impl PoolAggregates {
 pub struct Aggregates {
     /// Utilization-ordered index over up, nonzero-capacity OSDs.
     by_util: BTreeSet<(Reverse<u64>, OsdId)>,
+    /// Packed membership mirror of `by_util` (RFC 0006): answers "is
+    /// this device indexed?" in O(1) without re-deriving the up/size
+    /// predicate — the balancer's per-pool scratch rebuild asks this
+    /// once per candidate device per pass.
+    indexed: BitSet,
     /// Σ of `used/size` over ALL OSDs (down and zero-capacity devices
     /// included at their `utilization()` value — the same population
     /// `utilization_variance` measures).
@@ -156,6 +163,15 @@ impl Aggregates {
         self.pools.get(&id)
     }
 
+    /// Is `osd` currently in the utilization index (up with nonzero
+    /// capacity)? O(1) packed-bitset read, equivalent to the
+    /// `up && size > 0` predicate by the membership invariant (pinned
+    /// by [`Aggregates::check`] and `rust/tests/bitset_props.rs`).
+    pub fn is_indexed(&self, osd: OsdId) -> bool {
+        let o = osd as usize;
+        o < self.indexed.len() && self.indexed.get(o)
+    }
+
     /// O(1) population-variance estimate of utilization over `n` OSDs
     /// from the incremental sums.
     pub fn fast_variance(&self, n: usize) -> f64 {
@@ -187,12 +203,13 @@ impl Aggregates {
         pools: &BTreeMap<u32, Pool>,
         used: &[u64],
         size: &[u64],
-        up: &[bool],
+        up: &BitSet,
         shards: &ShardMatrix,
         arena: &PgArena,
     ) {
         let n = used.len();
         self.by_util.clear();
+        self.indexed = BitSet::new(n);
         self.sum_u = 0.0;
         self.sum_u2 = 0.0;
         self.ops_since_renorm = 0;
@@ -201,8 +218,9 @@ impl Aggregates {
             let u = util(used[o], size[o]);
             self.sum_u += u;
             self.sum_u2 += u * u;
-            if up[o] && size[o] > 0 {
+            if up.get(o) && size[o] > 0 {
                 self.by_util.insert(util_key(used[o], size[o], o as OsdId));
+                self.indexed.insert(o);
                 *self.indexed_per_class.entry(crush.devices[o].class).or_insert(0) += 1;
             }
         }
@@ -266,9 +284,11 @@ impl Aggregates {
         }
         if up {
             self.by_util.insert(util_key(used, size, osd));
+            self.indexed.insert(osd as usize);
             *self.indexed_per_class.entry(class).or_insert(0) += 1;
         } else {
             self.by_util.remove(&util_key(used, size, osd));
+            self.indexed.remove(osd as usize);
             if let Some(c) = self.indexed_per_class.get_mut(&class) {
                 *c = c.saturating_sub(1);
                 if *c == 0 {
@@ -320,7 +340,7 @@ impl Aggregates {
         pools: &BTreeMap<u32, Pool>,
         used: &[u64],
         size: &[u64],
-        up: &[bool],
+        up: &BitSet,
         shards: &ShardMatrix,
         arena: &PgArena,
     ) -> Vec<String> {
@@ -334,7 +354,7 @@ impl Aggregates {
             let u = util(used[o], size[o]);
             s += u;
             s2 += u * u;
-            if up[o] && size[o] > 0 {
+            if up.get(o) && size[o] > 0 {
                 expect_index.insert(util_key(used[o], size[o], o as OsdId));
             }
         }
@@ -343,6 +363,19 @@ impl Aggregates {
                 "utilization index drift: tracked {} entries, expected {}",
                 self.by_util.len(),
                 expect_index.len()
+            ));
+        }
+        let expect_indexed: Vec<usize> =
+            expect_index.iter().map(|&(_, o)| o as usize).collect();
+        let mut tracked_indexed: Vec<usize> = self.indexed.iter_ones().collect();
+        tracked_indexed.sort_unstable();
+        let mut expect_sorted = expect_indexed;
+        expect_sorted.sort_unstable();
+        if tracked_indexed != expect_sorted {
+            problems.push(format!(
+                "indexed-membership bitset drift: tracked {} members, expected {}",
+                tracked_indexed.len(),
+                expect_sorted.len()
             ));
         }
         let mut expect_classes: BTreeMap<DeviceClass, usize> = BTreeMap::new();
@@ -409,6 +442,31 @@ impl Aggregates {
             }
         }
         problems
+    }
+}
+
+impl MemoryFootprint for Aggregates {
+    /// Heap estimate. The vectors inside [`PoolAggregates`] are exact
+    /// (capacity-measured); B-tree containers are estimated at
+    /// `entries × (element size + 16)` — BTree nodes amortize child
+    /// pointers and headers to roughly two words per element — since
+    /// std exposes no allocation introspection.
+    fn heap_bytes(&self) -> usize {
+        let btree_entry = |count: usize, elem: usize| count * (elem + 16);
+        let pools: usize = self
+            .pools
+            .values()
+            .map(|pa| {
+                vec_capacity_bytes(&pa.devices)
+                    + vec_capacity_bytes(&pa.ideal)
+                    + vec_capacity_bytes(&pa.counts)
+            })
+            .sum();
+        btree_entry(self.by_util.len(), std::mem::size_of::<(Reverse<u64>, OsdId)>())
+            + self.indexed.heap_bytes()
+            + btree_entry(self.indexed_per_class.len(), 24)
+            + btree_entry(self.pools.len(), 4 + std::mem::size_of::<PoolAggregates>())
+            + pools
     }
 }
 

@@ -1,31 +1,52 @@
 //! Columnar PG storage — the typed-index SoA core of `ClusterState`
-//! (RFC 0002).
+//! (RFC 0002, compacted for the hyperscale regime in RFC 0006).
 //!
 //! The pre-refactor state kept PGs in a `BTreeMap<PgId, Pg>` with one
 //! heap-allocated acting `Vec` per PG and per-OSD
 //! `BTreeMap<u32, u32>` shard counts: every scoring pass chased
 //! pointers instead of streaming cache lines. This module replaces all
-//! of it with four dense columns keyed by a new typed index, [`PgIdx`]:
+//! of it with dense columns keyed by a new typed index, [`PgIdx`]:
 //!
-//! * `ids`        — `PgIdx → PgId` (the reverse of the stripe directory);
 //! * `shard_bytes`— `PgIdx → u64`, one cache-friendly lane;
-//! * `acting`     — one flat `Vec<Option<OsdId>>`: each pool owns a
-//!   contiguous *stripe* of `pg_count × slots` entries, a PG's acting
-//!   set is the `slots`-wide window at
+//! * `acting`     — one flat `Vec<Slot>`: each pool owns a contiguous
+//!   *stripe* of `pg_count × slots` entries, a PG's acting set is the
+//!   `slots`-wide window at
 //!   `stripe.acting_base + (idx − stripe.first) × slots` (`map_rule`
-//!   always yields exactly `slots` entries, so the stride is exact);
-//! * `upmap`      — the exception table re-keyed by `PgIdx` (dense
-//!   `Vec<Vec<(raw, replacement)>>`, empty = no exceptions), with an
-//!   incrementally maintained non-empty-entry count.
+//!   always yields exactly `slots` entries, so the stride is exact).
+//!   A [`Slot`] is a 4-byte `u32` with `u32::MAX` as the hole sentinel
+//!   — half the 8 bytes `Option<OsdId>` costs (no niche in `u32`);
+//! * `upmap_head` — the upmap exception table as an **offset table**:
+//!   4 bytes per PG pointing into a dense side store that only PGs with
+//!   live exceptions occupy (see below). The pre-RFC-0006 layout spent
+//!   a 24-byte `Vec` header per PG whether or not it had exceptions.
 //!
-//! Pools map to stripes through a rank table: construction assigns
-//! ranks in ascending pool-id order; pools created later
-//! (`ClusterState::add_pool`) append. All id↔idx translation goes
-//! through that table, so rank order is an internal layout detail —
-//! iteration in `PgId` order ([`PgArena::iter_pgid_order`]) walks the
-//! rank table's id-sorted keys. [`ShardMatrix`] is the companion dense
-//! per-OSD / per-pool shard-count table (`osd × n_pools + rank`),
-//! replacing the per-OSD BTreeMaps.
+//! PG identity is *derived*, not stored: `id_at` reconstructs
+//! `PgId { pool, index }` from the stripe directory in O(1), so the old
+//! 8-bytes-per-PG `ids` column is gone entirely.
+//!
+//! Pools map to stripes through a rank table sorted by pool id
+//! (binary-searched `Vec<(pool, rank)>`; the former `BTreeMap` cost a
+//! node allocation per pool and pointer-chased on every `index_of`).
+//! Construction assigns ranks in ascending pool-id order; pools created
+//! later (`ClusterState::add_pool`) append. All id↔idx translation goes
+//! through that table — [`PgArena::pool_rank`] is O(log n_pools) and
+//! allocation-free (pinned by `rust/tests/alloc_guard.rs`). Iteration
+//! in `PgId` order ([`PgArena::iter_pgid_order`]) walks the table's
+//! id-sorted entries. [`ShardMatrix`] is the companion dense per-OSD /
+//! per-pool shard-count table (`osd × n_pools + rank`), replacing the
+//! per-OSD BTreeMaps.
+//!
+//! ## The upmap offset table
+//!
+//! `upmap_head[pg] == UPMAP_NONE` means "no exceptions" — the common
+//! case at any scale, and the only case the hot paths touch. Otherwise
+//! it is an index into the dense parallel arrays `upmap_items` (the
+//! exception pairs) and `upmap_owner` (the back-reference used to fix
+//! heads up when a drained entry is `swap_remove`d). Invariant between
+//! edits: every dense entry is non-empty and `upmap_entries() ==
+//! upmap_items.len()`. Read order and the serialized table are
+//! unchanged from the per-PG-`Vec` encoding, so dumps stay
+//! byte-identical (pinned by `rust/tests/arena_equiv.rs`).
 //!
 //! `BTreeMap` views of any of this survive only at the dump/load
 //! serialization boundary (`ClusterState::upmap_table`,
@@ -34,6 +55,7 @@
 use std::collections::BTreeMap;
 
 use crate::crush::OsdId;
+use crate::util::mem::{vec_capacity_bytes, MemoryFootprint};
 
 use super::pg::{Pg, PgId, PgView};
 
@@ -52,6 +74,60 @@ impl PgIdx {
         self.0 as usize
     }
 }
+
+/// One acting-set entry, packed into 4 bytes: an [`OsdId`] or the hole
+/// sentinel (`u32::MAX`, an id CRUSH can never assign). `Option<OsdId>`
+/// has no niche to exploit, so it costs 8 bytes — at a million-plus PGs
+/// × 3–6 slots the difference is tens of megabytes of the hottest
+/// column in the scorer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Slot(u32);
+
+impl Slot {
+    /// An EC slot CRUSH could not fill (the old `None`).
+    pub const HOLE: Slot = Slot(u32::MAX);
+
+    /// A filled slot.
+    #[inline]
+    pub fn osd(osd: OsdId) -> Slot {
+        debug_assert!(osd != u32::MAX, "OsdId u32::MAX is reserved as the hole sentinel");
+        Slot(osd)
+    }
+
+    /// Pack an `Option<OsdId>` (the boundary representation).
+    #[inline]
+    pub fn from_option(osd: Option<OsdId>) -> Slot {
+        match osd {
+            Some(o) => Slot::osd(o),
+            None => Slot::HOLE,
+        }
+    }
+
+    /// Unpack to the boundary representation.
+    #[inline]
+    pub fn get(self) -> Option<OsdId> {
+        if self.0 == u32::MAX {
+            None
+        } else {
+            Some(self.0)
+        }
+    }
+
+    /// Is this the hole sentinel?
+    #[inline]
+    pub fn is_hole(self) -> bool {
+        self.0 == u32::MAX
+    }
+
+    /// Does this slot hold exactly `osd`?
+    #[inline]
+    pub fn is(self, osd: OsdId) -> bool {
+        self.0 == osd
+    }
+}
+
+/// "No upmap exceptions" marker in the offset table.
+const UPMAP_NONE: u32 = u32::MAX;
 
 /// One pool's contiguous region of the arena.
 #[derive(Debug, Clone)]
@@ -73,20 +149,21 @@ struct Stripe {
 #[derive(Debug, Clone, Default)]
 pub struct PgArena {
     stripes: Vec<Stripe>,
-    /// Pool id → stripe rank.
-    rank_of: BTreeMap<u32, u32>,
+    /// `(pool id, stripe rank)`, sorted by pool id — binary searched.
+    rank_of: Vec<(u32, u32)>,
     /// `PgIdx → stripe rank` (O(1) pool/slots lookup in hot loops).
     stripe_of: Vec<u32>,
-    /// `PgIdx → PgId`.
-    ids: Vec<PgId>,
     /// `PgIdx → bytes stored by each shard`.
     shard_bytes: Vec<u64>,
     /// Flat acting table (see module docs).
-    acting: Vec<Option<OsdId>>,
-    /// Upmap exception items per PG (empty = none).
-    upmap: Vec<Vec<(OsdId, OsdId)>>,
-    /// Number of PGs with a non-empty upmap entry.
-    upmap_entries: usize,
+    acting: Vec<Slot>,
+    /// `PgIdx → dense upmap slot`, or [`UPMAP_NONE`].
+    upmap_head: Vec<u32>,
+    /// Dense exception store: pairs of PGs that have any (never empty
+    /// between edits).
+    upmap_items: Vec<Vec<(OsdId, OsdId)>>,
+    /// Dense slot → owning `PgIdx` (swap_remove head fixup).
+    upmap_owner: Vec<u32>,
 }
 
 impl PgArena {
@@ -100,33 +177,30 @@ impl PgArena {
     /// Returns the stripe rank. Panics if the pool already has one.
     pub(crate) fn push_pool(&mut self, pool: u32, pg_count: u32, slots: usize) -> u32 {
         let rank = self.stripes.len() as u32;
-        assert!(
-            self.rank_of.insert(pool, rank).is_none(),
-            "pool {pool} already has an arena stripe"
-        );
-        let first = self.ids.len() as u32;
+        match self.rank_of.binary_search_by_key(&pool, |&(p, _)| p) {
+            Ok(_) => panic!("pool {pool} already has an arena stripe"),
+            Err(pos) => self.rank_of.insert(pos, (pool, rank)),
+        }
+        let first = self.shard_bytes.len() as u32;
         let acting_base = self.acting.len();
         self.stripes.push(Stripe { pool, first, count: pg_count, slots: slots as u32, acting_base });
-        for index in 0..pg_count {
-            self.ids.push(PgId::new(pool, index));
-            self.stripe_of.push(rank);
-        }
+        self.stripe_of.resize(self.stripe_of.len() + pg_count as usize, rank);
         self.shard_bytes.resize(self.shard_bytes.len() + pg_count as usize, 0);
-        self.acting.resize(acting_base + pg_count as usize * slots, None);
-        self.upmap.resize(self.upmap.len() + pg_count as usize, Vec::new());
+        self.acting.resize(acting_base + pg_count as usize * slots, Slot::HOLE);
+        self.upmap_head.resize(self.upmap_head.len() + pg_count as usize, UPMAP_NONE);
         rank
     }
 
     /// Total number of PGs.
     #[inline]
     pub fn len(&self) -> usize {
-        self.ids.len()
+        self.shard_bytes.len()
     }
 
     /// True when the arena stores no PGs.
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.ids.is_empty()
+        self.shard_bytes.is_empty()
     }
 
     /// Number of pool stripes (the [`ShardMatrix`] stride).
@@ -135,10 +209,14 @@ impl PgArena {
         self.stripes.len()
     }
 
-    /// Stripe rank of `pool`, if it exists.
+    /// Stripe rank of `pool`, if it exists — O(log n_pools), no
+    /// allocation (pinned by `rust/tests/alloc_guard.rs`).
     #[inline]
     pub fn pool_rank(&self, pool: u32) -> Option<usize> {
-        self.rank_of.get(&pool).map(|&r| r as usize)
+        self.rank_of
+            .binary_search_by_key(&pool, |&(p, _)| p)
+            .ok()
+            .map(|pos| self.rank_of[pos].1 as usize)
     }
 
     /// Pool id of the stripe at `rank`.
@@ -162,8 +240,8 @@ impl PgArena {
     /// Dense index of `id`, if the PG exists.
     #[inline]
     pub fn index_of(&self, id: PgId) -> Option<PgIdx> {
-        let &rank = self.rank_of.get(&id.pool)?;
-        let s = &self.stripes[rank as usize];
+        let rank = self.pool_rank(id.pool)?;
+        let s = &self.stripes[rank];
         if id.index < s.count {
             Some(PgIdx(s.first + id.index))
         } else {
@@ -171,10 +249,12 @@ impl PgArena {
         }
     }
 
-    /// Identity of the PG at `idx`.
+    /// Identity of the PG at `idx` — derived from the stripe directory
+    /// in O(1) (identities are not stored per PG).
     #[inline]
     pub fn id_at(&self, idx: PgIdx) -> PgId {
-        self.ids[idx.as_usize()]
+        let s = &self.stripes[self.stripe_of[idx.as_usize()] as usize];
+        PgId::new(s.pool, idx.0 - s.first)
     }
 
     /// Bytes stored by each shard of the PG at `idx`.
@@ -191,7 +271,7 @@ impl PgArena {
 
     /// The flat-table window holding the acting set of the PG at `idx`.
     #[inline]
-    pub fn acting_at(&self, idx: PgIdx) -> &[Option<OsdId>] {
+    pub fn acting_at(&self, idx: PgIdx) -> &[Slot] {
         let s = &self.stripes[self.stripe_of[idx.as_usize()] as usize];
         let off = s.acting_base + (idx.0 - s.first) as usize * s.slots as usize;
         &self.acting[off..off + s.slots as usize]
@@ -199,7 +279,7 @@ impl PgArena {
 
     /// Mutable acting window of the PG at `idx`.
     #[inline]
-    pub(crate) fn acting_mut(&mut self, idx: PgIdx) -> &mut [Option<OsdId>] {
+    pub(crate) fn acting_mut(&mut self, idx: PgIdx) -> &mut [Slot] {
         let s = &self.stripes[self.stripe_of[idx.as_usize()] as usize];
         let off = s.acting_base + (idx.0 - s.first) as usize * s.slots as usize;
         let slots = s.slots as usize;
@@ -210,7 +290,7 @@ impl PgArena {
     /// accounting loops).
     #[inline]
     pub fn acting_slot(&self, idx: PgIdx, slot: usize) -> Option<OsdId> {
-        self.acting_at(idx)[slot]
+        self.acting_at(idx)[slot].get()
     }
 
     /// Replace the whole acting set of the PG at `idx`. Panics if the
@@ -222,7 +302,9 @@ impl PgArena {
             acting.len(),
             "acting set width must equal the pool's redundancy slots"
         );
-        window.copy_from_slice(acting);
+        for (w, &o) in window.iter_mut().zip(acting) {
+            *w = Slot::from_option(o);
+        }
     }
 
     /// Borrowed view of the PG at `idx`.
@@ -234,30 +316,47 @@ impl PgArena {
     /// Upmap exception items of the PG at `idx` (empty slice = none).
     #[inline]
     pub fn upmap_at(&self, idx: PgIdx) -> &[(OsdId, OsdId)] {
-        &self.upmap[idx.as_usize()]
+        match self.upmap_head[idx.as_usize()] {
+            UPMAP_NONE => &[],
+            slot => &self.upmap_items[slot as usize],
+        }
     }
 
-    /// Number of PGs with at least one upmap exception (maintained
-    /// incrementally by the crate-internal upmap editor).
+    /// Number of PGs with at least one upmap exception — the dense
+    /// store's length, by the offset-table invariant.
     #[inline]
     pub fn upmap_entries(&self) -> usize {
-        self.upmap_entries
+        self.upmap_items.len()
     }
 
-    /// Edit a PG's upmap items under the entry-count invariant: the
-    /// non-empty counter is fixed up after `f` runs, whatever it did.
+    /// Edit a PG's upmap items under the offset-table invariant: a
+    /// dense slot is materialized on demand before `f` runs and
+    /// reclaimed (with head fixup of the swapped-in owner) if `f`
+    /// leaves it empty.
     pub(crate) fn with_upmap_mut<R>(
         &mut self,
         idx: PgIdx,
         f: impl FnOnce(&mut Vec<(OsdId, OsdId)>) -> R,
     ) -> R {
-        let items = &mut self.upmap[idx.as_usize()];
-        let before = !items.is_empty();
-        let r = f(items);
-        match (before, !items.is_empty()) {
-            (false, true) => self.upmap_entries += 1,
-            (true, false) => self.upmap_entries -= 1,
-            _ => {}
+        let i = idx.as_usize();
+        let slot = match self.upmap_head[i] {
+            UPMAP_NONE => {
+                let slot = self.upmap_items.len() as u32;
+                self.upmap_items.push(Vec::new());
+                self.upmap_owner.push(idx.0);
+                self.upmap_head[i] = slot;
+                slot
+            }
+            slot => slot,
+        } as usize;
+        let r = f(&mut self.upmap_items[slot]);
+        if self.upmap_items[slot].is_empty() {
+            self.upmap_items.swap_remove(slot);
+            self.upmap_owner.swap_remove(slot);
+            self.upmap_head[i] = UPMAP_NONE;
+            if slot < self.upmap_items.len() {
+                self.upmap_head[self.upmap_owner[slot] as usize] = slot as u32;
+            }
         }
         r
     }
@@ -278,21 +377,21 @@ impl PgArena {
     /// reassembly boundary only — O(PGs)).
     pub fn upmap_table(&self) -> BTreeMap<PgId, Vec<(OsdId, OsdId)>> {
         self.iter_pgid_order()
-            .filter(|&idx| !self.upmap[idx.as_usize()].is_empty())
-            .map(|idx| (self.id_at(idx), self.upmap[idx.as_usize()].clone()))
+            .filter(|&idx| !self.upmap_at(idx).is_empty())
+            .map(|idx| (self.id_at(idx), self.upmap_at(idx).to_vec()))
             .collect()
     }
 
     /// All PG indexes in arena (stripe) order — the cache-friendly walk.
     pub fn iter(&self) -> impl Iterator<Item = PgIdx> + '_ {
-        (0..self.ids.len() as u32).map(PgIdx)
+        (0..self.len() as u32).map(PgIdx)
     }
 
     /// All PG indexes in ascending [`PgId`] order (pool id, then PG
     /// index) — the historical `BTreeMap` iteration order, preserved for
     /// serialization and reporting.
     pub fn iter_pgid_order(&self) -> impl Iterator<Item = PgIdx> + '_ {
-        self.rank_of.values().flat_map(move |&rank| {
+        self.rank_of.iter().flat_map(move |&(_, rank)| {
             let s = &self.stripes[rank as usize];
             (s.first..s.first + s.count).map(PgIdx)
         })
@@ -301,9 +400,9 @@ impl PgArena {
     /// PG indexes of one pool's stripe, ascending PG index (empty for
     /// unknown pools).
     pub fn pool_range(&self, pool: u32) -> impl Iterator<Item = PgIdx> + '_ {
-        let range = match self.rank_of.get(&pool) {
-            Some(&rank) => {
-                let s = &self.stripes[rank as usize];
+        let range = match self.pool_rank(pool) {
+            Some(rank) => {
+                let s = &self.stripes[rank];
                 s.first..s.first + s.count
             }
             None => 0..0,
@@ -316,8 +415,43 @@ impl PgArena {
         Pg {
             id: self.id_at(idx),
             shard_bytes: self.shard_bytes_at(idx),
-            acting: self.acting_at(idx).to_vec(),
+            acting: self.acting_at(idx).iter().map(|s| s.get()).collect(),
         }
+    }
+
+    /// Bytes/PG the **pre-RFC-0006** arena layout would spend on this
+    /// same content, computed analytically from the documented legacy
+    /// layout: a stored 8-byte `PgId` per PG, 8-byte `Option<OsdId>`
+    /// acting entries, and one 24-byte `Vec` header per PG for the
+    /// upmap column plus its live pairs. This is the bench's fixed
+    /// comparison baseline for the ≥30 % bytes/PG reduction gate — it
+    /// cannot drift because the old representation is a formula, not
+    /// code.
+    pub fn legacy_heap_bytes(&self) -> usize {
+        let n = self.len();
+        let acting_entries = self.acting.len();
+        let pairs: usize = self.upmap_items.iter().map(|v| v.len()).sum();
+        self.stripes.len() * std::mem::size_of::<Stripe>()
+            + self.rank_of.len() * 48      // BTreeMap<u32,u32>: ~node-amortized entry cost
+            + n * 4                        // stripe_of
+            + n * 8                        // ids column (stored PgId)
+            + n * 8                        // shard_bytes
+            + acting_entries * 8           // Option<OsdId>
+            + n * 24 + pairs * 8           // upmap: Vec header per PG + live pairs
+    }
+}
+
+impl MemoryFootprint for PgArena {
+    fn heap_bytes(&self) -> usize {
+        vec_capacity_bytes(&self.stripes)
+            + vec_capacity_bytes(&self.rank_of)
+            + vec_capacity_bytes(&self.stripe_of)
+            + vec_capacity_bytes(&self.shard_bytes)
+            + vec_capacity_bytes(&self.acting)
+            + vec_capacity_bytes(&self.upmap_head)
+            + vec_capacity_bytes(&self.upmap_items)
+            + self.upmap_items.iter().map(|v| vec_capacity_bytes(v)).sum::<usize>()
+            + vec_capacity_bytes(&self.upmap_owner)
     }
 }
 
@@ -378,6 +512,12 @@ impl ShardMatrix {
     }
 }
 
+impl MemoryFootprint for ShardMatrix {
+    fn heap_bytes(&self) -> usize {
+        vec_capacity_bytes(&self.counts)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,6 +527,22 @@ mod tests {
         a.push_pool(1, 4, 3);
         a.push_pool(5, 2, 6);
         a
+    }
+
+    fn slots(osds: &[Option<OsdId>]) -> Vec<Slot> {
+        osds.iter().map(|&o| Slot::from_option(o)).collect()
+    }
+
+    #[test]
+    fn slot_packs_to_four_bytes() {
+        assert_eq!(std::mem::size_of::<Slot>(), 4);
+        assert_eq!(Slot::osd(7).get(), Some(7));
+        assert_eq!(Slot::HOLE.get(), None);
+        assert!(Slot::HOLE.is_hole());
+        assert!(Slot::osd(3).is(3) && !Slot::osd(3).is(4));
+        assert!(!Slot::HOLE.is(u32::MAX - 1));
+        assert_eq!(Slot::from_option(None), Slot::HOLE);
+        assert_eq!(Slot::from_option(Some(9)), Slot::osd(9));
     }
 
     #[test]
@@ -405,12 +561,21 @@ mod tests {
     }
 
     #[test]
+    fn derived_ids_round_trip_every_pg() {
+        let mut a = arena();
+        a.push_pool(3, 5, 3);
+        for idx in a.iter() {
+            assert_eq!(a.index_of(a.id_at(idx)), Some(idx));
+        }
+    }
+
+    #[test]
     fn acting_windows_are_striped_and_disjoint() {
         let mut a = arena();
         a.set_acting(PgIdx(0), &[Some(7), Some(8), Some(9)]);
         a.set_acting(PgIdx(4), &[Some(1), None, Some(2), None, Some(3), None]);
-        assert_eq!(a.acting_at(PgIdx(0)), &[Some(7), Some(8), Some(9)]);
-        assert_eq!(a.acting_at(PgIdx(1)), &[None, None, None], "neighbour untouched");
+        assert_eq!(a.acting_at(PgIdx(0)), slots(&[Some(7), Some(8), Some(9)]));
+        assert_eq!(a.acting_at(PgIdx(1)), slots(&[None, None, None]), "neighbour untouched");
         assert_eq!(a.acting_at(PgIdx(4)).len(), 6);
         assert_eq!(a.acting_slot(PgIdx(4), 4), Some(3));
         let v = a.view(PgIdx(0));
@@ -443,6 +608,32 @@ mod tests {
     }
 
     #[test]
+    fn upmap_swap_remove_fixes_up_moved_owner() {
+        let mut a = arena();
+        // three dense entries; draining the FIRST forces the last one's
+        // owner head to be re-pointed at the vacated slot
+        a.with_upmap_mut(PgIdx(0), |v| v.push((0, 1)));
+        a.with_upmap_mut(PgIdx(2), |v| v.push((2, 3)));
+        a.with_upmap_mut(PgIdx(5), |v| v.push((4, 5)));
+        assert_eq!(a.upmap_entries(), 3);
+        a.with_upmap_mut(PgIdx(0), |v| v.clear());
+        assert_eq!(a.upmap_entries(), 2);
+        assert_eq!(a.upmap_at(PgIdx(0)), &[]);
+        assert_eq!(a.upmap_at(PgIdx(2)), &[(2, 3)]);
+        assert_eq!(a.upmap_at(PgIdx(5)), &[(4, 5)], "swapped-in entry still owned");
+        // edit the moved entry through its fixed-up head
+        a.with_upmap_mut(PgIdx(5), |v| v.push((6, 7)));
+        assert_eq!(a.upmap_at(PgIdx(5)), &[(4, 5), (6, 7)]);
+        // drain everything; all heads must read empty again
+        a.with_upmap_mut(PgIdx(2), |v| v.clear());
+        a.with_upmap_mut(PgIdx(5), |v| v.clear());
+        assert_eq!(a.upmap_entries(), 0);
+        for idx in a.iter() {
+            assert_eq!(a.upmap_at(idx), &[]);
+        }
+    }
+
+    #[test]
     fn pgid_order_iteration_sorts_late_pools() {
         let mut a = arena();
         // a pool created later with a LOWER id than an existing one:
@@ -460,6 +651,21 @@ mod tests {
         assert_eq!(a.pool_range(5).count(), 2);
         assert_eq!(a.pool_range(3).next(), Some(PgIdx(6)));
         assert_eq!(a.pool_range(42).count(), 0);
+    }
+
+    #[test]
+    fn footprint_beats_legacy_model() {
+        let mut a = PgArena::new();
+        for pool in 0..8u32 {
+            a.push_pool(pool + 1, 128, 3);
+        }
+        a.with_upmap_mut(PgIdx(7), |v| v.push((1, 2)));
+        let compact = a.heap_bytes();
+        let legacy = a.legacy_heap_bytes();
+        assert!(
+            (compact as f64) < legacy as f64 * 0.7,
+            "compact arena ({compact} B) must be ≥30% under the legacy model ({legacy} B)"
+        );
     }
 
     #[test]

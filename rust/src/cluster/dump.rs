@@ -220,8 +220,8 @@ pub fn to_json(state: &ClusterState) -> Json {
                     Json::Arr(
                         pg.acting()
                             .iter()
-                            .map(|s| match s {
-                                Some(o) => Json::from(*o as u64),
+                            .map(|s| match s.get() {
+                                Some(o) => Json::from(o as u64),
                                 None => Json::Null,
                             })
                             .collect(),

@@ -107,8 +107,7 @@ pub fn add_hosts(state: &mut ClusterState, spec: &HostSpec) -> Result<Vec<OsdId>
     let pools: Vec<_> = state.pools.values().cloned().collect();
     let pgs: Vec<_> = state.pgs().map(|v| v.to_pg()).collect();
     let upmap = state.upmap_table();
-    let down: Vec<OsdId> =
-        (0..state.osd_count() as OsdId).filter(|&o| !state.osd_is_up(o)).collect();
+    let down: Vec<OsdId> = state.down_osds().collect();
     // reassembly derives sizes from CRUSH weights; a failed (weight-0)
     // device must keep its recorded physical capacity across the rebuild
     let mut sizes: Vec<u64> =

@@ -42,6 +42,11 @@ pub struct DfReport {
     pub max_utilization: f64,
     /// Population variance of utilization (the paper's balance metric).
     pub variance: f64,
+    /// Number of up devices (O(1) from the packed membership set).
+    pub up_osds: usize,
+    /// Ids of down devices, ascending (word-skipping bitset walk — no
+    /// full-device scan).
+    pub down_osds: Vec<OsdId>,
     /// Per-pool (id, name, kind, stored-shard bytes, predicted max_avail).
     pub pools: Vec<(u32, String, PoolKind, u64, f64)>,
 }
@@ -88,6 +93,8 @@ pub fn df(state: &ClusterState) -> DfReport {
         min_utilization: stats::min(&utils),
         max_utilization: stats::max(&utils),
         variance: stats::variance(&utils),
+        up_osds: state.up_osd_count(),
+        down_osds: state.down_osds().collect(),
         pools,
     }
 }
@@ -144,6 +151,13 @@ pub fn render(report: &DfReport, max_osd_rows: usize) -> String {
         fmt_pct(report.max_utilization),
         report.variance,
     ));
+    out.push_str(&format!("devices: {} up, {} down", report.up_osds, report.down_osds.len()));
+    if !report.down_osds.is_empty() {
+        let ids: Vec<String> =
+            report.down_osds.iter().map(|o| format!("osd.{o}")).collect();
+        out.push_str(&format!(" ({})", ids.join(", ")));
+    }
+    out.push('\n');
     out
 }
 
@@ -176,6 +190,19 @@ mod tests {
         assert!(text.contains("osd."));
         // row cap respected
         assert!(text.matches("osd.").count() <= 5);
+    }
+
+    #[test]
+    fn down_devices_are_reported() {
+        let mut s = clusters::demo(13);
+        assert_eq!(df(&s).down_osds, Vec::<OsdId>::new());
+        s.set_osd_up(1, false);
+        s.set_osd_up(4, false);
+        let r = df(&s);
+        assert_eq!(r.up_osds, s.osd_count() - 2);
+        assert_eq!(r.down_osds, vec![1, 4]);
+        let text = render(&r, 3);
+        assert!(text.contains("2 down (osd.1, osd.4)"));
     }
 
     #[test]

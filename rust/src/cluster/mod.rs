@@ -19,7 +19,7 @@ pub mod recovery;
 pub mod state;
 
 pub use aggregates::{Aggregates, PoolAggregates};
-pub use arena::{PgArena, PgIdx, ShardMatrix};
+pub use arena::{PgArena, PgIdx, ShardMatrix, Slot};
 pub use expand::{add_hosts, ExpandError, HostSpec};
 pub use pg::{Movement, Pg, PgId, PgView};
 pub use pool::{Pool, PoolKind, Redundancy};

@@ -4,9 +4,13 @@
 //! store one [`Pg`] struct per placement group — per-PG data lives in
 //! the dense columns of [`super::arena::PgArena`], and readers receive a
 //! borrowed [`PgView`]. The owned [`Pg`] survives at the dump/load and
-//! reassembly boundaries (`ClusterState::from_parts` input).
+//! reassembly boundaries (`ClusterState::from_parts` input); its acting
+//! set keeps the boundary-friendly `Option<OsdId>` representation,
+//! while views expose the arena's packed 4-byte [`Slot`]s (RFC 0006).
 
 use crate::crush::OsdId;
+
+use super::arena::Slot;
 
 /// Identifier of a placement group: `<pool>.<index>` like Ceph's `1.2a`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -65,19 +69,20 @@ impl Pg {
 
 /// A borrowed, copyable view of one placement group inside the arena —
 /// what `ClusterState::pg` / `ClusterState::pgs` hand out. The acting
-/// slice borrows the arena's flat table directly (lifetime `'a` is the
-/// state borrow, not the view value), so iterators returned by
-/// [`PgView::devices`] outlive the temporary view.
+/// slice borrows the arena's flat packed-[`Slot`] table directly
+/// (lifetime `'a` is the state borrow, not the view value), so
+/// iterators returned by [`PgView::devices`] outlive the temporary
+/// view.
 #[derive(Debug, Clone, Copy)]
 pub struct PgView<'a> {
     id: PgId,
     shard_bytes: u64,
-    acting: &'a [Option<OsdId>],
+    acting: &'a [Slot],
 }
 
 impl<'a> PgView<'a> {
     /// Assemble a view over borrowed columns (arena-internal).
-    pub(crate) fn new(id: PgId, shard_bytes: u64, acting: &'a [Option<OsdId>]) -> PgView<'a> {
+    pub(crate) fn new(id: PgId, shard_bytes: u64, acting: &'a [Slot]) -> PgView<'a> {
         PgView { id, shard_bytes, acting }
     }
 
@@ -93,31 +98,41 @@ impl<'a> PgView<'a> {
         self.shard_bytes
     }
 
-    /// The acting set window: one entry per redundancy slot, `None` =
-    /// hole.
+    /// The acting set window: one packed [`Slot`] per redundancy slot,
+    /// [`Slot::HOLE`] = hole.
     #[inline]
-    pub fn acting(&self) -> &'a [Option<OsdId>] {
+    pub fn acting(&self) -> &'a [Slot] {
         self.acting
+    }
+
+    /// One acting slot, unpacked (`None` = hole or out of range).
+    #[inline]
+    pub fn acting_osd(&self, slot: usize) -> Option<OsdId> {
+        self.acting.get(slot).copied().and_then(Slot::get)
     }
 
     /// All devices currently holding a shard.
     pub fn devices(self) -> impl Iterator<Item = OsdId> + 'a {
-        self.acting.iter().filter_map(|s| *s)
+        self.acting.iter().filter_map(|s| s.get())
     }
 
     /// Does this PG have a shard on `osd`?
     pub fn on(&self, osd: OsdId) -> bool {
-        self.acting.iter().any(|s| *s == Some(osd))
+        self.acting.iter().any(|s| s.is(osd))
     }
 
     /// Slot index of `osd` in the acting set.
     pub fn slot_of(&self, osd: OsdId) -> Option<usize> {
-        self.acting.iter().position(|s| *s == Some(osd))
+        self.acting.iter().position(|s| s.is(osd))
     }
 
     /// Materialize an owned [`Pg`] (serialization/reassembly boundary).
     pub fn to_pg(&self) -> Pg {
-        Pg { id: self.id, shard_bytes: self.shard_bytes, acting: self.acting.to_vec() }
+        Pg {
+            id: self.id,
+            shard_bytes: self.shard_bytes,
+            acting: self.acting.iter().map(|s| s.get()).collect(),
+        }
     }
 }
 
@@ -171,17 +186,20 @@ mod tests {
 
     #[test]
     fn view_mirrors_owned_pg() {
-        let acting = vec![Some(3), None, Some(7)];
+        let acting = vec![Slot::osd(3), Slot::HOLE, Slot::osd(7)];
         let v = PgView::new(PgId::new(1, 0), 100, &acting);
         assert_eq!(v.id(), PgId::new(1, 0));
         assert_eq!(v.shard_bytes(), 100);
         assert!(v.on(3) && !v.on(4));
         assert_eq!(v.slot_of(7), Some(2));
+        assert_eq!(v.acting_osd(0), Some(3));
+        assert_eq!(v.acting_osd(1), None, "hole unpacks to None");
+        assert_eq!(v.acting_osd(9), None, "out of range");
         // devices() outlives the temporary view (borrows the columns)
         let devs: Vec<OsdId> = v.devices().collect();
         assert_eq!(devs, vec![3, 7]);
         let owned = v.to_pg();
-        assert_eq!(owned.acting, acting);
+        assert_eq!(owned.acting, vec![Some(3), None, Some(7)]);
         assert_eq!(owned.shard_bytes, 100);
     }
 

@@ -100,10 +100,16 @@ pub fn fail_osd(state: &mut ClusterState, osd: OsdId) -> FailureReport {
 }
 
 /// Pick a random up OSD (failure-injection helper for tests/benches).
+/// The candidate count comes from the state's O(1) popcount and the
+/// pick from a word-skipping bitset walk — no `Vec<OsdId>` materialized
+/// (the pre-RFC-0006 full scan allocated one per call).
 pub fn random_up_osd(state: &ClusterState, rng: &mut Rng) -> Option<OsdId> {
-    let ups: Vec<OsdId> =
-        (0..state.osd_count() as OsdId).filter(|&o| state.osd_is_up(o)).collect();
-    rng.choose(&ups).copied()
+    let ups = state.up_osd_count();
+    if ups == 0 {
+        return None;
+    }
+    let nth = rng.below(ups as u64) as usize;
+    state.up_osds().nth(nth)
 }
 
 #[cfg(test)]

@@ -18,12 +18,14 @@
 use std::collections::BTreeMap;
 
 use crate::crush::{map_rule, pg_input, CrushMap, DeviceClass, OsdId, Rule};
+use crate::util::bitset::BitSet;
+use crate::util::mem::{vec_capacity_bytes, MemoryFootprint};
 use crate::util::parallel;
 use crate::util::stats;
 use crate::util::units::TIB;
 
 use super::aggregates::{ideal_counts_for, Aggregates};
-use super::arena::{PgArena, PgIdx, ShardMatrix};
+use super::arena::{PgArena, PgIdx, ShardMatrix, Slot};
 use super::pg::{Movement, Pg, PgId, PgView};
 use super::pool::{Pool, PoolKind};
 
@@ -135,7 +137,8 @@ pub struct ClusterState {
     arena: PgArena,
     osd_size: Vec<u64>,
     osd_used: Vec<u64>,
-    osd_up: Vec<bool>,
+    /// Up/down membership, packed 64 devices per word (RFC 0006).
+    osd_up: BitSet,
     /// PGs (by dense index) that have a shard on each OSD.
     osd_pgs: Vec<Vec<PgIdx>>,
     /// Dense per-OSD, per-pool shard counts (`osd × n_pools + rank`).
@@ -168,7 +171,7 @@ impl ClusterState {
             arena,
             osd_size,
             osd_used: vec![0; n],
-            osd_up: vec![true; n],
+            osd_up: BitSet::filled(n),
             osd_pgs: vec![Vec::new(); n],
             shards: ShardMatrix::new(n, n_pools),
             agg: Aggregates::default(),
@@ -350,16 +353,32 @@ impl ClusterState {
 
     /// Is the OSD up?
     pub fn osd_is_up(&self, osd: OsdId) -> bool {
-        self.osd_up[osd as usize]
+        self.osd_up.get(osd as usize)
+    }
+
+    /// Number of up devices — O(1) (maintained popcount).
+    pub fn up_osd_count(&self) -> usize {
+        self.osd_up.count_ones()
+    }
+
+    /// Ids of all down devices, ascending — an allocation-free
+    /// word-skipping walk of the membership bitset (health reporting,
+    /// host-expansion reassembly).
+    pub fn down_osds(&self) -> impl Iterator<Item = OsdId> + '_ {
+        self.osd_up.iter_zeros().map(|o| o as OsdId)
+    }
+
+    /// Ids of all up devices, ascending (allocation-free).
+    pub fn up_osds(&self) -> impl Iterator<Item = OsdId> + '_ {
+        self.osd_up.iter_ones().map(|o| o as OsdId)
     }
 
     /// Mark an OSD up or down, keeping the utilization index current.
     pub fn set_osd_up(&mut self, osd: OsdId, up: bool) {
         let o = osd as usize;
-        if self.osd_up[o] == up {
+        if !self.osd_up.assign(o, up) {
             return;
         }
-        self.osd_up[o] = up;
         let class = self.crush.devices[o].class;
         self.agg.up_changed(osd, self.osd_used[o], self.osd_size[o], up, class);
     }
@@ -421,6 +440,13 @@ impl ClusterState {
     /// eligible sources instead of scanning the whole index.
     pub fn source_budget(&self, k: usize) -> usize {
         self.agg.source_budget(k)
+    }
+
+    /// Is `osd` in the utilization index — up with nonzero capacity,
+    /// the balancer's scratch-eligibility predicate — answered from the
+    /// aggregates' packed membership set (O(1), no size/up recheck).
+    pub fn osd_is_indexed(&self, osd: OsdId) -> bool {
+        self.agg.is_indexed(osd)
     }
 
     /// Live per-OSD shard counts of `pool` (indexed by OSD id),
@@ -627,6 +653,42 @@ impl ClusterState {
         self.osd_size.iter().sum()
     }
 
+    // ---- memory accounting (RFC 0006) --------------------------------------
+
+    /// Resident heap of the cluster's state, broken down by component
+    /// (stable label → bytes). The sum equals
+    /// [`MemoryFootprint::heap_bytes`]; the hyperscale bench serializes
+    /// this into `BENCH_hyperscale.json`.
+    pub fn memory_breakdown(&self) -> Vec<(&'static str, usize)> {
+        let reverse_index = vec_capacity_bytes(&self.osd_pgs)
+            + self.osd_pgs.iter().map(vec_capacity_bytes).sum::<usize>();
+        vec![
+            ("arena", self.arena.heap_bytes()),
+            ("shard_matrix", self.shards.heap_bytes()),
+            (
+                "osd_accounting",
+                vec_capacity_bytes(&self.osd_size)
+                    + vec_capacity_bytes(&self.osd_used)
+                    + self.osd_up.heap_bytes(),
+            ),
+            ("reverse_index", reverse_index),
+            ("aggregates", self.agg.heap_bytes()),
+        ]
+    }
+
+    /// Heap bytes of the PG arena alone (the bytes/PG numerator the
+    /// hyperscale gate divides by [`ClusterState::pg_count`]).
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.heap_bytes()
+    }
+
+    /// Analytic heap bytes of the **pre-RFC-0006** arena layout on the
+    /// same content — the fixed comparison baseline of the ≥30 %
+    /// bytes/PG reduction gate (see `PgArena::legacy_heap_bytes`).
+    pub fn arena_legacy_bytes(&self) -> usize {
+        self.arena.legacy_heap_bytes()
+    }
+
     // ---- movements ---------------------------------------------------------
 
     /// Validate a movement without applying it.
@@ -647,7 +709,7 @@ impl ClusterState {
         if pg.on(to) {
             return Err(StateError::AlreadyOnTarget { pg: pg_id, osd: to });
         }
-        if !self.osd_up[to as usize] {
+        if !self.osd_up.get(to as usize) {
             return Err(StateError::OsdDown(to));
         }
         let used = self.osd_used[to as usize];
@@ -670,7 +732,7 @@ impl ClusterState {
         let idx = self.arena.index_of(pg_id).ok_or(StateError::UnknownPg(pg_id))?;
         self.check_movement_at(idx, from, to)?;
         let slot = self.arena.view(idx).slot_of(from).expect("checked on source");
-        self.arena.acting_mut(idx)[slot] = Some(to);
+        self.arena.acting_mut(idx)[slot] = Slot::osd(to);
         let bytes = self.arena.shard_bytes_at(idx);
 
         // upmap bookkeeping (Ceph pg_upmap_items semantics): pairs map the
@@ -696,14 +758,14 @@ impl ClusterState {
             from_used_old,
             self.osd_used[from as usize],
             self.osd_size[from as usize],
-            self.osd_up[from as usize],
+            self.osd_up.get(from as usize),
         );
         self.agg.used_changed(
             to,
             to_used_old,
             self.osd_used[to as usize],
             self.osd_size[to as usize],
-            self.osd_up[to as usize],
+            self.osd_up.get(to as usize),
         );
         let fpgs = &mut self.osd_pgs[from as usize];
         if let Some(pos) = fpgs.iter().position(|&p| p == idx) {
@@ -773,7 +835,7 @@ impl ClusterState {
             let o = osd as usize;
             let old = self.osd_used[o];
             self.osd_used[o] += bytes_per_shard;
-            self.agg.used_changed(osd, old, self.osd_used[o], self.osd_size[o], self.osd_up[o]);
+            self.agg.used_changed(osd, old, self.osd_used[o], self.osd_size[o], self.osd_up.get(o));
         }
         self.agg.maybe_renormalize(&self.osd_used, &self.osd_size);
         Ok(())
@@ -804,7 +866,7 @@ impl ClusterState {
     pub fn primaries_on(&self, osd: OsdId) -> usize {
         self.osd_pgs[osd as usize]
             .iter()
-            .filter(|&&idx| self.arena.acting_at(idx).first() == Some(&Some(osd)))
+            .filter(|&&idx| self.arena.acting_at(idx).first().is_some_and(|s| s.is(osd)))
             .count()
     }
 
@@ -820,7 +882,7 @@ impl ClusterState {
             let o = osd as usize;
             let old = self.osd_used[o];
             self.osd_used[o] -= delta;
-            self.agg.used_changed(osd, old, self.osd_used[o], self.osd_size[o], self.osd_up[o]);
+            self.agg.used_changed(osd, old, self.osd_used[o], self.osd_size[o], self.osd_up.get(o));
         }
         self.agg.maybe_renormalize(&self.osd_used, &self.osd_size);
         Ok(())
@@ -917,6 +979,12 @@ impl ClusterState {
             &self.arena,
         ));
         problems
+    }
+}
+
+impl MemoryFootprint for ClusterState {
+    fn heap_bytes(&self) -> usize {
+        self.memory_breakdown().iter().map(|&(_, b)| b).sum()
     }
 }
 
@@ -1258,6 +1326,41 @@ mod tests {
         assert!((s.pool_count_deviation(1) - manual).abs() < 1e-9);
         assert!(s.pool_shard_counts(99).is_none());
         assert!(s.verify().is_empty());
+    }
+
+    #[test]
+    fn bitset_membership_matches_scans() {
+        let mut s = small_cluster();
+        assert_eq!(s.up_osd_count(), 8);
+        assert_eq!(s.down_osds().count(), 0);
+        s.set_osd_up(2, false);
+        s.set_osd_up(5, false);
+        assert_eq!(s.up_osd_count(), 6);
+        assert_eq!(s.down_osds().collect::<Vec<_>>(), vec![2, 5]);
+        assert_eq!(
+            s.up_osds().collect::<Vec<_>>(),
+            (0..8).filter(|&o| o != 2 && o != 5).collect::<Vec<OsdId>>()
+        );
+        for o in 0..s.osd_count() as OsdId {
+            assert_eq!(s.osd_is_indexed(o), s.osd_is_up(o) && s.osd_size(o) > 0);
+        }
+        s.set_osd_up(2, true);
+        assert_eq!(s.down_osds().collect::<Vec<_>>(), vec![5]);
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+    }
+
+    #[test]
+    fn memory_breakdown_sums_and_beats_legacy() {
+        let s = small_cluster();
+        let sum: usize = s.memory_breakdown().iter().map(|&(_, b)| b).sum();
+        assert_eq!(sum, s.heap_bytes(), "breakdown must sum to the footprint");
+        assert!(s.arena_bytes() > 0);
+        assert!(
+            (s.arena_bytes() as f64) < s.arena_legacy_bytes() as f64 * 0.7,
+            "compact arena {} vs legacy model {}",
+            s.arena_bytes(),
+            s.arena_legacy_bytes()
+        );
     }
 
     /// Parallel and serial construction must be bit-identical (the

@@ -113,12 +113,11 @@ impl Invariant for CrushDomains {
                 .ok_or_else(|| format!("pool {} references unknown rule {}", pool.id, pool.rule_id))?;
             let blocks = rule_slot_constraints(state, rule, pool.redundancy.shard_count());
             for pg in state.pgs_of_pool(pool.id) {
-                let acting = pg.acting();
                 for block in &blocks {
                     let osds: Vec<OsdId> = block
                         .slots
                         .clone()
-                        .filter_map(|s| acting.get(s).copied().flatten())
+                        .filter_map(|s| pg.acting_osd(s))
                         .collect();
                     for &o in &osds {
                         if let Some(class) = block.class {

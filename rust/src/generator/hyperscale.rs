@@ -1,0 +1,337 @@
+//! Deterministic datacenter-scale cluster generation (RFC 0006).
+//!
+//! The paper's six evaluation clusters top out at a few hundred OSDs;
+//! the hyperscale regime this crate targets is 1k–10k devices and a
+//! million-plus PGs. These builders produce full datacenter topologies —
+//! rows of racks of hosts, mixed drive generations per row, an SSD
+//! sprinkle for metadata, and a Zipf-skewed pool population (a handful
+//! of giant data pools and a long tail of small ones) — entirely from
+//! one seed, so every bench point is reproducible bit-for-bit.
+//!
+//! Four fixed tiers ([`TIERS`]): `smoke` (128 OSDs, CI-sized), `1k`,
+//! `4k`, and `10k` (10240 OSDs, ≥1M PGs — the headline scale of
+//! `benches/hyperscale.rs`).
+
+use crate::cluster::{ClusterState, Pool};
+use crate::crush::{CrushBuilder, DeviceClass, Level, Rule};
+use crate::util::rng::Rng;
+use crate::util::units::{GIB, TIB};
+
+/// Shape of one hyperscale tier.
+#[derive(Debug, Clone)]
+pub struct HyperscaleSpec {
+    /// Tier name ("smoke", "1k", "4k", "10k").
+    pub name: &'static str,
+    /// Datacenter rows.
+    pub rows: usize,
+    /// Racks per row.
+    pub racks_per_row: usize,
+    /// Hosts per rack.
+    pub hosts_per_rack: usize,
+    /// Devices per host.
+    pub osds_per_host: usize,
+    /// Number of data pools (Zipf-skewed PG shares).
+    pub data_pools: usize,
+    /// Total PG count across the data pools (exact; the Zipf shares are
+    /// remainder-corrected to sum to this).
+    pub total_pgs: u32,
+    /// Mean HDD fill fraction the stored data targets.
+    pub fill: f64,
+}
+
+impl HyperscaleSpec {
+    /// Total device count of the tier.
+    pub fn osd_count(&self) -> usize {
+        self.rows * self.racks_per_row * self.hosts_per_rack * self.osds_per_host
+    }
+
+    /// Total host count of the tier.
+    pub fn host_count(&self) -> usize {
+        self.rows * self.racks_per_row * self.hosts_per_rack
+    }
+}
+
+/// CI-sized tier: topology shape of the big tiers at 1% of the scale.
+pub const SMOKE: HyperscaleSpec = HyperscaleSpec {
+    name: "smoke",
+    rows: 2,
+    racks_per_row: 2,
+    hosts_per_rack: 4,
+    osds_per_host: 8,
+    data_pools: 16,
+    total_pgs: 2_048,
+    fill: 0.55,
+};
+
+/// 1024 OSDs.
+pub const TIER_1K: HyperscaleSpec = HyperscaleSpec {
+    name: "1k",
+    rows: 2,
+    racks_per_row: 4,
+    hosts_per_rack: 8,
+    osds_per_host: 16,
+    data_pools: 128,
+    total_pgs: 65_536,
+    fill: 0.55,
+};
+
+/// 4096 OSDs.
+pub const TIER_4K: HyperscaleSpec = HyperscaleSpec {
+    name: "4k",
+    rows: 4,
+    racks_per_row: 4,
+    hosts_per_rack: 16,
+    osds_per_host: 16,
+    data_pools: 256,
+    total_pgs: 262_144,
+    fill: 0.55,
+};
+
+/// 10240 OSDs, ≥1M PGs — the RFC 0006 headline scale.
+pub const TIER_10K: HyperscaleSpec = HyperscaleSpec {
+    name: "10k",
+    rows: 5,
+    racks_per_row: 8,
+    hosts_per_rack: 16,
+    osds_per_host: 16,
+    data_pools: 512,
+    total_pgs: 1_048_576,
+    fill: 0.55,
+};
+
+/// All tiers, smallest first.
+pub const TIERS: [&HyperscaleSpec; 4] = [&SMOKE, &TIER_1K, &TIER_4K, &TIER_10K];
+
+/// Look a tier up by name.
+pub fn tier(name: &str) -> Option<&'static HyperscaleSpec> {
+    TIERS.iter().copied().find(|t| t.name == name)
+}
+
+/// Zipf-ish pool PG shares: pool `i` weighs `1/(i+1)`, rounded down to
+/// at least 8 PGs, with the rounding remainder folded into pool 0 so
+/// the counts sum to `total` exactly.
+fn pool_pg_counts(pools: usize, total: u32) -> Vec<u32> {
+    let weights: Vec<f64> = (0..pools).map(|i| 1.0 / (i + 1) as f64).collect();
+    let wsum: f64 = weights.iter().sum();
+    let mut counts: Vec<u32> = weights
+        .iter()
+        .map(|w| ((total as f64 * w / wsum) as u32).max(8))
+        .collect();
+    let sum: u64 = counts.iter().map(|&c| c as u64).sum();
+    if (sum as i64) < total as i64 {
+        counts[0] += total - sum as u32;
+    } else if sum > total as u64 {
+        // the min-8 floor overshot; shave the big pool (never below 8)
+        counts[0] = counts[0].saturating_sub((sum - total as u64) as u32).max(8);
+    }
+    counts
+}
+
+/// Build one tier. Deterministic: the same `(spec, seed)` reproduces
+/// the cluster bit-for-bit — topology, drive sizes, pool layout, and
+/// every PG's placement and shard size.
+pub fn build(spec: &HyperscaleSpec, seed: u64) -> ClusterState {
+    let mut rng = Rng::new(seed);
+    let mut b = CrushBuilder::new();
+    let root = b.add_root("default");
+
+    // rows get newer (bigger) drive generations; within a row the
+    // variety mix models replaced drives
+    let mut hdd_bytes = 0u64;
+    let mut ssd_bytes = 0u64;
+    let mut host_no = 0usize;
+    for r in 0..spec.rows {
+        let row = b.add_bucket(&format!("row{r:02}"), Level::Row, root);
+        let gen = 1.0 + 0.5 * r as f64 / spec.rows.max(1) as f64;
+        for k in 0..spec.racks_per_row {
+            let rack = b.add_bucket(&format!("rack{r:02}-{k:02}"), Level::Rack, row);
+            for _ in 0..spec.hosts_per_rack {
+                let host =
+                    b.add_bucket(&format!("host{host_no:04}"), Level::Host, rack);
+                // every 4th host leads with an SSD (the metadata tier)
+                let ssd_slots = if host_no % 4 == 0 { 1 } else { 0 };
+                host_no += 1;
+                for d in 0..spec.osds_per_host {
+                    if d < ssd_slots {
+                        let size = (1 + rng.index(2) as u64) * 2 * TIB;
+                        b.add_osd_bytes(host, size, DeviceClass::Ssd);
+                        ssd_bytes += size;
+                    } else {
+                        let variety = [1.0, 1.0, 1.5, 2.0];
+                        let base = 8.0 * TIB as f64 * gen * rng.choose(&variety).unwrap();
+                        let size = ((base / GIB as f64).round() as u64).max(1) * GIB;
+                        b.add_osd_bytes(host, size, DeviceClass::Hdd);
+                        hdd_bytes += size;
+                    }
+                }
+            }
+        }
+    }
+
+    // EC stripes across racks when the tier has enough of them,
+    // otherwise across hosts (the smoke tier)
+    let ec_level =
+        if spec.rows * spec.racks_per_row >= 8 { Level::Rack } else { Level::Host };
+    b.add_rule(Rule::replicated(0, "data-hdd", "default", Some(DeviceClass::Hdd), Level::Host));
+    b.add_rule(Rule::erasure(1, "ec-hdd", "default", Some(DeviceClass::Hdd), ec_level));
+    b.add_rule(Rule::replicated(2, "meta-ssd", "default", Some(DeviceClass::Ssd), Level::Host));
+    let crush = b.build().expect("hyperscale topology must validate");
+
+    // pool population: Zipf-shared data pools (every 5th EC 4+2), plus
+    // a small SSD metadata tier
+    let pg_counts = pool_pg_counts(spec.data_pools, spec.total_pgs);
+    let mut pools = Vec::with_capacity(spec.data_pools + spec.data_pools / 16 + 1);
+    let mut overhead = Vec::with_capacity(spec.data_pools);
+    for (i, &pgs) in pg_counts.iter().enumerate() {
+        let id = (i + 1) as u32;
+        if i % 5 == 4 {
+            pools.push(Pool::erasure(id, &format!("data{i:04}"), 4, 2, pgs, 1));
+            overhead.push(1.5);
+        } else {
+            pools.push(Pool::replicated(id, &format!("data{i:04}"), 3, pgs, 0));
+            overhead.push(3.0);
+        }
+    }
+    let meta_pools = (spec.data_pools / 16).max(1);
+    for j in 0..meta_pools {
+        let id = (spec.data_pools + j + 1) as u32;
+        pools.push(Pool::replicated(id, &format!("meta{j:02}"), 3, 64, 2).metadata());
+    }
+
+    // user bytes: HDD fill target split over the data pools by their PG
+    // weight, accounting for each pool's raw-space overhead
+    let weights: Vec<f64> = pg_counts.iter().map(|&c| c as f64).collect();
+    let denom: f64 =
+        weights.iter().zip(&overhead).map(|(w, o)| w * o).sum();
+    let data_user: Vec<f64> = weights
+        .iter()
+        .map(|w| spec.fill * hdd_bytes as f64 * w / denom)
+        .collect();
+    let meta_user = 0.3 * ssd_bytes as f64 / 3.0 / meta_pools as f64;
+
+    // per-shard byte share per pool id (1-based, data then meta)
+    let mut per_shard = vec![0.0f64; pools.len() + 1];
+    for (i, &pgs) in pg_counts.iter().enumerate() {
+        let frac = if overhead[i] > 2.0 { 1.0 } else { 0.25 }; // repl share vs EC k=4 share
+        per_shard[i + 1] = data_user[i] / pgs as f64 * frac;
+    }
+    for j in 0..meta_pools {
+        per_shard[spec.data_pools + j + 1] = meta_user / 64.0;
+    }
+
+    let mut size_rng = rng.fork();
+    ClusterState::build(crush, pools, move |pool, _idx| {
+        let jitter = size_rng.lognormal(0.0, 0.1);
+        (per_shard[pool.id as usize] * jitter).round() as u64
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crush::NodeId;
+
+    #[test]
+    fn tier_math_matches_names() {
+        assert_eq!(SMOKE.osd_count(), 128);
+        assert_eq!(TIER_1K.osd_count(), 1024);
+        assert_eq!(TIER_4K.osd_count(), 4096);
+        assert_eq!(TIER_10K.osd_count(), 10240);
+        assert!(TIER_10K.total_pgs >= 1_000_000);
+        assert!(tier("4k").is_some() && tier("40k").is_none());
+    }
+
+    #[test]
+    fn pool_pg_counts_sum_exactly() {
+        for (pools, total) in [(16, 2_048u32), (128, 65_536), (512, 1_048_576)] {
+            let counts = pool_pg_counts(pools, total);
+            assert_eq!(counts.len(), pools);
+            assert_eq!(counts.iter().map(|&c| c as u64).sum::<u64>(), total as u64);
+            assert!(counts.iter().all(|&c| c >= 8));
+            assert!(counts[0] > counts[pools - 1], "Zipf skew");
+        }
+    }
+
+    #[test]
+    fn smoke_tier_builds_a_valid_datacenter() {
+        let s = build(&SMOKE, 42);
+        assert_eq!(s.osd_count(), 128);
+        // rows and racks exist in the map
+        let rows = s.crush.buckets.values().filter(|b| b.level == Level::Row).count();
+        let racks = s.crush.buckets.values().filter(|b| b.level == Level::Rack).count();
+        assert_eq!(rows, 2);
+        assert_eq!(racks, 4);
+        // both device classes present, heterogeneous HDD sizes
+        let ssds = (0..128u32).filter(|&o| s.osd_class(o) == DeviceClass::Ssd).count();
+        assert_eq!(ssds, SMOKE.host_count() / 4);
+        let hdd_sizes: Vec<u64> = (0..128u32)
+            .filter(|&o| s.osd_class(o) == DeviceClass::Hdd)
+            .map(|o| s.osd_size(o))
+            .collect();
+        assert!(hdd_sizes.iter().any(|&x| x != hdd_sizes[0]), "drive-size heterogeneity");
+        // pool population: data + metadata, PG total as specified
+        assert_eq!(s.pools.len(), SMOKE.data_pools + 1);
+        let data_pgs: u32 = s
+            .pools
+            .values()
+            .filter(|p| p.id <= SMOKE.data_pools as u32)
+            .map(|p| p.pg_count)
+            .sum();
+        assert_eq!(data_pgs, SMOKE.total_pgs);
+        assert!(s.verify().is_empty(), "{:?}", s.verify());
+    }
+
+    #[test]
+    fn fill_lands_near_target() {
+        let s = build(&SMOKE, 7);
+        let hdd_total: u64 = (0..s.osd_count() as u32)
+            .filter(|&o| s.osd_class(o) == DeviceClass::Hdd)
+            .map(|o| s.osd_size(o))
+            .sum();
+        let hdd_used: u64 = (0..s.osd_count() as u32)
+            .filter(|&o| s.osd_class(o) == DeviceClass::Hdd)
+            .map(|o| s.osd_used(o))
+            .sum();
+        let fill = hdd_used as f64 / hdd_total as f64;
+        assert!(
+            (fill - SMOKE.fill).abs() < 0.05,
+            "HDD fill {fill:.3} vs target {:.3}",
+            SMOKE.fill
+        );
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_different_seed_differs() {
+        let a = build(&SMOKE, 1);
+        let b = build(&SMOKE, 1);
+        assert_eq!(a.osd_count(), b.osd_count());
+        for o in 0..a.osd_count() as u32 {
+            assert_eq!(a.osd_size(o), b.osd_size(o));
+            assert_eq!(a.osd_used(o), b.osd_used(o));
+        }
+        for (x, y) in a.pgs().zip(b.pgs()) {
+            assert_eq!(x.acting(), y.acting());
+            assert_eq!(x.shard_bytes(), y.shard_bytes());
+        }
+        let c = build(&SMOKE, 2);
+        let differs = (0..a.osd_count() as u32).any(|o| a.osd_used(o) != c.osd_used(o));
+        assert!(differs, "different seeds must differ");
+    }
+
+    #[test]
+    fn failure_domains_hold_at_every_level() {
+        let s = build(&SMOKE, 13);
+        // replicated pools: host-distinct; EC pools: host-distinct (the
+        // smoke tier's EC level) — spot-check a sample
+        for pg in s.pgs().take(200) {
+            let hosts: Vec<NodeId> = pg
+                .devices()
+                .map(|o| s.crush.ancestor_at(o as NodeId, Level::Host).unwrap())
+                .collect();
+            let mut uniq = hosts.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), hosts.len(), "pg {} host distinctness", pg.id());
+        }
+    }
+}

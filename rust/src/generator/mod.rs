@@ -3,8 +3,10 @@
 
 pub mod aging;
 pub mod clusters;
+pub mod hyperscale;
 pub mod synth;
 
 pub use aging::{age, AgingConfig};
 pub use clusters::{by_name, demo, PaperCluster, ALL};
+pub use hyperscale::HyperscaleSpec;
 pub use synth::{build_cluster, random_cluster, DeviceSpec, PoolRedundancy, PoolSpec};

@@ -4,8 +4,10 @@
 //! reporting, plus a black-box to defeat constant folding. All
 //! `rust/benches/*.rs` targets (declared with `harness = false`) use this.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
 use crate::util::units::fmt_duration;
 
@@ -142,6 +144,32 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Absolute path of a `BENCH_*.json` artifact at the **repo root**.
+///
+/// Bench binaries run with the working directory cargo happens to use,
+/// which drifted artifacts into `target/` in earlier PRs; anchoring on
+/// `CARGO_MANIFEST_DIR` (the directory holding `Cargo.toml`, compiled
+/// into the binary) pins every artifact to one canonical location.
+pub fn bench_artifact_path(file_name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(file_name)
+}
+
+/// The one writer every `benches/*.rs` target uses for its
+/// `BENCH_<name>.json` artifact: repo-root path, pretty-printed with
+/// sorted keys (`Json::Obj` is a `BTreeMap`, so ordering is inherent),
+/// trailing newline. Returns the path written.
+pub fn write_bench_json(name: &str, doc: &Json) -> PathBuf {
+    let path = bench_artifact_path(&format!("BENCH_{name}.json"));
+    let mut text = doc.pretty();
+    if !text.ends_with('\n') {
+        text.push('\n');
+    }
+    std::fs::write(&path, text)
+        .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+    println!("\nwrote {}", path.display());
+    path
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +196,13 @@ mod tests {
         let b = Bench::quick();
         let r = b.run("my_bench_name", || ());
         assert!(r.report().contains("my_bench_name"));
+    }
+
+    #[test]
+    fn artifact_path_is_repo_root_anchored() {
+        let p = bench_artifact_path("BENCH_example.json");
+        assert!(p.is_absolute());
+        assert_eq!(p.parent().unwrap(), PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+        assert!(p.to_string_lossy().ends_with("BENCH_example.json"));
     }
 }

@@ -1,0 +1,311 @@
+//! Word-packed bit set for dense device-membership tracking.
+//!
+//! At hyperscale (RFC 0006: 10k OSDs, a million-plus PGs) the cluster
+//! keeps several membership sets over the dense OSD id space — up/down
+//! in [`ClusterState`](crate::cluster::ClusterState), indexed-in-the-
+//! utilization-index in [`Aggregates`](crate::cluster::aggregates). A
+//! `Vec<bool>` costs a byte per device and every "which devices are
+//! down?" question becomes an allocating linear scan. This set packs 64
+//! devices per `u64` word, maintains its population count incrementally
+//! (so `count_ones` is O(1)), and iterates members and non-members
+//! without allocating.
+//!
+//! Semantics are pinned to the plain-`Vec<bool>` model by property tests
+//! below and by `rust/tests/bitset_props.rs`, which replays random
+//! up/down/fail sequences against both representations.
+
+use crate::util::mem::{vec_capacity_bytes, MemoryFootprint};
+
+/// A fixed-universe set of `usize` indices in `0..len`, packed 64/word.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+    ones: usize,
+}
+
+impl BitSet {
+    /// Empty set over the universe `0..len`.
+    pub fn new(len: usize) -> Self {
+        BitSet { words: vec![0; len.div_ceil(64)], len, ones: 0 }
+    }
+
+    /// Full set over the universe `0..len`.
+    pub fn filled(len: usize) -> Self {
+        let mut s = BitSet { words: vec![!0u64; len.div_ceil(64)], len, ones: len };
+        s.mask_tail();
+        s
+    }
+
+    /// Build from the equivalent boolean-per-index representation.
+    pub fn from_bools(bools: &[bool]) -> Self {
+        let mut s = BitSet::new(bools.len());
+        for (i, &b) in bools.iter().enumerate() {
+            if b {
+                s.insert(i);
+            }
+        }
+        s
+    }
+
+    /// Universe size (not the member count).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ones == 0
+    }
+
+    /// Number of members — O(1), maintained incrementally.
+    pub fn count_ones(&self) -> usize {
+        self.ones
+    }
+
+    /// Number of non-members — O(1).
+    pub fn count_zeros(&self) -> usize {
+        self.len - self.ones
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bitset index {i} out of range {}", self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Add `i`; returns whether the set changed.
+    #[inline]
+    pub fn insert(&mut self, i: usize) -> bool {
+        assert!(i < self.len, "bitset index {i} out of range {}", self.len);
+        let (w, m) = (i / 64, 1u64 << (i % 64));
+        let changed = self.words[w] & m == 0;
+        self.words[w] |= m;
+        self.ones += changed as usize;
+        changed
+    }
+
+    /// Remove `i`; returns whether the set changed.
+    #[inline]
+    pub fn remove(&mut self, i: usize) -> bool {
+        assert!(i < self.len, "bitset index {i} out of range {}", self.len);
+        let (w, m) = (i / 64, 1u64 << (i % 64));
+        let changed = self.words[w] & m != 0;
+        self.words[w] &= !m;
+        self.ones -= changed as usize;
+        changed
+    }
+
+    /// Set membership of `i` to `member`; returns whether the set changed.
+    #[inline]
+    pub fn assign(&mut self, i: usize, member: bool) -> bool {
+        if member {
+            self.insert(i)
+        } else {
+            self.remove(i)
+        }
+    }
+
+    /// Extend the universe to `new_len`; new indices join iff `member`.
+    /// Shrinking is not supported (the device id space never contracts).
+    pub fn grow(&mut self, new_len: usize, member: bool) {
+        assert!(new_len >= self.len, "bitset cannot shrink ({} -> {new_len})", self.len);
+        let old_len = self.len;
+        self.words.resize(new_len.div_ceil(64), 0);
+        self.len = new_len;
+        if member {
+            for i in old_len..new_len {
+                self.insert(i);
+            }
+        }
+    }
+
+    /// Members, ascending. Allocation-free.
+    pub fn iter_ones(&self) -> BitIter<'_> {
+        BitIter::new(&self.words, self.len, false)
+    }
+
+    /// Non-members, ascending. Allocation-free.
+    pub fn iter_zeros(&self) -> BitIter<'_> {
+        BitIter::new(&self.words, self.len, true)
+    }
+
+    /// Zero the bits above `len` in the last word so popcounts and the
+    /// inverted (`iter_zeros`) view never see phantom universe slots.
+    fn mask_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+}
+
+impl Default for BitSet {
+    /// An empty set over the empty universe (grow before use).
+    fn default() -> Self {
+        BitSet::new(0)
+    }
+}
+
+impl MemoryFootprint for BitSet {
+    fn heap_bytes(&self) -> usize {
+        vec_capacity_bytes(&self.words)
+    }
+}
+
+/// Word-skipping iterator over members (or non-members) of a [`BitSet`].
+pub struct BitIter<'a> {
+    words: &'a [u64],
+    len: usize,
+    invert: bool,
+    word_idx: usize,
+    current: u64,
+}
+
+impl<'a> BitIter<'a> {
+    fn new(words: &'a [u64], len: usize, invert: bool) -> Self {
+        let mut it = BitIter { words, len, invert, word_idx: 0, current: 0 };
+        it.current = it.load(0);
+        it
+    }
+
+    /// Word `i` of the (possibly inverted) view, with the tail of the
+    /// final word masked off so inverted iteration stops at `len`.
+    fn load(&self, i: usize) -> u64 {
+        let Some(&w) = self.words.get(i) else { return 0 };
+        let w = if self.invert { !w } else { w };
+        let tail = self.len % 64;
+        if i + 1 == self.words.len() && tail != 0 {
+            w & ((1u64 << tail) - 1)
+        } else {
+            w
+        }
+    }
+}
+
+impl Iterator for BitIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.current == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.load(self.word_idx);
+        }
+        let bit = self.current.trailing_zeros() as usize;
+        self.current &= self.current - 1; // clear lowest set bit
+        Some(self.word_idx * 64 + bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn insert_remove_counts() {
+        let mut s = BitSet::new(130);
+        assert_eq!(s.count_ones(), 0);
+        assert!(s.insert(0));
+        assert!(s.insert(64));
+        assert!(s.insert(129));
+        assert!(!s.insert(129), "double insert is a no-op");
+        assert_eq!(s.count_ones(), 3);
+        assert_eq!(s.count_zeros(), 127);
+        assert!(s.get(64) && !s.get(63));
+        assert!(s.remove(64));
+        assert!(!s.remove(64), "double remove is a no-op");
+        assert_eq!(s.count_ones(), 2);
+    }
+
+    #[test]
+    fn filled_and_tail_masking() {
+        let s = BitSet::filled(70);
+        assert_eq!(s.count_ones(), 70);
+        assert_eq!(s.iter_ones().count(), 70);
+        assert_eq!(s.iter_zeros().count(), 0);
+        assert_eq!(s.iter_ones().last(), Some(69));
+    }
+
+    #[test]
+    fn iter_matches_membership() {
+        let mut s = BitSet::new(200);
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 199] {
+            s.insert(i);
+        }
+        let ones: Vec<usize> = s.iter_ones().collect();
+        assert_eq!(ones, vec![0, 1, 63, 64, 65, 127, 128, 199]);
+        let zeros: Vec<usize> = s.iter_zeros().collect();
+        assert_eq!(zeros.len(), 192);
+        assert!(zeros.iter().all(|&i| !ones.contains(&i)));
+    }
+
+    #[test]
+    fn grow_preserves_and_fills() {
+        let mut s = BitSet::new(10);
+        s.insert(3);
+        s.grow(100, false);
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.count_ones(), 1);
+        assert!(s.get(3) && !s.get(50));
+
+        let mut t = BitSet::filled(10);
+        t.grow(130, true);
+        assert_eq!(t.count_ones(), 130);
+        assert_eq!(t.iter_zeros().count(), 0);
+    }
+
+    #[test]
+    fn from_bools_round_trip() {
+        let bools = [true, false, false, true, true];
+        let s = BitSet::from_bools(&bools);
+        for (i, &b) in bools.iter().enumerate() {
+            assert_eq!(s.get(i), b);
+        }
+        assert_eq!(s.count_ones(), 3);
+    }
+
+    #[test]
+    fn randomized_equivalence_with_vec_bool() {
+        let mut rng = Rng::new(0xB175E7);
+        for trial in 0..20 {
+            let n = 1 + rng.below(300) as usize;
+            let mut set = BitSet::new(n);
+            let mut model = vec![false; n];
+            for _ in 0..500 {
+                let i = rng.below(n as u64) as usize;
+                match rng.below(3) {
+                    0 => {
+                        assert_eq!(set.insert(i), !model[i], "trial {trial}");
+                        model[i] = true;
+                    }
+                    1 => {
+                        assert_eq!(set.remove(i), model[i], "trial {trial}");
+                        model[i] = false;
+                    }
+                    _ => assert_eq!(set.get(i), model[i], "trial {trial}"),
+                }
+            }
+            let want_ones: Vec<usize> =
+                (0..n).filter(|&i| model[i]).collect();
+            let want_zeros: Vec<usize> =
+                (0..n).filter(|&i| !model[i]).collect();
+            assert_eq!(set.iter_ones().collect::<Vec<_>>(), want_ones);
+            assert_eq!(set.iter_zeros().collect::<Vec<_>>(), want_zeros);
+            assert_eq!(set.count_ones(), want_ones.len());
+        }
+    }
+
+    #[test]
+    fn footprint_counts_words() {
+        let s = BitSet::new(10_000);
+        // 10k bits = 157 words = 1256 bytes, vs 10_000 for Vec<bool>
+        assert!(s.heap_bytes() >= 157 * 8);
+        assert!(s.heap_bytes() < 10_000 / 4);
+    }
+}

@@ -1,0 +1,70 @@
+//! Memory accounting for resident cluster state (RFC 0006).
+//!
+//! The hyperscale bench gates **bytes per PG** of resident state, so the
+//! core structures need an auditable, self-reported footprint rather than
+//! an external profiler (unavailable offline). The contract is simple:
+//! every accounted type reports the heap it *owns* (by capacity, since
+//! capacity is what the allocator charged us for), and `resident_bytes`
+//! adds the inline size of the value itself.
+//!
+//! The numbers are exact for the flat columnar structures that dominate
+//! at scale (`PgArena`, `ShardMatrix`, `BitSet`) and conservative
+//! (allocator slack excluded) for nested ones.
+
+/// Self-reported resident memory of a value.
+pub trait MemoryFootprint {
+    /// Bytes of heap owned by this value, measured by **capacity**
+    /// (what the allocator actually handed out), recursively including
+    /// heap owned by nested containers.
+    fn heap_bytes(&self) -> usize;
+
+    /// Total resident bytes: the value's inline size plus its heap.
+    fn resident_bytes(&self) -> usize
+    where
+        Self: Sized,
+    {
+        std::mem::size_of::<Self>() + self.heap_bytes()
+    }
+}
+
+/// Heap owned by a `Vec` of inline (non-allocating) elements.
+pub fn vec_bytes<T>(v: &[T]) -> usize {
+    // `&[T]` borrows can't see capacity; callers pass `&Vec` which
+    // derefs — use len as the lower bound when only a slice is known.
+    std::mem::size_of_val(v)
+}
+
+/// Heap owned by a `Vec`, counting unused capacity too.
+pub fn vec_capacity_bytes<T>(v: &Vec<T>) -> usize {
+    v.capacity() * std::mem::size_of::<T>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Blob {
+        data: Vec<u64>,
+    }
+
+    impl MemoryFootprint for Blob {
+        fn heap_bytes(&self) -> usize {
+            vec_capacity_bytes(&self.data)
+        }
+    }
+
+    #[test]
+    fn resident_adds_inline_size() {
+        let b = Blob { data: vec![0; 10] };
+        assert!(b.heap_bytes() >= 80);
+        assert_eq!(b.resident_bytes(), std::mem::size_of::<Blob>() + b.heap_bytes());
+    }
+
+    #[test]
+    fn capacity_counts_slack() {
+        let mut v: Vec<u32> = Vec::with_capacity(100);
+        v.push(1);
+        assert_eq!(vec_capacity_bytes(&v), 400);
+        assert_eq!(vec_bytes(&v), 4);
+    }
+}

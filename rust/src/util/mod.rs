@@ -3,9 +3,11 @@
 //! and unit formatting.
 
 pub mod bench;
+pub mod bitset;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod mem;
 pub mod parallel;
 pub mod prop;
 pub mod rng;

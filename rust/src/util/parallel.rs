@@ -188,6 +188,25 @@ where
     out
 }
 
+/// Fan a **partitioned** workload out over the worker budget: one task
+/// per partition, results in partition order. This is [`map_collect`]
+/// with `chunk_len == 1`, named for the RFC 0006 planning rounds where
+/// the partitions are pools: each partition's result must be a pure
+/// function of `parts[i]` and whatever frozen state `map` captures, and
+/// under that contract the output vector is byte-identical at every
+/// thread count (including 1). The `chunk_len == 1` schedule doubles as
+/// load balancing — partitions of wildly different sizes (a 4-PG
+/// metadata pool next to a 65k-PG data pool) stream through the atomic
+/// work queue without skewing any result.
+pub fn partitioned<T, R, M>(parts: &[T], map: M) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    M: Fn(&T) -> R + Sync,
+{
+    map_collect(parts.len(), 1, |i| map(&parts[i]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +296,24 @@ mod tests {
             assert_eq!(got, expect, "threads {t}");
         }
         assert!(map_collect(0, 1, |i| i).is_empty());
+    }
+
+    #[test]
+    fn partitioned_is_order_stable_across_thread_counts() {
+        // heterogeneous per-partition cost must not affect order or bits
+        let parts: Vec<usize> = (0..23).collect();
+        let work = |&p: &usize| -> f64 {
+            (0..(p * 97 + 1)).map(|i| 1.0 / (1.0 + (p * 1000 + i) as f64)).sum()
+        };
+        let serial = with_threads(1, || partitioned(&parts, work));
+        for t in [2, 4, 8] {
+            let par = with_threads(t, || partitioned(&parts, work));
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {t}");
+            }
+        }
+        assert!(partitioned::<u8, u8, _>(&[], |_| 0).is_empty());
     }
 
     #[test]

@@ -1,0 +1,79 @@
+//! Allocation guard (RFC 0006): the arena's hot-path lookups —
+//! `pool_rank` (sorted-Vec binary search), `pg_idx`, and the column
+//! reads behind `pg_at` — must be allocation-free. A `HashMap`/`BTreeMap`
+//! rank table or a per-view `Vec` would show up here as a count.
+//!
+//! This file installs a counting `#[global_allocator]`, so it holds
+//! exactly ONE test: libtest runs tests in threads, and a sibling test
+//! allocating concurrently would make the count racy. Keep it that way.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use equilibrium::cluster::PgId;
+use equilibrium::generator::clusters;
+use equilibrium::util::bench::black_box;
+
+/// System allocator with a global allocation counter.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn arena_lookups_do_not_allocate() {
+    let state = clusters::demo(7);
+    // pre-collect the identities outside the measured section
+    let ids: Vec<PgId> = state.pgs().map(|v| v.id()).collect();
+    assert!(!ids.is_empty());
+
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    let mut acc = 0u64;
+    for _ in 0..50 {
+        for &id in &ids {
+            // pool_rank binary search + dense offset arithmetic
+            let idx = state.pg_idx(id).expect("known PG");
+            // O(1) column reads off the same index
+            acc = acc.wrapping_add(state.shard_bytes_at(idx));
+            let view = state.pg_at(idx);
+            for slot in 0..view.acting().len() {
+                if let Some(osd) = view.acting_osd(slot) {
+                    acc = acc.wrapping_add(osd as u64);
+                }
+            }
+        }
+    }
+    black_box(acc);
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "arena lookups allocated {} times across {} lookups — the rank \
+         table or view path regressed off the alloc-free contract",
+        after - before,
+        50 * ids.len()
+    );
+}

@@ -11,12 +11,13 @@
 
 use equilibrium::balancer::{Balancer, Equilibrium};
 use equilibrium::cluster::dump;
-use equilibrium::cluster::ClusterState;
+use equilibrium::cluster::{add_hosts, ClusterState, HostSpec, Pool};
 use equilibrium::generator::clusters;
 use equilibrium::generator::synth::random_cluster;
 use equilibrium::util::parallel;
 use equilibrium::util::prop::check_seeded;
 use equilibrium::util::rng::Rng;
+use equilibrium::util::units::{GIB, TIB};
 
 /// Plant some upmap entries so the exception table is non-trivial.
 fn balanced(mut state: ClusterState) -> ClusterState {
@@ -109,4 +110,51 @@ fn parallel_build_of_paper_cluster_balances_identically() {
     let a = parallel::with_threads(1, || run(&serial));
     let b = parallel::with_threads(4, || run(&par));
     assert_eq!(a, b, "thread count changed the move sequence");
+}
+
+/// The flattened (offset-table) upmap encoding of RFC 0006 must survive
+/// arena restriding: host expansion appends device ids, pool creation
+/// appends a stripe and re-derives every dense index. Existing upmap
+/// entries may not shift, and the dump/load round trip must stay
+/// byte-identical through both events.
+#[test]
+fn upmap_offset_table_survives_restriding() {
+    check_seeded("upmap-restride", 0x0FF5E7, 6, |rng| {
+        let mut state = balanced(random_cluster(rng));
+        if state.upmap_entry_count() == 0 {
+            // nothing to pin on this instance; the seeded sweep covers
+            // plenty of clusters where the balancer planted exceptions
+            return Ok(());
+        }
+        let before = state.upmap_table();
+
+        // expansion: new hosts and devices append to the id space
+        add_hosts(&mut state, &HostSpec::hdd(2, 3, 4 * TIB)).map_err(|e| e.to_string())?;
+        if state.upmap_table() != before {
+            return Err("host expansion shifted upmap entries".into());
+        }
+        let loaded = dump::load(&dump::dump(&state)).map_err(|e| e.to_string())?;
+        assert_states_equal(&state, &loaded)?;
+        if dump::dump(&loaded) != dump::dump(&state) {
+            return Err("post-expansion round trip is not byte-stable".into());
+        }
+
+        // pool creation: a new stripe restrides the arena columns
+        let next_id = state.pools.keys().max().copied().unwrap_or(0) + 1;
+        let rule_id = state.pools.values().next().expect("pools exist").rule_id;
+        state
+            .add_pool(Pool::replicated(next_id, "restride_probe", 3, 16, rule_id), |i| {
+                (1 + i as u64) * GIB
+            })
+            .map_err(|e| e.to_string())?;
+        if state.upmap_table() != before {
+            return Err("pool creation disturbed existing upmap entries".into());
+        }
+        let loaded = dump::load(&dump::dump(&state)).map_err(|e| e.to_string())?;
+        assert_states_equal(&state, &loaded)?;
+        if dump::dump(&loaded) != dump::dump(&state) {
+            return Err("post-add_pool round trip is not byte-stable".into());
+        }
+        Ok(())
+    });
 }

@@ -1,0 +1,144 @@
+//! Bitset-membership equivalence (RFC 0006): the packed [`BitSet`]
+//! behind `ClusterState`'s up/down and indexed sets must be
+//! indistinguishable from the plain `Vec<bool>` + linear-scan model it
+//! replaced, under random up/down/fail/expand sequences on real
+//! clusters.
+//!
+//! The raw container is pinned against `Vec<bool>` by its own unit
+//! tests; this file pins the *cluster-level* accessors — `osd_is_up`,
+//! `up_osd_count`, `up_osds`, `down_osds`, `osd_is_indexed` — which
+//! route through incremental popcounts and the aggregates' mirror set
+//! and could drift from the model independently of the container.
+
+use equilibrium::cluster::expand::{add_hosts, HostSpec};
+use equilibrium::cluster::recovery::fail_osd;
+use equilibrium::cluster::ClusterState;
+use equilibrium::crush::OsdId;
+use equilibrium::generator::clusters;
+use equilibrium::util::prop::check_seeded;
+use equilibrium::util::rng::Rng;
+use equilibrium::util::units::TIB;
+
+/// Compare every membership accessor against the boolean model.
+fn assert_matches_model(state: &ClusterState, model: &[bool]) -> Result<(), String> {
+    if state.osd_count() != model.len() {
+        return Err(format!("osd_count {} != model {}", state.osd_count(), model.len()));
+    }
+    let want_up: Vec<OsdId> = (0..model.len())
+        .filter(|&o| model[o])
+        .map(|o| o as OsdId)
+        .collect();
+    let want_down: Vec<OsdId> = (0..model.len())
+        .filter(|&o| !model[o])
+        .map(|o| o as OsdId)
+        .collect();
+
+    if state.up_osd_count() != want_up.len() {
+        return Err(format!("up_osd_count {} != {}", state.up_osd_count(), want_up.len()));
+    }
+    let got_up: Vec<OsdId> = state.up_osds().collect();
+    if got_up != want_up {
+        return Err("up_osds() diverged from the Vec<bool> scan".into());
+    }
+    let got_down: Vec<OsdId> = state.down_osds().collect();
+    if got_down != want_down {
+        return Err("down_osds() diverged from the Vec<bool> scan".into());
+    }
+    for o in 0..model.len() {
+        let osd = o as OsdId;
+        if state.osd_is_up(osd) != model[o] {
+            return Err(format!("osd_is_up({osd}) != model"));
+        }
+        // the utilization-index mirror: up AND nonzero capacity
+        let want_indexed = model[o] && state.osd_size(osd) > 0;
+        if state.osd_is_indexed(osd) != want_indexed {
+            return Err(format!(
+                "osd_is_indexed({osd}) = {} but model says {want_indexed}",
+                state.osd_is_indexed(osd)
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Random up/down churn (no topology change): every accessor must track
+/// the boolean model step for step.
+#[test]
+fn membership_matches_vec_bool_model_under_churn() {
+    check_seeded("bitset-churn", 0xB175EC, 8, |rng| {
+        let mut state = clusters::demo(rng.next_u64());
+        let mut model = vec![true; state.osd_count()];
+        assert_matches_model(&state, &model)?;
+        for _ in 0..120 {
+            let o = rng.below(model.len() as u64) as usize;
+            let up = rng.chance(0.5);
+            state.set_osd_up(o as OsdId, up);
+            model[o] = up;
+            assert_matches_model(&state, &model)?;
+        }
+        Ok(())
+    });
+}
+
+/// Failures go through `fail_osd` (down + out + recovery backfills) —
+/// the membership sets must agree with the model afterwards, including
+/// through the aggregate rebuilds recovery triggers.
+#[test]
+fn membership_survives_fail_sequences() {
+    check_seeded("bitset-fail", 0xFA11ED, 6, |rng| {
+        let mut state = clusters::demo(rng.next_u64());
+        let mut model = vec![true; state.osd_count()];
+        // fail a few distinct devices, never the whole cluster
+        for _ in 0..3 {
+            let ups: Vec<OsdId> = state.up_osds().collect();
+            if ups.len() <= state.osd_count() / 2 {
+                break;
+            }
+            let victim = *rng.choose(&ups).expect("up devices remain");
+            fail_osd(&mut state, victim);
+            model[victim as usize] = false;
+            assert_matches_model(&state, &model)?;
+        }
+        // interleave plain down/up marks with the failures
+        for _ in 0..40 {
+            let o = rng.below(model.len() as u64) as usize;
+            let up = rng.chance(0.6);
+            state.set_osd_up(o as OsdId, up);
+            model[o] = up;
+        }
+        assert_matches_model(&state, &model)
+    });
+}
+
+/// Host expansion grows the id universe; existing membership (including
+/// down markers) must be preserved bit for bit and the new devices must
+/// come up as members.
+#[test]
+fn membership_survives_universe_growth() {
+    check_seeded("bitset-grow", 0x6B0EED, 6, |rng| {
+        let mut state = clusters::demo(rng.next_u64());
+        let mut model = vec![true; state.osd_count()];
+        // pre-expansion churn so the preserved state is non-trivial
+        for _ in 0..30 {
+            let o = rng.below(model.len() as u64) as usize;
+            let up = rng.chance(0.5);
+            state.set_osd_up(o as OsdId, up);
+            model[o] = up;
+        }
+        for round in 0..2 {
+            let spec = HostSpec::hdd(1 + round, 2 + rng.below(3) as usize, 4 * TIB);
+            let new = add_hosts(&mut state, &spec).map_err(|e| e.to_string())?;
+            model.resize(model.len() + new.len(), true);
+            assert_matches_model(&state, &model)?;
+            // churn across the old/new boundary
+            for _ in 0..20 {
+                let o = rng.below(model.len() as u64) as usize;
+                let up = rng.chance(0.5);
+                state.set_osd_up(o as OsdId, up);
+                model[o] = up;
+            }
+            assert_matches_model(&state, &model)?;
+        }
+        Ok(())
+    });
+}

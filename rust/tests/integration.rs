@@ -59,8 +59,8 @@ fn full_pipeline_on_cluster_c() {
                 }
                 let mut domains = Vec::new();
                 for s in block.slots.clone() {
-                    if let Some(Some(osd)) = pg.acting().get(s) {
-                        if let Some(d) = state.crush.ancestor_at(*osd as NodeId, *level) {
+                    if let Some(osd) = pg.acting_osd(s) {
+                        if let Some(d) = state.crush.ancestor_at(osd as NodeId, *level) {
                             assert!(
                                 !domains.contains(&d),
                                 "pg {} violates {level:?} distinctness after balancing",
