@@ -1,0 +1,165 @@
+//! Snapshot format benchmark — JSON dump vs RFC 0007 binary (`.eqsnap`).
+//!
+//! Builds hyperscale tiers (`generator::hyperscale`) and measures, per
+//! tier, both directions of both formats:
+//!
+//! * **JSON** — `dump::dump` / `dump::load` wall time and bytes;
+//! * **binary** — `snapshot::encode` / `snapshot::decode` wall time and
+//!   bytes.
+//!
+//! Equivalence is asserted structurally at every tier: re-encoding the
+//! decoded state must reproduce the binary bytes exactly (the encoder
+//! is deterministic, so this is full-state equality at memcpy speed).
+//! Each tier's binary snapshot also lands in
+//! `target/snapshot/tier_<name>.eqsnap`, which CI `cmp`s across
+//! `EQUILIBRIUM_THREADS=1` and `=4` runs — the format must be
+//! byte-identical at any thread count.
+//!
+//! Everything lands in **`BENCH_snapshot.json`** via the shared
+//! `write_bench_json` writer.
+//!
+//! Gates: full mode asserts binary load is **≥10×** faster than JSON
+//! load at the 1k tier (the ISSUE 8 headline number). `--smoke` (CI
+//! quick mode) runs the 128-OSD tier only and leaves the (looser)
+//! speedup floor to CI's jq gate.
+
+use equilibrium::cluster::{dump, snapshot};
+use equilibrium::generator::hyperscale::{self, HyperscaleSpec};
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
+use equilibrium::util::parallel;
+use equilibrium::util::units::{fmt_bytes_f, fmt_duration};
+use std::time::Instant;
+
+/// Cluster-generation seed — the hyperscale bench's, so the tiers are
+/// the exact clusters that bench already pins.
+const SEED: u64 = 0xD47AC;
+
+/// Full-mode gate: binary load speedup floor at the 1k tier.
+const LOAD_SPEEDUP_FLOOR: f64 = 10.0;
+
+/// Best-of-N wall time of one operation (N small; these are
+/// deterministic single-threaded codecs, min filters scheduler noise).
+fn time_best<T>(reps: usize, mut op: impl FnMut() -> T) -> (f64, T) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let v = op();
+        best = best.min(t0.elapsed().as_secs_f64());
+        out = Some(v);
+    }
+    (best, out.expect("reps >= 1"))
+}
+
+fn run_tier(spec: &HyperscaleSpec, smoke: bool) -> Json {
+    println!("\n=== tier {} ({} OSDs) ===", spec.name, spec.osd_count());
+    let state = hyperscale::build(spec, SEED);
+    let pgs = state.pg_count();
+    let reps = if smoke { 3 } else { 2 };
+
+    let (json_dump_secs, json_text) = time_best(reps, || dump::dump(&state));
+    let json_bytes = json_text.len();
+    println!("  json dump   {} ({})", fmt_duration(json_dump_secs), fmt_bytes_f(json_bytes as f64));
+    let (json_load_secs, json_state) = time_best(reps, || dump::load(&json_text).expect("own dump"));
+    println!("  json load   {}", fmt_duration(json_load_secs));
+
+    let (bin_encode_secs, bin_bytes) = time_best(reps, || snapshot::encode(&state));
+    println!(
+        "  bin encode  {} ({})",
+        fmt_duration(bin_encode_secs),
+        fmt_bytes_f(bin_bytes.len() as f64)
+    );
+    let (bin_decode_secs, bin_state) =
+        time_best(reps, || snapshot::decode(&bin_bytes).expect("own encoding"));
+    println!("  bin decode  {}", fmt_duration(bin_decode_secs));
+
+    // full-state equivalence, both formats, at memcpy speed: the
+    // encoder is deterministic, so byte-equal re-encodings mean equal
+    // states
+    assert_eq!(
+        snapshot::encode(&bin_state),
+        bin_bytes,
+        "tier {}: decode(encode(s)) must re-encode byte-identically",
+        spec.name
+    );
+    assert_eq!(
+        snapshot::encode(&json_state),
+        bin_bytes,
+        "tier {}: the JSON round-trip must agree with the binary one",
+        spec.name
+    );
+
+    let dump_speedup = json_dump_secs / bin_encode_secs;
+    let load_speedup = json_load_secs / bin_decode_secs;
+    let size_ratio = json_bytes as f64 / bin_bytes.len() as f64;
+    println!(
+        "  speedup     dump {dump_speedup:.1}x, load {load_speedup:.1}x, {size_ratio:.1}x smaller"
+    );
+    if !smoke && spec.name == "1k" {
+        assert!(
+            load_speedup >= LOAD_SPEEDUP_FLOOR,
+            "RFC 0007 gate: binary load must be ≥{LOAD_SPEEDUP_FLOOR}x faster than JSON \
+             at the 1k tier (got {load_speedup:.1}x)"
+        );
+    }
+
+    // the cross-thread-count determinism artifact CI byte-compares
+    let out_dir = std::path::Path::new("target/snapshot");
+    std::fs::create_dir_all(out_dir).expect("create target/snapshot");
+    let out = out_dir.join(format!("tier_{}.eqsnap", spec.name));
+    std::fs::write(&out, &bin_bytes).expect("write tier snapshot");
+    println!("  wrote       {}", out.display());
+
+    Json::obj()
+        .set("tier", spec.name)
+        .set("osds", state.osd_count() as u64)
+        .set("pgs", pgs)
+        .set(
+            "json",
+            Json::obj()
+                .set("dump_seconds", json_dump_secs)
+                .set("load_seconds", json_load_secs)
+                .set("bytes", json_bytes),
+        )
+        .set(
+            "binary",
+            Json::obj()
+                .set("encode_seconds", bin_encode_secs)
+                .set("decode_seconds", bin_decode_secs)
+                .set("bytes", bin_bytes.len()),
+        )
+        .set("dump_speedup", dump_speedup)
+        .set("load_speedup", load_speedup)
+        .set("size_ratio", size_ratio)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let tiers: &[&HyperscaleSpec] = if smoke {
+        &[&hyperscale::SMOKE]
+    } else {
+        &[&hyperscale::TIER_1K, &hyperscale::TIER_4K]
+    };
+    println!(
+        "snapshot bench — JSON dump vs binary .eqsnap (RFC 0007); ambient threads: {}",
+        parallel::threads()
+    );
+
+    let rows: Vec<Json> = tiers.iter().map(|spec| run_tier(spec, smoke)).collect();
+
+    let doc = Json::obj()
+        .set("bench", "snapshot")
+        .set("smoke", smoke)
+        .set("ambient_threads", parallel::threads() as u64)
+        .set("seed", SEED)
+        .set("tiers", Json::Arr(rows));
+    write_bench_json("snapshot", &doc);
+
+    if smoke {
+        println!("smoke mode: speedup floor left to CI's jq gate");
+    } else {
+        println!("gates passed: binary load ≥{LOAD_SPEEDUP_FLOOR}x JSON load at the 1k tier");
+    }
+}

@@ -124,6 +124,21 @@ impl Slot {
     pub fn is(self, osd: OsdId) -> bool {
         self.0 == osd
     }
+
+    /// The packed 4-byte representation — the binary snapshot wire
+    /// format stores acting columns as these raw words verbatim.
+    #[inline]
+    pub(crate) fn raw(self) -> u32 {
+        self.0
+    }
+
+    /// Rehydrate from the packed representation. `u32::MAX` is the hole
+    /// sentinel; any other value is an OSD id (the snapshot decoder
+    /// range-checks before calling this).
+    #[inline]
+    pub(crate) fn from_raw(v: u32) -> Slot {
+        Slot(v)
+    }
 }
 
 /// "No upmap exceptions" marker in the offset table.
@@ -410,6 +425,42 @@ impl PgArena {
         range.map(PgIdx)
     }
 
+    /// Total acting-table entries across all stripes (the flat column's
+    /// length) — sized checks for bulk column installs.
+    #[inline]
+    pub fn acting_len(&self) -> usize {
+        self.acting.len()
+    }
+
+    /// The contiguous column slices of one pool's stripe:
+    /// `(shard_bytes, acting)`. The snapshot encoder walks stripes in
+    /// ascending pool-id order and writes these verbatim, so the wire
+    /// layout is PgId order regardless of stripe creation order.
+    pub(crate) fn stripe_slices(&self, rank: usize) -> (&[u64], &[Slot]) {
+        let s = &self.stripes[rank];
+        let pgs = (s.first as usize, s.first as usize + s.count as usize);
+        let acting_len = s.count as usize * s.slots as usize;
+        (
+            &self.shard_bytes[pgs.0..pgs.1],
+            &self.acting[s.acting_base..s.acting_base + acting_len],
+        )
+    }
+
+    /// Bulk-install whole columns over a freshly built arena whose
+    /// stripes were pushed in ascending pool-id order (so arena order ==
+    /// PgId order == the wire order). Panics on length mismatch — the
+    /// decoders validate sizes before calling.
+    pub(crate) fn install_columns(&mut self, shard_bytes: Vec<u64>, acting: Vec<Slot>) {
+        assert_eq!(shard_bytes.len(), self.shard_bytes.len(), "shard_bytes column length");
+        assert_eq!(acting.len(), self.acting.len(), "acting column length");
+        debug_assert!(
+            self.rank_of.iter().enumerate().all(|(i, &(_, rank))| rank as usize == i),
+            "bulk install requires stripes in ascending pool-id order"
+        );
+        self.shard_bytes = shard_bytes;
+        self.acting = acting;
+    }
+
     /// Materialize the PG at `idx` as an owned [`Pg`] (boundary use).
     pub fn to_pg(&self, idx: PgIdx) -> Pg {
         Pg {
@@ -651,6 +702,43 @@ mod tests {
         assert_eq!(a.pool_range(5).count(), 2);
         assert_eq!(a.pool_range(3).next(), Some(PgIdx(6)));
         assert_eq!(a.pool_range(42).count(), 0);
+    }
+
+    #[test]
+    fn stripe_slices_cover_columns_and_bulk_install_round_trips() {
+        let mut a = arena();
+        a.set_shard_bytes(PgIdx(0), 10);
+        a.set_shard_bytes(PgIdx(5), 60);
+        a.set_acting(PgIdx(0), &[Some(7), Some(8), Some(9)]);
+        a.set_acting(PgIdx(4), &[Some(1), None, Some(2), None, Some(3), None]);
+
+        // slices in ascending pool-id order concatenate to the columns
+        let mut bytes: Vec<u64> = Vec::new();
+        let mut acting: Vec<Slot> = Vec::new();
+        for &(_, rank) in &[(1u32, 0u32), (5, 1)] {
+            let (b, s) = a.stripe_slices(rank as usize);
+            bytes.extend_from_slice(b);
+            acting.extend_from_slice(s);
+        }
+        assert_eq!(bytes.len(), a.len());
+        assert_eq!(acting.len(), a.acting_len());
+        assert_eq!(bytes[0], 10);
+        assert_eq!(bytes[5], 60);
+
+        // bulk install onto a same-shape arena reproduces every view
+        let mut fresh = arena();
+        fresh.install_columns(bytes, acting);
+        for idx in a.iter() {
+            assert_eq!(fresh.shard_bytes_at(idx), a.shard_bytes_at(idx));
+            assert_eq!(fresh.acting_at(idx), a.acting_at(idx));
+        }
+    }
+
+    #[test]
+    fn slot_raw_round_trips_holes() {
+        assert_eq!(Slot::from_raw(Slot::HOLE.raw()), Slot::HOLE);
+        assert_eq!(Slot::from_raw(Slot::osd(12).raw()), Slot::osd(12));
+        assert_eq!(Slot::HOLE.raw(), u32::MAX);
     }
 
     #[test]

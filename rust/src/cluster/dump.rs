@@ -11,11 +11,11 @@ use std::collections::BTreeMap;
 
 use crate::crush::types::{Bucket, Device, DeviceClass, Level, NodeId, Rule, Step};
 use crate::crush::{from_parts, CrushMap, OsdId};
-use crate::util::json::Json;
+use crate::util::json::{self, Json};
 
 use super::pg::{Pg, PgId};
 use super::pool::{Pool, PoolKind, Redundancy};
-use super::state::ClusterState;
+use super::state::{AssembleError, ClusterState};
 
 /// Errors while loading a dump.
 #[derive(Debug)]
@@ -57,6 +57,12 @@ impl From<crate::util::json::JsonError> for DumpError {
 impl From<crate::crush::BuildError> for DumpError {
     fn from(e: crate::crush::BuildError) -> DumpError {
         DumpError::Crush(e)
+    }
+}
+
+impl From<AssembleError> for DumpError {
+    fn from(e: AssembleError) -> DumpError {
+        DumpError::Format(e.to_string())
     }
 }
 
@@ -145,90 +151,86 @@ fn step_from_json(j: &Json) -> Result<Step, DumpError> {
     })
 }
 
+fn device_json(d: &Device) -> Json {
+    Json::obj()
+        .set("id", d.id as u64)
+        .set("weight", d.weight)
+        .set("class", d.class.as_str())
+}
+
+fn bucket_json(b: &Bucket) -> Json {
+    Json::obj()
+        .set("id", b.id as i64)
+        .set("name", b.name.as_str())
+        .set("level", b.level.as_str())
+        .set("children", Json::Arr(b.children.iter().map(|&c| Json::from(c as i64)).collect()))
+}
+
+fn rule_json(r: &Rule) -> Json {
+    Json::obj()
+        .set("id", r.id as u64)
+        .set("name", r.name.as_str())
+        .set("steps", Json::Arr(r.steps.iter().map(step_to_json).collect()))
+}
+
+fn pool_json(p: &Pool) -> Json {
+    let j = Json::obj()
+        .set("id", p.id as u64)
+        .set("name", p.name.as_str())
+        .set("pg_count", p.pg_count as u64)
+        .set("rule_id", p.rule_id as u64)
+        .set(
+            "kind",
+            match p.kind {
+                PoolKind::UserData => "data",
+                PoolKind::Metadata => "metadata",
+            },
+        );
+    match p.redundancy {
+        Redundancy::Replicated { size } => j.set("type", "replicated").set("size", size as u64),
+        Redundancy::Erasure { k, m } => {
+            j.set("type", "erasure").set("k", k as u64).set("m", m as u64)
+        }
+    }
+}
+
+fn pg_json(pg: &super::pg::PgView<'_>) -> Json {
+    Json::obj()
+        .set("pool", pg.id().pool as u64)
+        .set("index", pg.id().index as u64)
+        .set("shard_bytes", pg.shard_bytes())
+        .set(
+            "acting",
+            Json::Arr(
+                pg.acting()
+                    .iter()
+                    .map(|s| match s.get() {
+                        Some(o) => Json::from(o as u64),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+fn upmap_json(id: PgId, items: &[(OsdId, OsdId)]) -> Json {
+    Json::obj()
+        .set("pool", id.pool as u64)
+        .set("index", id.index as u64)
+        .set(
+            "items",
+            Json::Arr(items.iter().map(|&(a, b)| Json::from(vec![a as u64, b as u64])).collect()),
+        )
+}
+
 /// Serialize a full cluster state to a JSON value.
 pub fn to_json(state: &ClusterState) -> Json {
     let crush = &state.crush;
-    let devices: Vec<Json> = crush
-        .devices
-        .iter()
-        .map(|d| {
-            Json::obj()
-                .set("id", d.id as u64)
-                .set("weight", d.weight)
-                .set("class", d.class.as_str())
-        })
-        .collect();
-    let buckets: Vec<Json> = crush
-        .buckets
-        .values()
-        .map(|b| {
-            Json::obj()
-                .set("id", b.id as i64)
-                .set("name", b.name.as_str())
-                .set("level", b.level.as_str())
-                .set(
-                    "children",
-                    Json::Arr(b.children.iter().map(|&c| Json::from(c as i64)).collect()),
-                )
-        })
-        .collect();
-    let rules: Vec<Json> = crush
-        .rules
-        .values()
-        .map(|r| {
-            Json::obj()
-                .set("id", r.id as u64)
-                .set("name", r.name.as_str())
-                .set("steps", Json::Arr(r.steps.iter().map(step_to_json).collect()))
-        })
-        .collect();
-    let pools: Vec<Json> = state
-        .pools
-        .values()
-        .map(|p| {
-            let j = Json::obj()
-                .set("id", p.id as u64)
-                .set("name", p.name.as_str())
-                .set("pg_count", p.pg_count as u64)
-                .set("rule_id", p.rule_id as u64)
-                .set(
-                    "kind",
-                    match p.kind {
-                        PoolKind::UserData => "data",
-                        PoolKind::Metadata => "metadata",
-                    },
-                );
-            match p.redundancy {
-                Redundancy::Replicated { size } => {
-                    j.set("type", "replicated").set("size", size as u64)
-                }
-                Redundancy::Erasure { k, m } => {
-                    j.set("type", "erasure").set("k", k as u64).set("m", m as u64)
-                }
-            }
-        })
-        .collect();
-    let pgs: Vec<Json> = state
-        .pgs()
-        .map(|pg| {
-            Json::obj()
-                .set("pool", pg.id().pool as u64)
-                .set("index", pg.id().index as u64)
-                .set("shard_bytes", pg.shard_bytes())
-                .set(
-                    "acting",
-                    Json::Arr(
-                        pg.acting()
-                            .iter()
-                            .map(|s| match s.get() {
-                                Some(o) => Json::from(o as u64),
-                                None => Json::Null,
-                            })
-                            .collect(),
-                    ),
-                )
-        })
-        .collect();
+    let devices: Vec<Json> = crush.devices.iter().map(device_json).collect();
+    let buckets: Vec<Json> = crush.buckets.values().map(bucket_json).collect();
+    let rules: Vec<Json> = crush.rules.values().map(rule_json).collect();
+    let pools: Vec<Json> = state.pools.values().map(pool_json).collect();
+    let pgs: Vec<Json> = state.pgs().map(|pg| pg_json(&pg)).collect();
     let upmap: Vec<Json> = state
         .pgs()
         .filter_map(|pg| {
@@ -236,20 +238,7 @@ pub fn to_json(state: &ClusterState) -> Json {
             if items.is_empty() {
                 return None;
             }
-            Some(
-                Json::obj()
-                    .set("pool", pg.id().pool as u64)
-                    .set("index", pg.id().index as u64)
-                    .set(
-                        "items",
-                        Json::Arr(
-                            items
-                                .iter()
-                                .map(|&(a, b)| Json::from(vec![a as u64, b as u64]))
-                                .collect(),
-                        ),
-                    ),
-            )
+            Some(upmap_json(pg.id(), items))
         })
         .collect();
 
@@ -268,9 +257,102 @@ pub fn to_json(state: &ClusterState) -> Json {
         .set("upmap", Json::Arr(upmap))
 }
 
-/// Serialize to a pretty JSON string.
+/// Render one dump section — a JSON array value — into `out` at `depth`,
+/// streaming each element through the shared `Json::write` so the bytes
+/// are identical to rendering the whole tree at once, without holding
+/// more than one element's `Json` in memory.
+fn write_section(out: &mut String, items: impl Iterator<Item = Json>, depth: usize) {
+    let mut first = true;
+    for item in items {
+        if first {
+            out.push('[');
+            first = false;
+        } else {
+            out.push(',');
+        }
+        json::newline_indent(out, Some(2), depth + 1);
+        item.write(out, Some(2), depth + 1);
+    }
+    if first {
+        out.push_str("[]");
+    } else {
+        json::newline_indent(out, Some(2), depth);
+        out.push(']');
+    }
+}
+
+/// Write one `"key": ` prefix of a pretty object member at `depth`.
+fn write_key(out: &mut String, first: bool, key: &str, depth: usize) {
+    if !first {
+        out.push(',');
+    }
+    json::newline_indent(out, Some(2), depth);
+    json::write_escaped(out, key);
+    out.push_str(": ");
+}
+
+/// Serialize to a pretty JSON string — byte-identical to
+/// `to_json(state).pretty()` (pinned by a regression test), but streamed
+/// section by section through one output buffer pre-sized from the
+/// cluster's shape. The historical path materialized the entire nested
+/// `Json` tree (one `BTreeMap`/`Vec` node per PG and per acting slot)
+/// before rendering a single byte; at the million-PG tier that tree
+/// dwarfed the text it produced.
 pub fn dump(state: &ClusterState) -> String {
-    to_json(state).pretty()
+    let crush = &state.crush;
+    let acting_entries = state.arena().acting_len();
+    // generous per-element text estimates; a few % over is fine, a
+    // reallocation storm is not
+    let estimate = 256
+        + crush.devices.len() * 100
+        + crush.buckets.len() * 140
+        + crush.buckets.values().map(|b| b.children.len() * 8).sum::<usize>()
+        + crush.rules.len() * 340
+        + state.pools.len() * 230
+        + state.pg_count() * 110
+        + acting_entries * 14
+        + state.upmap_entry_count() * 140;
+    let mut out = String::with_capacity(estimate);
+
+    out.push('{');
+    // top-level keys in BTreeMap (sorted) order: crush, format, pgs,
+    // pools, upmap, version
+    write_key(&mut out, true, "crush", 1);
+    {
+        out.push('{');
+        write_key(&mut out, true, "buckets", 2);
+        write_section(&mut out, crush.buckets.values().map(bucket_json), 2);
+        write_key(&mut out, false, "devices", 2);
+        write_section(&mut out, crush.devices.iter().map(device_json), 2);
+        write_key(&mut out, false, "rules", 2);
+        write_section(&mut out, crush.rules.values().map(rule_json), 2);
+        json::newline_indent(&mut out, Some(2), 1);
+        out.push('}');
+    }
+    write_key(&mut out, false, "format", 1);
+    json::write_escaped(&mut out, "equilibrium-cluster-dump");
+    write_key(&mut out, false, "pgs", 1);
+    write_section(&mut out, state.pgs().map(|pg| pg_json(&pg)), 1);
+    write_key(&mut out, false, "pools", 1);
+    write_section(&mut out, state.pools.values().map(pool_json), 1);
+    write_key(&mut out, false, "upmap", 1);
+    write_section(
+        &mut out,
+        state.pgs().filter_map(|pg| {
+            let items = state.upmap_items(pg.id());
+            if items.is_empty() {
+                None
+            } else {
+                Some(upmap_json(pg.id(), items))
+            }
+        }),
+        1,
+    );
+    write_key(&mut out, false, "version", 1);
+    json::write_num(&mut out, 1.0);
+    json::newline_indent(&mut out, Some(2), 0);
+    out.push('}');
+    out
 }
 
 /// Load a cluster state from JSON text.
@@ -387,51 +469,11 @@ pub fn load(text: &str) -> Result<ClusterState, DumpError> {
         upmap.insert(PgId::new(pool, index), items);
     }
 
-    // the columnar arena materializes every (pool, 0..pg_count) slot, so
-    // a dump must describe each pool completely and reference nothing
-    // outside the declared pools — validate before from_parts panics
-    let mut seen: BTreeMap<u32, Vec<bool>> = pools
-        .iter()
-        .map(|p| (p.id, vec![false; p.pg_count as usize]))
-        .collect();
-    let slots_of: BTreeMap<u32, usize> =
-        pools.iter().map(|p| (p.id, p.redundancy.shard_count())).collect();
-    for pg in &pgs {
-        let Some(flags) = seen.get_mut(&pg.id.pool) else {
-            return Err(DumpError::Format(format!("pg {} references unknown pool", pg.id)));
-        };
-        let Some(flag) = flags.get_mut(pg.id.index as usize) else {
-            return Err(DumpError::Format(format!("pg {} is beyond its pool's pg_count", pg.id)));
-        };
-        if *flag {
-            return Err(DumpError::Format(format!("pg {} is listed twice", pg.id)));
-        }
-        *flag = true;
-        if pg.acting.len() != slots_of[&pg.id.pool] {
-            return Err(DumpError::Format(format!(
-                "pg {} has {} acting slots, its pool's redundancy needs {}",
-                pg.id,
-                pg.acting.len(),
-                slots_of[&pg.id.pool]
-            )));
-        }
-    }
-    for (pool, flags) in &seen {
-        if let Some(missing) = flags.iter().position(|&f| !f) {
-            return Err(DumpError::Format(format!("pool {pool} is missing pg {pool}.{missing:x}")));
-        }
-    }
-    for id in upmap.keys() {
-        let known = seen
-            .get(&id.pool)
-            .map(|flags| (id.index as usize) < flags.len())
-            .unwrap_or(false);
-        if !known {
-            return Err(DumpError::Format(format!("upmap entry references unknown pg {id}")));
-        }
-    }
-
-    Ok(ClusterState::from_parts(crush, pools, pgs, upmap))
+    // assemble through the shared checked constructor — the same choke
+    // point the binary snapshot decoder uses, so every boundary format
+    // gets identical coverage/width/range validation (typed, no panics)
+    let (shard_bytes, acting) = ClusterState::columns_from_pgs(&pools, pgs)?;
+    Ok(ClusterState::from_columns(crush, pools, shard_bytes, acting, upmap)?)
 }
 
 #[cfg(test)]
@@ -524,5 +566,62 @@ mod tests {
         let s = cluster();
         let text = dump(&s).replace("\"id\": 5", "\"id\": 17");
         assert!(load(&text).is_err());
+    }
+
+    #[test]
+    fn streamed_dump_matches_tree_render() {
+        let mut s = cluster();
+        let pg = s.pgs().next().unwrap().id();
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let to = (0..s.osd_count() as OsdId)
+            .find(|&o| !s.pg(pg).unwrap().on(o) && s.osd_class(o) == s.osd_class(from))
+            .unwrap();
+        s.apply_movement(pg, from, to).unwrap();
+
+        // the streaming writer is a perf rewrite of `to_json(..).pretty()`;
+        // the dump format is byte-pinned, so the two must never diverge
+        assert_eq!(dump(&s), to_json(&s).pretty());
+    }
+
+    #[test]
+    fn dump_buffer_is_presized() {
+        let s = cluster();
+        let text = dump(&s);
+        // the estimate must cover the real output (no reallocation storm)
+        // without being wildly oversized
+        assert!(text.capacity() >= text.len());
+        assert!(text.capacity() < text.len() * 4, "estimate overshoots 4x");
+    }
+
+    #[test]
+    fn hostile_acting_osd_is_a_typed_error_not_a_panic() {
+        let s = cluster();
+        // point one acting shard at osd.999 on the 6-device map — this
+        // used to sail past load() and panic inside index_pg; now the
+        // shared from_columns choke point rejects it with a typed error
+        let text = hostile_swap(&dump(&s));
+        match load(&text) {
+            Err(DumpError::Format(msg)) => {
+                assert!(msg.contains("osd.999"), "message names the osd: {msg}")
+            }
+            other => panic!("expected typed format error, got {other:?}"),
+        }
+    }
+
+    /// Replace the first acting osd id in `text` with 999, keeping the
+    /// document otherwise valid JSON.
+    fn hostile_swap(text: &str) -> String {
+        let start = text.find("\"acting\": [").expect("dump has acting arrays");
+        let open = start + "\"acting\": [".len();
+        let close = text[open..].find(']').unwrap() + open;
+        let body = &text[open..close];
+        let first_num: String = body
+            .chars()
+            .skip_while(|c| !c.is_ascii_digit())
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        assert!(!first_num.is_empty(), "acting block has a numeric slot");
+        let new_body = body.replacen(&first_num, "999", 1);
+        format!("{}{}{}", &text[..open], new_body, &text[close..])
     }
 }

@@ -5,7 +5,9 @@
 //! SoA columns (`PgIdx`-keyed ids/sizes/acting/upmap plus the dense
 //! per-OSD/per-pool shard matrix) that [`state::ClusterState`] and every
 //! hot loop above it iterate; `BTreeMap` views survive only at the
-//! [`dump`] serialization boundary.
+//! [`dump`] serialization boundary. [`snapshot`] is the binary twin of
+//! [`dump`] (RFC 0007): the same state as raw little-endian columns with
+//! an integrity digest, negotiated by file extension (`.eqsnap`).
 #![warn(missing_docs)]
 
 pub mod aggregates;
@@ -16,6 +18,7 @@ pub mod health;
 pub mod pg;
 pub mod pool;
 pub mod recovery;
+pub mod snapshot;
 pub mod state;
 
 pub use aggregates::{Aggregates, PoolAggregates};
@@ -24,4 +27,5 @@ pub use expand::{add_hosts, ExpandError, HostSpec};
 pub use pg::{Movement, Pg, PgId, PgView};
 pub use pool::{Pool, PoolKind, Redundancy};
 pub use recovery::{fail_osd, random_up_osd, FailureReport};
-pub use state::{ClusterState, StateError};
+pub use snapshot::SnapshotError;
+pub use state::{AssembleError, ClusterState, StateError};

@@ -1,0 +1,782 @@
+//! Zero-copy binary snapshot format (`.eqsnap`, RFC 0007).
+//!
+//! The JSON dump ([`super::dump`]) is the human-auditable interchange
+//! format, but at the hyperscale tiers (RFC 0006) its cost is dominated
+//! by text: a million-PG cluster renders hundreds of MiB of JSON and
+//! parsing it back walks a per-element tree. This module serializes the
+//! same state straight from the arena's columnar storage — `shard_bytes`
+//! as a raw little-endian `u64` column, acting sets as packed `Slot`
+//! words, the up/down set as raw bitset words — so encode is a handful
+//! of `memcpy`-shaped column writes and decode is bulk column reads into
+//! [`ClusterState::from_columns`], the same validation choke point the
+//! JSON loader uses.
+//!
+//! ## Wire layout (version 1)
+//!
+//! ```text
+//! magic  b"EQSNAP"                      6 bytes
+//! version u16 = 1                       2 bytes
+//! section count u32                     4 bytes
+//! section table: per section
+//!   tag u32, offset u64, len u64       20 bytes each
+//! section payloads                      (offsets from file start)
+//! digest u64                            FNV-1a over all preceding bytes
+//! ```
+//!
+//! Sections (all integers little-endian): `CRUSH` (devices, buckets,
+//! rules), `POOLS` (ascending id), `SHARD_BYTES` (u64 column in PgId
+//! order), `ACTING` (raw `Slot` u32 column in PgId order), `UPMAP`
+//! (offset-table entries in PgId order), `OSD_STATE` (capacity column +
+//! up/down bitset words — state the JSON format derives from CRUSH
+//! weights instead of persisting).
+//!
+//! ## Evolution policy
+//!
+//! Additive changes append new section tags — old readers skip unknown
+//! tags, so a version bump is only needed when an existing section's
+//! layout changes. Readers reject any version they do not know.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::crush::types::{Bucket, Device, DeviceClass, Level, NodeId, Rule, Step};
+use crate::crush::{from_parts, BuildError, CrushMap, OsdId};
+use crate::util::bitset::BitSet;
+use crate::util::codec::{fnv1a64, ByteReader, ByteWriter, CodecError};
+
+use super::dump::{self, DumpError};
+use super::pg::PgId;
+use super::pool::{Pool, PoolKind, Redundancy};
+use super::state::{AssembleError, ClusterState};
+
+/// File magic: the first six bytes of every binary snapshot.
+pub const MAGIC: &[u8; 6] = b"EQSNAP";
+/// Current wire format version.
+pub const FORMAT_VERSION: u16 = 1;
+/// File extension that selects the binary format at CLI boundaries.
+pub const BINARY_EXTENSION: &str = "eqsnap";
+
+const SEC_CRUSH: u32 = 1;
+const SEC_POOLS: u32 = 2;
+const SEC_SHARD_BYTES: u32 = 3;
+const SEC_ACTING: u32 = 4;
+const SEC_UPMAP: u32 = 5;
+const SEC_OSD_STATE: u32 = 6;
+const SECTIONS: [u32; 6] =
+    [SEC_CRUSH, SEC_POOLS, SEC_SHARD_BYTES, SEC_ACTING, SEC_UPMAP, SEC_OSD_STATE];
+
+fn section_name(tag: u32) -> &'static str {
+    match tag {
+        SEC_CRUSH => "CRUSH",
+        SEC_POOLS => "POOLS",
+        SEC_SHARD_BYTES => "SHARD_BYTES",
+        SEC_ACTING => "ACTING",
+        SEC_UPMAP => "UPMAP",
+        SEC_OSD_STATE => "OSD_STATE",
+        _ => "unknown",
+    }
+}
+
+/// Errors while reading or writing a snapshot. Hostile bytes always
+/// surface as one of these — never a panic.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The file does not start with the `EQSNAP` magic.
+    Magic,
+    /// The file declares a wire version this reader does not know.
+    Version(u16),
+    /// The trailing FNV-1a digest does not match the file contents.
+    Digest {
+        /// Digest stored in the file.
+        stored: u64,
+        /// Digest recomputed over the file bytes.
+        computed: u64,
+    },
+    /// A section-table entry points outside the file.
+    SectionBounds(u32),
+    /// A section this version requires is absent.
+    MissingSection(u32),
+    /// A primitive field could not be decoded (truncation, bad UTF-8,
+    /// hostile length).
+    Codec(CodecError),
+    /// Structurally decodable bytes that are not a valid cluster.
+    Format(String),
+    /// The embedded CRUSH map failed validation.
+    Crush(BuildError),
+    /// The decoded columns failed cluster assembly validation.
+    Assemble(AssembleError),
+    /// A JSON-side error from the extension-negotiated text path.
+    Dump(DumpError),
+    /// Filesystem error from [`save_state`] / [`load_state`].
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Magic => write!(f, "not an eqsnap snapshot (bad magic)"),
+            SnapshotError::Version(v) => {
+                write!(f, "unsupported snapshot version {v} (reader knows {FORMAT_VERSION})")
+            }
+            SnapshotError::Digest { stored, computed } => write!(
+                f,
+                "integrity digest mismatch (file says {stored:#018x}, contents hash to \
+                 {computed:#018x})"
+            ),
+            SnapshotError::SectionBounds(tag) => {
+                write!(f, "section {} table entry points outside the file", section_name(*tag))
+            }
+            SnapshotError::MissingSection(tag) => {
+                write!(f, "required section {} is missing", section_name(*tag))
+            }
+            SnapshotError::Codec(e) => write!(f, "decode: {e}"),
+            SnapshotError::Format(msg) => write!(f, "snapshot format: {msg}"),
+            SnapshotError::Crush(e) => write!(f, "crush: {e}"),
+            SnapshotError::Assemble(e) => write!(f, "assemble: {e}"),
+            SnapshotError::Dump(e) => write!(f, "{e}"),
+            SnapshotError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SnapshotError::Codec(e) => Some(e),
+            SnapshotError::Crush(e) => Some(e),
+            SnapshotError::Assemble(e) => Some(e),
+            SnapshotError::Dump(e) => Some(e),
+            SnapshotError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CodecError> for SnapshotError {
+    fn from(e: CodecError) -> SnapshotError {
+        SnapshotError::Codec(e)
+    }
+}
+
+impl From<BuildError> for SnapshotError {
+    fn from(e: BuildError) -> SnapshotError {
+        SnapshotError::Crush(e)
+    }
+}
+
+impl From<AssembleError> for SnapshotError {
+    fn from(e: AssembleError) -> SnapshotError {
+        SnapshotError::Assemble(e)
+    }
+}
+
+impl From<DumpError> for SnapshotError {
+    fn from(e: DumpError) -> SnapshotError {
+        SnapshotError::Dump(e)
+    }
+}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> SnapshotError {
+        SnapshotError::Io(e)
+    }
+}
+
+// ---- encode -----------------------------------------------------------------
+
+fn class_tag(c: DeviceClass) -> u8 {
+    DeviceClass::ALL.iter().position(|&x| x == c).unwrap() as u8
+}
+
+fn class_from(tag: u8) -> Option<DeviceClass> {
+    DeviceClass::ALL.get(tag as usize).copied()
+}
+
+const LEVELS: [Level; Level::COUNT] =
+    [Level::Osd, Level::Host, Level::Rack, Level::Row, Level::Datacenter, Level::Root];
+
+fn level_tag(l: Level) -> u8 {
+    l.rank() as u8
+}
+
+fn level_from(tag: u8) -> Option<Level> {
+    LEVELS.get(tag as usize).copied()
+}
+
+/// Upper bound on the encoded size, computed from the arena's column
+/// lengths — the encoder pre-sizes its buffer with this so large
+/// snapshots serialize without reallocation.
+pub fn encoded_size_estimate(state: &ClusterState) -> usize {
+    let arena = state.arena();
+    let crush = &state.crush;
+    // header + table + digest, then per-element wire widths (strings
+    // padded by their length-prefix overhead)
+    140 + crush.devices.len() * 9
+        + crush
+            .buckets
+            .values()
+            .map(|b| 13 + b.name.len() + 4 * b.children.len())
+            .sum::<usize>()
+        + crush
+            .rules
+            .values()
+            .map(|r| 12 + r.name.len() + r.steps.len() * 16 + r.steps.iter().map(step_text_len).sum::<usize>())
+            .sum::<usize>()
+        + state.pools.values().map(|p| 32 + p.name.len()).sum::<usize>()
+        + 8
+        + arena.len() * 8
+        + 8
+        + arena.acting_len() * 4
+        + 4
+        + state.upmap_entry_count() * 20
+        + state
+            .pgs()
+            .map(|pg| state.upmap_items(pg.id()).len() * 8)
+            .sum::<usize>()
+        + 4
+        + state.osd_count() * 8
+        + state.osd_count().div_ceil(64) * 8
+}
+
+fn step_text_len(s: &Step) -> usize {
+    match s {
+        Step::Take { root, .. } => root.len(),
+        _ => 0,
+    }
+}
+
+fn encode_step(w: &mut ByteWriter, s: &Step) {
+    match s {
+        Step::Take { root, class } => {
+            w.put_u8(0);
+            w.put_str(root);
+            match class {
+                Some(c) => w.put_u8(class_tag(*c)),
+                None => w.put_u8(u8::MAX),
+            }
+        }
+        Step::ChooseFirstN { num, level } => {
+            w.put_u8(1);
+            w.put_i32(*num);
+            w.put_u8(level_tag(*level));
+        }
+        Step::ChooseLeafFirstN { num, level } => {
+            w.put_u8(2);
+            w.put_i32(*num);
+            w.put_u8(level_tag(*level));
+        }
+        Step::ChooseIndep { num, level } => {
+            w.put_u8(3);
+            w.put_i32(*num);
+            w.put_u8(level_tag(*level));
+        }
+        Step::ChooseLeafIndep { num, level } => {
+            w.put_u8(4);
+            w.put_i32(*num);
+            w.put_u8(level_tag(*level));
+        }
+        Step::Emit => w.put_u8(5),
+    }
+}
+
+fn encode_crush(w: &mut ByteWriter, crush: &CrushMap) {
+    // devices: ids are dense, so only weight + class go on the wire
+    w.put_u32(crush.devices.len() as u32);
+    for d in &crush.devices {
+        w.put_f64(d.weight);
+        w.put_u8(class_tag(d.class));
+    }
+    w.put_u32(crush.buckets.len() as u32);
+    for b in crush.buckets.values() {
+        w.put_i32(b.id);
+        w.put_str(&b.name);
+        w.put_u8(level_tag(b.level));
+        w.put_u32(b.children.len() as u32);
+        for &c in &b.children {
+            w.put_i32(c);
+        }
+    }
+    w.put_u32(crush.rules.len() as u32);
+    for r in crush.rules.values() {
+        w.put_u32(r.id);
+        w.put_str(&r.name);
+        w.put_u32(r.steps.len() as u32);
+        for s in &r.steps {
+            encode_step(w, s);
+        }
+    }
+}
+
+fn encode_pools(w: &mut ByteWriter, state: &ClusterState) {
+    w.put_u32(state.pools.len() as u32);
+    for p in state.pools.values() {
+        w.put_u32(p.id);
+        w.put_str(&p.name);
+        w.put_u32(p.pg_count);
+        w.put_u32(p.rule_id);
+        w.put_u8(match p.kind {
+            PoolKind::UserData => 0,
+            PoolKind::Metadata => 1,
+        });
+        match p.redundancy {
+            Redundancy::Replicated { size } => {
+                w.put_u8(0);
+                w.put_u32(size as u32);
+            }
+            Redundancy::Erasure { k, m } => {
+                w.put_u8(1);
+                w.put_u32(k as u32);
+                w.put_u32(m as u32);
+            }
+        }
+    }
+}
+
+/// Serialize a cluster state to the binary wire format.
+pub fn encode(state: &ClusterState) -> Vec<u8> {
+    let arena = state.arena();
+    let mut w = ByteWriter::with_capacity(encoded_size_estimate(state));
+    w.put_bytes(MAGIC);
+    w.put_u16(FORMAT_VERSION);
+    w.put_u32(SECTIONS.len() as u32);
+    let table_at = w.len();
+    for &tag in &SECTIONS {
+        w.put_u32(tag);
+        w.put_u64(0); // offset, patched once the payload lands
+        w.put_u64(0); // len, patched once the payload lands
+    }
+    // wire order for the columns is PgId order (ascending pool id): walk
+    // the stripes through pool_rank so the layout holds even if a future
+    // arena was striped in another order
+    let pool_ids: Vec<u32> = state.pools.keys().copied().collect();
+    for (i, &tag) in SECTIONS.iter().enumerate() {
+        let start = w.len();
+        match tag {
+            SEC_CRUSH => encode_crush(&mut w, &state.crush),
+            SEC_POOLS => encode_pools(&mut w, state),
+            SEC_SHARD_BYTES => {
+                w.put_u64(arena.len() as u64);
+                for &pool in &pool_ids {
+                    let rank = arena.pool_rank(pool).expect("every pool has a stripe");
+                    let (shard_bytes, _) = arena.stripe_slices(rank);
+                    w.put_u64_column(shard_bytes);
+                }
+            }
+            SEC_ACTING => {
+                w.put_u64(arena.acting_len() as u64);
+                for &pool in &pool_ids {
+                    let rank = arena.pool_rank(pool).expect("every pool has a stripe");
+                    let (_, acting) = arena.stripe_slices(rank);
+                    for &slot in acting {
+                        w.put_u32(slot.raw());
+                    }
+                }
+            }
+            SEC_UPMAP => {
+                let table = state.upmap_table();
+                w.put_u32(table.len() as u32);
+                for (id, items) in &table {
+                    w.put_u32(id.pool);
+                    w.put_u32(id.index);
+                    w.put_u32(items.len() as u32);
+                    for &(from, to) in items {
+                        w.put_u32(from);
+                        w.put_u32(to);
+                    }
+                }
+            }
+            SEC_OSD_STATE => {
+                w.put_u32(state.osd_count() as u32);
+                w.put_u64_column(state.osd_sizes());
+                w.put_u64_column(state.osd_up_set().words());
+            }
+            _ => unreachable!("SECTIONS lists every tag"),
+        }
+        let entry = table_at + i * 20;
+        w.patch_u64(entry + 4, start as u64);
+        w.patch_u64(entry + 12, (w.len() - start) as u64);
+    }
+    let digest = fnv1a64(w.as_bytes());
+    w.put_u64(digest);
+    w.into_bytes()
+}
+
+// ---- decode -----------------------------------------------------------------
+
+fn decode_step(r: &mut ByteReader<'_>) -> Result<Step, SnapshotError> {
+    let tag = r.u8()?;
+    let num_level = |r: &mut ByteReader<'_>| -> Result<(i32, Level), SnapshotError> {
+        let num = r.i32()?;
+        let lt = r.u8()?;
+        let level =
+            level_from(lt).ok_or_else(|| SnapshotError::Format(format!("unknown level tag {lt}")))?;
+        Ok((num, level))
+    };
+    Ok(match tag {
+        0 => {
+            let root = r.str()?;
+            let ct = r.u8()?;
+            let class = if ct == u8::MAX {
+                None
+            } else {
+                Some(class_from(ct).ok_or_else(|| {
+                    SnapshotError::Format(format!("unknown device class tag {ct}"))
+                })?)
+            };
+            Step::Take { root, class }
+        }
+        1 => {
+            let (num, level) = num_level(r)?;
+            Step::ChooseFirstN { num, level }
+        }
+        2 => {
+            let (num, level) = num_level(r)?;
+            Step::ChooseLeafFirstN { num, level }
+        }
+        3 => {
+            let (num, level) = num_level(r)?;
+            Step::ChooseIndep { num, level }
+        }
+        4 => {
+            let (num, level) = num_level(r)?;
+            Step::ChooseLeafIndep { num, level }
+        }
+        5 => Step::Emit,
+        other => return Err(SnapshotError::Format(format!("unknown step tag {other}"))),
+    })
+}
+
+fn decode_crush(r: &mut ByteReader<'_>) -> Result<CrushMap, SnapshotError> {
+    let n_devices = r.u32()? as u64;
+    let n_devices = r.check_count(n_devices, 9)?;
+    let mut devices = Vec::with_capacity(n_devices);
+    for id in 0..n_devices {
+        let weight = r.f64()?;
+        let ct = r.u8()?;
+        let class = class_from(ct)
+            .ok_or_else(|| SnapshotError::Format(format!("unknown device class tag {ct}")))?;
+        devices.push(Device { id: id as OsdId, weight, class });
+    }
+    let n_buckets = r.u32()? as u64;
+    let n_buckets = r.check_count(n_buckets, 13)?;
+    let mut buckets: BTreeMap<NodeId, Bucket> = BTreeMap::new();
+    for _ in 0..n_buckets {
+        let id = r.i32()?;
+        let name = r.str()?;
+        let lt = r.u8()?;
+        let level = level_from(lt)
+            .ok_or_else(|| SnapshotError::Format(format!("unknown level tag {lt}")))?;
+        let n_children = r.u32()? as u64;
+        let n_children = r.check_count(n_children, 4)?;
+        let children = r.u32_column(n_children)?.into_iter().map(|c| c as NodeId).collect();
+        buckets.insert(id, Bucket { id, name, level, children });
+    }
+    let n_rules = r.u32()? as u64;
+    let n_rules = r.check_count(n_rules, 9)?;
+    let mut rules = Vec::with_capacity(n_rules);
+    for _ in 0..n_rules {
+        let id = r.u32()?;
+        let name = r.str()?;
+        let n_steps = r.u32()? as u64;
+        let n_steps = r.check_count(n_steps, 1)?;
+        let mut steps = Vec::with_capacity(n_steps);
+        for _ in 0..n_steps {
+            steps.push(decode_step(r)?);
+        }
+        rules.push(Rule { id, name, steps });
+    }
+    Ok(from_parts(devices, buckets, rules)?)
+}
+
+fn decode_pools(r: &mut ByteReader<'_>) -> Result<Vec<Pool>, SnapshotError> {
+    let n = r.u32()? as u64;
+    let n = r.check_count(n, 18)?;
+    let mut pools = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.u32()?;
+        let name = r.str()?;
+        let pg_count = r.u32()?;
+        let rule_id = r.u32()?;
+        let kind = match r.u8()? {
+            0 => PoolKind::UserData,
+            1 => PoolKind::Metadata,
+            t => return Err(SnapshotError::Format(format!("unknown pool kind tag {t}"))),
+        };
+        let redundancy = match r.u8()? {
+            0 => Redundancy::Replicated { size: r.u32()? as usize },
+            1 => Redundancy::Erasure { k: r.u32()? as usize, m: r.u32()? as usize },
+            t => return Err(SnapshotError::Format(format!("unknown redundancy tag {t}"))),
+        };
+        pools.push(Pool { id, name, redundancy, pg_count, rule_id, kind });
+    }
+    Ok(pools)
+}
+
+fn section_reader<'a>(
+    table: &[(u32, usize, usize)],
+    payload: &'a [u8],
+    tag: u32,
+) -> Result<ByteReader<'a>, SnapshotError> {
+    table
+        .iter()
+        .find(|e| e.0 == tag)
+        .map(|&(_, off, len)| ByteReader::new(&payload[off..off + len]))
+        .ok_or(SnapshotError::MissingSection(tag))
+}
+
+fn finish_section(r: &ByteReader<'_>, tag: u32) -> Result<(), SnapshotError> {
+    if r.at_end() {
+        Ok(())
+    } else {
+        Err(SnapshotError::Format(format!(
+            "section {} has {} trailing bytes",
+            section_name(tag),
+            r.remaining()
+        )))
+    }
+}
+
+/// Deserialize a cluster state from binary snapshot bytes. Hostile or
+/// corrupted input yields a typed [`SnapshotError`] — never a panic.
+pub fn decode(bytes: &[u8]) -> Result<ClusterState, SnapshotError> {
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        return Err(SnapshotError::Magic);
+    }
+    let mut header = ByteReader::new(&bytes[MAGIC.len()..]);
+    let version = header.u16()?;
+    if version != FORMAT_VERSION {
+        return Err(SnapshotError::Version(version));
+    }
+    // integrity first: everything after this reads digest-verified bytes
+    if bytes.len() < MAGIC.len() + 2 + 4 + 8 {
+        return Err(SnapshotError::Codec(CodecError::UnexpectedEof {
+            offset: bytes.len(),
+            need: MAGIC.len() + 2 + 4 + 8 - bytes.len(),
+        }));
+    }
+    let payload = &bytes[..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let computed = fnv1a64(payload);
+    if stored != computed {
+        return Err(SnapshotError::Digest { stored, computed });
+    }
+
+    let mut r = ByteReader::new(&payload[MAGIC.len() + 2..]);
+    let n_sections = r.u32()? as u64;
+    let n_sections = r.check_count(n_sections, 20)?;
+    let mut table: Vec<(u32, usize, usize)> = Vec::with_capacity(n_sections);
+    for _ in 0..n_sections {
+        let tag = r.u32()?;
+        let off = r.u64()?;
+        let len = r.u64()?;
+        let end = off.checked_add(len);
+        match end {
+            Some(end) if end <= payload.len() as u64 => {
+                table.push((tag, off as usize, len as usize))
+            }
+            _ => return Err(SnapshotError::SectionBounds(tag)),
+        }
+    }
+
+    let mut cr = section_reader(&table, payload, SEC_CRUSH)?;
+    let crush = decode_crush(&mut cr)?;
+    finish_section(&cr, SEC_CRUSH)?;
+
+    let mut pr = section_reader(&table, payload, SEC_POOLS)?;
+    let pools = decode_pools(&mut pr)?;
+    finish_section(&pr, SEC_POOLS)?;
+
+    let mut sr = section_reader(&table, payload, SEC_SHARD_BYTES)?;
+    let n_pgs = sr.u64()?;
+    let n_pgs = sr.check_count(n_pgs, 8)?;
+    let shard_bytes = sr.u64_column(n_pgs)?;
+    finish_section(&sr, SEC_SHARD_BYTES)?;
+
+    let mut ar = section_reader(&table, payload, SEC_ACTING)?;
+    let n_acting = ar.u64()?;
+    let n_acting = ar.check_count(n_acting, 4)?;
+    let acting = ar.u32_column(n_acting)?;
+    finish_section(&ar, SEC_ACTING)?;
+
+    let mut ur = section_reader(&table, payload, SEC_UPMAP)?;
+    let n_upmap = ur.u32()? as u64;
+    let n_upmap = ur.check_count(n_upmap, 12)?;
+    let mut upmap: BTreeMap<PgId, Vec<(OsdId, OsdId)>> = BTreeMap::new();
+    for _ in 0..n_upmap {
+        let pool = ur.u32()?;
+        let index = ur.u32()?;
+        let n_pairs = ur.u32()? as u64;
+        let n_pairs = ur.check_count(n_pairs, 8)?;
+        let mut items = Vec::with_capacity(n_pairs);
+        for _ in 0..n_pairs {
+            items.push((ur.u32()?, ur.u32()?));
+        }
+        let id = PgId::new(pool, index);
+        if upmap.insert(id, items).is_some() {
+            return Err(SnapshotError::Format(format!("duplicate upmap entry for pg {id}")));
+        }
+    }
+    finish_section(&ur, SEC_UPMAP)?;
+
+    // the shared validation choke point: coverage, widths, acting and
+    // upmap range checks all happen inside from_columns
+    let mut state = ClusterState::from_columns(crush, pools, shard_bytes, acting, upmap)?;
+
+    let mut or = section_reader(&table, payload, SEC_OSD_STATE)?;
+    let n_osds = or.u32()? as usize;
+    if n_osds != state.osd_count() {
+        return Err(SnapshotError::Format(format!(
+            "OSD_STATE describes {n_osds} devices, the CRUSH map has {}",
+            state.osd_count()
+        )));
+    }
+    or.check_count(n_osds as u64, 8)?;
+    let sizes = or.u64_column(n_osds)?;
+    let words = or.u64_column(n_osds.div_ceil(64))?;
+    finish_section(&or, SEC_OSD_STATE)?;
+    let up = BitSet::from_words(words, n_osds)
+        .ok_or_else(|| SnapshotError::Format("up-set word count mismatch".into()))?;
+    state.restore_osd_sizes(&sizes);
+    let down: Vec<OsdId> = up.iter_zeros().map(|o| o as OsdId).collect();
+    for o in down {
+        state.set_osd_up(o, false);
+    }
+    Ok(state)
+}
+
+// ---- file boundary ----------------------------------------------------------
+
+/// Does this path select the binary format (`.eqsnap` extension,
+/// case-insensitive)? Everything else is treated as the JSON dump.
+pub fn is_binary_path(path: &Path) -> bool {
+    path.extension().is_some_and(|e| e.eq_ignore_ascii_case(BINARY_EXTENSION))
+}
+
+/// Write `state` to `path`, choosing the format by extension: `.eqsnap`
+/// gets the binary encoding, anything else the JSON dump.
+pub fn save_state(path: &Path, state: &ClusterState) -> Result<(), SnapshotError> {
+    if is_binary_path(path) {
+        std::fs::write(path, encode(state))?;
+    } else {
+        std::fs::write(path, dump::dump(state))?;
+    }
+    Ok(())
+}
+
+/// Read a cluster state from `path`, choosing the format by extension:
+/// `.eqsnap` decodes the binary format, anything else parses JSON.
+pub fn load_state(path: &Path) -> Result<ClusterState, SnapshotError> {
+    if is_binary_path(path) {
+        decode(&std::fs::read(path)?)
+    } else {
+        Ok(dump::load(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::dump::dump;
+    use crate::crush::{CrushBuilder, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    fn cluster() -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..3 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+            b.add_osd_bytes(host, TIB, DeviceClass::Ssd);
+        }
+        b.add_rule(Rule::replicated(0, "repl", "default", None, Level::Host));
+        b.add_rule(Rule::erasure(1, "ec", "default", Some(DeviceClass::Hdd), Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![
+            Pool::replicated(1, "rbd", 3, 16, 0),
+            Pool::erasure(2, "ecpool", 2, 1, 8, 1).metadata(),
+        ];
+        ClusterState::build(crush, pools, |p, i| (p.id as u64 + i as u64 + 1) * GIB)
+    }
+
+    #[test]
+    fn binary_roundtrip_matches_json_dump() {
+        let mut s = cluster();
+        let pg = s.pgs().next().unwrap().id();
+        let from = s.pg(pg).unwrap().devices().next().unwrap();
+        let to = (0..s.osd_count() as OsdId)
+            .find(|&o| !s.pg(pg).unwrap().on(o) && s.osd_class(o) == s.osd_class(from))
+            .unwrap();
+        s.apply_movement(pg, from, to).unwrap();
+
+        let decoded = decode(&encode(&s)).unwrap();
+        assert!(decoded.verify().is_empty());
+        // cross-format equality: the JSON dump is the canonical byte
+        // representation, so equal dumps mean equal states
+        assert_eq!(dump(&decoded), dump(&s));
+    }
+
+    #[test]
+    fn binary_preserves_state_json_cannot() {
+        let mut s = cluster();
+        s.set_osd_up(1, false);
+        let decoded = decode(&encode(&s)).unwrap();
+        assert!(!decoded.osd_is_up(1));
+        assert!(decoded.osd_is_up(0));
+        for o in 0..s.osd_count() as OsdId {
+            assert_eq!(decoded.osd_size(o), s.osd_size(o));
+        }
+    }
+
+    #[test]
+    fn encode_is_deterministic_and_presized() {
+        let s = cluster();
+        let a = encode(&s);
+        let b = encode(&s);
+        assert_eq!(a, b, "same state, same bytes");
+        assert!(
+            encoded_size_estimate(&s) >= a.len(),
+            "estimate {} under actual {}",
+            encoded_size_estimate(&s),
+            a.len()
+        );
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = encode(&cluster());
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(SnapshotError::Magic)));
+        assert!(matches!(decode(b"short"), Err(SnapshotError::Magic)));
+    }
+
+    #[test]
+    fn wrong_version_is_typed() {
+        let mut bytes = encode(&cluster());
+        bytes[6] = 0x63; // version 99
+        assert!(matches!(decode(&bytes), Err(SnapshotError::Version(99))));
+    }
+
+    #[test]
+    fn flipped_byte_fails_the_digest() {
+        let mut bytes = encode(&cluster());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(matches!(decode(&bytes), Err(SnapshotError::Digest { .. })));
+    }
+
+    #[test]
+    fn truncation_is_typed_never_a_panic() {
+        let bytes = encode(&cluster());
+        for keep in [0, 3, 6, 8, 12, 40, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..keep]).is_err(), "truncated to {keep} bytes");
+        }
+    }
+
+    #[test]
+    fn extension_negotiation() {
+        assert!(is_binary_path(Path::new("x.eqsnap")));
+        assert!(is_binary_path(Path::new("/a/b/state.EQSNAP")));
+        assert!(!is_binary_path(Path::new("x.json")));
+        assert!(!is_binary_path(Path::new("eqsnap")));
+    }
+}

@@ -125,6 +125,106 @@ impl std::fmt::Display for StateError {
 
 impl std::error::Error for StateError {}
 
+/// Errors from reassembling a cluster out of untrusted serialized parts
+/// — the shared validation choke point of **both** snapshot decoders
+/// (`dump::load` for JSON, `snapshot::decode` for binary). Everything
+/// that used to be ad-hoc validation inside `dump::load` lives here now,
+/// so the two formats cannot drift in what they accept.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AssembleError {
+    /// Two pools share an id.
+    DuplicatePool(u32),
+    /// A pool references a CRUSH rule the map does not have.
+    UnknownRule {
+        /// The offending pool.
+        pool: u32,
+        /// The missing rule id.
+        rule: u32,
+    },
+    /// A dense column's length does not match the pool roster's shape.
+    ColumnLength {
+        /// Which column ("shard_bytes" or "acting").
+        what: &'static str,
+        /// Length supplied.
+        got: usize,
+        /// Length the pools require.
+        want: usize,
+    },
+    /// An acting slot references an OSD id beyond the device table.
+    ActingOutOfRange {
+        /// The PG whose acting set is bad.
+        pg: PgId,
+        /// The out-of-range id.
+        osd: OsdId,
+        /// Number of devices in the CRUSH map.
+        devices: usize,
+    },
+    /// A PG references a pool that is not declared.
+    UnknownPgPool(PgId),
+    /// A PG's index is at or beyond its pool's `pg_count`.
+    PgBeyondRange(PgId),
+    /// The same PG appears twice.
+    DuplicatePg(PgId),
+    /// A PG's acting set width disagrees with its pool's redundancy.
+    ActingWidth {
+        /// The PG in question.
+        pg: PgId,
+        /// Slots supplied.
+        got: usize,
+        /// Slots the redundancy needs.
+        want: usize,
+    },
+    /// A pool's PG roster has a gap (the arena materializes every
+    /// `(pool, 0..pg_count)` slot, so dumps must be complete).
+    MissingPg(PgId),
+    /// An upmap entry references a PG outside every pool's range.
+    UnknownUpmapPg(PgId),
+    /// An upmap pair references an OSD id beyond the device table.
+    UpmapOutOfRange {
+        /// The PG whose upmap entry is bad.
+        pg: PgId,
+        /// The out-of-range id.
+        osd: OsdId,
+    },
+}
+
+impl std::fmt::Display for AssembleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AssembleError::DuplicatePool(id) => write!(f, "pool {id} is declared twice"),
+            AssembleError::UnknownRule { pool, rule } => {
+                write!(f, "pool {pool} references unknown rule {rule}")
+            }
+            AssembleError::ColumnLength { what, got, want } => {
+                write!(f, "{what} column has {got} entries, the pools require {want}")
+            }
+            AssembleError::ActingOutOfRange { pg, osd, devices } => {
+                write!(f, "pg {pg} acting set references osd.{osd} beyond the {devices}-device map")
+            }
+            AssembleError::UnknownPgPool(pg) => write!(f, "pg {pg} references unknown pool"),
+            AssembleError::PgBeyondRange(pg) => {
+                write!(f, "pg {pg} is beyond its pool's pg_count")
+            }
+            AssembleError::DuplicatePg(pg) => write!(f, "pg {pg} is listed twice"),
+            AssembleError::ActingWidth { pg, got, want } => write!(
+                f,
+                "pg {pg} has {got} acting slots, its pool's redundancy needs {want}"
+            ),
+            AssembleError::MissingPg(pg) => {
+                write!(f, "pool {} is missing pg {pg}", pg.pool)
+            }
+            AssembleError::UnknownUpmapPg(pg) => {
+                write!(f, "upmap entry references unknown pg {pg}")
+            }
+            AssembleError::UpmapOutOfRange { pg, osd } => {
+                write!(f, "pg {pg} upmap pair references osd.{osd} beyond the device map")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AssembleError {}
+
 /// The cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterState {
@@ -234,6 +334,159 @@ impl ClusterState {
         state
     }
 
+    /// Validate and flatten a sparse PG roster (the JSON dump's
+    /// per-PG records) into the dense wire-order columns
+    /// [`ClusterState::from_columns`] consumes: `(shard_bytes, acting)`
+    /// in ascending pool-id order, acting slots packed as raw `u32`s
+    /// with `u32::MAX` as the hole. Enforces the roster half of the
+    /// choke-point contract: known pools, indexes inside `pg_count`, no
+    /// duplicates, exact acting widths, and full coverage of every
+    /// `(pool, 0..pg_count)` slot.
+    pub fn columns_from_pgs(
+        pools: &[Pool],
+        pgs: Vec<Pg>,
+    ) -> Result<(Vec<u64>, Vec<u32>), AssembleError> {
+        let mut sorted: Vec<&Pool> = pools.iter().collect();
+        sorted.sort_by_key(|p| p.id);
+        // pool id → (pg column base, acting column base, width, pg_count)
+        let mut base: BTreeMap<u32, (usize, usize, usize, u32)> = BTreeMap::new();
+        let (mut pg_off, mut act_off) = (0usize, 0usize);
+        for p in &sorted {
+            let w = p.redundancy.shard_count();
+            if base.insert(p.id, (pg_off, act_off, w, p.pg_count)).is_some() {
+                return Err(AssembleError::DuplicatePool(p.id));
+            }
+            pg_off += p.pg_count as usize;
+            act_off += p.pg_count as usize * w;
+        }
+        let mut bytes = vec![0u64; pg_off];
+        let mut acting = vec![u32::MAX; act_off];
+        let mut seen = vec![false; pg_off];
+        for pg in pgs {
+            let Some(&(pb, ab, w, count)) = base.get(&pg.id.pool) else {
+                return Err(AssembleError::UnknownPgPool(pg.id));
+            };
+            if pg.id.index >= count {
+                return Err(AssembleError::PgBeyondRange(pg.id));
+            }
+            let pi = pb + pg.id.index as usize;
+            if seen[pi] {
+                return Err(AssembleError::DuplicatePg(pg.id));
+            }
+            seen[pi] = true;
+            if pg.acting.len() != w {
+                return Err(AssembleError::ActingWidth { pg: pg.id, got: pg.acting.len(), want: w });
+            }
+            bytes[pi] = pg.shard_bytes;
+            let ai = ab + pg.id.index as usize * w;
+            for (k, &o) in pg.acting.iter().enumerate() {
+                acting[ai + k] = o.unwrap_or(u32::MAX);
+            }
+        }
+        if let Some(pi) = seen.iter().position(|&f| !f) {
+            for p in &sorted {
+                let (pb, _, _, count) = base[&p.id];
+                if pi >= pb && pi < pb + count as usize {
+                    return Err(AssembleError::MissingPg(PgId::new(p.id, (pi - pb) as u32)));
+                }
+            }
+            unreachable!("every column slot belongs to a pool");
+        }
+        Ok((bytes, acting))
+    }
+
+    /// Reassemble a cluster from dense wire-order columns — the shared
+    /// validation choke point of the JSON (`dump::load`, via
+    /// [`ClusterState::columns_from_pgs`]) and binary
+    /// (`snapshot::decode`) decoders. Columns are in ascending pool-id
+    /// order; acting slots are raw `u32`s with `u32::MAX` as the hole.
+    /// Rejects — with a typed error, never a panic — duplicate pool ids,
+    /// missing CRUSH rules, mis-sized columns, acting or upmap
+    /// references beyond the device table, and upmap entries for PGs
+    /// that do not exist.
+    pub fn from_columns(
+        crush: CrushMap,
+        pools: Vec<Pool>,
+        shard_bytes: Vec<u64>,
+        acting: Vec<u32>,
+        upmap: BTreeMap<PgId, Vec<(OsdId, OsdId)>>,
+    ) -> Result<ClusterState, AssembleError> {
+        let mut ids: Vec<u32> = pools.iter().map(|p| p.id).collect();
+        ids.sort_unstable();
+        if let Some(w) = ids.windows(2).find(|w| w[0] == w[1]) {
+            return Err(AssembleError::DuplicatePool(w[0]));
+        }
+        for p in &pools {
+            if crush.rule(p.rule_id).is_none() {
+                return Err(AssembleError::UnknownRule { pool: p.id, rule: p.rule_id });
+            }
+        }
+        let n_devices = crush.devices.len();
+        let want_pgs: usize = pools.iter().map(|p| p.pg_count as usize).sum();
+        let want_acting: usize = pools
+            .iter()
+            .map(|p| p.pg_count as usize * p.redundancy.shard_count())
+            .sum();
+        if shard_bytes.len() != want_pgs {
+            return Err(AssembleError::ColumnLength {
+                what: "shard_bytes",
+                got: shard_bytes.len(),
+                want: want_pgs,
+            });
+        }
+        if acting.len() != want_acting {
+            return Err(AssembleError::ColumnLength {
+                what: "acting",
+                got: acting.len(),
+                want: want_acting,
+            });
+        }
+        // range-check the raw acting words while packing them as slots,
+        // tracking (pool, index) so errors name the offending PG — this
+        // is what keeps `index_pg`'s unchecked `osd_used[o] += bytes`
+        // unreachable from hostile inputs
+        let mut sorted: Vec<&Pool> = pools.iter().collect();
+        sorted.sort_by_key(|p| p.id);
+        let mut slots: Vec<Slot> = Vec::with_capacity(acting.len());
+        let mut off = 0usize;
+        for p in &sorted {
+            let w = p.redundancy.shard_count();
+            for i in 0..p.pg_count {
+                for _ in 0..w {
+                    let v = acting[off];
+                    off += 1;
+                    if v != u32::MAX && (v as usize) >= n_devices {
+                        return Err(AssembleError::ActingOutOfRange {
+                            pg: PgId::new(p.id, i),
+                            osd: v,
+                            devices: n_devices,
+                        });
+                    }
+                    slots.push(Slot::from_raw(v));
+                }
+            }
+        }
+        let ranges: BTreeMap<u32, u32> = pools.iter().map(|p| (p.id, p.pg_count)).collect();
+        for (id, items) in &upmap {
+            if ranges.get(&id.pool).map(|&c| id.index < c) != Some(true) {
+                return Err(AssembleError::UnknownUpmapPg(*id));
+            }
+            for &(a, b) in items {
+                for o in [a, b] {
+                    if (o as usize) >= n_devices {
+                        return Err(AssembleError::UpmapOutOfRange { pg: *id, osd: o });
+                    }
+                }
+            }
+        }
+        let mut state = ClusterState::shell(crush, &pools);
+        state.arena.install_columns(shard_bytes, slots);
+        state.arena.set_upmap_table(upmap);
+        state.index_all();
+        state.rebuild_aggregates();
+        Ok(state)
+    }
+
     /// CRUSH-place every PG (arena order). Placement per PG is a pure
     /// function of the CRUSH map, the chunk boundaries depend only on
     /// the PG count, and chunk results merge in index order — the
@@ -315,6 +568,22 @@ impl ClusterState {
         }
         self.osd_size = sizes.to_vec();
         self.rebuild_aggregates();
+    }
+
+    /// The columnar PG store — the binary snapshot encoder serializes
+    /// its stripe columns verbatim (crate-internal boundary).
+    pub(crate) fn arena(&self) -> &PgArena {
+        &self.arena
+    }
+
+    /// The packed up/down membership set (snapshot encode boundary).
+    pub(crate) fn osd_up_set(&self) -> &BitSet {
+        &self.osd_up
+    }
+
+    /// The raw per-OSD capacity column (snapshot encode boundary).
+    pub(crate) fn osd_sizes(&self) -> &[u64] {
+        &self.osd_size
     }
 
     fn index_pg(&mut self, idx: PgIdx) {
@@ -1361,6 +1630,110 @@ mod tests {
             s.arena_bytes(),
             s.arena_legacy_bytes()
         );
+    }
+
+    #[test]
+    fn from_columns_matches_from_parts() {
+        let s = small_cluster();
+        let pools: Vec<Pool> = s.pools.values().cloned().collect();
+        let pgs: Vec<Pg> = s.pgs().map(|v| v.to_pg()).collect();
+        let (bytes, acting) = ClusterState::columns_from_pgs(&pools, pgs.clone()).unwrap();
+        let a = ClusterState::from_columns(
+            s.crush.clone(),
+            pools.clone(),
+            bytes,
+            acting,
+            s.upmap_table(),
+        )
+        .unwrap();
+        let b = ClusterState::from_parts(s.crush.clone(), pools, pgs, s.upmap_table());
+        assert_eq!(a.utilizations(), b.utilizations());
+        for (x, y) in a.pgs().zip(b.pgs()) {
+            assert_eq!(x.id(), y.id());
+            assert_eq!(x.acting(), y.acting());
+            assert_eq!(x.shard_bytes(), y.shard_bytes());
+        }
+        assert!(a.verify().is_empty(), "{:?}", a.verify());
+    }
+
+    #[test]
+    fn from_columns_rejects_hostile_inputs_typed() {
+        let s = small_cluster();
+        let pools: Vec<Pool> = s.pools.values().cloned().collect();
+        let pgs: Vec<Pg> = s.pgs().map(|v| v.to_pg()).collect();
+        let (bytes, acting) = ClusterState::columns_from_pgs(&pools, pgs.clone()).unwrap();
+
+        // acting OSD beyond the device table — the pre-choke-point code
+        // panicked in index_pg's unchecked accounting on this input
+        let mut bad = acting.clone();
+        bad[0] = 999;
+        assert_eq!(
+            ClusterState::from_columns(
+                s.crush.clone(),
+                pools.clone(),
+                bytes.clone(),
+                bad,
+                BTreeMap::new()
+            )
+            .unwrap_err(),
+            AssembleError::ActingOutOfRange { pg: PgId::new(1, 0), osd: 999, devices: 8 }
+        );
+
+        // mis-sized columns
+        assert!(matches!(
+            ClusterState::from_columns(
+                s.crush.clone(),
+                pools.clone(),
+                bytes[1..].to_vec(),
+                acting.clone(),
+                BTreeMap::new()
+            ),
+            Err(AssembleError::ColumnLength { what: "shard_bytes", .. })
+        ));
+
+        // upmap referencing a PG that does not exist
+        let mut upmap = BTreeMap::new();
+        upmap.insert(PgId::new(7, 0), vec![(0, 1)]);
+        assert_eq!(
+            ClusterState::from_columns(
+                s.crush.clone(),
+                pools.clone(),
+                bytes.clone(),
+                acting.clone(),
+                upmap
+            )
+            .unwrap_err(),
+            AssembleError::UnknownUpmapPg(PgId::new(7, 0))
+        );
+
+        // upmap pair referencing an out-of-range device
+        let mut upmap = BTreeMap::new();
+        upmap.insert(PgId::new(1, 0), vec![(0, 200)]);
+        assert_eq!(
+            ClusterState::from_columns(s.crush.clone(), pools.clone(), bytes, acting, upmap)
+                .unwrap_err(),
+            AssembleError::UpmapOutOfRange { pg: PgId::new(1, 0), osd: 200 }
+        );
+
+        // roster-level checks in columns_from_pgs
+        let mut dup = pgs.clone();
+        dup.push(dup[0].clone());
+        assert_eq!(
+            ClusterState::columns_from_pgs(&pools, dup).unwrap_err(),
+            AssembleError::DuplicatePg(PgId::new(1, 0))
+        );
+        let mut sparse = pgs.clone();
+        sparse.remove(3);
+        assert_eq!(
+            ClusterState::columns_from_pgs(&pools, sparse).unwrap_err(),
+            AssembleError::MissingPg(PgId::new(1, 3))
+        );
+        let mut wide = pgs.clone();
+        wide[0].acting.push(None);
+        assert!(matches!(
+            ClusterState::columns_from_pgs(&pools, wide),
+            Err(AssembleError::ActingWidth { got: 4, want: 3, .. })
+        ));
     }
 
     /// Parallel and serial construction must be bit-identical (the

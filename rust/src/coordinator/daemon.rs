@@ -118,6 +118,7 @@ pub fn run_daemon(
             sample_every: usize::MAX,
             record_series: false,
             plan: cfg.plan.clone(),
+            snapshot_dir: None,
         },
         cfg.seed,
     );

@@ -1,0 +1,402 @@
+//! Checkpointed, resumable fleet sweeps (RFC 0007).
+//!
+//! A fleet sweep is a grid of independent cells — one per
+//! `(scenario, seed)` pair, each a pure function of its coordinates
+//! and the [`FleetConfig`]. That purity makes interruption cheap to
+//! survive: persist every finished cell as it completes, and a later
+//! invocation can skip straight past the completed cells and produce
+//! the **byte-identical** `FLEET_baseline.json` an uninterrupted run
+//! would have written, at any `EQUILIBRIUM_THREADS`.
+//!
+//! A checkpoint directory holds:
+//!
+//! * `meta.json` — the sweep coordinates (scenario list, seeds,
+//!   seed base, reduced flag, pipeline shape). Resuming under
+//!   different coordinates is a typed error, never a silently mixed
+//!   sweep.
+//! * `cell_<scenario>_<seed>.json` — the cell's [`RunStats`], every
+//!   `f64` in shortest-round-trip form so reloaded stats equal
+//!   recomputed stats bit for bit.
+//! * `cell_<scenario>_<seed>.eqsnap` — the post-run cluster as a
+//!   binary snapshot ([`crate::cluster::snapshot`]), for post-mortem
+//!   inspection with `report`/`df` without replaying the cell.
+//!
+//! Both cell files are written to a temporary sibling and renamed into
+//! place, so a kill mid-write leaves no half-cell: the stats file is
+//! written *after* the snapshot and is the commit point. Any cell
+//! whose stats file is missing or unreadable is simply recomputed.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cluster::{snapshot, ClusterState};
+use crate::scenario::library;
+use crate::util::json::Json;
+use crate::util::parallel;
+
+use super::{run_cell, FleetConfig, FleetError, FleetResult, RunStats, ScenarioSweep};
+
+/// How a sweep checkpoints: where, and under what cell budget.
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// The checkpoint directory (created on first use).
+    pub dir: PathBuf,
+    /// Stop after computing this many *new* cells this invocation
+    /// (reloaded cells are free). `None` runs the sweep to completion.
+    pub max_cells: Option<u64>,
+    /// `true` requires `dir` to already hold a matching `meta.json`
+    /// (the CLI's `--resume`); `false` creates or continues it
+    /// (`--checkpoint`).
+    pub resume: bool,
+}
+
+/// What one checkpointed invocation did.
+#[derive(Debug)]
+pub struct CheckpointRun {
+    /// The complete sweep — `Some` only when every cell is done.
+    pub result: Option<FleetResult>,
+    /// Total cells in the sweep grid.
+    pub total: usize,
+    /// Cells reloaded from the checkpoint directory.
+    pub reused: usize,
+    /// Cells computed (and persisted) by this invocation.
+    pub computed: usize,
+    /// Cells left unrun because [`CheckpointConfig::max_cells`] was
+    /// exhausted. Zero exactly when `result` is `Some`.
+    pub skipped: usize,
+}
+
+/// The stats file of one cell.
+pub fn cell_stats_path(dir: &Path, name: &str, seed: u64) -> PathBuf {
+    dir.join(format!("cell_{name}_{seed}.json"))
+}
+
+/// The binary post-run snapshot of one cell.
+pub fn cell_snapshot_path(dir: &Path, name: &str, seed: u64) -> PathBuf {
+    dir.join(format!("cell_{name}_{seed}.eqsnap"))
+}
+
+fn stats_to_json(s: &RunStats) -> Json {
+    Json::obj()
+        .set("calc_seconds", s.calc_seconds)
+        .set("executed_bytes", s.executed_bytes)
+        .set("executed_moves", s.executed_moves)
+        .set("makespan", s.makespan)
+        .set("max_fill", s.max_fill)
+        .set("min_fill", s.min_fill)
+        .set("phases", s.phases)
+        .set("planned_moves", s.planned_moves)
+        .set("raw_bytes", s.raw_bytes)
+        .set("seed", s.seed)
+        .set("variance", s.variance)
+}
+
+fn stats_from_json(v: &Json) -> Option<RunStats> {
+    Some(RunStats {
+        seed: v.get_u64("seed")?,
+        variance: v.get_f64("variance")?,
+        max_fill: v.get_f64("max_fill")?,
+        min_fill: v.get_f64("min_fill")?,
+        planned_moves: v.get_u64("planned_moves")? as usize,
+        raw_bytes: v.get_u64("raw_bytes")?,
+        executed_moves: v.get_u64("executed_moves")? as usize,
+        executed_bytes: v.get_u64("executed_bytes")?,
+        phases: v.get_u64("phases")? as usize,
+        makespan: v.get_f64("makespan")?,
+        calc_seconds: v.get_f64("calc_seconds")?,
+    })
+}
+
+fn meta_render(names: &[&str], cfg: &FleetConfig) -> String {
+    let scenarios: Vec<Json> = names.iter().map(|n| Json::from(*n)).collect();
+    let mut text = Json::obj()
+        .set("format", "equilibrium-fleet-checkpoint")
+        .set("pipeline", cfg.pipeline_label())
+        .set("reduced", cfg.reduced)
+        .set("scenarios", Json::Arr(scenarios))
+        .set("seed_base", cfg.seed_base)
+        .set("seeds", cfg.seeds)
+        .set("version", 1u64)
+        .pretty();
+    text.push('\n');
+    text
+}
+
+fn checkpoint_err(msg: impl Into<String>) -> FleetError {
+    FleetError::Checkpoint(msg.into())
+}
+
+/// Create-or-validate the checkpoint directory. The meta comparison is
+/// a byte comparison of the rendered document: the same sweep
+/// coordinates produce the same bytes, so anything else — different
+/// flags, a different scenario list, a hand-edited file — is a
+/// mismatch.
+fn open_dir(names: &[&str], cfg: &FleetConfig, ck: &CheckpointConfig) -> Result<(), FleetError> {
+    let meta_path = ck.dir.join("meta.json");
+    let expected = meta_render(names, cfg);
+    match fs::read_to_string(&meta_path) {
+        Ok(found) if found == expected => Ok(()),
+        Ok(_) => Err(checkpoint_err(format!(
+            "checkpoint '{}' was written by a different sweep (scenario list, seeds, \
+             seed base, reduced flag, or pipeline differ); delete it or rerun with \
+             the original flags",
+            ck.dir.display()
+        ))),
+        Err(_) if ck.resume => Err(checkpoint_err(format!(
+            "cannot resume '{}': no readable meta.json (was the sweep ever \
+             checkpointed there?)",
+            ck.dir.display()
+        ))),
+        Err(_) => {
+            fs::create_dir_all(&ck.dir).map_err(|e| {
+                checkpoint_err(format!(
+                    "cannot create checkpoint directory '{}': {e}",
+                    ck.dir.display()
+                ))
+            })?;
+            write_atomic(&meta_path, expected.as_bytes())
+        }
+    }
+}
+
+/// Write via a temporary sibling + rename, so readers never observe a
+/// half-written file. The temp name is per-target, and each cell is
+/// written by exactly one thread, so concurrent cells never collide.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), FleetError> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    let io = |e: std::io::Error| {
+        checkpoint_err(format!("cannot write checkpoint file '{}': {e}", path.display()))
+    };
+    fs::write(&tmp, bytes).map_err(io)?;
+    fs::rename(&tmp, path).map_err(io)
+}
+
+/// Reload one completed cell, if its commit point (the stats file)
+/// exists and parses and carries the expected seed. Any failure means
+/// "not checkpointed" — the cell is recomputed, never trusted torn.
+fn load_cell(dir: &Path, name: &str, seed: u64) -> Option<RunStats> {
+    let text = fs::read_to_string(cell_stats_path(dir, name, seed)).ok()?;
+    let stats = stats_from_json(&Json::parse(&text).ok()?)?;
+    if stats.seed != seed {
+        return None;
+    }
+    Some(stats)
+}
+
+/// Persist one finished cell: snapshot first, stats last (the commit
+/// point — see the module docs for the torn-write argument).
+fn store_cell(
+    dir: &Path,
+    name: &str,
+    seed: u64,
+    stats: &RunStats,
+    state: &ClusterState,
+) -> Result<(), FleetError> {
+    write_atomic(&cell_snapshot_path(dir, name, seed), &snapshot::encode(state))?;
+    let mut text = stats_to_json(stats).pretty();
+    text.push('\n');
+    write_atomic(&cell_stats_path(dir, name, seed), text.as_bytes())
+}
+
+/// [`super::run_library`] with persistence: reload every completed
+/// cell from the checkpoint, compute (and persist) the rest in
+/// parallel, and assemble the sweep when nothing is missing.
+///
+/// Determinism: each cell is a pure function of `(scenario, seed,
+/// cfg)`, and the stats JSON round-trips every `f64` exactly, so
+/// stored and recomputed cells are indistinguishable — the assembled
+/// baseline is byte-identical to an uninterrupted run's, at any
+/// thread count, across any number of interruptions. The
+/// `max_cells` budget is deliberately soft: under work stealing,
+/// *which* cells a partial run completes may vary with thread count,
+/// but never their values.
+pub fn run_library_checkpointed(
+    names: &[&str],
+    cfg: &FleetConfig,
+    ck: &CheckpointConfig,
+) -> Result<CheckpointRun, FleetError> {
+    for name in names {
+        if !library::ALL.contains(name) {
+            return Err(FleetError::UnknownScenario(name.to_string()));
+        }
+    }
+    open_dir(names, cfg, ck)?;
+
+    let per = cfg.seeds as usize;
+    let total = names.len() * per;
+    let coords = |i: usize| (names[i / per], cfg.seed_base + (i % per) as u64);
+    let preloaded: Vec<Option<RunStats>> = (0..total)
+        .map(|i| {
+            let (name, seed) = coords(i);
+            load_cell(&ck.dir, name, seed)
+        })
+        .collect();
+    let reused = preloaded.iter().filter(|c| c.is_some()).count();
+
+    let started = AtomicU64::new(0);
+    let results: Vec<Result<Option<RunStats>, FleetError>> =
+        parallel::map_collect(total, cfg.chunk.max(1), |i| {
+            if let Some(stats) = preloaded[i] {
+                return Ok(Some(stats));
+            }
+            if let Some(max) = ck.max_cells {
+                if started.fetch_add(1, Ordering::Relaxed) >= max {
+                    return Ok(None);
+                }
+            }
+            let (name, seed) = coords(i);
+            let (stats, state) = run_cell(name, seed, cfg)?;
+            store_cell(&ck.dir, name, seed, &stats, &state)?;
+            Ok(Some(stats))
+        });
+
+    let mut it = results.into_iter();
+    let mut sweeps = Vec::with_capacity(names.len());
+    let mut skipped = 0usize;
+    for name in names {
+        let mut runs = Vec::with_capacity(per);
+        for _ in 0..per {
+            match it.next().expect("one result per (scenario, seed) pair")? {
+                Some(stats) => runs.push(stats),
+                None => skipped += 1,
+            }
+        }
+        sweeps.push(ScenarioSweep { name: name.to_string(), runs });
+    }
+    let result = if skipped == 0 {
+        Some(FleetResult { meta: cfg.meta(), sweeps })
+    } else {
+        None
+    };
+    Ok(CheckpointRun { result, total, reused, computed: total - reused - skipped, skipped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("eq_ckpt_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg() -> FleetConfig {
+        FleetConfig { seeds: 2, reduced: true, ..FleetConfig::default() }
+    }
+
+    #[test]
+    fn stats_round_trip_is_exact() {
+        let s = RunStats {
+            seed: 7,
+            variance: 1.234e-5,
+            max_fill: 0.912_345_678_9,
+            min_fill: 0.1 + 0.2, // deliberately not exactly representable
+            planned_moves: 42,
+            raw_bytes: 123_456_789_012,
+            executed_moves: 40,
+            executed_bytes: 98_765_432_101,
+            phases: 5,
+            makespan: 3600.125,
+            calc_seconds: 0.007,
+        };
+        let text = stats_to_json(&s).pretty();
+        let back = stats_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn checkpointed_run_matches_uninterrupted() {
+        let dir = temp_dir("full");
+        let names = ["device-failure"];
+        let reference = super::super::run_library(&names, &cfg()).unwrap();
+        let ck = CheckpointConfig { dir: dir.clone(), max_cells: None, resume: false };
+        let run = run_library_checkpointed(&names, &cfg(), &ck).unwrap();
+        assert_eq!(run.total, 2);
+        assert_eq!(run.reused, 0);
+        assert_eq!(run.computed, 2);
+        assert_eq!(run.skipped, 0);
+        let result = run.result.expect("complete");
+        assert_eq!(
+            result.to_baseline().render(),
+            reference.to_baseline().render(),
+            "checkpointed and direct sweeps must render the same baseline"
+        );
+        // the per-cell snapshots are real, loadable cluster states
+        let snap = cell_snapshot_path(&dir, "device-failure", 0);
+        let state = snapshot::decode(&fs::read(&snap).unwrap()).unwrap();
+        assert!(state.verify().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interrupted_then_resumed_is_byte_identical() {
+        let dir = temp_dir("resume");
+        let names = ["device-failure"];
+        let reference = super::super::run_library(&names, &cfg()).unwrap();
+
+        // invocation 1: budget of one new cell → incomplete
+        let partial = CheckpointConfig { dir: dir.clone(), max_cells: Some(1), resume: false };
+        let run = run_library_checkpointed(&names, &cfg(), &partial).unwrap();
+        assert!(run.result.is_none());
+        assert_eq!(run.computed, 1);
+        assert_eq!(run.skipped, 1);
+
+        // invocation 2: resume finishes the grid, reusing the stored cell
+        let resume = CheckpointConfig { dir: dir.clone(), max_cells: None, resume: true };
+        let run = run_library_checkpointed(&names, &cfg(), &resume).unwrap();
+        assert_eq!(run.reused, 1);
+        assert_eq!(run.computed, 1);
+        let result = run.result.expect("complete after resume");
+        assert_eq!(result.to_baseline().render(), reference.to_baseline().render());
+
+        // invocation 3: everything reused, nothing recomputed
+        let run = run_library_checkpointed(&names, &cfg(), &resume).unwrap();
+        assert_eq!(run.reused, 2);
+        assert_eq!(run.computed, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_cell_files_are_recomputed_not_trusted() {
+        let dir = temp_dir("torn");
+        let names = ["device-failure"];
+        let ck = CheckpointConfig { dir: dir.clone(), max_cells: None, resume: false };
+        let reference =
+            run_library_checkpointed(&names, &cfg(), &ck).unwrap().result.unwrap();
+        // corrupt one cell's commit point
+        fs::write(cell_stats_path(&dir, "device-failure", 1), b"{ torn").unwrap();
+        let run = run_library_checkpointed(&names, &cfg(), &ck).unwrap();
+        assert_eq!(run.reused, 1, "the intact cell is reused");
+        assert_eq!(run.computed, 1, "the torn cell is recomputed");
+        let result = run.result.unwrap();
+        assert_eq!(result.to_baseline().render(), reference.to_baseline().render());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_meta_and_missing_resume_are_typed_errors() {
+        let dir = temp_dir("meta");
+        let names = ["device-failure"];
+
+        // resuming a directory that was never checkpointed
+        let resume = CheckpointConfig { dir: dir.clone(), max_cells: None, resume: true };
+        match run_library_checkpointed(&names, &cfg(), &resume) {
+            Err(FleetError::Checkpoint(msg)) => assert!(msg.contains("resume")),
+            other => panic!("expected a checkpoint error, got {other:?}"),
+        }
+
+        // checkpointing, then reopening under different sweep coordinates
+        let ck = CheckpointConfig { dir: dir.clone(), max_cells: Some(0), resume: false };
+        run_library_checkpointed(&names, &cfg(), &ck).unwrap();
+        let other_cfg = FleetConfig { seeds: 3, ..cfg() };
+        match run_library_checkpointed(&names, &other_cfg, &ck) {
+            Err(FleetError::Checkpoint(msg)) => assert!(msg.contains("different sweep")),
+            other => panic!("expected a checkpoint error, got {other:?}"),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -14,17 +14,21 @@
 //!
 //! Downstream: [`baseline`] pins a sweep as `FLEET_baseline.json`,
 //! [`gate::gate`] turns drift past per-metric tolerances into a CI
-//! failure, and `report fleet` renders the distributions as a
-//! table/CSV.
+//! failure, `report fleet` renders the distributions as a table/CSV,
+//! and [`checkpoint`] persists completed `(scenario, seed)` cells so
+//! an interrupted sweep resumes without recomputation — and still
+//! renders the byte-identical baseline (RFC 0007).
 #![warn(missing_docs)]
 
 pub mod baseline;
+pub mod checkpoint;
 pub mod gate;
 pub mod stats;
 
 pub use baseline::{
     parse_baseline, BaselineError, FleetBaseline, ScenarioDist, ScheduleMeta, SweepMeta,
 };
+pub use checkpoint::{run_library_checkpointed, CheckpointConfig, CheckpointRun};
 pub use gate::{gate, GateConfig, GateReport, GateViolation};
 pub use stats::Distribution;
 
@@ -276,6 +280,9 @@ pub enum FleetError {
         /// The engine's error.
         error: ScenarioError,
     },
+    /// A checkpoint directory could not be created, validated, or
+    /// written ([`checkpoint`]).
+    Checkpoint(String),
 }
 
 impl fmt::Display for FleetError {
@@ -287,14 +294,21 @@ impl fmt::Display for FleetError {
             FleetError::Run { scenario, seed, error } => {
                 write!(f, "scenario '{scenario}' failed at seed {seed}: {error}")
             }
+            FleetError::Checkpoint(msg) => write!(f, "{msg}"),
         }
     }
 }
 
 impl std::error::Error for FleetError {}
 
-/// Run one library scenario at one seed and reduce it.
-fn run_library_once(name: &str, seed: u64, cfg: &FleetConfig) -> Result<RunStats, FleetError> {
+/// Run one library scenario at one seed: the reduced stats plus the
+/// post-run cluster (which [`checkpoint`] persists as a binary
+/// snapshot).
+fn run_cell(
+    name: &str,
+    seed: u64,
+    cfg: &FleetConfig,
+) -> Result<(RunStats, ClusterState), FleetError> {
     let mut case = library::by_name(name, seed, cfg.reduced)
         .ok_or_else(|| FleetError::UnknownScenario(name.to_string()))?
         .with_plan(cfg.plan.clone());
@@ -306,7 +320,13 @@ fn run_library_once(name: &str, seed: u64, cfg: &FleetConfig) -> Result<RunStats
         seed,
         error,
     })?;
-    Ok(RunStats::reduce(seed, &case.state, &out))
+    let stats = RunStats::reduce(seed, &case.state, &out);
+    Ok((stats, case.state))
+}
+
+/// Run one library scenario at one seed and reduce it.
+fn run_library_once(name: &str, seed: u64, cfg: &FleetConfig) -> Result<RunStats, FleetError> {
+    run_cell(name, seed, cfg).map(|(stats, _)| stats)
 }
 
 fn collect_runs(

@@ -98,10 +98,22 @@ pub struct FuzzReport {
 /// Replay `spec` on a fresh demo cluster (seeded by the spec's seed)
 /// under the standard invariant suite.
 pub fn replay(spec: &ScenarioSpec) -> CaseOutcome {
+    replay_in(spec, None)
+}
+
+/// Like [`replay`], additionally writing a binary `.eqsnap` state file
+/// for every `Snapshot` event in the timeline (the CLI's
+/// `scenario run --spec --snapshot-dir` path). `None` replays without
+/// touching the filesystem.
+pub fn replay_in(spec: &ScenarioSpec, snapshot_dir: Option<&Path>) -> CaseOutcome {
     let mut state = clusters::demo(spec.seed);
     let mut balancer = Equilibrium::default();
     let mut machine = InvariantMachine::standard();
-    let config = ScenarioConfig { record_series: false, ..ScenarioConfig::default() };
+    let config = ScenarioConfig {
+        record_series: false,
+        snapshot_dir: snapshot_dir.map(Path::to_path_buf),
+        ..ScenarioConfig::default()
+    };
     let engine = ScenarioEngine::new(&mut state, Some(&mut balancer), config, spec.seed)
         .with_observer(|s, e, o, t| machine.observe(s, e, o, t));
     let error = engine.run(spec).err().map(|e| e.to_string());

@@ -27,7 +27,8 @@ pub mod gen;
 pub mod invariant;
 
 pub use corpus::{
-    minimize, promote, replay, run_sweep, CaseOutcome, FailingCase, FuzzConfig, FuzzReport,
+    minimize, promote, replay, replay_in, run_sweep, CaseOutcome, FailingCase, FuzzConfig,
+    FuzzReport,
 };
 pub use gen::{generate_spec, Profile};
 pub use invariant::{CheckContext, Invariant, InvariantMachine, Violation};

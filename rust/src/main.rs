@@ -25,7 +25,7 @@ use std::process::ExitCode;
 
 use equilibrium::app_err;
 use equilibrium::balancer::{Balancer, EquilibriumConfig, MgrBalancer};
-use equilibrium::cluster::dump;
+use equilibrium::cluster::{dump, snapshot};
 use equilibrium::coordinator::{run_daemon, DaemonConfig, ExecutorConfig};
 use equilibrium::crush::Level;
 use equilibrium::fleet::{self, FleetConfig, GateConfig};
@@ -74,8 +74,8 @@ fn main() -> ExitCode {
 fn usage() -> String {
     "equilibrium — size-aware shard balancing for Ceph-like clusters\n\n\
      Subcommands:\n\
-     \x20 generate      --cluster <a..f|demo> [--seed N] [--out FILE]\n\
-     \x20 balance       --state FILE [--balancer equilibrium|mgr] [--scoring native|xla]\n\
+     \x20 generate      --cluster <a..f|demo> [--seed N] [--out FILE[.eqsnap]]\n\
+     \x20 balance       --state FILE[.eqsnap] [--balancer equilibrium|mgr] [--scoring native|xla]\n\
      \x20                [--max-moves N] [--k N] [--out FILE] [--optimize] [--phases]\n\
      \x20                [--max-backfills N] [--domain-level L] [--domain-backfills N]\n\
      \x20 simulate      --cluster <a..f|demo> [--seed N] [--scoring S] [--max-moves N]\n\
@@ -84,9 +84,10 @@ fn usage() -> String {
      \x20 daemon        --cluster <a..f|demo> [--rounds N] [--write-gib X] [--moves-per-round N]\n\
      \x20                [--optimize] [--phases]\n\
      \x20 scenario      list | run [--name NAME | --all | --spec FILE] [--seed N] [--reduced]\n\
-     \x20                [--out-dir DIR] [--quiet] [--optimize] [--phases]\n\
+     \x20                [--out-dir DIR] [--snapshot-dir DIR] [--quiet] [--optimize] [--phases]\n\
      \x20 fleet         run [--name NAME] [--seeds N] [--seed-base N] [--reduced|--smoke]\n\
      \x20                [--optimize] [--phases] [--out FILE] [--out-dir DIR] [--quiet]\n\
+     \x20                [--checkpoint DIR | --resume DIR] [--max-cells N]\n\
      \x20                | compare [same sweep flags]\n\
      \x20                | gate --baseline FILE [--rel X]\n\
      \x20 fuzz          run [--cases N] [--seed-base N] [--profile P] [--reduced] [--chunk N]\n\
@@ -155,15 +156,29 @@ fn cmd_generate(argv: &[String]) -> AppResult {
     let a = cli.parse(argv.iter())?;
     let seed = a.get_u64("seed")?.unwrap_or(0);
     let state = load_cluster(a.get_or("cluster", "demo"), seed)?;
-    let text = dump::dump(&state);
     match a.get("out") {
+        // extension-negotiated: `.eqsnap` writes the RFC 0007 binary
+        // format, anything else the JSON dump
         Some(path) => {
-            std::fs::write(path, text)?;
+            save_state_file(path, &state)?;
             eprintln!("wrote {path}");
         }
-        None => println!("{text}"),
+        None => println!("{}", dump::dump(&state)),
     }
     Ok(())
+}
+
+/// Write a state to `path` in the format its extension selects
+/// (`.eqsnap` → binary snapshot, anything else → JSON dump).
+fn save_state_file(path: &str, state: &equilibrium::cluster::ClusterState) -> AppResult {
+    snapshot::save_state(std::path::Path::new(path), state)
+        .map_err(|e| app_err!("cannot write '{path}': {e}"))
+}
+
+/// Load a state from `path` in the format its extension selects.
+fn load_state_file(path: &str) -> AppResult<equilibrium::cluster::ClusterState> {
+    snapshot::load_state(std::path::Path::new(path))
+        .map_err(|e| app_err!("cannot load '{path}': {e}"))
 }
 
 fn cmd_balance(argv: &[String]) -> AppResult {
@@ -185,7 +200,7 @@ fn cmd_balance(argv: &[String]) -> AppResult {
     let path = a
         .get("state")
         .ok_or_else(|| app_err!("--state is required"))?;
-    let mut state = dump::load(&std::fs::read_to_string(path)?)?;
+    let mut state = load_state_file(path)?;
     let initial = state.clone();
 
     let mut balancer: Box<dyn Balancer> = match a.get_or("balancer", "equilibrium") {
@@ -246,7 +261,7 @@ fn cmd_balance(argv: &[String]) -> AppResult {
         );
     }
     if let Some(out) = a.get("out") {
-        std::fs::write(out, dump::dump(&state))?;
+        save_state_file(out, &state)?;
         eprintln!("wrote {out}");
     }
     if let Some(path) = a.get("upmap-script") {
@@ -275,7 +290,7 @@ fn cmd_df(argv: &[String]) -> AppResult {
     let a = cli.parse(argv.iter())?;
     let state = match (a.get("cluster"), a.get("state")) {
         (Some(name), None) => load_cluster(name, a.get_u64("seed")?.unwrap_or(0))?,
-        (None, Some(path)) => dump::load(&std::fs::read_to_string(path)?)?,
+        (None, Some(path)) => load_state_file(path)?,
         _ => return Err(app_err!("exactly one of --cluster or --state is required")),
     };
     let report = equilibrium::cluster::health::df(&state);
@@ -295,7 +310,7 @@ fn cmd_crush(argv: &[String]) -> AppResult {
     let a = cli.parse(argv.iter())?;
     let state = match (a.get("cluster"), a.get("state")) {
         (Some(name), None) => load_cluster(name, a.get_u64("seed")?.unwrap_or(0))?,
-        (None, Some(path)) => dump::load(&std::fs::read_to_string(path)?)?,
+        (None, Some(path)) => load_state_file(path)?,
         _ => return Err(app_err!("exactly one of --cluster or --state is required")),
     };
     if a.flag("tree") {
@@ -517,6 +532,7 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
         .opt_default("seed", "N", "0", "scenario seed")
         .flag("reduced", "reduced-size mode (small cluster, small volumes; CI smoke)")
         .opt("out-dir", "DIR", "write the unified time series CSVs here")
+        .opt("snapshot-dir", "DIR", "write `snapshot` events as binary .eqsnap files here")
         .flag("optimize", "run balance-round plans through the optimizer (RFC 0003)")
         .flag("phases", "execute plans in failure-domain-capped phases (implies --optimize)")
         .opt_default("max-backfills", "N", "1", "phases: concurrent transfers per OSD")
@@ -527,9 +543,10 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
     let seed = a.get_u64("seed")?.unwrap_or(0);
     let reduced = a.flag("reduced");
     let plan_cfg = plan_config_from(&a)?;
+    let snapshot_dir = a.get("snapshot-dir").map(PathBuf::from);
 
     if let Some(path) = a.get("spec") {
-        return run_spec_file(std::path::Path::new(path), a.flag("quiet"));
+        return run_spec_file(std::path::Path::new(path), a.flag("quiet"), snapshot_dir.as_deref());
     }
 
     let names: Vec<&str> = if a.flag("all") {
@@ -545,6 +562,7 @@ fn cmd_scenario_run(argv: &[String]) -> AppResult {
         let mut case = equilibrium::scenario::library::by_name(name, seed, reduced)
             .ok_or_else(|| app_err!("unknown scenario '{name}' (see `scenario list`)"))?;
         case.config.plan = plan_cfg.clone();
+        case.config.snapshot_dir = snapshot_dir.clone();
         let var_before = case.state.utilization_variance();
         let outcome = case
             .run()
@@ -644,7 +662,11 @@ fn size_label(reduced: bool) -> &'static str {
 /// Replay a spec JSON file on a fresh demo cluster under the standard
 /// invariant suite (the `scenario run --spec` path; how promoted corpus
 /// regressions are reproduced by hand).
-fn run_spec_file(path: &std::path::Path, quiet: bool) -> AppResult {
+fn run_spec_file(
+    path: &std::path::Path,
+    quiet: bool,
+    snapshot_dir: Option<&std::path::Path>,
+) -> AppResult {
     let spec = equilibrium::scenario::serde::load_file(path)
         .map_err(|e| app_err!("cannot replay '{}': {e}", path.display()))?;
     println!(
@@ -653,7 +675,7 @@ fn run_spec_file(path: &std::path::Path, quiet: bool) -> AppResult {
         spec.events.len(),
         spec.seed,
     );
-    let outcome = equilibrium::fuzz::replay(&spec);
+    let outcome = equilibrium::fuzz::replay_in(&spec, snapshot_dir);
     if !quiet {
         for v in &outcome.violations {
             println!("  violation {v}");
@@ -780,10 +802,34 @@ fn cmd_fleet_run(argv: &[String]) -> AppResult {
         .opt_default("domain-backfills", "N", "2", "phases: concurrent transfers per domain")
         .opt("out", "FILE", "write the sweep summary as FLEET baseline JSON")
         .opt("out-dir", "DIR", "write fleet_summary.csv here")
+        .opt("checkpoint", "DIR", "persist completed (scenario, seed) cells here (create or continue)")
+        .opt("resume", "DIR", "continue an existing checkpoint (must match the sweep flags)")
+        .opt("max-cells", "N", "stop after computing N new cells (requires --checkpoint/--resume)")
         .flag("quiet", "suppress the summary table");
     let a = cli.parse(argv.iter())?;
     let cfg = fleet_config_from(&a)?;
     let names = fleet_names(&a);
+    let checkpoint = match (a.get("checkpoint"), a.get("resume")) {
+        (Some(_), Some(_)) => {
+            return Err(app_err!("--checkpoint and --resume are mutually exclusive"))
+        }
+        (Some(dir), None) => Some(fleet::CheckpointConfig {
+            dir: PathBuf::from(dir),
+            max_cells: a.get_u64("max-cells")?,
+            resume: false,
+        }),
+        (None, Some(dir)) => Some(fleet::CheckpointConfig {
+            dir: PathBuf::from(dir),
+            max_cells: a.get_u64("max-cells")?,
+            resume: true,
+        }),
+        (None, None) => {
+            if a.get("max-cells").is_some() {
+                return Err(app_err!("--max-cells requires --checkpoint or --resume"));
+            }
+            None
+        }
+    };
     println!(
         "fleet: sweeping {} scenario(s) × {} seeds ({}, {} pipeline)",
         names.len(),
@@ -791,7 +837,35 @@ fn cmd_fleet_run(argv: &[String]) -> AppResult {
         size_label(cfg.reduced),
         cfg.pipeline_label(),
     );
-    let result = fleet::run_library(&names, &cfg).map_err(|e| app_err!("fleet sweep failed: {e}"))?;
+    let result = match &checkpoint {
+        None => fleet::run_library(&names, &cfg).map_err(|e| app_err!("fleet sweep failed: {e}"))?,
+        Some(ck) => {
+            let run = fleet::run_library_checkpointed(&names, &cfg, ck)
+                .map_err(|e| app_err!("fleet sweep failed: {e}"))?;
+            eprintln!(
+                "checkpoint {}: {} cell(s) reused, {} computed, {} remaining",
+                ck.dir.display(),
+                run.reused,
+                run.computed,
+                run.skipped,
+            );
+            match run.result {
+                Some(result) => result,
+                None => {
+                    // deliberate exit 0: an exhausted --max-cells budget
+                    // is the expected way to slice a long sweep
+                    println!(
+                        "sweep incomplete ({}/{} cells done) — continue with \
+                         `fleet run --resume {}` plus the same sweep flags",
+                        run.total - run.skipped,
+                        run.total,
+                        ck.dir.display(),
+                    );
+                    return Ok(());
+                }
+            }
+        }
+    };
     let baseline = result.to_baseline();
     if !a.flag("quiet") {
         println!("{}", report::fleet_table(&baseline).render());

@@ -48,6 +48,11 @@ pub struct ScenarioConfig {
     /// concurrency-capped phases. Off by default — every historical
     /// consumer and golden trace sees byte-identical behavior.
     pub plan: PlanConfig,
+    /// When set, every `Snapshot { label }` event additionally writes
+    /// the post-event cluster to `<snapshot_dir>/<label>.eqsnap` in the
+    /// binary format (RFC 0007). `None` (the default) keeps the event a
+    /// pure measurement marker — golden traces are unaffected.
+    pub snapshot_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ScenarioConfig {
@@ -58,6 +63,7 @@ impl Default for ScenarioConfig {
             sample_every: 1,
             record_series: true,
             plan: PlanConfig::default(),
+            snapshot_dir: None,
         }
     }
 }
@@ -73,6 +79,7 @@ impl ScenarioConfig {
             sample_every,
             record_series: true,
             plan: PlanConfig::default(),
+            snapshot_dir: None,
         }
     }
 
@@ -98,6 +105,14 @@ pub enum ScenarioError {
     Expand(ExpandError),
     /// `CreatePool` was rejected by the cluster.
     State(StateError),
+    /// A `Snapshot` event could not write its binary snapshot file
+    /// (only possible with [`ScenarioConfig::snapshot_dir`] set).
+    Snapshot {
+        /// The snapshot event's label.
+        label: String,
+        /// The underlying encode/write failure.
+        error: crate::cluster::SnapshotError,
+    },
 }
 
 impl std::fmt::Display for ScenarioError {
@@ -109,6 +124,9 @@ impl std::fmt::Display for ScenarioError {
             ScenarioError::UnknownHost(h) => write!(f, "scenario references unknown host '{h}'"),
             ScenarioError::Expand(e) => write!(f, "expansion failed: {e}"),
             ScenarioError::State(e) => write!(f, "cluster rejected scenario event: {e}"),
+            ScenarioError::Snapshot { label, error } => {
+                write!(f, "snapshot '{label}' could not be written: {error}")
+            }
         }
     }
 }
@@ -503,6 +521,19 @@ impl<'a> ScenarioEngine<'a> {
             }
             ScenarioEvent::Snapshot { label } => {
                 self.capture_sample(0.0);
+                if let Some(dir) = self.cfg.snapshot_dir.clone() {
+                    // labels come from untrusted spec files: flatten them
+                    // to a safe filename so "../x" cannot escape the dir
+                    let safe: String = label
+                        .chars()
+                        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+                        .collect();
+                    let path = dir.join(format!("{safe}.eqsnap"));
+                    std::fs::create_dir_all(&dir)
+                        .map_err(crate::cluster::SnapshotError::from)
+                        .and_then(|()| crate::cluster::snapshot::save_state(&path, self.state))
+                        .map_err(|error| ScenarioError::Snapshot { label: label.clone(), error })?;
+                }
                 self.log_event(Event::SnapshotTaken { label: label.clone() });
                 Ok(EventOutcome::default())
             }
@@ -877,6 +908,30 @@ mod tests {
             .count();
         assert_eq!(phase_events, opt.plan.phases);
         assert!(s_opt.verify().is_empty());
+    }
+
+    #[test]
+    fn snapshot_event_writes_binary_state_when_dir_is_set() {
+        let dir = std::env::temp_dir().join(format!("eq_engine_snap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut state = clusters::demo(29);
+        let mut bal = Equilibrium::default();
+        let cfg = ScenarioConfig { snapshot_dir: Some(dir.clone()), ..ScenarioConfig::default() };
+        let mut engine = ScenarioEngine::new(&mut state, Some(&mut bal), cfg, 29);
+        engine.apply(&ScenarioEvent::FailOsd { osd: 0 }).unwrap();
+        engine
+            .apply(&ScenarioEvent::Snapshot { label: "after/fail".into() })
+            .unwrap();
+        drop(engine);
+        // the path-hostile label is flattened, and the written snapshot
+        // decodes back to the live state — including the downed osd,
+        // which the JSON dump format does not carry
+        let path = dir.join("after_fail.eqsnap");
+        let loaded = crate::cluster::snapshot::load_state(&path).unwrap();
+        assert!(!loaded.osd_is_up(0));
+        assert_eq!(loaded.total_used(), state.total_used());
+        assert!(loaded.verify().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

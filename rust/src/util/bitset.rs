@@ -48,6 +48,30 @@ impl BitSet {
         s
     }
 
+    /// Reassemble from raw words previously obtained via [`words`]
+    /// (the binary snapshot path). Returns `None` when the word count
+    /// does not match the universe size — the snapshot decoder turns
+    /// that into a typed error. The tail is re-masked and the population
+    /// count recomputed, so hostile word payloads cannot corrupt the
+    /// incremental invariants.
+    ///
+    /// [`words`]: BitSet::words
+    pub fn from_words(words: Vec<u64>, len: usize) -> Option<Self> {
+        if words.len() != len.div_ceil(64) {
+            return None;
+        }
+        let mut s = BitSet { words, len, ones: 0 };
+        s.mask_tail();
+        s.ones = s.words.iter().map(|w| w.count_ones() as usize).sum();
+        Some(s)
+    }
+
+    /// The raw backing words, 64 members per `u64`, tail bits zero.
+    /// This is the zero-copy serialization surface for binary snapshots.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Universe size (not the member count).
     pub fn len(&self) -> usize {
         self.len
@@ -299,6 +323,24 @@ mod tests {
             assert_eq!(set.iter_zeros().collect::<Vec<_>>(), want_zeros);
             assert_eq!(set.count_ones(), want_ones.len());
         }
+    }
+
+    #[test]
+    fn words_round_trip_and_reject_bad_lengths() {
+        let mut s = BitSet::new(130);
+        for i in [0usize, 64, 129] {
+            s.insert(i);
+        }
+        let back = BitSet::from_words(s.words().to_vec(), s.len()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.count_ones(), 3);
+        // wrong word count → None, not a panic
+        assert!(BitSet::from_words(vec![0; 2], 130).is_none());
+        assert!(BitSet::from_words(vec![0; 4], 130).is_none());
+        // hostile tail bits are masked off and never counted
+        let t = BitSet::from_words(vec![!0u64, !0u64, !0u64], 130).unwrap();
+        assert_eq!(t.count_ones(), 130);
+        assert_eq!(t.iter_ones().last(), Some(129));
     }
 
     #[test]

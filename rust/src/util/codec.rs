@@ -1,0 +1,396 @@
+//! Little-endian binary codec primitives for the `.eqsnap` snapshot
+//! format (RFC 0007).
+//!
+//! serde/bincode are unavailable offline, so the binary snapshot plane
+//! is built on two tiny, dependency-free pieces: a `ByteWriter` that
+//! appends fixed-width little-endian fields to a growable buffer, and a
+//! `ByteReader` that consumes them with bounds-checked, typed errors —
+//! never a panic, whatever the input bytes. Bulk column reads
+//! (`u64_column` / `u32_column`) decode whole SoA arena columns with one
+//! bounds check plus `chunks_exact`, which is what makes binary loads
+//! byte-column-speed instead of per-element-tree-walk speed.
+//!
+//! The FNV-1a digest at the bottom is the snapshot integrity check; the
+//! same constants are used by the hyperscale bench's move digest.
+
+use crate::util::mem::{vec_capacity_bytes, MemoryFootprint};
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x1_0000_0000_01b3;
+
+/// FNV-1a 64-bit hash over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Typed decode error with byte-offset context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The input ended before a field could be read in full.
+    UnexpectedEof {
+        /// Byte offset at which the read started.
+        offset: usize,
+        /// Bytes the field needed.
+        need: usize,
+    },
+    /// A length-prefixed string was not valid UTF-8.
+    Utf8 {
+        /// Byte offset of the string payload.
+        offset: usize,
+    },
+    /// A length or count field is implausibly large for the input.
+    LengthOverflow {
+        /// Byte offset of the offending field.
+        offset: usize,
+        /// The declared length.
+        len: u64,
+    },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::UnexpectedEof { offset, need } => {
+                write!(f, "unexpected end of input at byte {offset} (needed {need} more bytes)")
+            }
+            CodecError::Utf8 { offset } => write!(f, "invalid utf-8 in string at byte {offset}"),
+            CodecError::LengthOverflow { offset, len } => {
+                write!(f, "length {len} at byte {offset} exceeds remaining input")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// New writer with a capacity hint (snapshot encoders can estimate
+    /// their output size up front from the arena's column lengths).
+    pub fn with_capacity(cap: usize) -> ByteWriter {
+        ByteWriter { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Append a single byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a little-endian u16.
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian u32.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian i32.
+    pub fn put_i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian u64.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an f64 as its IEEE-754 bit pattern (exact round-trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Append a u32 length prefix followed by the string's UTF-8 bytes.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append raw bytes verbatim (no length prefix).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append a whole u64 column in little-endian order.
+    pub fn put_u64_column(&mut self, col: &[u64]) {
+        self.buf.reserve(col.len() * 8);
+        for &v in col {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Append a whole u32 column in little-endian order.
+    pub fn put_u32_column(&mut self, col: &[u32]) {
+        self.buf.reserve(col.len() * 4);
+        for &v in col {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Overwrite 8 previously written bytes at `offset` with a u64 —
+    /// used to patch section-table offsets after their payloads land.
+    pub fn patch_u64(&mut self, offset: usize, v: u64) {
+        self.buf[offset..offset + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Consume the writer, returning the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Borrow the encoded bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl MemoryFootprint for ByteWriter {
+    fn heap_bytes(&self) -> usize {
+        vec_capacity_bytes(&self.buf)
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed byte slice.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// New reader over the whole slice.
+    pub fn new(bytes: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { bytes, pos: 0 }
+    }
+
+    /// Current byte offset.
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    /// True when the input is fully consumed.
+    pub fn at_end(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+
+    /// Take `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::UnexpectedEof { offset: self.pos, need: n });
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a single byte.
+    pub fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian u16.
+    pub fn u16(&mut self) -> Result<u16, CodecError> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    /// Read a little-endian u32.
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Read a little-endian i32.
+    pub fn i32(&mut self) -> Result<i32, CodecError> {
+        let s = self.take(4)?;
+        Ok(i32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Read a little-endian u64.
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    /// Read an f64 from its IEEE-754 bit pattern.
+    pub fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a u32-length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, CodecError> {
+        let at = self.pos;
+        let len = self.u32()? as u64;
+        if len > self.remaining() as u64 {
+            return Err(CodecError::LengthOverflow { offset: at, len });
+        }
+        let payload_at = self.pos;
+        let s = self.take(len as usize)?;
+        std::str::from_utf8(s)
+            .map(str::to_string)
+            .map_err(|_| CodecError::Utf8 { offset: payload_at })
+    }
+
+    /// Validate a declared element count against the bytes remaining
+    /// (`width` bytes each) before allocating for it. Hostile inputs can
+    /// declare multi-GiB counts in a 40-byte file; checking first keeps
+    /// decode allocation proportional to the actual input size.
+    pub fn check_count(&self, count: u64, width: usize) -> Result<usize, CodecError> {
+        let need = count.checked_mul(width as u64);
+        match need {
+            Some(n) if n <= self.remaining() as u64 => Ok(count as usize),
+            _ => Err(CodecError::LengthOverflow { offset: self.pos, len: count }),
+        }
+    }
+
+    /// Bulk-read `count` little-endian u64s as one column.
+    pub fn u64_column(&mut self, count: usize) -> Result<Vec<u64>, CodecError> {
+        let raw = self.take(count * 8)?;
+        let mut col = Vec::with_capacity(count);
+        for chunk in raw.chunks_exact(8) {
+            col.push(u64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(col)
+    }
+
+    /// Bulk-read `count` little-endian u32s as one column.
+    pub fn u32_column(&mut self, count: usize) -> Result<Vec<u32>, CodecError> {
+        let raw = self.take(count * 4)?;
+        let mut col = Vec::with_capacity(count);
+        for chunk in raw.chunks_exact(4) {
+            col.push(u32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = ByteWriter::with_capacity(64);
+        w.put_u8(7);
+        w.put_u16(0xBEEF);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_i32(-42);
+        w.put_u64(u64::MAX - 1);
+        w.put_f64(3.25);
+        w.put_str("héllo");
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.i32().unwrap(), -42);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f64().unwrap(), 3.25);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert!(r.at_end());
+    }
+
+    #[test]
+    fn column_roundtrip() {
+        let u64s: Vec<u64> = (0..100).map(|i| i * 0x0101_0101_0101).collect();
+        let u32s: Vec<u32> = (0..100).map(|i| i * 0x0101_0101).collect();
+        let mut w = ByteWriter::default();
+        w.put_u64_column(&u64s);
+        w.put_u32_column(&u32s);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u64_column(100).unwrap(), u64s);
+        assert_eq!(r.u32_column(100).unwrap(), u32s);
+        assert!(r.at_end());
+    }
+
+    #[test]
+    fn eof_is_typed_not_panic() {
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        assert_eq!(r.u16().unwrap(), 0x0201);
+        let err = r.u64().unwrap_err();
+        assert_eq!(err, CodecError::UnexpectedEof { offset: 2, need: 8 });
+    }
+
+    #[test]
+    fn hostile_string_length_rejected() {
+        // declares a 4 GiB string in an 8-byte file
+        let mut w = ByteWriter::default();
+        w.put_u32(u32::MAX);
+        w.put_u32(0);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(matches!(r.str(), Err(CodecError::LengthOverflow { .. })));
+    }
+
+    #[test]
+    fn check_count_rejects_overflowing_counts() {
+        let r = ByteReader::new(&[0u8; 16]);
+        assert_eq!(r.check_count(2, 8).unwrap(), 2);
+        assert!(r.check_count(3, 8).is_err());
+        assert!(r.check_count(u64::MAX, 8).is_err());
+    }
+
+    #[test]
+    fn bad_utf8_rejected() {
+        let mut w = ByteWriter::default();
+        w.put_u32(2);
+        w.put_bytes(&[0xFF, 0xFE]);
+        let bytes = w.into_bytes();
+        assert!(matches!(ByteReader::new(&bytes).str(), Err(CodecError::Utf8 { .. })));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn patch_u64_overwrites_in_place() {
+        let mut w = ByteWriter::default();
+        w.put_u64(0);
+        w.put_u8(9);
+        w.patch_u64(0, 0x1122_3344_5566_7788);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u64().unwrap(), 0x1122_3344_5566_7788);
+        assert_eq!(r.u8().unwrap(), 9);
+    }
+
+    #[test]
+    fn writer_reports_footprint() {
+        let w = ByteWriter::with_capacity(256);
+        assert!(w.heap_bytes() >= 256);
+    }
+}

@@ -147,7 +147,11 @@ impl Json {
         out
     }
 
-    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+    /// Serialize into a caller-owned buffer at a given starting depth.
+    /// `cluster/dump.rs` streams its sections through this to reuse one
+    /// pre-sized `String` instead of materializing nested trees per
+    /// section, so it is crate-visible rather than private.
+    pub(crate) fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(true) => out.push_str("true"),
@@ -197,7 +201,7 @@ impl Json {
     /// Parse a complete JSON document (trailing whitespace allowed,
     /// trailing garbage rejected).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -208,7 +212,7 @@ impl Json {
     }
 }
 
-fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+pub(crate) fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');
         for _ in 0..w * depth {
@@ -217,7 +221,7 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_num(out: &mut String, x: f64) {
+pub(crate) fn write_num(out: &mut String, x: f64) {
     if x.fract() == 0.0 && x.abs() < 1e15 {
         // integral values print without a trailing ".0" so u64 round-trips
         out.push_str(&format!("{}", x as i64));
@@ -226,7 +230,7 @@ fn write_num(out: &mut String, x: f64) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -288,14 +292,29 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Maximum container nesting the parser accepts. Snapshot files cross
+/// trust boundaries (CLI `--state`, checkpoint dirs), so a pathological
+/// `[[[[...]]]]` must fail with a typed error instead of exhausting the
+/// stack through unbounded recursion.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), offset: self.pos }
+    }
+
+    fn enter(&mut self) -> Result<(), JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        self.depth += 1;
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -347,6 +366,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.object_body()?;
+        self.depth -= 1;
+        Ok(v)
+    }
+
+    fn object_body(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -372,6 +398,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.array_body()?;
+        self.depth -= 1;
+        Ok(v)
+    }
+
+    fn array_body(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -573,5 +606,23 @@ mod tests {
     fn deterministic_key_order() {
         let a = Json::obj().set("z", 1u64).set("a", 2u64);
         assert_eq!(a.dump(), r#"{"a":2,"z":1}"#);
+    }
+
+    #[test]
+    fn deep_but_sane_nesting_parses() {
+        let depth = 100;
+        let text = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn pathological_nesting_fails_with_typed_error() {
+        let depth = 200;
+        let text = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        let err = Json::parse(&text).unwrap_err();
+        assert!(err.msg.contains("nesting"), "got: {err}");
+        // mixed object/array nesting hits the same cap
+        let text = r#"{"a":"#.repeat(depth) + "1" + &"}".repeat(depth);
+        assert!(Json::parse(&text).is_err());
     }
 }

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod bitset;
 pub mod cli;
+pub mod codec;
 pub mod error;
 pub mod json;
 pub mod mem;

@@ -1,0 +1,146 @@
+//! Cross-format snapshot properties (RFC 0007).
+//!
+//! The binary `.eqsnap` format and the JSON dump must describe the same
+//! state class: on any cluster either format can produce, loading
+//! through one and re-serializing through the other is the identity.
+//! Exercised on the paper clusters, on fuzz-generated timelines (one
+//! per weight profile), and on the hyperscale smoke tier; plus
+//! corruption robustness (every failure is a typed `SnapshotError`)
+//! and memory-footprint accounting for the codec buffers.
+
+use equilibrium::balancer::Equilibrium;
+use equilibrium::cluster::{dump, snapshot, ClusterState, SnapshotError};
+use equilibrium::fuzz::{generate_spec, Profile};
+use equilibrium::generator::{clusters, hyperscale};
+use equilibrium::scenario::{ScenarioConfig, ScenarioEngine};
+use equilibrium::util::codec::ByteWriter;
+use equilibrium::util::mem::MemoryFootprint;
+
+/// Both round trips, both formats: `decode(encode(s))` must dump the
+/// same JSON as `s`, and `load(dump(s))` must encode the same bytes as
+/// `s`. Equal dumps ⇒ equal states (the dump is canonical), and equal
+/// encodings ⇒ equal states (the encoder is deterministic).
+fn assert_cross_format_identity(s: &ClusterState, label: &str) {
+    let bin = snapshot::encode(s);
+    let decoded = snapshot::decode(&bin).unwrap_or_else(|e| panic!("{label}: decode: {e}"));
+    assert!(decoded.verify().is_empty(), "{label}: decoded state verifies");
+    assert_eq!(dump::dump(&decoded), dump::dump(s), "{label}: binary→JSON identity");
+
+    let json_state =
+        dump::load(&dump::dump(s)).unwrap_or_else(|e| panic!("{label}: json load: {e}"));
+    assert_eq!(snapshot::encode(&json_state), bin, "{label}: JSON→binary identity");
+}
+
+#[test]
+fn paper_clusters_round_trip_across_both_formats() {
+    for name in ["a", "c", "f"] {
+        let s = clusters::by_name(name, 7).expect("paper cluster").state;
+        assert_cross_format_identity(&s, &format!("cluster {name}"));
+    }
+}
+
+#[test]
+fn fuzz_generated_timelines_round_trip_and_keep_osd_state() {
+    for (i, &profile) in Profile::ALL.iter().enumerate() {
+        let seed = 0x5AB5_0000 + i as u64;
+        let base = clusters::demo(seed);
+        let spec = generate_spec(&base, seed, profile, true);
+        let mut state = base;
+        let mut balancer = Equilibrium::default();
+        let config = ScenarioConfig { record_series: false, ..ScenarioConfig::default() };
+        let engine = ScenarioEngine::new(&mut state, Some(&mut balancer), config, spec.seed);
+        // some generated timelines legitimately abort (e.g. no balancer
+        // progress) — whatever state they leave behind must still snapshot
+        let _ = engine.run(&spec);
+
+        let label = format!("profile {profile:?}");
+        let bin = snapshot::encode(&state);
+        let decoded = snapshot::decode(&bin).unwrap_or_else(|e| panic!("{label}: decode: {e}"));
+        assert_eq!(dump::dump(&decoded), dump::dump(&state), "{label}: dump identity");
+        // what JSON cannot carry, the binary must: up/down and capacities
+        for o in 0..state.osd_count() as u32 {
+            assert_eq!(decoded.osd_is_up(o), state.osd_is_up(o), "{label}: osd.{o} up state");
+            assert_eq!(decoded.osd_size(o), state.osd_size(o), "{label}: osd.{o} capacity");
+        }
+    }
+}
+
+#[test]
+fn hyperscale_smoke_tier_round_trips() {
+    let s = hyperscale::build(&hyperscale::SMOKE, 0xD47AC);
+    assert_cross_format_identity(&s, "hyperscale smoke tier");
+}
+
+#[test]
+fn corrupted_snapshots_are_typed_errors_never_panics() {
+    let s = clusters::demo(3);
+    let bytes = snapshot::encode(&s);
+
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    assert!(matches!(snapshot::decode(&bad), Err(SnapshotError::Magic)));
+
+    // unknown version
+    let mut bad = bytes.clone();
+    bad[6] = 0xFE;
+    bad[7] = 0xCA;
+    assert!(matches!(snapshot::decode(&bad), Err(SnapshotError::Version(_))));
+
+    // every truncation point decodes to an error, not a panic
+    for keep in 0..bytes.len().min(160) {
+        assert!(snapshot::decode(&bytes[..keep]).is_err(), "truncated to {keep}");
+    }
+    for keep in (160..bytes.len()).step_by(61) {
+        assert!(snapshot::decode(&bytes[..keep]).is_err(), "truncated to {keep}");
+    }
+
+    // a flipped byte anywhere past the version field fails the digest
+    // (or, for the version bytes themselves, the version check)
+    for at in (8..bytes.len()).step_by(97) {
+        let mut bad = bytes.clone();
+        bad[at] ^= 0x10;
+        match snapshot::decode(&bad) {
+            Err(_) => {}
+            Ok(_) => panic!("flipping byte {at} went unnoticed"),
+        }
+    }
+    // flipping a digest byte specifically reports the digest mismatch
+    let mut bad = bytes.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x01;
+    assert!(matches!(snapshot::decode(&bad), Err(SnapshotError::Digest { .. })));
+}
+
+#[test]
+fn encode_buffer_is_presized_and_accounted() {
+    let s = clusters::demo(11);
+    let bytes = snapshot::encode(&s);
+    let estimate = snapshot::encoded_size_estimate(&s);
+    assert!(
+        estimate >= bytes.len(),
+        "estimate {estimate} must upper-bound the encoding ({} bytes)",
+        bytes.len()
+    );
+    assert!(
+        estimate <= bytes.len() * 4,
+        "estimate {estimate} is wastefully loose for {} bytes",
+        bytes.len()
+    );
+
+    // the codec buffer reports its footprint by capacity, so a
+    // pre-sized writer accounts at least every byte it will hold
+    let mut w = ByteWriter::with_capacity(estimate);
+    w.put_bytes(&bytes);
+    assert!(w.heap_bytes() >= bytes.len());
+    assert!(w.heap_bytes() >= estimate, "with_capacity is fully accounted");
+}
+
+#[test]
+fn decoded_state_is_as_compact_as_the_original() {
+    let s = clusters::demo(5);
+    let decoded = snapshot::decode(&snapshot::encode(&s)).unwrap();
+    // bulk column reads must not leave oversized buffers behind: the
+    // decoded arena's accounted heap matches a freshly built state's
+    assert_eq!(decoded.arena_bytes(), s.arena_bytes());
+}
