@@ -118,7 +118,7 @@ fn main() {
     );
 
     // 5. execute the winning plan through the coordinator
-    let report = execute_plan(&eq.movements, &ExecutorConfig::default(), state.osd_count());
+    let report = execute_plan(&eq.movements, &ExecutorConfig::default(), state.osd_count()).unwrap();
     println!(
         "\nexecuted {} transfers in {} virtual time (peak {} concurrent), {} at {}/s",
         report.transfers.len(),

@@ -1,0 +1,105 @@
+//! Estate coordinator benchmark (RFC 0008): wall time of the
+//! routed-growth estate sweep at 1/2/4 worker threads — pinning the
+//! aggregate byte-identical across thread counts — plus the headline
+//! router comparison: health-weighted vs round-robin final
+//! cross-cluster utilization variance. Emits **`BENCH_estate.json`** at
+//! the repo root; CI gates on `health_wins`.
+//!
+//! `--smoke` shrinks to reduced members and 4 seeds. The full run uses
+//! full-size members and 8 seeds and additionally asserts the win
+//! in-process (a failed assertion fails the bench).
+
+use std::time::Instant;
+
+use equilibrium::estate::{library, sweep_spec, EstateSweepConfig};
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
+use equilibrium::util::parallel::with_threads;
+use equilibrium::util::units::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let reduced = smoke;
+    let cfg = EstateSweepConfig {
+        seeds: if smoke { 4 } else { 8 },
+        ..EstateSweepConfig::default()
+    };
+    let case = library::by_name("routed-growth", cfg.seed_base, reduced)
+        .expect("routed-growth is a library case");
+    println!(
+        "estate bench — routed-growth × {} seeds ({}), threads 1/2/4",
+        cfg.seeds,
+        if reduced { "reduced" } else { "full-size" },
+    );
+
+    // thread-determinism pin on the health-weighted sweep
+    let mut rows: Vec<Json> = Vec::new();
+    let mut walls: Vec<f64> = Vec::new();
+    let mut first_render: Option<String> = None;
+    let mut health_baseline = None;
+    for threads in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let sweep = with_threads(threads, || {
+            sweep_spec(&case.spec, "health", &case.config, &cfg)
+        })
+        .expect("estate sweep");
+        let wall = t0.elapsed().as_secs_f64();
+        let baseline = sweep.summarize(cfg.seed_base);
+        let rendered = baseline.render();
+        match &first_render {
+            None => first_render = Some(rendered),
+            Some(first) => assert_eq!(
+                first, &rendered,
+                "estate aggregate diverged at {threads} threads"
+            ),
+        }
+        health_baseline = Some(baseline);
+        println!("  threads {threads}: sweep wall time {}", fmt_duration(wall));
+        walls.push(wall);
+        rows.push(Json::obj().set("threads", threads).set("wall_seconds", wall));
+    }
+    let speedup = walls[0] / walls[2];
+    println!("speedup 1 → 4 threads: {speedup:.2}×  (aggregates byte-identical)");
+
+    // the headline comparison: same estate, round-robin baseline router
+    let rr_baseline = sweep_spec(&case.spec, "round-robin", &case.config, &cfg)
+        .expect("round-robin sweep")
+        .summarize(cfg.seed_base);
+    let health = health_baseline.expect("health sweep ran");
+    let health_var = health.metrics["estate_variance"].mean;
+    let rr_var = rr_baseline.metrics["estate_variance"].mean;
+    let health_wins = health_var < rr_var;
+    println!(
+        "final estate variance (mean over {} seeds): health {health_var:.3e} vs \
+         round-robin {rr_var:.3e} — {}",
+        cfg.seeds,
+        if health_wins { "health wins" } else { "NO WIN" },
+    );
+
+    let doc = Json::obj()
+        .set("bench", "estate")
+        .set("smoke", smoke)
+        .set("case", "routed-growth")
+        .set("seeds", cfg.seeds)
+        .set("reduced", reduced)
+        .set("byte_identical", true)
+        .set("threads", Json::Arr(rows))
+        .set("speedup_1_to_4", speedup)
+        .set("health_variance_mean", health_var)
+        .set("round_robin_variance_mean", rr_var)
+        .set("health_wins", health_wins);
+    write_bench_json("estate", &doc);
+
+    // the full run gates the win in-process; smoke leaves the gate to
+    // CI's jq check on the emitted JSON so a smoke regression still
+    // surfaces with the bench output attached
+    if !smoke {
+        assert!(
+            health_wins,
+            "full estate bench requires health-weighted routing to end with strictly \
+             lower cross-cluster variance ({health_var:.3e} vs {rr_var:.3e})"
+        );
+        println!("gate passed: health-weighted variance strictly below round-robin");
+    }
+}

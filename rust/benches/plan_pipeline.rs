@@ -117,7 +117,7 @@ fn main() {
     let phased = schedule_plan(&initial, &opt.movements, &sched);
     let schedule_seconds = t1.elapsed().as_secs_f64();
 
-    let raw_makespan = execute_plan(&raw_plan, &sched.executor, n).makespan;
+    let raw_makespan = execute_plan(&raw_plan, &sched.executor, n).unwrap().makespan;
     let phased_makespan = phased.makespan(&sched.executor, n);
     assert!(opt.stats.bytes < opt.stats.raw_bytes, "churn must cancel bytes");
     assert!(phased_makespan < raw_makespan, "churn must cut the makespan");

@@ -30,17 +30,25 @@ pub struct OsdDfRow {
 }
 
 /// Whole-cluster df summary.
+///
+/// Per-OSD rows cover *every* device (operators need to see down and
+/// zero-size devices), but the summary statistics — mean, min, max,
+/// variance — are computed over the **indexed** (up ∧ size>0) set only,
+/// matching the view the balancer scores. Folding a freshly failed
+/// device's 0% utilization into the mean would drag the reported
+/// variance away from the number the balancer is actually driving down.
 #[derive(Debug, Clone)]
 pub struct DfReport {
-    /// One row per OSD.
+    /// One row per OSD (all devices, including down and zero-size).
     pub osds: Vec<OsdDfRow>,
-    /// Mean relative utilization over all OSDs.
+    /// Mean relative utilization over the indexed (up ∧ size>0) set.
     pub mean_utilization: f64,
-    /// Minimum relative utilization.
+    /// Minimum relative utilization over the indexed set.
     pub min_utilization: f64,
-    /// Maximum relative utilization.
+    /// Maximum relative utilization over the indexed set.
     pub max_utilization: f64,
-    /// Population variance of utilization (the paper's balance metric).
+    /// Population variance of utilization over the indexed set (the
+    /// paper's balance metric, the balancer's view).
     pub variance: f64,
     /// Number of up devices (O(1) from the packed membership set).
     pub up_osds: usize,
@@ -54,7 +62,10 @@ pub struct DfReport {
 /// Compute the report.
 pub fn df(state: &ClusterState) -> DfReport {
     let utils = state.utilizations();
-    let mean = stats::mean(&utils);
+    // summary stats over the indexed set — the balancer's view; the
+    // per-OSD rows below still cover every device
+    let indexed = state.indexed_utilizations();
+    let mean = stats::mean(&indexed);
     let osds = (0..state.osd_count() as OsdId)
         .map(|o| {
             let host = state
@@ -90,9 +101,9 @@ pub fn df(state: &ClusterState) -> DfReport {
     DfReport {
         osds,
         mean_utilization: mean,
-        min_utilization: stats::min(&utils),
-        max_utilization: stats::max(&utils),
-        variance: stats::variance(&utils),
+        min_utilization: stats::min(&indexed),
+        max_utilization: stats::max(&indexed),
+        variance: stats::variance(&indexed),
         up_osds: state.up_osd_count(),
         down_osds: state.down_osds().collect(),
         pools,
@@ -130,7 +141,7 @@ pub fn render(report: &DfReport, max_osd_rows: usize) -> String {
         "OSD", "CLASS", "HOST", "SIZE", "USED", "UTIL", "PGS", "DEV"
     ));
     let mut rows: Vec<&OsdDfRow> = report.osds.iter().collect();
-    rows.sort_by(|a, b| b.deviation.abs().partial_cmp(&a.deviation.abs()).unwrap());
+    rows.sort_by(|a, b| b.deviation.abs().total_cmp(&a.deviation.abs()));
     for r in rows.iter().take(max_osd_rows) {
         out.push_str(&format!(
             "  osd.{:<2} {:<5} {:<10} {:>10} {:>10} {:>8} {:>7} {:>+8.2}%\n",
@@ -211,5 +222,39 @@ mod tests {
         let r = df(&s);
         let sum_dev: f64 = r.osds.iter().map(|o| o.deviation).sum();
         assert!(sum_dev.abs() < 1e-9);
+    }
+
+    #[test]
+    fn df_statistics_match_the_balancers_view_after_a_failure() {
+        let mut s = clusters::demo(13);
+        // fail a device: its shards backfill off, its utilization drops
+        // to 0, and it leaves the balancer's indexed set
+        crate::cluster::recovery::fail_osd(&mut s, 3);
+        let r = df(&s);
+        // pre-fix, the down device's 0% row was folded into the summary,
+        // dragging mean down and inflating variance vs the balancer
+        let expect_var = s.indexed_utilization_variance();
+        assert!(
+            (r.variance - expect_var).abs() < 1e-15,
+            "df variance {} must match the balancer's indexed view {}",
+            r.variance,
+            expect_var,
+        );
+        let all_var = s.utilization_variance();
+        assert!(
+            (r.variance - all_var).abs() > 1e-6,
+            "with a down device the all-OSD variance must differ (got {} vs {})",
+            r.variance,
+            all_var,
+        );
+        let indexed = s.indexed_utilizations();
+        assert!((r.mean_utilization - stats::mean(&indexed)).abs() < 1e-15);
+        assert!(
+            r.min_utilization > 0.0,
+            "the down device's 0% must not be reported as the minimum"
+        );
+        // per-OSD rows still cover every device, including the down one
+        assert_eq!(r.osds.len(), s.osd_count());
+        assert_eq!(r.osds[3].used, 0);
     }
 }

@@ -181,7 +181,7 @@ mod tests {
     fn recovery_time_is_estimable() {
         let mut s = clusters::demo(87);
         let report = fail_osd(&mut s, 2);
-        let exec = execute_plan(&report.backfills, &ExecutorConfig::default(), s.osd_count());
+        let exec = execute_plan(&report.backfills, &ExecutorConfig::default(), s.osd_count()).unwrap();
         assert!(exec.makespan > 0.0);
         assert_eq!(exec.total_bytes, report.backfills.iter().map(|m| m.bytes).sum::<u64>());
     }

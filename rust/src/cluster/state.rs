@@ -680,6 +680,24 @@ impl ClusterState {
         stats::variance(&self.utilizations())
     }
 
+    /// Utilization of every *indexed* (up ∧ size>0) OSD, ascending by
+    /// device id — the device set the balancer actually scores. Down and
+    /// zero-capacity devices are excluded; summary statistics derived
+    /// from this slice match the balancer's view of the cluster.
+    pub fn indexed_utilizations(&self) -> Vec<f64> {
+        (0..self.osd_count() as OsdId)
+            .filter(|&o| self.osd_is_indexed(o))
+            .map(|o| self.utilization(o))
+            .collect()
+    }
+
+    /// Population variance of utilization over the indexed (up ∧
+    /// size>0) set — the balancer's balance metric, unskewed by down or
+    /// zero-capacity devices sitting at utilization 0.
+    pub fn indexed_utilization_variance(&self) -> f64 {
+        stats::variance(&self.indexed_utilizations())
+    }
+
     /// O(1) estimate of [`ClusterState::utilization_variance`] from the
     /// incrementally maintained Σu/Σu² (renormalized periodically, so
     /// drift stays below ~1e-9 relative). Monitoring/throttling signal —

@@ -13,9 +13,40 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::fmt;
 
 use crate::cluster::Movement;
 use crate::crush::OsdId;
+
+/// A plan handed to [`execute_plan`] referenced a device the cluster
+/// does not have. Returned instead of an index panic so callers feeding
+/// externally-sourced plans (snapshots, CLI input, estate routing) can
+/// surface the offending movement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecutorError {
+    /// `plan[index]` names an OSD id ≥ the cluster's device count.
+    OsdOutOfRange {
+        /// Position of the offending movement in the plan.
+        index: usize,
+        /// The out-of-range device id.
+        osd: OsdId,
+        /// Number of devices the executor was told the cluster has.
+        osd_count: usize,
+    },
+}
+
+impl fmt::Display for ExecutorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecutorError::OsdOutOfRange { index, osd, osd_count } => write!(
+                f,
+                "plan[{index}] references osd.{osd} but the cluster has {osd_count} devices"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ExecutorError {}
 
 /// Executor tunables.
 #[derive(Debug, Clone)]
@@ -69,12 +100,18 @@ impl ExecutionReport {
 
     /// The OSD whose transfer lanes were occupied longest (the batch's
     /// bottleneck device), with its busy seconds. None for empty plans.
+    ///
+    /// Total-order comparison (`f64::total_cmp`), so non-finite busy
+    /// seconds — e.g. +∞ from a zero-bandwidth config — rank as the
+    /// bottleneck instead of panicking, and NaN lanes (excluded by the
+    /// `> 0.0` occupancy filter anyway) can never poison the fold.
+    /// Tie-break: equal busy seconds → lowest OSD id.
     pub fn bottleneck(&self) -> Option<(OsdId, f64)> {
         self.osd_busy_seconds
             .iter()
             .enumerate()
             .filter(|&(_, &b)| b > 0.0)
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
             .map(|(o, &b)| (o as OsdId, b))
     }
 }
@@ -95,10 +132,9 @@ impl PartialOrd for Finish {
 
 impl Ord for Finish {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time
-            .partial_cmp(&other.time)
-            .unwrap()
-            .then(self.idx.cmp(&other.idx))
+        // total order: a non-finite duration (degenerate bandwidth
+        // config) must not panic the event heap
+        self.time.total_cmp(&other.time).then(self.idx.cmp(&other.idx))
     }
 }
 
@@ -106,12 +142,35 @@ impl Ord for Finish {
 /// concurrency limits. Movements are started greedily: at every event
 /// time the earliest-planned movement whose source and destination both
 /// have a free backfill slot starts.
-pub fn execute_plan(plan: &[Movement], cfg: &ExecutorConfig, osd_count: usize) -> ExecutionReport {
+///
+/// Degenerate plans are handled explicitly rather than by index math:
+///
+/// - A movement referencing an OSD id ≥ `osd_count` yields
+///   [`ExecutorError::OsdOutOfRange`] (the whole plan is rejected before
+///   any virtual time passes).
+/// - A self-move (`from == to`) transfers no data, so it is *skipped*:
+///   it produces no [`TransferRecord`], occupies no backfill slot or
+///   busy seconds on the device, and its bytes are excluded from
+///   `total_bytes`. (Counting it would double-book one OSD's inflight
+///   slots and busy lanes for a transfer that cannot physically occur.)
+pub fn execute_plan(
+    plan: &[Movement],
+    cfg: &ExecutorConfig,
+    osd_count: usize,
+) -> Result<ExecutionReport, ExecutorError> {
+    for (index, m) in plan.iter().enumerate() {
+        for osd in [m.from, m.to] {
+            if osd as usize >= osd_count {
+                return Err(ExecutorError::OsdOutOfRange { index, osd, osd_count });
+            }
+        }
+    }
     let mut inflight_per_osd: Vec<usize> = vec![0; osd_count];
     let mut busy_per_osd: Vec<f64> = vec![0.0; osd_count];
-    let mut pending: Vec<usize> = (0..plan.len()).collect(); // indices, plan order
+    // indices in plan order; self-moves transfer nothing and are skipped
+    let mut pending: Vec<usize> = (0..plan.len()).filter(|&i| plan[i].from != plan[i].to).collect();
     let mut finish_heap: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
-    let mut transfers: Vec<TransferRecord> = Vec::with_capacity(plan.len());
+    let mut transfers: Vec<TransferRecord> = Vec::with_capacity(pending.len());
     let mut now = 0.0f64;
     let mut running = 0usize;
     let mut peak = 0usize;
@@ -159,14 +218,14 @@ pub fn execute_plan(plan: &[Movement], cfg: &ExecutorConfig, osd_count: usize) -
         running -= 1;
     }
 
-    let total_bytes = plan.iter().map(|m| m.bytes).sum();
-    ExecutionReport {
+    let total_bytes = plan.iter().filter(|m| m.from != m.to).map(|m| m.bytes).sum();
+    Ok(ExecutionReport {
         transfers,
         makespan: now,
         peak_concurrency: peak,
         total_bytes,
         osd_busy_seconds: busy_per_osd,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -182,7 +241,7 @@ mod tests {
     fn disjoint_movements_run_concurrently() {
         let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 1.0 };
         let plan = vec![mv(0, 0, 1, 100), mv(1, 2, 3, 100)];
-        let rep = execute_plan(&plan, &cfg, 4);
+        let rep = execute_plan(&plan, &cfg, 4).unwrap();
         assert_eq!(rep.peak_concurrency, 2);
         assert!((rep.makespan - 100.0).abs() < 1e-9, "parallel: {}", rep.makespan);
     }
@@ -191,7 +250,7 @@ mod tests {
     fn same_osd_movements_serialize() {
         let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 1.0 };
         let plan = vec![mv(0, 0, 1, 100), mv(1, 0, 2, 100)]; // share source 0
-        let rep = execute_plan(&plan, &cfg, 3);
+        let rep = execute_plan(&plan, &cfg, 3).unwrap();
         assert_eq!(rep.peak_concurrency, 1);
         assert!((rep.makespan - 200.0).abs() < 1e-9, "serial: {}", rep.makespan);
     }
@@ -200,7 +259,7 @@ mod tests {
     fn higher_backfill_limit_raises_concurrency() {
         let cfg = ExecutorConfig { max_backfills: 2, bandwidth: 1.0 };
         let plan = vec![mv(0, 0, 1, 100), mv(1, 0, 2, 100), mv(2, 0, 3, 100)];
-        let rep = execute_plan(&plan, &cfg, 4);
+        let rep = execute_plan(&plan, &cfg, 4).unwrap();
         assert_eq!(rep.peak_concurrency, 2);
         assert!((rep.makespan - 200.0).abs() < 1e-9);
     }
@@ -210,14 +269,14 @@ mod tests {
         let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 1.0 };
         // plan order: big then small on the same pair; the big one starts first
         let plan = vec![mv(0, 0, 1, 500), mv(1, 0, 1, 10)];
-        let rep = execute_plan(&plan, &cfg, 2);
+        let rep = execute_plan(&plan, &cfg, 2).unwrap();
         assert!(rep.transfers[0].start < rep.transfers[1].start);
         assert!((rep.makespan - 510.0).abs() < 1e-9);
     }
 
     #[test]
     fn empty_plan() {
-        let rep = execute_plan(&[], &ExecutorConfig::default(), 4);
+        let rep = execute_plan(&[], &ExecutorConfig::default(), 4).unwrap();
         assert_eq!(rep.makespan, 0.0);
         assert_eq!(rep.total_bytes, 0);
         assert_eq!(rep.peak_concurrency, 0);
@@ -227,7 +286,7 @@ mod tests {
     fn throughput_accounts_all_bytes() {
         let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 2.0 };
         let plan = vec![mv(0, 0, 1, 100), mv(1, 2, 3, 300)];
-        let rep = execute_plan(&plan, &cfg, 4);
+        let rep = execute_plan(&plan, &cfg, 4).unwrap();
         assert_eq!(rep.total_bytes, 400);
         assert!((rep.makespan - 150.0).abs() < 1e-9);
         assert!((rep.throughput() - 400.0 / 150.0).abs() < 1e-9);
@@ -237,7 +296,7 @@ mod tests {
     fn busy_seconds_account_both_endpoints() {
         let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 1.0 };
         let plan = vec![mv(0, 0, 1, 100), mv(1, 0, 2, 50)];
-        let rep = execute_plan(&plan, &cfg, 3);
+        let rep = execute_plan(&plan, &cfg, 3).unwrap();
         assert!((rep.osd_busy_seconds[0] - 150.0).abs() < 1e-9);
         assert!((rep.osd_busy_seconds[1] - 100.0).abs() < 1e-9);
         assert!((rep.osd_busy_seconds[2] - 50.0).abs() < 1e-9);
@@ -246,7 +305,69 @@ mod tests {
         assert!((busy - 150.0).abs() < 1e-9);
         // the bottleneck lane lower-bounds the makespan
         assert!(rep.makespan + 1e-9 >= busy / cfg.max_backfills as f64);
-        assert!(execute_plan(&[], &cfg, 3).bottleneck().is_none());
+        assert!(execute_plan(&[], &cfg, 3).unwrap().bottleneck().is_none());
+    }
+
+    #[test]
+    fn bottleneck_handles_nonfinite_busy_seconds() {
+        // zero-bandwidth config: every duration is +∞; the pre-fix
+        // partial_cmp(..).unwrap() comparator panicked on this report
+        let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 0.0 };
+        let rep = execute_plan(&[mv(0, 0, 1, 100)], &cfg, 3).unwrap();
+        let (osd, busy) = rep.bottleneck().unwrap();
+        assert_eq!(osd, 0, "tie on +inf busy seconds resolves to the lowest id");
+        assert!(busy.is_infinite() && busy > 0.0);
+        // a hand-built report with a NaN lane must not panic either: the
+        // occupancy filter excludes it, total_cmp orders the rest
+        let rep = ExecutionReport {
+            transfers: vec![],
+            makespan: 0.0,
+            peak_concurrency: 0,
+            total_bytes: 0,
+            osd_busy_seconds: vec![f64::NAN, 7.0, 3.0],
+        };
+        assert_eq!(rep.bottleneck(), Some((1, 7.0)));
+    }
+
+    #[test]
+    fn bottleneck_tie_breaks_to_lowest_osd_id() {
+        let rep = ExecutionReport {
+            transfers: vec![],
+            makespan: 0.0,
+            peak_concurrency: 0,
+            total_bytes: 0,
+            osd_busy_seconds: vec![0.0, 5.0, 5.0, 2.0],
+        };
+        assert_eq!(rep.bottleneck(), Some((1, 5.0)), "equal busy seconds → lowest OSD id");
+    }
+
+    #[test]
+    fn self_move_is_skipped_not_double_counted() {
+        let cfg = ExecutorConfig { max_backfills: 1, bandwidth: 1.0 };
+        // pre-fix, the self-move booked both inflight slots and 2×100s of
+        // busy time on OSD 0 and serialized the real transfer behind it
+        let plan = vec![mv(0, 0, 0, 100), mv(1, 0, 1, 50)];
+        let rep = execute_plan(&plan, &cfg, 2).unwrap();
+        assert_eq!(rep.transfers.len(), 1, "self-move produces no transfer");
+        assert_eq!(rep.transfers[0].movement.pg.index, 1);
+        assert_eq!(rep.transfers[0].start, 0.0, "self-move holds no backfill slot");
+        assert_eq!(rep.total_bytes, 50, "self-move bytes transfer nothing");
+        assert!((rep.osd_busy_seconds[0] - 50.0).abs() < 1e-9);
+        // a plan of only self-moves is a no-op
+        let rep = execute_plan(&[mv(0, 3, 3, 10)], &cfg, 4).unwrap();
+        assert_eq!(rep.makespan, 0.0);
+        assert_eq!(rep.total_bytes, 0);
+        assert!(rep.bottleneck().is_none());
+    }
+
+    #[test]
+    fn out_of_range_osd_is_a_typed_error() {
+        let cfg = ExecutorConfig::default();
+        let err = execute_plan(&[mv(0, 0, 1, 10), mv(1, 2, 9, 10)], &cfg, 4).unwrap_err();
+        assert_eq!(err, ExecutorError::OsdOutOfRange { index: 1, osd: 9, osd_count: 4 });
+        assert!(err.to_string().contains("osd.9"));
+        let err = execute_plan(&[mv(0, 9, 1, 10)], &cfg, 4).unwrap_err();
+        assert_eq!(err, ExecutorError::OsdOutOfRange { index: 0, osd: 9, osd_count: 4 });
     }
 
     #[test]
@@ -255,7 +376,7 @@ mod tests {
         // move 1 blocks on OSD 0 (busy with move 0); move 2 is disjoint
         // and must start immediately despite being later in the plan
         let plan = vec![mv(0, 0, 1, 1000), mv(1, 0, 2, 10), mv(2, 3, 4, 10)];
-        let rep = execute_plan(&plan, &cfg, 5);
+        let rep = execute_plan(&plan, &cfg, 5).unwrap();
         let t2 = rep.transfers.iter().find(|t| t.movement.pg.index == 2).unwrap();
         assert_eq!(t2.start, 0.0, "disjoint move must not wait behind a blocked head");
     }

@@ -10,5 +10,5 @@ pub mod throttle;
 
 pub use daemon::{run_daemon, DaemonConfig, DaemonReport, RoundReport};
 pub use events::{Event, EventLog};
-pub use executor::{execute_plan, ExecutionReport, ExecutorConfig, TransferRecord};
+pub use executor::{execute_plan, ExecutionReport, ExecutorConfig, ExecutorError, TransferRecord};
 pub use throttle::Throttle;

@@ -21,8 +21,26 @@ pub struct Throttle {
     pub decrease: f64,
 }
 
+/// Fallback round target when the caller hands `Throttle::new` a
+/// non-finite or non-positive `target_seconds`.
+pub const DEFAULT_TARGET_SECONDS: f64 = 60.0;
+
+/// Fallback multiplicative-decrease factor when the public `decrease`
+/// field is set outside the meaningful open interval `(0, 1)`.
+pub const DEFAULT_DECREASE: f64 = 0.5;
+
 impl Throttle {
+    /// Build a controller with `initial` moves per round aiming at
+    /// `target_seconds` per round. A non-finite or non-positive target
+    /// would make the over-target comparison in [`Throttle::observe`]
+    /// vacuous (never or always true), so such inputs are replaced with
+    /// [`DEFAULT_TARGET_SECONDS`].
     pub fn new(initial: usize, target_seconds: f64) -> Throttle {
+        let target_seconds = if target_seconds.is_finite() && target_seconds > 0.0 {
+            target_seconds
+        } else {
+            DEFAULT_TARGET_SECONDS
+        };
         Throttle {
             budget: initial.max(1),
             min_budget: 1,
@@ -38,18 +56,37 @@ impl Throttle {
         self.budget
     }
 
+    /// The `decrease` field is public; a value ≥ 1.0 (or ≤ 0, or NaN)
+    /// would turn multiplicative decrease into a no-op or an *increase*,
+    /// so anything outside `(0, 1)` falls back to [`DEFAULT_DECREASE`].
+    fn effective_decrease(&self) -> f64 {
+        if self.decrease > 0.0 && self.decrease < 1.0 {
+            self.decrease
+        } else {
+            DEFAULT_DECREASE
+        }
+    }
+
     /// Feed back the measured makespan of the executed round; returns the
-    /// next round's budget.
+    /// next round's budget. A non-finite makespan (NaN or ±∞ from a
+    /// degenerate executor config) is treated as "over target": the
+    /// budget backs off by the multiplicative-decrease factor rather
+    /// than sneaking through the additive-increase branch.
     pub fn observe(&mut self, makespan_seconds: f64, moves_executed: usize) -> usize {
         if moves_executed == 0 {
             // nothing ran (converged or blocked) — keep the budget
             return self.budget;
         }
-        if makespan_seconds > self.target_seconds {
+        let decrease = self.effective_decrease();
+        if !makespan_seconds.is_finite() {
+            self.budget =
+                ((self.budget as f64 * decrease).floor() as usize).max(self.min_budget).max(1);
+        } else if makespan_seconds > self.target_seconds {
             // too slow: back off proportionally to the overshoot, at
             // least the multiplicative decrease
-            let factor = (self.target_seconds / makespan_seconds).min(self.decrease);
-            self.budget = ((self.budget as f64 * factor).floor() as usize).max(self.min_budget);
+            let factor = (self.target_seconds / makespan_seconds).min(decrease);
+            self.budget =
+                ((self.budget as f64 * factor).floor() as usize).max(self.min_budget).max(1);
         } else {
             self.budget = (self.budget + self.increase).min(self.max_budget);
         }
@@ -91,5 +128,43 @@ mod tests {
     fn zero_moves_keeps_budget() {
         let mut t = Throttle::new(50, 60.0);
         assert_eq!(t.observe(0.0, 0), 50);
+    }
+
+    #[test]
+    fn constructor_sanitizes_degenerate_targets() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -5.0] {
+            let t = Throttle::new(10, bad);
+            assert_eq!(
+                t.target_seconds, DEFAULT_TARGET_SECONDS,
+                "target {bad} must fall back to the default"
+            );
+        }
+        assert_eq!(Throttle::new(10, 90.0).target_seconds, 90.0);
+    }
+
+    #[test]
+    fn nonfinite_makespan_is_over_target() {
+        // pre-fix, NaN > target was false and the budget *increased*
+        let mut t = Throttle::new(100, 60.0);
+        assert_eq!(t.observe(f64::NAN, 100), 50, "NaN makespan must back off");
+        let mut t = Throttle::new(100, 60.0);
+        assert_eq!(t.observe(f64::INFINITY, 100), 50, "inf makespan must back off");
+    }
+
+    #[test]
+    fn misconfigured_decrease_falls_back() {
+        // a *slight* overshoot (61s vs 60s target) must still back off by
+        // at least the multiplicative factor; pre-fix a decrease outside
+        // (0, 1) let factor = min(60/61, decrease) degrade to ≈1 (no-op)
+        // or to 0 (collapse to min_budget) instead
+        for bad in [1.0, 1.5, 0.0, -0.5, f64::NAN] {
+            let mut t = Throttle::new(100, 60.0);
+            t.decrease = bad;
+            assert_eq!(t.observe(61.0, 100), 50, "decrease {bad} must fall back to 0.5");
+        }
+        // a valid decrease is still honored
+        let mut t = Throttle::new(100, 60.0);
+        t.decrease = 0.25;
+        assert_eq!(t.observe(61.0, 100), 25);
     }
 }

@@ -1,0 +1,120 @@
+//! Per-member-cluster health scoring — the signal the estate routers
+//! and the degraded-migration pass consume.
+//!
+//! The score is derived from [`crate::cluster::health::df`] (whose
+//! summary statistics cover the indexed — up ∧ size>0 — device set, the
+//! balancer's view) and the packed up bitset: free capacity headroom,
+//! within-cluster utilization variance, and the fraction of devices
+//! down. All three channels are pure functions of cluster state, so
+//! health assessment replays bit-for-bit.
+
+use crate::cluster::health;
+use crate::cluster::ClusterState;
+
+/// Thresholds and weights for turning a [`HealthReport`]'s raw channels
+/// into a score and a degraded verdict.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// A member whose down-device fraction exceeds this is degraded
+    /// (default 0.25 — a quarter of the estate member's devices).
+    pub max_down_fraction: f64,
+    /// A member whose free-capacity fraction falls below this is
+    /// degraded (default 0.10 — almost full).
+    pub min_free_fraction: f64,
+    /// Weight of the within-cluster utilization variance in the score
+    /// denominator (default 50.0: a typical post-balance variance of
+    /// ~1e-3 costs ~5 % of the score; an unbalanced 1e-2 costs ~33 %).
+    pub variance_weight: f64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { max_down_fraction: 0.25, min_free_fraction: 0.10, variance_weight: 50.0 }
+    }
+}
+
+/// One member cluster's health assessment.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    /// Free-capacity headroom: `1 − mean indexed utilization`.
+    pub free_fraction: f64,
+    /// Mean relative utilization over the indexed device set.
+    pub mean_utilization: f64,
+    /// Population variance of utilization over the indexed set.
+    pub variance: f64,
+    /// Fraction of the member's devices that are down.
+    pub down_fraction: f64,
+    /// Composite score in `[0, 1]`: higher is healthier. See [`assess`].
+    pub score: f64,
+    /// The member crossed a degraded threshold (too many devices down,
+    /// or almost full) — the estate migrates pools off it.
+    pub degraded: bool,
+}
+
+/// Assess one member cluster under `policy`.
+///
+/// The score is `free · (1 − down) / (1 + w · variance)`: headroom
+/// scaled down by the failed-device fraction and by imbalance. It is
+/// monotone in every channel an operator would reach for, stays in
+/// `[0, 1]`, and — because every input is deterministic cluster state —
+/// two runs of the same timeline score identically.
+pub fn assess(state: &ClusterState, policy: &HealthPolicy) -> HealthReport {
+    let report = health::df(state);
+    let osds = state.osd_count();
+    let down_fraction = if osds == 0 {
+        0.0
+    } else {
+        report.down_osds.len() as f64 / osds as f64
+    };
+    let mean_utilization = report.mean_utilization;
+    let free_fraction = (1.0 - mean_utilization).clamp(0.0, 1.0);
+    let variance = report.variance;
+    let score =
+        free_fraction * (1.0 - down_fraction) / (1.0 + policy.variance_weight * variance);
+    let degraded =
+        down_fraction > policy.max_down_fraction || free_fraction < policy.min_free_fraction;
+    HealthReport { free_fraction, mean_utilization, variance, down_fraction, score, degraded }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::recovery::fail_osd;
+    use crate::generator::clusters;
+
+    #[test]
+    fn healthy_cluster_scores_high_and_is_not_degraded() {
+        let s = clusters::demo(7);
+        let h = assess(&s, &HealthPolicy::default());
+        assert!(!h.degraded);
+        assert!(h.score > 0.0 && h.score <= 1.0);
+        assert!((h.free_fraction + h.mean_utilization - 1.0).abs() < 1e-12);
+        assert_eq!(h.down_fraction, 0.0);
+    }
+
+    #[test]
+    fn failures_lower_the_score_and_cross_the_degraded_threshold() {
+        let mut s = clusters::demo(7);
+        let policy = HealthPolicy::default();
+        let before = assess(&s, &policy);
+        // demo has 12 devices: 3 down = 25 % (not degraded), 4 = 33 %
+        fail_osd(&mut s, 0);
+        fail_osd(&mut s, 2);
+        fail_osd(&mut s, 4);
+        let at_threshold = assess(&s, &policy);
+        assert!(at_threshold.score < before.score);
+        assert!(!at_threshold.degraded, "25 % down is at, not past, the threshold");
+        fail_osd(&mut s, 6);
+        let past = assess(&s, &policy);
+        assert!(past.degraded, "a third of devices down is degraded");
+        assert!(past.down_fraction > policy.max_down_fraction);
+    }
+
+    #[test]
+    fn near_full_members_are_degraded() {
+        let s = clusters::demo(7);
+        let policy = HealthPolicy { min_free_fraction: 0.95, ..HealthPolicy::default() };
+        // the demo cluster stores real data, so headroom < 95 %
+        assert!(assess(&s, &policy).degraded);
+    }
+}

@@ -1,0 +1,178 @@
+//! Named estate cases — the estate analogue of
+//! [`crate::scenario::library`]: heterogeneous member shapes plus a
+//! timeline, in a full size (benchmarks) and a reduced size (CI smoke).
+//!
+//! Every case is deliberately capacity-skewed (a small edge member next
+//! to much larger cores): that skew is exactly what separates the
+//! health-weighted router from the round-robin baseline. With equal
+//! members the two routers converge; with skewed members round-robin
+//! overfills the small cluster and the cross-cluster utilization
+//! variance shows it.
+
+use super::spec::{EstateSpec, MemberSpec};
+use super::EstateConfig;
+use crate::scenario::ScenarioEvent;
+use crate::simulator::WorkloadModel;
+use crate::util::units::{GIB, TIB};
+
+/// Every named estate case, in canonical order.
+pub const ALL: [&str; 3] = ["routed-growth", "degraded-failover", "mixed-churn"];
+
+/// A named estate case: the spec plus the estate config it runs under.
+#[derive(Debug, Clone)]
+pub struct EstateCase {
+    /// Case name (one of [`ALL`]).
+    pub name: &'static str,
+    /// One-line description for `estate list`.
+    pub description: &'static str,
+    /// The estate timeline.
+    pub spec: EstateSpec,
+    /// Estate tunables the case runs under.
+    pub config: EstateConfig,
+}
+
+/// The three member shapes every case shares: a small edge cluster, a
+/// medium core, and a large core. Reduced sizes keep CI smoke fast.
+fn members(reduced: bool) -> [MemberSpec; 3] {
+    if reduced {
+        [
+            MemberSpec::new("edge", 3, 2 * TIB, TIB),
+            MemberSpec::new("core-a", 4, 4 * TIB, 3 * TIB),
+            MemberSpec::new("core-b", 6, 6 * TIB, 7 * TIB),
+        ]
+    } else {
+        [
+            MemberSpec::new("edge", 4, 4 * TIB, 2 * TIB),
+            MemberSpec::new("core-a", 8, 6 * TIB, 9 * TIB),
+            MemberSpec::new("core-b", 12, 8 * TIB, 18 * TIB),
+        ]
+    }
+}
+
+fn base(name: &str, seed: u64, reduced: bool) -> EstateSpec {
+    let [a, b, c] = members(reduced);
+    EstateSpec::new(name, seed).member(a).member(b).member(c)
+}
+
+/// Routed growth: a stream of new pools and client writes lands on the
+/// estate; the router decides where. Health-weighted routing keeps the
+/// small member from overfilling; round-robin does not — the benched
+/// comparison (`benches/estate.rs`, CI-gated).
+fn routed_growth(seed: u64, reduced: bool) -> EstateSpec {
+    let (pools, pg, user, wl) = if reduced {
+        (6usize, 32u32, 512 * GIB, 512 * GIB)
+    } else {
+        (8usize, 128u32, TIB, 2 * TIB)
+    };
+    let mut spec = base("routed-growth", seed, reduced).snapshot("initial");
+    for i in 0..pools {
+        spec = spec.create_pool(&format!("app{i}"), pg, 3, user);
+    }
+    spec.balance_all(200)
+        .snapshot("post-create")
+        .workload(WorkloadModel::Uniform, wl, 3600.0)
+        .balance_all(200)
+        .snapshot("final")
+}
+
+/// Degraded failover: pools land, then the member hosting estate data
+/// loses a third of its devices — past the degraded threshold — and a
+/// health check migrates its estate pools to healthy members.
+fn degraded_failover(seed: u64, reduced: bool) -> EstateSpec {
+    let (pg, user) = if reduced { (32u32, 256 * GIB) } else { (128u32, TIB) };
+    let mut spec = base("degraded-failover", seed, reduced)
+        .snapshot("initial")
+        .create_pool("app0", pg, 3, user)
+        .create_pool("app1", pg, 3, user)
+        .create_pool("app2", pg, 3, user)
+        .balance_all(200)
+        .snapshot("pre-failure");
+    // fail > 25 % of member 0's devices, one per host so replica-3
+    // host-distinct placement stays satisfiable on the survivors
+    let hosts = members(reduced)[0].hosts;
+    let fails = (hosts * 2) / 4 + 1; // strictly past the 25 % threshold
+    for h in 0..fails {
+        spec = spec.on_member(0, ScenarioEvent::FailOsd { osd: (h * 2) as u32 });
+    }
+    spec.check_health()
+        .balance_all(200)
+        .snapshot("final")
+}
+
+/// Mixed churn: growth, traffic, and a survivable single-device failure
+/// interleaved with health checks — none of which should trigger a
+/// migration (the failure stays under the degraded threshold).
+fn mixed_churn(seed: u64, reduced: bool) -> EstateSpec {
+    let (pg, user, wl) = if reduced {
+        (32u32, 256 * GIB, 512 * GIB)
+    } else {
+        (128u32, TIB, 2 * TIB)
+    };
+    base("mixed-churn", seed, reduced)
+        .snapshot("initial")
+        .create_pool("app0", pg, 3, user)
+        .create_pool("app1", pg, 3, user)
+        .workload(WorkloadModel::ZipfPools { exponent: 1.1 }, wl, 1800.0)
+        .balance_all(150)
+        .check_health()
+        .on_member(1, ScenarioEvent::FailOsd { osd: 3 })
+        .grow_pool(0, user / 2)
+        .workload(WorkloadModel::Uniform, wl, 1800.0)
+        .balance_all(150)
+        .check_health()
+        .snapshot("final")
+}
+
+/// Look up a case by name. `None` for unknown names (see [`ALL`]).
+pub fn by_name(name: &str, seed: u64, reduced: bool) -> Option<EstateCase> {
+    let (spec, description): (EstateSpec, &'static str) = match name {
+        "routed-growth" => (
+            routed_growth(seed, reduced),
+            "pool/workload stream routed across a skewed estate",
+        ),
+        "degraded-failover" => (
+            degraded_failover(seed, reduced),
+            "member degrades past threshold; estate pools migrate off",
+        ),
+        "mixed-churn" => (
+            mixed_churn(seed, reduced),
+            "growth + traffic + survivable failure, health checks quiet",
+        ),
+        _ => return None,
+    };
+    Some(EstateCase { name: ALL.iter().find(|&&n| n == name)?, description, spec, config: EstateConfig::default() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_named_case_resolves_and_is_well_formed() {
+        for name in ALL {
+            let case = by_name(name, 7, true).unwrap();
+            assert_eq!(case.name, name);
+            assert_eq!(case.spec.name, name);
+            assert_eq!(case.spec.seed, 7);
+            assert_eq!(case.spec.members.len(), 3);
+            assert!(!case.spec.events.is_empty());
+            assert!(!case.description.is_empty());
+            // full-size variant also resolves
+            let full = by_name(name, 7, false).unwrap();
+            assert!(full.spec.members[0].capacity() > case.spec.members[0].capacity());
+        }
+        assert!(by_name("nope", 1, true).is_none());
+    }
+
+    #[test]
+    fn failover_case_crosses_the_degraded_threshold() {
+        // the failure count must be strictly past 25 % of devices
+        for reduced in [true, false] {
+            let hosts = members(reduced)[0].hosts;
+            let osds = hosts * 2;
+            let fails = osds / 4 + 1;
+            assert!(fails as f64 / osds as f64 > 0.25);
+            assert!(fails <= hosts, "one failure per host keeps hosts distinct");
+        }
+    }
+}

@@ -1,0 +1,703 @@
+//! Multi-cluster estate coordinator (RFC 0008): N simulated member
+//! clusters on one shared virtual clock, health-aware dynamic routing,
+//! and degraded-cluster pool migration.
+//!
+//! Production Ceph runs many clusters behind a placement tier; the
+//! paper's per-cluster concerns (heterogeneous devices, size-aware
+//! balancing) multiply at estate scale, where *routing* — which cluster
+//! receives the next pool or workload — dominates cross-cluster
+//! capacity outcomes. The [`Estate`] owns the member [`ClusterState`]s,
+//! scores each with [`health::assess`] (free capacity, utilization
+//! variance, down-device fraction — all from the indexed statistics the
+//! balancer sees), routes [`EstateEvent`]s through a pluggable
+//! [`Router`], and drives every member's balancing through the existing
+//! [`crate::balancer::Balancer`]/[`ScenarioEngine`] machinery.
+//!
+//! Determinism contract (RFC 0002 extended one level up): every run is
+//! a pure function of the estate seed. Member construction and
+//! [`EstateEvent::BalanceAll`] fan out over member clusters via
+//! [`parallel::map_collect`] (fixed schedule + ordered install), member
+//! engines are seeded per `(estate seed, event index, member index)`,
+//! and the routers are deterministic — so estate sweeps are
+//! byte-identical at any `EQUILIBRIUM_THREADS`, including 1.
+#![warn(missing_docs)]
+
+pub mod health;
+pub mod library;
+pub mod router;
+pub mod spec;
+pub mod sweep;
+
+pub use health::{assess, HealthPolicy, HealthReport};
+pub use library::EstateCase;
+pub use router::{HealthWeighted, RoundRobin, Router};
+pub use spec::{EstateEvent, EstateSpec, MemberSpec};
+pub use sweep::{
+    parse_estate_baseline, sweep_spec, EstateBaseline, EstateRunStats, EstateSweep,
+    EstateSweepConfig, ESTATE_METRICS,
+};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::balancer::Equilibrium;
+use crate::cluster::{ClusterState, Pool};
+use crate::scenario::{ScenarioConfig, ScenarioEngine, ScenarioError, ScenarioEvent};
+use crate::util::parallel;
+use crate::util::stats;
+use crate::util::units::MIB;
+
+/// Estate-level tunables.
+#[derive(Debug, Clone)]
+pub struct EstateConfig {
+    /// Health thresholds and score weights.
+    pub policy: HealthPolicy,
+    /// Template for the per-member scenario engines (executor limits,
+    /// plan pipeline). `record_series` is forced off — the estate keeps
+    /// its own samples.
+    pub scenario: ScenarioConfig,
+    /// Cross-cluster copy throughput for pool migrations, bytes/second
+    /// (default 200 MiB/s — a WAN-ish replication link, slower than the
+    /// intra-cluster backfill default).
+    pub migration_bandwidth: f64,
+    /// Parallel chunk length for the member fan-out (1 = per-member
+    /// work stealing; any fixed value keeps results byte-identical).
+    pub chunk: usize,
+}
+
+impl Default for EstateConfig {
+    fn default() -> Self {
+        EstateConfig {
+            policy: HealthPolicy::default(),
+            scenario: ScenarioConfig::default(),
+            migration_bandwidth: 200.0 * MIB as f64,
+            chunk: 1,
+        }
+    }
+}
+
+/// One member cluster plus its estate-side accounting.
+#[derive(Debug)]
+pub struct MemberCluster {
+    /// Member name (from the [`MemberSpec`]).
+    pub name: String,
+    /// The live cluster.
+    pub state: ClusterState,
+    /// Accumulated per-member virtual execution time, seconds (this
+    /// member's recovery + balancing makespans — the per-cluster
+    /// makespan estate sweeps reduce).
+    pub makespan: f64,
+    /// Movements planned on this member over the whole timeline.
+    pub planned_moves: usize,
+    /// Bytes physically executed on this member.
+    pub executed_bytes: u64,
+    next_pool_id: u32,
+}
+
+/// Where an estate pool currently lives.
+#[derive(Debug, Clone)]
+struct PoolSite {
+    member: usize,
+    local_id: u32,
+    name: String,
+    pg_count: u32,
+    replicas: usize,
+    user_bytes: u64,
+}
+
+/// A labelled estate-level measurement.
+#[derive(Debug, Clone)]
+pub struct EstateSample {
+    /// Shared virtual time of the sample, seconds.
+    pub vtime: f64,
+    /// Sample label.
+    pub label: String,
+    /// Cross-cluster utilization variance at the sample (population
+    /// variance of the members' mean indexed utilization).
+    pub estate_variance: f64,
+    /// Per-member mean indexed utilization, member order.
+    pub member_utilization: Vec<f64>,
+    /// Cumulative bytes migrated between members so far.
+    pub migrated_bytes: u64,
+}
+
+/// What an estate run hands back.
+#[derive(Debug)]
+pub struct EstateOutcome {
+    /// Virtual-time-stamped estate event log.
+    pub log: Vec<(f64, String)>,
+    /// Labelled samples, in timeline order (a terminal sample is always
+    /// appended).
+    pub samples: Vec<EstateSample>,
+    /// Final per-member health, member order.
+    pub healths: Vec<HealthReport>,
+    /// Final per-member accumulated makespans, member order.
+    pub member_makespans: Vec<f64>,
+    /// Final cross-cluster utilization variance.
+    pub estate_variance: f64,
+    /// Mean over members of the within-cluster (indexed) variance.
+    pub member_variance_mean: f64,
+    /// Total bytes migrated between members.
+    pub migrated_bytes: u64,
+    /// Number of pool migrations performed.
+    pub migrations: usize,
+    /// Movements planned across all members.
+    pub planned_moves: usize,
+    /// Bytes physically executed across all members.
+    pub executed_bytes: u64,
+    /// Total shared virtual time, seconds.
+    pub elapsed: f64,
+}
+
+/// Why an estate run failed.
+#[derive(Debug)]
+pub enum EstateError {
+    /// The spec declared no member clusters.
+    NoMembers,
+    /// A targeted event named a member index the estate does not have.
+    UnknownMember(usize),
+    /// An event referenced an estate pool id that was never created.
+    UnknownPool(u32),
+    /// Routing found no eligible destination (every member excluded).
+    NoEligibleCluster {
+        /// Timeline index of the event that could not be routed.
+        event: usize,
+    },
+    /// A member engine rejected an event.
+    Member {
+        /// Member index.
+        member: usize,
+        /// The engine's error.
+        error: ScenarioError,
+    },
+    /// `--router` named no known router.
+    UnknownRouter(String),
+    /// The requested name is not in [`library::ALL`].
+    UnknownCase(String),
+    /// An estate baseline document could not be parsed.
+    Baseline(String),
+}
+
+impl fmt::Display for EstateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EstateError::NoMembers => write!(f, "estate spec declares no member clusters"),
+            EstateError::UnknownMember(m) => write!(f, "unknown member index {m}"),
+            EstateError::UnknownPool(p) => write!(f, "unknown estate pool id {p}"),
+            EstateError::NoEligibleCluster { event } => {
+                write!(f, "event {event}: no eligible destination cluster")
+            }
+            EstateError::Member { member, error } => {
+                write!(f, "member {member}: {error}")
+            }
+            EstateError::UnknownRouter(name) => {
+                write!(f, "unknown router '{name}' (health, round-robin)")
+            }
+            EstateError::UnknownCase(name) => {
+                write!(f, "unknown estate case '{name}' (see `estate list`)")
+            }
+            EstateError::Baseline(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EstateError {}
+
+/// Derive a member engine seed from the estate seed, the timeline
+/// position, and the member index — stable under any execution order.
+fn event_seed(estate_seed: u64, event_idx: usize, member_idx: usize) -> u64 {
+    estate_seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((event_idx as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+        .wrapping_add(member_idx as u64 + 1)
+}
+
+/// The estate coordinator. Build with [`Estate::from_spec`], drive with
+/// [`Estate::run`].
+pub struct Estate {
+    members: Vec<MemberCluster>,
+    router: Box<dyn Router>,
+    cfg: EstateConfig,
+    seed: u64,
+    vclock: f64,
+    pool_sites: BTreeMap<u32, PoolSite>,
+    next_estate_pool: u32,
+    migrated_bytes: u64,
+    migrations: usize,
+    event_idx: usize,
+    log: Vec<(f64, String)>,
+    samples: Vec<EstateSample>,
+}
+
+impl Estate {
+    /// Build the estate: member clusters are constructed from the spec
+    /// in parallel (one seed per member, derived from the estate seed),
+    /// with results installed in member order.
+    pub fn from_spec(
+        spec: &EstateSpec,
+        router: Box<dyn Router>,
+        cfg: EstateConfig,
+    ) -> Result<Estate, EstateError> {
+        if spec.members.is_empty() {
+            return Err(EstateError::NoMembers);
+        }
+        let mut scenario = cfg.scenario.clone();
+        scenario.record_series = false;
+        let cfg = EstateConfig { scenario, ..cfg };
+        let members = &spec.members;
+        let seed = spec.seed;
+        let states: Vec<ClusterState> = parallel::map_collect(members.len(), 1, |i| {
+            members[i].build(event_seed(seed, 0, i))
+        });
+        let members = members
+            .iter()
+            .zip(states)
+            .map(|(m, state)| {
+                let next_pool_id =
+                    state.pools.keys().max().map(|&id| id + 1).unwrap_or(0);
+                MemberCluster {
+                    name: m.name.clone(),
+                    state,
+                    makespan: 0.0,
+                    planned_moves: 0,
+                    executed_bytes: 0,
+                    next_pool_id,
+                }
+            })
+            .collect();
+        Ok(Estate {
+            members,
+            router,
+            cfg,
+            seed,
+            vclock: 0.0,
+            pool_sites: BTreeMap::new(),
+            next_estate_pool: 0,
+            migrated_bytes: 0,
+            migrations: 0,
+            event_idx: 0,
+            log: Vec::new(),
+            samples: Vec::new(),
+        })
+    }
+
+    /// The member clusters (tests, reports).
+    pub fn members(&self) -> &[MemberCluster] {
+        &self.members
+    }
+
+    /// Current per-member health, member order.
+    pub fn healths(&self) -> Vec<HealthReport> {
+        self.members.iter().map(|m| assess(&m.state, &self.cfg.policy)).collect()
+    }
+
+    /// Cross-cluster utilization variance: population variance of the
+    /// members' mean indexed utilization (each member counts once —
+    /// the estate levels *clusters*, the members' balancers level
+    /// devices).
+    pub fn estate_variance(&self) -> f64 {
+        stats::variance(&self.member_utilizations())
+    }
+
+    fn member_utilizations(&self) -> Vec<f64> {
+        self.members
+            .iter()
+            .map(|m| stats::mean(&m.state.indexed_utilizations()))
+            .collect()
+    }
+
+    fn log_line(&mut self, line: String) {
+        self.log.push((self.vclock, line));
+    }
+
+    /// Apply one single-cluster event on one member through a
+    /// short-lived [`ScenarioEngine`] (fresh default [`Equilibrium`]
+    /// balancer, deterministic per-event seed), advancing the shared
+    /// clock by the event's makespan.
+    fn apply_member(
+        &mut self,
+        member: usize,
+        event: &ScenarioEvent,
+    ) -> Result<(), EstateError> {
+        if member >= self.members.len() {
+            return Err(EstateError::UnknownMember(member));
+        }
+        let seed = event_seed(self.seed, self.event_idx + 1, member);
+        let config = self.cfg.scenario.clone();
+        let m = &mut self.members[member];
+        let mut balancer = Equilibrium::default();
+        let mut engine = ScenarioEngine::new(&mut m.state, Some(&mut balancer), config, seed);
+        let out = engine
+            .apply(event)
+            .map_err(|error| EstateError::Member { member, error })?;
+        drop(engine);
+        m.makespan += out.makespan;
+        m.planned_moves += out.planned_moves;
+        m.executed_bytes += out.executed_bytes;
+        self.vclock += out.makespan;
+        Ok(())
+    }
+
+    /// Route a destination for a pool/workload event.
+    fn route(&mut self, exclude: Option<usize>) -> Result<usize, EstateError> {
+        let healths = self.healths();
+        self.router
+            .route(&healths, exclude)
+            .ok_or(EstateError::NoEligibleCluster { event: self.event_idx })
+    }
+
+    /// Create an estate pool on `member` and register its site.
+    fn create_pool_on(
+        &mut self,
+        member: usize,
+        name: &str,
+        pg_count: u32,
+        replicas: usize,
+        user_bytes: u64,
+    ) -> Result<u32, EstateError> {
+        let local_id = self.members[member].next_pool_id;
+        self.members[member].next_pool_id += 1;
+        let pool = Pool::replicated(local_id, name, replicas, pg_count, 0);
+        self.apply_member(member, &ScenarioEvent::CreatePool { pool, user_bytes })?;
+        Ok(local_id)
+    }
+
+    /// Raw bytes an estate pool currently stores on its member.
+    fn pool_raw_bytes(&self, site: &PoolSite) -> u64 {
+        self.members[site.member]
+            .state
+            .pgs_of_pool(site.local_id)
+            .map(|pg| pg.shard_bytes() * pg.devices().count() as u64)
+            .sum()
+    }
+
+    /// One bounded balance round on every member, fanned out via
+    /// [`parallel::map_collect`]: each member's round is a pure
+    /// function of its state and per-member seed, results install in
+    /// member order, and the shared clock advances by the slowest
+    /// member (the rounds run concurrently across the estate).
+    fn balance_all(&mut self, max_moves: usize) -> Result<(), EstateError> {
+        let n = self.members.len();
+        let seeds: Vec<u64> =
+            (0..n).map(|i| event_seed(self.seed, self.event_idx + 1, i)).collect();
+        let config = self.cfg.scenario.clone();
+        let results: Vec<Result<(ClusterState, usize, u64, f64), (usize, ScenarioError)>> = {
+            let members = &self.members;
+            let seeds = &seeds;
+            let config = &config;
+            parallel::map_collect(n, self.cfg.chunk.max(1), |i| {
+                let mut state = members[i].state.clone();
+                let mut balancer = Equilibrium::default();
+                let mut engine = ScenarioEngine::new(
+                    &mut state,
+                    Some(&mut balancer),
+                    config.clone(),
+                    seeds[i],
+                );
+                match engine.apply(&ScenarioEvent::BalanceRound { max_moves }) {
+                    Ok(out) => {
+                        let summary = (out.planned_moves, out.executed_bytes, out.makespan);
+                        drop(engine);
+                        Ok((state, summary.0, summary.1, summary.2))
+                    }
+                    Err(error) => Err((i, error)),
+                }
+            })
+        };
+        let mut round_makespan = 0.0f64;
+        for (i, r) in results.into_iter().enumerate() {
+            let (state, moves, bytes, makespan) =
+                r.map_err(|(member, error)| EstateError::Member { member, error })?;
+            let m = &mut self.members[i];
+            m.state = state;
+            m.makespan += makespan;
+            m.planned_moves += moves;
+            m.executed_bytes += bytes;
+            round_makespan = round_makespan.max(makespan);
+        }
+        self.vclock += round_makespan;
+        self.log_line(format!(
+            "balance-all: {n} members, budget {max_moves}, slowest round {round_makespan:.0}s"
+        ));
+        Ok(())
+    }
+
+    /// Health-check pass: migrate every estate pool off every degraded
+    /// member. Draining reuses the existing pipeline (the pool is
+    /// decommissioned through the member's engine), the re-create is a
+    /// routed `add_pool` on the destination, and the cross-cluster copy
+    /// occupies the shared clock at [`EstateConfig::migration_bandwidth`].
+    fn check_health(&mut self) -> Result<(), EstateError> {
+        let degraded: Vec<usize> = self
+            .healths()
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.degraded)
+            .map(|(i, _)| i)
+            .collect();
+        for d in degraded {
+            let name = self.members[d].name.clone();
+            self.log_line(format!("member '{name}' degraded — migrating estate pools off"));
+            let pools: Vec<u32> = self
+                .pool_sites
+                .iter()
+                .filter(|(_, s)| s.member == d)
+                .map(|(&id, _)| id)
+                .collect();
+            for pid in pools {
+                // re-route per pool: each migration shifts fill
+                let healths = self.healths();
+                let Some(target) = self.router.route(&healths, Some(d)) else {
+                    self.log_line(format!("pool {pid}: no eligible migration target"));
+                    break;
+                };
+                let site = self.pool_sites.get(&pid).expect("site exists").clone();
+                let raw = self.pool_raw_bytes(&site);
+                self.apply_member(d, &ScenarioEvent::DecommissionPool {
+                    pool: site.local_id,
+                })?;
+                let local_id = self.create_pool_on(
+                    target,
+                    &site.name,
+                    site.pg_count,
+                    site.replicas,
+                    site.user_bytes,
+                )?;
+                self.vclock += raw as f64 / self.cfg.migration_bandwidth;
+                self.migrated_bytes += raw;
+                self.migrations += 1;
+                let dest = self.members[target].name.clone();
+                self.log_line(format!(
+                    "pool {pid} '{}' migrated '{name}' → '{dest}' ({raw} raw bytes)",
+                    site.name
+                ));
+                self.pool_sites.insert(
+                    pid,
+                    PoolSite { member: target, local_id, ..site },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn capture_sample(&mut self, label: &str) {
+        let member_utilization = self.member_utilizations();
+        self.samples.push(EstateSample {
+            vtime: self.vclock,
+            label: label.to_string(),
+            estate_variance: stats::variance(&member_utilization),
+            member_utilization,
+            migrated_bytes: self.migrated_bytes,
+        });
+    }
+
+    /// Apply one estate event.
+    pub fn apply(&mut self, event: &EstateEvent) -> Result<(), EstateError> {
+        match event {
+            EstateEvent::CreatePool { name, pg_count, replicas, user_bytes } => {
+                let target = self.route(None)?;
+                let pid = self.next_estate_pool;
+                self.next_estate_pool += 1;
+                let local_id =
+                    self.create_pool_on(target, name, *pg_count, *replicas, *user_bytes)?;
+                self.pool_sites.insert(pid, PoolSite {
+                    member: target,
+                    local_id,
+                    name: name.clone(),
+                    pg_count: *pg_count,
+                    replicas: *replicas,
+                    user_bytes: *user_bytes,
+                });
+                let dest = self.members[target].name.clone();
+                let router = self.router.name();
+                self.log_line(format!("pool {pid} '{name}' → '{dest}' (router {router})"));
+            }
+            EstateEvent::Workload { model, user_bytes, duration } => {
+                let target = self.route(None)?;
+                self.apply_member(target, &ScenarioEvent::WorkloadPhase {
+                    model: model.clone(),
+                    user_bytes: *user_bytes,
+                    duration: *duration,
+                })?;
+                let dest = self.members[target].name.clone();
+                self.log_line(format!("workload {user_bytes} user bytes → '{dest}'"));
+            }
+            EstateEvent::GrowPool { pool, user_bytes } => {
+                let site =
+                    self.pool_sites.get(pool).ok_or(EstateError::UnknownPool(*pool))?.clone();
+                self.apply_member(site.member, &ScenarioEvent::GrowPool {
+                    pool: site.local_id,
+                    user_bytes: *user_bytes,
+                })?;
+                if let Some(s) = self.pool_sites.get_mut(pool) {
+                    s.user_bytes += user_bytes;
+                }
+            }
+            EstateEvent::Member { member, event } => {
+                self.apply_member(*member, event)?;
+            }
+            EstateEvent::BalanceAll { max_moves } => {
+                self.balance_all(*max_moves)?;
+            }
+            EstateEvent::CheckHealth => {
+                self.check_health()?;
+            }
+            EstateEvent::Snapshot { label } => {
+                let label = label.clone();
+                self.capture_sample(&label);
+                self.log_line(format!("snapshot '{label}'"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the spec's timeline and close the run. The spec's *events*
+    /// drive the estate built by [`Estate::from_spec`] (which already
+    /// consumed the spec's members and seed).
+    pub fn run(mut self, spec: &EstateSpec) -> Result<EstateOutcome, EstateError> {
+        for (i, event) in spec.events.iter().enumerate() {
+            self.event_idx = i;
+            self.apply(event)?;
+        }
+        Ok(self.finish())
+    }
+
+    /// Close the run: capture the terminal sample and reduce.
+    pub fn finish(mut self) -> EstateOutcome {
+        self.capture_sample("final");
+        let healths = self.healths();
+        let member_variances: Vec<f64> =
+            self.members.iter().map(|m| m.state.indexed_utilization_variance()).collect();
+        EstateOutcome {
+            estate_variance: self.estate_variance(),
+            member_variance_mean: stats::mean(&member_variances),
+            member_makespans: self.members.iter().map(|m| m.makespan).collect(),
+            planned_moves: self.members.iter().map(|m| m.planned_moves).sum(),
+            executed_bytes: self.members.iter().map(|m| m.executed_bytes).sum(),
+            migrated_bytes: self.migrated_bytes,
+            migrations: self.migrations,
+            elapsed: self.vclock,
+            healths,
+            log: self.log,
+            samples: self.samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{GIB, TIB};
+
+    fn small_spec(seed: u64) -> EstateSpec {
+        EstateSpec::new("test-estate", seed)
+            .member(MemberSpec::new("edge", 3, 2 * TIB, TIB))
+            .member(MemberSpec::new("core", 6, 4 * TIB, 4 * TIB))
+            .snapshot("initial")
+            .create_pool("app0", 32, 3, 256 * GIB)
+            .create_pool("app1", 32, 3, 256 * GIB)
+            .balance_all(100)
+            .snapshot("final")
+    }
+
+    #[test]
+    fn estate_runs_and_reduces() {
+        let spec = small_spec(3);
+        let estate =
+            Estate::from_spec(&spec, Box::new(HealthWeighted), EstateConfig::default()).unwrap();
+        assert_eq!(estate.members().len(), 2);
+        let out = estate.run(&spec).unwrap();
+        assert_eq!(out.healths.len(), 2);
+        // "final" label sample + terminal capture
+        assert!(out.samples.len() >= 2);
+        assert!(out.estate_variance >= 0.0);
+        assert!(out.planned_moves > 0, "balance-all must plan moves");
+        assert!(out.elapsed > 0.0, "pool creation recovery/balancing takes virtual time");
+    }
+
+    #[test]
+    fn empty_member_list_is_rejected() {
+        let spec = EstateSpec::new("empty", 1);
+        let err = Estate::from_spec(&spec, Box::new(HealthWeighted), EstateConfig::default())
+            .err()
+            .unwrap();
+        assert!(matches!(err, EstateError::NoMembers));
+    }
+
+    #[test]
+    fn unknown_member_and_pool_are_typed_errors() {
+        let spec = EstateSpec::new("bad", 1).member(MemberSpec::new("only", 3, TIB, TIB / 8));
+        let mut estate =
+            Estate::from_spec(&spec, Box::new(HealthWeighted), EstateConfig::default()).unwrap();
+        let err = estate
+            .apply(&EstateEvent::Member {
+                member: 5,
+                event: ScenarioEvent::Snapshot { label: "x".into() },
+            })
+            .err()
+            .unwrap();
+        assert!(matches!(err, EstateError::UnknownMember(5)));
+        let err = estate
+            .apply(&EstateEvent::GrowPool { pool: 9, user_bytes: 1 })
+            .err()
+            .unwrap();
+        assert!(matches!(err, EstateError::UnknownPool(9)));
+    }
+
+    #[test]
+    fn runs_replay_bit_for_bit() {
+        let spec = small_spec(11);
+        let a = Estate::from_spec(&spec, Box::new(HealthWeighted), EstateConfig::default())
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        let b = Estate::from_spec(&spec, Box::new(HealthWeighted), EstateConfig::default())
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(a.estate_variance.to_bits(), b.estate_variance.to_bits());
+        assert_eq!(a.planned_moves, b.planned_moves);
+        assert_eq!(a.executed_bytes, b.executed_bytes);
+        assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits());
+    }
+
+    #[test]
+    fn degraded_member_loses_its_estate_pools() {
+        use crate::scenario::ScenarioEvent;
+        let spec = EstateSpec::new("failover", 5)
+            .member(MemberSpec::new("small", 3, 2 * TIB, TIB / 2))
+            .member(MemberSpec::new("big", 6, 4 * TIB, 2 * TIB));
+        let mut estate =
+            Estate::from_spec(&spec, Box::new(HealthWeighted), EstateConfig::default()).unwrap();
+        // place a pool on the small member by hand: make it momentarily
+        // the healthiest is fiddly, so create while excluding the big one
+        // via a direct call path — instead, create normally and find out
+        // where it landed, then degrade that member.
+        estate
+            .apply(&EstateEvent::CreatePool {
+                name: "app".into(),
+                pg_count: 32,
+                replicas: 3,
+                user_bytes: 128 * GIB,
+            })
+            .unwrap();
+        let home = estate.pool_sites[&0].member;
+        // fail a third of the home member's devices → past the 25 % threshold
+        let osds = estate.members()[home].state.osd_count();
+        for osd in 0..(osds as u32).div_ceil(3) {
+            estate
+                .apply(&EstateEvent::Member {
+                    member: home,
+                    event: ScenarioEvent::FailOsd { osd },
+                })
+                .unwrap();
+        }
+        assert!(estate.healths()[home].degraded);
+        estate.apply(&EstateEvent::CheckHealth).unwrap();
+        let new_home = estate.pool_sites[&0].member;
+        assert_ne!(new_home, home, "the estate pool must migrate off the degraded member");
+        let out = estate.finish();
+        assert_eq!(out.migrations, 1);
+        assert!(out.migrated_bytes > 0);
+    }
+}

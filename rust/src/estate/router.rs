@@ -1,0 +1,167 @@
+//! Pluggable estate routing: which member cluster receives the next
+//! pool-creation or workload event.
+//!
+//! The shape follows distributed-database cluster modes (a routing tier
+//! consulting node health before dispatch): the estate computes a
+//! [`HealthReport`] per member and hands the slice to a [`Router`].
+//! Both built-in routers are deterministic — the health-weighted
+//! default maximizes the health score, the round-robin baseline cycles
+//! — so an estate timeline replays bit-for-bit under either.
+
+use super::health::HealthReport;
+
+/// Destination choice over the estate's member clusters.
+///
+/// `route` picks among the *eligible* members: not `exclude` (the
+/// degraded source during a migration) and not degraded. When every
+/// candidate is degraded the routers fall back to the least-bad member
+/// rather than refusing — an estate with nowhere good to place data
+/// still has to place it somewhere. `None` only when no member except
+/// `exclude` exists.
+pub trait Router {
+    /// Router name (baselines, bench JSON, CLI `--router`).
+    fn name(&self) -> &'static str;
+    /// Pick a destination among `healths` (indexed by member), avoiding
+    /// `exclude`.
+    fn route(&mut self, healths: &[HealthReport], exclude: Option<usize>) -> Option<usize>;
+}
+
+fn candidates(healths: &[HealthReport], exclude: Option<usize>) -> Vec<usize> {
+    let all: Vec<usize> = (0..healths.len()).filter(|&i| Some(i) != exclude).collect();
+    let healthy: Vec<usize> =
+        all.iter().copied().filter(|&i| !healths[i].degraded).collect();
+    if healthy.is_empty() {
+        all
+    } else {
+        healthy
+    }
+}
+
+/// Default router: the member with the highest health score wins
+/// (ties → lowest member index). Greedy capacity leveling: new pools
+/// land on the member with the most headroom, which drives the
+/// cross-cluster utilization variance down.
+#[derive(Debug, Default, Clone)]
+pub struct HealthWeighted;
+
+impl Router for HealthWeighted {
+    fn name(&self) -> &'static str {
+        "health"
+    }
+
+    fn route(&mut self, healths: &[HealthReport], exclude: Option<usize>) -> Option<usize> {
+        candidates(healths, exclude).into_iter().reduce(|best, i| {
+            // strict total-order comparison; first (lowest) index wins ties
+            if healths[i].score.total_cmp(&healths[best].score).is_gt() {
+                i
+            } else {
+                best
+            }
+        })
+    }
+}
+
+/// Baseline router: cycle over the members in index order, blind to
+/// capacity differences — the naive placement tier the health-weighted
+/// router is benchmarked against. It still skips degraded members (so
+/// migration comparisons stay apples-to-apples); what it ignores is
+/// *how much* headroom each member has.
+#[derive(Debug, Default, Clone)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, healths: &[HealthReport], exclude: Option<usize>) -> Option<usize> {
+        let cands = candidates(healths, exclude);
+        if cands.is_empty() || healths.is_empty() {
+            return None;
+        }
+        let n = healths.len();
+        // first eligible member at or after the cursor, cyclically
+        for off in 0..n {
+            let i = (self.next + off) % n;
+            if cands.contains(&i) {
+                self.next = (i + 1) % n;
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// Construct a router by CLI name: `"health"` or `"round-robin"`.
+pub fn by_name(name: &str) -> Option<Box<dyn Router>> {
+    match name {
+        "health" => Some(Box::new(HealthWeighted)),
+        "round-robin" => Some(Box::new(RoundRobin::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(score: f64, degraded: bool) -> HealthReport {
+        HealthReport {
+            free_fraction: score,
+            mean_utilization: 1.0 - score,
+            variance: 0.0,
+            down_fraction: 0.0,
+            score,
+            degraded,
+        }
+    }
+
+    #[test]
+    fn health_weighted_picks_the_highest_score() {
+        let mut r = HealthWeighted;
+        let hs = [h(0.2, false), h(0.9, false), h(0.5, false)];
+        assert_eq!(r.route(&hs, None), Some(1));
+        assert_eq!(r.route(&hs, Some(1)), Some(2));
+    }
+
+    #[test]
+    fn health_weighted_ties_break_to_the_lowest_index() {
+        let mut r = HealthWeighted;
+        let hs = [h(0.5, false), h(0.5, false), h(0.5, false)];
+        assert_eq!(r.route(&hs, None), Some(0));
+        assert_eq!(r.route(&hs, Some(0)), Some(1));
+    }
+
+    #[test]
+    fn degraded_members_are_avoided_until_no_choice_remains() {
+        let mut r = HealthWeighted;
+        let hs = [h(0.9, true), h(0.3, false)];
+        assert_eq!(r.route(&hs, None), Some(1), "healthy beats a higher degraded score");
+        let all_bad = [h(0.4, true), h(0.6, true)];
+        assert_eq!(r.route(&all_bad, None), Some(1), "least-bad fallback");
+        assert_eq!(r.route(&all_bad, Some(1)), Some(0));
+        assert_eq!(r.route(&[h(0.5, true)], Some(0)), None, "only the excluded member exists");
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_degraded() {
+        let mut r = RoundRobin::default();
+        let hs = [h(0.1, false), h(0.9, false), h(0.5, false)];
+        assert_eq!(r.route(&hs, None), Some(0));
+        assert_eq!(r.route(&hs, None), Some(1));
+        assert_eq!(r.route(&hs, None), Some(2));
+        assert_eq!(r.route(&hs, None), Some(0), "wraps around");
+        let hs = [h(0.1, false), h(0.9, true), h(0.5, false)];
+        assert_eq!(r.route(&hs, None), Some(2), "degraded member 1 is skipped");
+        assert_eq!(r.route(&hs, None), Some(0));
+    }
+
+    #[test]
+    fn by_name_covers_both_routers() {
+        assert_eq!(by_name("health").unwrap().name(), "health");
+        assert_eq!(by_name("round-robin").unwrap().name(), "round-robin");
+        assert!(by_name("nope").is_none());
+    }
+}

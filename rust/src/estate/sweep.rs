@@ -1,0 +1,322 @@
+//! Multi-seed estate sweeps and `ESTATE_baseline`-style documents —
+//! the estate analogue of the fleet layer (RFC 0004), reusing its
+//! [`Distribution`] reduction so estate baselines gate and render with
+//! the same machinery.
+//!
+//! Determinism contract: the seed fan-out goes through
+//! [`parallel::map_collect`] (fixed chunk schedule, ordered reduction),
+//! each run builds a fresh router and a fresh estate from
+//! `spec.with_seed(seed)`, and no wall-clock channel enters the
+//! reduction — so [`EstateBaseline::render`] is byte-identical at any
+//! `EQUILIBRIUM_THREADS`, including 1 (CI compares the bytes).
+
+use std::collections::BTreeMap;
+
+use crate::fleet::Distribution;
+use crate::util::json::Json;
+use crate::util::parallel;
+
+use super::spec::EstateSpec;
+use super::{router, Estate, EstateConfig, EstateError, EstateOutcome};
+
+/// The estate metrics every run reduces to, in canonical order.
+pub const ESTATE_METRICS: [&str; 9] = [
+    "estate_variance",
+    "member_variance_mean",
+    "migrated_bytes",
+    "migrations",
+    "planned_moves",
+    "executed_bytes",
+    "member_makespan_max",
+    "member_makespan_mean",
+    "elapsed",
+];
+
+/// One estate run folded to the canonical metric vector.
+#[derive(Debug, Clone)]
+pub struct EstateRunStats {
+    /// The seed the run used.
+    pub seed: u64,
+    /// Metric values aligned with [`ESTATE_METRICS`].
+    pub values: [f64; 9],
+}
+
+impl EstateRunStats {
+    /// Reduce one finished run.
+    pub fn reduce(seed: u64, out: &EstateOutcome) -> EstateRunStats {
+        let makespans = &out.member_makespans;
+        let max_makespan = makespans.iter().copied().fold(0.0f64, f64::max);
+        let mean_makespan = crate::util::stats::mean(makespans);
+        EstateRunStats {
+            seed,
+            values: [
+                out.estate_variance,
+                out.member_variance_mean,
+                out.migrated_bytes as f64,
+                out.migrations as f64,
+                out.planned_moves as f64,
+                out.executed_bytes as f64,
+                max_makespan,
+                mean_makespan,
+                out.elapsed,
+            ],
+        }
+    }
+
+    /// `(metric name, value)` pairs in canonical order.
+    pub fn metric_values(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        ESTATE_METRICS.iter().copied().zip(self.values.iter().copied())
+    }
+}
+
+/// Estate sweep parameters.
+#[derive(Debug, Clone)]
+pub struct EstateSweepConfig {
+    /// Seeds per case (`seed_base .. seed_base + seeds`).
+    pub seeds: u64,
+    /// First seed.
+    pub seed_base: u64,
+    /// Parallel chunk length for the seed fan-out (any fixed value is
+    /// byte-identical; 1 = per-run work stealing).
+    pub chunk: usize,
+}
+
+impl Default for EstateSweepConfig {
+    fn default() -> Self {
+        EstateSweepConfig { seeds: 8, seed_base: 0, chunk: 1 }
+    }
+}
+
+impl EstateSweepConfig {
+    /// CI quick mode: 4 seeds.
+    pub fn smoke() -> EstateSweepConfig {
+        EstateSweepConfig { seeds: 4, ..EstateSweepConfig::default() }
+    }
+}
+
+/// A completed estate sweep: per-seed stats in seed order.
+#[derive(Debug)]
+pub struct EstateSweep {
+    /// Estate/case name.
+    pub name: String,
+    /// Router the sweep ran under (`Router::name`).
+    pub router: String,
+    /// Per-seed reductions, in seed order.
+    pub runs: Vec<EstateRunStats>,
+}
+
+impl EstateSweep {
+    /// Fold the per-seed stats into per-metric [`Distribution`]s.
+    pub fn summarize(&self, seed_base: u64) -> EstateBaseline {
+        let mut metrics = BTreeMap::new();
+        for (i, name) in ESTATE_METRICS.iter().enumerate() {
+            let values: Vec<f64> = self.runs.iter().map(|r| r.values[i]).collect();
+            metrics.insert(name.to_string(), Distribution::from_values(&values));
+        }
+        EstateBaseline {
+            name: self.name.clone(),
+            router: self.router.clone(),
+            seeds: self.runs.len() as u64,
+            seed_base,
+            metrics,
+        }
+    }
+}
+
+/// Sweep one estate spec across `seeds` seeds under the named router.
+/// Each run is a pure function of its seed: fresh member clusters,
+/// fresh router state (the round-robin cursor restarts), fresh engines.
+pub fn sweep_spec(
+    spec: &EstateSpec,
+    router_name: &str,
+    est_cfg: &EstateConfig,
+    sweep_cfg: &EstateSweepConfig,
+) -> Result<EstateSweep, EstateError> {
+    // fail fast on a bad router name, before any member is built
+    let router = router::by_name(router_name)
+        .ok_or_else(|| EstateError::UnknownRouter(router_name.to_string()))?;
+    let router_label = router.name().to_string();
+    let results: Vec<Result<EstateRunStats, EstateError>> = parallel::map_collect(
+        sweep_cfg.seeds as usize,
+        sweep_cfg.chunk.max(1),
+        |i| {
+            let seed = sweep_cfg.seed_base + i as u64;
+            let run_spec = spec.clone().with_seed(seed);
+            let router = router::by_name(router_name).expect("router name validated above");
+            let estate = Estate::from_spec(&run_spec, router, est_cfg.clone())?;
+            let out = estate.run(&run_spec)?;
+            Ok(EstateRunStats::reduce(seed, &out))
+        },
+    );
+    let mut runs = Vec::with_capacity(results.len());
+    for r in results {
+        runs.push(r?);
+    }
+    Ok(EstateSweep { name: spec.name.clone(), router: router_label, runs })
+}
+
+/// The committed form of one estate sweep: per-metric distributions
+/// under one router.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstateBaseline {
+    /// Estate/case name.
+    pub name: String,
+    /// Router name.
+    pub router: String,
+    /// Seeds in the sweep.
+    pub seeds: u64,
+    /// First seed.
+    pub seed_base: u64,
+    /// Metric name → distribution (keys from [`ESTATE_METRICS`]).
+    pub metrics: BTreeMap<String, Distribution>,
+}
+
+impl EstateBaseline {
+    /// Serialize to the estate-baseline document.
+    pub fn to_json(&self) -> Json {
+        let mut metrics = Json::obj();
+        for (name, dist) in &self.metrics {
+            metrics = metrics.set(name, dist.to_json());
+        }
+        Json::obj()
+            .set("kind", "estate_baseline")
+            .set("version", 1u64)
+            .set("name", self.name.as_str())
+            .set("router", self.router.as_str())
+            .set("seeds", self.seeds)
+            .set("seed_base", self.seed_base)
+            .set("metrics", metrics)
+    }
+
+    /// The exact file content `estate run --out` writes (pretty JSON +
+    /// trailing newline) — the thread-determinism pin compares this
+    /// string directly.
+    pub fn render(&self) -> String {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        text
+    }
+}
+
+/// Parse an estate-baseline document (inverse of
+/// [`EstateBaseline::render`]). Structural problems are typed
+/// [`EstateError::Baseline`]s, never panics.
+pub fn parse_estate_baseline(text: &str) -> Result<EstateBaseline, EstateError> {
+    let bad = |msg: String| EstateError::Baseline(msg);
+    let v = Json::parse(text)
+        .map_err(|e| bad(format!("estate baseline is not valid JSON: {e}")))?;
+    if v.get_str("kind") != Some("estate_baseline") {
+        return Err(bad("'kind' must be \"estate_baseline\"".to_string()));
+    }
+    let name = v
+        .get_str("name")
+        .ok_or_else(|| bad("missing string 'name'".to_string()))?
+        .to_string();
+    let router = v
+        .get_str("router")
+        .ok_or_else(|| bad("missing string 'router'".to_string()))?
+        .to_string();
+    let seeds =
+        v.get_u64("seeds").ok_or_else(|| bad("missing integer 'seeds'".to_string()))?;
+    let seed_base = v
+        .get_u64("seed_base")
+        .ok_or_else(|| bad("missing integer 'seed_base'".to_string()))?;
+    let raw = v
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| bad("missing object 'metrics'".to_string()))?;
+    let mut metrics = BTreeMap::new();
+    for (metric, dist) in raw {
+        let d = Distribution::from_json(dist)
+            .ok_or_else(|| bad(format!("malformed metric '{metric}'")))?;
+        metrics.insert(metric.clone(), d);
+    }
+    Ok(EstateBaseline { name, router, seeds, seed_base, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estate::spec::MemberSpec;
+    use crate::util::units::{GIB, TIB};
+
+    fn tiny_spec() -> EstateSpec {
+        EstateSpec::new("tiny", 0)
+            .member(MemberSpec::new("a", 3, TIB, TIB / 4))
+            .member(MemberSpec::new("b", 4, 2 * TIB, TIB))
+            .create_pool("p0", 16, 3, 64 * GIB)
+            .create_pool("p1", 16, 3, 64 * GIB)
+            .balance_all(50)
+    }
+
+    #[test]
+    fn sweep_covers_every_seed_in_order() {
+        let cfg = EstateSweepConfig { seeds: 3, seed_base: 10, chunk: 1 };
+        let sweep =
+            sweep_spec(&tiny_spec(), "health", &EstateConfig::default(), &cfg).unwrap();
+        assert_eq!(sweep.router, "health");
+        let seeds: Vec<u64> = sweep.runs.iter().map(|r| r.seed).collect();
+        assert_eq!(seeds, vec![10, 11, 12]);
+        let b = sweep.summarize(cfg.seed_base);
+        assert_eq!(b.seeds, 3);
+        assert_eq!(b.metrics.len(), ESTATE_METRICS.len());
+    }
+
+    #[test]
+    fn unknown_router_is_a_typed_error() {
+        let err = sweep_spec(
+            &tiny_spec(),
+            "nope",
+            &EstateConfig::default(),
+            &EstateSweepConfig::smoke(),
+        )
+        .err()
+        .unwrap();
+        assert!(matches!(err, EstateError::UnknownRouter(_)));
+    }
+
+    #[test]
+    fn render_is_thread_invariant() {
+        let cfg = EstateSweepConfig { seeds: 2, seed_base: 0, chunk: 1 };
+        let spec = tiny_spec();
+        let render = |threads: usize| {
+            parallel::with_threads(threads, || {
+                sweep_spec(&spec, "round-robin", &EstateConfig::default(), &cfg)
+                    .unwrap()
+                    .summarize(cfg.seed_base)
+                    .render()
+            })
+        };
+        let one = render(1);
+        let four = render(4);
+        assert_eq!(one, four, "estate baseline must be byte-identical at any thread count");
+        assert!(one.ends_with('\n'));
+    }
+
+    #[test]
+    fn baseline_round_trips_through_its_document() {
+        let cfg = EstateSweepConfig { seeds: 2, seed_base: 5, chunk: 1 };
+        let b = sweep_spec(&tiny_spec(), "health", &EstateConfig::default(), &cfg)
+            .unwrap()
+            .summarize(cfg.seed_base);
+        let parsed = parse_estate_baseline(&b.render()).unwrap();
+        assert_eq!(parsed, b);
+        assert!(matches!(
+            parse_estate_baseline("not json"),
+            Err(EstateError::Baseline(_))
+        ));
+        assert!(matches!(parse_estate_baseline("{}"), Err(EstateError::Baseline(_))));
+    }
+
+    #[test]
+    fn run_stats_align_with_the_metric_names() {
+        let cfg = EstateSweepConfig { seeds: 1, seed_base: 0, chunk: 1 };
+        let sweep =
+            sweep_spec(&tiny_spec(), "health", &EstateConfig::default(), &cfg).unwrap();
+        let pairs: Vec<(&str, f64)> = sweep.runs[0].metric_values().collect();
+        assert_eq!(pairs.len(), 9);
+        assert_eq!(pairs[0].0, "estate_variance");
+        assert_eq!(pairs[8].0, "elapsed");
+        assert!(pairs.iter().all(|(_, v)| v.is_finite()));
+    }
+}

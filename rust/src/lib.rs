@@ -16,6 +16,7 @@ pub mod balancer;
 pub mod cluster;
 pub mod coordinator;
 pub mod crush;
+pub mod estate;
 pub mod fleet;
 pub mod fuzz;
 pub mod generator;

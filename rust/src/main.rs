@@ -18,6 +18,9 @@
 //! * `fuzz`      — chaos scenario fuzzing: sweep generated timelines
 //!   through the invariant machine, minimize failures, and promote them
 //!   into the regression corpus (RFC 0005)
+//! * `estate`    — multi-cluster estate coordinator: run named estate
+//!   cases under a pluggable router, sweep them across seeds, and
+//!   render the cross-cluster comparison (RFC 0008)
 //! * `runtime-info` — show PJRT artifact status
 
 use std::path::PathBuf;
@@ -53,6 +56,7 @@ fn main() -> ExitCode {
         "scenario" => cmd_scenario(rest),
         "fleet" => cmd_fleet(rest),
         "fuzz" => cmd_fuzz(rest),
+        "estate" => cmd_estate(rest),
         "df" => cmd_df(rest),
         "crush" => cmd_crush(rest),
         "runtime-info" => cmd_runtime_info(),
@@ -93,6 +97,10 @@ fn usage() -> String {
      \x20 fuzz          run [--cases N] [--seed-base N] [--profile P] [--reduced] [--chunk N]\n\
      \x20                [--out FILE] [--promote-dir DIR] [--quiet]\n\
      \x20                | gen --seed N [--profile P] [--reduced] [--out FILE]\n\
+     \x20 estate        list | run [--name NAME | --all] [--router health|round-robin]\n\
+     \x20                [--seeds N] [--seed-base N] [--reduced|--smoke] [--out FILE]\n\
+     \x20                [--out-dir DIR] [--quiet]\n\
+     \x20                | report --baseline FILE[,FILE..] [--out-dir DIR]\n\
      \x20 df            --cluster <a..f|demo> | --state FILE   (ceph-df-style report)\n\
      \x20 crush         --cluster <a..f|demo> | --state FILE [--tree]  (decompile CRUSH map)\n\
      \x20 runtime-info\n"
@@ -789,6 +797,130 @@ fn cmd_fuzz_gen(argv: &[String]) -> AppResult {
             eprintln!("wrote {path}");
         }
         None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_estate(argv: &[String]) -> AppResult {
+    let Some((which, rest)) = argv.split_first() else {
+        return Err(app_err!("estate requires an action: list|run|report"));
+    };
+    match which.as_str() {
+        "list" => {
+            println!("estate cases (seeded, deterministic; see RFC 0008):");
+            for name in equilibrium::estate::library::ALL {
+                let case = equilibrium::estate::library::by_name(name, 0, true)
+                    .expect("ALL names resolve");
+                println!("  {name:<20} {}", case.description);
+            }
+            println!("routers: health (default), round-robin (baseline)");
+            Ok(())
+        }
+        "run" => cmd_estate_run(rest),
+        "report" => cmd_estate_report(rest),
+        other => Err(app_err!("unknown estate action '{other}' (list|run|report)")),
+    }
+}
+
+fn cmd_estate_run(argv: &[String]) -> AppResult {
+    let cli = Cli::new("equilibrium estate run", "sweep estate cases under a router")
+        .opt("name", "NAME", "estate case to sweep (see `estate list`)")
+        .flag("all", "sweep every estate case")
+        .opt_default("router", "NAME", "health", "routing policy (health|round-robin)")
+        .opt("seeds", "N", "seeds per case (default: 8, or 4 with --smoke)")
+        .opt_default("seed-base", "N", "0", "first seed of the sweep")
+        .flag("reduced", "reduced-size members (small clusters; CI smoke)")
+        .flag("smoke", "CI quick mode: implies --reduced, defaults --seeds to 4")
+        .opt("out", "FILE", "write the estate baseline JSON (single --name only)")
+        .opt("out-dir", "DIR", "write estate_summary.csv here")
+        .flag("quiet", "suppress the summary table");
+    let a = cli.parse(argv.iter())?;
+    let smoke = a.flag("smoke");
+    let reduced = smoke || a.flag("reduced");
+    let seeds = match a.get_u64("seeds")? {
+        Some(n) if n >= 1 => n,
+        Some(_) => return Err(app_err!("--seeds must be ≥ 1")),
+        None => {
+            if smoke {
+                4
+            } else {
+                8
+            }
+        }
+    };
+    let sweep_cfg = equilibrium::estate::EstateSweepConfig {
+        seeds,
+        seed_base: a.get_u64("seed-base")?.unwrap_or(0),
+        chunk: 1,
+    };
+    let router = a.get_or("router", "health");
+    let names: Vec<&str> = if a.flag("all") {
+        equilibrium::estate::library::ALL.to_vec()
+    } else {
+        match a.get("name") {
+            Some(n) => vec![n],
+            None => return Err(app_err!("one of --name or --all is required")),
+        }
+    };
+    if a.get("out").is_some() && names.len() != 1 {
+        return Err(app_err!("--out pins one baseline; use it with a single --name"));
+    }
+    println!(
+        "estate: sweeping {} case(s) × {} seeds ({}, {} router)",
+        names.len(),
+        sweep_cfg.seeds,
+        size_label(reduced),
+        router,
+    );
+    let mut baselines = Vec::new();
+    for name in names {
+        let case = equilibrium::estate::library::by_name(name, sweep_cfg.seed_base, reduced)
+            .ok_or_else(|| app_err!("unknown estate case '{name}' (see `estate list`)"))?;
+        let sweep = equilibrium::estate::sweep_spec(&case.spec, router, &case.config, &sweep_cfg)
+            .map_err(|e| app_err!("estate sweep '{name}' failed: {e}"))?;
+        baselines.push(sweep.summarize(sweep_cfg.seed_base));
+    }
+    if !a.flag("quiet") {
+        println!("{}", report::estate_table(&baselines).render());
+    }
+    if let Some(path) = a.get("out") {
+        std::fs::write(path, baselines[0].render())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(dir) = a.get("out-dir") {
+        report::write_estate_csv(std::path::Path::new(dir), &baselines)?;
+    }
+    Ok(())
+}
+
+fn cmd_estate_report(argv: &[String]) -> AppResult {
+    let cli = Cli::new(
+        "equilibrium estate report",
+        "render estate baselines side by side (one row per case × router)",
+    )
+    .opt("baseline", "FILES", "comma-separated estate baseline JSON files (required)")
+    .opt("out-dir", "DIR", "write estate_summary.csv here");
+    let a = cli.parse(argv.iter())?;
+    let paths = a
+        .get("baseline")
+        .ok_or_else(|| app_err!("--baseline is required"))?;
+    let mut baselines = Vec::new();
+    for path in paths.split(',').filter(|p| !p.is_empty()) {
+        let b = equilibrium::estate::parse_estate_baseline(&std::fs::read_to_string(path)?)
+            .map_err(|e| app_err!("cannot load estate baseline '{path}': {e}"))?;
+        baselines.push(b);
+    }
+    if baselines.is_empty() {
+        return Err(app_err!("--baseline names no files"));
+    }
+    println!(
+        "Estate summary — {} baseline(s), {} seeds each",
+        baselines.len(),
+        baselines[0].seeds,
+    );
+    println!("{}", report::estate_table(&baselines).render());
+    if let Some(dir) = a.get("out-dir") {
+        report::write_estate_csv(std::path::Path::new(dir), &baselines)?;
     }
     Ok(())
 }

@@ -96,7 +96,11 @@ impl PhasedPlan {
     pub fn phase_makespans(&self, cfg: &ExecutorConfig, osd_count: usize) -> Vec<f64> {
         self.phases
             .iter()
-            .map(|p| execute_plan(p, cfg, osd_count).makespan)
+            .map(|p| {
+                execute_plan(p, cfg, osd_count)
+                    .expect("phased plans reference in-range OSDs")
+                    .makespan
+            })
             .collect()
     }
 
@@ -210,7 +214,9 @@ pub fn schedule_plan(initial: &ClusterState, plan: &[Movement], cfg: &ScheduleCo
         }
         debug_assert!(!phase.is_empty(), "the head of pending is always admissible");
         if let Some(th) = throttle.as_mut() {
-            let est = execute_plan(&phase, &cfg.executor, n).makespan;
+            let est = execute_plan(&phase, &cfg.executor, n)
+                .expect("admitted phase references in-range OSDs")
+                .makespan;
             th.observe(est, phase.len());
         }
         phases.push(phase);

@@ -1,0 +1,130 @@
+//! Estate sweep reporting: render one or more [`EstateBaseline`]s
+//! (typically one per router, for side-by-side comparison) as the
+//! `estate report` text table and a machine-readable CSV.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::estate::EstateBaseline;
+use crate::fleet::Distribution;
+use crate::util::units::{fmt_bytes_f, fmt_duration};
+
+use super::csv::{to_csv, write_csv_file};
+use super::table::Table;
+
+/// Headline table: one row per baseline (case × router), the estate
+/// channels an operator compares routers on — cross-cluster variance
+/// level and tail, migration volume, and the virtual-time cost.
+pub fn estate_table(baselines: &[EstateBaseline]) -> Table {
+    let mut t = Table::new(&[
+        "Estate",
+        "Router",
+        "Estate var mean",
+        "Estate var p90",
+        "Member var mean",
+        "Migrated p50",
+        "Migrations p50",
+        "Exec p50",
+        "Elapsed p50",
+    ]);
+    for b in baselines {
+        let g = |m: &str| b.metrics.get(m).copied().unwrap_or_default();
+        t.push_row(vec![
+            b.name.clone(),
+            b.router.clone(),
+            format!("{:.3e}", g("estate_variance").mean),
+            format!("{:.3e}", g("estate_variance").p90),
+            format!("{:.3e}", g("member_variance_mean").mean),
+            fmt_bytes_f(g("migrated_bytes").p50),
+            format!("{:.0}", g("migrations").p50),
+            fmt_bytes_f(g("executed_bytes").p50),
+            fmt_duration(g("elapsed").p50),
+        ]);
+    }
+    t
+}
+
+/// Full CSV: one row per (baseline, metric) with every distribution
+/// field, floats in their exact shortest-round-trip form.
+pub fn estate_csv(baselines: &[EstateBaseline]) -> String {
+    let mut rows = Vec::new();
+    for b in baselines {
+        for (metric, d) in &b.metrics {
+            let mut row = vec![b.name.clone(), b.router.clone(), metric.clone()];
+            row.extend(d.fields().into_iter().map(|(_, v)| v.to_string()));
+            rows.push(row);
+        }
+    }
+    let field_names: Vec<&str> = Distribution::default()
+        .fields()
+        .into_iter()
+        .map(|(name, _)| name)
+        .collect();
+    let mut header = vec!["estate", "router", "metric"];
+    header.extend(field_names);
+    to_csv(&header, &rows)
+}
+
+/// Write [`estate_csv`] as `estate_summary.csv` under `dir`; returns
+/// the path.
+pub fn write_estate_csv(dir: &Path, baselines: &[EstateBaseline]) -> io::Result<PathBuf> {
+    let path = dir.join("estate_summary.csv");
+    write_csv_file(&path, &estate_csv(baselines))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use crate::estate::ESTATE_METRICS;
+
+    use super::*;
+
+    fn baseline(router: &str) -> EstateBaseline {
+        let mut metrics = BTreeMap::new();
+        for name in ESTATE_METRICS {
+            metrics.insert(name.to_string(), Distribution::from_values(&[1.0, 2.0, 4.0]));
+        }
+        EstateBaseline {
+            name: "routed-growth".into(),
+            router: router.into(),
+            seeds: 3,
+            seed_base: 0,
+            metrics,
+        }
+    }
+
+    #[test]
+    fn table_has_one_row_per_baseline() {
+        let t = estate_table(&[baseline("health"), baseline("round-robin")]);
+        assert_eq!(t.rows.len(), 2);
+        let text = t.render();
+        assert!(text.contains("routed-growth"));
+        assert!(text.contains("health"));
+        assert!(text.contains("round-robin"));
+        assert!(text.contains("Estate var p90"));
+    }
+
+    #[test]
+    fn csv_covers_every_metric_and_field() {
+        let csv = estate_csv(&[baseline("health")]);
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "estate,router,metric,mean,stddev,min,p50,p90,p99,max"
+        );
+        assert_eq!(lines.count(), ESTATE_METRICS.len());
+        assert!(csv.contains("routed-growth,health,estate_variance,"));
+    }
+
+    #[test]
+    fn csv_file_lands_in_the_requested_dir() {
+        let dir = std::env::temp_dir().join(format!("eq_estate_csv_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = write_estate_csv(&dir, &[baseline("health")]).unwrap();
+        assert!(path.ends_with("estate_summary.csv"));
+        assert!(std::fs::read_to_string(&path).unwrap().starts_with("estate,router,metric"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

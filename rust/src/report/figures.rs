@@ -245,7 +245,9 @@ pub fn plan_table(
         let phased = crate::plan::schedule_plan(&c.state, &opt.movements, sched);
         let n = c.state.osd_count();
         let raw_makespan =
-            crate::coordinator::execute_plan(&res.movements, &sched.executor, n).makespan;
+            crate::coordinator::execute_plan(&res.movements, &sched.executor, n)
+                .expect("simulated plans reference in-range OSDs")
+                .makespan;
         let phased_makespan = phased.makespan(&sched.executor, n);
         t.push_row(vec![
             c.name.to_string(),

@@ -2,10 +2,12 @@
 //! ablations, as text tables and CSV series.
 
 pub mod csv;
+pub mod estate;
 pub mod figures;
 pub mod fleet;
 pub mod table;
 
+pub use estate::{estate_csv, estate_table, write_estate_csv};
 pub use figures::{
     ablate_count_criterion, ablate_k, figure4, figure5, figure6, make_equilibrium, plan_table,
     run_cluster, scenario_series, table1, Scoring, Table1Row,

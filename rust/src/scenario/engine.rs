@@ -630,7 +630,8 @@ impl<'a> ScenarioEngine<'a> {
                     let phased = schedule_plan(initial, exec_plan, sched);
                     phases = phased.phases.len();
                     for (p, phase) in phased.phases.iter().enumerate() {
-                        let report = execute_plan(phase, exec, self.state.osd_count());
+                        let report = execute_plan(phase, exec, self.state.osd_count())
+                            .expect("scheduled phases reference in-range OSDs");
                         self.vtime += report.makespan;
                         makespan += report.makespan;
                         peak = peak.max(report.peak_concurrency);
@@ -643,7 +644,8 @@ impl<'a> ScenarioEngine<'a> {
                     }
                 }
                 _ => {
-                    let report = execute_plan(exec_plan, exec, self.state.osd_count());
+                    let report = execute_plan(exec_plan, exec, self.state.osd_count())
+                        .expect("balancer plans reference in-range OSDs");
                     makespan = report.makespan;
                     peak = report.peak_concurrency;
                     phases = if exec_plan.is_empty() { 0 } else { 1 };
@@ -687,7 +689,8 @@ impl<'a> ScenarioEngine<'a> {
         if backfills.is_empty() {
             return 0.0;
         }
-        let report = execute_plan(backfills, exec, self.state.osd_count());
+        let report = execute_plan(backfills, exec, self.state.osd_count())
+            .expect("recovery backfills reference in-range OSDs");
         self.vtime += report.makespan;
         let bytes: u64 = backfills.iter().map(|m| m.bytes).sum();
         self.log_event(Event::RecoveryExecuted { makespan: report.makespan, bytes });

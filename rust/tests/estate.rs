@@ -1,0 +1,104 @@
+//! Estate coordinator integration tests (RFC 0008): thread-count
+//! determinism of estate sweeps, the health-weighted routing win over
+//! round-robin on a capacity-skewed estate, and degraded-member pool
+//! migration end to end.
+
+use equilibrium::estate::{
+    library, sweep_spec, Estate, EstateConfig, EstateSweepConfig, HealthWeighted, RoundRobin,
+};
+use equilibrium::util::parallel::with_threads;
+
+fn smoke_sweep(case: &str, router: &str) -> String {
+    let case = library::by_name(case, 0, true).expect("library case");
+    let cfg = EstateSweepConfig::smoke();
+    sweep_spec(&case.spec, router, &case.config, &cfg)
+        .expect("sweep")
+        .summarize(cfg.seed_base)
+        .render()
+}
+
+#[test]
+fn estate_sweep_is_byte_identical_across_thread_counts() {
+    for name in library::ALL {
+        let one = with_threads(1, || smoke_sweep(name, "health"));
+        let four = with_threads(4, || smoke_sweep(name, "health"));
+        assert_eq!(one, four, "estate case '{name}' diverged between 1 and 4 threads");
+    }
+}
+
+#[test]
+fn health_routing_beats_round_robin_on_a_skewed_estate() {
+    // the headline claim, smoke-sized: over the sweep, health-weighted
+    // routing ends with strictly lower cross-cluster utilization
+    // variance than the round-robin baseline (benches/estate.rs gates
+    // the full-size version)
+    let case = library::by_name("routed-growth", 0, true).unwrap();
+    let cfg = EstateSweepConfig::smoke();
+    let dist = |router: &str| {
+        sweep_spec(&case.spec, router, &case.config, &cfg)
+            .expect("sweep")
+            .summarize(cfg.seed_base)
+            .metrics["estate_variance"]
+    };
+    let health = dist("health");
+    let rr = dist("round-robin");
+    assert!(
+        health.mean < rr.mean,
+        "health-weighted mean estate variance {} must beat round-robin {}",
+        health.mean,
+        rr.mean,
+    );
+}
+
+#[test]
+fn degraded_failover_case_migrates_and_survives() {
+    let case = library::by_name("degraded-failover", 3, true).unwrap();
+    let estate = Estate::from_spec(&case.spec, Box::new(HealthWeighted), case.config.clone())
+        .expect("estate builds");
+    let out = estate.run(&case.spec).expect("timeline runs");
+    // the failed member crossed the threshold and was drained: whether
+    // pools lived there depends on routing, but health reporting must
+    // flag the degradation either way
+    assert!(
+        out.healths.iter().any(|h| h.degraded),
+        "the failover case must leave a degraded member"
+    );
+    assert!(out.samples.len() >= 3, "initial, pre-failure, and final snapshots");
+    assert!(out.elapsed > 0.0);
+    // member makespans feed the estate metrics; every channel finite
+    assert!(out.member_makespans.iter().all(|m| m.is_finite()));
+}
+
+#[test]
+fn round_robin_spreads_pools_where_health_concentrates_headroom() {
+    let case = library::by_name("routed-growth", 1, true).unwrap();
+    let run = |router: Box<dyn equilibrium::estate::Router>| {
+        Estate::from_spec(&case.spec, router, case.config.clone())
+            .expect("estate builds")
+            .run(&case.spec)
+            .expect("runs")
+    };
+    let health = run(Box::new(HealthWeighted));
+    let rr = run(Box::new(RoundRobin::default()));
+    // same timeline, same seed, different placement: the routers must
+    // actually disagree — otherwise the comparison tests above are
+    // vacuous
+    let hu = &health.samples.last().unwrap().member_utilization;
+    let ru = &rr.samples.last().unwrap().member_utilization;
+    assert_ne!(hu, ru, "routers placed identically; the estate comparison is vacuous");
+    assert!(health.estate_variance < rr.estate_variance);
+}
+
+#[test]
+fn mixed_churn_stays_quiet_on_migrations() {
+    let case = library::by_name("mixed-churn", 2, true).unwrap();
+    let estate = Estate::from_spec(&case.spec, Box::new(HealthWeighted), case.config.clone())
+        .expect("estate builds");
+    let out = estate.run(&case.spec).expect("timeline runs");
+    // the single-device failure stays under the degraded threshold, so
+    // the health checks must not migrate anything
+    assert_eq!(out.migrations, 0, "sub-threshold failure must not trigger migration");
+    assert_eq!(out.migrated_bytes, 0);
+    assert!(out.healths.iter().all(|h| !h.degraded));
+    assert!(out.executed_bytes > 0, "balance rounds must execute data movement");
+}

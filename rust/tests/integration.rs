@@ -75,7 +75,7 @@ fn full_pipeline_on_cluster_c() {
     }
 
     // execute the plan through the coordinator
-    let report = execute_plan(&eq.movements, &ExecutorConfig::default(), state.osd_count());
+    let report = execute_plan(&eq.movements, &ExecutorConfig::default(), state.osd_count()).unwrap();
     assert_eq!(report.transfers.len(), eq.movements.len());
     assert!(report.makespan > 0.0);
 }

@@ -318,7 +318,7 @@ fn assert_churn_savings(name: &str, seed: u64, keep: impl Fn(usize) -> usize) {
         opt.stats.bytes,
         raw_bytes
     );
-    let raw_makespan = execute_plan(&raw, &sched.executor, n).makespan;
+    let raw_makespan = execute_plan(&raw, &sched.executor, n).unwrap().makespan;
     let phased_makespan = phased.makespan(&sched.executor, n);
     assert!(
         phased_makespan < raw_makespan,

@@ -116,7 +116,7 @@ fn prop_executor_respects_backfill_limits() {
             })
             .collect();
         let cfg = ExecutorConfig { max_backfills, bandwidth: 100.0 * GIB as f64 };
-        let report = execute_plan(&plan, &cfg, osds);
+        let report = execute_plan(&plan, &cfg, osds).unwrap();
         prop_assert!(report.transfers.len() == plan.len(), "all transfers must run");
 
         // instantaneous concurrency per OSD must never exceed the limit:
