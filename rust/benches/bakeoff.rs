@@ -1,0 +1,152 @@
+//! Balancer bake-off benchmark (RFC 0009): sweep the scenario library
+//! under every registry balancer, pin the head-to-head document
+//! byte-identical across thread counts, and gate the paper's headline
+//! claim. Emits **`BENCH_bakeoff.json`** at the repo root.
+//!
+//! `--smoke` shrinks the sweep to 4 seeds and skips the quality gates
+//! (CI's determinism check). The full run gates on:
+//!
+//! * **size-aware beats size-blind**: Equilibrium's mean final
+//!   utilization variance is strictly below ASURA's on at least 5 of
+//!   the 7 library scenarios (the paper's §3 claim, generalized);
+//! * **the budget holds**: a `BoundedEquilibrium` driven round by
+//!   round on the demo cluster never moves more bytes in a round than
+//!   its per-round budget.
+
+use std::time::Instant;
+
+use equilibrium::balancer::{Balancer, BoundedConfig, BoundedEquilibrium};
+use equilibrium::fleet::{run_compare, CompareBaseline, FleetConfig};
+use equilibrium::generator::clusters;
+use equilibrium::scenario::ALL;
+use equilibrium::util::bench::write_bench_json;
+use equilibrium::util::json::Json;
+use equilibrium::util::parallel::with_threads;
+use equilibrium::util::units::fmt_duration;
+
+const ENGINES: [&str; 4] = ["equilibrium", "mgr", "asura", "bounded"];
+
+/// Scenarios where Equilibrium's mean final variance is strictly below
+/// ASURA's.
+fn variance_wins(b: &CompareBaseline) -> Vec<&str> {
+    let eq = b.balancer("equilibrium").expect("equilibrium swept");
+    let asura = b.balancer("asura").expect("asura swept");
+    eq.scenarios
+        .iter()
+        .zip(&asura.scenarios)
+        .filter(|(e, a)| {
+            e.metrics["variance"].mean < a.metrics["variance"].mean
+        })
+        .map(|(e, _)| e.name.as_str())
+        .collect()
+}
+
+/// Drive a bounded engine round by round on the demo cluster and
+/// return `(rounds, max observed round bytes, budget)`.
+fn bounded_budget_probe() -> (usize, u64, u64) {
+    let mut state = clusters::demo(42);
+    let mut bal = BoundedEquilibrium::new(BoundedConfig {
+        // two largest-shard moves per round: almost every round truncates
+        round_fraction: {
+            let max_shard = state.pgs().map(|pg| pg.shard_bytes()).max().unwrap_or(1);
+            (2 * max_shard) as f64 / state.total_size() as f64
+        },
+        ..BoundedConfig::default()
+    });
+    let budget = bal.round_budget(&state);
+    let mut rounds = 0;
+    let mut worst = 0u64;
+    loop {
+        bal.on_round_start(&state);
+        let moves = bal.propose_batch(&mut state, 10_000);
+        if moves.is_empty() {
+            break;
+        }
+        worst = worst.max(moves.iter().map(|m| m.bytes).sum());
+        rounds += 1;
+        assert!(rounds <= 10_000, "bounded engine failed to converge");
+    }
+    (rounds, worst, budget)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let cfg = FleetConfig {
+        seeds: if smoke { 4 } else { 16 },
+        reduced: true,
+        ..FleetConfig::default()
+    };
+    let names: Vec<&str> = ALL.to_vec();
+    println!(
+        "bake-off bench — {} balancers × {} scenarios × {} seeds (reduced), threads 1/2/4",
+        ENGINES.len(),
+        names.len(),
+        cfg.seeds
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut first: Option<CompareBaseline> = None;
+    for threads in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let result = with_threads(threads, || run_compare(&ENGINES, &names, &cfg))
+            .expect("bake-off sweep");
+        let wall = t0.elapsed().as_secs_f64();
+        let baseline = result.to_baseline();
+        match &first {
+            None => first = Some(baseline),
+            Some(f) => assert_eq!(
+                f.render(),
+                baseline.render(),
+                "head-to-head output diverged at {threads} threads"
+            ),
+        }
+        println!("  threads {threads}: sweep wall time {}", fmt_duration(wall));
+        rows.push(Json::obj().set("threads", threads).set("wall_seconds", wall));
+    }
+    let baseline = first.expect("at least one sweep ran");
+    let wins = variance_wins(&baseline);
+    println!(
+        "equilibrium beats asura on final variance in {}/{} scenarios: {:?}",
+        wins.len(),
+        names.len(),
+        wins
+    );
+    let (rounds, worst_round, budget) = bounded_budget_probe();
+    println!(
+        "bounded probe: {rounds} rounds, worst round {worst_round} B vs budget {budget} B"
+    );
+    assert!(
+        worst_round <= budget,
+        "bounded engine burst its per-round budget: {worst_round} > {budget}"
+    );
+
+    let doc = Json::obj()
+        .set("bench", "bakeoff")
+        .set("smoke", smoke)
+        .set("balancers", ENGINES.len())
+        .set("scenarios", names.len())
+        .set("seeds", cfg.seeds)
+        .set("reduced", true)
+        .set("byte_identical", true)
+        .set("variance_wins_vs_asura", wins.len() as u64)
+        .set("bounded_rounds", rounds as u64)
+        .set("bounded_worst_round_bytes", worst_round)
+        .set("bounded_round_budget_bytes", budget)
+        .set("threads", Json::Arr(rows));
+    write_bench_json("bakeoff", &doc);
+
+    if smoke {
+        println!("smoke mode: variance-win gate skipped (reduced seed count)");
+    } else {
+        assert!(
+            wins.len() >= 5,
+            "size-aware balancing must win final variance vs ASURA on ≥5/7 scenarios \
+             (got {}/{}: {:?})",
+            wins.len(),
+            names.len(),
+            wins
+        );
+        println!("gate passed: {}/{} variance wins vs asura", wins.len(), names.len());
+    }
+}

@@ -1,0 +1,335 @@
+//! ASURA-style uniform-distribution baseline: equal PG-shard *counts*
+//! per weighted device via hash-bucket assignment (see PAPERS.md,
+//! "ASURA: Scalable and Uniform Data Distribution Algorithm").
+//!
+//! The discipline under test is **size-blindness**: like ASURA (and
+//! unlike Equilibrium), the balancer never inspects shard sizes or
+//! device utilization. It drives every pool's per-device shard counts
+//! toward the weight-derived ideal, choosing *which* shard to move by
+//! hash order and *where* to move it by weighted rendezvous hashing —
+//! the hash-bucket assignment that gives ASURA its uniformity: each
+//! device owns a slice of hash space proportional to its capacity
+//! weight, so expected shard counts match weights without any
+//! data-dependent feedback.
+//!
+//! Compared to the `mgr` baseline ([`super::mgr`]), ASURA has a global
+//! candidate view per pool (every count-underfull device is a possible
+//! destination, not just the single most-underfull one) but remains
+//! count-only — in the bake-off it brackets Equilibrium from the other
+//! side: better count uniformity than `mgr`, still blind to the size
+//! skew the paper's size-aware scoring exploits.
+//!
+//! Termination: a move is accepted only when the destination's count
+//! deviation is more than one shard below the source's, which strictly
+//! decreases the pool's sum of squared count deviations; counts live on
+//! an integer lattice, so the descent bottoms out and
+//! [`Balancer::next_move`] returns `None`.
+
+use crate::cluster::{ClusterState, PgId};
+use crate::crush::OsdId;
+
+use super::constraints::{check_move_cached, ConstraintCache};
+use super::{Balancer, Proposal};
+
+/// Tunables for the ASURA baseline.
+#[derive(Debug, Clone)]
+pub struct AsuraConfig {
+    /// A pool is balanced when every device's shard count is within
+    /// this many shards of its weight-derived ideal.
+    pub max_deviation: f64,
+    /// Overall movement budget across the balancer's lifetime.
+    pub max_moves: usize,
+}
+
+impl Default for AsuraConfig {
+    fn default() -> Self {
+        AsuraConfig { max_deviation: 1.0, max_moves: 10_000 }
+    }
+}
+
+/// The ASURA-style baseline balancer. Size-blind by design.
+#[derive(Debug, Default)]
+pub struct AsuraBalancer {
+    /// Tunables.
+    pub cfg: AsuraConfig,
+    moves_done: usize,
+    /// Weight-static CRUSH slot constraints per pool.
+    constraints: ConstraintCache,
+}
+
+/// FNV-1a over a sequence of u64 words — the zero-dep stand-in for
+/// ASURA's segment hash. Stable across platforms and thread counts.
+fn fnv1a(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Map a hash to the open unit interval (never exactly 0 or 1, so the
+/// rendezvous logarithm below is always finite and nonzero).
+fn unit(h: u64) -> f64 {
+    // 53 mantissa bits, then nudge off the endpoints
+    let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    u.clamp(1e-12, 1.0 - 1e-12)
+}
+
+/// Weighted rendezvous (highest-random-weight) score of placing `pg` on
+/// `osd`: `-w / ln(u)` with `u = hash(pg, osd)`. Picking the maximum
+/// over devices assigns the shard to a hash bucket whose width is
+/// proportional to the device's capacity weight — ASURA's
+/// equal-count-per-weight discipline, with no data-dependent state.
+fn rendezvous_score(pg: PgId, osd: OsdId, weight: f64) -> f64 {
+    let u = unit(fnv1a(&[pg.pool as u64, pg.index as u64, osd as u64]));
+    -weight / u.ln()
+}
+
+impl AsuraBalancer {
+    /// Create a baseline balancer with the given tunables.
+    pub fn new(cfg: AsuraConfig) -> Self {
+        AsuraBalancer { cfg, moves_done: 0, constraints: ConstraintCache::new() }
+    }
+
+    /// Try to produce one count-improving movement for `pool_id`.
+    fn try_pool(&mut self, state: &ClusterState, pool_id: u32) -> Option<Proposal> {
+        let devices = state.pool_rule_devices(pool_id)?;
+        let ideal = state.pool_ideal_counts(pool_id)?;
+        let counts = state.pool_shard_counts(pool_id)?;
+
+        // candidate set: up, nonzero-capacity devices only (the same
+        // indexed set Equilibrium plans over)
+        let mut devs: Vec<(f64, OsdId)> = devices
+            .iter()
+            .filter(|&&o| state.osd_is_indexed(o))
+            .map(|&o| (counts[o as usize] as f64 - ideal[o as usize], o))
+            .collect();
+        if devs.len() < 2 {
+            return None;
+        }
+        // deterministic order: deviation descending, then id ascending
+        devs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+
+        let constraints = self.constraints.for_pool(state, pool_id);
+        // walk sources fullest-first; each must beat the tolerance
+        for &(src_dev, source) in &devs {
+            if src_dev <= self.cfg.max_deviation {
+                break; // sorted: no later source can exceed it either
+            }
+            // destinations that keep the squared-deviation descent
+            // strict: more than one shard below the source
+            let dests: Vec<(f64, OsdId)> = devs
+                .iter()
+                .filter(|&&(d, o)| o != source && src_dev - d > 1.0)
+                .map(|&(_, o)| (state.osd_size(o) as f64, o))
+                .collect();
+            if dests.is_empty() {
+                continue;
+            }
+
+            // shard selection by hash order — size never consulted
+            let mut shard_ids: Vec<(u64, PgId)> = state
+                .shards_on(source)
+                .iter()
+                .map(|&idx| state.pg_id_at(idx))
+                .filter(|pg| pg.pool == pool_id)
+                .map(|pg| (fnv1a(&[pg.pool as u64, pg.index as u64]), pg))
+                .collect();
+            shard_ids.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+
+            for (_, pg) in shard_ids {
+                // hash-bucket assignment: rank this shard's candidate
+                // destinations by weighted rendezvous score (best
+                // bucket first), then take the first CRUSH-legal one
+                let mut ranked: Vec<(f64, OsdId)> = dests
+                    .iter()
+                    .map(|&(w, o)| (rendezvous_score(pg, o, w), o))
+                    .collect();
+                ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+                for &(_, dest) in &ranked {
+                    if check_move_cached(state, pg, source, dest, constraints).is_ok() {
+                        let bytes = state.pg(pg)?.shard_bytes();
+                        return Some(Proposal { pg, from: source, to: dest, bytes });
+                    }
+                }
+            }
+            // no shard of this source moves anywhere legal — fall
+            // through and try the next-fullest source (unlike mgr's
+            // single-candidate limitation)
+        }
+        None
+    }
+}
+
+impl Balancer for AsuraBalancer {
+    fn name(&self) -> &str {
+        "asura"
+    }
+
+    fn on_topology_change(&mut self) {
+        self.constraints.invalidate();
+    }
+
+    fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
+        if self.moves_done >= self.cfg.max_moves {
+            return None;
+        }
+        let pool_ids: Vec<u32> = state.pools.keys().copied().collect();
+        for pool_id in pool_ids {
+            if let Some(p) = self.try_pool(state, pool_id) {
+                self.moves_done += 1;
+                return Some(p);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::run_to_convergence;
+    use crate::cluster::Pool;
+    use crate::crush::{CrushBuilder, DeviceClass, Level, Rule};
+    use crate::util::units::{GIB, TIB};
+
+    fn cluster(pg_count: u32) -> ClusterState {
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..6 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![Pool::replicated(1, "data", 3, pg_count, 0)];
+        ClusterState::build(crush, pools, |_, i| (10 + (i % 5) as u64) * GIB)
+    }
+
+    #[test]
+    fn asura_drives_counts_within_deviation() {
+        let mut state = cluster(64);
+        let mut bal = AsuraBalancer::default();
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        let ideal = state.pool_ideal_counts(1).unwrap().to_vec();
+        let counts = state.pool_shard_counts(1).unwrap().to_vec();
+        for o in 0..state.osd_count() as OsdId {
+            let dev = counts[o as usize] as f64 - ideal[o as usize];
+            assert!(dev <= 1.0 + 1e-9, "osd.{o}: deviation {dev}");
+        }
+        assert!(state.verify().is_empty());
+    }
+
+    #[test]
+    fn asura_moves_are_crush_legal_and_size_blind_order_is_deterministic() {
+        let run = || {
+            let mut state = cluster(48);
+            let mut bal = AsuraBalancer::default();
+            let mut seq = Vec::new();
+            while let Some(p) = bal.next_move(&state) {
+                assert!(
+                    crate::balancer::constraints::check_move(&state, p.pg, p.from, p.to).is_ok()
+                );
+                state.apply_movement(p.pg, p.from, p.to).unwrap();
+                seq.push((p.pg, p.from, p.to, p.bytes));
+            }
+            seq
+        };
+        let a = run();
+        let b = run();
+        assert!(!a.is_empty(), "imbalanced cluster must yield moves");
+        assert_eq!(a, b, "hash-ordered selection must be deterministic");
+    }
+
+    #[test]
+    fn asura_max_moves_is_respected() {
+        let mut state = cluster(256);
+        let mut bal = AsuraBalancer::new(AsuraConfig { max_moves: 3, ..Default::default() });
+        let moves = run_to_convergence(&mut bal, &mut state, 10_000);
+        assert!(moves.len() <= 3);
+    }
+
+    #[test]
+    fn asura_never_targets_unindexed_devices() {
+        let mut state = cluster(64);
+        // mark a device down WITHOUT zeroing its weight (down-not-out):
+        // its ideal count stays positive, so a candidate-set bug would
+        // happily route shards at it
+        state.set_osd_up(2, false);
+        let mut bal = AsuraBalancer::default();
+        let mut moved = 0;
+        while let Some(p) = bal.next_move(&state) {
+            assert!(state.osd_is_indexed(p.to), "move targets down osd.{}", p.to);
+            assert_ne!(p.to, 2);
+            state.apply_movement(p.pg, p.from, p.to).unwrap();
+            moved += 1;
+            if moved > 2_000 {
+                panic!("asura failed to terminate");
+            }
+        }
+    }
+
+    #[test]
+    fn asura_is_size_blind_but_count_uniform_vs_equilibrium() {
+        // same two-pool skew as the mgr size-blindness test: ASURA
+        // equalizes counts, Equilibrium matches or beats it on variance
+        let mut b = CrushBuilder::new();
+        let root = b.add_root("default");
+        for h in 0..6 {
+            let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+        b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+        let crush = b.build().unwrap();
+        let pools = vec![
+            Pool::replicated(1, "big", 3, 32, 0),
+            Pool::replicated(2, "small", 3, 32, 0),
+        ];
+        let build = |crush| {
+            ClusterState::build(crush, pools.clone(), |p, i| {
+                if p.id == 1 {
+                    (40 + (i % 11) as u64 * 7) * GIB
+                } else {
+                    GIB
+                }
+            })
+        };
+        let mut asura_state = build(crush.clone());
+        let mut eq_state = build(crush);
+
+        let mut asura = AsuraBalancer::default();
+        run_to_convergence(&mut asura, &mut asura_state, 10_000);
+        let mut eq = crate::balancer::Equilibrium::default();
+        run_to_convergence(&mut eq, &mut eq_state, 10_000);
+
+        let v_asura = asura_state.utilization_variance();
+        let v_eq = eq_state.utilization_variance();
+        assert!(
+            v_eq <= v_asura,
+            "size-aware balancing must match or beat the count-only baseline: \
+             {v_eq:.8} vs {v_asura:.8}"
+        );
+    }
+
+    #[test]
+    fn asura_converged_state_proposes_nothing() {
+        let mut state = cluster(64);
+        let mut bal = AsuraBalancer::default();
+        run_to_convergence(&mut bal, &mut state, 10_000);
+        let mut again = AsuraBalancer::default();
+        assert!(again.next_move(&state).is_none());
+    }
+
+    #[test]
+    fn rendezvous_hash_is_stable_and_weight_sensitive() {
+        let pg = PgId { pool: 1, index: 7 };
+        let a = rendezvous_score(pg, 0, 100.0);
+        let b = rendezvous_score(pg, 0, 100.0);
+        assert_eq!(a, b, "pure function of (pg, osd, weight)");
+        assert!(rendezvous_score(pg, 0, 200.0) > a, "more weight, bigger bucket");
+        assert!(a.is_finite() && a > 0.0);
+    }
+}

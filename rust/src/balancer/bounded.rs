@@ -1,0 +1,247 @@
+//! Movement-budget-bounded Equilibrium: the Coded-Data-Rebalancing cost
+//! discipline (see PAPERS.md) applied to the paper's size-aware
+//! balancer. Rebalancing has a *communication cost*; this variant caps
+//! the bytes moved per balance round at a configurable fraction of the
+//! total cluster capacity and degrades gracefully when the cap
+//! truncates a round: the move that would burst the budget is dropped
+//! (not shrunk, not deferred within the round) and the round ends, so a
+//! round's moved bytes never exceed the budget by even one byte.
+//!
+//! The budget is per *round* in the scenario engine's sense — it is
+//! re-armed by [`Balancer::on_round_start`], which the engine invokes
+//! once per `BalanceRound` event. Callers that drive
+//! [`Balancer::next_move`] or [`Balancer::propose_batch`] directly
+//! without round framing get a single budget spanning the whole
+//! session, computed lazily from the first state they pass in; call
+//! [`Balancer::on_round_start`] yourself to open a fresh round.
+//!
+//! Inner planning is a stock [`Equilibrium`] engine — move *selection*
+//! is identical, byte for byte, until the budget truncates; a bounded
+//! run is always a prefix-per-round of the unbounded run's rounds.
+
+use crate::cluster::ClusterState;
+
+use super::equilibrium::{Equilibrium, EquilibriumConfig};
+use super::scoring::NativeScorer;
+use super::{Balancer, Proposal};
+
+/// Tunables for the bounded variant.
+#[derive(Debug, Clone)]
+pub struct BoundedConfig {
+    /// Per-round moved-bytes budget as a fraction of the cluster's
+    /// total raw capacity. Values outside `(0, 1]` are clamped into it
+    /// at budget-arming time (a 0-or-negative budget would silently
+    /// disable balancing; more than the whole cluster is meaningless).
+    pub round_fraction: f64,
+    /// Inner Equilibrium tunables (move selection is unchanged).
+    pub inner: EquilibriumConfig,
+}
+
+impl Default for BoundedConfig {
+    fn default() -> Self {
+        BoundedConfig { round_fraction: 0.01, inner: EquilibriumConfig::default() }
+    }
+}
+
+/// Equilibrium with a per-round moved-bytes cap.
+pub struct BoundedEquilibrium {
+    /// Tunables.
+    pub cfg: BoundedConfig,
+    inner: Equilibrium<NativeScorer>,
+    /// Byte budget of the current round; `None` until armed (first
+    /// round start or first planning call).
+    budget: Option<u64>,
+    /// Bytes of the proposals handed out this round.
+    spent: u64,
+}
+
+impl Default for BoundedEquilibrium {
+    fn default() -> Self {
+        BoundedEquilibrium::new(BoundedConfig::default())
+    }
+}
+
+impl BoundedEquilibrium {
+    /// Create a bounded balancer with the given tunables.
+    pub fn new(cfg: BoundedConfig) -> Self {
+        let inner = Equilibrium::new(cfg.inner.clone(), NativeScorer);
+        BoundedEquilibrium { cfg, inner, budget: None, spent: 0 }
+    }
+
+    /// The byte budget one round gets over `state`.
+    pub fn round_budget(&self, state: &ClusterState) -> u64 {
+        let f = self.cfg.round_fraction.clamp(f64::MIN_POSITIVE, 1.0);
+        // ceil so a tiny cluster with a tiny fraction still gets to
+        // move its smallest shard rather than stalling at budget 0
+        (state.total_size() as f64 * f).ceil() as u64
+    }
+
+    /// Bytes still available in the current round (the full budget if
+    /// none has been armed yet — arming happens on the next planning
+    /// call).
+    pub fn remaining(&self, state: &ClusterState) -> u64 {
+        self.budget
+            .unwrap_or_else(|| self.round_budget(state))
+            .saturating_sub(self.spent)
+    }
+}
+
+impl Balancer for BoundedEquilibrium {
+    fn name(&self) -> &str {
+        "bounded"
+    }
+
+    fn on_round_start(&mut self, state: &ClusterState) {
+        self.budget = Some(self.round_budget(state));
+        self.spent = 0;
+    }
+
+    fn on_topology_change(&mut self) {
+        self.inner.on_topology_change();
+        // capacity may have changed (expansion, failure-out); re-derive
+        // the budget from the next state we see
+        self.budget = None;
+    }
+
+    fn next_move(&mut self, state: &ClusterState) -> Option<Proposal> {
+        if self.budget.is_none() {
+            // unframed caller: one budget for the whole session
+            self.budget = Some(self.round_budget(state));
+        }
+        let remaining = self.budget.expect("armed above").saturating_sub(self.spent);
+        if remaining == 0 {
+            return None;
+        }
+        let p = self.inner.next_move(state)?;
+        if p.bytes > remaining {
+            // graceful truncation: the selection stream is utilization-
+            // ordered, not size-ordered, so we end the round here
+            // instead of scanning for a smaller move that would change
+            // the move sequence relative to unbounded Equilibrium
+            return None;
+        }
+        self.spent += p.bytes;
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::run_to_convergence;
+    use crate::generator::clusters;
+
+    /// A round budget of two of the cluster's largest shards: every
+    /// round can make progress (any single proposal fits), yet almost
+    /// every round is truncated — the regime the cap exists for.
+    fn two_shard_fraction(state: &ClusterState) -> f64 {
+        let max_shard = state.pgs().map(|pg| pg.shard_bytes()).max().unwrap_or(1);
+        (2 * max_shard) as f64 / state.total_size() as f64
+    }
+
+    #[test]
+    fn bounded_never_exceeds_the_round_budget() {
+        let mut state = clusters::demo(42);
+        let mut bal = BoundedEquilibrium::new(BoundedConfig {
+            round_fraction: two_shard_fraction(&state),
+            ..BoundedConfig::default()
+        });
+        let mut total_moved = 0u64;
+        for _round in 0..5 {
+            bal.on_round_start(&state);
+            let budget = bal.round_budget(&state);
+            let moves = bal.propose_batch(&mut state, 10_000);
+            let bytes: u64 = moves.iter().map(|m| m.bytes).sum();
+            assert!(bytes <= budget, "round moved {bytes} > budget {budget}");
+            total_moved += bytes;
+        }
+        assert!(total_moved > 0, "the imbalanced demo cluster must yield budgeted moves");
+    }
+
+    #[test]
+    fn truncation_is_graceful_and_rounds_resume_where_they_stopped() {
+        let initial = clusters::demo(42);
+
+        let mut unbounded_state = initial.clone();
+        let mut unbounded = Equilibrium::default();
+        let full = unbounded.propose_batch(&mut unbounded_state, 10_000);
+        assert!(!full.is_empty());
+
+        let mut state = initial;
+        let mut bal = BoundedEquilibrium::new(BoundedConfig {
+            round_fraction: two_shard_fraction(&state),
+            ..BoundedConfig::default()
+        });
+        let mut all = Vec::new();
+        // enough rounds to drain the same optimization work
+        for _ in 0..10_000 {
+            bal.on_round_start(&state);
+            let moves = bal.propose_batch(&mut state, 10_000);
+            if moves.is_empty() {
+                break;
+            }
+            all.extend(moves);
+        }
+        // bounded reaches the same final plan as unbounded — the cap
+        // slices the work into rounds without changing selection
+        assert_eq!(all.len(), full.len());
+        for (a, b) in all.iter().zip(&full) {
+            assert_eq!((a.pg, a.from, a.to, a.bytes), (b.pg, b.from, b.to, b.bytes));
+        }
+        assert_eq!(
+            state.utilization_variance(),
+            unbounded_state.utilization_variance(),
+            "same moves, same final balance"
+        );
+    }
+
+    #[test]
+    fn generous_budget_matches_unbounded_equilibrium_exactly() {
+        let initial = clusters::demo(11);
+        let mut s1 = initial.clone();
+        let mut s2 = initial;
+        let mut eq = Equilibrium::default();
+        let mut bounded = BoundedEquilibrium::new(BoundedConfig {
+            round_fraction: 1.0,
+            ..BoundedConfig::default()
+        });
+        let a = eq.propose_batch(&mut s1, 10_000);
+        bounded.on_round_start(&s2);
+        let b = bounded.propose_batch(&mut s2, 10_000);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.pg, x.from, x.to, x.bytes), (y.pg, y.from, y.to, y.bytes));
+        }
+    }
+
+    #[test]
+    fn unframed_callers_get_one_lazily_armed_budget() {
+        let mut state = clusters::demo(42);
+        let mut bal = BoundedEquilibrium::new(BoundedConfig {
+            round_fraction: two_shard_fraction(&state),
+            ..BoundedConfig::default()
+        });
+        let budget = bal.round_budget(&state);
+        let moves = run_to_convergence(&mut bal, &mut state, 10_000);
+        assert!(!moves.is_empty(), "budget covers the largest shard, so moves must flow");
+        let bytes: u64 = moves.iter().map(|m| m.bytes).sum();
+        assert!(bytes <= budget, "session moved {bytes} > lazy budget {budget}");
+        // and the budget stays spent until a round re-arms it
+        assert!(bal.remaining(&state) < budget);
+    }
+
+    #[test]
+    fn degenerate_fractions_are_clamped_not_fatal() {
+        let state = clusters::demo(1);
+        let zero = BoundedEquilibrium::new(BoundedConfig {
+            round_fraction: 0.0,
+            ..BoundedConfig::default()
+        });
+        assert!(zero.round_budget(&state) >= 1, "clamped fraction still moves data");
+        let huge = BoundedEquilibrium::new(BoundedConfig {
+            round_fraction: 64.0,
+            ..BoundedConfig::default()
+        });
+        assert_eq!(huge.round_budget(&state), state.total_size());
+    }
+}

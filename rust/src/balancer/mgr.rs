@@ -64,18 +64,24 @@ impl MgrBalancer {
         let devices = state.pool_rule_devices(pool_id)?;
         let ideal = state.pool_ideal_counts(pool_id)?;
         let counts = state.pool_shard_counts(pool_id)?;
-        if devices.len() < 2 {
-            return None;
-        }
 
-        // count deviation per device (pool-local!)
+        // count deviation per device (pool-local!) — restricted to the
+        // indexed set (up, nonzero capacity), like Equilibrium's
+        // candidate scratch: a down-but-not-yet-out device still has a
+        // positive ideal count, and electing it as the single tried
+        // destination stalls the pool (every move to it is
+        // CRUSH-rejected and mgr never tries the next-best device)
         let mut devs: Vec<(f64, OsdId)> = devices
             .iter()
+            .filter(|&&o| state.osd_is_indexed(o))
             .map(|&o| {
                 let count = counts[o as usize] as f64;
                 (count - ideal[o as usize], o)
             })
             .collect();
+        if devs.len() < 2 {
+            return None;
+        }
         // deterministic order: deviation, then id
         devs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
         let (max_dev, source) = devs[0];
@@ -83,6 +89,13 @@ impl MgrBalancer {
 
         // balanced within tolerance → nothing to do for this pool
         if max_dev <= self.cfg.max_deviation && min_dev >= -self.cfg.max_deviation {
+            return None;
+        }
+        // excluded devices can strand deviation on the indexed set
+        // (deviations no longer sum to zero); when the indexed spread
+        // is within one shard, another count move cannot improve it —
+        // without this guard the pool would shuttle shards forever
+        if max_dev - min_dev <= 1.0 {
             return None;
         }
 
@@ -229,6 +242,57 @@ mod tests {
             v_eq <= v_mgr,
             "size-aware balancing must match or beat count-only: {v_eq:.8} vs {v_mgr:.8}"
         );
+    }
+
+    /// Regression (PR 10): the candidate set included down devices. A
+    /// down-but-not-yet-out OSD (up = false, CRUSH weight intact — what
+    /// Ceph sees between failure detection and mark-out) keeps a
+    /// positive ideal count, so it became the most count-underfull
+    /// device; mgr's single-destination limitation then had every move
+    /// CRUSH-rejected (`TargetDown`) and abandoned the pool — a stall
+    /// while the up devices stayed imbalanced. Before the fix this test
+    /// fails at `next_move() == None` with osd.0 six shards overfull.
+    #[test]
+    fn failed_device_is_never_a_move_target() {
+        let mut state = cluster(48);
+        // engineer a count imbalance: pile shards onto osd.0 from osd.5
+        // (legal: one shard per host, 6 hosts, 3 replicas)
+        let mut piled = 0;
+        let pgs: Vec<PgId> = state.pgs().map(|pg| pg.id()).collect();
+        for pg in pgs {
+            if piled >= 6 {
+                break;
+            }
+            let view = state.pg(pg).unwrap();
+            if view.on(5) && !view.on(0) {
+                state.apply_movement(pg, 5, 0).unwrap();
+                piled += 1;
+            }
+        }
+        assert_eq!(piled, 6, "48 PGs × 3/6 hosts must offer 6 pileable shards");
+
+        // osd.5 is now the most underfull device; take it down WITHOUT
+        // zeroing its weight, so its ideal count stays positive
+        state.set_osd_up(5, false);
+        assert!(!state.osd_is_indexed(5));
+
+        let mut bal = MgrBalancer::default();
+        let first = bal.next_move(&state);
+        assert!(
+            first.is_some(),
+            "pool is 6 shards overfull on osd.0 — a down device must not stall it"
+        );
+        let mut moved = 0;
+        let mut again = MgrBalancer::default();
+        while let Some(p) = again.next_move(&state) {
+            assert!(state.osd_is_up(p.to), "move targets down osd.{}", p.to);
+            assert_ne!(p.to, 5);
+            state.apply_movement(p.pg, p.from, p.to).unwrap();
+            moved += 1;
+            assert!(moved <= 1_000, "mgr failed to terminate with a down device in the pool");
+        }
+        assert!(moved >= 1);
+        assert!(state.verify().is_empty());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! tested against.
 #![warn(missing_docs)]
 
+pub mod asura;
+pub mod bounded;
 pub mod constraints;
 pub mod equilibrium;
 pub mod mgr;
@@ -20,6 +22,8 @@ pub mod upmap_script;
 use crate::cluster::{ClusterState, Movement, PgId};
 use crate::crush::OsdId;
 
+pub use asura::{AsuraBalancer, AsuraConfig};
+pub use bounded::{BoundedConfig, BoundedEquilibrium};
 pub use equilibrium::{Equilibrium, EquilibriumConfig};
 pub use mgr::{MgrBalancer, MgrConfig};
 pub use partition::{balance_partitioned, run_partitioned, PartitionConfig, PartitionReport};
@@ -72,6 +76,16 @@ pub trait Balancer {
     /// from the old map. The default is a no-op, which is correct for
     /// cache-free balancers.
     fn on_topology_change(&mut self) {}
+
+    /// Notify the balancer that a new balance *round* is starting over
+    /// `state`. A round is the scenario engine's unit of budgeted work
+    /// (one `BalanceRound` event, possibly spanning several
+    /// [`Balancer::propose_batch`] calls); balancers with per-round
+    /// resource limits — like [`bounded::BoundedEquilibrium`]'s moved-
+    /// bytes budget — reset their accounting here. The default is a
+    /// no-op, which keeps every existing balancer's move sequence (and
+    /// the golden traces) byte-identical.
+    fn on_round_start(&mut self, _state: &ClusterState) {}
 
     /// Plan up to `max` movements, applying each accepted move to
     /// `state` so the next selection sees the projected result. Returns

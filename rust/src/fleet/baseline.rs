@@ -141,19 +141,15 @@ impl fmt::Display for BaselineError {
 
 impl std::error::Error for BaselineError {}
 
-fn schema(msg: impl Into<String>) -> BaselineError {
+pub(crate) fn schema(msg: impl Into<String>) -> BaselineError {
     BaselineError::Schema(msg.into())
 }
 
-/// Parse a `FLEET_baseline.json` document (the inverse of
-/// [`FleetBaseline::render`]). Every structural problem is a typed
-/// [`BaselineError`] — a hand-edited or truncated baseline can never
-/// panic the gate.
-pub fn parse_baseline(text: &str) -> Result<FleetBaseline, BaselineError> {
-    let v = Json::parse(text).map_err(BaselineError::Json)?;
-    if v.get_str("kind") != Some("fleet_baseline") {
-        return Err(schema("'kind' must be \"fleet_baseline\""));
-    }
+/// Parse the [`SweepMeta`] fields shared by every committed sweep
+/// document (`fleet_baseline`, `compare_baseline`): seeds, seed base,
+/// reduced flag, pipeline label, and the phased-pipeline schedule
+/// knobs (present exactly when `pipeline == "phased"`).
+pub(crate) fn parse_meta(v: &Json) -> Result<SweepMeta, BaselineError> {
     let pipeline = v
         .get_str("pipeline")
         .ok_or_else(|| schema("missing string 'pipeline'"))?
@@ -176,7 +172,7 @@ pub fn parse_baseline(text: &str) -> Result<FleetBaseline, BaselineError> {
     if (pipeline == "phased") != schedule.is_some() {
         return Err(schema("'schedule' must be present exactly when pipeline is \"phased\""));
     }
-    let meta = SweepMeta {
+    Ok(SweepMeta {
         seeds: v.get_u64("seeds").ok_or_else(|| schema("missing integer 'seeds'"))?,
         seed_base: v
             .get_u64("seed_base")
@@ -187,7 +183,19 @@ pub fn parse_baseline(text: &str) -> Result<FleetBaseline, BaselineError> {
             .ok_or_else(|| schema("missing boolean 'reduced'"))?,
         pipeline,
         schedule,
-    };
+    })
+}
+
+/// Parse a `FLEET_baseline.json` document (the inverse of
+/// [`FleetBaseline::render`]). Every structural problem is a typed
+/// [`BaselineError`] — a hand-edited or truncated baseline can never
+/// panic the gate.
+pub fn parse_baseline(text: &str) -> Result<FleetBaseline, BaselineError> {
+    let v = Json::parse(text).map_err(BaselineError::Json)?;
+    if v.get_str("kind") != Some("fleet_baseline") {
+        return Err(schema("'kind' must be \"fleet_baseline\""));
+    }
+    let meta = parse_meta(&v)?;
     let mut scenarios = Vec::new();
     for (i, s) in v
         .get_arr("scenarios")

@@ -1,0 +1,393 @@
+//! The balancer bake-off: sweep the scenario library under *several*
+//! balancer engines and reduce the results into one head-to-head
+//! document.
+//!
+//! This is the paper's evaluation loop (Equilibrium vs the built-in mgr
+//! balancer, §3) generalized to every pluggable [`Balancer`] in the
+//! tree: a compare run fans **(balancer, scenario, seed)** cells
+//! through the same work-stealing scheduler the fleet sweeps use, so a
+//! four-way bake-off over the full library costs one joint fan-out, not
+//! four sequential sweeps. Results come back grouped per balancer in
+//! request order, each scenario in request order, each sweep in seed
+//! order — independent of thread count, like every other fleet
+//! aggregate.
+//!
+//! The committed form is a [`CompareBaseline`] (kind
+//! `"compare_baseline"`): the same [`Distribution`] summaries as a
+//! fleet baseline, once per balancer. `report` renders it as the
+//! head-to-head table and CSV; the bake-off bench gates on it.
+
+use std::collections::BTreeMap;
+
+use crate::balancer::{
+    AsuraBalancer, Balancer, BoundedEquilibrium, Equilibrium, MgrBalancer, NativeScorer,
+    ReferenceEquilibrium,
+};
+use crate::scenario::library;
+use crate::util::json::Json;
+use crate::util::parallel;
+
+use super::baseline::{parse_meta, schema, BaselineError, ScenarioDist, SweepMeta};
+use super::stats::Distribution;
+use super::{FleetConfig, FleetError, RunStats, ScenarioSweep};
+
+/// Names accepted by [`make_balancer`], in canonical order. The first
+/// four are the bake-off's default field; `reference` is the O(n²)
+/// oracle (useful for small reduced-mode comparisons only).
+pub const BALANCERS: [&str; 5] = ["equilibrium", "mgr", "asura", "bounded", "reference"];
+
+/// Construct a fresh balancer by registry name (`None` if unknown).
+///
+/// Every engine comes up with its default tunables — a compare cell
+/// must be a pure function of `(balancer, scenario, seed, reduced)`,
+/// so no caller-side configuration enters here.
+pub fn make_balancer(name: &str) -> Option<Box<dyn Balancer>> {
+    match name {
+        "equilibrium" => Some(Box::new(Equilibrium::<NativeScorer>::default())),
+        "mgr" => Some(Box::new(MgrBalancer::default())),
+        "asura" => Some(Box::new(AsuraBalancer::default())),
+        "bounded" => Some(Box::new(BoundedEquilibrium::default())),
+        "reference" => Some(Box::new(ReferenceEquilibrium::<NativeScorer>::default())),
+        _ => None,
+    }
+}
+
+/// One balancer's raw sweep results over the compared scenarios.
+#[derive(Debug)]
+pub struct CompareEntry {
+    /// Registry name of the engine.
+    pub balancer: String,
+    /// Per-scenario sweeps, in request order.
+    pub sweeps: Vec<ScenarioSweep>,
+}
+
+/// A finished compare run: sweep parameters plus per-balancer results.
+#[derive(Debug)]
+pub struct CompareResult {
+    /// The sweep parameters (shared by every balancer).
+    pub meta: SweepMeta,
+    /// Per-balancer results, in request order.
+    pub entries: Vec<CompareEntry>,
+}
+
+impl CompareResult {
+    /// Reduce to the committed head-to-head document.
+    pub fn to_baseline(&self) -> CompareBaseline {
+        CompareBaseline {
+            meta: self.meta.clone(),
+            balancers: self
+                .entries
+                .iter()
+                .map(|e| BalancerSweep {
+                    balancer: e.balancer.clone(),
+                    scenarios: e.sweeps.iter().map(ScenarioSweep::summarize).collect(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One balancer's summarized distributions in a [`CompareBaseline`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BalancerSweep {
+    /// Registry name of the engine.
+    pub balancer: String,
+    /// Per-scenario metric distributions, in sweep order.
+    pub scenarios: Vec<ScenarioDist>,
+}
+
+/// The committed form of a bake-off (`compare_baseline` document):
+/// sweep parameters + per-balancer, per-scenario distributions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompareBaseline {
+    /// The sweep parameters.
+    pub meta: SweepMeta,
+    /// Per-balancer summaries, in request order.
+    pub balancers: Vec<BalancerSweep>,
+}
+
+impl CompareBaseline {
+    /// Look up one balancer's summary by registry name.
+    pub fn balancer(&self, name: &str) -> Option<&BalancerSweep> {
+        self.balancers.iter().find(|b| b.balancer == name)
+    }
+
+    /// Serialize to the `compare_baseline` document.
+    pub fn to_json(&self) -> Json {
+        let balancers: Vec<Json> = self
+            .balancers
+            .iter()
+            .map(|b| {
+                let scenarios: Vec<Json> = b
+                    .scenarios
+                    .iter()
+                    .map(|s| {
+                        let mut metrics = Json::obj();
+                        for (name, dist) in &s.metrics {
+                            metrics = metrics.set(name, dist.to_json());
+                        }
+                        Json::obj().set("name", s.name.as_str()).set("metrics", metrics)
+                    })
+                    .collect();
+                Json::obj()
+                    .set("balancer", b.balancer.as_str())
+                    .set("scenarios", Json::Arr(scenarios))
+            })
+            .collect();
+        let mut doc = Json::obj()
+            .set("kind", "compare_baseline")
+            .set("version", 1u64)
+            .set("seeds", self.meta.seeds)
+            .set("seed_base", self.meta.seed_base)
+            .set("reduced", self.meta.reduced)
+            .set("pipeline", self.meta.pipeline.as_str())
+            .set("balancers", Json::Arr(balancers));
+        if let Some(s) = &self.meta.schedule {
+            doc = doc.set(
+                "schedule",
+                Json::obj()
+                    .set("max_backfills_per_osd", s.max_backfills_per_osd)
+                    .set("domain_level", s.domain_level.as_str())
+                    .set("max_backfills_per_domain", s.max_backfills_per_domain),
+            );
+        }
+        doc
+    }
+
+    /// The exact file content `fleet compare --balancers … --out`
+    /// writes (pretty JSON + trailing newline). Byte-identical for
+    /// identical runs — the bake-off's thread-determinism pin compares
+    /// this string directly.
+    pub fn render(&self) -> String {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        text
+    }
+}
+
+/// Parse a `compare_baseline` document (the inverse of
+/// [`CompareBaseline::render`]). Every structural problem is a typed
+/// [`BaselineError`].
+pub fn parse_compare(text: &str) -> Result<CompareBaseline, BaselineError> {
+    let v = Json::parse(text).map_err(BaselineError::Json)?;
+    if v.get_str("kind") != Some("compare_baseline") {
+        return Err(schema("'kind' must be \"compare_baseline\""));
+    }
+    let meta = parse_meta(&v)?;
+    let mut balancers = Vec::new();
+    for (i, b) in v
+        .get_arr("balancers")
+        .ok_or_else(|| schema("missing array 'balancers'"))?
+        .iter()
+        .enumerate()
+    {
+        let balancer = b
+            .get_str("balancer")
+            .ok_or_else(|| schema(format!("balancer #{i}: missing string 'balancer'")))?
+            .to_string();
+        let mut scenarios = Vec::new();
+        for (j, s) in b
+            .get_arr("scenarios")
+            .ok_or_else(|| schema(format!("balancer '{balancer}': missing array 'scenarios'")))?
+            .iter()
+            .enumerate()
+        {
+            let name = s
+                .get_str("name")
+                .ok_or_else(|| {
+                    schema(format!("balancer '{balancer}' scenario #{j}: missing string 'name'"))
+                })?
+                .to_string();
+            let raw_metrics = s.get("metrics").and_then(Json::as_obj).ok_or_else(|| {
+                schema(format!("balancer '{balancer}' scenario '{name}': missing object 'metrics'"))
+            })?;
+            let mut metrics = BTreeMap::new();
+            for (metric, dist) in raw_metrics {
+                let d = Distribution::from_json(dist).ok_or_else(|| {
+                    schema(format!(
+                        "balancer '{balancer}' scenario '{name}': malformed metric '{metric}'"
+                    ))
+                })?;
+                metrics.insert(metric.clone(), d);
+            }
+            scenarios.push(ScenarioDist { name, metrics });
+        }
+        balancers.push(BalancerSweep { balancer, scenarios });
+    }
+    Ok(CompareBaseline { meta, balancers })
+}
+
+/// Run one compare cell: scenario `name` at `seed` under a fresh
+/// instance of registry balancer `balancer`.
+fn run_compare_cell(
+    balancer: &str,
+    name: &str,
+    seed: u64,
+    cfg: &FleetConfig,
+) -> Result<RunStats, FleetError> {
+    let mut engine =
+        make_balancer(balancer).ok_or_else(|| FleetError::UnknownBalancer(balancer.to_string()))?;
+    let mut case = library::by_name(name, seed, cfg.reduced)
+        .ok_or_else(|| FleetError::UnknownScenario(name.to_string()))?
+        .with_plan(cfg.plan.clone());
+    case.config.record_series = false;
+    let out = case.run_with(&mut *engine).map_err(|error| FleetError::Run {
+        scenario: format!("{name} [{balancer}]"),
+        seed,
+        error,
+    })?;
+    let stats = RunStats::reduce(seed, &case.state, &out);
+    stats.validate(name)?;
+    Ok(stats)
+}
+
+/// Sweep the library scenarios `names` under every engine in
+/// `balancers`, fanning out over **every (balancer, scenario, seed)
+/// triple jointly** so slow engines (e.g. `reference`) and heavy
+/// scenarios share the thread pool with cheap cells instead of
+/// serializing behind each other.
+///
+/// Balancer names are validated against [`BALANCERS`] and scenario
+/// names against the library before any cell runs; duplicates are
+/// allowed (each duplicate is swept independently).
+pub fn run_compare(
+    balancers: &[&str],
+    names: &[&str],
+    cfg: &FleetConfig,
+) -> Result<CompareResult, FleetError> {
+    for b in balancers {
+        if !BALANCERS.contains(b) {
+            return Err(FleetError::UnknownBalancer(b.to_string()));
+        }
+    }
+    for name in names {
+        if !library::ALL.contains(name) {
+            return Err(FleetError::UnknownScenario(name.to_string()));
+        }
+    }
+    let per = cfg.seeds as usize;
+    let cells_per_balancer = names.len() * per;
+    let results =
+        parallel::map_collect(balancers.len() * cells_per_balancer, cfg.chunk.max(1), |i| {
+            let rem = i % cells_per_balancer;
+            run_compare_cell(
+                balancers[i / cells_per_balancer],
+                names[rem / per],
+                cfg.seed_base + (rem % per) as u64,
+                cfg,
+            )
+        });
+    let mut it = results.into_iter();
+    let mut entries = Vec::with_capacity(balancers.len());
+    for balancer in balancers {
+        let mut sweeps = Vec::with_capacity(names.len());
+        for name in names {
+            let mut runs = Vec::with_capacity(per);
+            for _ in 0..per {
+                runs.push(it.next().expect("one result per (balancer, scenario, seed)")?);
+            }
+            sweeps.push(ScenarioSweep { name: name.to_string(), runs });
+        }
+        entries.push(CompareEntry { balancer: balancer.to_string(), sweeps });
+    }
+    Ok(CompareResult { meta: cfg.meta(), entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parallel::with_threads;
+
+    fn tiny_cfg() -> FleetConfig {
+        FleetConfig { seeds: 2, reduced: true, ..FleetConfig::default() }
+    }
+
+    #[test]
+    fn registry_covers_every_name_and_rejects_unknowns() {
+        for name in BALANCERS {
+            let b = make_balancer(name).expect("registry name constructs");
+            assert_eq!(b.name(), name);
+        }
+        assert!(make_balancer("crush-only").is_none());
+    }
+
+    #[test]
+    fn unknown_inputs_are_typed_errors_before_any_cell_runs() {
+        let cfg = tiny_cfg();
+        let e = run_compare(&["equilibrium", "nope"], &["device-failure"], &cfg).unwrap_err();
+        assert!(matches!(e, FleetError::UnknownBalancer(ref n) if n == "nope"), "{e}");
+        assert!(e.to_string().contains("asura"), "lists the registry: {e}");
+        let e = run_compare(&["mgr"], &["not-a-scenario"], &cfg).unwrap_err();
+        assert!(matches!(e, FleetError::UnknownScenario(_)));
+    }
+
+    #[test]
+    fn compare_groups_results_by_balancer_then_scenario_then_seed() {
+        let cfg = tiny_cfg();
+        let names = ["device-failure", "pool-growth"];
+        let r = run_compare(&["equilibrium", "mgr"], &names, &cfg).unwrap();
+        assert_eq!(r.entries.len(), 2);
+        assert_eq!(r.entries[0].balancer, "equilibrium");
+        assert_eq!(r.entries[1].balancer, "mgr");
+        for e in &r.entries {
+            assert_eq!(e.sweeps.len(), 2);
+            for (sweep, name) in e.sweeps.iter().zip(names) {
+                assert_eq!(sweep.name, name);
+                let seeds: Vec<u64> = sweep.runs.iter().map(|r| r.seed).collect();
+                assert_eq!(seeds, vec![cfg.seed_base, cfg.seed_base + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn equilibrium_column_matches_a_plain_fleet_sweep() {
+        // the compare fan-out must be the same cells as `fleet run`:
+        // the equilibrium column of a bake-off reproduces the fleet
+        // baseline's distributions exactly
+        let cfg = tiny_cfg();
+        let compare = run_compare(&["equilibrium"], &["device-failure"], &cfg).unwrap();
+        let fleet = super::super::run_library(&["device-failure"], &cfg).unwrap();
+        let a = compare.to_baseline();
+        let b = fleet.to_baseline();
+        assert_eq!(a.balancers[0].scenarios, b.scenarios);
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_exact() {
+        let cfg = tiny_cfg();
+        let r = run_compare(&["equilibrium", "asura"], &["device-failure"], &cfg).unwrap();
+        let baseline = r.to_baseline();
+        let text = baseline.render();
+        let parsed = parse_compare(&text).unwrap();
+        assert_eq!(parsed, baseline);
+        assert!(parsed.balancer("asura").is_some());
+        assert!(parsed.balancer("mgr").is_none());
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn malformed_documents_are_typed_errors() {
+        assert!(matches!(parse_compare("not json"), Err(BaselineError::Json(_))));
+        assert!(matches!(parse_compare("{}"), Err(BaselineError::Schema(_))));
+        // a fleet baseline is not a compare baseline
+        let fleet = r#"{"kind":"fleet_baseline","seeds":1,"seed_base":0,"reduced":true,
+                        "pipeline":"raw","scenarios":[]}"#;
+        assert!(matches!(parse_compare(fleet), Err(BaselineError::Schema(_))));
+        let bad = r#"{"kind":"compare_baseline","seeds":1,"seed_base":0,"reduced":true,
+                      "pipeline":"raw","balancers":[{"balancer":"mgr","scenarios":
+                      [{"name":"x","metrics":{"variance":{"mean":1}}}]}]}"#;
+        assert!(matches!(parse_compare(bad), Err(BaselineError::Schema(_))));
+    }
+
+    #[test]
+    fn compare_render_is_thread_count_independent() {
+        let cfg = tiny_cfg();
+        let balancers = ["equilibrium", "bounded"];
+        let render = |n: usize| {
+            with_threads(n, || {
+                run_compare(&balancers, &["device-failure"], &cfg).unwrap().to_baseline().render()
+            })
+        };
+        assert_eq!(render(1), render(4));
+    }
+}

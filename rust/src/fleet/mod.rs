@@ -22,6 +22,7 @@
 
 pub mod baseline;
 pub mod checkpoint;
+pub mod compare;
 pub mod gate;
 pub mod stats;
 
@@ -29,6 +30,10 @@ pub use baseline::{
     parse_baseline, BaselineError, FleetBaseline, ScenarioDist, ScheduleMeta, SweepMeta,
 };
 pub use checkpoint::{run_library_checkpointed, CheckpointConfig, CheckpointRun};
+pub use compare::{
+    make_balancer, parse_compare, run_compare, BalancerSweep, CompareBaseline, CompareEntry,
+    CompareResult, BALANCERS,
+};
 pub use gate::{gate, GateConfig, GateReport, GateViolation};
 pub use stats::Distribution;
 
@@ -191,6 +196,26 @@ impl RunStats {
         }
     }
 
+    /// Check that every deterministic metric is finite, returning the
+    /// first offender as a typed [`FleetError::NonFiniteMetric`].
+    ///
+    /// Distributions fold with a NaN-tolerant total order
+    /// ([`stats::Distribution::from_values`]), so a poisoned value
+    /// would flow silently into a committed baseline; this is the
+    /// fail-loud boundary that keeps baselines finite by construction.
+    pub fn validate(&self, scenario: &str) -> Result<(), FleetError> {
+        for (name, value) in METRICS.into_iter().zip(self.metric_values()) {
+            if !value.is_finite() {
+                return Err(FleetError::NonFiniteMetric {
+                    scenario: scenario.to_string(),
+                    seed: self.seed,
+                    metric: name,
+                });
+            }
+        }
+        Ok(())
+    }
+
     /// The deterministic metric values, aligned with [`METRICS`]
     /// (wall-clock `calc_seconds` deliberately absent).
     pub fn metric_values(&self) -> [f64; METRICS.len()] {
@@ -283,6 +308,18 @@ pub enum FleetError {
     /// A checkpoint directory could not be created, validated, or
     /// written ([`checkpoint`]).
     Checkpoint(String),
+    /// The requested balancer name is not in [`compare::BALANCERS`].
+    UnknownBalancer(String),
+    /// A run reduced to a non-finite metric value (NaN or ±∞) — the
+    /// sweep refuses to fold it into a baseline.
+    NonFiniteMetric {
+        /// The scenario that produced it.
+        scenario: String,
+        /// The seed it was produced at.
+        seed: u64,
+        /// The offending metric name (from [`METRICS`]).
+        metric: &'static str,
+    },
 }
 
 impl fmt::Display for FleetError {
@@ -295,6 +332,20 @@ impl fmt::Display for FleetError {
                 write!(f, "scenario '{scenario}' failed at seed {seed}: {error}")
             }
             FleetError::Checkpoint(msg) => write!(f, "{msg}"),
+            FleetError::UnknownBalancer(name) => {
+                write!(
+                    f,
+                    "unknown balancer '{name}' (available: {})",
+                    compare::BALANCERS.join(", ")
+                )
+            }
+            FleetError::NonFiniteMetric { scenario, seed, metric } => {
+                write!(
+                    f,
+                    "scenario '{scenario}' at seed {seed} reduced to a non-finite \
+                     '{metric}' — refusing to fold it into a baseline"
+                )
+            }
         }
     }
 }
@@ -321,6 +372,7 @@ fn run_cell(
         error,
     })?;
     let stats = RunStats::reduce(seed, &case.state, &out);
+    stats.validate(name)?;
     Ok((stats, case.state))
 }
 
@@ -385,7 +437,11 @@ where
         };
         let engine = ScenarioEngine::new(&mut state, Some(&mut balancer), config, run_spec.seed);
         match engine.run(&run_spec) {
-            Ok(out) => Ok(RunStats::reduce(seed, &state, &out)),
+            Ok(out) => {
+                let stats = RunStats::reduce(seed, &state, &out);
+                stats.validate(&spec.name)?;
+                Ok(stats)
+            }
             Err(error) => Err(FleetError::Run { scenario: spec.name.clone(), seed, error }),
         }
     });
@@ -480,5 +536,44 @@ mod tests {
         let dist = sweep.summarize();
         assert_eq!(dist.metrics.len(), METRICS.len());
         assert_eq!(dist.metrics["variance"], Distribution::default());
+    }
+
+    /// Regression (PR 10): a NaN metric used to flow into the baseline
+    /// fold unnoticed (where, pre-PR-10, it then *panicked* the
+    /// percentile sort). Now the sweep rejects it at the reduce boundary
+    /// with a typed error naming the cell and metric.
+    #[test]
+    fn non_finite_metrics_are_rejected_with_a_typed_error() {
+        let mut r = RunStats {
+            seed: 7,
+            variance: 0.5,
+            max_fill: 0.9,
+            min_fill: 0.1,
+            planned_moves: 10,
+            raw_bytes: 1000,
+            executed_moves: 8,
+            executed_bytes: 800,
+            phases: 3,
+            makespan: 60.0,
+            calc_seconds: 0.0,
+        };
+        assert!(r.validate("demo").is_ok());
+        r.variance = f64::NAN;
+        match r.validate("demo") {
+            Err(FleetError::NonFiniteMetric { scenario, seed, metric }) => {
+                assert_eq!(scenario, "demo");
+                assert_eq!(seed, 7);
+                assert_eq!(metric, "variance");
+            }
+            other => panic!("expected NonFiniteMetric, got {other:?}"),
+        }
+        r.variance = 0.5;
+        r.makespan = f64::INFINITY;
+        let err = r.validate("demo").unwrap_err();
+        assert!(err.to_string().contains("'makespan'"), "{err}");
+        // calc_seconds is a wall-clock channel, excluded from the contract
+        r.makespan = 60.0;
+        r.calc_seconds = f64::NAN;
+        assert!(r.validate("demo").is_ok());
     }
 }

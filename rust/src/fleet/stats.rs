@@ -41,18 +41,40 @@ pub struct Distribution {
 /// empty input). Unlike linear interpolation
 /// ([`crate::util::stats::percentile`]), the result is always an
 /// observed value.
+///
+/// `p` is a percentage and must be in `[0, 100]` — anything else is a
+/// caller bug, asserted in debug builds. Release builds clamp to the
+/// nearest end of the contract: negative `p` yields the minimum
+/// (rank 1), `p > 100` the maximum (rank `n`). That clamping is part of
+/// the function's documented behavior, not an accident of the rank
+/// arithmetic.
 pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    debug_assert!(
+        (0.0..=100.0).contains(&p),
+        "nearest_rank percentile {p} outside [0, 100]"
+    );
     if sorted.is_empty() {
         return 0.0;
     }
     let n = sorted.len();
+    // negative products saturate to 0 in the `as usize` cast and
+    // over-100 ranks exceed n; `clamp(1, n)` realizes the documented
+    // min/max clamping for both
     let rank = ((p / 100.0) * n as f64).ceil() as usize;
     sorted[rank.clamp(1, n) - 1]
 }
 
 impl Distribution {
     /// Summarize `xs` (any order; a sorted copy is made internally).
-    /// Metric values are finite by construction — NaN input panics.
+    ///
+    /// Sorting uses [`f64::total_cmp`] — the IEEE-754 total order, in
+    /// which `-NaN < -∞ < … < +∞ < +NaN` — so non-finite input can
+    /// never panic the fold (the PR 9 `executor::bottleneck` fix,
+    /// applied to the statistics kernel). NaNs therefore surface in the
+    /// max/percentile channels instead of aborting a sweep; the fleet
+    /// layer rejects non-finite *metrics* upstream with a typed
+    /// [`crate::fleet::FleetError::NonFiniteMetric`], keeping baselines
+    /// NaN-free by construction.
     pub fn from_values(xs: &[f64]) -> Distribution {
         if xs.is_empty() {
             return Distribution::default();
@@ -62,7 +84,7 @@ impl Distribution {
             w.push(x);
         }
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("fleet metrics are never NaN"));
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Distribution {
             mean: w.mean(),
             stddev: w.stddev(),
@@ -125,6 +147,46 @@ mod tests {
         assert_eq!(nearest_rank(&xs, 0.0), 1.0);
         assert_eq!(nearest_rank(&xs, 100.0), 4.0);
         assert_eq!(nearest_rank(&[], 50.0), 0.0);
+    }
+
+    /// Regression (PR 10): NaN input used to panic the sort via
+    /// `partial_cmp(..).expect(..)` — one poisoned metric value aborted
+    /// the whole sweep instead of surfacing as data.
+    #[test]
+    fn distribution_tolerates_non_finite_values() {
+        let d = Distribution::from_values(&[1.0, f64::NAN, 0.5]);
+        // total order: NaN sorts above +inf, so it lands in max
+        assert_eq!(d.min, 0.5);
+        assert!(d.max.is_nan());
+        let d = Distribution::from_values(&[f64::INFINITY, 2.0, f64::NEG_INFINITY]);
+        assert_eq!(d.min, f64::NEG_INFINITY);
+        assert_eq!(d.max, f64::INFINITY);
+        assert_eq!(d.p50, 2.0);
+    }
+
+    // out-of-range percentiles: release builds clamp per the documented
+    // contract; debug builds assert (covered just below), so the clamp
+    // tests only exist where the assert lets them run
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn nearest_rank_out_of_range_clamps_to_the_ends() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(nearest_rank(&xs, -25.0), 1.0);
+        assert_eq!(nearest_rank(&xs, 150.0), 4.0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "outside [0, 100]")]
+    fn nearest_rank_negative_percentile_asserts_in_debug() {
+        nearest_rank(&[1.0, 2.0], -25.0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "outside [0, 100]")]
+    fn nearest_rank_over_100_percentile_asserts_in_debug() {
+        nearest_rank(&[1.0, 2.0], 150.0);
     }
 
     #[test]

@@ -79,7 +79,8 @@ fn usage() -> String {
     "equilibrium — size-aware shard balancing for Ceph-like clusters\n\n\
      Subcommands:\n\
      \x20 generate      --cluster <a..f|demo> [--seed N] [--out FILE[.eqsnap]]\n\
-     \x20 balance       --state FILE[.eqsnap] [--balancer equilibrium|mgr] [--scoring native|xla]\n\
+     \x20 balance       --state FILE[.eqsnap] [--balancer equilibrium|mgr|asura|bounded]\n\
+     \x20                [--scoring native|xla]\n\
      \x20                [--max-moves N] [--k N] [--out FILE] [--optimize] [--phases]\n\
      \x20                [--max-backfills N] [--domain-level L] [--domain-backfills N]\n\
      \x20 simulate      --cluster <a..f|demo> [--seed N] [--scoring S] [--max-moves N]\n\
@@ -92,7 +93,8 @@ fn usage() -> String {
      \x20 fleet         run [--name NAME] [--seeds N] [--seed-base N] [--reduced|--smoke]\n\
      \x20                [--optimize] [--phases] [--out FILE] [--out-dir DIR] [--quiet]\n\
      \x20                [--checkpoint DIR | --resume DIR] [--max-cells N]\n\
-     \x20                | compare [same sweep flags]\n\
+     \x20                | compare [same sweep flags] [--balancers A,B,..] [--out FILE]\n\
+     \x20                [--out-dir DIR] [--quiet]   (balancer bake-off with --balancers)\n\
      \x20                | gate --baseline FILE [--rel X]\n\
      \x20 fuzz          run [--cases N] [--seed-base N] [--profile P] [--reduced] [--chunk N]\n\
      \x20                [--out FILE] [--promote-dir DIR] [--quiet]\n\
@@ -192,7 +194,7 @@ fn load_state_file(path: &str) -> AppResult<equilibrium::cluster::ClusterState> 
 fn cmd_balance(argv: &[String]) -> AppResult {
     let cli = Cli::new("equilibrium balance", "plan movements for a cluster state")
         .opt("state", "FILE", "cluster dump (from `generate`)")
-        .opt_default("balancer", "NAME", "equilibrium", "equilibrium|mgr")
+        .opt_default("balancer", "NAME", "equilibrium", "equilibrium|mgr|asura|bounded")
         .opt_default("scoring", "BACKEND", "native", "native|xla (equilibrium only)")
         .opt_default("max-moves", "N", "10000", "movement cap")
         .opt_default("k", "N", "25", "equilibrium: sources to try")
@@ -217,6 +219,8 @@ fn cmd_balance(argv: &[String]) -> AppResult {
             EquilibriumConfig { k: a.get_u64("k")?.unwrap_or(25) as usize, ..Default::default() },
         ),
         "mgr" => Box::new(MgrBalancer::default()),
+        "asura" => Box::new(equilibrium::balancer::AsuraBalancer::default()),
+        "bounded" => Box::new(equilibrium::balancer::BoundedEquilibrium::default()),
         other => return Err(app_err!("unknown balancer '{other}'")),
     };
 
@@ -1016,11 +1020,47 @@ fn cmd_fleet_run(argv: &[String]) -> AppResult {
 fn cmd_fleet_compare(argv: &[String]) -> AppResult {
     let cli = fleet_cli(
         "equilibrium fleet compare",
-        "sweep raw vs optimized+phased pipelines side by side",
-    );
+        "sweep raw vs optimized+phased pipelines side by side, or --balancers for a balancer bake-off",
+    )
+    .opt(
+        "balancers",
+        "A,B,..",
+        "bake-off mode: sweep every named balancer engine (equilibrium|mgr|asura|bounded|reference)",
+    )
+    .opt("out", "FILE", "bake-off: write the summary as compare baseline JSON")
+    .opt("out-dir", "DIR", "bake-off: write bakeoff_summary.csv here")
+    .flag("quiet", "suppress the summary table");
     let a = cli.parse(argv.iter())?;
     let mut cfg = fleet_config_from(&a)?;
     let names = fleet_names(&a);
+    if let Some(list) = a.get("balancers") {
+        let balancers: Vec<&str> = list.split(',').filter(|b| !b.is_empty()).collect();
+        if balancers.is_empty() {
+            return Err(app_err!("--balancers names no engines"));
+        }
+        println!(
+            "fleet compare: {} balancer(s) × {} scenario(s) × {} seeds ({}, {} pipeline)",
+            balancers.len(),
+            names.len(),
+            cfg.seeds,
+            size_label(cfg.reduced),
+            cfg.pipeline_label(),
+        );
+        let result = fleet::run_compare(&balancers, &names, &cfg)
+            .map_err(|e| app_err!("bake-off sweep failed: {e}"))?;
+        let baseline = result.to_baseline();
+        if !a.flag("quiet") {
+            println!("{}", report::compare_table(&baseline).render());
+        }
+        if let Some(path) = a.get("out") {
+            std::fs::write(path, baseline.render())?;
+            eprintln!("wrote {path}");
+        }
+        if let Some(dir) = a.get("out-dir") {
+            report::write_compare_csv(std::path::Path::new(dir), &baseline)?;
+        }
+        return Ok(());
+    }
     println!(
         "fleet compare: {} scenario(s) × {} seeds ({}) — raw vs phased pipeline",
         names.len(),

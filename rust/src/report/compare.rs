@@ -1,0 +1,155 @@
+//! Bake-off reporting: render a [`CompareBaseline`]'s head-to-head
+//! balancer results as the `fleet compare --balancers` text table and
+//! a machine-readable CSV.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::fleet::{CompareBaseline, Distribution};
+use crate::util::units::{fmt_bytes_f, fmt_duration};
+
+use super::csv::{to_csv, write_csv_file};
+use super::table::Table;
+
+/// Head-to-head table: scenarios grouped together, one row per
+/// (scenario, balancer) so the engines' columns line up for a direct
+/// read-off — final variance level and tail, moved vs executed volume,
+/// phases, virtual makespan.
+pub fn compare_table(b: &CompareBaseline) -> Table {
+    let mut t = Table::new(&[
+        "Scenario",
+        "Balancer",
+        "Var mean",
+        "Var p90",
+        "Moved p50",
+        "Exec p50",
+        "Phases p50",
+        "Makespan p50",
+    ]);
+    // rows grouped by scenario (balancers adjacent), preserving each
+    // side's request order
+    let scenario_names: Vec<&str> = b
+        .balancers
+        .first()
+        .map(|e| e.scenarios.iter().map(|s| s.name.as_str()).collect())
+        .unwrap_or_default();
+    for name in scenario_names {
+        for e in &b.balancers {
+            let Some(s) = e.scenarios.iter().find(|s| s.name == name) else {
+                continue;
+            };
+            let g = |m: &str| s.metrics.get(m).copied().unwrap_or_default();
+            t.push_row(vec![
+                name.to_string(),
+                e.balancer.clone(),
+                format!("{:.3e}", g("variance").mean),
+                format!("{:.3e}", g("variance").p90),
+                fmt_bytes_f(g("raw_bytes").p50),
+                fmt_bytes_f(g("executed_bytes").p50),
+                format!("{:.0}", g("phases").p50),
+                fmt_duration(g("makespan").p50),
+            ]);
+        }
+    }
+    t
+}
+
+/// Full CSV: one row per (balancer, scenario, metric) with every
+/// distribution field, floats in their exact shortest-round-trip form.
+pub fn compare_csv(b: &CompareBaseline) -> String {
+    let mut rows = Vec::new();
+    for e in &b.balancers {
+        for s in &e.scenarios {
+            for (metric, d) in &s.metrics {
+                let mut row = vec![e.balancer.clone(), s.name.clone(), metric.clone()];
+                row.extend(d.fields().into_iter().map(|(_, v)| v.to_string()));
+                rows.push(row);
+            }
+        }
+    }
+    let field_names: Vec<&str> = Distribution::default()
+        .fields()
+        .into_iter()
+        .map(|(name, _)| name)
+        .collect();
+    let mut header = vec!["balancer", "scenario", "metric"];
+    header.extend(field_names);
+    to_csv(&header, &rows)
+}
+
+/// Write [`compare_csv`] as `bakeoff_summary.csv` under `dir`; returns
+/// the path.
+pub fn write_compare_csv(dir: &Path, b: &CompareBaseline) -> io::Result<PathBuf> {
+    let path = dir.join("bakeoff_summary.csv");
+    write_csv_file(&path, &compare_csv(b))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use crate::fleet::{BalancerSweep, ScenarioDist, SweepMeta};
+
+    use super::*;
+
+    fn baseline() -> CompareBaseline {
+        let sweep = |balancer: &str, scale: f64| {
+            let mut metrics = BTreeMap::new();
+            for name in crate::fleet::METRICS {
+                metrics.insert(
+                    name.to_string(),
+                    Distribution::from_values(&[scale, 2.0 * scale, 4.0 * scale]),
+                );
+            }
+            BalancerSweep {
+                balancer: balancer.to_string(),
+                scenarios: vec![ScenarioDist { name: "pool-growth".into(), metrics }],
+            }
+        };
+        CompareBaseline {
+            meta: SweepMeta {
+                seeds: 3,
+                seed_base: 0,
+                reduced: true,
+                pipeline: "raw".into(),
+                schedule: None,
+            },
+            balancers: vec![sweep("equilibrium", 1.0), sweep("asura", 3.0)],
+        }
+    }
+
+    #[test]
+    fn table_groups_balancers_under_each_scenario() {
+        let t = compare_table(&baseline());
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "pool-growth");
+        assert_eq!(t.rows[0][1], "equilibrium");
+        assert_eq!(t.rows[1][1], "asura");
+        let text = t.render();
+        assert!(text.contains("Var mean"));
+    }
+
+    #[test]
+    fn csv_covers_every_balancer_metric_and_field() {
+        let csv = compare_csv(&baseline());
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "balancer,scenario,metric,mean,stddev,min,p50,p90,p99,max"
+        );
+        assert_eq!(lines.count(), 2 * crate::fleet::METRICS.len());
+        assert!(csv.contains("equilibrium,pool-growth,variance,"));
+        assert!(csv.contains("asura,pool-growth,variance,"));
+    }
+
+    #[test]
+    fn csv_file_lands_in_the_requested_dir() {
+        let dir = std::env::temp_dir().join(format!("eq_bakeoff_csv_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = write_compare_csv(&dir, &baseline()).unwrap();
+        assert!(path.ends_with("bakeoff_summary.csv"));
+        assert!(std::fs::read_to_string(&path).unwrap().starts_with("balancer,scenario,metric"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,12 +1,14 @@
 //! Evaluation harness: regenerates the paper's tables and figures, plus
 //! ablations, as text tables and CSV series.
 
+pub mod compare;
 pub mod csv;
 pub mod estate;
 pub mod figures;
 pub mod fleet;
 pub mod table;
 
+pub use compare::{compare_csv, compare_table, write_compare_csv};
 pub use estate::{estate_csv, estate_table, write_estate_csv};
 pub use figures::{
     ablate_count_criterion, ablate_k, figure4, figure5, figure6, make_equilibrium, plan_table,

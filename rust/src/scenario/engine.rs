@@ -566,6 +566,13 @@ impl<'a> ScenarioEngine<'a> {
         }
         let budget = self.throttle.as_ref().map(|t| t.budget()).unwrap_or(max_moves);
 
+        // round framing for balancers with per-round resource limits
+        // (e.g. BoundedEquilibrium's moved-bytes cap); a no-op for every
+        // other balancer, so existing traces are unchanged
+        if let Some(b) = self.balancer.as_deref_mut() {
+            b.on_round_start(self.state);
+        }
+
         let chunk = self.cfg.sample_every.max(1);
         let mut plan: Vec<Movement> = Vec::new();
         let mut converged = false;

@@ -44,9 +44,20 @@ impl ScenarioCase {
     /// `self.state` in place (inspect it afterwards for final metrics).
     pub fn run(&mut self) -> Result<ScenarioOutcome, ScenarioError> {
         let mut balancer = Equilibrium::default();
+        self.run_with(&mut balancer)
+    }
+
+    /// Run the case with a caller-supplied balancer (the bake-off entry
+    /// point: the same `(name, seed, reduced)` cell, a different
+    /// engine). Same framing as [`ScenarioCase::run`], so substituting
+    /// `Equilibrium::default()` here is byte-identical to `run()`.
+    pub fn run_with(
+        &mut self,
+        balancer: &mut dyn crate::balancer::Balancer,
+    ) -> Result<ScenarioOutcome, ScenarioError> {
         ScenarioEngine::new(
             &mut self.state,
-            Some(&mut balancer),
+            Some(balancer),
             self.config.clone(),
             self.spec.seed,
         )

@@ -1,0 +1,171 @@
+//! Conformance suite for every pluggable [`Balancer`] implementation.
+//!
+//! The bake-off (`fleet compare --balancers`) treats engines as
+//! interchangeable plugins; this suite pins the contract that makes
+//! that safe, for **all** registry balancers at once:
+//!
+//! * every proposal is CRUSH-legal against the state it was made for;
+//! * `propose_batch(max)` never exceeds `max`;
+//! * a converged balancer proposes nothing — and stays silent when
+//!   asked again;
+//! * after a topology change (`add_hosts` + `fail_osd`) and
+//!   `on_topology_change`, no proposal ever references a stale or
+//!   non-indexed OSD;
+//! * the move sequence is byte-identical at `EQUILIBRIUM_THREADS=1`
+//!   and `=4`.
+//!
+//! A new engine added to [`fleet::compare::make_balancer`] is covered
+//! automatically: the suite iterates the registry, not a local list.
+
+use equilibrium::balancer::constraints::check_move;
+use equilibrium::balancer::Balancer;
+use equilibrium::cluster::{add_hosts, fail_osd, HostSpec, Pool};
+use equilibrium::crush::{CrushBuilder, DeviceClass, Level, OsdId, Rule};
+use equilibrium::fleet::{make_balancer, BALANCERS};
+use equilibrium::generator::clusters;
+use equilibrium::util::parallel::with_threads;
+use equilibrium::util::units::{GIB, TIB};
+
+/// A small imbalanced cluster every engine can act on: 6 hosts × 2
+/// OSDs, one 3-replica pool with skewed shard sizes.
+fn cluster() -> equilibrium::cluster::ClusterState {
+    let mut b = CrushBuilder::new();
+    let root = b.add_root("default");
+    for h in 0..6 {
+        let host = b.add_bucket(&format!("host{h}"), Level::Host, root);
+        for _ in 0..2 {
+            b.add_osd_bytes(host, 4 * TIB, DeviceClass::Hdd);
+        }
+    }
+    b.add_rule(Rule::replicated(0, "r", "default", None, Level::Host));
+    equilibrium::cluster::ClusterState::build(
+        b.build().unwrap(),
+        vec![Pool::replicated(1, "data", 3, 64, 0)],
+        |_, i| (5 + (i % 9) as u64) * GIB,
+    )
+}
+
+/// Every engine in the bake-off registry, fresh.
+fn registry() -> Vec<Box<dyn Balancer>> {
+    BALANCERS
+        .iter()
+        .map(|name| make_balancer(name).expect("registry constructs its own names"))
+        .collect()
+}
+
+#[test]
+fn every_proposal_is_crush_legal() {
+    for mut bal in registry() {
+        let mut state = cluster();
+        bal.on_round_start(&state);
+        let mut steps = 0;
+        while let Some(p) = bal.next_move(&state) {
+            check_move(&state, p.pg, p.from, p.to).unwrap_or_else(|v| {
+                panic!("balancer '{}' proposed illegal move {:?}: {v:?}", bal.name(), p)
+            });
+            assert_eq!(
+                p.bytes,
+                state.pg(p.pg).unwrap().shard_bytes(),
+                "balancer '{}' mis-stated shard size",
+                bal.name()
+            );
+            state.apply_movement(p.pg, p.from, p.to).unwrap();
+            steps += 1;
+            assert!(steps <= 10_000, "balancer '{}' failed to terminate", bal.name());
+        }
+        assert!(state.verify().is_empty(), "balancer '{}' broke invariants", bal.name());
+    }
+}
+
+#[test]
+fn propose_batch_respects_the_cap() {
+    for mut bal in registry() {
+        let mut state = cluster();
+        bal.on_round_start(&state);
+        let moves = bal.propose_batch(&mut state, 3);
+        assert!(moves.len() <= 3, "balancer '{}' exceeded max_moves", bal.name());
+    }
+}
+
+#[test]
+fn converged_balancers_stay_silent() {
+    for mut bal in registry() {
+        let mut state = cluster();
+        // drive to convergence under round framing (bounded engines
+        // need fresh budgets per round to reach the fixpoint)
+        let mut rounds = 0;
+        loop {
+            bal.on_round_start(&state);
+            if bal.propose_batch(&mut state, 10_000).is_empty() {
+                break;
+            }
+            rounds += 1;
+            assert!(rounds <= 10_000, "balancer '{}' never converged", bal.name());
+        }
+        // silence must be stable, with and without a fresh round
+        assert!(bal.next_move(&state).is_none(), "balancer '{}' spoke after convergence", bal.name());
+        bal.on_round_start(&state);
+        assert!(bal.next_move(&state).is_none(), "balancer '{}' spoke after convergence", bal.name());
+    }
+}
+
+#[test]
+fn topology_changes_never_yield_stale_osds() {
+    for mut bal in registry() {
+        let mut state = cluster();
+        // warm the engine's caches on the original map
+        bal.on_round_start(&state);
+        let _ = bal.propose_batch(&mut state, 5);
+
+        // structural change: two new hosts come up, one device fails out
+        add_hosts(&mut state, &HostSpec::hdd(2, 2, 4 * TIB)).unwrap();
+        fail_osd(&mut state, 3);
+        bal.on_topology_change();
+
+        bal.on_round_start(&state);
+        let mut steps = 0;
+        while let Some(p) = bal.next_move(&state) {
+            assert!(
+                state.osd_is_indexed(p.to),
+                "balancer '{}' targeted stale/non-indexed osd.{}",
+                bal.name(),
+                p.to
+            );
+            assert_ne!(p.to, 3, "balancer '{}' targeted the failed device", bal.name());
+            assert!(
+                (p.to as usize) < state.osd_count() && (p.from as usize) < state.osd_count(),
+                "balancer '{}' referenced an out-of-range osd",
+                bal.name()
+            );
+            check_move(&state, p.pg, p.from, p.to).unwrap_or_else(|v| {
+                panic!("balancer '{}' proposed illegal move {:?}: {v:?}", bal.name(), p)
+            });
+            state.apply_movement(p.pg, p.from, p.to).unwrap();
+            steps += 1;
+            if steps >= 2_000 {
+                break; // legality is the contract here, not convergence speed
+            }
+        }
+        assert!(state.verify().is_empty(), "balancer '{}' broke invariants", bal.name());
+    }
+}
+
+#[test]
+fn move_sequences_are_thread_count_independent() {
+    for name in BALANCERS {
+        let sequence = |threads: usize| {
+            with_threads(threads, || {
+                let mut bal = make_balancer(name).unwrap();
+                let mut state = clusters::demo(42);
+                bal.on_round_start(&state);
+                bal.propose_batch(&mut state, 200)
+                    .into_iter()
+                    .map(|m| (m.pg, m.from, m.to, m.bytes))
+                    .collect::<Vec<(equilibrium::cluster::PgId, OsdId, OsdId, u64)>>()
+            })
+        };
+        let single = sequence(1);
+        let multi = sequence(4);
+        assert_eq!(single, multi, "balancer '{name}' diverges across thread counts");
+    }
+}
